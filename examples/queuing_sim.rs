@@ -1,0 +1,68 @@
+//! Appendix-D queuing-model demo: how much does asynchrony buy as worker
+//! heterogeneity (the geometric staleness parameter p) varies?
+//!
+//!     cargo run --release --example queuing_sim -- [--workers 15]
+//!         [--iterations 300] [--batch 128]
+//!
+//! Reproduces the *shape* of Fig 6/7: near-linear speedup for SFW-asyn
+//! under heavy-tailed workers (p = 0.1), shrinking gap as p -> 1.
+
+use std::sync::Arc;
+
+use sfw::algo::engine::NativeEngine;
+use sfw::algo::schedule::BatchSchedule;
+use sfw::benchkit::Table;
+use sfw::experiments::build_ms;
+use sfw::objective::Objective;
+use sfw::sim::{simulate_asyn, simulate_dist, QueuingParams};
+use sfw::util::cli::Args;
+
+fn main() {
+    let args = Args::parse_env(1);
+    let workers = args.get_usize("workers", 15);
+    let iterations = args.get_u64("iterations", 300);
+    let batch = args.get_usize("batch", 128);
+    let seed = args.get_u64("seed", 42);
+
+    let obj = build_ms(seed, 20_000);
+    let o: Arc<dyn Objective> = obj.clone();
+    println!(
+        "queuing model: matrix sensing, W={workers}, T={iterations}, m={batch}\n\
+         (1 unit = one D1*D2 op; grad eval = 1 unit/sample, 1-SVD = 10 units;\n\
+         communication free — the model favors SFW-dist, Appendix D)"
+    );
+
+    let mut table = Table::new(
+        "virtual time to finish T iterations",
+        &["p", "SFW-dist", "SFW-asyn", "speedup"],
+    );
+    for p in [0.1, 0.3, 0.5, 0.8, 1.0] {
+        let prm = QueuingParams {
+            workers,
+            p,
+            iterations,
+            tau: 2 * workers as u64,
+            batch: BatchSchedule::Constant(batch),
+            eval_every: iterations,
+            seed,
+            ..Default::default()
+        };
+        let mut engines: Vec<NativeEngine> = (0..workers)
+            .map(|w| NativeEngine::new(o.clone(), 30, seed ^ w as u64))
+            .collect();
+        let ra = simulate_asyn(o.clone(), &mut engines, &prm);
+        let mut e1 = vec![NativeEngine::new(o.clone(), 30, seed ^ 0xFF)];
+        let rd = simulate_dist(o.clone(), &mut e1, &prm);
+        table.row(&[
+            format!("{p:.1}"),
+            format!("{:.0}", rd.virtual_time),
+            format!("{:.0}", ra.virtual_time),
+            format!("{:.2}x", rd.virtual_time / ra.virtual_time),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nExpected shape (paper Fig 6/7): the speedup column shrinks toward\n\
+         1x as p -> 1 (uniform workers) and is largest for p = 0.1."
+    );
+}

@@ -1,0 +1,13 @@
+"""Pallas kernels (L1) + pure-jnp oracles for the SFW-asyn compute hot path.
+
+Exports:
+  ms_grad   — fused matrix-sensing SUM-gradient + SUM-loss kernel
+  pnn_grad  — fused PNN quadratic-forward + smooth-hinge gradient kernel
+  mv / mtv  — tiled (transposed) matvec kernels for the power-iteration LMO
+  ref       — pure-jnp oracles (tests only; never lowered to artifacts)
+"""
+
+from . import ref  # noqa: F401
+from .matvec import mtv, mv  # noqa: F401
+from .ms_grad import ms_grad, pick_tile  # noqa: F401
+from .pnn_grad import pnn_grad  # noqa: F401

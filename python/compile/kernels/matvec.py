@@ -1,0 +1,85 @@
+"""L1 Pallas kernels: tiled matvec / transposed matvec for the LMO.
+
+The nuclear-norm LMO is argmin_{||U||*<=theta} <G, U> = -theta * u1 v1^T
+where (u1, v1) is the leading singular pair of the (minibatch) gradient G.
+We compute it by alternating power iteration, whose inner ops are exactly
+these two kernels:
+
+    mv : u <- G  @ v   tiled over rows of G (each grid step holds a
+                       (TILE_R, D2) block of G in VMEM and emits TILE_R
+                       entries of u),
+    mtv: v <- G^T @ u  tiled over *columns* of G (each grid step holds a
+                       (D1, TILE_C) block and emits TILE_C entries of v) —
+                       G is kept in its natural layout so the HBM->VMEM
+                       schedule, not a transpose materialization, expresses
+                       the access pattern.
+
+On TPU these keep the gradient matrix resident across the iteration sweep;
+interpret=True here (see ms_grad.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ms_grad import pick_tile
+
+
+def _mv_kernel(g_ref, v_ref, o_ref):
+    o_ref[...] = g_ref[...] @ v_ref[...]
+
+
+def _mtv_kernel(g_ref, u_ref, o_ref):
+    o_ref[...] = u_ref[...] @ g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r",))
+def mv(g, v, *, tile_r: int | None = None):
+    """u = G @ v with row-tiled G. g: (D1, D2), v: (D2,) -> (D1,)."""
+    d1, d2 = g.shape
+    tile = tile_r or pick_tile(d1, cap=256)
+    assert d1 % tile == 0
+    if tile == d1:
+        return pl.pallas_call(
+            _mv_kernel,
+            out_shape=jax.ShapeDtypeStruct((d1,), jnp.float32),
+            interpret=True,
+        )(g, v)
+    return pl.pallas_call(
+        _mv_kernel,
+        grid=(d1 // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d2), lambda i: (i, 0)),
+            pl.BlockSpec((d2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d1,), jnp.float32),
+        interpret=True,
+    )(g, v)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c",))
+def mtv(g, u, *, tile_c: int | None = None):
+    """v = G^T @ u with column-tiled G. g: (D1, D2), u: (D1,) -> (D2,)."""
+    d1, d2 = g.shape
+    tile = tile_c or pick_tile(d2, cap=256)
+    assert d2 % tile == 0
+    if tile == d2:
+        return pl.pallas_call(
+            _mtv_kernel,
+            out_shape=jax.ShapeDtypeStruct((d2,), jnp.float32),
+            interpret=True,
+        )(g, u)
+    return pl.pallas_call(
+        _mtv_kernel,
+        grid=(d2 // tile,),
+        in_specs=[
+            pl.BlockSpec((d1, tile), lambda i: (0, i)),
+            pl.BlockSpec((d1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d2,), jnp.float32),
+        interpret=True,
+    )(g, u)

@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: matrix-sensing minibatch gradient (+ loss), fused.
+
+Computes, for a flattened sensing batch Af (m, K), responses y (m,) and a
+flattened iterate xf (K,):
+
+    r        = Af @ xf - y                      (residuals)
+    grad_sum = 2 * Af^T r        (shape (K,))   — SUM over batch, not mean
+    loss_sum = sum(r^2)
+
+The batch dimension is tiled (BlockSpec over rows of Af): each grid step
+loads a (TILE_M, K) block of Af into VMEM, forms its residual slice against
+the resident xf, and accumulates the partial A^T r product into a VMEM
+accumulator.  HBM traffic is therefore a single pass over Af per step — the
+paper's workers did the same thing as a BLAS GEMV loop over MPI ranks; here
+the whole contraction is one MXU-friendly kernel (see DESIGN.md
+§Hardware-Adaptation for the VMEM/MXU sizing).
+
+Pallas runs in interpret mode (CPU PJRT cannot execute Mosaic custom-calls);
+the structure — not interpret-mode wallclock — is the optimization target.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ms_grad_kernel_single(af_ref, y_ref, xf_ref, grad_ref, loss_ref):
+    """Gridless single-block variant: one VMEM-resident block, no grid
+    machinery (the interpret-mode grid loop lowers to dynamic-slice chains
+    that old CPU XLA cannot fuse; see model.py's CPU-interpret note)."""
+    af = af_ref[...]
+    r = af @ xf_ref[...] - y_ref[...]
+    grad_ref[...] = 2.0 * (r @ af)
+    loss_ref[...] = jnp.sum(r * r)
+
+
+def _ms_grad_kernel(af_ref, y_ref, xf_ref, grad_ref, loss_ref):
+    """One batch tile: accumulate 2*Af_tile^T r_tile and sum(r_tile^2)."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    af = af_ref[...]                      # (TILE_M, K) in VMEM
+    r = af @ xf_ref[...] - y_ref[...]     # (TILE_M,)
+    grad_ref[...] += 2.0 * (r @ af)       # partial Af^T r, stays in VMEM
+    loss_ref[...] += jnp.sum(r * r)
+
+
+def pick_tile(m: int, cap: int = 512) -> int:
+    """Largest power-of-two tile <= cap that divides m (m is a power-of-two
+    bucket in production; for odd test shapes fall back to m itself)."""
+    t = cap
+    while t > 1 and m % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def ms_grad(af, y, xf, *, tile_m: int | None = None):
+    """Fused matrix-sensing SUM-gradient + SUM-loss.
+
+    Args:
+      af: (m, K) float32 — flattened sensing matrices, K = D1*D2.
+      y:  (m,)  float32 — responses.
+      xf: (K,)  float32 — flattened iterate.
+      tile_m: batch tile (rows of Af per grid step); default picked to
+        divide m.
+    Returns:
+      (grad_sum (K,), loss_sum ()) — divide by the true m downstream.
+    """
+    m, k = af.shape
+    tile = tile_m or pick_tile(m)
+    assert m % tile == 0, f"batch {m} not divisible by tile {tile}"
+    if tile == m:
+        # single block: emit a gridless pallas_call (fast on CPU interpret)
+        return pl.pallas_call(
+            _ms_grad_kernel_single,
+            out_shape=[
+                jax.ShapeDtypeStruct((k,), jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.float32),
+            ],
+            interpret=True,
+        )(af, y, xf)
+    grid = (m // tile,)
+    grad, loss = pl.pallas_call(
+        _ms_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((), lambda i: ()),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        ],
+        interpret=True,
+    )(af, y, xf)
+    return grad, loss

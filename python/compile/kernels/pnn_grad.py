@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: polynomial-neural-network minibatch gradient (+ loss).
+
+For a 2-layer PNN with quadratic activation and smooth hinge loss (paper
+§5.1), a feature batch A (m, D), labels y (m,) in {-1, +1} and iterate
+X (D, D):
+
+    z_i      = a_i^T X a_i                      (quadratic forward)
+    ty_i     = y_i * z_i
+    loss_sum = sum_i s-hinge(ty_i)
+    g_i      = s-hinge'(ty_i) * y_i
+    grad_sum = A^T diag(g) A     (shape (D, D)) — SUM over batch, not mean
+
+Fusion story (the reason this is a kernel and not three jnp calls): the
+(TILE_M, D) intermediate A_tile @ X never leaves VMEM — forward scores,
+hinge gradient weighting and the rank-TILE_M outer-product accumulation all
+happen on the resident tile.  On real TPU hardware this is two MXU
+contractions per tile with zero HBM round-trips for intermediates; the HBM
+traffic is exactly one read of A per step plus the resident X.
+
+Interpret mode only (see ms_grad.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ms_grad import pick_tile
+
+
+def _pnn_grad_kernel_single(a_ref, y_ref, x_ref, grad_ref, loss_ref):
+    """Gridless single-block variant (see ms_grad.py)."""
+    a = a_ref[...]
+    y = y_ref[...]
+    ax = a @ x_ref[...]
+    z = jnp.sum(ax * a, axis=1)
+    ty = y * z
+    loss = jnp.where(
+        ty <= 0.0, 0.5 - ty, jnp.where(ty <= 1.0, 0.5 * (1.0 - ty) ** 2, 0.0)
+    )
+    loss = jnp.where(y == 0.0, 0.0, loss)
+    dt = jnp.where(ty <= 0.0, -1.0, jnp.where(ty <= 1.0, -(1.0 - ty), 0.0))
+    g = dt * y
+    grad_ref[...] = a.T @ (g[:, None] * a)
+    loss_ref[...] = jnp.sum(loss)
+
+
+def _pnn_grad_kernel(a_ref, y_ref, x_ref, grad_ref, loss_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    a = a_ref[...]                         # (TILE_M, D)
+    y = y_ref[...]                         # (TILE_M,)
+    ax = a @ x_ref[...]                    # (TILE_M, D), stays in VMEM
+    z = jnp.sum(ax * a, axis=1)            # quadratic forward scores
+    ty = y * z
+    # continuous smooth hinge (see kernels/ref.py for the typo note)
+    loss = jnp.where(
+        ty <= 0.0, 0.5 - ty, jnp.where(ty <= 1.0, 0.5 * (1.0 - ty) ** 2, 0.0)
+    )
+    # Padding rows carry y == 0 (real labels are ±1); they must contribute
+    # exactly zero loss — s-hinge(0) = 0.5 would otherwise leak in.
+    loss = jnp.where(y == 0.0, 0.0, loss)
+    dt = jnp.where(ty <= 0.0, -1.0, jnp.where(ty <= 1.0, -(1.0 - ty), 0.0))
+    g = dt * y                             # dl_i/dz_i
+    grad_ref[...] += a.T @ (g[:, None] * a)
+    loss_ref[...] += jnp.sum(loss)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def pnn_grad(a, y, x, *, tile_m: int | None = None):
+    """Fused PNN SUM-gradient + SUM-loss.
+
+    Args:
+      a: (m, D) float32 feature rows; y: (m,) float32 labels in {-1,+1}
+        (0 rows with y=0 contribute exactly zero — used for bucket padding);
+      x: (D, D) float32 iterate.
+    Returns:
+      (grad_sum (D, D), loss_sum ()).
+    """
+    m, d = a.shape
+    tile = tile_m or pick_tile(m, cap=256)
+    assert m % tile == 0, f"batch {m} not divisible by tile {tile}"
+    if tile == m:
+        return pl.pallas_call(
+            _pnn_grad_kernel_single,
+            out_shape=[
+                jax.ShapeDtypeStruct((d, d), jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.float32),
+            ],
+            interpret=True,
+        )(a, y, x)
+    grid = (m // tile,)
+    grad, loss = pl.pallas_call(
+        _pnn_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((), lambda i: ()),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        ],
+        interpret=True,
+    )(a, y, x)
+    return grad, loss

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness signal).
+
+Each function here is the mathematically transparent reference; the Pallas
+kernels in this package must match these to float32 tolerance under pytest
+(+ hypothesis shape sweeps).  Nothing in this file is ever lowered to an
+artifact — it exists only to test the kernels and the L2 model graphs.
+
+Conventions (shared with the kernels and the Rust runtime):
+  * gradients are returned as SUMS over the batch, not means — the caller
+    divides by the true (un-padded) batch size, which makes zero-padding
+    rows exact (a zero row contributes exactly zero to grad and loss),
+  * matrix-sensing operates on flattened sensing matrices: Af[i] =
+    vec(A_i) with K = D1*D2,
+  * PNN uses the *continuous* smooth hinge: 0.5 - ty for ty <= 0,
+    0.5*(1-ty)^2 for 0 <= ty <= 1, 0 otherwise.  (The paper prints
+    (0.5*(1-ty))^2, which is discontinuous at ty = 0 and is evidently a
+    typo for the standard smooth hinge; see DESIGN.md.)
+"""
+
+import jax.numpy as jnp
+
+
+def ms_residual(af, y, xf):
+    """Matrix-sensing residuals r_i = <A_i, X> - y_i on flattened inputs."""
+    return af @ xf - y
+
+
+def ms_grad_ref(af, y, xf):
+    """SUM gradient + SUM loss of F(X) = (1/m) sum (<A_i,X> - y_i)^2.
+
+    grad_sum = 2 * Af^T r  (flattened, shape (K,)); loss_sum = sum r^2.
+    Caller divides both by the true batch size m.
+    """
+    r = ms_residual(af, y, xf)
+    return 2.0 * (r @ af), jnp.sum(r * r)
+
+
+def ms_loss_ref(af, y, xf):
+    """SUM of squared residuals (caller divides by m)."""
+    r = ms_residual(af, y, xf)
+    return jnp.sum(r * r)
+
+
+def smooth_hinge(ty):
+    """Continuous smooth hinge loss as a function of the margin ty."""
+    return jnp.where(
+        ty <= 0.0,
+        0.5 - ty,
+        jnp.where(ty <= 1.0, 0.5 * (1.0 - ty) ** 2, 0.0),
+    )
+
+
+def smooth_hinge_dt(ty):
+    """d smooth_hinge / d(ty): -1 for ty<=0, -(1-ty) on [0,1], 0 after."""
+    return jnp.where(
+        ty <= 0.0,
+        -1.0,
+        jnp.where(ty <= 1.0, -(1.0 - ty), 0.0),
+    )
+
+
+def pnn_forward(a, x):
+    """Quadratic-activation PNN scores z_i = a_i^T X a_i."""
+    return jnp.sum((a @ x) * a, axis=1)
+
+
+def pnn_grad_ref(a, y, x):
+    """SUM gradient + SUM loss of F(X) = (1/m) sum s-hinge(y_i, a_i^T X a_i).
+
+    dl_i/dX = s-hinge'(ty_i) * y_i * a_i a_i^T  (chain rule through z_i),
+    so grad_sum = A^T diag(g) A with g_i = s-hinge'(ty_i) * y_i.
+    """
+    z = pnn_forward(a, x)
+    ty = y * z
+    g = smooth_hinge_dt(ty) * y
+    loss = jnp.where(y == 0.0, 0.0, smooth_hinge(ty))  # mask padding rows
+    return a.T @ (g[:, None] * a), jnp.sum(loss)
+
+
+def pnn_loss_ref(a, y, x):
+    z = pnn_forward(a, x)
+    return jnp.sum(jnp.where(y == 0.0, 0.0, smooth_hinge(y * z)))
+
+
+def mv_ref(g, v):
+    """Dense matvec G @ v."""
+    return g @ v
+
+
+def mtv_ref(g, u):
+    """Dense transposed matvec G^T @ u."""
+    return g.T @ u
+
+
+def lmo_svd_ref(g):
+    """Exact leading singular triple of G via full SVD (oracle for the
+    power-iteration LMO).  Returns (u, v, sigma)."""
+    uu, ss, vvt = jnp.linalg.svd(g, full_matrices=False)
+    return uu[:, 0], vvt[0, :], ss[0]

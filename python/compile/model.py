@@ -1,0 +1,140 @@
+"""L2: the paper's compute graphs in JAX, calling the L1 Pallas kernels.
+
+These functions are what `aot.py` lowers (once, at build time) to HLO text
+for the Rust runtime — Python never runs on the request path.  Five module
+families are exported per objective:
+
+  *_step  : fused minibatch SUM-gradient -> power-iteration LMO, the per-
+            worker hot path of Algorithm 3 (one PJRT call per worker step).
+            Returns (u, v, sigma, loss_sum): the rank-one LMO direction is
+            -theta * u v^T, sigma = u^T G v >= 0, and loss_sum rides along
+            for free (same pass over the batch).
+  *_grad  : SUM-gradient + SUM-loss only — the building block the Rust side
+            composes for SVRF(-asyn)'s variance-reduced gradients
+            (grad(X) - grad(W) on the batch, plus the cached full grad(W)).
+  *_loss  : SUM-loss only, for cheap full-objective evaluation in chunks.
+  lmo     : standalone power-iteration LMO on an explicit gradient matrix
+            (used by SVRF where the VR gradient is assembled in Rust).
+
+All graphs take float32, fixed (bucketed) shapes; gradients/losses are
+SUMS over the batch — the Rust caller divides by the true, un-padded m so
+zero-padded rows are exact (see kernels/ref.py).
+
+CPU-interpret note: the kernels are tiled for TPU VMEM (DESIGN.md
+§Hardware-Adaptation), but interpret-mode Pallas executes its grid loop
+through dynamic-slice machinery that the CPU XLA pipeline cannot fuse —
+a 4-step grid costs ~20-400x a single-block call (see EXPERIMENTS.md
+§Perf).  The AOT graphs therefore lower every kernel with ONE full-size
+block (`tile = full dim`); the multi-tile schedule remains exercised by
+the pytest/hypothesis suites and is what a real-TPU build would use.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ms_grad, mtv, mv, pnn_grad
+
+_EPS = 1e-12
+
+
+def lmo_power(g, v0, iters: int):
+    """Leading singular pair of g by alternating power iteration.
+
+    Args:
+      g: (D1, D2) gradient matrix; v0: (D2,) start vector (the Rust caller
+        randomizes it per call to avoid adversarial orthogonal starts).
+      iters: fixed iteration count (static; baked into the artifact).
+    Returns:
+      (u (D1,), v (D2,), sigma ()) with u = g v / ||g v||, sigma >= 0.
+    """
+    d1, d2 = g.shape
+    v = v0 / (jnp.linalg.norm(v0) + _EPS)
+
+    def body(_, carry):
+        _, v = carry
+        u = mv(g, v, tile_r=d1)
+        u = u / (jnp.linalg.norm(u) + _EPS)
+        v = mtv(g, u, tile_c=d2)
+        v = v / (jnp.linalg.norm(v) + _EPS)
+        return (u, v)
+
+    u0 = mv(g, v, tile_r=d1)
+    u0 = u0 / (jnp.linalg.norm(u0) + _EPS)
+    u, v = jax.lax.fori_loop(0, iters, body, (u0, v))
+    sigma = u @ mv(g, v, tile_r=d1)
+    return u, v, sigma
+
+
+# ---------------------------------------------------------------- matrix sensing
+
+
+def ms_step(af, y, xf, v0, *, d1: int, d2: int, power_iters: int):
+    """Worker hot path: minibatch gradient -> LMO, fused in one module."""
+    grad_flat, loss_sum = ms_grad(af, y, xf, tile_m=af.shape[0])
+    g = grad_flat.reshape(d1, d2)
+    u, v, sigma = lmo_power(g, v0, power_iters)
+    return u, v, sigma, loss_sum
+
+
+def ms_grad_module(af, y, xf):
+    """SUM-gradient (flattened) + SUM-loss (SVRF building block)."""
+    return ms_grad(af, y, xf, tile_m=af.shape[0])
+
+
+def ms_loss_module(af, y, xf):
+    """SUM-loss only (evaluation path; reuses the fused kernel)."""
+    _, loss_sum = ms_grad(af, y, xf, tile_m=af.shape[0])
+    return (loss_sum,)
+
+
+# ---------------------------------------------------------------------- PNN
+
+
+def pnn_step(a, y, x, v0, *, power_iters: int):
+    """Worker hot path for the PNN objective."""
+    g, loss_sum = pnn_grad(a, y, x, tile_m=a.shape[0])
+    u, v, sigma = lmo_power(g, v0, power_iters)
+    return u, v, sigma, loss_sum
+
+
+def pnn_grad_module(a, y, x):
+    return pnn_grad(a, y, x, tile_m=a.shape[0])
+
+
+def pnn_loss_module(a, y, x):
+    _, loss_sum = pnn_grad(a, y, x, tile_m=a.shape[0])
+    return (loss_sum,)
+
+
+# ------------------------------------------------------- device-resident gather
+
+
+def ms_step_idx(af_full, y_full, idx, xf, v0, *, d1: int, d2: int, power_iters: int):
+    """Gather-based worker step: the FULL (padded) dataset stays device-
+    resident across calls; per call only the sampled indices (i32), the
+    flattened iterate and the LMO start vector cross the host boundary.
+    This removed the dominant per-step cost of the PJRT hot path (a
+    multi-MB batch upload per call — EXPERIMENTS.md §Perf).
+
+    `af_full` has N_max + 1 rows; row N_max is all-zero with y = 0, and
+    padding slots of `idx` point at it (exact no-op under SUM semantics).
+    """
+    af = jnp.take(af_full, idx, axis=0)
+    y = jnp.take(y_full, idx, axis=0)
+    return ms_step(af, y, xf, v0, d1=d1, d2=d2, power_iters=power_iters)
+
+
+def pnn_step_idx(a_full, y_full, idx, x, v0, *, power_iters: int):
+    """Gather-based PNN worker step (see ms_step_idx)."""
+    a = jnp.take(a_full, idx, axis=0)
+    y = jnp.take(y_full, idx, axis=0)
+    return pnn_step(a, y, x, v0, power_iters=power_iters)
+
+
+# --------------------------------------------------------------- standalone LMO
+
+
+def lmo_module(g, v0, *, power_iters: int):
+    """Standalone LMO on an explicit (D1, D2) gradient matrix."""
+    u, v, sigma = lmo_power(g, v0, power_iters)
+    return u, v, sigma

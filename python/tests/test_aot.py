@@ -1,0 +1,48 @@
+"""AOT smoke: --quick build produces parseable HLO text + coherent manifest."""
+
+import os
+
+from compile import aot
+
+
+def test_quick_build(tmp_path):
+    out = str(tmp_path / "artifacts")
+    aot.main([
+        "--out-dir", out, "--quick",
+        "--ms-d1", "6", "--ms-d2", "5", "--pnn-d", "8", "--power-iters", "4",
+    ])
+    names = sorted(os.listdir(out))
+    assert "manifest.txt" in names
+    expected = [
+        "lmo_ms", "lmo_pnn",
+        "ms_grad_m64", "ms_loss_m64", "ms_step_m64", "ms_stepi_m64",
+        "pnn_grad_m64", "pnn_loss_m64", "pnn_step_m64", "pnn_stepi_m64",
+    ]
+    for n in expected:
+        path = os.path.join(out, f"{n}.hlo.txt")
+        assert os.path.exists(path), n
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{n} is not HLO text"
+        assert "ROOT" in text
+
+    manifest = open(os.path.join(out, "manifest.txt")).read().splitlines()
+    params = {l.split()[1]: l.split()[2] for l in manifest if l.startswith("param ")}
+    assert params["ms_d1"] == "6" and params["ms_d2"] == "5"
+    assert params["pnn_d"] == "8"
+    assert params["ms_buckets"] == "64" and params["pnn_buckets"] == "64"
+    modules = [l.split()[1] for l in manifest if l.startswith("module ")]
+    assert sorted(modules) == expected
+
+
+def test_manifest_input_shapes(tmp_path):
+    out = str(tmp_path / "a2")
+    aot.main(["--out-dir", out, "--quick", "--ms-d1", "4", "--ms-d2", "4",
+              "--pnn-d", "4", "--power-iters", "2"])
+    lines = open(os.path.join(out, "manifest.txt")).read().splitlines()
+    step = next(l for l in lines if l.startswith("module ms_step_m64"))
+    assert "inputs=64x16,64,16,4" in step
+    lmo = next(l for l in lines if l.startswith("module lmo_pnn"))
+    assert "inputs=4x4,4" in lmo
+    stepi = next(l for l in lines if l.startswith("module ms_stepi_m64"))
+    # N_max+1 rows (zero pad row), i32 index vector
+    assert "inputs=513x16,513,64,16,4" in stepi

@@ -1,0 +1,179 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+hypothesis sweeps batch sizes / dims / tiles; every kernel must match
+kernels/ref.py to float32 tolerance, including the padding conventions
+(zero rows contribute exactly zero grad AND zero loss).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ms_grad, mtv, mv, pick_tile, pnn_grad, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL, ATOL = 2e-4, 2e-4
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def ms_batch(seed, m, d1, d2):
+    r = rng(seed)
+    af = r.standard_normal((m, d1 * d2), dtype=np.float32)
+    xf = r.standard_normal(d1 * d2, dtype=np.float32) * 0.1
+    y = r.standard_normal(m, dtype=np.float32)
+    return jnp.asarray(af), jnp.asarray(y), jnp.asarray(xf)
+
+
+def pnn_batch(seed, m, d):
+    r = rng(seed)
+    a = r.random((m, d), dtype=np.float32)
+    y = np.where(r.random(m) < 0.5, -1.0, 1.0).astype(np.float32)
+    x = (r.standard_normal((d, d), dtype=np.float32) * 0.05).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(y), jnp.asarray(x)
+
+
+# ------------------------------------------------------------------ ms_grad
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([4, 16, 64, 128, 256]),
+    d1=st.sampled_from([2, 5, 8, 30]),
+    d2=st.sampled_from([2, 7, 30]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ms_grad_matches_ref(m, d1, d2, seed):
+    af, y, xf = ms_batch(seed, m, d1, d2)
+    g_k, l_k = ms_grad(af, y, xf)
+    g_r, l_r = ref.ms_grad_ref(af, y, xf)
+    np.testing.assert_allclose(g_k, g_r, rtol=RTOL, atol=ATOL * m)
+    np.testing.assert_allclose(l_k, l_r, rtol=RTOL, atol=ATOL * m)
+
+
+@pytest.mark.parametrize("tile", [1, 2, 4, 8, 16, 32, 64])
+def test_ms_grad_tile_invariance(tile):
+    af, y, xf = ms_batch(7, 64, 6, 5)
+    g0, l0 = ref.ms_grad_ref(af, y, xf)
+    g, l = ms_grad(af, y, xf, tile_m=tile)
+    np.testing.assert_allclose(g, g0, rtol=RTOL, atol=ATOL * 64)
+    np.testing.assert_allclose(l, l0, rtol=RTOL, atol=ATOL * 64)
+
+
+def test_ms_grad_zero_padding_exact():
+    af, y, xf = ms_batch(3, 32, 4, 4)
+    afp = jnp.concatenate([af, jnp.zeros((32, 16), jnp.float32)])
+    yp = jnp.concatenate([y, jnp.zeros(32, jnp.float32)])
+    g0, l0 = ms_grad(af, y, xf)
+    g1, l1 = ms_grad(afp, yp, xf)
+    np.testing.assert_allclose(g1, g0, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(l1, l0, rtol=RTOL, atol=ATOL)
+
+
+def test_ms_grad_is_true_gradient():
+    """Finite-difference check: kernel sum-grad/m == dF/dx elementwise."""
+    af, y, xf = ms_batch(11, 32, 3, 3)
+    m = 32
+    g, _ = ms_grad(af, y, xf)
+    g = np.asarray(g) / m
+    eps = 1e-3
+    for idx in [0, 4, 8]:
+        e = np.zeros(9, np.float32)
+        e[idx] = eps
+        fp = float(ref.ms_loss_ref(af, y, xf + e)) / m
+        fm = float(ref.ms_loss_ref(af, y, xf - e)) / m
+        fd = (fp - fm) / (2 * eps)
+        assert abs(fd - g[idx]) < 5e-2, (idx, fd, g[idx])
+
+
+# ----------------------------------------------------------------- pnn_grad
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([4, 16, 64, 128]),
+    d=st.sampled_from([3, 8, 14, 28]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pnn_grad_matches_ref(m, d, seed):
+    a, y, x = pnn_batch(seed, m, d)
+    g_k, l_k = pnn_grad(a, y, x)
+    g_r, l_r = ref.pnn_grad_ref(a, y, x)
+    np.testing.assert_allclose(g_k, g_r, rtol=RTOL, atol=ATOL * m)
+    np.testing.assert_allclose(l_k, l_r, rtol=RTOL, atol=ATOL * m)
+
+
+@pytest.mark.parametrize("tile", [1, 4, 16, 64])
+def test_pnn_grad_tile_invariance(tile):
+    a, y, x = pnn_batch(5, 64, 9)
+    g0, l0 = ref.pnn_grad_ref(a, y, x)
+    g, l = pnn_grad(a, y, x, tile_m=tile)
+    np.testing.assert_allclose(g, g0, rtol=RTOL, atol=ATOL * 64)
+    np.testing.assert_allclose(l, l0, rtol=RTOL, atol=ATOL * 64)
+
+
+def test_pnn_zero_padding_exact():
+    """Padding rows (a=0, y=0) contribute zero grad AND zero loss — the
+    s-hinge(0)=0.5 leak is masked (kernels/pnn_grad.py)."""
+    a, y, x = pnn_batch(9, 16, 6)
+    ap = jnp.concatenate([a, jnp.zeros((48, 6), jnp.float32)])
+    yp = jnp.concatenate([y, jnp.zeros(48, jnp.float32)])
+    g0, l0 = pnn_grad(a, y, x)
+    g1, l1 = pnn_grad(ap, yp, x)
+    np.testing.assert_allclose(g1, g0, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(l1, l0, rtol=RTOL, atol=ATOL)
+
+
+def test_pnn_grad_is_true_gradient():
+    a, y, x = pnn_batch(21, 32, 4)
+    m = 32
+    g, _ = pnn_grad(a, y, x)
+    g = np.asarray(g) / m
+    eps = 1e-3
+    for i, j in [(0, 0), (1, 2), (3, 3)]:
+        e = np.zeros((4, 4), np.float32)
+        e[i, j] = eps
+        fp = float(ref.pnn_loss_ref(a, y, x + e)) / m
+        fm = float(ref.pnn_loss_ref(a, y, x - e)) / m
+        fd = (fp - fm) / (2 * eps)
+        assert abs(fd - g[i, j]) < 5e-2, ((i, j), fd, g[i, j])
+
+
+def test_smooth_hinge_continuity():
+    """Regression for the paper's (0.5*(1-ty))^2 typo: our hinge is
+    continuous at ty=0 and ty=1 and matches the linear branch for ty<0."""
+    ty = jnp.asarray([-1e-4, 0.0, 1e-4, 1.0 - 1e-4, 1.0, 1.0 + 1e-4])
+    v = np.asarray(ref.smooth_hinge(ty))
+    assert abs(v[0] - v[1]) < 1e-3 and abs(v[1] - v[2]) < 1e-3
+    assert abs(v[1] - 0.5) < 1e-6
+    assert v[4] == 0.0 and v[5] == 0.0 and abs(v[3]) < 1e-6
+
+
+# ------------------------------------------------------------------- matvec
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d1=st.sampled_from([2, 8, 30, 64]),
+    d2=st.sampled_from([3, 16, 30]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_matches_ref(d1, d2, seed):
+    r = rng(seed)
+    g = jnp.asarray(r.standard_normal((d1, d2), dtype=np.float32))
+    v = jnp.asarray(r.standard_normal(d2, dtype=np.float32))
+    u = jnp.asarray(r.standard_normal(d1, dtype=np.float32))
+    np.testing.assert_allclose(mv(g, v), ref.mv_ref(g, v), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(mtv(g, u), ref.mtv_ref(g, u), rtol=RTOL, atol=ATOL)
+
+
+def test_pick_tile():
+    assert pick_tile(1024) == 512
+    assert pick_tile(64) == 64
+    assert pick_tile(96) == 32
+    assert pick_tile(7) == 1  # odd shapes fall back to untiled

@@ -1,0 +1,110 @@
+"""L2 model graphs: LMO power iteration vs exact SVD; fused step modules
+vs the composition of their parts (what the Rust runtime assumes)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_lowrankish(seed, d1, d2, gap=3.0):
+    """Random matrix with a boosted top singular value so power iteration
+    converges fast (gradient matrices in FW have this structure: the top
+    direction dominates once X is far from optimal)."""
+    r = np.random.default_rng(seed)
+    g = r.standard_normal((d1, d2)).astype(np.float32)
+    u = r.standard_normal(d1).astype(np.float32)
+    v = r.standard_normal(d2).astype(np.float32)
+    u /= np.linalg.norm(u)
+    v /= np.linalg.norm(v)
+    return jnp.asarray(g + gap * np.sqrt(d1 * d2) * np.outer(u, v))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d1=st.sampled_from([4, 16, 30]),
+    d2=st.sampled_from([4, 16, 30]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lmo_power_matches_svd(d1, d2, seed):
+    g = rand_lowrankish(seed, d1, d2)
+    v0 = jnp.ones(d2, jnp.float32)
+    u, v, sigma = model.lmo_power(g, v0, 32)
+    u_r, v_r, s_r = ref.lmo_svd_ref(g)
+    # singular vectors are sign-ambiguous; compare |<u, u_ref>| and sigma
+    assert abs(float(jnp.dot(u, u_r))) > 0.999
+    assert abs(float(jnp.dot(v, v_r))) > 0.999
+    np.testing.assert_allclose(float(sigma), float(s_r), rtol=1e-3)
+
+
+def test_lmo_power_unit_norm_outputs():
+    g = rand_lowrankish(3, 30, 30)
+    u, v, sigma = model.lmo_power(g, jnp.ones(30, jnp.float32), 16)
+    assert abs(float(jnp.linalg.norm(u)) - 1.0) < 1e-4
+    assert abs(float(jnp.linalg.norm(v)) - 1.0) < 1e-4
+    assert float(sigma) >= 0.0
+
+
+def test_lmo_descent_direction():
+    """-u v^T must be the best rank-one direction: <G, -uv^T> <= <G, -ab^T>
+    for random unit pairs (a, b)."""
+    g = rand_lowrankish(17, 20, 12)
+    u, v, _ = model.lmo_power(g, jnp.ones(12, jnp.float32), 32)
+    best = float(jnp.einsum("ij,i,j->", g, u, v))
+    r = np.random.default_rng(0)
+    for _ in range(50):
+        a = r.standard_normal(20).astype(np.float32)
+        b = r.standard_normal(12).astype(np.float32)
+        a /= np.linalg.norm(a)
+        b /= np.linalg.norm(b)
+        cand = float(jnp.einsum("ij,i,j->", g, jnp.asarray(a), jnp.asarray(b)))
+        assert cand <= best + 1e-3
+
+
+def test_ms_step_equals_composition():
+    r = np.random.default_rng(5)
+    m, d1, d2 = 64, 6, 5
+    af = jnp.asarray(r.standard_normal((m, d1 * d2)).astype(np.float32))
+    y = jnp.asarray(r.standard_normal(m).astype(np.float32))
+    xf = jnp.asarray(r.standard_normal(d1 * d2).astype(np.float32) * 0.1)
+    v0 = jnp.ones(d2, jnp.float32)
+    u, v, sigma, loss = model.ms_step(af, y, xf, v0, d1=d1, d2=d2, power_iters=32)
+    g_r, l_r = ref.ms_grad_ref(af, y, xf)
+    u_r, v_r, s_r = ref.lmo_svd_ref(g_r.reshape(d1, d2))
+    np.testing.assert_allclose(float(loss), float(l_r), rtol=1e-4)
+    np.testing.assert_allclose(float(sigma), float(s_r), rtol=1e-2)
+    assert abs(float(jnp.dot(u, u_r))) > 0.99
+
+
+def test_pnn_step_equals_composition():
+    r = np.random.default_rng(6)
+    m, d = 64, 8
+    a = jnp.asarray(r.random((m, d)).astype(np.float32))
+    y = jnp.asarray(np.where(r.random(m) < 0.5, -1.0, 1.0).astype(np.float32))
+    x = jnp.asarray(r.standard_normal((d, d)).astype(np.float32) * 0.05)
+    v0 = jnp.ones(d, jnp.float32)
+    u, v, sigma, loss = model.pnn_step(a, y, x, v0, power_iters=32)
+    g_r, l_r = ref.pnn_grad_ref(a, y, x)
+    u_r, v_r, s_r = ref.lmo_svd_ref(g_r)
+    np.testing.assert_allclose(float(loss), float(l_r), rtol=1e-4)
+    np.testing.assert_allclose(float(sigma), float(s_r), rtol=1e-2)
+
+
+def test_loss_modules_match_ref():
+    r = np.random.default_rng(8)
+    af = jnp.asarray(r.standard_normal((32, 16)).astype(np.float32))
+    y = jnp.asarray(r.standard_normal(32).astype(np.float32))
+    xf = jnp.asarray(r.standard_normal(16).astype(np.float32))
+    (l,) = model.ms_loss_module(af, y, xf)
+    np.testing.assert_allclose(float(l), float(ref.ms_loss_ref(af, y, xf)), rtol=1e-4)
+
+    a = jnp.asarray(r.random((32, 8)).astype(np.float32))
+    yl = jnp.asarray(np.where(r.random(32) < 0.5, -1.0, 1.0).astype(np.float32))
+    x = jnp.asarray(r.standard_normal((8, 8)).astype(np.float32) * 0.1)
+    (l2,) = model.pnn_loss_module(a, yl, x)
+    np.testing.assert_allclose(float(l2), float(ref.pnn_loss_ref(a, yl, x)), rtol=1e-4)

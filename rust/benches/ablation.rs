@@ -1,0 +1,146 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!
+//! 1. **tau sweep** — the staleness tolerance trades drop-rate against
+//!    stale-gradient error (Thm 1's (3 tau + 1) factor): tiny tau wastes
+//!    worker compute on dropped updates, huge tau admits noisy directions.
+//! 2. **bucket padding** — the PJRT runtime pads batches to power-of-two
+//!    buckets; measures the wasted-compute overhead vs an exact-shape
+//!    execution at several batch sizes.
+//! 3. **power-iteration depth** — LMO quality vs cost: iterations needed
+//!    for the 1-SVD to stop limiting convergence.
+//!
+//! Emits bench_out/ablation_*.csv.
+
+use std::sync::Arc;
+
+use sfw::algo::engine::{NativeEngine, StepEngine};
+use sfw::algo::schedule::BatchSchedule;
+use sfw::algo::sfw::{run_sfw, SfwOptions};
+use sfw::benchkit::{bench_for, Table};
+use sfw::coordinator::{run_asyn_local, AsynOptions};
+use sfw::experiments::{build_ms, relative};
+use sfw::linalg::Mat;
+use sfw::metrics::{Counters, LossTrace};
+use sfw::objective::Objective;
+use sfw::runtime::{PjrtEngine, PjrtRuntime, Workload};
+use sfw::util::rng::Rng;
+
+fn main() {
+    tau_sweep();
+    bucket_padding();
+    power_iteration_depth();
+}
+
+fn tau_sweep() {
+    let obj = build_ms(42, 20_000);
+    let o: Arc<dyn Objective> = obj.clone();
+    let mut table = Table::new(
+        "ablation: staleness tolerance tau (W=8, T=200, m=256)",
+        &["tau", "final rel", "dropped", "drop %"],
+    );
+    let mut csv = Table::new("csv", &["tau", "rel", "dropped"]);
+    for &tau in &[0u64, 1, 2, 4, 8, 16, 64] {
+        let o2 = obj.clone();
+        let r = run_asyn_local(
+            o.clone(),
+            &AsynOptions {
+                iterations: 200,
+                tau,
+                workers: 8,
+                batch: BatchSchedule::Constant(256),
+                eval_every: 200,
+                seed: 42,
+                straggler: None,
+                link_latency: None,
+            },
+            move |w| Box::new(NativeEngine::new(o2.clone(), 30, 43 + w as u64)),
+        );
+        let rel = relative(&r.trace.points(), o.f_star_hint())
+            .last()
+            .unwrap()
+            .2;
+        let s = r.counters.snapshot();
+        let total = s.iterations + s.dropped_updates;
+        table.row(&[
+            tau.to_string(),
+            format!("{rel:.3e}"),
+            s.dropped_updates.to_string(),
+            format!("{:.1}%", 100.0 * s.dropped_updates as f64 / total as f64),
+        ]);
+        csv.row(&[tau.to_string(), format!("{rel:.5e}"), s.dropped_updates.to_string()]);
+    }
+    table.print();
+    csv.write_csv("bench_out/ablation_tau.csv").expect("csv");
+    println!("Expected: drop%% falls monotonically with tau; final rel is flat-ish");
+    println!("across moderate tau and degrades only at extreme staleness (Thm 1).");
+}
+
+fn bucket_padding() {
+    let Ok(rt) = PjrtRuntime::new("artifacts") else {
+        println!("(bucket_padding skipped — run `make artifacts`)");
+        return;
+    };
+    let rt = Arc::new(rt);
+    let ms = build_ms(1, 20_000);
+    let mut engine = PjrtEngine::new(rt, Workload::Ms(ms.clone()), 5);
+    let mut rng = Rng::new(6);
+    let x = Mat::randn(30, 30, 0.1, &mut rng);
+    let mut g = Mat::zeros(30, 30);
+    let mut table = Table::new(
+        "ablation: PJRT bucket padding overhead (ms_grad)",
+        &["true batch", "bucket", "pad %", "mean time"],
+    );
+    for &m in &[64usize, 128, 129, 300, 512, 513, 1500, 2048] {
+        let idx: Vec<usize> = (0..m).map(|_| rng.next_below(20_000)).collect();
+        let bucket = [128usize, 512, 2048, 8192]
+            .iter()
+            .copied()
+            .find(|&b| b >= m)
+            .unwrap();
+        let stats = bench_for(1, std::time::Duration::from_millis(300), || {
+            let _ = engine.grad_sum(&x, &idx, &mut g);
+        });
+        table.row(&[
+            m.to_string(),
+            bucket.to_string(),
+            format!("{:.0}%", 100.0 * (bucket - m) as f64 / bucket as f64),
+            stats.mean_human(),
+        ]);
+    }
+    table.print();
+    println!("Expected: time tracks the BUCKET, not the true batch — the cost of");
+    println!("shape-specialized AOT executables; worst case ~2x just past a bucket edge.");
+}
+
+fn power_iteration_depth() {
+    let obj = build_ms(7, 10_000);
+    let o: Arc<dyn Objective> = obj.clone();
+    let mut table = Table::new(
+        "ablation: power-iteration depth (serial SFW, T=150, m=512)",
+        &["max iters", "final rel", "mean LMO iters used"],
+    );
+    let mut csv = Table::new("csv", &["iters", "rel"]);
+    for &pi in &[1usize, 2, 4, 8, 16, 64] {
+        let counters = Counters::new();
+        let trace = LossTrace::new();
+        let mut engine = NativeEngine::new(o.clone(), pi, 8);
+        run_sfw(
+            &mut engine,
+            &SfwOptions {
+                iterations: 150,
+                batch: BatchSchedule::Constant(512),
+                eval_every: 150,
+                seed: 9,
+            },
+            &counters,
+            &trace,
+        );
+        let rel = relative(&trace.points(), o.f_star_hint()).last().unwrap().2;
+        table.row(&[pi.to_string(), format!("{rel:.3e}"), format!("<= {pi}")]);
+        csv.row(&[pi.to_string(), format!("{rel:.5e}")]);
+    }
+    table.print();
+    csv.write_csv("bench_out/ablation_power_iters.csv").expect("csv");
+    println!("Expected: quality saturates by ~8-16 iterations — consistent with the");
+    println!("paper solving the 1-SVD 'to a practical precision' (Appendix D).");
+}

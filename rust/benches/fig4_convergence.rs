@@ -1,0 +1,142 @@
+//! Figure 4: convergence of the relative loss vs wall-clock time, on both
+//! paper workloads (matrix sensing row 1, PNN row 2), SFW-dist vs
+//! SFW-asyn, W ∈ {1, 7, 15} workers.
+//!
+//! EC2's heterogeneous workers are emulated by injecting geometric
+//! straggler delays on every worker (DESIGN.md §6).  Expected shape (the
+//! paper's): SFW-asyn dominates SFW-dist at every W; both speed up with W
+//! on matrix sensing; PNN speedups are muted because the dense-matrix
+//! traffic of SFW-dist grows with D^2 (here that cost appears as the
+//! serialized dense gradient aggregation at the barrier).
+//!
+//! Emits bench_out/fig4_<task>.csv with (algo, W, t, iter, rel_loss) rows.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sfw::algo::engine::NativeEngine;
+use sfw::algo::schedule::BatchSchedule;
+use sfw::benchkit::Table;
+use sfw::coordinator::{run_asyn_local, run_dist, AsynOptions, DistOptions, Straggler};
+use sfw::experiments::{build_ms, build_pnn, relative, time_to_relative};
+use sfw::objective::Objective;
+
+fn straggler() -> Option<Straggler> {
+    // sleep-dominated heterogeneity: emulates EC2 worker skew and
+    // parallelizes cleanly across threads (unlike CPU-bound compute on a
+    // shared host), so wall-clock scaling reflects the protocol, not the
+    // local core count
+    Some(Straggler { unit: Duration::from_micros(20), p: 0.25 })
+}
+
+struct Curve {
+    algo: &'static str,
+    workers: usize,
+    points: Vec<(f64, u64, f64)>,
+}
+
+fn run_task(
+    name: &str,
+    obj: Arc<dyn Objective>,
+    iterations: u64,
+    batch: usize,
+    tau: u64,
+    target: f64,
+) {
+    let seed = 42u64;
+    let f_star = obj.f_star_hint();
+    let mut curves: Vec<Curve> = Vec::new();
+    for &w in &[1usize, 7, 15] {
+        let o2 = obj.clone();
+        let dist = run_dist(
+            obj.clone(),
+            &DistOptions {
+                iterations,
+                workers: w,
+                batch: BatchSchedule::Constant(batch),
+                eval_every: 10,
+                seed,
+                straggler: straggler(),
+            },
+            move |i| Box::new(NativeEngine::new(o2.clone(), 30, seed ^ 0x100u64.wrapping_add(i as u64))),
+        );
+        curves.push(Curve {
+            algo: "sfw-dist",
+            workers: w,
+            points: relative(&dist.trace.points(), f_star),
+        });
+        let o3 = obj.clone();
+        let asyn = run_asyn_local(
+            obj.clone(),
+            &AsynOptions {
+                iterations,
+                tau,
+                workers: w,
+                batch: BatchSchedule::Constant(batch), // same schedule both algos (wall-clock comparison)
+                eval_every: 10,
+                seed,
+                straggler: straggler(),
+                link_latency: None,
+            },
+            move |i| Box::new(NativeEngine::new(o3.clone(), 30, seed ^ 0x200 ^ i as u64)),
+        );
+        curves.push(Curve {
+            algo: "sfw-asyn",
+            workers: w,
+            points: relative(&asyn.trace.points(), f_star),
+        });
+    }
+
+    // summary: time to target per curve
+    let mut table = Table::new(
+        &format!("Fig 4 ({name}): time to rel loss {target}"),
+        &["algo", "W", "t_target(s)", "final rel"],
+    );
+    let mut csv = Table::new("csv", &["algo", "W", "t", "iter", "rel"]);
+    for c in &curves {
+        let raw: Vec<sfw::metrics::TracePoint> = c
+            .points
+            .iter()
+            .map(|&(t, i, r)| sfw::metrics::TracePoint { t, iteration: i, loss: r })
+            .collect();
+        let tt = time_to_relative(&raw, 0.0, target)
+            .map(|t| format!("{t:.3}"))
+            .unwrap_or_else(|| "—".into());
+        table.row(&[
+            c.algo.into(),
+            c.workers.to_string(),
+            tt,
+            format!("{:.3e}", c.points.last().unwrap().2),
+        ]);
+        for &(t, i, r) in &c.points {
+            csv.row(&[
+                c.algo.into(),
+                c.workers.to_string(),
+                format!("{t:.4}"),
+                i.to_string(),
+                format!("{r:.5e}"),
+            ]);
+        }
+    }
+    table.print();
+    let path = format!("bench_out/fig4_{name}.csv");
+    csv.write_csv(&path).expect("csv");
+    println!("series written to {path}");
+}
+
+fn main() {
+    println!("== Fig 4 row 1: matrix sensing (30x30, synthetic) ==");
+    let ms = build_ms(42, 20_000);
+    run_task("matrix_sensing", ms, 300, 256, 8, 0.02);
+
+    println!("\n== Fig 4 row 2: PNN (196x196 default; paper runs 784x784) ==");
+    let pnn = build_pnn(43, 196, 8_000);
+    run_task("pnn", pnn, 400, 256, 2, 0.65);
+
+    println!("\nExpected shape (paper §5.2): clear speedups for both algos on");
+    println!("matrix sensing with sfw-asyn ahead at every W; PNN speedups are");
+    println!("marginal for both (the paper's own finding — large D1*D2 shifts the");
+    println!("balance to compute/communication).  NOTE: on this single-host");
+    println!("substitution equal batches make asyn do W x dist's gradient work,");
+    println!("which understates asyn on PNN relative to a real cluster.");
+}

@@ -1,0 +1,145 @@
+//! Hot-path microbenchmarks (§Perf): the per-operation costs that compose
+//! a worker step and a master iteration, native vs PJRT (AOT JAX/Pallas),
+//! plus the protocol-side costs (replay, codec, rank-one update).
+//!
+//! Used by the EXPERIMENTS.md §Perf iteration log.  Run with artifacts
+//! built (`make artifacts`) to get the PJRT rows.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sfw::algo::engine::{NativeEngine, StepEngine};
+use sfw::benchkit::{bench_for, humanize, Table};
+use sfw::coordinator::update_log::{replay, UpdateLog};
+use sfw::experiments::{build_ms, build_pnn};
+use sfw::linalg::{power_iteration_rand, Mat};
+use sfw::objective::Objective;
+use sfw::runtime::{PjrtEngine, PjrtRuntime, Workload};
+use sfw::transport::tcp::{decode_update, encode_update};
+use sfw::util::rng::Rng;
+
+const BUDGET: Duration = Duration::from_millis(600);
+
+fn main() {
+    let mut table = Table::new("hot-path microbenchmarks", &["op", "mean", "p50", "p90", "notes"]);
+    let mut rng = Rng::new(42);
+
+    let ms = build_ms(1, 20_000);
+    let ms_o: Arc<dyn Objective> = ms.clone();
+    let pnn = build_pnn(2, 196, 5_000);
+    let pnn_o: Arc<dyn Objective> = pnn.clone();
+
+    let mut row = |name: &str, notes: &str, f: &mut dyn FnMut()| {
+        let s = bench_for(2, BUDGET, f);
+        table.row(&[
+            name.into(),
+            s.mean_human(),
+            humanize(s.p50_s),
+            humanize(s.p90_s),
+            notes.into(),
+        ]);
+    };
+
+    // ---- native gradient + LMO -------------------------------------------
+    let mut nat_ms = NativeEngine::new(ms_o.clone(), 24, 3);
+    let x_ms = Mat::randn(30, 30, 0.1, &mut rng);
+    let idx_2048: Vec<usize> = (0..2_048).map(|_| rng.next_below(20_000)).collect();
+    let idx_128: Vec<usize> = idx_2048[..128].to_vec();
+    let mut g = Mat::zeros(30, 30);
+    row("ms grad m=128 (native)", "30x30, sum-grad", &mut || {
+        let _ = nat_ms.grad_sum(&x_ms, &idx_128, &mut g);
+    });
+    row("ms grad m=2048 (native)", "30x30", &mut || {
+        let _ = nat_ms.grad_sum(&x_ms, &idx_2048, &mut g);
+    });
+    row("ms fused step m=2048 (native)", "grad + 24-iter power LMO", &mut || {
+        let _ = nat_ms.step(&x_ms, &idx_2048);
+    });
+
+    let mut nat_pnn = NativeEngine::new(pnn_o.clone(), 24, 4);
+    let x_pnn = Mat::randn(196, 196, 0.05, &mut rng);
+    let idxp: Vec<usize> = (0..256).map(|_| rng.next_below(5_000)).collect();
+    let mut gp = Mat::zeros(196, 196);
+    row("pnn grad m=256 (native)", "196x196 quadratic fwd+bwd", &mut || {
+        let _ = nat_pnn.grad_sum(&x_pnn, &idxp, &mut gp);
+    });
+
+    // ---- LMO scaling -------------------------------------------------------
+    let g30 = Mat::randn(30, 30, 1.0, &mut rng);
+    let g196 = Mat::randn(196, 196, 1.0, &mut rng);
+    row("power-iter 1-SVD 30x30", "tol 1e-7", &mut || {
+        let _ = power_iteration_rand(&g30, &mut rng, 100, 1e-7);
+    });
+    row("power-iter 1-SVD 196x196", "tol 1e-7", &mut || {
+        let _ = power_iteration_rand(&g196, &mut rng, 100, 1e-7);
+    });
+    row("jacobi FULL SVD 30x30 (PGD's projection cost)", "why FW wins", &mut || {
+        let _ = sfw::linalg::jacobi_svd(&g30);
+    });
+
+    // ---- protocol ops --------------------------------------------------------
+    let mut x_upd = Mat::randn(196, 196, 0.1, &mut rng);
+    let u: Vec<f32> = rng.unit_vector(196);
+    let v: Vec<f32> = rng.unit_vector(196);
+    row("fw_rank_one_update 196x196", "master per-iteration cost", &mut || {
+        x_upd.fw_rank_one_update(0.01, -1.0, &u, &v);
+    });
+    let mut log = UpdateLog::new();
+    for _ in 0..64 {
+        log.append(rng.unit_vector(196), rng.unit_vector(196), 1.0);
+    }
+    let slice = log.slice_from(0);
+    let mut x_rep = Mat::randn(196, 196, 0.1, &mut rng);
+    row("replay 64 log entries 196x196", "worker catch-up", &mut || {
+        replay(&mut x_rep, &slice);
+    });
+    let msg = sfw::coordinator::messages::UpdateMsg {
+        worker_id: 1,
+        t_w: 100,
+        u: u.clone(),
+        v: v.clone(),
+        sigma: 1.0,
+        loss_sum: 0.5,
+        m: 128,
+    };
+    row("tcp codec roundtrip (196+196 floats)", "encode+decode", &mut || {
+        let b = encode_update(&msg);
+        let _ = decode_update(&b);
+    });
+
+    // ---- PJRT (artifact) engines ----------------------------------------------
+    match PjrtRuntime::new("artifacts") {
+        Ok(rt) => {
+            let rt = Arc::new(rt);
+            let mut pj_ms = PjrtEngine::new(rt.clone(), Workload::Ms(ms.clone()), 5);
+            // warm the executable cache outside the timed region
+            let _ = pj_ms.step(&x_ms, &idx_128);
+            row("ms grad m=128 (PJRT/Pallas)", "bucket 128", &mut || {
+                let _ = pj_ms.grad_sum(&x_ms, &idx_128, &mut g);
+            });
+            row("ms grad m=2048 (PJRT/Pallas)", "bucket 2048", &mut || {
+                let _ = pj_ms.grad_sum(&x_ms, &idx_2048, &mut g);
+            });
+            row("ms fused step m=2048 (PJRT/Pallas)", "grad+LMO, 1 call", &mut || {
+                let _ = pj_ms.step(&x_ms, &idx_2048);
+            });
+            row("lmo 30x30 (PJRT/Pallas)", "16 power iters", &mut || {
+                let _ = pj_ms.lmo(&g30);
+            });
+            let d = rt.manifest().param_usize("pnn_d").unwrap_or(196);
+            if d == 196 {
+                let mut pj_pnn = PjrtEngine::new(rt.clone(), Workload::Pnn(pnn.clone()), 6);
+                let _ = pj_pnn.grad_sum(&x_pnn, &idxp, &mut gp);
+                row("pnn grad m=256 (PJRT/Pallas)", "bucket 512", &mut || {
+                    let _ = pj_pnn.grad_sum(&x_pnn, &idxp, &mut gp);
+                });
+            }
+        }
+        Err(e) => println!("(PJRT rows skipped: {e} — run `make artifacts`)"),
+    }
+
+    table.print();
+    let _ = std::fs::create_dir_all("bench_out");
+    table.write_csv("bench_out/hotpath.csv").expect("csv");
+    println!("series written to bench_out/hotpath.csv");
+}

@@ -1,0 +1,129 @@
+//! Table 1: complexity comparison with FIXED batch size — number of
+//! stochastic gradient evaluations and linear optimizations (1-SVDs) to
+//! reach accuracy epsilon, SFW vs SFW-asyn (Theorems 3/4, Corollary 1).
+//!
+//! Theory (large-c reading, paper §4.1): SFW-asyn uses a batch tau^2
+//! smaller, so it needs ~tau x MORE LMOs but ~tau x FEWER total gradient
+//! evaluations — "a good trade-off ... where the stochastic gradient
+//! evaluation will dominate".
+//!
+//! We measure both quantities by running to a fixed relative error and
+//! reading the crossing iteration from the trace.  Emits
+//! bench_out/table1.csv.
+
+use std::sync::Arc;
+
+use sfw::algo::engine::NativeEngine;
+use sfw::algo::schedule::BatchSchedule;
+use sfw::algo::sfw::{run_sfw, SfwOptions};
+use sfw::benchkit::Table;
+use sfw::coordinator::{run_asyn_local, AsynOptions};
+use sfw::experiments::build_ms;
+use sfw::metrics::{Counters, LossTrace};
+use sfw::objective::Objective;
+
+const EPS: f64 = 0.05;
+const C_SFW: usize = 2_048; // fixed batch c for plain SFW
+const MAX_ITERS: u64 = 4_000;
+
+/// iterations to reach EPS (from the trace), or None.
+fn iters_to_eps(pts: &[sfw::metrics::TracePoint], f_star: f64) -> Option<u64> {
+    let raw = sfw::experiments::relative(pts, f_star);
+    raw.iter().find(|(_, _, r)| *r <= EPS).map(|(_, i, _)| *i)
+}
+
+fn main() {
+    let obj = build_ms(42, 60_000);
+    let o: Arc<dyn Objective> = obj.clone();
+    let f_star = o.f_star_hint();
+    let mut table = Table::new(
+        &format!("Table 1: ops to reach rel err {EPS} (fixed batch, measured)"),
+        &["algorithm", "tau", "batch c", "# lin. opt.", "# sto. grad.", "grad ratio", "lmo ratio"],
+    );
+    let mut csv = Table::new("csv", &["algo", "tau", "batch", "lmos", "grads"]);
+
+    // --- plain SFW baseline ------------------------------------------------
+    let counters = Counters::new();
+    let trace = LossTrace::new();
+    let mut engine = NativeEngine::new(o.clone(), 30, 7);
+    run_sfw(
+        &mut engine,
+        &SfwOptions {
+            iterations: MAX_ITERS / 4,
+            batch: BatchSchedule::Constant(C_SFW),
+            eval_every: 2,
+            seed: 11,
+        },
+        &counters,
+        &trace,
+    );
+    let k_sfw = iters_to_eps(&trace.points(), f_star).expect("SFW never reached eps");
+    let (lmo_sfw, grad_sfw) = (k_sfw, k_sfw * C_SFW as u64);
+    table.row(&[
+        "SFW".into(),
+        "—".into(),
+        C_SFW.to_string(),
+        lmo_sfw.to_string(),
+        grad_sfw.to_string(),
+        "1.00".into(),
+        "1.00".into(),
+    ]);
+    csv.row(&["sfw".into(), "0".into(), C_SFW.to_string(), lmo_sfw.to_string(), grad_sfw.to_string()]);
+
+    // --- SFW-asyn at several tau --------------------------------------------
+    for &tau in &[2u64, 4, 8] {
+        let c_asyn = (C_SFW as u64 / (tau * tau)).max(1) as usize; // Thm 4: c/tau^2
+        let o2 = obj.clone();
+        let r = run_asyn_local(
+            o.clone(),
+            &AsynOptions {
+                iterations: MAX_ITERS,
+                tau,
+                workers: 4,
+                batch: BatchSchedule::Constant(c_asyn),
+                eval_every: 10,
+                seed: 11,
+                straggler: None,
+                link_latency: None,
+            },
+            move |w| Box::new(NativeEngine::new(o2.clone(), 30, 13 + w as u64)),
+        );
+        match iters_to_eps(&r.trace.points(), f_star) {
+            Some(k) => {
+                let (lmo, grad) = (k, k * c_asyn as u64);
+                table.row(&[
+                    "SFW-asyn".into(),
+                    tau.to_string(),
+                    c_asyn.to_string(),
+                    lmo.to_string(),
+                    grad.to_string(),
+                    format!("{:.2}", grad as f64 / grad_sfw as f64),
+                    format!("{:.2}", lmo as f64 / lmo_sfw as f64),
+                ]);
+                csv.row(&[
+                    "sfw-asyn".into(),
+                    tau.to_string(),
+                    c_asyn.to_string(),
+                    lmo.to_string(),
+                    grad.to_string(),
+                ]);
+            }
+            None => table.row(&[
+                "SFW-asyn".into(),
+                tau.to_string(),
+                c_asyn.to_string(),
+                "> max".into(),
+                "> max".into(),
+                "—".into(),
+                "—".into(),
+            ]),
+        }
+    }
+    table.print();
+    csv.write_csv("bench_out/table1.csv").expect("csv");
+    println!("series written to bench_out/table1.csv");
+    println!("\nExpected shape (paper Table 1, large-c reading): as tau grows,");
+    println!("'grad ratio' falls well below 1 (fewer total gradient evaluations)");
+    println!("while 'lmo ratio' rises above 1 (more 1-SVDs) — the trade the");
+    println!("paper argues is favorable when gradients dominate computation.");
+}

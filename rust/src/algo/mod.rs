@@ -1,0 +1,13 @@
+//! Serial algorithm family: SFW (Hazan & Luo), SVRF, PGD baseline, plus
+//! the engine abstraction and the theorem schedules shared with the
+//! distributed coordinator.
+
+pub mod engine;
+pub mod pgd;
+pub mod schedule;
+pub mod sfw;
+pub mod svrf;
+
+pub use engine::{NativeEngine, StepEngine, StepOut};
+pub use schedule::{eta, svrf_epoch_len, BatchSchedule};
+pub use sfw::{init_rank_one, run_sfw, SfwOptions};

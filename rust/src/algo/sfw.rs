@@ -1,0 +1,147 @@
+//! Serial Stochastic Frank-Wolfe (Hazan & Luo 2016) — the single-machine
+//! reference every distributed variant is compared against (Fig 4/5's
+//! "1 worker" lines, Table 1's SFW column).
+
+use std::sync::Arc;
+
+use crate::algo::engine::StepEngine;
+use crate::algo::schedule::{eta, BatchSchedule};
+use crate::linalg::Mat;
+use crate::metrics::{Counters, LossTrace};
+use crate::util::rng::Rng;
+
+/// Options for a serial SFW run.
+pub struct SfwOptions {
+    pub iterations: u64,
+    pub batch: BatchSchedule,
+    /// Evaluate F(X) every this many iterations (full-data pass).
+    pub eval_every: u64,
+    pub seed: u64,
+}
+
+impl Default for SfwOptions {
+    fn default() -> Self {
+        SfwOptions {
+            iterations: 200,
+            batch: BatchSchedule::sfw(0.05, 10_000),
+            eval_every: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// Initial iterate: random rank-one `u v^T` on the nuclear sphere of radius
+/// theta (the paper initializes `||X_0||_* = 1`).
+pub fn init_rank_one(d1: usize, d2: usize, theta: f32, rng: &mut Rng) -> Mat {
+    let u = rng.unit_vector(d1);
+    let v = rng.unit_vector(d2);
+    let mut x = Mat::zeros(d1, d2);
+    for i in 0..d1 {
+        for j in 0..d2 {
+            *x.at_mut(i, j) = theta * u[i] * v[j];
+        }
+    }
+    x
+}
+
+/// Run serial SFW; returns the final iterate.  Every LMO, gradient
+/// evaluation and loss point is recorded in `counters` / `trace`.
+pub fn run_sfw<E: StepEngine + ?Sized>(
+    engine: &mut E,
+    opts: &SfwOptions,
+    counters: &Counters,
+    trace: &LossTrace,
+) -> Mat {
+    let obj: Arc<dyn crate::objective::Objective> = engine.objective().clone();
+    let (d1, d2) = obj.dims();
+    let theta = obj.theta();
+    let n = obj.n();
+    let mut rng = Rng::new(opts.seed);
+    let mut x = init_rank_one(d1, d2, theta, &mut rng);
+    let mut idx = Vec::new();
+
+    trace.record(0, obj.loss_full(&x));
+    for k in 1..=opts.iterations {
+        let m = opts.batch.m(k);
+        rng.sample_indices(n, m, &mut idx);
+        let out = engine.step(&x, &idx);
+        counters.add_grad_evals(m as u64);
+        counters.add_lmo();
+        counters.add_iteration();
+        // X <- (1 - eta) X + eta * (-theta u v^T)
+        x.fw_rank_one_update(eta(k), -theta, &out.u, &out.v);
+        if k % opts.eval_every == 0 || k == opts.iterations {
+            trace.record(k, obj.loss_full(&x));
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::engine::NativeEngine;
+    use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
+    use crate::linalg::nuclear_norm;
+    use crate::objective::MatrixSensing;
+
+    fn small_ms(seed: u64) -> Arc<dyn crate::objective::Objective> {
+        let mut rng = Rng::new(seed);
+        let p = MsParams { d1: 10, d2: 10, rank: 2, n: 2_000, noise_std: 0.05 };
+        Arc::new(MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0))
+    }
+
+    #[test]
+    fn init_is_on_nuclear_sphere() {
+        let mut rng = Rng::new(50);
+        let x = init_rank_one(7, 5, 2.0, &mut rng);
+        assert!((nuclear_norm(&x) - 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sfw_decreases_loss_and_stays_feasible() {
+        let obj = small_ms(51);
+        let mut engine = NativeEngine::new(obj.clone(), 60, 52);
+        let counters = Counters::new();
+        let trace = LossTrace::new();
+        let opts = SfwOptions {
+            iterations: 120,
+            batch: BatchSchedule::sfw(0.05, 2_000),
+            eval_every: 20,
+            seed: 53,
+        };
+        let x = run_sfw(&mut engine, &opts, &counters, &trace);
+        let pts = trace.points();
+        let first = pts.first().unwrap().loss;
+        let last = pts.last().unwrap().loss;
+        assert!(
+            last < 0.3 * first,
+            "SFW failed to make progress: {first} -> {last}"
+        );
+        // iterates stay in the nuclear ball (convex combination of feasible pts)
+        assert!(nuclear_norm(&x) <= 1.0 + 1e-3);
+        let s = counters.snapshot();
+        assert_eq!(s.lmo_calls, 120);
+        assert_eq!(s.iterations, 120);
+        assert!(s.grad_evals > 0);
+    }
+
+    #[test]
+    fn constant_batch_converges_to_neighborhood() {
+        // Thm 3: fixed batch => converges to a noise floor, still useful.
+        let obj = small_ms(54);
+        let mut engine = NativeEngine::new(obj.clone(), 60, 55);
+        let counters = Counters::new();
+        let trace = LossTrace::new();
+        let opts = SfwOptions {
+            iterations: 150,
+            batch: BatchSchedule::Constant(128),
+            eval_every: 25,
+            seed: 56,
+        };
+        run_sfw(&mut engine, &opts, &counters, &trace);
+        let pts = trace.points();
+        assert!(pts.last().unwrap().loss < 0.5 * pts.first().unwrap().loss);
+        assert_eq!(counters.snapshot().grad_evals, 150 * 128);
+    }
+}

@@ -1,0 +1,158 @@
+//! Serial Stochastic Variance-Reduced Frank-Wolfe (Hazan & Luo 2016),
+//! the base algorithm of the paper's Theorem 2 / Algorithms 4–5 extension.
+//!
+//! Epoch t: snapshot W, compute the full gradient ∇F(W) once, then run
+//! N_t = 2^{t+3} - 2 inner FW iterations with the variance-reduced gradient
+//!   ∇~ = (1/m) Σ_{i∈S} [∇f_i(X) - ∇f_i(W)] + ∇F(W).
+
+use std::sync::Arc;
+
+use crate::algo::engine::StepEngine;
+use crate::algo::schedule::{eta, svrf_epoch_len, BatchSchedule};
+use crate::algo::sfw::init_rank_one;
+use crate::linalg::Mat;
+use crate::metrics::{Counters, LossTrace};
+use crate::util::rng::Rng;
+
+pub struct SvrfOptions {
+    pub epochs: u32,
+    pub batch: BatchSchedule,
+    pub eval_every: u64,
+    pub seed: u64,
+}
+
+impl Default for SvrfOptions {
+    fn default() -> Self {
+        SvrfOptions {
+            epochs: 4,
+            batch: BatchSchedule::Linear { scale: 96.0, cap: 4096 },
+            eval_every: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// Compute the full gradient at `w` in chunks (counts N gradient evals).
+pub fn full_gradient<E: StepEngine + ?Sized>(
+    engine: &mut E,
+    w: &Mat,
+    counters: &Counters,
+    out: &mut Mat,
+) {
+    let obj = engine.objective().clone();
+    let n = obj.n();
+    let all: Vec<usize> = (0..n).collect();
+    let _ = engine.grad_sum(w, &all, out);
+    out.scale(1.0 / n as f32);
+    counters.add_grad_evals(n as u64);
+}
+
+pub fn run_svrf<E: StepEngine + ?Sized>(
+    engine: &mut E,
+    opts: &SvrfOptions,
+    counters: &Counters,
+    trace: &LossTrace,
+) -> Mat {
+    let obj: Arc<dyn crate::objective::Objective> = engine.objective().clone();
+    let (d1, d2) = obj.dims();
+    let theta = obj.theta();
+    let n = obj.n();
+    let mut rng = Rng::new(opts.seed);
+    let mut x = init_rank_one(d1, d2, theta, &mut rng);
+
+    let mut full_g = Mat::zeros(d1, d2);
+    let mut gx = Mat::zeros(d1, d2);
+    let mut gw = Mat::zeros(d1, d2);
+    let mut idx = Vec::new();
+    let mut global_k = 0u64;
+
+    trace.record(0, obj.loss_full(&x));
+    for t in 0..opts.epochs {
+        let w = x.clone();
+        full_gradient(engine, &w, counters, &mut full_g);
+        let nt = svrf_epoch_len(t);
+        for k in 1..=nt {
+            let m = opts.batch.m(k);
+            rng.sample_indices(n, m, &mut idx);
+            // VR gradient: (grad_sum(X) - grad_sum(W))/m + full_g
+            let _ = engine.grad_sum(&x, &idx, &mut gx);
+            let _ = engine.grad_sum(&w, &idx, &mut gw);
+            counters.add_grad_evals(2 * m as u64);
+            gx.axpy(-1.0, &gw);
+            gx.scale(1.0 / m as f32);
+            gx.axpy(1.0, &full_g);
+            let s = engine.lmo(&gx);
+            counters.add_lmo();
+            counters.add_iteration();
+            x.fw_rank_one_update(eta(k), -theta, &s.u, &s.v);
+            global_k += 1;
+            if global_k % opts.eval_every == 0 {
+                trace.record(global_k, obj.loss_full(&x));
+            }
+        }
+        trace.record(global_k, obj.loss_full(&x));
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::engine::NativeEngine;
+    use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
+    use crate::linalg::nuclear_norm;
+    use crate::objective::{MatrixSensing, Objective};
+
+    #[test]
+    fn svrf_converges_on_small_sensing() {
+        let mut rng = Rng::new(70);
+        let p = MsParams { d1: 8, d2: 8, rank: 2, n: 1_500, noise_std: 0.05 };
+        let obj = Arc::new(MatrixSensing::new(
+            MatrixSensingData::generate(&p, &mut rng),
+            1.0,
+        ));
+        let mut engine = NativeEngine::new(obj.clone(), 60, 71);
+        let counters = Counters::new();
+        let trace = LossTrace::new();
+        let opts = SvrfOptions {
+            epochs: 3,
+            batch: BatchSchedule::Linear { scale: 24.0, cap: 1_500 },
+            eval_every: 10,
+            seed: 72,
+        };
+        let x = run_svrf(&mut engine, &opts, &counters, &trace);
+        let pts = trace.points();
+        assert!(
+            pts.last().unwrap().loss < 0.3 * pts.first().unwrap().loss,
+            "{} -> {}",
+            pts.first().unwrap().loss,
+            pts.last().unwrap().loss
+        );
+        assert!(nuclear_norm(&x) <= 1.0 + 1e-3);
+        // inner iterations = N_0 + N_1 + N_2 = 6 + 14 + 30
+        assert_eq!(counters.snapshot().lmo_calls, 50);
+    }
+
+    #[test]
+    fn full_gradient_matches_mean_of_components() {
+        let mut rng = Rng::new(73);
+        let p = MsParams { d1: 4, d2: 4, rank: 1, n: 120, noise_std: 0.1 };
+        let obj = Arc::new(MatrixSensing::new(
+            MatrixSensingData::generate(&p, &mut rng),
+            1.0,
+        ));
+        let mut engine = NativeEngine::new(obj.clone(), 30, 74);
+        let counters = Counters::new();
+        let x = Mat::randn(4, 4, 0.2, &mut rng);
+        let mut fg = Mat::zeros(4, 4);
+        full_gradient(&mut engine, &x, &counters, &mut fg);
+        let idx: Vec<usize> = (0..120).collect();
+        let mut gs = Mat::zeros(4, 4);
+        obj.grad_sum(&x, &idx, &mut gs);
+        gs.scale(1.0 / 120.0);
+        let mut d = fg.clone();
+        d.axpy(-1.0, &gs);
+        assert!(d.frob_norm() < 1e-6);
+        assert_eq!(counters.snapshot().grad_evals, 120);
+    }
+}

@@ -1,0 +1,210 @@
+//! Micro/macro benchmark harness (`criterion` is not in the offline crate
+//! set).  Provides warmed-up, repeated timing with mean/σ/percentiles and
+//! aligned table/CSV printers used by every `rust/benches/*` target to
+//! regenerate the paper's tables and figures.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let pct = |p: f64| samples[(((n - 1) as f64) * p).round() as usize];
+        Stats {
+            n,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: samples[0],
+            p50_s: pct(0.5),
+            p90_s: pct(0.9),
+            max_s: samples[n - 1],
+        }
+    }
+
+    pub fn mean_human(&self) -> String {
+        humanize(self.mean_s)
+    }
+}
+
+/// Format seconds into an appropriate unit.
+pub fn humanize(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples = (0..iters.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    Stats::from_samples(samples)
+}
+
+/// Time `f` adaptively: run until `budget` elapsed (at least 3 iters).
+pub fn bench_for<F: FnMut()>(warmup: usize, budget: Duration, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < 3 || start.elapsed() < budget {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// Aligned table printer (also emits CSV alongside when `csv_path` given).
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!("{:<width$}  ", c, width = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Write rows as CSV (headers first) — benches drop these in bench_out/.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        std::fs::write(path, out)
+    }
+}
+
+/// Format a float with fixed significant digits for table cells.
+pub fn sig(x: f64, digits: usize) -> String {
+    if x == 0.0 || !x.is_finite() {
+        return format!("{x}");
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let dec = (digits as i32 - 1 - mag).max(0) as usize;
+    format!("{:.*}", dec, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean_s - 3.0).abs() < 1e-12);
+        assert!((s.p50_s - 3.0).abs() < 1e-12);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 5.0);
+        assert!((s.std_s - (2.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_measures_work() {
+        let mut acc = 0u64;
+        let s = bench(1, 5, || {
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean_s >= 0.0);
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn humanize_units() {
+        assert!(humanize(5e-9).contains("ns"));
+        assert!(humanize(5e-6).contains("µs"));
+        assert!(humanize(5e-3).contains("ms"));
+        assert!(humanize(5.0).contains(" s"));
+    }
+
+    #[test]
+    fn table_roundtrip_csv() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let path = std::env::temp_dir().join("sfw_bench_test.csv");
+        t.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn sig_digits() {
+        assert_eq!(sig(1234.5, 3), "1234"); // round-half-even
+        assert_eq!(sig(0.012345, 3), "0.0123");
+    }
+}

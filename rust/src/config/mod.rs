@@ -1,0 +1,254 @@
+//! Typed experiment configuration: an INI-subset config file (`key = value`
+//! lines, `[section]` headers, `#`/`;` comments) merged with CLI overrides
+//! (`--section.key value` or `--key value`).  TOML/serde are not in the
+//! offline crate set; this covers what a launcher actually needs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::cli::Args;
+
+/// Flat key-value store with `section.key` naming.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("key '{0}': cannot parse value '{1}'")]
+    BadValue(String, String),
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse INI-subset text.
+    pub fn from_str(text: &str) -> Result<Self, ConfigError> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or(ConfigError::Parse {
+                    line: lineno + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or(ConfigError::Parse {
+                line: lineno + 1,
+                msg: format!("expected 'key = value', got '{line}'"),
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            cfg.values.insert(key, v.trim().to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Self, ConfigError> {
+        Self::from_str(&std::fs::read_to_string(path)?)
+    }
+
+    /// Overlay CLI flags: every `--k v` becomes `k = v` (dots allowed).
+    pub fn merge_args(&mut self, args: &Args) {
+        for key in self.values.keys().cloned().collect::<Vec<_>>() {
+            if let Some(v) = args.get_opt(&key) {
+                self.values.insert(key, v);
+            }
+        }
+        // also accept new keys not present in the file
+        // (Args doesn't expose iteration; callers set known keys explicitly)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.values.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, ConfigError> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ConfigError::BadValue(key.to_string(), v.clone())),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+/// Fully-typed training configuration used by the launcher (`sfw train`).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// "matrix_sensing" | "pnn".
+    pub task: String,
+    /// "sfw" | "sfw-dist" | "sfw-asyn" | "svrf" | "svrf-asyn" | "pgd" | "sva" | "dfw-power".
+    pub algo: String,
+    pub workers: usize,
+    pub tau: u64,
+    pub iterations: u64,
+    pub batch_cap: usize,
+    pub batch_scale: f64,
+    pub power_iters: usize,
+    pub theta: f32,
+    pub seed: u64,
+    pub eval_every: u64,
+    /// "native" | "pjrt".
+    pub engine: String,
+    pub artifacts_dir: String,
+    // dataset
+    pub ms_n: usize,
+    pub ms_d: usize,
+    pub ms_rank: usize,
+    pub ms_noise: f32,
+    pub pnn_n: usize,
+    pub pnn_d: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            task: "matrix_sensing".into(),
+            algo: "sfw-asyn".into(),
+            workers: 4,
+            tau: 8,
+            iterations: 300,
+            batch_cap: 10_000,
+            batch_scale: 0.5,
+            power_iters: 24,
+            theta: 1.0,
+            seed: 42,
+            eval_every: 10,
+            engine: "native".into(),
+            artifacts_dir: "artifacts".into(),
+            ms_n: 90_000,
+            ms_d: 30,
+            ms_rank: 3,
+            ms_noise: 0.1,
+            pnn_n: 60_000,
+            pnn_d: 196,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Build from optional config file + CLI overrides.
+    pub fn load(args: &Args) -> Result<Self, ConfigError> {
+        let mut cfg = if let Some(path) = args.get_opt("config") {
+            Config::from_file(path)?
+        } else {
+            Config::new()
+        };
+        // CLI flags override file values (flat names).
+        for key in [
+            "task", "algo", "engine", "artifacts-dir",
+        ] {
+            if let Some(v) = args.get_opt(key) {
+                cfg.set(key, &v);
+            }
+        }
+        for key in [
+            "workers", "tau", "iterations", "batch-cap", "batch-scale",
+            "power-iters", "theta", "seed", "eval-every", "ms-n", "ms-d",
+            "ms-rank", "ms-noise", "pnn-n", "pnn-d",
+        ] {
+            if let Some(v) = args.get_opt(key) {
+                cfg.set(key, &v);
+            }
+        }
+        let d = TrainConfig::default();
+        Ok(TrainConfig {
+            task: cfg.get_str("task", &d.task),
+            algo: cfg.get_str("algo", &d.algo),
+            workers: cfg.get("workers", d.workers)?,
+            tau: cfg.get("tau", d.tau)?,
+            iterations: cfg.get("iterations", d.iterations)?,
+            batch_cap: cfg.get("batch-cap", d.batch_cap)?,
+            batch_scale: cfg.get("batch-scale", d.batch_scale)?,
+            power_iters: cfg.get("power-iters", d.power_iters)?,
+            theta: cfg.get("theta", d.theta)?,
+            seed: cfg.get("seed", d.seed)?,
+            eval_every: cfg.get("eval-every", d.eval_every)?,
+            engine: cfg.get_str("engine", &d.engine),
+            artifacts_dir: cfg.get_str("artifacts-dir", &d.artifacts_dir),
+            ms_n: cfg.get("ms-n", d.ms_n)?,
+            ms_d: cfg.get("ms-d", d.ms_d)?,
+            ms_rank: cfg.get("ms-rank", d.ms_rank)?,
+            ms_noise: cfg.get("ms-noise", d.ms_noise)?,
+            pnn_n: cfg.get("pnn-n", d.pnn_n)?,
+            pnn_d: cfg.get("pnn-d", d.pnn_d)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let text = "
+# comment
+top = 1
+[train]
+workers = 8
+tau = 4
+; another comment
+[data]
+n = 90000
+";
+        let c = Config::from_str(text).unwrap();
+        assert_eq!(c.get::<usize>("top", 0).unwrap(), 1);
+        assert_eq!(c.get::<usize>("train.workers", 0).unwrap(), 8);
+        assert_eq!(c.get::<u64>("train.tau", 0).unwrap(), 4);
+        assert_eq!(c.get::<usize>("data.n", 0).unwrap(), 90_000);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::from_str("novalue\n").is_err());
+        assert!(Config::from_str("[unterminated\n").is_err());
+    }
+
+    #[test]
+    fn defaults_and_bad_values() {
+        let c = Config::from_str("x = abc\n").unwrap();
+        assert_eq!(c.get::<usize>("missing", 7).unwrap(), 7);
+        assert!(c.get::<usize>("x", 0).is_err());
+    }
+
+    #[test]
+    fn train_config_from_cli() {
+        let args = Args::parse_from(
+            "--task pnn --workers 15 --tau 6 --engine pjrt"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let tc = TrainConfig::load(&args).unwrap();
+        assert_eq!(tc.task, "pnn");
+        assert_eq!(tc.workers, 15);
+        assert_eq!(tc.tau, 6);
+        assert_eq!(tc.engine, "pjrt");
+        assert_eq!(tc.iterations, 300); // default survives
+    }
+}

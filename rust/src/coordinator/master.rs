@@ -1,0 +1,83 @@
+//! The SFW-asyn master loop (Algorithm 3, lines 1–13) — the paper's
+//! system contribution.
+//!
+//! The master never waits for stragglers: it blocks on *any* worker's
+//! `{u, v, t_w}` message, gates it on bounded staleness
+//! (`t_m - t_w > tau` => drop, but still ship the catch-up slice so the
+//! straggler resynchronizes), appends accepted updates to the rank-one
+//! log, and replies with exactly the log entries the sender is missing.
+//! The dense X copy is maintained out of the reply path and snapshotted to
+//! the off-thread evaluator ("not run in real time; maintain a copy for
+//! output only" — Alg 3 line 12).
+
+use std::sync::Arc;
+
+use crate::algo::sfw::init_rank_one;
+use crate::coordinator::eval::Evaluator;
+use crate::coordinator::messages::MasterMsg;
+use crate::coordinator::update_log::UpdateLog;
+use crate::linalg::Mat;
+use crate::metrics::{Counters, LossTrace};
+use crate::objective::Objective;
+use crate::transport::MasterLink;
+use crate::util::rng::Rng;
+
+pub struct MasterOptions {
+    /// Max master iterations T.
+    pub iterations: u64,
+    /// Max delay tolerance tau.
+    pub tau: u64,
+    /// Snapshot X to the evaluator every this many accepted updates.
+    pub eval_every: u64,
+    /// Seed shared with the workers: X_0 = init_rank_one(seed) on both
+    /// sides, standing in for the paper's initial {u_0, v_0} broadcast.
+    pub seed: u64,
+}
+
+/// Run the master until T accepted updates, then stop all workers.
+/// Returns the final dense iterate X_T.
+pub fn run_master<L: MasterLink>(
+    link: &mut L,
+    obj: &Arc<dyn Objective>,
+    opts: &MasterOptions,
+    counters: &Counters,
+    trace: &LossTrace,
+    evaluator: &Evaluator,
+) -> Mat {
+    let (d1, d2) = obj.dims();
+    let theta = obj.theta();
+    let mut log = UpdateLog::new();
+    let mut x = init_rank_one(d1, d2, theta, &mut Rng::new(opts.seed));
+    evaluator.submit(trace.elapsed(), 0, x.clone());
+
+    while log.t_m() < opts.iterations {
+        let Some(upd) = link.recv() else { break };
+        let t_m = log.t_m();
+        debug_assert!(upd.t_w <= t_m, "worker claims future iterate");
+        let delay = t_m - upd.t_w;
+        if delay > opts.tau {
+            // Alg 3 line 7: drop, but resynchronize the straggler.
+            counters.add_dropped();
+            link.send_to(
+                upd.worker_id as usize,
+                MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) },
+            );
+            continue;
+        }
+        let e = log.append(upd.u, upd.v, theta);
+        x.fw_rank_one_update(e.eta, e.scale, &e.u, &e.v);
+        counters.add_iteration();
+        let t_m = log.t_m();
+        link.send_to(
+            upd.worker_id as usize,
+            MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) },
+        );
+        if t_m % opts.eval_every == 0 || t_m == opts.iterations {
+            evaluator.submit(trace.elapsed(), t_m, x.clone());
+        }
+    }
+    for w in 0..link.workers() {
+        link.send_to(w, MasterMsg::Stop);
+    }
+    x
+}

@@ -1,0 +1,120 @@
+//! Wire messages of the SFW-asyn protocol (Algorithm 3) and their byte
+//! accounting.
+//!
+//! The entire point of the paper's communication design is visible in the
+//! types: a worker sends `{u, v, t_w}` — O(D1 + D2) floats — and the master
+//! replies with the update-log slice `{(u_k, v_k)} k = t_w+1..t_m` — again
+//! O(D1 + D2) per entry — instead of gradient/parameter matrices of size
+//! O(D1 * D2).  `wire_bytes()` on each type is what the comm-cost bench
+//! measures, and the TCP transport serializes exactly these layouts.
+
+use std::sync::Arc;
+
+/// Rank-one LMO result sent worker -> master: `{u_w, v_w, t_w}` plus the
+/// minibatch loss ride-along (f32 telemetry, negligible on the wire).
+#[derive(Clone, Debug)]
+pub struct UpdateMsg {
+    pub worker_id: u32,
+    /// Iteration of the model copy the update was computed against.
+    pub t_w: u64,
+    pub u: Vec<f32>,
+    pub v: Vec<f32>,
+    pub sigma: f32,
+    pub loss_sum: f64,
+    /// True minibatch size used.
+    pub m: u32,
+}
+
+impl UpdateMsg {
+    /// Serialized size: header (id 4 + t_w 8 + sigma 4 + loss 8 + m 4 +
+    /// two u32 lengths) + payload vectors.
+    pub fn wire_bytes(&self) -> u64 {
+        (4 + 8 + 4 + 8 + 4 + 4 + 4) as u64 + 4 * (self.u.len() + self.v.len()) as u64
+    }
+}
+
+/// One entry of the master's update log: iterate recursion Eqn (6)
+/// `X_k = (1 - eta_k) X_{k-1} + eta_k * scale * u_k v_k^T`
+/// (`scale = -theta` for the nuclear-ball LMO direction).  `Arc`ed so the
+/// master can hand log slices to workers without copying the vectors.
+#[derive(Clone, Debug)]
+pub struct LogEntry {
+    /// Master iteration k this entry produced (1-based).
+    pub k: u64,
+    pub eta: f32,
+    pub scale: f32,
+    pub u: Arc<Vec<f32>>,
+    pub v: Arc<Vec<f32>>,
+}
+
+impl LogEntry {
+    pub fn wire_bytes(&self) -> u64 {
+        (8 + 4 + 4 + 4 + 4) as u64 + 4 * (self.u.len() + self.v.len()) as u64
+    }
+}
+
+/// Master -> worker reply.
+#[derive(Clone, Debug)]
+pub enum MasterMsg {
+    /// Catch-up slice: everything the worker missed, `t_w+1 ..= t_m`.
+    Updates { t_m: u64, entries: Vec<LogEntry> },
+    /// SVRF epoch boundary (Algorithm 5's update-W signal): replay to
+    /// `t_m`, snapshot W, recompute the full gradient at W.
+    UpdateW { t_m: u64, entries: Vec<LogEntry> },
+    Stop,
+}
+
+impl MasterMsg {
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            MasterMsg::Updates { entries, .. } | MasterMsg::UpdateW { entries, .. } => {
+                (8 + 4 + 1) as u64 + entries.iter().map(|e| e.wire_bytes()).sum::<u64>()
+            }
+            MasterMsg::Stop => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(k: u64, d1: usize, d2: usize) -> LogEntry {
+        LogEntry {
+            k,
+            eta: 0.5,
+            scale: -1.0,
+            u: Arc::new(vec![0.0; d1]),
+            v: Arc::new(vec![0.0; d2]),
+        }
+    }
+
+    #[test]
+    fn update_msg_is_linear_in_d1_plus_d2() {
+        let m = UpdateMsg {
+            worker_id: 0,
+            t_w: 10,
+            u: vec![0.0; 30],
+            v: vec![0.0; 40],
+            sigma: 1.0,
+            loss_sum: 0.0,
+            m: 64,
+        };
+        // 36-byte header + 4*(30+40)
+        assert_eq!(m.wire_bytes(), 36 + 280);
+        // crucially NOT 4 * 30 * 40 (the dense-gradient cost)
+        assert!(m.wire_bytes() < 4 * 30 * 40);
+    }
+
+    #[test]
+    fn master_msg_bytes_scale_with_entry_count() {
+        let one = MasterMsg::Updates { t_m: 1, entries: vec![entry(1, 30, 40)] };
+        let three = MasterMsg::Updates {
+            t_m: 3,
+            entries: vec![entry(1, 30, 40), entry(2, 30, 40), entry(3, 30, 40)],
+        };
+        let per_entry = entry(0, 30, 40).wire_bytes();
+        assert_eq!(three.wire_bytes() - one.wire_bytes(), 2 * per_entry);
+        assert_eq!(MasterMsg::Stop.wire_bytes(), 1);
+    }
+}

@@ -1,0 +1,29 @@
+//! The distributed coordinator — the paper's system contribution (L3).
+//!
+//! * [`master`] / [`worker`] / [`runner`] — SFW-asyn (Algorithm 3): the
+//!   asynchronous, O(D1+D2)-per-message protocol.
+//! * [`svrf_asyn`] — SVRF-asyn (Algorithm 5).
+//! * [`sync`] — SFW-dist (Algorithm 1), the synchronous baseline.
+//! * [`sva`] — Singular Vector Averaging, the divergent naive baseline.
+//! * [`dfw_power`] — Zheng et al. 2018 distributed-power-iteration DFW,
+//!   the O(T^2 (D1+D2)) communication prior art.
+//! * [`update_log`] / [`messages`] — the rank-one log and wire types.
+//! * [`eval`] — off-thread objective evaluation for loss traces.
+
+pub mod dfw_power;
+pub mod eval;
+pub mod master;
+pub mod messages;
+pub mod runner;
+pub mod sva;
+pub mod svrf_asyn;
+pub mod sync;
+pub mod update_log;
+pub mod worker;
+
+pub use messages::{LogEntry, MasterMsg, UpdateMsg};
+pub use runner::{run_asyn_local, run_asyn_tcp, AsynOptions, RunResult};
+pub use svrf_asyn::{run_svrf_asyn_local, SvrfAsynOptions};
+pub use sync::{run_dist, DistOptions};
+pub use update_log::{replay, replay_after, UpdateLog};
+pub use worker::Straggler;

@@ -1,0 +1,252 @@
+//! Harness that wires master + workers over a transport and runs one
+//! SFW-asyn training job end to end (threads for workers, caller thread
+//! for the master — mirroring one MPI rank per process).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::algo::engine::StepEngine;
+use crate::algo::schedule::BatchSchedule;
+use crate::coordinator::eval::Evaluator;
+use crate::coordinator::master::{run_master, MasterOptions};
+use crate::coordinator::worker::{run_worker, Straggler, WorkerOptions};
+use crate::linalg::Mat;
+use crate::metrics::{Counters, LossTrace};
+use crate::objective::Objective;
+use crate::transport::local::local_links;
+
+
+pub struct AsynOptions {
+    pub iterations: u64,
+    pub tau: u64,
+    pub workers: usize,
+    pub batch: BatchSchedule,
+    pub eval_every: u64,
+    pub seed: u64,
+    pub straggler: Option<Straggler>,
+    /// Injected one-way link latency for the local transport.
+    pub link_latency: Option<Duration>,
+}
+
+impl Default for AsynOptions {
+    fn default() -> Self {
+        AsynOptions {
+            iterations: 300,
+            tau: 8,
+            workers: 4,
+            batch: BatchSchedule::sfw_asyn(0.5, 8, 10_000),
+            eval_every: 10,
+            seed: 42,
+            straggler: None,
+            link_latency: None,
+        }
+    }
+}
+
+pub struct RunResult {
+    pub x: Mat,
+    pub counters: Arc<Counters>,
+    pub trace: Arc<LossTrace>,
+}
+
+/// Run SFW-asyn over the in-process transport.  `make_engine(w)` builds
+/// worker w's compute engine (native math or a PJRT artifact executor).
+pub fn run_asyn_local<F>(
+    obj: Arc<dyn Objective>,
+    opts: &AsynOptions,
+    mut make_engine: F,
+) -> RunResult
+where
+    F: FnMut(usize) -> Box<dyn StepEngine>,
+{
+    let counters = Arc::new(Counters::new());
+    let trace = Arc::new(LossTrace::new());
+    let (mut mlink, wlinks) = local_links(opts.workers, counters.clone(), opts.link_latency);
+    let evaluator = Evaluator::new(obj.clone(), trace.clone());
+
+    let mut handles = Vec::new();
+    for (w, mut wlink) in wlinks.into_iter().enumerate() {
+        let mut engine = make_engine(w);
+        let counters = counters.clone();
+        let wopts = WorkerOptions {
+            worker_id: w as u32,
+            batch: opts.batch.clone(),
+            seed: opts.seed,
+            straggler: opts.straggler,
+        };
+        handles.push(std::thread::spawn(move || {
+            run_worker(&mut wlink, engine.as_mut(), &wopts, &counters);
+        }));
+    }
+
+    let mopts = MasterOptions {
+        iterations: opts.iterations,
+        tau: opts.tau,
+        eval_every: opts.eval_every,
+        seed: opts.seed,
+    };
+    let x = run_master(&mut mlink, &obj, &mopts, &counters, &trace, &evaluator);
+    for h in handles {
+        let _ = h.join();
+    }
+    evaluator.finish();
+    RunResult { x, counters, trace }
+}
+
+/// Run SFW-asyn over real localhost TCP sockets (same protocol, true
+/// serialization + kernel queues).  Master binds an ephemeral port.
+pub fn run_asyn_tcp<F>(
+    obj: Arc<dyn Objective>,
+    opts: &AsynOptions,
+    mut make_engine: F,
+) -> RunResult
+where
+    F: FnMut(usize) -> Box<dyn StepEngine>,
+{
+    use crate::transport::tcp::{tcp_master, tcp_worker};
+    let counters = Arc::new(Counters::new());
+    let trace = Arc::new(LossTrace::new());
+    let evaluator = Evaluator::new(obj.clone(), trace.clone());
+
+    // Bind first on an ephemeral port, then hand the resolved address to
+    // the workers.
+    let workers = opts.workers;
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let counters_m = counters.clone();
+    let master_thread = {
+        let obj = obj.clone();
+        let trace = trace.clone();
+        let mopts = MasterOptions {
+            iterations: opts.iterations,
+            tau: opts.tau,
+            eval_every: opts.eval_every,
+            seed: opts.seed,
+        };
+        std::thread::spawn(move || {
+            // accept() inside tcp_master blocks until all workers connect;
+            // publish the address before constructing it.
+            let listener_addr = "127.0.0.1:0";
+            let (mut mlink, addr) = {
+                // Bind manually to learn the port before accepting.
+                let l = std::net::TcpListener::bind(listener_addr).unwrap();
+                let addr = l.local_addr().unwrap();
+                drop(l); // tcp_master re-binds; tiny race acceptable on loopback
+                addr_tx.send(addr).unwrap();
+                let (m, a) = tcp_master(&addr.to_string(), workers, counters_m.clone()).unwrap();
+                (m, a)
+            };
+            let _ = addr;
+            let x = run_master(&mut mlink, &obj, &mopts, &counters_m, &trace, &evaluator);
+            evaluator.finish();
+            x
+        })
+    };
+    let addr = addr_rx.recv().unwrap();
+    // workers connect (retry briefly while master rebinds)
+    let mut handles = Vec::new();
+    for w in 0..opts.workers {
+        let mut engine = make_engine(w);
+        let counters = counters.clone();
+        let wopts = WorkerOptions {
+            worker_id: w as u32,
+            batch: opts.batch.clone(),
+            seed: opts.seed,
+            straggler: opts.straggler,
+        };
+        handles.push(std::thread::spawn(move || {
+            let mut link = {
+                let mut tries = 0;
+                loop {
+                    match tcp_worker(&addr.to_string(), w as u32, counters.clone()) {
+                        Ok(l) => break l,
+                        Err(e) if tries < 50 => {
+                            tries += 1;
+                            std::thread::sleep(Duration::from_millis(20));
+                            let _ = e;
+                        }
+                        Err(e) => panic!("worker {w} cannot connect: {e}"),
+                    }
+                }
+            };
+            run_worker(&mut link, engine.as_mut(), &wopts, &counters);
+        }));
+    }
+    let x = master_thread.join().unwrap();
+    for h in handles {
+        let _ = h.join();
+    }
+    RunResult { x, counters, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::engine::NativeEngine;
+    use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
+    use crate::linalg::nuclear_norm;
+    use crate::objective::MatrixSensing;
+    use crate::util::rng::Rng;
+
+    fn obj(seed: u64) -> Arc<dyn Objective> {
+        let mut rng = Rng::new(seed);
+        let p = MsParams { d1: 10, d2: 10, rank: 2, n: 3_000, noise_std: 0.05 };
+        Arc::new(MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0))
+    }
+
+    #[test]
+    fn asyn_local_converges_with_multiple_workers() {
+        let obj = obj(95);
+        let opts = AsynOptions {
+            iterations: 150,
+            tau: 8,
+            workers: 4,
+            batch: BatchSchedule::sfw_asyn(2.0, 8, 1_024),
+            eval_every: 15,
+            seed: 96,
+            straggler: None,
+            link_latency: None,
+        };
+        let o2 = obj.clone();
+        let r = run_asyn_local(obj, &opts, move |w| {
+            Box::new(NativeEngine::new(o2.clone(), 60, 97 + w as u64))
+        });
+        let pts = r.trace.points();
+        assert!(pts.len() >= 2);
+        let first = pts.first().unwrap().loss;
+        let last = pts.last().unwrap().loss;
+        assert!(last < 0.4 * first, "no progress: {first} -> {last}");
+        assert!(nuclear_norm(&r.x) <= 1.0 + 1e-3);
+        let s = r.counters.snapshot();
+        assert_eq!(s.iterations, 150);
+        // every accepted update = one up message; drops add more
+        assert!(s.msgs_up >= 150);
+        // comm stays rank-one sized: strictly less than one dense gradient
+        // per master iteration
+        let dense = (10 * 10 * 4) as u64;
+        assert!(s.bytes_up < s.msgs_up * dense);
+    }
+
+    #[test]
+    fn asyn_respects_delay_gate() {
+        // tau = 0 with many workers forces drops: iterations still reach T
+        // and dropped counter is visible.
+        let obj = obj(98);
+        let opts = AsynOptions {
+            iterations: 60,
+            tau: 0,
+            workers: 4,
+            batch: BatchSchedule::Constant(32),
+            eval_every: 30,
+            seed: 99,
+            straggler: None,
+            link_latency: None,
+        };
+        let o2 = obj.clone();
+        let r = run_asyn_local(obj, &opts, move |w| {
+            Box::new(NativeEngine::new(o2.clone(), 30, 100 + w as u64))
+        });
+        let s = r.counters.snapshot();
+        assert_eq!(s.iterations, 60);
+        assert!(s.dropped_updates > 0, "tau=0 with 4 workers must drop");
+    }
+}

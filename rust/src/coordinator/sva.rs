@@ -1,0 +1,167 @@
+//! Singular Vector Averaging — the natural-but-WRONG baseline.
+//!
+//! The paper's introduction: "naively aggregating the low-rank updates
+//! from the workers does not yield an algorithm that converges, as the
+//! Singular Vector Averaging algorithm in the work of [Zheng et al.,
+//! 2018]".  Each worker solves the LMO on its own minibatch gradient and
+//! ships (u_w, v_w); the master sign-aligns and averages the vectors and
+//! steps along the averaged rank-one direction.  Averaging singular
+//! vectors is not the singular vector of the averaged gradient, so the
+//! method stalls at a plateau — reproduced by the fig4 bench and pinned
+//! by an integration test (SVA plateaus where SFW-asyn converges).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::algo::engine::StepEngine;
+use crate::algo::schedule::{eta, BatchSchedule};
+use crate::algo::sfw::init_rank_one;
+use crate::coordinator::eval::Evaluator;
+use crate::coordinator::runner::RunResult;
+use crate::linalg::{normalize, Mat};
+use crate::metrics::{Counters, LossTrace};
+use crate::objective::Objective;
+use crate::util::rng::Rng;
+
+pub struct SvaOptions {
+    pub iterations: u64,
+    pub workers: usize,
+    pub batch: BatchSchedule,
+    pub eval_every: u64,
+    pub seed: u64,
+}
+
+enum Req {
+    Compute { x: Arc<Mat>, m_share: usize },
+    Stop,
+}
+
+struct Rep {
+    u: Vec<f32>,
+    v: Vec<f32>,
+}
+
+pub fn run_sva<F>(obj: Arc<dyn Objective>, opts: &SvaOptions, mut make_engine: F) -> RunResult
+where
+    F: FnMut(usize) -> Box<dyn StepEngine>,
+{
+    let counters = Arc::new(Counters::new());
+    let trace = Arc::new(LossTrace::new());
+    let evaluator = Evaluator::new(obj.clone(), trace.clone());
+    let (d1, d2) = obj.dims();
+    let theta = obj.theta();
+    let rank1_bytes = (4 * (d1 + d2)) as u64;
+
+    let (up_tx, up_rx): (Sender<Rep>, Receiver<Rep>) = channel();
+    let mut down_txs = Vec::new();
+    let mut handles = Vec::new();
+    for w in 0..opts.workers {
+        let (tx, rx): (Sender<Req>, Receiver<Req>) = channel();
+        down_txs.push(tx);
+        let mut engine = make_engine(w);
+        let up = up_tx.clone();
+        let counters_w = counters.clone();
+        let seed = opts.seed ^ 0xA11 ^ (w as u64) << 8;
+        handles.push(std::thread::spawn(move || {
+            let obj = engine.objective().clone();
+            let mut rng = Rng::new(seed);
+            let mut idx = Vec::new();
+            while let Ok(Req::Compute { x, m_share }) = rx.recv() {
+                rng.sample_indices(obj.n(), m_share, &mut idx);
+                let out = engine.step(&x, &idx);
+                counters_w.add_grad_evals(m_share as u64);
+                counters_w.add_lmo();
+                if up.send(Rep { u: out.u, v: out.v }).is_err() {
+                    return;
+                }
+            }
+        }));
+    }
+    drop(up_tx);
+
+    let mut x = init_rank_one(d1, d2, theta, &mut Rng::new(opts.seed));
+    evaluator.submit(trace.elapsed(), 0, x.clone());
+    for k in 1..=opts.iterations {
+        let m = opts.batch.m(k).max(opts.workers);
+        let m_share = m / opts.workers;
+        let xa = Arc::new(x.clone());
+        for tx in &down_txs {
+            counters.add_down((d1 * d2 * 4) as u64); // still broadcasts X
+            let _ = tx.send(Req::Compute { x: xa.clone(), m_share });
+        }
+        // average the singular vectors (sign-aligned to the first reply)
+        let mut u_avg = vec![0.0f32; d1];
+        let mut v_avg = vec![0.0f32; d2];
+        let mut first: Option<Rep> = None;
+        for _ in 0..opts.workers {
+            let rep = up_rx.recv().expect("worker died");
+            counters.add_up(rank1_bytes); // rank-one upload (the SVA selling point)
+            let sgn = match &first {
+                None => 1.0f32,
+                Some(f) => {
+                    let du: f32 = f.u.iter().zip(&rep.u).map(|(a, b)| a * b).sum();
+                    if du >= 0.0 {
+                        1.0
+                    } else {
+                        -1.0
+                    }
+                }
+            };
+            for (a, b) in u_avg.iter_mut().zip(&rep.u) {
+                *a += sgn * b;
+            }
+            for (a, b) in v_avg.iter_mut().zip(&rep.v) {
+                *a += sgn * b;
+            }
+            if first.is_none() {
+                first = Some(rep);
+            }
+        }
+        normalize(&mut u_avg);
+        normalize(&mut v_avg);
+        counters.add_iteration();
+        x.fw_rank_one_update(eta(k), -theta, &u_avg, &v_avg);
+        if k % opts.eval_every == 0 || k == opts.iterations {
+            evaluator.submit(trace.elapsed(), k, x.clone());
+        }
+    }
+    for tx in &down_txs {
+        let _ = tx.send(Req::Stop);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    evaluator.finish();
+    RunResult { x, counters, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::engine::NativeEngine;
+    use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
+    use crate::objective::MatrixSensing;
+
+    #[test]
+    fn sva_runs_and_counts_rank_one_uploads() {
+        let mut rng = Rng::new(120);
+        let p = MsParams { d1: 8, d2: 8, rank: 2, n: 1_000, noise_std: 0.05 };
+        let obj: Arc<dyn Objective> =
+            Arc::new(MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0));
+        let opts = SvaOptions {
+            iterations: 30,
+            workers: 3,
+            batch: BatchSchedule::Constant(96),
+            eval_every: 10,
+            seed: 121,
+        };
+        let o2 = obj.clone();
+        let r = run_sva(obj, &opts, move |w| {
+            Box::new(NativeEngine::new(o2.clone(), 40, 122 + w as u64))
+        });
+        let s = r.counters.snapshot();
+        assert_eq!(s.iterations, 30);
+        assert_eq!(s.bytes_up, 30 * 3 * 4 * (8 + 8));
+        assert_eq!(s.lmo_calls, 30 * 3); // one per worker per round
+    }
+}

@@ -1,0 +1,283 @@
+//! SVRF-asyn (Algorithm 5): asynchronous, communication-efficient
+//! Stochastic Variance-Reduced Frank-Wolfe.
+//!
+//! Outer epoch t: snapshot W_t, every worker recomputes ∇F(W_t) locally
+//! (each worker holds all data — paper §2.2 — so the snapshot costs zero
+//! communication beyond the rank-one catch-up slice).  Inner loop: the
+//! Algorithm-3 async protocol with the variance-reduced gradient
+//! ∇~ = (1/m) Σ_{i∈S} [∇f_i(X) − ∇f_i(W)] + ∇F(W), eta restarted per
+//! epoch (eta_k = 2/(k+1) on the INNER index), N_t = 2^{t+3} − 2 inner
+//! iterations (Thm 2).
+//!
+//! Epoch-boundary consistency: the master tracks each worker's last seen
+//! epoch; an update computed against a previous epoch's W is dropped and
+//! answered with `MasterMsg::UpdateW` (catch-up slice + boundary signal),
+//! after which the worker re-snapshots.  Workers apply slices through the
+//! idempotent `replay_after`, so overlapping catch-ups around boundaries
+//! are harmless.
+
+use std::sync::Arc;
+
+use crate::algo::engine::StepEngine;
+use crate::algo::schedule::{eta, svrf_epoch_len, BatchSchedule};
+use crate::algo::sfw::init_rank_one;
+use crate::coordinator::eval::Evaluator;
+use crate::coordinator::messages::{MasterMsg, UpdateMsg};
+use crate::coordinator::runner::RunResult;
+use crate::coordinator::update_log::{replay_after, UpdateLog};
+use crate::linalg::Mat;
+use crate::metrics::{Counters, LossTrace};
+use crate::objective::Objective;
+use crate::transport::local::local_links;
+use crate::transport::{MasterLink, WorkerLink};
+use crate::util::rng::Rng;
+
+pub struct SvrfAsynOptions {
+    pub epochs: u32,
+    pub tau: u64,
+    pub workers: usize,
+    pub batch: BatchSchedule,
+    pub eval_every: u64,
+    pub seed: u64,
+}
+
+impl Default for SvrfAsynOptions {
+    fn default() -> Self {
+        SvrfAsynOptions {
+            epochs: 4,
+            tau: 8,
+            workers: 4,
+            batch: BatchSchedule::svrf_asyn(8, 4_096),
+            eval_every: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// Master side of Algorithm 5.
+fn run_svrf_master<L: MasterLink>(
+    link: &mut L,
+    obj: &Arc<dyn Objective>,
+    opts: &SvrfAsynOptions,
+    counters: &Counters,
+    trace: &LossTrace,
+    evaluator: &Evaluator,
+) -> Mat {
+    let (d1, d2) = obj.dims();
+    let theta = obj.theta();
+    let mut log = UpdateLog::new();
+    let mut x = init_rank_one(d1, d2, theta, &mut Rng::new(opts.seed));
+    evaluator.submit(trace.elapsed(), 0, x.clone());
+
+    let w_count = link.workers();
+    let mut last_t = vec![0u64; w_count];
+    let mut last_epoch = vec![0u64; w_count];
+
+    // Epoch 0 boundary: initial UpdateW broadcast (workers block on it).
+    for w in 0..w_count {
+        link.send_to(w, MasterMsg::UpdateW { t_m: 0, entries: Vec::new() });
+    }
+
+    let mut epoch: u64 = 0;
+    let mut epoch_start: u64 = 0;
+    'outer: while epoch < opts.epochs as u64 {
+        let n_t = svrf_epoch_len(epoch as u32);
+        while log.t_m() - epoch_start < n_t {
+            let Some(upd) = link.recv() else { break 'outer };
+            let w = upd.worker_id as usize;
+            let t_m = log.t_m();
+            // computed against an older epoch's W -> drop + boundary resync
+            if last_epoch[w] < epoch || upd.t_w < epoch_start {
+                counters.add_dropped();
+                link.send_to(
+                    w,
+                    MasterMsg::UpdateW { t_m, entries: log.slice_from(last_t[w]) },
+                );
+                last_t[w] = t_m;
+                last_epoch[w] = epoch;
+                continue;
+            }
+            // staleness gate within the epoch (Alg 5 line 8)
+            if t_m - upd.t_w > opts.tau {
+                counters.add_dropped();
+                link.send_to(
+                    w,
+                    MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) },
+                );
+                last_t[w] = t_m;
+                continue;
+            }
+            let inner_k = (t_m - epoch_start) + 1;
+            let e = log.append_custom(upd.u, upd.v, eta(inner_k), -theta);
+            x.fw_rank_one_update(e.eta, e.scale, &e.u, &e.v);
+            counters.add_iteration();
+            let t_m = log.t_m();
+            link.send_to(
+                w,
+                MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) },
+            );
+            last_t[w] = t_m;
+            if t_m % opts.eval_every == 0 {
+                evaluator.submit(trace.elapsed(), t_m, x.clone());
+            }
+        }
+        // epoch complete: W_{t+1} = X_{N_t}; boundary is announced lazily
+        // through per-worker UpdateW resyncs above.
+        epoch += 1;
+        epoch_start = log.t_m();
+        evaluator.submit(trace.elapsed(), epoch_start, x.clone());
+    }
+    for w in 0..w_count {
+        link.send_to(w, MasterMsg::Stop);
+    }
+    x
+}
+
+/// Worker side of Algorithm 5.
+fn run_svrf_worker<L: WorkerLink, E: StepEngine + ?Sized>(
+    link: &mut L,
+    engine: &mut E,
+    worker_id: u32,
+    batch: &BatchSchedule,
+    seed: u64,
+    counters: &Counters,
+) {
+    let obj = engine.objective().clone();
+    let (d1, d2) = obj.dims();
+    let theta = obj.theta();
+    let n = obj.n();
+    let mut x = init_rank_one(d1, d2, theta, &mut Rng::new(seed));
+    let mut t_w = 0u64;
+    #[allow(unused_assignments)]
+    let mut epoch_start = 0u64;
+    let mut rng = Rng::new(seed ^ 0x5F4F).fork(worker_id as u64 + 1);
+    let mut idx: Vec<usize> = Vec::new();
+    let mut w_snap = x.clone();
+    let mut full_g = Mat::zeros(d1, d2);
+    let mut gx = Mat::zeros(d1, d2);
+    let mut gw = Mat::zeros(d1, d2);
+    let all: Vec<usize> = (0..n).collect();
+
+    // Block on the initial epoch-0 boundary.
+    match link.recv() {
+        Some(MasterMsg::UpdateW { t_m, entries }) => {
+            t_w = replay_after(&mut x, &entries, t_w).max(t_m);
+            epoch_start = t_w;
+        }
+        _ => return,
+    }
+    // ∇F(W_0)
+    let _ = engine.grad_sum(&x, &all, &mut full_g);
+    full_g.scale(1.0 / n as f32);
+    counters.add_grad_evals(n as u64);
+    w_snap.data.copy_from_slice(&x.data);
+
+    loop {
+        let inner_k = (t_w - epoch_start).max(0) + 1;
+        let m = batch.m(inner_k);
+        rng.sample_indices(n, m, &mut idx);
+        // VR gradient: (grad(X) - grad(W))/m + ∇F(W)
+        let loss_sum = engine.grad_sum(&x, &idx, &mut gx);
+        let _ = engine.grad_sum(&w_snap, &idx, &mut gw);
+        counters.add_grad_evals(2 * m as u64);
+        gx.axpy(-1.0, &gw);
+        gx.scale(1.0 / m as f32);
+        gx.axpy(1.0, &full_g);
+        let s = engine.lmo(&gx);
+        counters.add_lmo();
+        link.send(UpdateMsg {
+            worker_id,
+            t_w,
+            u: s.u,
+            v: s.v,
+            sigma: s.sigma,
+            loss_sum,
+            m: m as u32,
+        });
+        match link.recv() {
+            Some(MasterMsg::Updates { t_m, entries }) => {
+                t_w = replay_after(&mut x, &entries, t_w).max(t_m);
+            }
+            Some(MasterMsg::UpdateW { t_m, entries }) => {
+                t_w = replay_after(&mut x, &entries, t_w).max(t_m);
+                epoch_start = t_w;
+                w_snap.data.copy_from_slice(&x.data);
+                let _ = engine.grad_sum(&w_snap, &all, &mut full_g);
+                full_g.scale(1.0 / n as f32);
+                counters.add_grad_evals(n as u64);
+            }
+            Some(MasterMsg::Stop) | None => return,
+        }
+    }
+}
+
+/// Run SVRF-asyn over the in-process transport.
+pub fn run_svrf_asyn_local<F>(
+    obj: Arc<dyn Objective>,
+    opts: &SvrfAsynOptions,
+    mut make_engine: F,
+) -> RunResult
+where
+    F: FnMut(usize) -> Box<dyn StepEngine>,
+{
+    let counters = Arc::new(Counters::new());
+    let trace = Arc::new(LossTrace::new());
+    let (mut mlink, wlinks) = local_links(opts.workers, counters.clone(), None);
+    let evaluator = Evaluator::new(obj.clone(), trace.clone());
+
+    let mut handles = Vec::new();
+    for (w, mut wlink) in wlinks.into_iter().enumerate() {
+        let mut engine = make_engine(w);
+        let counters = counters.clone();
+        let batch = opts.batch.clone();
+        let seed = opts.seed;
+        handles.push(std::thread::spawn(move || {
+            run_svrf_worker(&mut wlink, engine.as_mut(), w as u32, &batch, seed, &counters);
+        }));
+    }
+    let x = run_svrf_master(&mut mlink, &obj, opts, &counters, &trace, &evaluator);
+    for h in handles {
+        let _ = h.join();
+    }
+    evaluator.finish();
+    RunResult { x, counters, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::engine::NativeEngine;
+    use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
+    use crate::linalg::nuclear_norm;
+    use crate::objective::MatrixSensing;
+
+    #[test]
+    fn svrf_asyn_converges() {
+        let mut rng = Rng::new(140);
+        let p = MsParams { d1: 10, d2: 10, rank: 2, n: 2_000, noise_std: 0.05 };
+        let obj: Arc<dyn Objective> =
+            Arc::new(MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0));
+        let opts = SvrfAsynOptions {
+            epochs: 3,
+            tau: 8,
+            workers: 3,
+            batch: BatchSchedule::svrf_asyn(4, 512),
+            eval_every: 10,
+            seed: 141,
+        };
+        let o2 = obj.clone();
+        let r = run_svrf_asyn_local(obj, &opts, move |w| {
+            Box::new(NativeEngine::new(o2.clone(), 50, 142 + w as u64))
+        });
+        let pts = r.trace.points();
+        assert!(
+            pts.last().unwrap().loss < 0.4 * pts.first().unwrap().loss,
+            "{} -> {}",
+            pts.first().unwrap().loss,
+            pts.last().unwrap().loss
+        );
+        assert!(nuclear_norm(&r.x) <= 1.0 + 1e-3);
+        // total inner iterations = 6 + 14 + 30
+        assert_eq!(r.counters.snapshot().iterations, 50);
+    }
+}

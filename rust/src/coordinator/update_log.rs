@@ -1,0 +1,190 @@
+//! The master's rank-one update log and Eqn (6) replay.
+//!
+//! The log IS the model state on the wire: appending an accepted worker
+//! update produces entry k with eta_k = 2/(k+1); any worker holding the
+//! iterate X_{t} can reconstruct X_{t'} (t' > t) by replaying entries
+//! t+1 ..= t', each a rank-one GER — O((t'-t)(D1+D2) * min(D1,D2))...
+//! actually O((t'-t) * D1 * D2) compute but only O((t'-t)(D1+D2)) bytes,
+//! which is the paper's entire communication saving.
+
+use crate::algo::schedule::eta;
+use crate::coordinator::messages::LogEntry;
+use crate::linalg::Mat;
+use std::sync::Arc;
+
+/// Append-only rank-one update log (entry k at index k-1).
+#[derive(Default)]
+pub struct UpdateLog {
+    entries: Vec<LogEntry>,
+}
+
+impl UpdateLog {
+    pub fn new() -> Self {
+        UpdateLog { entries: Vec::new() }
+    }
+
+    /// Current master iteration t_m (number of accepted updates).
+    pub fn t_m(&self) -> u64 {
+        self.entries.len() as u64
+    }
+
+    /// Accept a worker update: creates entry k = t_m + 1 with the theorem
+    /// step size eta_k = 2/(k+1) and scale = -theta.
+    pub fn append(&mut self, u: Vec<f32>, v: Vec<f32>, theta: f32) -> &LogEntry {
+        let k = self.t_m() + 1;
+        let e = eta(k);
+        self.append_custom(u, v, e, -theta)
+    }
+
+    /// Append with an explicit step size (SVRF-asyn restarts eta_k per
+    /// epoch: eta is indexed by the INNER iteration, not the global one).
+    pub fn append_custom(&mut self, u: Vec<f32>, v: Vec<f32>, eta: f32, scale: f32) -> &LogEntry {
+        let k = self.t_m() + 1;
+        self.entries.push(LogEntry { k, eta, scale, u: Arc::new(u), v: Arc::new(v) });
+        self.entries.last().unwrap()
+    }
+
+    /// The catch-up slice a worker at iteration `t_w` needs to reach the
+    /// current t_m: entries t_w+1 ..= t_m (cheap Arc clones).
+    pub fn slice_from(&self, t_w: u64) -> Vec<LogEntry> {
+        let from = t_w as usize;
+        self.entries[from.min(self.entries.len())..].to_vec()
+    }
+
+    /// Entries in (t_a, t_b] for partial catch-ups.
+    pub fn slice_between(&self, t_a: u64, t_b: u64) -> Vec<LogEntry> {
+        let lo = (t_a as usize).min(self.entries.len());
+        let hi = (t_b as usize).min(self.entries.len());
+        self.entries[lo..hi].to_vec()
+    }
+
+    pub fn entry(&self, k: u64) -> Option<&LogEntry> {
+        self.entries.get((k - 1) as usize)
+    }
+}
+
+/// Replay Eqn (6) over `x` (which must be at iteration entries[0].k - 1):
+/// X_k = (1 - eta_k) X_{k-1} + eta_k * scale_k * u_k v_k^T.
+/// Returns the new iteration count.
+pub fn replay(x: &mut Mat, entries: &[LogEntry]) -> Option<u64> {
+    let mut last = None;
+    for e in entries {
+        if let Some(prev) = last {
+            debug_assert_eq!(e.k, prev + 1, "non-contiguous log slice");
+        }
+        x.fw_rank_one_update(e.eta, e.scale, &e.u, &e.v);
+        last = Some(e.k);
+    }
+    last
+}
+
+/// Idempotent replay: apply only entries with k > `t_cur` (a worker may
+/// receive overlapping slices around SVRF epoch boundaries; applying an
+/// entry twice would corrupt the iterate).  Returns the new iteration.
+pub fn replay_after(x: &mut Mat, entries: &[LogEntry], t_cur: u64) -> u64 {
+    let mut t = t_cur;
+    for e in entries {
+        if e.k <= t {
+            continue;
+        }
+        debug_assert_eq!(e.k, t + 1, "gap in catch-up slice");
+        x.fw_rank_one_update(e.eta, e.scale, &e.u, &e.v);
+        t = e.k;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::nuclear_norm;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn random_log(rng: &mut Rng, n: usize, d1: usize, d2: usize, theta: f32) -> UpdateLog {
+        let mut log = UpdateLog::new();
+        for _ in 0..n {
+            let u = rng.unit_vector(d1);
+            let v = rng.unit_vector(d2);
+            log.append(u, v, theta);
+        }
+        log
+    }
+
+    #[test]
+    fn append_assigns_sequential_k_and_eta() {
+        let mut rng = Rng::new(80);
+        let log = random_log(&mut rng, 5, 4, 3, 1.0);
+        for k in 1..=5u64 {
+            let e = log.entry(k).unwrap();
+            assert_eq!(e.k, k);
+            assert!((e.eta - 2.0 / (k as f32 + 1.0)).abs() < 1e-7);
+            assert_eq!(e.scale, -1.0);
+        }
+        assert_eq!(log.t_m(), 5);
+    }
+
+    #[test]
+    fn replay_full_log_equals_incremental_master_copy() {
+        // Property: a worker replaying any suffix from its own t_w lands on
+        // exactly the master's X (the correctness core of Algorithm 3).
+        check("replay-suffix", 81, 30, |rng| {
+            let d1 = 2 + rng.next_below(6);
+            let d2 = 2 + rng.next_below(6);
+            let n = 1 + rng.next_below(12);
+            let theta = 1.0f32;
+            let log = random_log(rng, n, d1, d2, theta);
+
+            // master copy: applied entry-by-entry as they were accepted
+            let mut master = crate::algo::init_rank_one(d1, d2, theta, &mut rng.fork(1));
+            let x0 = master.clone();
+            replay(&mut master, &log.slice_from(0));
+
+            // worker stopped at random t_w, then catches up with the slice
+            let t_w = rng.next_below(n + 1) as u64;
+            let mut worker = x0.clone();
+            replay(&mut worker, &log.slice_between(0, t_w));
+            replay(&mut worker, &log.slice_from(t_w));
+
+            let mut diff = worker.clone();
+            diff.axpy(-1.0, &master);
+            prop_assert!(
+                diff.frob_norm() < 1e-5,
+                "suffix replay diverged: {} (t_w={t_w}, n={n})",
+                diff.frob_norm()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn replay_preserves_nuclear_ball() {
+        // Every X_k is a convex combination of feasible points, so
+        // ||X_k||_* <= theta for all k, whatever the update sequence.
+        check("nuclear-feasible", 82, 20, |rng| {
+            let theta = 1.0f32;
+            let log = random_log(rng, 15, 6, 5, theta);
+            let mut x = crate::algo::init_rank_one(6, 5, theta, &mut rng.fork(2));
+            for k in 1..=15u64 {
+                replay(&mut x, &log.slice_between(k - 1, k));
+                let nn = nuclear_norm(&x);
+                prop_assert!(nn <= theta as f64 + 1e-4, "||X_{k}||_* = {nn}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn slices_partition_cleanly() {
+        let mut rng = Rng::new(83);
+        let log = random_log(&mut rng, 10, 3, 3, 1.0);
+        let a = log.slice_between(0, 4);
+        let b = log.slice_from(4);
+        assert_eq!(a.len(), 4);
+        assert_eq!(b.len(), 6);
+        assert_eq!(a.last().unwrap().k + 1, b.first().unwrap().k);
+        assert!(log.slice_from(10).is_empty());
+        assert!(log.slice_from(99).is_empty());
+    }
+}

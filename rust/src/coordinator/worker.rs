@@ -1,0 +1,100 @@
+//! The SFW-asyn worker loop (Algorithm 3, lines 14–23).
+//!
+//! Each worker keeps a local dense X it advances ONLY by replaying the
+//! master's rank-one log slices (Eqn 6) — it never receives a parameter
+//! matrix.  Per cycle it samples a minibatch of the schedule size for its
+//! current sync point, runs the fused gradient->LMO step (native math or
+//! the AOT JAX/Pallas artifact via PJRT), ships `{u, v, t_w}`, and blocks
+//! on the master's catch-up reply.
+
+use std::time::Duration;
+
+use crate::algo::engine::StepEngine;
+use crate::algo::schedule::BatchSchedule;
+use crate::algo::sfw::init_rank_one;
+use crate::coordinator::messages::{MasterMsg, UpdateMsg};
+use crate::coordinator::update_log::replay;
+use crate::metrics::Counters;
+use crate::transport::WorkerLink;
+use crate::util::rng::Rng;
+
+/// Injected straggler model (Assumption 3): a task of `units` work whose
+/// nominal time is `unit * units` completes in `unit * units * geometric(p)`
+/// — the worker sleeps the excess `unit * units * (geometric(p) - 1)`.
+/// p = 1 disables it; small p produces the heavy-tailed heterogeneity of a
+/// real multi-tenant cluster.  Scaling by the assigned work is what lets
+/// the synchronous baseline profit from splitting batches across workers
+/// (as on EC2) while still paying the max-of-W tail at its barrier.
+#[derive(Clone, Copy, Debug)]
+pub struct Straggler {
+    /// Nominal time per unit of work (e.g. per gradient sample).
+    pub unit: Duration,
+    pub p: f64,
+}
+
+impl Straggler {
+    /// Sleep the straggler excess for a task of `units` work.
+    pub fn sleep(&self, rng: &mut Rng, units: u64) {
+        let mult = rng.geometric(self.p) - 1;
+        if mult > 0 {
+            let ns = self.unit.as_nanos() as u64 * units * mult;
+            std::thread::sleep(Duration::from_nanos(ns));
+        }
+    }
+}
+
+pub struct WorkerOptions {
+    pub worker_id: u32,
+    pub batch: BatchSchedule,
+    pub seed: u64,
+    pub straggler: Option<Straggler>,
+}
+
+/// Run the worker loop until the master says Stop (or disconnects).
+pub fn run_worker<L: WorkerLink, E: StepEngine + ?Sized>(
+    link: &mut L,
+    engine: &mut E,
+    opts: &WorkerOptions,
+    counters: &Counters,
+) {
+    let obj = engine.objective().clone();
+    let (d1, d2) = obj.dims();
+    let theta = obj.theta();
+    let n = obj.n();
+    // X_0 from the shared seed (stands in for the {u_0, v_0} broadcast).
+    let mut x = init_rank_one(d1, d2, theta, &mut Rng::new(opts.seed));
+    let mut t_w = 0u64;
+    let mut rng = Rng::new(opts.seed ^ 0xD1F7).fork(opts.worker_id as u64 + 1);
+    let mut idx: Vec<usize> = Vec::new();
+
+    loop {
+        // Alg 3 line 20: |S| = m_{t_w} (schedule indexed by the sync point).
+        let m = opts.batch.m(t_w.max(1));
+        rng.sample_indices(n, m, &mut idx);
+        let out = engine.step(&x, &idx);
+        counters.add_grad_evals(m as u64);
+        counters.add_lmo();
+        if let Some(s) = &opts.straggler {
+            s.sleep(&mut rng, m as u64);
+        }
+        link.send(UpdateMsg {
+            worker_id: opts.worker_id,
+            t_w,
+            u: out.u,
+            v: out.v,
+            sigma: out.sigma,
+            loss_sum: out.loss_sum,
+            m: m as u32,
+        });
+        match link.recv() {
+            Some(MasterMsg::Updates { t_m, entries }) => {
+                replay(&mut x, &entries);
+                t_w = t_m;
+            }
+            Some(MasterMsg::UpdateW { .. }) => {
+                unreachable!("plain SFW-asyn master never sends UpdateW")
+            }
+            Some(MasterMsg::Stop) | None => return,
+        }
+    }
+}

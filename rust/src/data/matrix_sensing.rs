@@ -1,0 +1,124 @@
+//! Matrix-sensing synthetic dataset (paper §5.1, first task).
+
+use crate::linalg::{nuclear_norm, Mat};
+use crate::util::rng::Rng;
+
+/// Matrix sensing instance: minimize
+///   F(X) = (1/N) sum_i (<A_i, X> - y_i)^2   s.t.  ||X||_* <= theta.
+///
+/// Sensing matrices are stored flattened: `af` is (N, D1*D2) row-major, so
+/// <A_i, X> = af.row(i) . vec(X) — the same layout the AOT artifacts use.
+pub struct MatrixSensingData {
+    pub d1: usize,
+    pub d2: usize,
+    pub n: usize,
+    /// (N, D1*D2) flattened sensing matrices.
+    pub af: Mat,
+    /// Responses, length N.
+    pub y: Vec<f32>,
+    /// Ground-truth X* (nuclear norm 1), for relative-error reporting.
+    pub x_star: Mat,
+    /// F(X*) (nonzero under observation noise) — used for rel. loss.
+    pub f_star_hint: f64,
+}
+
+/// Generation parameters (defaults = the paper's §5.1 settings).
+#[derive(Clone, Debug)]
+pub struct MsParams {
+    pub d1: usize,
+    pub d2: usize,
+    pub rank: usize,
+    pub n: usize,
+    pub noise_std: f32,
+}
+
+impl Default for MsParams {
+    fn default() -> Self {
+        MsParams { d1: 30, d2: 30, rank: 3, n: 90_000, noise_std: 0.1 }
+    }
+}
+
+impl MatrixSensingData {
+    pub fn generate(p: &MsParams, rng: &mut Rng) -> Self {
+        // X* = U V^T / ||U V^T||_*, U, V ~ U[0,1]^{d x r}  (paper recipe)
+        let u = Mat::rand_uniform(p.d1, p.rank, rng);
+        let v = Mat::rand_uniform(p.d2, p.rank, rng);
+        let mut x_star = u.matmul(&v.transpose());
+        let nn = nuclear_norm(&x_star) as f32;
+        x_star.scale(1.0 / nn);
+
+        let k = p.d1 * p.d2;
+        let mut af = Mat::zeros(p.n, k);
+        let mut y = vec![0.0f32; p.n];
+        let xs = &x_star.data;
+        let mut loss_at_star = 0.0f64;
+        for i in 0..p.n {
+            let row = af.row_mut(i);
+            let mut dot = 0.0f64;
+            for (a, &x) in row.iter_mut().zip(xs.iter()) {
+                let g = rng.normal_f32();
+                *a = g;
+                dot += g as f64 * x as f64;
+            }
+            let eps = rng.normal_f32() * p.noise_std;
+            y[i] = dot as f32 + eps;
+            loss_at_star += (eps as f64).powi(2);
+        }
+        let f_star_hint = loss_at_star / p.n as f64;
+        MatrixSensingData { d1: p.d1, d2: p.d2, n: p.n, af, y, x_star, f_star_hint }
+    }
+
+    /// Full objective F(X) = (1/N) sum residual^2.
+    pub fn loss_full(&self, x: &Mat) -> f64 {
+        assert_eq!((x.rows, x.cols), (self.d1, self.d2));
+        let xf = &x.data;
+        let mut acc = 0.0f64;
+        for i in 0..self.n {
+            let r = crate::linalg::dot(self.af.row(i), xf) - self.y[i];
+            acc += (r as f64).powi(2);
+        }
+        acc / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> (MatrixSensingData, Rng) {
+        let mut rng = Rng::new(100);
+        let p = MsParams { d1: 8, d2: 6, rank: 2, n: 500, noise_std: 0.05 };
+        (MatrixSensingData::generate(&p, &mut rng), rng)
+    }
+
+    #[test]
+    fn ground_truth_on_nuclear_sphere() {
+        let (d, _) = small();
+        assert!((nuclear_norm(&d.x_star) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn responses_match_ground_truth_up_to_noise() {
+        let (d, _) = small();
+        // F(X*) should be about noise_std^2
+        let l = d.loss_full(&d.x_star);
+        assert!((l - 0.0025).abs() < 0.0015, "loss at X*: {l}");
+        assert!((l - d.f_star_hint).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loss_at_zero_larger_than_at_star() {
+        let (d, _) = small();
+        let zero = Mat::zeros(8, 6);
+        assert!(d.loss_full(&zero) > 5.0 * d.loss_full(&d.x_star));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = MsParams { d1: 4, d2: 4, rank: 1, n: 50, noise_std: 0.1 };
+        let a = MatrixSensingData::generate(&p, &mut Rng::new(7));
+        let b = MatrixSensingData::generate(&p, &mut Rng::new(7));
+        assert_eq!(a.af.data, b.af.data);
+        assert_eq!(a.y, b.y);
+    }
+}

@@ -1,0 +1,17 @@
+//! Synthetic datasets for the paper's two workloads (§5.1).
+//!
+//! * Matrix sensing — exactly the paper's recipe: ground truth
+//!   `X* = U V^T / ||U V^T||_*` with `U, V ∈ R^{30x3}` uniform(0,1)
+//!   entries, N standard-normal sensing matrices `A_i`, responses
+//!   `y_i = <A_i, X*> + eps`, eps ~ N(0, 0.1^2).
+//! * PNN "MNIST-like" — substitution for MNIST (no network access; see
+//!   DESIGN.md §6): feature vectors in [0,1]^D from a mixture model,
+//!   binary labels from a planted low-rank quadratic teacher, which keeps
+//!   the objective realizable and the communication-dominance regime
+//!   (D^2 ≈ 614k parameters at D = 784) identical to the paper's.
+
+pub mod matrix_sensing;
+pub mod pnn;
+
+pub use matrix_sensing::MatrixSensingData;
+pub use pnn::PnnData;

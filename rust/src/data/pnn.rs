@@ -1,0 +1,192 @@
+//! PNN "MNIST-like" synthetic dataset (substitution for MNIST; DESIGN.md §6).
+//!
+//! The paper trains a two-layer polynomial (quadratic-activation) network
+//! with smooth hinge loss on MNIST, binarized 0-4 vs 5-9, pixels scaled to
+//! [0,1].  Offline we plant a low-rank quadratic teacher: features come
+//! from a K-component mixture over [0,1]^D (MNIST-like: nonnegative,
+//! strongly correlated coordinates), labels are
+//! `y = sign(a^T X_t a - b)` with a rank-r teacher X_t, so the objective is
+//! realizable by exactly the model class being trained and the
+//! loss-vs-time behaviour (the experiment's subject) is comparable.
+
+use crate::linalg::{nuclear_norm, Mat};
+use crate::util::rng::Rng;
+
+pub struct PnnData {
+    pub d: usize,
+    pub n: usize,
+    /// (N, D) feature rows in [0, 1].
+    pub a: Mat,
+    /// Labels in {-1, +1}.
+    pub y: Vec<f32>,
+    /// Planted teacher (nuclear norm 1), for diagnostics.
+    pub x_teacher: Mat,
+}
+
+#[derive(Clone, Debug)]
+pub struct PnnParams {
+    pub d: usize,
+    pub n: usize,
+    pub teacher_rank: usize,
+    pub mixture_components: usize,
+}
+
+impl Default for PnnParams {
+    fn default() -> Self {
+        // Full paper scale is d = 784 (28x28), n = 60_000; the default here
+        // matches the default AOT artifact dim (196 = 14x14) for CI speed.
+        PnnParams { d: 196, n: 60_000, teacher_rank: 4, mixture_components: 10 }
+    }
+}
+
+impl PnnData {
+    pub fn generate(p: &PnnParams, rng: &mut Rng) -> Self {
+        // Teacher: X_t = sum_r u_r v_r^T, normalized to unit nuclear norm.
+        let u = Mat::randn(p.d, p.teacher_rank, 1.0, rng);
+        let v = Mat::randn(p.d, p.teacher_rank, 1.0, rng);
+        let mut x_t = u.matmul(&v.transpose());
+        let nn = nuclear_norm(&x_t) as f32;
+        x_t.scale(1.0 / nn);
+
+        // Mixture centers in [0,1]^D ("digit prototypes").
+        let centers: Vec<Vec<f32>> = (0..p.mixture_components)
+            .map(|_| (0..p.d).map(|_| rng.next_f32()).collect())
+            .collect();
+
+        let mut a = Mat::zeros(p.n, p.d);
+        let mut scores = vec![0.0f64; p.n];
+        let mut w = vec![0.0f32; p.d];
+        for i in 0..p.n {
+            let c = &centers[rng.next_below(p.mixture_components)];
+            let row = a.row_mut(i);
+            for (x, &cj) in row.iter_mut().zip(c.iter()) {
+                // jittered prototype, clamped to [0,1] like scaled pixels
+                *x = (cj + 0.25 * rng.normal_f32()).clamp(0.0, 1.0);
+            }
+            // score = a^T X_t a
+            x_t.matvec(row, &mut w[..p.d]);
+            scores[i] = crate::linalg::dot(row, &w) as f64;
+        }
+        // Threshold at the median score => balanced classes, like the
+        // paper's 0-4 vs 5-9 split (~49/51).
+        let mut sorted = scores.clone();
+        sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let thresh = sorted[p.n / 2];
+        let y = scores
+            .iter()
+            .map(|&s| if s > thresh { 1.0 } else { -1.0 })
+            .collect();
+        PnnData { d: p.d, n: p.n, a, y, x_teacher: x_t }
+    }
+
+    /// Smooth hinge value (continuous version; see kernels/ref.py).
+    #[inline]
+    pub fn smooth_hinge(ty: f32) -> f32 {
+        if ty <= 0.0 {
+            0.5 - ty
+        } else if ty <= 1.0 {
+            0.5 * (1.0 - ty) * (1.0 - ty)
+        } else {
+            0.0
+        }
+    }
+
+    /// d(smooth hinge)/d(ty).
+    #[inline]
+    pub fn smooth_hinge_dt(ty: f32) -> f32 {
+        if ty <= 0.0 {
+            -1.0
+        } else if ty <= 1.0 {
+            -(1.0 - ty)
+        } else {
+            0.0
+        }
+    }
+
+    /// Full objective F(X) = (1/N) sum s-hinge(y_i * a_i^T X a_i).
+    pub fn loss_full(&self, x: &Mat) -> f64 {
+        assert_eq!((x.rows, x.cols), (self.d, self.d));
+        let mut w = vec![0.0f32; self.d];
+        let mut acc = 0.0f64;
+        for i in 0..self.n {
+            let row = self.a.row(i);
+            x.matvec(row, &mut w);
+            let z = crate::linalg::dot(row, &w);
+            acc += Self::smooth_hinge(self.y[i] * z) as f64;
+        }
+        acc / self.n as f64
+    }
+
+    /// 0/1 classification accuracy of sign(a^T X a) vs labels.
+    pub fn accuracy(&self, x: &Mat) -> f64 {
+        let mut w = vec![0.0f32; self.d];
+        let mut correct = 0usize;
+        for i in 0..self.n {
+            let row = self.a.row(i);
+            x.matvec(row, &mut w);
+            let z = crate::linalg::dot(row, &w);
+            if z * self.y[i] > 0.0 {
+                correct += 1;
+            }
+        }
+        correct as f64 / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> PnnData {
+        let p = PnnParams { d: 12, n: 400, teacher_rank: 2, mixture_components: 4 };
+        PnnData::generate(&p, &mut Rng::new(200))
+    }
+
+    #[test]
+    fn features_in_unit_box_labels_pm1() {
+        let d = small();
+        assert!(d.a.data.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        assert!(d.y.iter().all(|&y| y == 1.0 || y == -1.0));
+    }
+
+    #[test]
+    fn classes_balanced() {
+        let d = small();
+        let pos = d.y.iter().filter(|&&y| y > 0.0).count();
+        let frac = pos as f64 / d.n as f64;
+        assert!((frac - 0.5).abs() < 0.02, "{frac}");
+    }
+
+    #[test]
+    fn teacher_has_unit_nuclear_norm_and_separates() {
+        let d = small();
+        assert!((nuclear_norm(&d.x_teacher) - 1.0).abs() < 1e-4);
+        // scaled teacher should beat chance clearly (labels are threshold
+        // of the teacher score, so sign agreement is high by construction
+        // modulo the median shift)
+        let acc = d.accuracy(&d.x_teacher);
+        assert!(acc > 0.6, "teacher accuracy {acc}");
+    }
+
+    #[test]
+    fn smooth_hinge_continuous_and_convex_pieces() {
+        let f = PnnData::smooth_hinge;
+        assert!((f(0.0) - 0.5).abs() < 1e-7);
+        assert!((f(-1e-6) - f(1e-6)).abs() < 1e-5);
+        assert!((f(1.0) - 0.0).abs() < 1e-7);
+        assert_eq!(f(2.0), 0.0);
+        let g = PnnData::smooth_hinge_dt;
+        assert_eq!(g(-1.0), -1.0);
+        assert!((g(0.5) + 0.5).abs() < 1e-7);
+        assert_eq!(g(1.5), 0.0);
+    }
+
+    #[test]
+    fn loss_at_teacher_below_loss_at_zero() {
+        let d = small();
+        let mut scaled = d.x_teacher.clone();
+        scaled.scale(1.0); // theta = 1 feasible point
+        let zero = Mat::zeros(d.d, d.d);
+        assert!(d.loss_full(&scaled) < d.loss_full(&zero));
+    }
+}

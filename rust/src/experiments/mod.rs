@@ -1,0 +1,87 @@
+//! Shared experiment harness used by `examples/` and `rust/benches/`:
+//! standard workload builders (paper §5.1 parameters, scaled for CI),
+//! relative-loss helpers and time-to-target extraction (Figures 5/7).
+
+use std::sync::Arc;
+
+use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
+use crate::data::pnn::{PnnData, PnnParams};
+use crate::metrics::TracePoint;
+use crate::objective::{MatrixSensing, Objective, Pnn};
+use crate::util::rng::Rng;
+
+/// Paper-shaped matrix-sensing objective (30x30, rank 3, noise 0.1).
+/// `n` scales the sample count (paper: 90 000; benches default smaller).
+pub fn build_ms(seed: u64, n: usize) -> Arc<MatrixSensing> {
+    let mut rng = Rng::new(seed);
+    let p = MsParams { d1: 30, d2: 30, rank: 3, n, noise_std: 0.1 };
+    Arc::new(MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0))
+}
+
+/// PNN objective at feature dim `d` (paper: 784; artifacts default 196).
+pub fn build_pnn(seed: u64, d: usize, n: usize) -> Arc<Pnn> {
+    let mut rng = Rng::new(seed);
+    let p = PnnParams { d, n, teacher_rank: 4, mixture_components: 10 };
+    Arc::new(Pnn::new(PnnData::generate(&p, &mut rng), 1.0))
+}
+
+/// Relative loss à la the paper's figures: (F - F*) / (F_0 - F*).
+pub fn relative(points: &[TracePoint], f_star: f64) -> Vec<(f64, u64, f64)> {
+    let f0 = points.first().map(|p| p.loss).unwrap_or(1.0);
+    let denom = (f0 - f_star).max(1e-30);
+    points
+        .iter()
+        .map(|p| (p.t, p.iteration, ((p.loss - f_star) / denom).max(0.0)))
+        .collect()
+}
+
+/// First timestamp at which the relative loss reaches `target`.
+pub fn time_to_relative(points: &[TracePoint], f_star: f64, target: f64) -> Option<f64> {
+    relative(points, f_star)
+        .iter()
+        .find(|(_, _, r)| *r <= target)
+        .map(|(t, _, _)| *t)
+}
+
+/// F* estimate for an objective (noise floor for MS; 0 fallback).
+pub fn f_star(obj: &Arc<dyn Objective>) -> f64 {
+    obj.f_star_hint()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relative_normalizes_first_point_to_one() {
+        let pts = vec![
+            TracePoint { t: 0.0, iteration: 0, loss: 2.0 },
+            TracePoint { t: 1.0, iteration: 10, loss: 1.0 },
+            TracePoint { t: 2.0, iteration: 20, loss: 0.5 },
+        ];
+        let rel = relative(&pts, 0.5);
+        assert!((rel[0].2 - 1.0).abs() < 1e-12);
+        assert!((rel[1].2 - (0.5 / 1.5)).abs() < 1e-12);
+        assert!(rel[2].2.abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_to_relative_finds_crossing() {
+        let pts = vec![
+            TracePoint { t: 0.0, iteration: 0, loss: 1.0 },
+            TracePoint { t: 5.0, iteration: 10, loss: 0.1 },
+            TracePoint { t: 9.0, iteration: 20, loss: 0.01 },
+        ];
+        assert_eq!(time_to_relative(&pts, 0.0, 0.05), Some(9.0));
+        assert_eq!(time_to_relative(&pts, 0.0, 1e-9), None);
+    }
+
+    #[test]
+    fn builders_produce_paper_dims() {
+        let ms = build_ms(1, 500);
+        assert_eq!(ms.data.d1, 30);
+        assert_eq!(ms.data.d2, 30);
+        let pnn = build_pnn(2, 16, 300);
+        assert_eq!(pnn.data.d, 16);
+    }
+}

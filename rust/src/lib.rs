@@ -1,0 +1,32 @@
+//! # sfw-asyn
+//!
+//! Production reproduction of **"Communication-Efficient Asynchronous
+//! Stochastic Frank-Wolfe over Nuclear-norm Balls"** (Zhuo, Lei, Dimakis,
+//! Caramanis, 2019) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: an asynchronous
+//!   master–slave coordinator whose wire protocol is rank-one update
+//!   vectors (O(D1+D2) per message), with a bounded-staleness delay gate,
+//!   plus every baseline the paper compares against and the Appendix-D
+//!   queuing-model simulator.
+//! * **runtime** — PJRT CPU client executing AOT artifacts built once from
+//!   `python/compile` (L2 JAX graphs calling L1 Pallas kernels); Python is
+//!   never on the request path.
+//!
+//! Entry points: the `sfw` binary (see `main.rs`), `examples/`, and the
+//! benches under `rust/benches/` which regenerate every table and figure
+//! of the paper's evaluation.
+
+pub mod algo;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod objective;
+pub mod runtime;
+pub mod sim;
+pub mod transport;
+pub mod util;

@@ -1,0 +1,286 @@
+//! Dense row-major f32 matrix used throughout the coordinator.
+//!
+//! f32 matches the XLA artifact dtype so the native Rust math path and the
+//! PJRT path are directly comparable in tests.  The hot-loop operations
+//! (rank-one update, scaled add, matvec) are written allocation-free.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. N(0, sigma^2) entries.
+    pub fn randn(rows: usize, cols: usize, sigma: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal_f32() * sigma).collect();
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. U[0, 1) entries.
+    pub fn rand_uniform(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.next_f32()).collect();
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        self.data.iter_mut().for_each(|x| *x *= s);
+    }
+
+    /// self += s * other (elementwise axpy).
+    pub fn axpy(&mut self, s: f32, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += s * b;
+        }
+    }
+
+    /// Frank-Wolfe iterate update:
+    ///   X <- (1 - eta) * X + eta * scale * u v^T
+    /// (the nuclear-ball LMO direction is U* = -theta u v^T, so callers pass
+    /// scale = -theta).  Allocation-free rank-one GER fused with the scaling.
+    pub fn fw_rank_one_update(&mut self, eta: f32, scale: f32, u: &[f32], v: &[f32]) {
+        assert_eq!(u.len(), self.rows);
+        assert_eq!(v.len(), self.cols);
+        let keep = 1.0 - eta;
+        let es = eta * scale;
+        for (r, &ur) in u.iter().enumerate() {
+            let row = self.row_mut(r);
+            let c = es * ur;
+            for (x, &vc) in row.iter_mut().zip(v.iter()) {
+                *x = keep * *x + c * vc;
+            }
+        }
+    }
+
+    /// y = self @ x  (matvec).
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for (r, yr) in y.iter_mut().enumerate() {
+            *yr = dot(self.row(r), x);
+        }
+    }
+
+    /// y = self^T @ x (transposed matvec, cache-friendly row sweep).
+    pub fn tmatvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for (r, &xr) in x.iter().enumerate() {
+            if xr == 0.0 {
+                continue;
+            }
+            for (yc, &a) in y.iter_mut().zip(self.row(r).iter()) {
+                *yc += xr * a;
+            }
+        }
+    }
+
+    /// C = self @ other (naive blocked matmul; substrate-scale sizes only).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut c = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self.at(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let crow = c.row_mut(i);
+                for (cj, &bkj) in crow.iter_mut().zip(brow.iter()) {
+                    *cj += aik * bkj;
+                }
+            }
+        }
+        c
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *t.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        t
+    }
+
+    /// <self, other> = trace(self^T other).
+    pub fn inner(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| *a as f64 * *b as f64)
+            .sum()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    /// max |a_ij|.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+}
+
+/// dot product with f64 accumulation (keeps the native path close to XLA's
+/// f32-with-wide-accumulator semantics on these sizes).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    // 4-way unrolled; LLVM vectorizes this cleanly.
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc += a[j] as f64 * b[j] as f64
+            + a[j + 1] as f64 * b[j + 1] as f64
+            + a[j + 2] as f64 * b[j + 2] as f64
+            + a[j + 3] as f64 * b[j + 3] as f64;
+    }
+    for j in chunks * 4..a.len() {
+        acc += a[j] as f64 * b[j] as f64;
+    }
+    acc as f32
+}
+
+/// ||v||_2 with f64 accumulation.
+#[inline]
+pub fn norm2(v: &[f32]) -> f64 {
+    v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt()
+}
+
+/// v /= ||v||; returns the pre-normalization norm.
+pub fn normalize(v: &mut [f32]) -> f64 {
+    let n = norm2(v);
+    if n > 0.0 {
+        let inv = (1.0 / n) as f32;
+        v.iter_mut().for_each(|x| *x *= inv);
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, v: &[f32]) -> Mat {
+        Mat::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn matvec_and_tmatvec_agree_with_matmul() {
+        let a = mat(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let x = [1., 0., -1.];
+        let mut y = [0.0; 2];
+        a.matvec(&x, &mut y);
+        assert_eq!(y, [-2.0, -2.0]);
+        let u = [1., -1.];
+        let mut z = [0.0; 3];
+        a.tmatvec(&u, &mut z);
+        assert_eq!(z, [-3.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = mat(2, 2, &[1., 2., 3., 4.]);
+        let i = mat(2, 2, &[1., 0., 0., 1.]);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn fw_rank_one_update_matches_dense() {
+        let mut rng = Rng::new(0);
+        let mut x = Mat::randn(4, 3, 1.0, &mut rng);
+        let x0 = x.clone();
+        let u: Vec<f32> = (0..4).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..3).map(|_| rng.normal_f32()).collect();
+        let (eta, theta) = (0.25f32, 2.0f32);
+        x.fw_rank_one_update(eta, -theta, &u, &v);
+        for r in 0..4 {
+            for c in 0..3 {
+                let expect = (1.0 - eta) * x0.at(r, c) - eta * theta * u[r] * v[c];
+                assert!((x.at(r, c) - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn inner_is_trace_inner_product() {
+        let a = mat(2, 2, &[1., 2., 3., 4.]);
+        let b = mat(2, 2, &[5., 6., 7., 8.]);
+        // trace(A^T B) = 1*5+2*6+3*7+4*8 = 70
+        assert_eq!(a.inner(&b), 70.0);
+    }
+
+    #[test]
+    fn frob_norm_matches_definition() {
+        let a = mat(2, 2, &[3., 0., 0., 4.]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_unitizes() {
+        let mut v = vec![3.0, 4.0];
+        let n = normalize(&mut v);
+        assert!((n - 5.0).abs() < 1e-12);
+        assert!((norm2(&v) - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for n in 0..9 {
+            let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let expect: f32 = a.iter().map(|x| x * x).sum();
+            assert_eq!(dot(&a, &a), expect);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense linear-algebra substrate (no external BLAS in the offline build).
+//!
+//! `mat` — row-major f32 matrices with allocation-free hot-loop ops;
+//! `svd` — power-iteration 1-SVD (the FW LMO) + one-sided Jacobi full SVD;
+//! `project` — simplex / l1 / nuclear-ball Euclidean projections (PGD
+//! baseline; FW famously avoids these).
+
+pub mod mat;
+pub mod project;
+pub mod svd;
+
+pub use mat::{dot, norm2, normalize, Mat};
+pub use project::{l1_projection, nuclear_ball_projection, simplex_projection};
+pub use svd::{jacobi_svd, nuclear_norm, power_iteration, power_iteration_rand, Svd1};

@@ -1,0 +1,247 @@
+//! Singular-value machinery: power-iteration 1-SVD (the Frank-Wolfe LMO)
+//! and a one-sided Jacobi full SVD (needed only by the PGD baseline's
+//! nuclear-ball projection and by tests as an exact oracle).
+
+use super::mat::{dot, norm2, normalize, Mat};
+use crate::util::rng::Rng;
+
+/// Result of a leading-singular-triple computation.
+#[derive(Clone, Debug)]
+pub struct Svd1 {
+    pub u: Vec<f32>,
+    pub v: Vec<f32>,
+    pub sigma: f32,
+    pub iters: usize,
+}
+
+/// Leading singular triple of `g` by alternating power iteration.
+///
+/// This is the native-Rust twin of the Pallas/JAX `lmo_power` module: same
+/// algorithm, same normalization placement, so the two paths can be tested
+/// against each other.  `v0` is the start vector (callers randomize it),
+/// `max_iters` caps work, `tol` stops early when the singular-value
+/// estimate stabilizes — the paper solves the 1-SVD "to a practical
+/// precision" (Appendix D cites Allen-Zhu et al. 2017).
+pub fn power_iteration(g: &Mat, v0: &[f32], max_iters: usize, tol: f64) -> Svd1 {
+    let (d1, d2) = (g.rows, g.cols);
+    assert_eq!(v0.len(), d2);
+    let mut v = v0.to_vec();
+    normalize(&mut v);
+    let mut u = vec![0.0f32; d1];
+    g.matvec(&v, &mut u);
+    normalize(&mut u);
+    let mut sigma_prev = 0.0f64;
+    let mut iters = 0;
+    for k in 0..max_iters {
+        iters = k + 1;
+        // u <- G v / ||.||, v <- G^T u / ||.||
+        g.matvec(&v, &mut u);
+        normalize(&mut u);
+        g.tmatvec(&u, &mut v);
+        let sigma = normalize(&mut v);
+        if (sigma - sigma_prev).abs() <= tol * sigma.max(1e-30) {
+            break;
+        }
+        sigma_prev = sigma;
+    }
+    // sigma = u^T G v (>= 0 by construction of the pair)
+    let mut gv = vec![0.0f32; d1];
+    g.matvec(&v, &mut gv);
+    let sigma = dot(&u, &gv);
+    Svd1 { u, v, sigma, iters }
+}
+
+/// Power iteration with a random restart vector drawn from `rng`.
+pub fn power_iteration_rand(g: &Mat, rng: &mut Rng, max_iters: usize, tol: f64) -> Svd1 {
+    let v0 = rng.unit_vector(g.cols);
+    power_iteration(g, &v0, max_iters, tol)
+}
+
+/// Full SVD by one-sided Jacobi: returns (U, sigma, V) with
+/// A = U diag(sigma) V^T, sigma descending, U: (m, r), V: (n, r),
+/// r = min(m, n).  Exact to f32 round-off; O(mn^2) per sweep — used by the
+/// PGD baseline's projection and by tests, never on the SFW hot path.
+pub fn jacobi_svd(a: &Mat) -> (Mat, Vec<f32>, Mat) {
+    // Work on the transpose if wide, so columns <= rows.
+    if a.cols > a.rows {
+        let (v, s, u) = jacobi_svd(&a.transpose());
+        return (u, s, v);
+    }
+    let (m, n) = (a.rows, a.cols);
+    // Column-major copy of A's columns for cache-friendly column rotations.
+    let mut cols: Vec<Vec<f32>> = (0..n)
+        .map(|j| (0..m).map(|i| a.at(i, j)).collect())
+        .collect();
+    let mut v = Mat::zeros(n, n);
+    for j in 0..n {
+        *v.at_mut(j, j) = 1.0;
+    }
+    let eps = 1e-10f64;
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let app = dot64(&cols[p], &cols[p]);
+                let aqq = dot64(&cols[q], &cols[q]);
+                let apq = dot64(&cols[p], &cols[q]);
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) entry of A^T A.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cf, sf) = (c as f32, s as f32);
+                for i in 0..m {
+                    let (xp, xq) = (cols[p][i], cols[q][i]);
+                    cols[p][i] = cf * xp - sf * xq;
+                    cols[q][i] = sf * xp + cf * xq;
+                }
+                for i in 0..n {
+                    let (vp, vq) = (v.at(i, p), v.at(i, q));
+                    *v.at_mut(i, p) = cf * vp - sf * vq;
+                    *v.at_mut(i, q) = sf * vp + cf * vq;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+    // Singular values = column norms; U = normalized columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = cols.iter().map(|c| norm2(c)).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+    let mut u = Mat::zeros(m, n);
+    let mut sigma = vec![0.0f32; n];
+    let mut vperm = Mat::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        sigma[new_j] = norms[old_j] as f32;
+        let inv = if norms[old_j] > 0.0 { 1.0 / norms[old_j] } else { 0.0 };
+        for i in 0..m {
+            *u.at_mut(i, new_j) = (cols[old_j][i] as f64 * inv) as f32;
+        }
+        for i in 0..n {
+            *vperm.at_mut(i, new_j) = v.at(i, old_j);
+        }
+    }
+    (u, sigma, vperm)
+}
+
+/// Nuclear norm ||A||_* = sum of singular values (exact, via Jacobi SVD).
+pub fn nuclear_norm(a: &Mat) -> f64 {
+    let (_, s, _) = jacobi_svd(a);
+    s.iter().map(|x| *x as f64).sum()
+}
+
+fn dot64(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reconstruct(u: &Mat, s: &[f32], v: &Mat) -> Mat {
+        let mut us = u.clone();
+        for j in 0..s.len() {
+            for i in 0..us.rows {
+                *us.at_mut(i, j) *= s[j];
+            }
+        }
+        us.matmul(&v.transpose())
+    }
+
+    #[test]
+    fn jacobi_svd_reconstructs() {
+        let mut rng = Rng::new(11);
+        for (m, n) in [(5, 3), (3, 5), (8, 8), (30, 30)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let (u, s, v) = jacobi_svd(&a);
+            let r = reconstruct(&u, &s, &v);
+            let err = {
+                let mut d = a.clone();
+                d.axpy(-1.0, &r);
+                d.frob_norm() / a.frob_norm()
+            };
+            assert!(err < 1e-5, "({m},{n}) err {err}");
+            // descending order
+            for w in s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_svd_orthonormal_factors() {
+        let mut rng = Rng::new(12);
+        let a = Mat::randn(10, 6, 1.0, &mut rng);
+        let (u, _, v) = jacobi_svd(&a);
+        let utu = u.transpose().matmul(&u);
+        let vtv = v.transpose().matmul(&v);
+        for i in 0..6 {
+            for j in 0..6 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((utu.at(i, j) - expect).abs() < 1e-4, "UtU");
+                assert!((vtv.at(i, j) - expect).abs() < 1e-4, "VtV");
+            }
+        }
+    }
+
+    #[test]
+    fn power_iteration_matches_jacobi_top_singular_value() {
+        let mut rng = Rng::new(13);
+        for (m, n) in [(6, 4), (30, 30), (20, 50)] {
+            // boost the top direction so convergence is fast & unambiguous
+            let mut a = Mat::randn(m, n, 1.0, &mut rng);
+            let u = rng.unit_vector(m);
+            let v = rng.unit_vector(n);
+            let boost = 4.0 * ((m * n) as f32).sqrt();
+            for i in 0..m {
+                for j in 0..n {
+                    *a.at_mut(i, j) += boost * u[i] * v[j];
+                }
+            }
+            let (_, s, _) = jacobi_svd(&a);
+            let p = power_iteration_rand(&a, &mut rng, 200, 1e-10);
+            assert!(
+                (p.sigma - s[0]).abs() / s[0] < 1e-3,
+                "({m},{n}): power {} vs jacobi {}",
+                p.sigma,
+                s[0]
+            );
+            assert!((norm2(&p.u) - 1.0).abs() < 1e-5);
+            assert!((norm2(&p.v) - 1.0).abs() < 1e-5);
+            assert!(p.sigma >= 0.0);
+        }
+    }
+
+    #[test]
+    fn power_iteration_rank_one_is_exact() {
+        let mut rng = Rng::new(14);
+        let u = rng.unit_vector(7);
+        let v = rng.unit_vector(5);
+        let mut a = Mat::zeros(7, 5);
+        for i in 0..7 {
+            for j in 0..5 {
+                *a.at_mut(i, j) = 3.5 * u[i] * v[j];
+            }
+        }
+        let p = power_iteration_rand(&a, &mut rng, 50, 1e-12);
+        assert!((p.sigma - 3.5).abs() < 1e-4);
+        let align: f32 = u.iter().zip(&p.u).map(|(a, b)| a * b).sum();
+        assert!(align.abs() > 0.9999);
+    }
+
+    #[test]
+    fn nuclear_norm_of_diag() {
+        let mut a = Mat::zeros(3, 3);
+        *a.at_mut(0, 0) = 2.0;
+        *a.at_mut(1, 1) = -1.0; // singular value is |.|
+        *a.at_mut(2, 2) = 0.5;
+        assert!((nuclear_norm(&a) - 3.5).abs() < 1e-5);
+    }
+}

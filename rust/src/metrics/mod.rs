@@ -1,0 +1,191 @@
+//! Metrics: atomic counters for the quantities the paper reports
+//! (stochastic gradient evaluations, linear-optimization calls — Table 1 —
+//! and communication bytes — §3 "Communication Cost of SFW-asyn"), plus a
+//! time-stamped loss trace used to regenerate Figures 4–7.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shared, thread-safe experiment counters.
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// # stochastic gradient evaluations (one per sampled index, Table 1).
+    pub grad_evals: AtomicU64,
+    /// # linear optimizations / 1-SVDs (Table 1).
+    pub lmo_calls: AtomicU64,
+    /// Master iterations completed (t_m).
+    pub iterations: AtomicU64,
+    /// Updates dropped by the delay gate (t_m - t_w > tau).
+    pub dropped_updates: AtomicU64,
+    /// Bytes worker -> master.
+    pub bytes_up: AtomicU64,
+    /// Bytes master -> worker.
+    pub bytes_down: AtomicU64,
+    /// Messages worker -> master.
+    pub msgs_up: AtomicU64,
+    /// Messages master -> worker.
+    pub msgs_down: AtomicU64,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_grad_evals(&self, n: u64) {
+        self.grad_evals.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn add_lmo(&self) {
+        self.lmo_calls.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add_iteration(&self) {
+        self.iterations.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add_dropped(&self) {
+        self.dropped_updates.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add_up(&self, bytes: u64) {
+        self.bytes_up.fetch_add(bytes, Ordering::Relaxed);
+        self.msgs_up.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add_down(&self, bytes: u64) {
+        self.bytes_down.fetch_add(bytes, Ordering::Relaxed);
+        self.msgs_down.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            grad_evals: self.grad_evals.load(Ordering::Relaxed),
+            lmo_calls: self.lmo_calls.load(Ordering::Relaxed),
+            iterations: self.iterations.load(Ordering::Relaxed),
+            dropped_updates: self.dropped_updates.load(Ordering::Relaxed),
+            bytes_up: self.bytes_up.load(Ordering::Relaxed),
+            bytes_down: self.bytes_down.load(Ordering::Relaxed),
+            msgs_up: self.msgs_up.load(Ordering::Relaxed),
+            msgs_down: self.msgs_down.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub grad_evals: u64,
+    pub lmo_calls: u64,
+    pub iterations: u64,
+    pub dropped_updates: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub msgs_up: u64,
+    pub msgs_down: u64,
+}
+
+impl CounterSnapshot {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_up + self.bytes_down
+    }
+}
+
+/// One point of a convergence curve: (time, master iteration, loss).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TracePoint {
+    /// Seconds since trace start (wall clock) OR simulated time units.
+    pub t: f64,
+    pub iteration: u64,
+    pub loss: f64,
+}
+
+/// Thread-safe, time-stamped loss trace.
+#[derive(Debug)]
+pub struct LossTrace {
+    start: Instant,
+    points: Mutex<Vec<TracePoint>>,
+}
+
+impl Default for LossTrace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LossTrace {
+    pub fn new() -> Self {
+        LossTrace { start: Instant::now(), points: Mutex::new(Vec::new()) }
+    }
+
+    /// Seconds since trace start (for snapshot timestamping).
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Record with wall-clock timestamp.
+    pub fn record(&self, iteration: u64, loss: f64) {
+        let t = self.start.elapsed().as_secs_f64();
+        self.points.lock().unwrap().push(TracePoint { t, iteration, loss });
+    }
+
+    /// Record with an explicit (e.g. simulated) timestamp.
+    pub fn record_at(&self, t: f64, iteration: u64, loss: f64) {
+        self.points.lock().unwrap().push(TracePoint { t, iteration, loss });
+    }
+
+    pub fn points(&self) -> Vec<TracePoint> {
+        self.points.lock().unwrap().clone()
+    }
+
+    /// First time at which the loss reaches `target` (for Fig 5/7 speedups).
+    pub fn time_to_target(&self, target: f64) -> Option<f64> {
+        self.points
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|p| p.loss <= target)
+            .map(|p| p.t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counters_accumulate_across_threads() {
+        let c = Arc::new(Counters::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.add_grad_evals(2);
+                        c.add_lmo();
+                        c.add_up(10);
+                        c.add_down(20);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let s = c.snapshot();
+        assert_eq!(s.grad_evals, 8000);
+        assert_eq!(s.lmo_calls, 4000);
+        assert_eq!(s.bytes_up, 40_000);
+        assert_eq!(s.bytes_down, 80_000);
+        assert_eq!(s.msgs_up, 4000);
+        assert_eq!(s.msgs_down, 4000);
+        assert_eq!(s.total_bytes(), 120_000);
+    }
+
+    #[test]
+    fn trace_time_to_target() {
+        let t = LossTrace::new();
+        t.record_at(1.0, 1, 0.5);
+        t.record_at(2.0, 2, 0.1);
+        t.record_at(3.0, 3, 0.05);
+        assert_eq!(t.time_to_target(0.1), Some(2.0));
+        assert_eq!(t.time_to_target(0.01), None);
+        assert_eq!(t.points().len(), 3);
+    }
+}

@@ -1,0 +1,215 @@
+//! The `Objective` abstraction the whole algorithm family runs against:
+//! problem (1) of the paper, `min_{||X||_* <= theta} (1/N) sum_i f_i(X)`.
+//!
+//! Implementations provide minibatch SUM-gradients over explicit index sets
+//! (the worker-side computation of Algorithms 1–3) and full-objective
+//! evaluation (the master-side reporting path).  Both paper workloads have
+//! native Rust implementations here; the PJRT/AOT path in `runtime/` must
+//! agree with these to f32 tolerance (enforced by integration tests).
+
+use crate::data::{MatrixSensingData, PnnData};
+use crate::linalg::Mat;
+
+pub trait Objective: Send + Sync {
+    /// (D1, D2) of the matrix variable.
+    fn dims(&self) -> (usize, usize);
+    /// Number of component functions N.
+    fn n(&self) -> usize;
+    /// Nuclear-ball radius theta.
+    fn theta(&self) -> f32;
+    /// Accumulate the SUM gradient of the sampled components into `out`
+    /// (which is zeroed first); returns the SUM loss over the batch.
+    /// Divide both by `idx.len()` for the minibatch mean.
+    fn grad_sum(&self, x: &Mat, idx: &[usize], out: &mut Mat) -> f64;
+    /// Full objective F(X).
+    fn loss_full(&self, x: &Mat) -> f64;
+    /// Best known objective value (for relative-error reporting).
+    fn f_star_hint(&self) -> f64 {
+        0.0
+    }
+    /// Human-readable name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+/// Matrix sensing with nuclear-ball radius theta (paper uses theta = 1).
+pub struct MatrixSensing {
+    pub data: MatrixSensingData,
+    pub theta: f32,
+}
+
+impl MatrixSensing {
+    pub fn new(data: MatrixSensingData, theta: f32) -> Self {
+        MatrixSensing { data, theta }
+    }
+}
+
+impl Objective for MatrixSensing {
+    fn dims(&self) -> (usize, usize) {
+        (self.data.d1, self.data.d2)
+    }
+    fn n(&self) -> usize {
+        self.data.n
+    }
+    fn theta(&self) -> f32 {
+        self.theta
+    }
+
+    fn grad_sum(&self, x: &Mat, idx: &[usize], out: &mut Mat) -> f64 {
+        debug_assert_eq!((x.rows, x.cols), (self.data.d1, self.data.d2));
+        out.fill(0.0);
+        let xf = &x.data;
+        let g = &mut out.data;
+        let mut loss = 0.0f64;
+        for &i in idx {
+            let row = self.data.af.row(i);
+            let r = crate::linalg::dot(row, xf) - self.data.y[i];
+            loss += (r as f64).powi(2);
+            let c = 2.0 * r;
+            for (gk, &ak) in g.iter_mut().zip(row.iter()) {
+                *gk += c * ak;
+            }
+        }
+        loss
+    }
+
+    fn loss_full(&self, x: &Mat) -> f64 {
+        self.data.loss_full(x)
+    }
+
+    fn f_star_hint(&self) -> f64 {
+        self.data.f_star_hint
+    }
+
+    fn name(&self) -> &'static str {
+        "matrix_sensing"
+    }
+}
+
+/// Two-layer quadratic-activation PNN with smooth hinge loss.
+pub struct Pnn {
+    pub data: PnnData,
+    pub theta: f32,
+}
+
+impl Pnn {
+    pub fn new(data: PnnData, theta: f32) -> Self {
+        Pnn { data, theta }
+    }
+}
+
+impl Objective for Pnn {
+    fn dims(&self) -> (usize, usize) {
+        (self.data.d, self.data.d)
+    }
+    fn n(&self) -> usize {
+        self.data.n
+    }
+    fn theta(&self) -> f32 {
+        self.theta
+    }
+
+    fn grad_sum(&self, x: &Mat, idx: &[usize], out: &mut Mat) -> f64 {
+        let d = self.data.d;
+        debug_assert_eq!((x.rows, x.cols), (d, d));
+        out.fill(0.0);
+        let mut w = vec![0.0f32; d];
+        let mut loss = 0.0f64;
+        for &i in idx {
+            let a = self.data.a.row(i);
+            let yi = self.data.y[i];
+            x.matvec(a, &mut w);
+            let z = crate::linalg::dot(a, &w);
+            let ty = yi * z;
+            loss += PnnData::smooth_hinge(ty) as f64;
+            let g = PnnData::smooth_hinge_dt(ty) * yi;
+            if g == 0.0 {
+                continue;
+            }
+            // out += g * a a^T
+            for (r, &ar) in a.iter().enumerate() {
+                let c = g * ar;
+                if c == 0.0 {
+                    continue;
+                }
+                let row = out.row_mut(r);
+                for (o, &ac) in row.iter_mut().zip(a.iter()) {
+                    *o += c * ac;
+                }
+            }
+        }
+        loss
+    }
+
+    fn loss_full(&self, x: &Mat) -> f64 {
+        self.data.loss_full(x)
+    }
+
+    fn name(&self) -> &'static str {
+        "pnn"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix_sensing::MsParams;
+    use crate::data::pnn::PnnParams;
+    use crate::util::rng::Rng;
+
+    fn fd_check<O: Objective>(obj: &O, x: &Mat, idx: &[usize], probes: &[(usize, usize)]) {
+        let (d1, d2) = obj.dims();
+        let mut g = Mat::zeros(d1, d2);
+        let loss0 = obj.grad_sum(x, idx, &mut g);
+        let _ = loss0;
+        let eps = 1e-3f32;
+        for &(i, j) in probes {
+            let mut xp = x.clone();
+            *xp.at_mut(i, j) += eps;
+            let mut xm = x.clone();
+            *xm.at_mut(i, j) -= eps;
+            let mut scratch = Mat::zeros(d1, d2);
+            let lp = obj.grad_sum(&xp, idx, &mut scratch);
+            let lm = obj.grad_sum(&xm, idx, &mut scratch);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let an = g.at(i, j) as f64;
+            assert!(
+                (fd - an).abs() < 2e-1 * (1.0 + an.abs()),
+                "{} ({i},{j}): fd {fd} vs analytic {an}",
+                obj.name()
+            );
+        }
+    }
+
+    #[test]
+    fn ms_grad_is_true_gradient() {
+        let mut rng = Rng::new(31);
+        let p = MsParams { d1: 5, d2: 4, rank: 2, n: 200, noise_std: 0.1 };
+        let obj = MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0);
+        let x = Mat::randn(5, 4, 0.2, &mut rng);
+        let idx: Vec<usize> = (0..64).map(|_| rng.next_below(200)).collect();
+        fd_check(&obj, &x, &idx, &[(0, 0), (2, 3), (4, 1)]);
+    }
+
+    #[test]
+    fn pnn_grad_is_true_gradient() {
+        let mut rng = Rng::new(32);
+        let p = PnnParams { d: 6, n: 200, teacher_rank: 2, mixture_components: 3 };
+        let obj = Pnn::new(PnnData::generate(&p, &mut rng), 1.0);
+        let x = Mat::randn(6, 6, 0.1, &mut rng);
+        let idx: Vec<usize> = (0..64).map(|_| rng.next_below(200)).collect();
+        fd_check(&obj, &x, &idx, &[(0, 0), (1, 4), (5, 5)]);
+    }
+
+    #[test]
+    fn full_batch_grad_sum_equals_loss_full_consistency() {
+        // grad_sum over ALL indices must return N * loss_full as its loss.
+        let mut rng = Rng::new(33);
+        let p = MsParams { d1: 4, d2: 4, rank: 1, n: 100, noise_std: 0.1 };
+        let obj = MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0);
+        let x = Mat::randn(4, 4, 0.3, &mut rng);
+        let idx: Vec<usize> = (0..100).collect();
+        let mut g = Mat::zeros(4, 4);
+        let loss_sum = obj.grad_sum(&x, &idx, &mut g);
+        assert!((loss_sum / 100.0 - obj.loss_full(&x)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,324 @@
+//! `PjrtEngine`: the production `StepEngine` that executes the AOT
+//! JAX/Pallas artifacts via PJRT (one fused gradient->LMO module call per
+//! worker step — Python-free request path).
+//!
+//! Minibatches are gathered into a contiguous padded buffer for the
+//! smallest artifact bucket that fits; padding rows are all-zero (with
+//! y = 0), which the kernels treat as exact no-ops because every module
+//! returns SUM gradients/losses (see python/compile/kernels/ref.py).
+
+use std::sync::Arc;
+
+use crate::algo::engine::{StepEngine, StepOut};
+use crate::linalg::{Mat, Svd1};
+use crate::objective::{MatrixSensing, Objective, Pnn};
+use crate::runtime::{literal_f32, PjrtRuntime};
+use crate::util::rng::Rng;
+
+/// Which workload family the engine drives (decides artifact names and
+/// row-gather layout).
+#[derive(Clone)]
+pub enum Workload {
+    Ms(Arc<MatrixSensing>),
+    Pnn(Arc<Pnn>),
+}
+
+impl Workload {
+    fn objective(&self) -> Arc<dyn Objective> {
+        match self {
+            Workload::Ms(o) => o.clone(),
+            Workload::Pnn(o) => o.clone(),
+        }
+    }
+
+    fn feature_row(&self, i: usize) -> &[f32] {
+        match self {
+            Workload::Ms(o) => o.data.af.row(i),
+            Workload::Pnn(o) => o.data.a.row(i),
+        }
+    }
+
+    fn label(&self, i: usize) -> f32 {
+        match self {
+            Workload::Ms(o) => o.data.y[i],
+            Workload::Pnn(o) => o.data.y[i],
+        }
+    }
+
+    fn prefix(&self) -> &'static str {
+        match self {
+            Workload::Ms(_) => "ms",
+            Workload::Pnn(_) => "pnn",
+        }
+    }
+
+    fn row_len(&self) -> usize {
+        match self {
+            Workload::Ms(o) => o.data.d1 * o.data.d2,
+            Workload::Pnn(o) => o.data.d,
+        }
+    }
+}
+
+pub struct PjrtEngine {
+    rt: Arc<PjrtRuntime>,
+    workload: Workload,
+    obj: Arc<dyn Objective>,
+    rng: Rng,
+    /// Reused gather buffers (allocation-free hot path after warmup).
+    feat_buf: Vec<f32>,
+    y_buf: Vec<f32>,
+    bucket_key: String,
+    /// Device-resident (padded) dataset for the gather-based `*_stepi_*`
+    /// modules: uploaded once, reused every step.  `None` until the first
+    /// step; falls back to the upload-per-call path when the dataset
+    /// exceeds the artifact's baked `*_n_max`.
+    resident: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    use_resident: bool,
+    idx_buf: Vec<i32>,
+}
+
+// SAFETY: PJRT buffers/executables are thread-safe per the PJRT C API
+// contract (jax drives TfrtCpuClient concurrently from many threads); the
+// `xla` wrappers are !Send only because they hold raw pointers.  Each
+// engine is owned by exactly one worker thread.
+unsafe impl Send for PjrtEngine {}
+
+impl PjrtEngine {
+    pub fn new(rt: Arc<PjrtRuntime>, workload: Workload, seed: u64) -> Self {
+        let obj = workload.objective();
+        let bucket_key = format!("{}_buckets", workload.prefix());
+        PjrtEngine {
+            rt,
+            workload,
+            obj,
+            rng: Rng::new(seed),
+            feat_buf: Vec::new(),
+            y_buf: Vec::new(),
+            bucket_key,
+            resident: None,
+            use_resident: true,
+            idx_buf: Vec::new(),
+        }
+    }
+
+    /// Disable the device-resident gather path (upload the batch per call).
+    pub fn without_resident_dataset(mut self) -> Self {
+        self.use_resident = false;
+        self
+    }
+
+    /// Upload the padded dataset once: N_max + 1 rows, last row zero
+    /// (the padding target for idx), y = 0 there.
+    fn ensure_resident(&mut self) -> Option<()> {
+        if self.resident.is_some() {
+            return Some(());
+        }
+        if !self.use_resident {
+            return None;
+        }
+        let n_max_key = format!("{}_n_max", self.workload.prefix());
+        let n_max = self.rt.manifest().param_usize(&n_max_key).ok()?;
+        let n = self.obj.n();
+        if n > n_max {
+            self.use_resident = false; // dataset too big for the artifact
+            return None;
+        }
+        let k = self.workload.row_len();
+        let mut feats = vec![0.0f32; (n_max + 1) * k];
+        let mut ys = vec![0.0f32; n_max + 1];
+        for i in 0..n {
+            feats[i * k..(i + 1) * k].copy_from_slice(self.workload.feature_row(i));
+            ys[i] = self.workload.label(i);
+        }
+        let fb = self.rt.upload_f32(&feats, &[n_max + 1, k]).ok()?;
+        let yb = self.rt.upload_f32(&ys, &[n_max + 1]).ok()?;
+        self.resident = Some((fb, yb));
+        Some(())
+    }
+
+    /// Gather-free step through the `*_stepi_*` module (device-resident
+    /// dataset; per-call upload = idx + x + v0, a few KB).
+    fn step_resident(&mut self, x: &Mat, idx: &[usize]) -> Option<StepOut> {
+        self.ensure_resident()?;
+        let b = self.rt.manifest().bucket_for(&self.bucket_key, idx.len()).ok()?;
+        if idx.len() > b {
+            return None;
+        }
+        let n_max_key = format!("{}_n_max", self.workload.prefix());
+        let pad_row = self.rt.manifest().param_usize(&n_max_key).ok()? as i32;
+        self.idx_buf.clear();
+        self.idx_buf.extend(idx.iter().map(|&i| i as i32));
+        self.idx_buf.resize(b, pad_row);
+        let (_, d2) = self.x_dims();
+        let v0 = self.rng.unit_vector(d2);
+        let name = format!("{}_stepi_m{}", self.workload.prefix(), b);
+        let idx_b = self.rt.upload_i32(&self.idx_buf, &[b]).ok()?;
+        let x_dims: Vec<usize> = match &self.workload {
+            Workload::Ms(_) => vec![x.rows * x.cols],
+            Workload::Pnn(_) => vec![x.rows, x.cols],
+        };
+        let x_b = self.rt.upload_f32(&x.data, &x_dims).ok()?;
+        let v0_b = self.rt.upload_f32(&v0, &[d2]).ok()?;
+        let (fb, yb) = self.resident.as_ref().unwrap();
+        let out = self
+            .rt
+            .run_f32_buffers(&name, &[fb, yb, &idx_b, &x_b, &v0_b])
+            .ok()?;
+        debug_assert_eq!(out.len(), 4);
+        Some(StepOut {
+            u: out[0].clone(),
+            v: out[1].clone(),
+            sigma: out[2][0],
+            loss_sum: out[3][0] as f64,
+            m: idx.len(),
+        })
+    }
+
+    /// Gather + zero-pad the minibatch rows into the reused buffers;
+    /// returns the bucket size used.
+    fn gather(&mut self, idx: &[usize]) -> usize {
+        let b = self
+            .rt
+            .manifest()
+            .bucket_for(&self.bucket_key, idx.len())
+            .expect("manifest buckets");
+        assert!(
+            idx.len() <= b,
+            "batch {} exceeds largest artifact bucket {b}; cap the schedule",
+            idx.len()
+        );
+        let k = self.workload.row_len();
+        self.feat_buf.clear();
+        self.feat_buf.resize(b * k, 0.0);
+        self.y_buf.clear();
+        self.y_buf.resize(b, 0.0);
+        for (slot, &i) in idx.iter().enumerate() {
+            self.feat_buf[slot * k..(slot + 1) * k].copy_from_slice(self.workload.feature_row(i));
+            self.y_buf[slot] = self.workload.label(i);
+        }
+        b
+    }
+
+    fn x_dims(&self) -> (usize, usize) {
+        self.obj.dims()
+    }
+
+    /// Flatten X in the layout each module family expects: MS modules take
+    /// vec(X) (K,), PNN modules take X (D, D).
+    fn x_literal(&self, x: &Mat) -> anyhow::Result<xla::Literal> {
+        match &self.workload {
+            Workload::Ms(_) => literal_f32(&x.data, &[(x.rows * x.cols) as i64]),
+            Workload::Pnn(_) => literal_f32(&x.data, &[x.rows as i64, x.cols as i64]),
+        }
+    }
+}
+
+impl StepEngine for PjrtEngine {
+    fn step(&mut self, x: &Mat, idx: &[usize]) -> StepOut {
+        // fast path: device-resident dataset + i32 index upload
+        if let Some(out) = self.step_resident(x, idx) {
+            return out;
+        }
+        let b = self.gather(idx);
+        let k = self.workload.row_len();
+        let (_, d2) = self.x_dims();
+        let v0 = self.rng.unit_vector(d2);
+        let name = format!("{}_step_m{}", self.workload.prefix(), b);
+        let feats = literal_f32(&self.feat_buf, &[b as i64, k as i64]).expect("feat literal");
+        let y = literal_f32(&self.y_buf, &[b as i64]).expect("y literal");
+        let xl = self.x_literal(x).expect("x literal");
+        let v0l = literal_f32(&v0, &[d2 as i64]).expect("v0 literal");
+        let out = self
+            .rt
+            .run_f32(&name, &[feats, y, xl, v0l])
+            .unwrap_or_else(|e| panic!("PJRT {name}: {e}"));
+        debug_assert_eq!(out.len(), 4, "{name} must return (u, v, sigma, loss)");
+        StepOut {
+            u: out[0].clone(),
+            v: out[1].clone(),
+            sigma: out[2][0],
+            loss_sum: out[3][0] as f64,
+            m: idx.len(),
+        }
+    }
+
+    fn grad_sum(&mut self, x: &Mat, idx: &[usize], out: &mut Mat) -> f64 {
+        let b = self.gather(idx);
+        let k = self.workload.row_len();
+        let name = format!("{}_grad_m{}", self.workload.prefix(), b);
+        let feats = literal_f32(&self.feat_buf, &[b as i64, k as i64]).expect("feat literal");
+        let y = literal_f32(&self.y_buf, &[b as i64]).expect("y literal");
+        let xl = self.x_literal(x).expect("x literal");
+        let res = self
+            .rt
+            .run_f32(&name, &[feats, y, xl])
+            .unwrap_or_else(|e| panic!("PJRT {name}: {e}"));
+        debug_assert_eq!(res.len(), 2);
+        out.data.copy_from_slice(&res[0]);
+        res[1][0] as f64
+    }
+
+    fn lmo(&mut self, g: &Mat) -> Svd1 {
+        let name = format!("lmo_{}", self.workload.prefix());
+        let v0 = self.rng.unit_vector(g.cols);
+        let gl = literal_f32(&g.data, &[g.rows as i64, g.cols as i64]).expect("g literal");
+        let v0l = literal_f32(&v0, &[g.cols as i64]).expect("v0 literal");
+        let out = self
+            .rt
+            .run_f32(&name, &[gl, v0l])
+            .unwrap_or_else(|e| panic!("PJRT {name}: {e}"));
+        debug_assert_eq!(out.len(), 3);
+        Svd1 {
+            u: out[0].clone(),
+            v: out[1].clone(),
+            sigma: out[2][0],
+            iters: self.rt.manifest().param_usize("power_iters").unwrap_or(0),
+        }
+    }
+
+    fn objective(&self) -> &Arc<dyn Objective> {
+        &self.obj
+    }
+}
+
+/// Chunked full-objective evaluation through the `*_loss_m*` artifacts
+/// (used by the e2e example to keep even evaluation Python-free and
+/// XLA-accelerated).
+pub fn loss_full_pjrt(rt: &PjrtRuntime, workload: &Workload, x: &Mat) -> anyhow::Result<f64> {
+    let prefix = workload.prefix();
+    let buckets = rt.manifest().param_list(&format!("{prefix}_buckets"))?;
+    let chunk = *buckets.iter().max().unwrap();
+    let name = format!("{prefix}_loss_m{chunk}");
+    let obj = workload.objective();
+    let n = obj.n();
+    let k = workload.row_len();
+    let x_dims: Vec<i64> = match workload {
+        Workload::Ms(_) => vec![(x.rows * x.cols) as i64],
+        Workload::Pnn(_) => vec![x.rows as i64, x.cols as i64],
+    };
+    let mut total = 0.0f64;
+    let mut feat = vec![0.0f32; chunk * k];
+    let mut yv = vec![0.0f32; chunk];
+    let mut i = 0usize;
+    while i < n {
+        let take = chunk.min(n - i);
+        feat.iter_mut().for_each(|v| *v = 0.0);
+        yv.iter_mut().for_each(|v| *v = 0.0);
+        for s in 0..take {
+            feat[s * k..(s + 1) * k].copy_from_slice(workload.feature_row(i + s));
+            yv[s] = workload.label(i + s);
+        }
+        let out = rt.run_f32(
+            &name,
+            &[
+                literal_f32(&feat, &[chunk as i64, k as i64])?,
+                literal_f32(&yv, &[chunk as i64])?,
+                literal_f32(&x.data, &x_dims)?,
+            ],
+        )?;
+        total += out[0][0] as f64;
+        i += take;
+    }
+    Ok(total / n as f64)
+}

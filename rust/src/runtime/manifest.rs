@@ -1,0 +1,147 @@
+//! Artifact manifest parsing (`artifacts/manifest.txt`, written by
+//! `python/compile/aot.py`): `param k v` lines carry the shape globals
+//! (dims, buckets, power iterations), `module <name> file=... inputs=...`
+//! lines index the HLO text files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub params: BTreeMap<String, String>,
+    /// module name -> file name
+    pub modules: BTreeMap<String, String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("malformed manifest line {0}: '{1}'")]
+    Malformed(usize, String),
+    #[error("missing param '{0}'")]
+    MissingParam(String),
+    #[error("missing module '{0}' (available: {1})")]
+    MissingModule(String, String),
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        let mut params = BTreeMap::new();
+        let mut modules = BTreeMap::new();
+        for (no, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("param") => {
+                    let k = it
+                        .next()
+                        .ok_or_else(|| ManifestError::Malformed(no + 1, line.into()))?;
+                    let v = it
+                        .next()
+                        .ok_or_else(|| ManifestError::Malformed(no + 1, line.into()))?;
+                    params.insert(k.to_string(), v.to_string());
+                }
+                Some("module") => {
+                    let name = it
+                        .next()
+                        .ok_or_else(|| ManifestError::Malformed(no + 1, line.into()))?;
+                    let file = it
+                        .find(|tok| tok.starts_with("file="))
+                        .map(|tok| tok.trim_start_matches("file=").to_string())
+                        .unwrap_or_else(|| format!("{name}.hlo.txt"));
+                    modules.insert(name.to_string(), file);
+                }
+                _ => return Err(ManifestError::Malformed(no + 1, line.into())),
+            }
+        }
+        Ok(Manifest { dir, params, modules })
+    }
+
+    pub fn param_usize(&self, key: &str) -> Result<usize, ManifestError> {
+        self.params
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| ManifestError::MissingParam(key.to_string()))
+    }
+
+    pub fn param_list(&self, key: &str) -> Result<Vec<usize>, ManifestError> {
+        let v = self
+            .params
+            .get(key)
+            .ok_or_else(|| ManifestError::MissingParam(key.to_string()))?;
+        Ok(v.split(',').filter_map(|s| s.parse().ok()).collect())
+    }
+
+    pub fn module_path(&self, name: &str) -> Result<PathBuf, ManifestError> {
+        let file = self.modules.get(name).ok_or_else(|| {
+            ManifestError::MissingModule(
+                name.to_string(),
+                self.modules.keys().cloned().collect::<Vec<_>>().join(","),
+            )
+        })?;
+        Ok(self.dir.join(file))
+    }
+
+    /// Smallest bucket >= m from `key` (e.g. "ms_buckets"); falls back to
+    /// the largest bucket when m exceeds all (callers split such batches).
+    pub fn bucket_for(&self, key: &str, m: usize) -> Result<usize, ManifestError> {
+        let mut buckets = self.param_list(key)?;
+        buckets.sort_unstable();
+        Ok(*buckets
+            .iter()
+            .find(|&&b| b >= m)
+            .unwrap_or(buckets.last().expect("empty bucket list")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, text: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), text).unwrap();
+    }
+
+    #[test]
+    fn parses_params_and_modules() {
+        let dir = std::env::temp_dir().join("sfw_manifest_test1");
+        write_manifest(
+            &dir,
+            "# comment\nparam ms_d1 30\nparam ms_buckets 128,512,2048\nmodule ms_step_m128 file=ms_step_m128.hlo.txt inputs=128x900,128,900,30\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.param_usize("ms_d1").unwrap(), 30);
+        assert_eq!(m.param_list("ms_buckets").unwrap(), vec![128, 512, 2048]);
+        assert!(m
+            .module_path("ms_step_m128")
+            .unwrap()
+            .ends_with("ms_step_m128.hlo.txt"));
+        assert!(m.module_path("nope").is_err());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let dir = std::env::temp_dir().join("sfw_manifest_test2");
+        write_manifest(&dir, "param b 128,512,2048\n");
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.bucket_for("b", 1).unwrap(), 128);
+        assert_eq!(m.bucket_for("b", 128).unwrap(), 128);
+        assert_eq!(m.bucket_for("b", 129).unwrap(), 512);
+        assert_eq!(m.bucket_for("b", 4000).unwrap(), 2048); // clamp to max
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("sfw_manifest_test3");
+        write_manifest(&dir, "bogus line here\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client from
+//! the L3 hot path.  After `make artifacts`, the Rust binary is fully
+//! self-contained — Python never runs at request time.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! serializes protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{loss_full_pjrt, PjrtEngine, Workload};
+pub use manifest::Manifest;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Shared PJRT state: one CPU client + a lazily compiled executable cache.
+///
+/// SAFETY of the `Send + Sync` impls: the PJRT C API requires clients,
+/// loaded executables and buffers to be thread-safe (concurrent
+/// `Execute`/`BufferFromHostBuffer` calls are part of the contract — jax
+/// itself drives TfrtCpuClient from many threads).  The `xla` crate
+/// wrappers are `!Send` only because they hold raw pointers.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: Mutex<HashMap<String, &'static xla::PjRtLoadedExecutable>>,
+}
+
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and index the artifact directory.
+    pub fn new(artifacts_dir: &str) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client, manifest, exes: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling and caching on first use) the executable for a
+    /// manifest module.  The leak is intentional: executables live for the
+    /// process lifetime and handing out `&'static` keeps the hot path free
+    /// of locks and refcounts after warmup.
+    pub fn executable(&self, name: &str) -> anyhow::Result<&'static xla::PjRtLoadedExecutable> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
+            return Ok(e);
+        }
+        let path = self.manifest.module_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe: &'static _ = Box::leak(Box::new(self.client.compile(&comp)?));
+        self.exes.lock().unwrap().insert(name.to_string(), exe);
+        Ok(exe)
+    }
+
+    /// Execute a module on f32 literals, returning the flattened tuple of
+    /// f32 output vectors.
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // Multi-output modules come back as a tuple; single-output modules
+        // as a bare array (the "hlo"-dialect lowering does not wrap them).
+        let parts = match lit.shape()? {
+            xla::Shape::Tuple(_) => lit.to_tuple()?,
+            _ => vec![lit],
+        };
+        parts
+            .iter()
+            .map(|p| Ok(p.to_vec::<f32>()?))
+            .collect::<anyhow::Result<Vec<_>>>()
+    }
+}
+
+impl PjrtRuntime {
+    /// Upload a host f32 array as a device-resident buffer (done ONCE per
+    /// dataset by the gather-based engine path).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    /// Upload a host i32 array (per-call index vectors — a few KB).
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+    }
+
+    /// Execute a module on pre-uploaded device buffers (zero large host
+    /// copies on the hot path), returning the flattened f32 output tuple.
+    pub fn run_f32_buffers(
+        &self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = match lit.shape()? {
+            xla::Shape::Tuple(_) => lit.to_tuple()?,
+            _ => vec![lit],
+        };
+        parts
+            .iter()
+            .map(|p| Ok(p.to_vec::<f32>()?))
+            .collect::<anyhow::Result<Vec<_>>>()
+    }
+}
+
+/// Build an f32 literal of the given dims from a flat slice.
+///
+/// Uses `create_from_shape_and_untyped_data` — ONE host copy.  The naive
+/// `Literal::vec1(..).reshape(..)` costs two full copies (vec1 copies,
+/// reshape materializes a second literal), which dominated the PJRT hot
+/// path for large batches (EXPERIMENTS.md §Perf: 8.3 ms of a 10 ms call
+/// for a 7.4 MB batch).
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    debug_assert_eq!(dims_usize.iter().product::<usize>(), data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &dims_usize,
+        bytes,
+    )?)
+}

@@ -1,0 +1,7 @@
+//! Discrete-event simulators (Appendix D): algorithm execution is real
+//! (actual gradients, actual LMOs, actual iterates), only TIME is virtual,
+//! drawn from the queuing model of Assumption 3.
+
+pub mod queuing;
+
+pub use queuing::{simulate_asyn, simulate_dist, QueuingParams, SimResult};

@@ -1,0 +1,129 @@
+//! In-process transport: std::sync::mpsc channels with byte-accurate
+//! accounting (every message is charged its `wire_bytes()` — exactly what
+//! the TCP framing would put on the wire) and optional injected latency to
+//! emulate heterogeneous cluster links.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::messages::{MasterMsg, UpdateMsg};
+use crate::metrics::Counters;
+use crate::transport::{MasterLink, WorkerLink};
+
+pub struct LocalMaster {
+    rx: Receiver<UpdateMsg>,
+    txs: Vec<Sender<MasterMsg>>,
+    counters: Arc<Counters>,
+}
+
+pub struct LocalWorker {
+    tx: Sender<UpdateMsg>,
+    rx: Receiver<MasterMsg>,
+    counters: Arc<Counters>,
+    /// Fixed one-way latency injected on send (None = none).
+    pub latency: Option<Duration>,
+}
+
+/// Build a master endpoint + `workers` worker endpoints sharing `counters`.
+pub fn local_links(
+    workers: usize,
+    counters: Arc<Counters>,
+    latency: Option<Duration>,
+) -> (LocalMaster, Vec<LocalWorker>) {
+    let (up_tx, up_rx) = channel::<UpdateMsg>();
+    let mut txs = Vec::with_capacity(workers);
+    let mut wlinks = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let (down_tx, down_rx) = channel::<MasterMsg>();
+        txs.push(down_tx);
+        wlinks.push(LocalWorker {
+            tx: up_tx.clone(),
+            rx: down_rx,
+            counters: counters.clone(),
+            latency,
+        });
+    }
+    (LocalMaster { rx: up_rx, txs, counters }, wlinks)
+}
+
+impl MasterLink for LocalMaster {
+    fn recv(&mut self) -> Option<UpdateMsg> {
+        self.rx.recv().ok()
+    }
+
+    fn send_to(&mut self, w: usize, msg: MasterMsg) {
+        self.counters.add_down(msg.wire_bytes());
+        // worker may have exited already; dropping the message then is fine
+        let _ = self.txs[w].send(msg);
+    }
+
+    fn workers(&self) -> usize {
+        self.txs.len()
+    }
+}
+
+impl WorkerLink for LocalWorker {
+    fn send(&mut self, msg: UpdateMsg) {
+        if let Some(lat) = self.latency {
+            std::thread::sleep(lat);
+        }
+        self.counters.add_up(msg.wire_bytes());
+        let _ = self.tx.send(msg);
+    }
+
+    fn recv(&mut self) -> Option<MasterMsg> {
+        self.rx.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(w: u32, d: usize) -> UpdateMsg {
+        UpdateMsg {
+            worker_id: w,
+            t_w: 0,
+            u: vec![0.0; d],
+            v: vec![0.0; d],
+            sigma: 1.0,
+            loss_sum: 0.0,
+            m: 8,
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_accounting() {
+        let counters = Arc::new(Counters::new());
+        let (mut master, mut workers) = local_links(2, counters.clone(), None);
+        let msg = upd(1, 10);
+        let up_bytes = msg.wire_bytes();
+        workers[1].send(msg);
+        let got = master.recv().unwrap();
+        assert_eq!(got.worker_id, 1);
+        master.send_to(1, MasterMsg::Stop);
+        assert!(matches!(workers[1].recv(), Some(MasterMsg::Stop)));
+        let s = counters.snapshot();
+        assert_eq!(s.bytes_up, up_bytes);
+        assert_eq!(s.bytes_down, 1);
+        assert_eq!(s.msgs_up, 1);
+        assert_eq!(s.msgs_down, 1);
+    }
+
+    #[test]
+    fn master_recv_none_when_workers_dropped() {
+        let counters = Arc::new(Counters::new());
+        let (mut master, workers) = local_links(1, counters, None);
+        drop(workers);
+        assert!(master.recv().is_none());
+    }
+
+    #[test]
+    fn send_to_dead_worker_does_not_panic() {
+        let counters = Arc::new(Counters::new());
+        let (mut master, workers) = local_links(1, counters, None);
+        drop(workers);
+        master.send_to(0, MasterMsg::Stop);
+    }
+}

@@ -1,0 +1,32 @@
+//! Transports between master and workers.
+//!
+//! The coordinator is transport-generic over two small traits so the same
+//! master/worker logic runs over:
+//!  * [`local`] — in-process mpsc channels with byte-accurate accounting
+//!    (the default experimental substrate; message sizes are computed with
+//!    the same `wire_bytes()` the TCP framing actually produces), and
+//!  * [`tcp`] — real length-prefixed TCP sockets over localhost
+//!    (std::net; tokio is not in the offline crate set), exercising true
+//!    serialization, framing and kernel socket queues.
+
+pub mod local;
+pub mod tcp;
+
+use crate::coordinator::messages::{MasterMsg, UpdateMsg};
+
+/// Master-side endpoint: receive any worker's update, reply to one worker.
+pub trait MasterLink: Send {
+    /// Block until some worker's update arrives. `None` = all workers gone.
+    fn recv(&mut self) -> Option<UpdateMsg>;
+    /// Send a reply to worker `w`.
+    fn send_to(&mut self, w: usize, msg: MasterMsg);
+    /// Number of workers attached.
+    fn workers(&self) -> usize;
+}
+
+/// Worker-side endpoint.
+pub trait WorkerLink: Send {
+    fn send(&mut self, msg: UpdateMsg);
+    /// Block until the master replies. `None` = master gone.
+    fn recv(&mut self) -> Option<MasterMsg>;
+}

@@ -1,0 +1,170 @@
+//! Minimal CLI argument parser (`clap` is not in the offline crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; typed getters with defaults and error messages that name the
+//! offending flag.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+pub const BOOL_SENTINEL: &str = "\u{1}true";
+
+impl Args {
+    /// Parse from an explicit token list (tests) — `--k v`, `--k=v`, `--flag`.
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), BOOL_SENTINEL.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments after the subcommand position.
+    pub fn parse_env(skip: usize) -> Args {
+        Args::parse_from(std::env::args().skip(skip))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        match self.flags.get(key) {
+            Some(v) if v != BOOL_SENTINEL => v.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<String> {
+        self.flags.get(key).filter(|v| *v != BOOL_SENTINEL).cloned()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_parsed(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get_parsed(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get_parsed(key).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get_parsed(key).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            Some(BOOL_SENTINEL) | Some("true") | Some("1") => true,
+            Some("false") | Some("0") => false,
+            Some(_) | None => self.flags.contains_key(key),
+        }
+    }
+
+    /// Comma-separated list, e.g. `--workers 1,3,7,15`.
+    pub fn get_list_usize(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get_opt(key) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: bad integer '{s}'"))
+                })
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.flags.get(key).and_then(|v| {
+            if v == BOOL_SENTINEL {
+                return None;
+            }
+            match v.parse() {
+                Ok(x) => Some(x),
+                Err(_) => panic!("--{key}: cannot parse '{v}'"),
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_key_value_and_equals() {
+        let a = parse("--workers 8 --tau=4 train");
+        assert_eq!(a.get_usize("workers", 0), 8);
+        assert_eq!(a.get_usize("tau", 0), 4);
+        assert_eq!(a.positional(), &["train".to_string()]);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = parse("--verbose --workers 2");
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("quiet"));
+        assert_eq!(a.get_usize("workers", 0), 2);
+    }
+
+    #[test]
+    fn bool_flag_before_another_flag() {
+        let a = parse("--verbose --quiet");
+        assert!(a.get_bool("verbose") && a.get_bool("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("");
+        assert_eq!(a.get_str("name", "dflt"), "dflt");
+        assert_eq!(a.get_f64("eta", 0.5), 0.5);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--workers 1,3,7,15");
+        assert_eq!(a.get_list_usize("workers", &[]), vec![1, 3, 7, 15]);
+        assert_eq!(a.get_list_usize("absent", &[2]), vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn bad_number_panics_with_flag_name() {
+        let a = parse("--workers abc");
+        a.get_usize("workers", 0);
+    }
+}

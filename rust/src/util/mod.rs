@@ -1,0 +1,8 @@
+//! Dependency-free utilities: PRNG, CLI parsing, property-test runner.
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+
+pub use cli::Args;
+pub use rng::Rng;

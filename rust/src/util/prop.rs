@@ -1,0 +1,69 @@
+//! Miniature property-based test runner (`proptest` is not in the offline
+//! crate set).  Seeded + iterated: a property is checked against `n`
+//! pseudo-random cases; the failing case's seed is printed so it can be
+//! replayed deterministically.  No shrinking — cases are kept small by
+//! construction instead.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` on `n` cases derived from `seed`.  Panics (with the case
+/// seed) on the first failing case.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, seed: u64, n: usize, mut prop: F) {
+    for case in 0..n {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 1, 25, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 2, 10, |rng| {
+            let x = rng.next_f64();
+            prop_assert!(x < 0.5, "x = {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut first = Vec::new();
+        check("record", 3, 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("record", 3, 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

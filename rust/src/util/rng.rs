@@ -1,0 +1,235 @@
+//! Deterministic, dependency-free PRNG for the coordinator and simulators.
+//!
+//! The offline crate set has no `rand` (only `rand_core`), so we ship a
+//! small, well-known generator: xoshiro256++ seeded through SplitMix64
+//! (Blackman & Vigna).  Everything downstream — minibatch sampling,
+//! queuing-model delays, synthetic data — draws from this, which makes
+//! every experiment in EXPERIMENTS.md reproducible from a single seed.
+
+/// xoshiro256++ with SplitMix64 seeding; cached Box-Muller normal.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    cached_normal: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, cached_normal: None }
+    }
+
+    /// Derive an independent stream (for per-worker RNGs).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).  Uses Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= lo.wrapping_neg() % n {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box-Muller (cached second draw).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        // avoid log(0)
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.cached_normal = Some(r * s);
+        r * c
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Geometric on {1, 2, ...}: number of Bernoulli(p) trials to first
+    /// success (Assumption 3's compute-time model uses t = C * geometric(p)).
+    pub fn geometric(&mut self, p: f64) -> u64 {
+        debug_assert!(p > 0.0 && p <= 1.0);
+        if p >= 1.0 {
+            return 1;
+        }
+        let u = loop {
+            let u = self.next_f64();
+            if u < 1.0 {
+                break u;
+            }
+        };
+        ((1.0 - u).ln() / (1.0 - p).ln()).ceil().max(1.0) as u64
+    }
+
+    /// Sample `k` indices from [0, n) WITH replacement (matches the i.i.d.
+    /// minibatch model of the analysis).
+    pub fn sample_indices(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
+        out.clear();
+        out.reserve(k);
+        for _ in 0..k {
+            out.push(self.next_below(n));
+        }
+    }
+
+    /// Random unit vector (for LMO power-iteration restarts).
+    pub fn unit_vector(&mut self, d: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..d).map(|_| self.normal_f32()).collect();
+        let n = v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32;
+        let n = if n == 0.0 { 1.0 } else { n };
+        for x in &mut v {
+            *x /= n;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let mut root = Rng::new(7);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(1);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn next_below_covers_range_uniformly() {
+        let mut r = Rng::new(2);
+        let mut hist = [0usize; 10];
+        for _ in 0..100_000 {
+            hist[r.next_below(10)] += 1;
+        }
+        for h in hist {
+            assert!((h as f64 - 10_000.0).abs() < 600.0, "{h}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            m1 += z;
+            m2 += z * z;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "var {m2}");
+    }
+
+    #[test]
+    fn geometric_mean_is_one_over_p() {
+        let mut r = Rng::new(4);
+        for &p in &[0.1, 0.5, 0.8] {
+            let n = 50_000;
+            let s: u64 = (0..n).map(|_| r.geometric(p)).sum();
+            let mean = s as f64 / n as f64;
+            assert!((mean - 1.0 / p).abs() < 0.15 / p, "p={p} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn geometric_p1_is_deterministic() {
+        let mut r = Rng::new(5);
+        for _ in 0..100 {
+            assert_eq!(r.geometric(1.0), 1);
+        }
+    }
+
+    #[test]
+    fn unit_vector_has_unit_norm() {
+        let mut r = Rng::new(6);
+        for d in [1, 3, 30, 784] {
+            let v = r.unit_vector(d);
+            let n: f64 = v.iter().map(|x| (*x as f64).powi(2)).sum();
+            assert!((n.sqrt() - 1.0).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Convergence-rate checks against the paper's theorems (native engine;
+//! deterministic seeds).
+//!
+//! * Thm 1 / HL16: with the increasing batch schedule, the suboptimality
+//!   h_k decays like O(1/k) — we check the empirical decay exponent.
+//! * Thm 3/4: constant batch size converges to a NEIGHBORHOOD — larger
+//!   batches give lower floors.
+//! * SVA sanity: the naive singular-vector-averaging baseline plateaus
+//!   far above SFW-asyn on the same problem/seed (the paper's motivating
+//!   negative result).
+
+use std::sync::Arc;
+
+use sfw::algo::engine::NativeEngine;
+use sfw::algo::schedule::BatchSchedule;
+use sfw::algo::sfw::{run_sfw, SfwOptions};
+use sfw::coordinator::sva::{run_sva, SvaOptions};
+use sfw::coordinator::{run_asyn_local, AsynOptions};
+use sfw::data::matrix_sensing::{MatrixSensingData, MsParams};
+use sfw::metrics::{Counters, LossTrace};
+use sfw::objective::{MatrixSensing, Objective};
+use sfw::util::rng::Rng;
+
+fn ms(seed: u64, n: usize) -> Arc<dyn Objective> {
+    let mut rng = Rng::new(seed);
+    // noiseless => F* ~ 0, so h_k ~ F(X_k); clean rate measurement
+    let p = MsParams { d1: 12, d2: 12, rank: 2, n, noise_std: 0.0 };
+    Arc::new(MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0))
+}
+
+#[test]
+fn sfw_rate_is_at_least_one_over_k() {
+    let obj = ms(400, 8_000);
+    let mut engine = NativeEngine::new(obj.clone(), 80, 401);
+    let counters = Counters::new();
+    let trace = LossTrace::new();
+    let opts = SfwOptions {
+        iterations: 256,
+        batch: BatchSchedule::sfw(0.25, 8_000),
+        eval_every: 1,
+        seed: 402,
+    };
+    run_sfw(&mut engine, &opts, &counters, &trace);
+    let pts = trace.points();
+    // fit decay exponent on k in [16, 256]: log h_k vs log k
+    let series: Vec<(f64, f64)> = pts
+        .iter()
+        .filter(|p| p.iteration >= 16 && p.loss > 1e-12)
+        .map(|p| ((p.iteration as f64).ln(), p.loss.ln()))
+        .collect();
+    assert!(series.len() > 50);
+    let n = series.len() as f64;
+    let sx: f64 = series.iter().map(|p| p.0).sum();
+    let sy: f64 = series.iter().map(|p| p.1).sum();
+    let sxx: f64 = series.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = series.iter().map(|p| p.0 * p.1).sum();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    // O(1/k) => slope <= -0.8 in practice (often steeper on noiseless MS)
+    assert!(slope < -0.8, "empirical decay exponent {slope} too flat for O(1/k)");
+}
+
+#[test]
+fn constant_batch_floor_shrinks_with_batch_size() {
+    // Thm 3: residual error ~ 1/c * L D^2 — bigger constant batch, lower
+    // floor.  Use a noiseless problem so the floor is purely stochastic.
+    let obj = ms(410, 6_000);
+    let floor = |m: usize, seed: u64| {
+        let mut engine = NativeEngine::new(obj.clone(), 80, seed);
+        let counters = Counters::new();
+        let trace = LossTrace::new();
+        let opts = SfwOptions {
+            iterations: 300,
+            batch: BatchSchedule::Constant(m),
+            eval_every: 10,
+            seed,
+        };
+        run_sfw(&mut engine, &opts, &counters, &trace);
+        // average the tail to estimate the plateau
+        let pts = trace.points();
+        let tail: Vec<f64> = pts.iter().rev().take(8).map(|p| p.loss).collect();
+        tail.iter().sum::<f64>() / tail.len() as f64
+    };
+    let f_small = floor(8, 411);
+    let f_large = floor(512, 412);
+    assert!(
+        f_large < 0.5 * f_small,
+        "floor(512)={f_large} not clearly below floor(8)={f_small}"
+    );
+}
+
+#[test]
+fn sva_plateaus_while_sfw_asyn_converges() {
+    // Noiseless problem, SMALL constant batches: each worker's LMO
+    // direction is noisy, and averaging unit singular vectors (instead of
+    // solving the LMO of the averaged gradient) has a systematic bias —
+    // SVA stalls at a visibly higher floor with the same compute budget.
+    let obj = ms(420, 6_000);
+    let iters = 600u64;
+    let batch = BatchSchedule::Constant(32);
+    let opts = AsynOptions {
+        iterations: iters,
+        tau: 8,
+        workers: 4,
+        batch: batch.clone(),
+        eval_every: 50,
+        seed: 421,
+        straggler: None,
+        link_latency: None,
+    };
+    let o2 = obj.clone();
+    let asyn = run_asyn_local(obj.clone(), &opts, move |w| {
+        Box::new(NativeEngine::new(o2.clone(), 60, 422 + w as u64))
+    });
+    // SVA with identical compute budget
+    let sopts = SvaOptions {
+        iterations: iters,
+        workers: 4,
+        batch,
+        eval_every: 50,
+        seed: 421,
+    };
+    let o3 = obj.clone();
+    let sva = run_sva(obj.clone(), &sopts, move |w| {
+        Box::new(NativeEngine::new(o3.clone(), 60, 422 + w as u64))
+    });
+    // compare plateau (tail average), not a single noisy endpoint
+    let tail = |r: &sfw::coordinator::RunResult| {
+        let pts = r.trace.points();
+        let t: Vec<f64> = pts.iter().rev().take(4).map(|p| p.loss).collect();
+        t.iter().sum::<f64>() / t.len() as f64
+    };
+    let asyn_final = tail(&asyn);
+    let sva_final = tail(&sva);
+    assert!(
+        asyn_final < 0.75 * sva_final,
+        "SFW-asyn plateau {asyn_final} should sit clearly below SVA plateau {sva_final}"
+    );
+}
+
+#[test]
+fn tau_slowdown_is_bounded() {
+    // Thm 1's (3 tau + 1) factor: larger tolerated staleness converges
+    // slower per-iteration but must still converge.  Compare final losses
+    // after the same iteration count.
+    let obj = ms(430, 6_000);
+    let run = |tau: u64, seed: u64| {
+        let opts = AsynOptions {
+            iterations: 150,
+            tau,
+            workers: 4,
+            batch: BatchSchedule::Constant(256),
+            eval_every: 50,
+            seed,
+            straggler: None,
+            link_latency: None,
+        };
+        let o2 = obj.clone();
+        run_asyn_local(obj.clone(), &opts, move |w| {
+            Box::new(NativeEngine::new(o2.clone(), 60, seed + w as u64))
+        })
+        .trace
+        .points()
+        .last()
+        .unwrap()
+        .loss
+    };
+    let tight = run(2, 431);
+    let loose = run(64, 432);
+    // both converge to a sane range (no divergence from staleness)
+    assert!(tight < 0.05, "tau=2 final {tight}");
+    assert!(loose < 0.15, "tau=64 final {loose} diverged");
+}

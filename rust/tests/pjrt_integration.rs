@@ -1,0 +1,170 @@
+//! Integration: the PJRT (AOT JAX/Pallas) engine must agree with the
+//! native Rust engine on every module family, and SFW-asyn must train
+//! end-to-end through the artifacts.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use std::sync::Arc;
+
+use sfw::algo::engine::{NativeEngine, StepEngine};
+use sfw::algo::schedule::BatchSchedule;
+use sfw::coordinator::{run_asyn_local, AsynOptions};
+use sfw::data::matrix_sensing::{MatrixSensingData, MsParams};
+use sfw::data::pnn::{PnnData, PnnParams};
+use sfw::linalg::{nuclear_norm, Mat};
+use sfw::objective::{MatrixSensing, Objective, Pnn};
+use sfw::runtime::{PjrtEngine, PjrtRuntime, Workload};
+use sfw::util::rng::Rng;
+
+fn runtime() -> Option<Arc<PjrtRuntime>> {
+    match PjrtRuntime::new("artifacts") {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts` first): {e}");
+            None
+        }
+    }
+}
+
+fn ms_objective(seed: u64, n: usize) -> Arc<MatrixSensing> {
+    let mut rng = Rng::new(seed);
+    let p = MsParams { d1: 30, d2: 30, rank: 3, n, noise_std: 0.1 };
+    Arc::new(MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0))
+}
+
+fn pnn_objective(seed: u64, n: usize, d: usize) -> Arc<Pnn> {
+    let mut rng = Rng::new(seed);
+    let p = PnnParams { d, n, teacher_rank: 3, mixture_components: 6 };
+    Arc::new(Pnn::new(PnnData::generate(&p, &mut rng), 1.0))
+}
+
+#[test]
+fn ms_grad_pjrt_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let obj = ms_objective(300, 2_000);
+    let o: Arc<dyn Objective> = obj.clone();
+    let mut native = NativeEngine::new(o.clone(), 64, 301);
+    let mut pjrt = PjrtEngine::new(rt, Workload::Ms(obj.clone()), 301);
+    let mut rng = Rng::new(302);
+    for m in [5usize, 128, 200] {
+        let x = Mat::randn(30, 30, 0.1, &mut rng);
+        let idx: Vec<usize> = (0..m).map(|_| rng.next_below(2_000)).collect();
+        let mut gn = Mat::zeros(30, 30);
+        let ln = native.grad_sum(&x, &idx, &mut gn);
+        let mut gp = Mat::zeros(30, 30);
+        let lp = pjrt.grad_sum(&x, &idx, &mut gp);
+        let mut d = gn.clone();
+        d.axpy(-1.0, &gp);
+        let rel = d.frob_norm() / gn.frob_norm().max(1e-12);
+        assert!(rel < 1e-4, "m={m}: grad rel err {rel}");
+        assert!(
+            (ln - lp).abs() / ln.abs().max(1e-9) < 1e-4,
+            "m={m}: loss {ln} vs {lp}"
+        );
+    }
+}
+
+#[test]
+fn pnn_grad_pjrt_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let d = rt.manifest().param_usize("pnn_d").unwrap();
+    let obj = pnn_objective(310, 1_000, d);
+    let o: Arc<dyn Objective> = obj.clone();
+    let mut native = NativeEngine::new(o.clone(), 64, 311);
+    let mut pjrt = PjrtEngine::new(rt, Workload::Pnn(obj.clone()), 311);
+    let mut rng = Rng::new(312);
+    let x = Mat::randn(d, d, 0.05, &mut rng);
+    let idx: Vec<usize> = (0..100).map(|_| rng.next_below(1_000)).collect();
+    let mut gn = Mat::zeros(d, d);
+    let ln = native.grad_sum(&x, &idx, &mut gn);
+    let mut gp = Mat::zeros(d, d);
+    let lp = pjrt.grad_sum(&x, &idx, &mut gp);
+    let mut diff = gn.clone();
+    diff.axpy(-1.0, &gp);
+    let rel = diff.frob_norm() / gn.frob_norm().max(1e-12);
+    assert!(rel < 1e-4, "pnn grad rel err {rel}");
+    assert!((ln - lp).abs() / ln.abs().max(1e-9) < 1e-4, "{ln} vs {lp}");
+}
+
+#[test]
+fn lmo_pjrt_matches_native_sigma() {
+    let Some(rt) = runtime() else { return };
+    let obj = ms_objective(320, 500);
+    let o: Arc<dyn Objective> = obj.clone();
+    let mut native = NativeEngine::new(o.clone(), 200, 321);
+    let mut pjrt = PjrtEngine::new(rt, Workload::Ms(obj.clone()), 321);
+    let mut rng = Rng::new(322);
+    // well-separated spectrum so 16 power iters suffice
+    let u = rng.unit_vector(30);
+    let v = rng.unit_vector(30);
+    let mut g = Mat::randn(30, 30, 0.5, &mut rng);
+    for i in 0..30 {
+        for j in 0..30 {
+            *g.at_mut(i, j) += 20.0 * u[i] * v[j];
+        }
+    }
+    let sn = native.lmo(&g);
+    let sp = pjrt.lmo(&g);
+    assert!(
+        (sn.sigma - sp.sigma).abs() / sn.sigma < 1e-3,
+        "sigma {} vs {}",
+        sn.sigma,
+        sp.sigma
+    );
+    let align: f32 = sn.u.iter().zip(&sp.u).map(|(a, b)| a * b).sum();
+    assert!(align.abs() > 0.999, "u misaligned: {align}");
+}
+
+#[test]
+fn fused_step_pjrt_consistent_with_parts() {
+    let Some(rt) = runtime() else { return };
+    let obj = ms_objective(330, 1_000);
+    let mut pjrt = PjrtEngine::new(rt, Workload::Ms(obj.clone()), 331);
+    let mut rng = Rng::new(332);
+    let x = Mat::randn(30, 30, 0.1, &mut rng);
+    let idx: Vec<usize> = (0..128).map(|_| rng.next_below(1_000)).collect();
+    let out = pjrt.step(&x, &idx);
+    // loss from the fused module == loss from the grad module
+    let mut g = Mat::zeros(30, 30);
+    let loss2 = pjrt.grad_sum(&x, &idx, &mut g);
+    assert!((out.loss_sum - loss2).abs() / loss2.abs().max(1e-9) < 1e-4);
+    // sigma == u^T G v on the gradient from the grad module
+    let mut gv = vec![0.0f32; 30];
+    g.matvec(&out.v, &mut gv);
+    let sigma2: f32 = out.u.iter().zip(&gv).map(|(a, b)| a * b).sum();
+    assert!(
+        (out.sigma - sigma2).abs() / out.sigma.abs().max(1e-9) < 1e-2,
+        "sigma {} vs u^T G v {}",
+        out.sigma,
+        sigma2
+    );
+}
+
+#[test]
+fn sfw_asyn_trains_end_to_end_through_pjrt() {
+    let Some(rt) = runtime() else { return };
+    let obj = ms_objective(340, 4_000);
+    let o: Arc<dyn Objective> = obj.clone();
+    let opts = AsynOptions {
+        iterations: 60,
+        tau: 8,
+        workers: 2,
+        batch: BatchSchedule::Constant(128),
+        eval_every: 10,
+        seed: 341,
+        straggler: None,
+        link_latency: None,
+    };
+    let r = run_asyn_local(o, &opts, move |w| {
+        Box::new(PjrtEngine::new(rt.clone(), Workload::Ms(obj.clone()), 342 + w as u64))
+    });
+    let pts = r.trace.points();
+    assert!(
+        pts.last().unwrap().loss < 0.5 * pts.first().unwrap().loss,
+        "PJRT e2e made no progress: {} -> {}",
+        pts.first().unwrap().loss,
+        pts.last().unwrap().loss
+    );
+    assert!(nuclear_norm(&r.x) <= 1.0 + 1e-3);
+    assert_eq!(r.counters.snapshot().iterations, 60);
+}

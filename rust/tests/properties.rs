@@ -1,0 +1,224 @@
+//! Cross-module property tests (seeded mini-prop runner; see
+//! `sfw::util::prop`).  These pin the system-level invariants the paper's
+//! correctness rests on.
+
+use std::sync::Arc;
+
+use sfw::algo::engine::{NativeEngine, StepEngine};
+use sfw::algo::init_rank_one;
+use sfw::coordinator::messages::{LogEntry, MasterMsg, UpdateMsg};
+use sfw::coordinator::update_log::{replay, replay_after, UpdateLog};
+use sfw::data::matrix_sensing::{MatrixSensingData, MsParams};
+use sfw::linalg::{jacobi_svd, nuclear_ball_projection, nuclear_norm, Mat};
+use sfw::objective::{MatrixSensing, Objective};
+use sfw::prop_assert;
+use sfw::transport::tcp::{decode_master, decode_update, encode_master, encode_update};
+use sfw::util::prop::check;
+use sfw::util::rng::Rng;
+
+#[test]
+fn prop_iterates_stay_in_nuclear_ball_under_any_update_sequence() {
+    check("nuclear-ball-invariant", 600, 30, |rng| {
+        let d1 = 2 + rng.next_below(8);
+        let d2 = 2 + rng.next_below(8);
+        let theta = 0.5 + rng.next_f32() * 2.0;
+        let mut log = UpdateLog::new();
+        let mut x = init_rank_one(d1, d2, theta, &mut rng.fork(9));
+        for _ in 0..20 {
+            let u = rng.unit_vector(d1);
+            let v = rng.unit_vector(d2);
+            log.append(u, v, theta);
+        }
+        replay(&mut x, &log.slice_from(0));
+        let nn = nuclear_norm(&x);
+        prop_assert!(
+            nn <= theta as f64 * (1.0 + 1e-4),
+            "||X||_* = {nn} > theta = {theta}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replay_after_is_idempotent() {
+    check("replay-idempotent", 610, 30, |rng| {
+        let d = 3 + rng.next_below(5);
+        let theta = 1.0f32;
+        let mut log = UpdateLog::new();
+        for _ in 0..12 {
+            let u = rng.unit_vector(d);
+            let v = rng.unit_vector(d);
+            log.append(u, v, theta);
+        }
+        let x0 = init_rank_one(d, d, theta, &mut rng.fork(3));
+        // reference: single clean replay
+        let mut x_ref = x0.clone();
+        replay(&mut x_ref, &log.slice_from(0));
+        // adversarial: overlapping slices with repeats
+        let mut x = x0.clone();
+        let mut t = 0u64;
+        let cut1 = rng.next_below(12) as u64;
+        let cut2 = rng.next_below(12) as u64;
+        t = replay_after(&mut x, &log.slice_from(0.min(cut1)), t);
+        t = replay_after(&mut x, &log.slice_from(cut1.min(t)), t);
+        t = replay_after(&mut x, &log.slice_from(cut2.min(t)), t);
+        t = replay_after(&mut x, &log.slice_from(0), t);
+        prop_assert!(t == 12, "t = {t}");
+        let mut diff = x.clone();
+        diff.axpy(-1.0, &x_ref);
+        prop_assert!(diff.frob_norm() < 1e-5, "idempotence violated: {}", diff.frob_norm());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tcp_codec_roundtrips_all_messages() {
+    check("tcp-codec-roundtrip", 620, 40, |rng| {
+        let d1 = 1 + rng.next_below(40);
+        let d2 = 1 + rng.next_below(40);
+        let upd = UpdateMsg {
+            worker_id: rng.next_below(16) as u32,
+            t_w: rng.next_u64() % 10_000,
+            u: (0..d1).map(|_| rng.normal_f32()).collect(),
+            v: (0..d2).map(|_| rng.normal_f32()).collect(),
+            sigma: rng.normal_f32(),
+            loss_sum: rng.normal(),
+            m: rng.next_below(10_000) as u32,
+        };
+        let rt = decode_update(&encode_update(&upd));
+        prop_assert!(rt.u == upd.u && rt.v == upd.v, "vectors corrupted");
+        prop_assert!(rt.t_w == upd.t_w && rt.m == upd.m, "header corrupted");
+
+        let entries: Vec<LogEntry> = (1..=3)
+            .map(|k| LogEntry {
+                k,
+                eta: rng.next_f32(),
+                scale: -1.0,
+                u: Arc::new((0..d1).map(|_| rng.normal_f32()).collect()),
+                v: Arc::new((0..d2).map(|_| rng.normal_f32()).collect()),
+            })
+            .collect();
+        let msg = MasterMsg::Updates { t_m: 3, entries: entries.clone() };
+        let (tag, payload) = encode_master(&msg);
+        match decode_master(tag, &payload) {
+            MasterMsg::Updates { t_m, entries: back } => {
+                prop_assert!(t_m == 3, "t_m");
+                prop_assert!(back.len() == 3, "len");
+                for (a, b) in back.iter().zip(&entries) {
+                    prop_assert!(*a.u == *b.u && *a.v == *b.v && a.k == b.k, "entry");
+                }
+            }
+            _ => return Err("wrong variant".into()),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_bytes_match_actual_encoding() {
+    // `wire_bytes()` (used by the local transport's accounting) must be
+    // within the 5-byte frame header of what the TCP codec really emits.
+    check("wire-bytes-accurate", 630, 30, |rng| {
+        let d1 = 1 + rng.next_below(64);
+        let d2 = 1 + rng.next_below(64);
+        let upd = UpdateMsg {
+            worker_id: 1,
+            t_w: 5,
+            u: vec![0.5; d1],
+            v: vec![0.5; d2],
+            sigma: 1.0,
+            loss_sum: 2.0,
+            m: 7,
+        };
+        let actual = encode_update(&upd).len() as u64 + 5;
+        let claimed = upd.wire_bytes();
+        prop_assert!(
+            claimed.abs_diff(actual) <= 5,
+            "claimed {claimed} vs actual {actual}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lmo_optimality_against_exact_svd() {
+    // <G, -theta u v^T> from the power-iteration LMO must be within 1% of
+    // the exact best rank-one value (-theta sigma_max).
+    check("lmo-optimal", 640, 15, |rng| {
+        let d1 = 4 + rng.next_below(12);
+        let d2 = 4 + rng.next_below(12);
+        let mut g = Mat::randn(d1, d2, 1.0, &mut rng.fork(1));
+        // separation boost keeps 200 iters plenty
+        let u = rng.unit_vector(d1);
+        let v = rng.unit_vector(d2);
+        for i in 0..d1 {
+            for j in 0..d2 {
+                *g.at_mut(i, j) += 3.0 * ((d1 * d2) as f32).sqrt() * u[i] * v[j];
+            }
+        }
+        let s = sfw::linalg::power_iteration_rand(&g, rng, 200, 1e-12);
+        let (_, sv, _) = jacobi_svd(&g);
+        prop_assert!(
+            (s.sigma - sv[0]).abs() / sv[0] < 1e-2,
+            "power sigma {} vs svd {}",
+            s.sigma,
+            sv[0]
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_projection_never_increases_distance_to_feasible_points() {
+    check("projection-contraction", 650, 10, |rng| {
+        let d = 4 + rng.next_below(5);
+        let x = Mat::randn(d, d, 1.5, &mut rng.fork(2));
+        let p = nuclear_ball_projection(&x, 1.0);
+        prop_assert!(nuclear_norm(&p) <= 1.0 + 1e-3, "infeasible projection");
+        // obtuseness: for feasible f, <x - p, f - p> <= 0
+        for _ in 0..5 {
+            let u = rng.unit_vector(d);
+            let v = rng.unit_vector(d);
+            let mut f = Mat::zeros(d, d);
+            for i in 0..d {
+                for j in 0..d {
+                    *f.at_mut(i, j) = 0.9 * u[i] * v[j];
+                }
+            }
+            let mut xp = x.clone();
+            xp.axpy(-1.0, &p);
+            let mut fp = f.clone();
+            fp.axpy(-1.0, &p);
+            let inner = xp.inner(&fp);
+            prop_assert!(inner <= 1e-3, "obtuse-angle violated: {inner}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_native_step_invariant_to_batch_permutation() {
+    // grad_sum is a sum — permuting the index set cannot change the step.
+    check("batch-permutation", 660, 10, |rng| {
+        let mut data_rng = Rng::new(661);
+        let p = MsParams { d1: 6, d2: 6, rank: 2, n: 500, noise_std: 0.05 };
+        let obj: Arc<dyn Objective> = Arc::new(MatrixSensing::new(
+            MatrixSensingData::generate(&p, &mut data_rng),
+            1.0,
+        ));
+        let mut engine = NativeEngine::new(obj.clone(), 50, 662);
+        let x = Mat::randn(6, 6, 0.2, &mut rng.fork(4));
+        let mut idx: Vec<usize> = (0..64).map(|_| rng.next_below(500)).collect();
+        let mut g1 = Mat::zeros(6, 6);
+        let l1 = engine.grad_sum(&x, &idx, &mut g1);
+        // reverse = a permutation
+        idx.reverse();
+        let mut g2 = Mat::zeros(6, 6);
+        let l2 = engine.grad_sum(&x, &idx, &mut g2);
+        let mut d = g1.clone();
+        d.axpy(-1.0, &g2);
+        prop_assert!(d.frob_norm() < 1e-4, "permutation changed gradient");
+        prop_assert!((l1 - l2).abs() < 1e-6, "permutation changed loss");
+        Ok(())
+    });
+}
