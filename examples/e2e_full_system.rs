@@ -19,11 +19,10 @@
 
 use std::sync::Arc;
 
-use sfw::algo::schedule::BatchSchedule;
-use sfw::coordinator::{run_asyn_local, run_asyn_tcp, AsynOptions};
 use sfw::experiments::build_pnn;
 use sfw::objective::Objective;
-use sfw::runtime::{loss_full_pjrt, PjrtEngine, PjrtRuntime, Workload};
+use sfw::runtime::{loss_full_pjrt, PjrtRuntime, Workload};
+use sfw::session::{BatchSchedule, TaskSpec, TrainSpec, Transport};
 use sfw::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -52,37 +51,26 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- train: SFW-asyn entirely through the AOT artifacts -------------
-    let opts = AsynOptions {
-        iterations,
-        tau,
-        workers,
-        batch: BatchSchedule::sfw(2.0, 2_048),
-        eval_every: 20,
-        seed,
-        straggler: None,
-        link_latency: None,
-    };
-    let make = {
-        let rt = rt.clone();
-        let obj = obj.clone();
-        move |w: usize| -> Box<dyn sfw::algo::engine::StepEngine> {
-            Box::new(PjrtEngine::new(rt.clone(), Workload::Pnn(obj.clone()), seed ^ w as u64))
-        }
-    };
     let t0 = std::time::Instant::now();
-    let r = if use_tcp {
-        run_asyn_tcp(o.clone(), &opts, make)
-    } else {
-        run_asyn_local(o.clone(), &opts, make)
-    };
+    let r = TrainSpec::new(TaskSpec::Prebuilt(Workload::Pnn(obj.clone())))
+        .algo("sfw-asyn")
+        .iterations(iterations)
+        .tau(tau)
+        .workers(workers)
+        .batch(BatchSchedule::sfw(2.0, 2_048))
+        .eval_every(20)
+        .seed(seed)
+        .pjrt_runtime(rt.clone()) // share the loaded artifacts with eval below
+        .transport(if use_tcp { Transport::Tcp } else { Transport::Local })
+        .run()?;
     let wall = t0.elapsed().as_secs_f64();
 
     // --- report ----------------------------------------------------------
     println!("\n   t(s)      iter   loss");
-    for p in r.trace.points() {
+    for p in r.points() {
         println!("   {:<9.3} {:<6} {:.6e}", p.t, p.iteration, p.loss);
     }
-    let s = r.counters.snapshot();
+    let s = r.snapshot();
     println!(
         "\n{} master iterations in {:.1}s ({:.1} iter/s), {} dropped by tau-gate",
         s.iterations,
@@ -107,7 +95,7 @@ fn main() -> anyhow::Result<()> {
         (loss_pjrt - loss_native).abs()
     );
     println!("train accuracy: {:.1}%", 100.0 * obj.data.accuracy(&r.x));
-    let pts = r.trace.points();
+    let pts = r.points();
     let (f0, f1) = (pts.first().unwrap().loss, pts.last().unwrap().loss);
     anyhow::ensure!(f1 < 0.9 * f0, "loss did not decrease: {f0} -> {f1}");
     println!("\ne2e OK: all three layers composed (Pallas -> XLA -> PJRT -> async coordinator).");

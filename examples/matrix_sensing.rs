@@ -6,16 +6,10 @@
 //!     cargo run --release --example matrix_sensing -- [--n 90000]
 //!         [--workers 8] [--iterations 400] [--target 0.01]
 
-use std::sync::Arc;
-
-use sfw::algo::engine::NativeEngine;
-use sfw::algo::schedule::BatchSchedule;
-use sfw::algo::sfw::{run_sfw, SfwOptions};
 use sfw::benchkit::Table;
-use sfw::coordinator::{run_asyn_local, run_dist, AsynOptions, DistOptions};
-use sfw::experiments::{build_ms, time_to_relative};
-use sfw::metrics::{Counters, LossTrace};
-use sfw::objective::Objective;
+use sfw::experiments::build_ms;
+use sfw::runtime::Workload;
+use sfw::session::{BatchSchedule, Report, TaskSpec, TrainSpec};
 use sfw::util::cli::Args;
 
 fn main() {
@@ -28,91 +22,43 @@ fn main() {
     let seed = args.get_u64("seed", 42);
 
     println!("matrix sensing: N={n}, D=30x30, W={workers}, T={iterations}, tau={tau}");
-    let obj = build_ms(seed, n);
-    let o: Arc<dyn Objective> = obj.clone();
-    let f_star = o.f_star_hint();
     let cap = 10_000; // paper's MS batch cap
+    let base = TrainSpec::new(TaskSpec::Prebuilt(Workload::Ms(build_ms(seed, n))))
+        .iterations(iterations)
+        .tau(tau)
+        .workers(workers)
+        .batch(BatchSchedule::sfw(2.0, cap)) // same schedule everywhere: wall-clock comparison
+        .eval_every(10)
+        .seed(seed)
+        .power_iters(40);
 
     let mut table = Table::new(
         "matrix sensing: time to relative loss",
         &["algorithm", "workers", "t_target(s)", "final rel", "grad evals", "up bytes"],
     );
 
-    // serial SFW
-    {
-        let counters = Counters::new();
-        let trace = LossTrace::new();
-        let mut engine = NativeEngine::new(o.clone(), 40, seed ^ 1);
-        let opts = SfwOptions {
-            iterations,
-            batch: BatchSchedule::sfw(2.0, cap),
-            eval_every: 10,
-            seed,
-        };
-        run_sfw(&mut engine, &opts, &counters, &trace);
-        report(&mut table, "SFW (serial)", 1, &trace.points(), f_star, target, &counters.snapshot());
-    }
-    // SFW-dist
-    {
-        let o2 = obj.clone();
-        let r = run_dist(
-            o.clone(),
-            &DistOptions {
-                iterations,
-                workers,
-                batch: BatchSchedule::sfw(2.0, cap),
-                eval_every: 10,
-                seed,
-                straggler: None,
-            },
-            move |w| Box::new(NativeEngine::new(o2.clone(), 40, seed ^ 0x20u64.wrapping_add(w as u64))),
-        );
-        report(&mut table, "SFW-dist", workers, &r.trace.points(), f_star, target, &r.counters.snapshot());
-    }
-    // SFW-asyn
-    {
-        let o2 = obj.clone();
-        let r = run_asyn_local(
-            o.clone(),
-            &AsynOptions {
-                iterations,
-                tau,
-                workers,
-                batch: BatchSchedule::sfw(2.0, cap), // same schedule as dist: wall-clock comparison
-                eval_every: 10,
-                seed,
-                straggler: None,
-                link_latency: None,
-            },
-            move |w| Box::new(NativeEngine::new(o2.clone(), 40, seed ^ 0x30 ^ w as u64)),
-        );
-        report(&mut table, "SFW-asyn", workers, &r.trace.points(), f_star, target, &r.counters.snapshot());
-    }
+    let sfw = base.clone().algo("sfw").run().expect("sfw");
+    report(&mut table, "SFW (serial)", 1, &sfw, target);
+    let dist = base.clone().algo("sfw-dist").run().expect("sfw-dist");
+    report(&mut table, "SFW-dist", workers, &dist, target);
+    let asyn = base.clone().algo("sfw-asyn").run().expect("sfw-asyn");
+    report(&mut table, "SFW-asyn", workers, &asyn, target);
+
     table.print();
     println!("\n(relative loss = (F - F*) / (F_0 - F*); F* = noise floor)");
 }
 
-fn report(
-    table: &mut Table,
-    name: &str,
-    workers: usize,
-    pts: &[sfw::metrics::TracePoint],
-    f_star: f64,
-    target: f64,
-    s: &sfw::metrics::CounterSnapshot,
-) {
-    let t = time_to_relative(pts, f_star, target)
+fn report(table: &mut Table, name: &str, workers: usize, r: &Report, target: f64) {
+    let t = r
+        .time_to_relative(target)
         .map(|t| format!("{t:.3}"))
         .unwrap_or_else(|| "—".into());
-    let final_rel = sfw::experiments::relative(pts, f_star)
-        .last()
-        .map(|(_, _, r)| format!("{r:.3e}"))
-        .unwrap_or_default();
+    let s = r.snapshot();
     table.row(&[
         name.into(),
         workers.to_string(),
         t,
-        final_rel,
+        format!("{:.3e}", r.final_relative()),
         s.grad_evals.to_string(),
         s.bytes_up.to_string(),
     ]);

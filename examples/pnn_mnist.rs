@@ -8,13 +8,9 @@
 //!     cargo run --release --example pnn_mnist -- [--d 196] [--n 20000]
 //!         [--workers 8] [--iterations 150]
 
-use std::sync::Arc;
-
-use sfw::algo::engine::NativeEngine;
-use sfw::algo::schedule::BatchSchedule;
-use sfw::coordinator::{run_asyn_local, run_dist, AsynOptions, DistOptions};
-use sfw::experiments::{build_pnn, relative};
-use sfw::objective::Objective;
+use sfw::experiments::build_pnn;
+use sfw::runtime::Workload;
+use sfw::session::{BatchSchedule, TaskSpec, TrainSpec};
 use sfw::util::cli::Args;
 
 fn main() {
@@ -32,7 +28,6 @@ fn main() {
         d * d
     );
     let obj = build_pnn(seed, d, n);
-    let o: Arc<dyn Objective> = obj.clone();
 
     // dense-matrix traffic per SFW-dist round vs rank-one per asyn update:
     let dense = 4 * d * d;
@@ -42,38 +37,20 @@ fn main() {
         dense / rank1
     );
 
-    let o2 = obj.clone();
-    let dist = run_dist(
-        o.clone(),
-        &DistOptions {
-            iterations,
-            workers,
-            batch: BatchSchedule::sfw(2.0, cap),
-            eval_every: 10,
-            seed,
-            straggler: None,
-        },
-        move |w| Box::new(NativeEngine::new(o2.clone(), 30, seed ^ 0x40u64.wrapping_add(w as u64))),
-    );
-    let o3 = obj.clone();
-    let asyn = run_asyn_local(
-        o.clone(),
-        &AsynOptions {
-            iterations,
-            tau,
-            workers,
-            batch: BatchSchedule::sfw(2.0, cap), // same schedule as dist: wall-clock comparison
-            eval_every: 10,
-            seed,
-            straggler: None,
-            link_latency: None,
-        },
-        move |w| Box::new(NativeEngine::new(o3.clone(), 30, seed ^ 0x50 ^ w as u64)),
-    );
+    let base = TrainSpec::new(TaskSpec::Prebuilt(Workload::Pnn(obj.clone())))
+        .iterations(iterations)
+        .tau(tau)
+        .workers(workers)
+        .batch(BatchSchedule::sfw(2.0, cap)) // same schedule both algos: wall-clock comparison
+        .eval_every(10)
+        .seed(seed)
+        .power_iters(30);
+    let dist = base.clone().algo("sfw-dist").run().expect("sfw-dist");
+    let asyn = base.clone().algo("sfw-asyn").run().expect("sfw-asyn");
 
     println!("   t(s)      SFW-dist rel      |    t(s)      SFW-asyn rel");
-    let rd = relative(&dist.trace.points(), 0.0);
-    let ra = relative(&asyn.trace.points(), 0.0);
+    let rd = dist.relative();
+    let ra = asyn.relative();
     for i in 0..rd.len().max(ra.len()) {
         let left = rd
             .get(i)
@@ -86,7 +63,7 @@ fn main() {
         println!("   {left} |    {right}");
     }
 
-    let (sd, sa) = (dist.counters.snapshot(), asyn.counters.snapshot());
+    let (sd, sa) = (dist.snapshot(), asyn.snapshot());
     println!("\ncomm totals (up): SFW-dist {} B, SFW-asyn {} B", sd.bytes_up, sa.bytes_up);
     println!(
         "train accuracy: SFW-dist {:.1}%, SFW-asyn {:.1}%",

@@ -7,44 +7,38 @@
 //! `examples/matrix_sensing.rs`, `examples/pnn_mnist.rs`; for the
 //! Python-free AOT/PJRT stack end to end see `examples/e2e_full_system.rs`.
 
-use std::sync::Arc;
-
-use sfw::algo::engine::NativeEngine;
-use sfw::algo::schedule::BatchSchedule;
-use sfw::coordinator::{run_asyn_local, AsynOptions};
-use sfw::experiments::{build_ms, relative};
-use sfw::objective::Objective;
+use sfw::experiments::build_ms;
+use sfw::runtime::Workload;
+use sfw::session::{TaskSpec, TrainSpec};
 
 fn main() {
     // 1. A nuclear-norm-constrained problem: recover a rank-3 30x30 matrix
     //    from 10 000 random linear measurements (paper §5.1, scaled down).
     let obj = build_ms(/*seed=*/ 7, /*n=*/ 10_000);
-    let o: Arc<dyn Objective> = obj.clone();
-    println!("matrix sensing: N={} examples, D=30x30, theta=1", o.n());
+    println!("matrix sensing: N={} examples, D=30x30, theta=1", obj.data.n);
 
     // 2. SFW-asyn: 4 workers, staleness tolerance tau=8, the Theorem-1
-    //    increasing batch schedule (tau^2 smaller than plain SFW's).
-    let opts = AsynOptions {
-        iterations: 300,
-        tau: 8,
-        workers: 4,
-        batch: BatchSchedule::sfw_asyn(/*scale=*/ 8.0, /*tau=*/ 8, /*cap=*/ 4_096),
-        eval_every: 20,
-        seed: 42,
-        straggler: None,
-        link_latency: None,
-    };
-    let o2 = obj.clone();
-    let result = run_asyn_local(o.clone(), &opts, move |w| {
-        Box::new(NativeEngine::new(o2.clone(), 40, 100 + w as u64))
-    });
+    //    increasing batch schedule (tau^2 smaller than plain SFW's) —
+    //    derived by the spec from batch_scale/tau/batch_cap.
+    let report = TrainSpec::new(TaskSpec::Prebuilt(Workload::Ms(obj)))
+        .algo("sfw-asyn")
+        .iterations(300)
+        .tau(8)
+        .workers(4)
+        .batch_scale(8.0)
+        .batch_cap(4_096)
+        .eval_every(20)
+        .seed(42)
+        .power_iters(40)
+        .run()
+        .expect("train");
 
     // 3. Report: relative loss curve + protocol counters.
     println!("\n   time(s)   iter   relative-loss");
-    for (t, k, rel) in relative(&result.trace.points(), o.f_star_hint()) {
+    for (t, k, rel) in report.relative() {
         println!("   {t:<9.3} {k:<6} {rel:.4e}");
     }
-    let s = result.counters.snapshot();
+    let s = report.snapshot();
     println!(
         "\nprotocol: {} accepted updates, {} dropped by the tau-gate,\n\
          {} B up / {} B down — every message O(D1+D2), never a dense matrix",

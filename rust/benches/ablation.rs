@@ -13,16 +13,12 @@
 
 use std::sync::Arc;
 
-use sfw::algo::engine::{NativeEngine, StepEngine};
-use sfw::algo::schedule::BatchSchedule;
-use sfw::algo::sfw::{run_sfw, SfwOptions};
+use sfw::algo::engine::StepEngine;
 use sfw::benchkit::{bench_for, Table};
-use sfw::coordinator::{run_asyn_local, AsynOptions};
-use sfw::experiments::{build_ms, relative};
+use sfw::experiments::build_ms;
 use sfw::linalg::Mat;
-use sfw::metrics::{Counters, LossTrace};
-use sfw::objective::Objective;
 use sfw::runtime::{PjrtEngine, PjrtRuntime, Workload};
+use sfw::session::{BatchSchedule, TaskSpec, TrainSpec};
 use sfw::util::rng::Rng;
 
 fn main() {
@@ -32,34 +28,24 @@ fn main() {
 }
 
 fn tau_sweep() {
-    let obj = build_ms(42, 20_000);
-    let o: Arc<dyn Objective> = obj.clone();
+    let task = TaskSpec::Prebuilt(Workload::Ms(build_ms(42, 20_000)));
+    let base = TrainSpec::new(task)
+        .algo("sfw-asyn")
+        .iterations(200)
+        .workers(8)
+        .batch(BatchSchedule::Constant(256))
+        .eval_every(200)
+        .seed(42)
+        .power_iters(30);
     let mut table = Table::new(
         "ablation: staleness tolerance tau (W=8, T=200, m=256)",
         &["tau", "final rel", "dropped", "drop %"],
     );
     let mut csv = Table::new("csv", &["tau", "rel", "dropped"]);
     for &tau in &[0u64, 1, 2, 4, 8, 16, 64] {
-        let o2 = obj.clone();
-        let r = run_asyn_local(
-            o.clone(),
-            &AsynOptions {
-                iterations: 200,
-                tau,
-                workers: 8,
-                batch: BatchSchedule::Constant(256),
-                eval_every: 200,
-                seed: 42,
-                straggler: None,
-                link_latency: None,
-            },
-            move |w| Box::new(NativeEngine::new(o2.clone(), 30, 43 + w as u64)),
-        );
-        let rel = relative(&r.trace.points(), o.f_star_hint())
-            .last()
-            .unwrap()
-            .2;
-        let s = r.counters.snapshot();
+        let r = base.clone().tau(tau).run().expect("train");
+        let rel = r.final_relative();
+        let s = r.snapshot();
         let total = s.iterations + s.dropped_updates;
         table.row(&[
             tau.to_string(),
@@ -113,29 +99,21 @@ fn bucket_padding() {
 }
 
 fn power_iteration_depth() {
-    let obj = build_ms(7, 10_000);
-    let o: Arc<dyn Objective> = obj.clone();
+    let task = TaskSpec::Prebuilt(Workload::Ms(build_ms(7, 10_000)));
+    let base = TrainSpec::new(task)
+        .algo("sfw")
+        .iterations(150)
+        .batch(BatchSchedule::Constant(512))
+        .eval_every(150)
+        .seed(9);
     let mut table = Table::new(
         "ablation: power-iteration depth (serial SFW, T=150, m=512)",
         &["max iters", "final rel", "mean LMO iters used"],
     );
     let mut csv = Table::new("csv", &["iters", "rel"]);
     for &pi in &[1usize, 2, 4, 8, 16, 64] {
-        let counters = Counters::new();
-        let trace = LossTrace::new();
-        let mut engine = NativeEngine::new(o.clone(), pi, 8);
-        run_sfw(
-            &mut engine,
-            &SfwOptions {
-                iterations: 150,
-                batch: BatchSchedule::Constant(512),
-                eval_every: 150,
-                seed: 9,
-            },
-            &counters,
-            &trace,
-        );
-        let rel = relative(&trace.points(), o.f_star_hint()).last().unwrap().2;
+        let r = base.clone().power_iters(pi).run().expect("train");
+        let rel = r.final_relative();
         table.row(&[pi.to_string(), format!("{rel:.3e}"), format!("<= {pi}")]);
         csv.row(&[pi.to_string(), format!("{rel:.5e}")]);
     }

@@ -9,16 +9,10 @@
 //! and the asyn/dist gap widens from matrix sensing (D^2 = 900) to PNN
 //! (D^2 = 38 416 at the default 196; 614k at paper scale 784).
 
-use std::sync::Arc;
-
-use sfw::algo::engine::NativeEngine;
-use sfw::algo::schedule::BatchSchedule;
 use sfw::benchkit::Table;
-use sfw::coordinator::dfw_power::{run_dfw_power, DfwOptions};
-use sfw::coordinator::sva::{run_sva, SvaOptions};
-use sfw::coordinator::{run_asyn_local, run_dist, AsynOptions, DistOptions};
 use sfw::experiments::{build_ms, build_pnn};
-use sfw::objective::Objective;
+use sfw::runtime::Workload;
+use sfw::session::{BatchSchedule, TaskSpec, TrainSpec};
 
 fn main() {
     let workers = 4usize;
@@ -29,75 +23,32 @@ fn main() {
     );
     let mut csv = Table::new("csv", &["task", "algo", "up", "down", "dense"]);
 
-    for (task, obj) in [
-        ("matrix_sensing 30x30", build_ms(42, 10_000) as Arc<dyn Objective>),
-        ("pnn 196x196", build_pnn(43, 196, 5_000) as Arc<dyn Objective>),
+    for (task_name, workload) in [
+        ("matrix_sensing 30x30", Workload::Ms(build_ms(42, 10_000))),
+        ("pnn 196x196", Workload::Pnn(build_pnn(43, 196, 5_000))),
     ] {
-        let (d1, d2) = obj.dims();
+        let (d1, d2) = workload.objective().dims();
         let dense = 4 * d1 * d2;
-        let batch = BatchSchedule::Constant(128);
+        let base = TrainSpec::new(TaskSpec::Prebuilt(workload))
+            .iterations(iters)
+            .tau(8)
+            .workers(workers)
+            .batch(BatchSchedule::Constant(128))
+            .eval_every(iters)
+            .seed(1)
+            .power_iters(30)
+            .dfw_rounds(1, 0.5);
 
-        let o2 = obj.clone();
-        let asyn = run_asyn_local(
-            obj.clone(),
-            &AsynOptions {
-                iterations: iters,
-                tau: 8,
-                workers,
-                batch: batch.clone(),
-                eval_every: iters,
-                seed: 1,
-                straggler: None,
-                link_latency: None,
-            },
-            move |w| Box::new(NativeEngine::new(o2.clone(), 30, 2 + w as u64)),
-        );
-        let o3 = obj.clone();
-        let dist = run_dist(
-            obj.clone(),
-            &DistOptions {
-                iterations: iters,
-                workers,
-                batch: batch.clone(),
-                eval_every: iters,
-                seed: 1,
-                straggler: None,
-            },
-            move |w| Box::new(NativeEngine::new(o3.clone(), 30, 2u64.wrapping_add(w as u64))),
-        );
-        let o4 = obj.clone();
-        let sva = run_sva(
-            obj.clone(),
-            &SvaOptions {
-                iterations: iters,
-                workers,
-                batch: batch.clone(),
-                eval_every: iters,
-                seed: 1,
-            },
-            move |w| Box::new(NativeEngine::new(o4.clone(), 30, 2 + w as u64)),
-        );
-        let dfw = run_dfw_power(
-            obj.clone(),
-            &DfwOptions {
-                iterations: iters,
-                workers,
-                rounds_base: 1,
-                rounds_slope: 0.5,
-                eval_every: iters,
-                seed: 1,
-            },
-        );
-
-        for (name, s) in [
-            ("SFW-asyn", asyn.counters.snapshot()),
-            ("SFW-dist", dist.counters.snapshot()),
-            ("SVA", sva.counters.snapshot()),
-            ("DFW-power", dfw.counters.snapshot()),
+        for (name, algo) in [
+            ("SFW-asyn", "sfw-asyn"),
+            ("SFW-dist", "sfw-dist"),
+            ("SVA", "sva"),
+            ("DFW-power", "dfw-power"),
         ] {
+            let s = base.clone().algo(algo).run().expect("train").snapshot();
             let per = |b: u64| b / s.iterations.max(1);
             table.row(&[
-                task.into(),
+                task_name.into(),
                 name.into(),
                 per(s.bytes_up).to_string(),
                 per(s.bytes_down).to_string(),
@@ -105,7 +56,7 @@ fn main() {
                 dense.to_string(),
             ]);
             csv.row(&[
-                task.into(),
+                task_name.into(),
                 name.into(),
                 per(s.bytes_up).to_string(),
                 per(s.bytes_down).to_string(),

@@ -11,80 +11,47 @@
 //!
 //! Emits bench_out/fig4_<task>.csv with (algo, W, t, iter, rel_loss) rows.
 
-use std::sync::Arc;
 use std::time::Duration;
 
-use sfw::algo::engine::NativeEngine;
-use sfw::algo::schedule::BatchSchedule;
 use sfw::benchkit::Table;
-use sfw::coordinator::{run_asyn_local, run_dist, AsynOptions, DistOptions, Straggler};
-use sfw::experiments::{build_ms, build_pnn, relative, time_to_relative};
-use sfw::objective::Objective;
+use sfw::experiments::{build_ms, build_pnn};
+use sfw::session::{BatchSchedule, Straggler, TaskSpec, TrainSpec};
 
-fn straggler() -> Option<Straggler> {
+fn straggler() -> Straggler {
     // sleep-dominated heterogeneity: emulates EC2 worker skew and
     // parallelizes cleanly across threads (unlike CPU-bound compute on a
     // shared host), so wall-clock scaling reflects the protocol, not the
     // local core count
-    Some(Straggler { unit: Duration::from_micros(20), p: 0.25 })
+    Straggler { unit: Duration::from_micros(20), p: 0.25 }
 }
 
 struct Curve {
     algo: &'static str,
     workers: usize,
     points: Vec<(f64, u64, f64)>,
+    time_to_target: Option<f64>,
 }
 
-fn run_task(
-    name: &str,
-    obj: Arc<dyn Objective>,
-    iterations: u64,
-    batch: usize,
-    tau: u64,
-    target: f64,
-) {
-    let seed = 42u64;
-    let f_star = obj.f_star_hint();
+fn run_task(name: &str, task: TaskSpec, iterations: u64, batch: usize, tau: u64, target: f64) {
+    let base = TrainSpec::new(task)
+        .iterations(iterations)
+        .tau(tau)
+        .batch(BatchSchedule::Constant(batch)) // same schedule both algos (wall-clock comparison)
+        .eval_every(10)
+        .seed(42)
+        .power_iters(30)
+        .straggler(straggler());
     let mut curves: Vec<Curve> = Vec::new();
     for &w in &[1usize, 7, 15] {
-        let o2 = obj.clone();
-        let dist = run_dist(
-            obj.clone(),
-            &DistOptions {
-                iterations,
+        for algo in ["sfw-dist", "sfw-asyn"] {
+            let r = base.clone().algo(algo).workers(w).run().expect("train");
+            curves.push(Curve {
+                algo,
                 workers: w,
-                batch: BatchSchedule::Constant(batch),
-                eval_every: 10,
-                seed,
-                straggler: straggler(),
-            },
-            move |i| Box::new(NativeEngine::new(o2.clone(), 30, seed ^ 0x100u64.wrapping_add(i as u64))),
-        );
-        curves.push(Curve {
-            algo: "sfw-dist",
-            workers: w,
-            points: relative(&dist.trace.points(), f_star),
-        });
-        let o3 = obj.clone();
-        let asyn = run_asyn_local(
-            obj.clone(),
-            &AsynOptions {
-                iterations,
-                tau,
-                workers: w,
-                batch: BatchSchedule::Constant(batch), // same schedule both algos (wall-clock comparison)
-                eval_every: 10,
-                seed,
-                straggler: straggler(),
-                link_latency: None,
-            },
-            move |i| Box::new(NativeEngine::new(o3.clone(), 30, seed ^ 0x200 ^ i as u64)),
-        );
-        curves.push(Curve {
-            algo: "sfw-asyn",
-            workers: w,
-            points: relative(&asyn.trace.points(), f_star),
-        });
+                points: r.relative(),
+                time_to_target: r.time_to_relative(target),
+            });
+        }
     }
 
     // summary: time to target per curve
@@ -94,12 +61,8 @@ fn run_task(
     );
     let mut csv = Table::new("csv", &["algo", "W", "t", "iter", "rel"]);
     for c in &curves {
-        let raw: Vec<sfw::metrics::TracePoint> = c
-            .points
-            .iter()
-            .map(|&(t, i, r)| sfw::metrics::TracePoint { t, iteration: i, loss: r })
-            .collect();
-        let tt = time_to_relative(&raw, 0.0, target)
+        let tt = c
+            .time_to_target
             .map(|t| format!("{t:.3}"))
             .unwrap_or_else(|| "—".into());
         table.row(&[
@@ -126,11 +89,11 @@ fn run_task(
 
 fn main() {
     println!("== Fig 4 row 1: matrix sensing (30x30, synthetic) ==");
-    let ms = build_ms(42, 20_000);
+    let ms = TaskSpec::Prebuilt(sfw::runtime::Workload::Ms(build_ms(42, 20_000)));
     run_task("matrix_sensing", ms, 300, 256, 8, 0.02);
 
     println!("\n== Fig 4 row 2: PNN (196x196 default; paper runs 784x784) ==");
-    let pnn = build_pnn(43, 196, 8_000);
+    let pnn = TaskSpec::Prebuilt(sfw::runtime::Workload::Pnn(build_pnn(43, 196, 8_000)));
     run_task("pnn", pnn, 400, 256, 2, 0.65);
 
     println!("\nExpected shape (paper §5.2): clear speedups for both algos on");

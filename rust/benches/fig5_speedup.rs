@@ -7,77 +7,52 @@
 //! consistently exceeds SFW-dist's, which saturates (barrier + dense
 //! traffic).  Emits bench_out/fig5_<task>.csv.
 
-use std::sync::Arc;
 use std::time::Duration;
 
-use sfw::algo::engine::NativeEngine;
-use sfw::algo::schedule::BatchSchedule;
 use sfw::benchkit::Table;
-use sfw::coordinator::{run_asyn_local, run_dist, AsynOptions, DistOptions, Straggler};
-use sfw::experiments::{build_ms, build_pnn, time_to_relative};
-use sfw::objective::Objective;
+use sfw::experiments::{build_ms, build_pnn};
+use sfw::runtime::Workload;
+use sfw::session::{BatchSchedule, Straggler, TaskSpec, TrainSpec};
 
-fn straggler() -> Option<Straggler> {
+fn straggler() -> Straggler {
     // sleep-dominated heterogeneity (see fig4_convergence.rs)
-    Some(Straggler { unit: Duration::from_micros(20), p: 0.25 })
+    Straggler { unit: Duration::from_micros(20), p: 0.25 }
 }
 
-fn time_to(obj: &Arc<dyn Objective>, algo: &str, w: usize, iters: u64, batch: usize, tau: u64, target: f64) -> Option<f64> {
-    let seed = 42u64;
-    let f_star = obj.f_star_hint();
-    let pts = match algo {
-        "dist" => {
-            let o2 = obj.clone();
-            run_dist(
-                obj.clone(),
-                &DistOptions {
-                    iterations: iters,
-                    workers: w,
-                    batch: BatchSchedule::Constant(batch),
-                    eval_every: 5,
-                    seed,
-                    straggler: straggler(),
-                },
-                move |i| Box::new(NativeEngine::new(o2.clone(), 30, seed ^ 0x300u64.wrapping_add(i as u64))),
-            )
-            .trace
-            .points()
-        }
-        _ => {
-            let o2 = obj.clone();
-            run_asyn_local(
-                obj.clone(),
-                &AsynOptions {
-                    iterations: iters,
-                    tau,
-                    workers: w,
-                    batch: BatchSchedule::Constant(batch), // same schedule both algos
-                    eval_every: 5,
-                    seed,
-                    straggler: straggler(),
-                    link_latency: None,
-                },
-                move |i| Box::new(NativeEngine::new(o2.clone(), 30, seed ^ 0x400 ^ i as u64)),
-            )
-            .trace
-            .points()
-        }
-    };
-    time_to_relative(&pts, f_star, target)
+fn time_to(
+    base: &TrainSpec,
+    algo: &str,
+    w: usize,
+    target: f64,
+) -> Option<f64> {
+    base.clone()
+        .algo(algo)
+        .workers(w)
+        .run()
+        .expect("train")
+        .time_to_relative(target)
 }
 
-fn run_task(name: &str, obj: Arc<dyn Objective>, iters: u64, batch: usize, tau: u64, target: f64) {
+fn run_task(name: &str, task: TaskSpec, iters: u64, batch: usize, tau: u64, target: f64) {
+    let base = TrainSpec::new(task)
+        .iterations(iters)
+        .tau(tau)
+        .batch(BatchSchedule::Constant(batch)) // same schedule both algos
+        .eval_every(5)
+        .seed(42)
+        .power_iters(30)
+        .straggler(straggler());
     let workers = [1usize, 3, 7, 11, 15];
     let mut table = Table::new(
         &format!("Fig 5 ({name}): speedup to rel err {target} vs 1 worker"),
         &["W", "dist t(s)", "dist speedup", "asyn t(s)", "asyn speedup"],
     );
     let mut csv = Table::new("csv", &["algo", "W", "t", "speedup"]);
-    let base_d = time_to(&obj, "dist", 1, iters, batch, tau, target);
-    let base_a = time_to(&obj, "asyn", 1, iters, batch, tau, target);
+    let base_d = time_to(&base, "sfw-dist", 1, target);
+    let base_a = time_to(&base, "sfw-asyn", 1, target);
     for &w in &workers {
-        let td = time_to(&obj, "dist", w, iters, batch, tau, target);
-        let ta = time_to(&obj, "asyn", w, iters, batch, tau, target);
+        let td = time_to(&base, "sfw-dist", w, target);
+        let ta = time_to(&base, "sfw-asyn", w, target);
         let sp = |base: Option<f64>, t: Option<f64>| match (base, t) {
             (Some(b), Some(t)) if t > 0.0 => format!("{:.2}x", b / t),
             _ => "—".into(),
@@ -105,9 +80,9 @@ fn run_task(name: &str, obj: Arc<dyn Objective>, iters: u64, batch: usize, tau: 
 
 fn main() {
     println!("== Fig 5: time-to-target speedups (straggler-injected threads) ==");
-    let ms = build_ms(42, 20_000);
+    let ms = TaskSpec::Prebuilt(Workload::Ms(build_ms(42, 20_000)));
     run_task("matrix_sensing", ms, 500, 256, 8, 0.02);
-    let pnn = build_pnn(43, 196, 8_000);
+    let pnn = TaskSpec::Prebuilt(Workload::Pnn(build_pnn(43, 196, 8_000)));
     run_task("pnn", pnn, 400, 256, 2, 0.65);
     println!("\nExpected shape: asyn speedup ~ linear in W and above dist at every W;");
     println!("dist saturates earlier on PNN (dense-gradient aggregation grows with D^2).");

@@ -11,31 +11,22 @@
 //! reading the crossing iteration from the trace.  Emits
 //! bench_out/table1.csv.
 
-use std::sync::Arc;
-
-use sfw::algo::engine::NativeEngine;
-use sfw::algo::schedule::BatchSchedule;
-use sfw::algo::sfw::{run_sfw, SfwOptions};
 use sfw::benchkit::Table;
-use sfw::coordinator::{run_asyn_local, AsynOptions};
 use sfw::experiments::build_ms;
-use sfw::metrics::{Counters, LossTrace};
-use sfw::objective::Objective;
+use sfw::runtime::Workload;
+use sfw::session::{BatchSchedule, Report, TaskSpec, TrainSpec};
 
 const EPS: f64 = 0.05;
 const C_SFW: usize = 2_048; // fixed batch c for plain SFW
 const MAX_ITERS: u64 = 4_000;
 
-/// iterations to reach EPS (from the trace), or None.
-fn iters_to_eps(pts: &[sfw::metrics::TracePoint], f_star: f64) -> Option<u64> {
-    let raw = sfw::experiments::relative(pts, f_star);
-    raw.iter().find(|(_, _, r)| *r <= EPS).map(|(_, i, _)| *i)
+/// iterations to reach EPS (from the relative-loss trace), or None.
+fn iters_to_eps(r: &Report) -> Option<u64> {
+    r.relative().iter().find(|(_, _, rel)| *rel <= EPS).map(|(_, i, _)| *i)
 }
 
 fn main() {
-    let obj = build_ms(42, 60_000);
-    let o: Arc<dyn Objective> = obj.clone();
-    let f_star = o.f_star_hint();
+    let task = TaskSpec::Prebuilt(Workload::Ms(build_ms(42, 60_000)));
     let mut table = Table::new(
         &format!("Table 1: ops to reach rel err {EPS} (fixed batch, measured)"),
         &["algorithm", "tau", "batch c", "# lin. opt.", "# sto. grad.", "grad ratio", "lmo ratio"],
@@ -43,21 +34,16 @@ fn main() {
     let mut csv = Table::new("csv", &["algo", "tau", "batch", "lmos", "grads"]);
 
     // --- plain SFW baseline ------------------------------------------------
-    let counters = Counters::new();
-    let trace = LossTrace::new();
-    let mut engine = NativeEngine::new(o.clone(), 30, 7);
-    run_sfw(
-        &mut engine,
-        &SfwOptions {
-            iterations: MAX_ITERS / 4,
-            batch: BatchSchedule::Constant(C_SFW),
-            eval_every: 2,
-            seed: 11,
-        },
-        &counters,
-        &trace,
-    );
-    let k_sfw = iters_to_eps(&trace.points(), f_star).expect("SFW never reached eps");
+    let sfw = TrainSpec::new(task.clone())
+        .algo("sfw")
+        .iterations(MAX_ITERS / 4)
+        .batch(BatchSchedule::Constant(C_SFW))
+        .eval_every(2)
+        .seed(11)
+        .power_iters(30)
+        .run()
+        .expect("train");
+    let k_sfw = iters_to_eps(&sfw).expect("SFW never reached eps");
     let (lmo_sfw, grad_sfw) = (k_sfw, k_sfw * C_SFW as u64);
     table.row(&[
         "SFW".into(),
@@ -73,22 +59,18 @@ fn main() {
     // --- SFW-asyn at several tau --------------------------------------------
     for &tau in &[2u64, 4, 8] {
         let c_asyn = (C_SFW as u64 / (tau * tau)).max(1) as usize; // Thm 4: c/tau^2
-        let o2 = obj.clone();
-        let r = run_asyn_local(
-            o.clone(),
-            &AsynOptions {
-                iterations: MAX_ITERS,
-                tau,
-                workers: 4,
-                batch: BatchSchedule::Constant(c_asyn),
-                eval_every: 10,
-                seed: 11,
-                straggler: None,
-                link_latency: None,
-            },
-            move |w| Box::new(NativeEngine::new(o2.clone(), 30, 13 + w as u64)),
-        );
-        match iters_to_eps(&r.trace.points(), f_star) {
+        let r = TrainSpec::new(task.clone())
+            .algo("sfw-asyn")
+            .iterations(MAX_ITERS)
+            .tau(tau)
+            .workers(4)
+            .batch(BatchSchedule::Constant(c_asyn))
+            .eval_every(10)
+            .seed(11)
+            .power_iters(30)
+            .run()
+            .expect("train");
+        match iters_to_eps(&r) {
             Some(k) => {
                 let (lmo, grad) = (k, k * c_asyn as u64);
                 table.row(&[

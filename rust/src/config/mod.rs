@@ -79,6 +79,10 @@ impl Config {
         self.values.insert(key.to_string(), value.to_string());
     }
 
+    pub fn get_opt(&self, key: &str) -> Option<String> {
+        self.values.get(key).cloned()
+    }
+
     pub fn get_str(&self, key: &str, default: &str) -> String {
         self.values.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
@@ -102,7 +106,8 @@ impl Config {
 pub struct TrainConfig {
     /// "matrix_sensing" | "pnn".
     pub task: String,
-    /// "sfw" | "sfw-dist" | "sfw-asyn" | "svrf" | "svrf-asyn" | "pgd" | "sva" | "dfw-power".
+    /// Algorithm name resolved against `session::registry()` ("sfw",
+    /// "sfw-asyn", "svrf-asyn", "sfw-dist", "sva", "dfw-power", "pgd").
     pub algo: String,
     pub workers: usize,
     pub tau: u64,
@@ -115,6 +120,10 @@ pub struct TrainConfig {
     pub eval_every: u64,
     /// "native" | "pjrt".
     pub engine: String,
+    /// "local" | "tcp".
+    pub transport: String,
+    /// SVRF-asyn outer epochs; 0 = derive from `iterations`.
+    pub epochs: u32,
     pub artifacts_dir: String,
     // dataset
     pub ms_n: usize,
@@ -140,6 +149,8 @@ impl Default for TrainConfig {
             seed: 42,
             eval_every: 10,
             engine: "native".into(),
+            transport: "local".into(),
+            epochs: 0,
             artifacts_dir: "artifacts".into(),
             ms_n: 90_000,
             ms_d: 30,
@@ -159,21 +170,38 @@ impl TrainConfig {
         } else {
             Config::new()
         };
-        // CLI flags override file values (flat names).
-        for key in [
-            "task", "algo", "engine", "artifacts-dir",
-        ] {
-            if let Some(v) = args.get_opt(key) {
-                cfg.set(key, &v);
+        // Launcher keys by owning section: `[train]` groups run knobs,
+        // `[data]` groups dataset knobs.  A key in the WRONG section is
+        // ignored (not silently honored).
+        const TRAIN_KEYS: &[&str] = &[
+            "task", "algo", "engine", "transport", "artifacts-dir",
+            "workers", "tau", "iterations", "epochs", "batch-cap",
+            "batch-scale", "power-iters", "theta", "seed", "eval-every",
+        ];
+        const DATA_KEYS: &[&str] = &["ms-n", "ms-d", "ms-rank", "ms-noise", "pnn-n", "pnn-d"];
+
+        // 1. Promote file-sectioned keys to their flat names (a flat
+        //    entry in the file wins over a sectioned one).
+        for (keys, section) in [(TRAIN_KEYS, "train"), (DATA_KEYS, "data")] {
+            for key in keys {
+                if cfg.get_opt(key).is_none() {
+                    if let Some(v) = cfg.get_opt(&format!("{section}.{key}")) {
+                        cfg.set(key, &v);
+                    }
+                }
             }
         }
-        for key in [
-            "workers", "tau", "iterations", "batch-cap", "batch-scale",
-            "power-iters", "theta", "seed", "eval-every", "ms-n", "ms-d",
-            "ms-rank", "ms-noise", "pnn-n", "pnn-d",
-        ] {
-            if let Some(v) = args.get_opt(key) {
-                cfg.set(key, &v);
+        // 2. CLI flags override file values.  Sectioned spellings
+        //    (`--train.workers 8`, `--data.ms-n 90000`) are accepted for
+        //    the owning section; the flat spelling wins when both are
+        //    given.
+        for (keys, section) in [(TRAIN_KEYS, "train"), (DATA_KEYS, "data")] {
+            for key in keys {
+                for cand in [format!("{section}.{key}"), (*key).to_string()] {
+                    if let Some(v) = args.get_opt(&cand) {
+                        cfg.set(key, &v);
+                    }
+                }
             }
         }
         let d = TrainConfig::default();
@@ -190,6 +218,8 @@ impl TrainConfig {
             seed: cfg.get("seed", d.seed)?,
             eval_every: cfg.get("eval-every", d.eval_every)?,
             engine: cfg.get_str("engine", &d.engine),
+            transport: cfg.get_str("transport", &d.transport),
+            epochs: cfg.get("epochs", d.epochs)?,
             artifacts_dir: cfg.get_str("artifacts-dir", &d.artifacts_dir),
             ms_n: cfg.get("ms-n", d.ms_n)?,
             ms_d: cfg.get("ms-d", d.ms_d)?,
@@ -250,5 +280,52 @@ n = 90000
         assert_eq!(tc.tau, 6);
         assert_eq!(tc.engine, "pjrt");
         assert_eq!(tc.iterations, 300); // default survives
+        assert_eq!(tc.transport, "local"); // new default
+    }
+
+    #[test]
+    fn sectioned_cli_overrides_resolve() {
+        let args = Args::parse_from(
+            "--train.workers 9 --data.ms-n 1234 --transport tcp"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let tc = TrainConfig::load(&args).unwrap();
+        assert_eq!(tc.workers, 9);
+        assert_eq!(tc.ms_n, 1234);
+        assert_eq!(tc.transport, "tcp");
+    }
+
+    #[test]
+    fn wrong_section_keys_are_ignored() {
+        // `workers` belongs to [train]; a [data]-spelled override must
+        // not leak into the training config (and vice versa).
+        let args = Args::parse_from(
+            "--data.workers 2 --train.ms-n 10".split_whitespace().map(String::from),
+        );
+        let tc = TrainConfig::load(&args).unwrap();
+        assert_eq!(tc.workers, TrainConfig::default().workers);
+        assert_eq!(tc.ms_n, TrainConfig::default().ms_n);
+    }
+
+    #[test]
+    fn flat_cli_beats_sectioned() {
+        let args = Args::parse_from(
+            "--train.workers 9 --workers 3".split_whitespace().map(String::from),
+        );
+        let tc = TrainConfig::load(&args).unwrap();
+        assert_eq!(tc.workers, 3);
+    }
+
+    #[test]
+    fn bad_cli_value_is_a_config_error() {
+        let args = Args::parse_from("--workers abc".split_whitespace().map(String::from));
+        match TrainConfig::load(&args) {
+            Err(ConfigError::BadValue(k, v)) => {
+                assert_eq!(k, "workers");
+                assert_eq!(v, "abc");
+            }
+            other => panic!("expected BadValue, got {other:?}"),
+        }
     }
 }

@@ -62,7 +62,14 @@ enum Rep {
     Mtv(Vec<f32>),
 }
 
+/// Run DFW-power — **deprecated shim**; prefer `sfw::session::TrainSpec`
+/// with `.algo("dfw-power")`.
+#[deprecated(since = "0.2.0", note = "use sfw::session::TrainSpec with .algo(\"dfw-power\")")]
 pub fn run_dfw_power(obj: Arc<dyn Objective>, opts: &DfwOptions) -> RunResult {
+    run_dfw_power_impl(obj, opts)
+}
+
+pub(crate) fn run_dfw_power_impl(obj: Arc<dyn Objective>, opts: &DfwOptions) -> RunResult {
     let counters = Arc::new(Counters::new());
     let trace = Arc::new(LossTrace::new());
     let evaluator = Evaluator::new(obj.clone(), trace.clone());
@@ -210,7 +217,7 @@ mod tests {
             eval_every: 10,
             seed: 131,
         };
-        let r = run_dfw_power(obj, &opts);
+        let r = run_dfw_power_impl(obj, &opts);
         let pts = r.trace.points();
         assert!(
             pts.last().unwrap().loss < 0.4 * pts.first().unwrap().loss,

@@ -1,7 +1,7 @@
 //! The distributed coordinator — the paper's system contribution (L3).
 //!
-//! * [`master`] / [`worker`] / [`runner`] — SFW-asyn (Algorithm 3): the
-//!   asynchronous, O(D1+D2)-per-message protocol.
+//! * [`master`] / [`worker`] — SFW-asyn (Algorithm 3): the asynchronous,
+//!   O(D1+D2)-per-message protocol.
 //! * [`svrf_asyn`] — SVRF-asyn (Algorithm 5).
 //! * [`sync`] — SFW-dist (Algorithm 1), the synchronous baseline.
 //! * [`sva`] — Singular Vector Averaging, the divergent naive baseline.
@@ -9,6 +9,12 @@
 //!   the O(T^2 (D1+D2)) communication prior art.
 //! * [`update_log`] / [`messages`] — the rank-one log and wire types.
 //! * [`eval`] — off-thread objective evaluation for loss traces.
+//!
+//! **Entry points moved:** training runs start from
+//! [`crate::session::TrainSpec`], which owns the transport/engine/metrics
+//! wiring for every algorithm here.  The old `run_*` functions in
+//! [`runner`], [`svrf_asyn`], [`sync`], [`sva`] and [`dfw_power`] remain
+//! as thin deprecated shims for one release.
 
 pub mod dfw_power;
 pub mod eval;
@@ -22,8 +28,14 @@ pub mod update_log;
 pub mod worker;
 
 pub use messages::{LogEntry, MasterMsg, UpdateMsg};
-pub use runner::{run_asyn_local, run_asyn_tcp, AsynOptions, RunResult};
-pub use svrf_asyn::{run_svrf_asyn_local, SvrfAsynOptions};
-pub use sync::{run_dist, DistOptions};
+#[allow(deprecated)]
+pub use runner::{run_asyn_local, run_asyn_tcp};
+pub use runner::{AsynOptions, RunResult};
+#[allow(deprecated)]
+pub use svrf_asyn::run_svrf_asyn_local;
+pub use svrf_asyn::SvrfAsynOptions;
+#[allow(deprecated)]
+pub use sync::run_dist;
+pub use sync::DistOptions;
 pub use update_log::{replay, replay_after, UpdateLog};
 pub use worker::Straggler;

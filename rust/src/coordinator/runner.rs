@@ -1,20 +1,30 @@
-//! Harness that wires master + workers over a transport and runs one
-//! SFW-asyn training job end to end (threads for workers, caller thread
-//! for the master — mirroring one MPI rank per process).
+//! SFW-asyn run entry points — **deprecated shims**.
+//!
+//! The harness that wires master + workers over a transport moved to
+//! `sfw::session` (one implementation, transport as a spec field); prefer
+//!
+//! ```no_run
+//! use sfw::session::{TaskSpec, TrainSpec, Transport};
+//! let r = TrainSpec::new(TaskSpec::ms_small())
+//!     .algo("sfw-asyn")
+//!     .transport(Transport::Tcp)
+//!     .run()
+//!     .unwrap();
+//! ```
+//!
+//! These wrappers are kept for one release for downstream callers that
+//! still hold an [`AsynOptions`] + engine closure.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::BatchSchedule;
-use crate::coordinator::eval::Evaluator;
-use crate::coordinator::master::{run_master, MasterOptions};
-use crate::coordinator::worker::{run_worker, Straggler, WorkerOptions};
+use crate::coordinator::worker::Straggler;
 use crate::linalg::Mat;
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
-use crate::transport::local::local_links;
-
+use crate::session::Transport;
 
 pub struct AsynOptions {
     pub iterations: u64,
@@ -51,134 +61,37 @@ pub struct RunResult {
 
 /// Run SFW-asyn over the in-process transport.  `make_engine(w)` builds
 /// worker w's compute engine (native math or a PJRT artifact executor).
+#[deprecated(since = "0.2.0", note = "use sfw::session::TrainSpec with .algo(\"sfw-asyn\")")]
 pub fn run_asyn_local<F>(
     obj: Arc<dyn Objective>,
     opts: &AsynOptions,
-    mut make_engine: F,
+    make_engine: F,
 ) -> RunResult
 where
     F: FnMut(usize) -> Box<dyn StepEngine>,
 {
-    let counters = Arc::new(Counters::new());
-    let trace = Arc::new(LossTrace::new());
-    let (mut mlink, wlinks) = local_links(opts.workers, counters.clone(), opts.link_latency);
-    let evaluator = Evaluator::new(obj.clone(), trace.clone());
-
-    let mut handles = Vec::new();
-    for (w, mut wlink) in wlinks.into_iter().enumerate() {
-        let mut engine = make_engine(w);
-        let counters = counters.clone();
-        let wopts = WorkerOptions {
-            worker_id: w as u32,
-            batch: opts.batch.clone(),
-            seed: opts.seed,
-            straggler: opts.straggler,
-        };
-        handles.push(std::thread::spawn(move || {
-            run_worker(&mut wlink, engine.as_mut(), &wopts, &counters);
-        }));
-    }
-
-    let mopts = MasterOptions {
-        iterations: opts.iterations,
-        tau: opts.tau,
-        eval_every: opts.eval_every,
-        seed: opts.seed,
-    };
-    let x = run_master(&mut mlink, &obj, &mopts, &counters, &trace, &evaluator);
-    for h in handles {
-        let _ = h.join();
-    }
-    evaluator.finish();
-    RunResult { x, counters, trace }
+    crate::session::harness::run_asyn(obj, opts, Transport::Local, make_engine)
 }
 
 /// Run SFW-asyn over real localhost TCP sockets (same protocol, true
 /// serialization + kernel queues).  Master binds an ephemeral port.
+#[deprecated(
+    since = "0.2.0",
+    note = "use sfw::session::TrainSpec with .algo(\"sfw-asyn\").transport(Transport::Tcp)"
+)]
 pub fn run_asyn_tcp<F>(
     obj: Arc<dyn Objective>,
     opts: &AsynOptions,
-    mut make_engine: F,
+    make_engine: F,
 ) -> RunResult
 where
     F: FnMut(usize) -> Box<dyn StepEngine>,
 {
-    use crate::transport::tcp::{tcp_master, tcp_worker};
-    let counters = Arc::new(Counters::new());
-    let trace = Arc::new(LossTrace::new());
-    let evaluator = Evaluator::new(obj.clone(), trace.clone());
-
-    // Bind first on an ephemeral port, then hand the resolved address to
-    // the workers.
-    let workers = opts.workers;
-    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
-    let counters_m = counters.clone();
-    let master_thread = {
-        let obj = obj.clone();
-        let trace = trace.clone();
-        let mopts = MasterOptions {
-            iterations: opts.iterations,
-            tau: opts.tau,
-            eval_every: opts.eval_every,
-            seed: opts.seed,
-        };
-        std::thread::spawn(move || {
-            // accept() inside tcp_master blocks until all workers connect;
-            // publish the address before constructing it.
-            let listener_addr = "127.0.0.1:0";
-            let (mut mlink, addr) = {
-                // Bind manually to learn the port before accepting.
-                let l = std::net::TcpListener::bind(listener_addr).unwrap();
-                let addr = l.local_addr().unwrap();
-                drop(l); // tcp_master re-binds; tiny race acceptable on loopback
-                addr_tx.send(addr).unwrap();
-                let (m, a) = tcp_master(&addr.to_string(), workers, counters_m.clone()).unwrap();
-                (m, a)
-            };
-            let _ = addr;
-            let x = run_master(&mut mlink, &obj, &mopts, &counters_m, &trace, &evaluator);
-            evaluator.finish();
-            x
-        })
-    };
-    let addr = addr_rx.recv().unwrap();
-    // workers connect (retry briefly while master rebinds)
-    let mut handles = Vec::new();
-    for w in 0..opts.workers {
-        let mut engine = make_engine(w);
-        let counters = counters.clone();
-        let wopts = WorkerOptions {
-            worker_id: w as u32,
-            batch: opts.batch.clone(),
-            seed: opts.seed,
-            straggler: opts.straggler,
-        };
-        handles.push(std::thread::spawn(move || {
-            let mut link = {
-                let mut tries = 0;
-                loop {
-                    match tcp_worker(&addr.to_string(), w as u32, counters.clone()) {
-                        Ok(l) => break l,
-                        Err(e) if tries < 50 => {
-                            tries += 1;
-                            std::thread::sleep(Duration::from_millis(20));
-                            let _ = e;
-                        }
-                        Err(e) => panic!("worker {w} cannot connect: {e}"),
-                    }
-                }
-            };
-            run_worker(&mut link, engine.as_mut(), &wopts, &counters);
-        }));
-    }
-    let x = master_thread.join().unwrap();
-    for h in handles {
-        let _ = h.join();
-    }
-    RunResult { x, counters, trace }
+    crate::session::harness::run_asyn(obj, opts, Transport::Tcp, make_engine)
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the back-compat shims on purpose
 mod tests {
     use super::*;
     use crate::algo::engine::NativeEngine;

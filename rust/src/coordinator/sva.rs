@@ -41,7 +41,21 @@ struct Rep {
     v: Vec<f32>,
 }
 
-pub fn run_sva<F>(obj: Arc<dyn Objective>, opts: &SvaOptions, mut make_engine: F) -> RunResult
+/// Run SVA — **deprecated shim**; prefer `sfw::session::TrainSpec` with
+/// `.algo("sva")`.
+#[deprecated(since = "0.2.0", note = "use sfw::session::TrainSpec with .algo(\"sva\")")]
+pub fn run_sva<F>(obj: Arc<dyn Objective>, opts: &SvaOptions, make_engine: F) -> RunResult
+where
+    F: FnMut(usize) -> Box<dyn StepEngine>,
+{
+    run_sva_impl(obj, opts, make_engine)
+}
+
+pub(crate) fn run_sva_impl<F>(
+    obj: Arc<dyn Objective>,
+    opts: &SvaOptions,
+    mut make_engine: F,
+) -> RunResult
 where
     F: FnMut(usize) -> Box<dyn StepEngine>,
 {
@@ -156,7 +170,7 @@ mod tests {
             seed: 121,
         };
         let o2 = obj.clone();
-        let r = run_sva(obj, &opts, move |w| {
+        let r = run_sva_impl(obj, &opts, move |w| {
             Box::new(NativeEngine::new(o2.clone(), 40, 122 + w as u64))
         });
         let s = r.counters.snapshot();

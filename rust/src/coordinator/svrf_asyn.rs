@@ -28,7 +28,6 @@ use crate::coordinator::update_log::{replay_after, UpdateLog};
 use crate::linalg::Mat;
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
-use crate::transport::local::local_links;
 use crate::transport::{MasterLink, WorkerLink};
 use crate::util::rng::Rng;
 
@@ -55,7 +54,7 @@ impl Default for SvrfAsynOptions {
 }
 
 /// Master side of Algorithm 5.
-fn run_svrf_master<L: MasterLink>(
+pub(crate) fn run_svrf_master<L: MasterLink>(
     link: &mut L,
     obj: &Arc<dyn Objective>,
     opts: &SvrfAsynOptions,
@@ -134,7 +133,7 @@ fn run_svrf_master<L: MasterLink>(
 }
 
 /// Worker side of Algorithm 5.
-fn run_svrf_worker<L: WorkerLink, E: StepEngine + ?Sized>(
+pub(crate) fn run_svrf_worker<L: WorkerLink, E: StepEngine + ?Sized>(
     link: &mut L,
     engine: &mut E,
     worker_id: u32,
@@ -211,39 +210,22 @@ fn run_svrf_worker<L: WorkerLink, E: StepEngine + ?Sized>(
     }
 }
 
-/// Run SVRF-asyn over the in-process transport.
+/// Run SVRF-asyn over the in-process transport — **deprecated shim**
+/// over the `sfw::session` harness.
+#[deprecated(since = "0.2.0", note = "use sfw::session::TrainSpec with .algo(\"svrf-asyn\")")]
 pub fn run_svrf_asyn_local<F>(
     obj: Arc<dyn Objective>,
     opts: &SvrfAsynOptions,
-    mut make_engine: F,
+    make_engine: F,
 ) -> RunResult
 where
     F: FnMut(usize) -> Box<dyn StepEngine>,
 {
-    let counters = Arc::new(Counters::new());
-    let trace = Arc::new(LossTrace::new());
-    let (mut mlink, wlinks) = local_links(opts.workers, counters.clone(), None);
-    let evaluator = Evaluator::new(obj.clone(), trace.clone());
-
-    let mut handles = Vec::new();
-    for (w, mut wlink) in wlinks.into_iter().enumerate() {
-        let mut engine = make_engine(w);
-        let counters = counters.clone();
-        let batch = opts.batch.clone();
-        let seed = opts.seed;
-        handles.push(std::thread::spawn(move || {
-            run_svrf_worker(&mut wlink, engine.as_mut(), w as u32, &batch, seed, &counters);
-        }));
-    }
-    let x = run_svrf_master(&mut mlink, &obj, opts, &counters, &trace, &evaluator);
-    for h in handles {
-        let _ = h.join();
-    }
-    evaluator.finish();
-    RunResult { x, counters, trace }
+    crate::session::harness::run_svrf_asyn(obj, opts, make_engine)
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the back-compat shim on purpose
 mod tests {
     use super::*;
     use crate::algo::engine::NativeEngine;

@@ -44,11 +44,25 @@ struct RoundReply {
     loss_sum: f64,
 }
 
+/// Run synchronous SFW-dist — **deprecated shim**; prefer
+/// `sfw::session::TrainSpec` with `.algo("sfw-dist")`.
+#[deprecated(since = "0.2.0", note = "use sfw::session::TrainSpec with .algo(\"sfw-dist\")")]
+pub fn run_dist<F>(obj: Arc<dyn Objective>, opts: &DistOptions, make_engine: F) -> RunResult
+where
+    F: FnMut(usize) -> Box<dyn StepEngine>,
+{
+    run_dist_impl(obj, opts, make_engine)
+}
+
 /// Run synchronous SFW-dist; the master thread is the caller.
 /// `make_engine(w)` supplies each worker's gradient engine; worker 0's
 /// engine type is also instantiated at the master (`make_engine(usize::MAX)`)
 /// for the LMO.
-pub fn run_dist<F>(obj: Arc<dyn Objective>, opts: &DistOptions, mut make_engine: F) -> RunResult
+pub(crate) fn run_dist_impl<F>(
+    obj: Arc<dyn Objective>,
+    opts: &DistOptions,
+    mut make_engine: F,
+) -> RunResult
 where
     F: FnMut(usize) -> Box<dyn StepEngine>,
 {
@@ -155,7 +169,7 @@ mod tests {
             straggler: None,
         };
         let o2 = obj.clone();
-        let r = run_dist(obj, &opts, move |w| {
+        let r = run_dist_impl(obj, &opts, move |w| {
             Box::new(NativeEngine::new(o2.clone(), 60, 112u64.wrapping_add(w as u64)))
         });
         let pts = r.trace.points();

@@ -2,20 +2,49 @@
 //!
 //! Production reproduction of **"Communication-Efficient Asynchronous
 //! Stochastic Frank-Wolfe over Nuclear-norm Balls"** (Zhuo, Lei, Dimakis,
-//! Caramanis, 2019) as a three-layer Rust + JAX + Pallas stack:
+//! Caramanis, 2019) as a three-layer Rust + JAX + Pallas stack.
 //!
-//! * **L3 (this crate)** — the paper's system contribution: an asynchronous
-//!   master–slave coordinator whose wire protocol is rank-one update
-//!   vectors (O(D1+D2) per message), with a bounded-staleness delay gate,
-//!   plus every baseline the paper compares against and the Appendix-D
-//!   queuing-model simulator.
-//! * **runtime** — PJRT CPU client executing AOT artifacts built once from
-//!   `python/compile` (L2 JAX graphs calling L1 Pallas kernels); Python is
-//!   never on the request path.
+//! ## Entry point: the session API
 //!
-//! Entry points: the `sfw` binary (see `main.rs`), `examples/`, and the
+//! All training — the paper's SFW-asyn and every baseline it is evaluated
+//! against — goes through one composable builder:
+//!
+//! ```no_run
+//! use sfw::session::{TaskSpec, TrainSpec, Transport};
+//!
+//! let report = TrainSpec::new(TaskSpec::ms(30, 3, 20_000, 0.1))
+//!     .algo("sfw-asyn")        // any name in session::registry().names()
+//!     .workers(8)
+//!     .tau(8)
+//!     .iterations(300)
+//!     .transport(Transport::Local) // or Transport::Tcp: real sockets
+//!     .run()
+//!     .expect("train");
+//! println!("{}", report.spec_echo);
+//! println!("final rel loss {:.3e}", report.final_relative());
+//! ```
+//!
+//! [`session::TrainSpec`] owns the shared wiring (objective construction,
+//! native/PJRT engine factories, counters + loss trace + off-thread
+//! evaluator, transport selection); each algorithm is a
+//! [`session::Solver`] in the central [`session::registry`].  New
+//! baseline, transport or sweep = one registry entry, not another copy of
+//! the plumbing.
+//!
+//! ## Layers
+//!
+//! * **L3 ([`coordinator`])** — the paper's system contribution: an
+//!   asynchronous master–slave protocol whose wire format is rank-one
+//!   update vectors (O(D1+D2) per message) with a bounded-staleness delay
+//!   gate, plus every baseline the paper compares against and the
+//!   Appendix-D queuing-model simulator ([`sim`]).
+//! * **[`runtime`]** — PJRT CPU client executing AOT artifacts built once
+//!   from `python/compile` (L2 JAX graphs calling L1 Pallas kernels);
+//!   Python is never on the request path.
+//!
+//! Binaries: the `sfw` launcher (see `main.rs`), `examples/`, and the
 //! benches under `rust/benches/` which regenerate every table and figure
-//! of the paper's evaluation.
+//! of the paper's evaluation — all driving [`session::TrainSpec`].
 
 pub mod algo;
 pub mod benchkit;
@@ -27,6 +56,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod objective;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod transport;
 pub mod util;

@@ -1,37 +1,28 @@
 //! `sfw` — the launcher binary.
 //!
 //! Subcommands:
-//!   train     run one training job (task x algorithm x engine) and print
-//!             the loss trace + counters
+//!   train     run one training job and print the loss trace + counters.
+//!             The CLI/config file maps onto a `sfw::session::TrainSpec`,
+//!             so EVERY registered algorithm x task x engine x transport
+//!             combination is reachable from here (see
+//!             `sfw::session::registry()` for the algorithm list).
 //!   simulate  queuing-model simulation (Appendix D)
 //!   info      show the artifact manifest and PJRT platform
 //!
 //! Examples:
 //!   sfw train --task matrix_sensing --algo sfw-asyn --workers 8 --tau 8
 //!   sfw train --task pnn --algo sfw-dist --engine pjrt --iterations 100
+//!   sfw train --algo sfw-asyn --transport tcp --workers 4
+//!   sfw train --config run.ini --train.workers 16
 //!   sfw simulate --p 0.1 --workers 15 --iterations 500
 //!   sfw info --artifacts-dir artifacts
 
-use std::sync::Arc;
-
-use sfw::algo::engine::{NativeEngine, StepEngine};
+use sfw::algo::engine::NativeEngine;
 use sfw::algo::schedule::BatchSchedule;
-use sfw::algo::sfw::{run_sfw, SfwOptions};
 use sfw::config::TrainConfig;
-use sfw::coordinator::{
-    run_asyn_local, run_dist, run_svrf_asyn_local, AsynOptions, DistOptions, RunResult,
-    SvrfAsynOptions,
-};
-use sfw::coordinator::sva::{run_sva, SvaOptions};
-use sfw::coordinator::dfw_power::{run_dfw_power, DfwOptions};
-use sfw::data::matrix_sensing::{MatrixSensingData, MsParams};
-use sfw::data::pnn::{PnnData, PnnParams};
-use sfw::metrics::{Counters, LossTrace};
-use sfw::objective::{MatrixSensing, Objective, Pnn};
-use sfw::runtime::{PjrtEngine, PjrtRuntime, Workload};
+use sfw::session::{registry, Report, TrainSpec};
 use sfw::sim::{simulate_asyn, simulate_dist, QueuingParams};
 use sfw::util::cli::Args;
-use sfw::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().collect();
@@ -51,71 +42,14 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
-/// Build the objective + optional PJRT runtime described by the config.
-fn build_objective(cfg: &TrainConfig) -> (Arc<dyn Objective>, Option<Workload>) {
-    let mut rng = Rng::new(cfg.seed);
-    match cfg.task.as_str() {
-        "matrix_sensing" => {
-            let p = MsParams {
-                d1: cfg.ms_d,
-                d2: cfg.ms_d,
-                rank: cfg.ms_rank,
-                n: cfg.ms_n,
-                noise_std: cfg.ms_noise,
-            };
-            let data = MatrixSensingData::generate(&p, &mut rng);
-            let obj = Arc::new(MatrixSensing::new(data, cfg.theta));
-            (obj.clone(), Some(Workload::Ms(obj)))
-        }
-        "pnn" => {
-            let p = PnnParams {
-                d: cfg.pnn_d,
-                n: cfg.pnn_n,
-                ..Default::default()
-            };
-            let data = PnnData::generate(&p, &mut rng);
-            let obj = Arc::new(Pnn::new(data, cfg.theta));
-            (obj.clone(), Some(Workload::Pnn(obj)))
-        }
-        t => panic!("unknown task '{t}' (matrix_sensing | pnn)"),
-    }
-}
-
-/// Engine factory honoring `--engine native|pjrt`.
-fn engine_factory(
-    cfg: &TrainConfig,
-    obj: Arc<dyn Objective>,
-    workload: Option<Workload>,
-) -> Box<dyn FnMut(usize) -> Box<dyn StepEngine>> {
-    let seed = cfg.seed;
-    let power_iters = cfg.power_iters;
-    match cfg.engine.as_str() {
-        "native" => Box::new(move |w| {
-            Box::new(NativeEngine::new(obj.clone(), power_iters, seed ^ 0xE ^ w as u64))
-        }),
-        "pjrt" => {
-            let rt = Arc::new(
-                PjrtRuntime::new(&cfg.artifacts_dir).expect("PJRT runtime (run `make artifacts`?)"),
-            );
-            let workload = workload.expect("pjrt engine needs a workload");
-            Box::new(move |w| {
-                Box::new(PjrtEngine::new(rt.clone(), workload.clone(), seed ^ 0xE ^ w as u64))
-            })
-        }
-        e => panic!("unknown engine '{e}' (native | pjrt)"),
-    }
-}
-
-fn print_result(obj: &Arc<dyn Objective>, trace: &LossTrace, counters: &Counters) {
+fn print_result(report: &Report) {
     println!("\n#  t(s)      iter   loss          rel");
-    let pts = trace.points();
-    let f0 = pts.first().map(|p| p.loss).unwrap_or(1.0);
-    let fs = obj.f_star_hint();
-    for p in &pts {
-        let rel = (p.loss - fs) / (f0 - fs).max(1e-30);
-        println!("  {:<9.3} {:<6} {:<13.6e} {:.4e}", p.t, p.iteration, p.loss, rel);
+    let pts = report.points();
+    let rel = report.relative();
+    for (p, (_, _, r)) in pts.iter().zip(rel.iter()) {
+        println!("  {:<9.3} {:<6} {:<13.6e} {:.4e}", p.t, p.iteration, p.loss, r);
     }
-    let s = counters.snapshot();
+    let s = report.snapshot();
     println!(
         "\ncounters: iters={} grads={} lmos={} dropped={} up={}B/{}msg down={}B/{}msg",
         s.iterations,
@@ -129,108 +63,31 @@ fn print_result(obj: &Arc<dyn Objective>, trace: &LossTrace, counters: &Counters
     );
 }
 
+/// `sfw train`: a thin Config/CLI -> `TrainSpec` mapping; all wiring
+/// (objective, engines, transport, metrics) lives in `sfw::session`.
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = TrainConfig::load(args)?;
-    println!(
-        "task={} algo={} engine={} workers={} tau={} T={} seed={}",
-        cfg.task, cfg.algo, cfg.engine, cfg.workers, cfg.tau, cfg.iterations, cfg.seed
-    );
-    let (obj, workload) = build_objective(&cfg);
-    let mut make_engine = engine_factory(&cfg, obj.clone(), workload);
-    let scale = cfg.batch_scale;
-    let result: RunResult = match cfg.algo.as_str() {
-        "sfw" => {
-            let counters = Arc::new(Counters::new());
-            let trace = Arc::new(LossTrace::new());
-            let mut engine = make_engine(0);
-            let opts = SfwOptions {
-                iterations: cfg.iterations,
-                batch: BatchSchedule::sfw(scale, cfg.batch_cap),
-                eval_every: cfg.eval_every,
-                seed: cfg.seed,
-            };
-            let x = run_sfw(engine.as_mut(), &opts, &counters, &trace);
-            RunResult { x, counters, trace }
+    let spec = TrainSpec::from_config(&cfg)?;
+    println!("{}", spec.echo());
+    match spec.run() {
+        Ok(report) => {
+            print_result(&report);
+            Ok(())
         }
-        "sfw-asyn" => {
-            let opts = AsynOptions {
-                iterations: cfg.iterations,
-                tau: cfg.tau,
-                workers: cfg.workers,
-                batch: BatchSchedule::sfw_asyn(scale, cfg.tau, cfg.batch_cap),
-                eval_every: cfg.eval_every,
-                seed: cfg.seed,
-                straggler: None,
-                link_latency: None,
-            };
-            run_asyn_local(obj.clone(), &opts, |w| make_engine(w))
-        }
-        "sfw-dist" => {
-            let opts = DistOptions {
-                iterations: cfg.iterations,
-                workers: cfg.workers,
-                batch: BatchSchedule::sfw(scale, cfg.batch_cap),
-                eval_every: cfg.eval_every,
-                seed: cfg.seed,
-                straggler: None,
-            };
-            run_dist(obj.clone(), &opts, |w| make_engine(w))
-        }
-        "svrf-asyn" => {
-            let opts = SvrfAsynOptions {
-                epochs: (cfg.iterations as f64).log2().ceil().max(1.0) as u32,
-                tau: cfg.tau,
-                workers: cfg.workers,
-                batch: BatchSchedule::svrf_asyn(cfg.tau, cfg.batch_cap),
-                eval_every: cfg.eval_every,
-                seed: cfg.seed,
-            };
-            run_svrf_asyn_local(obj.clone(), &opts, |w| make_engine(w))
-        }
-        "sva" => {
-            let opts = SvaOptions {
-                iterations: cfg.iterations,
-                workers: cfg.workers,
-                batch: BatchSchedule::sfw(scale, cfg.batch_cap),
-                eval_every: cfg.eval_every,
-                seed: cfg.seed,
-            };
-            run_sva(obj.clone(), &opts, |w| make_engine(w))
-        }
-        "dfw-power" => {
-            let opts = DfwOptions {
-                iterations: cfg.iterations,
-                workers: cfg.workers,
-                eval_every: cfg.eval_every,
-                seed: cfg.seed,
-                ..Default::default()
-            };
-            run_dfw_power(obj.clone(), &opts)
-        }
-        "pgd" => {
-            let counters = Arc::new(Counters::new());
-            let trace = Arc::new(LossTrace::new());
-            let mut engine = make_engine(0);
-            let opts = sfw::algo::pgd::PgdOptions {
-                iterations: cfg.iterations,
-                batch: BatchSchedule::Constant(cfg.batch_cap.min(1024)),
-                gamma: 0.05,
-                eval_every: cfg.eval_every,
-                seed: cfg.seed,
-            };
-            let x = sfw::algo::pgd::run_pgd(engine.as_mut(), &opts, &counters, &trace);
-            RunResult { x, counters, trace }
-        }
-        a => panic!("unknown algo '{a}'"),
-    };
-    print_result(&obj, &result.trace, &result.counters);
-    Ok(())
+        Err(e) => anyhow::bail!(
+            "{e}\nregistered algorithms: {}",
+            registry().names().join(", ")
+        ),
+    }
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let cfg = TrainConfig::load(args)?;
+    // The simulator always drives native engines; the spec is only used
+    // to build the objective from the task fields.
+    let spec = TrainSpec::from_config(&cfg)?.engine(sfw::session::EngineKind::Native);
     let p = args.get_f64("p", 0.1);
-    let (obj, _) = build_objective(&cfg);
+    let obj = sfw::session::RunCtx::new(&spec)?.obj;
     let prm = QueuingParams {
         workers: cfg.workers,
         p,
@@ -264,7 +121,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     let dir = args.get_str("artifacts-dir", "artifacts");
-    let rt = PjrtRuntime::new(&dir)?;
+    let rt = sfw::runtime::PjrtRuntime::new(&dir)?;
     println!("PJRT platform: {}", rt.platform());
     let m = rt.manifest();
     println!("artifact dir : {}", dir);

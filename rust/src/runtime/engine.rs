@@ -24,7 +24,8 @@ pub enum Workload {
 }
 
 impl Workload {
-    fn objective(&self) -> Arc<dyn Objective> {
+    /// The objective behind the workload (shared by the session wiring).
+    pub fn objective(&self) -> Arc<dyn Objective> {
         match self {
             Workload::Ms(o) => o.clone(),
             Workload::Pnn(o) => o.clone(),

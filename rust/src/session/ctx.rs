@@ -1,0 +1,106 @@
+//! [`RunCtx`]: the resolved wiring a [`Solver`](crate::session::Solver)
+//! runs against — objective, engine factory, and the spec echo.
+//!
+//! Everything fallible (task generation, PJRT runtime construction)
+//! happens here, before the solver starts; solvers themselves are
+//! infallible.
+
+use std::sync::{Arc, Mutex};
+
+use crate::algo::engine::{NativeEngine, StepEngine};
+use crate::algo::schedule::BatchSchedule;
+use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
+use crate::data::pnn::{PnnData, PnnParams};
+use crate::linalg::Mat;
+use crate::metrics::{Counters, LossTrace};
+use crate::objective::{MatrixSensing, Objective, Pnn};
+use crate::runtime::{PjrtEngine, PjrtRuntime, Workload};
+use crate::session::spec::TrainSpec;
+use crate::session::{EngineKind, Report, SessionError, TaskSpec};
+use crate::util::rng::Rng;
+
+type EngineFactory = Box<dyn FnMut(usize) -> Box<dyn StepEngine> + Send>;
+
+pub struct RunCtx {
+    pub obj: Arc<dyn Objective>,
+    pub spec: TrainSpec,
+    engines: Mutex<EngineFactory>,
+}
+
+impl RunCtx {
+    /// Build objective + engine factory from a spec.  Dataset generation
+    /// is seeded by `spec.seed`; [`TaskSpec::Prebuilt`] reuses the given
+    /// workload verbatim (shared data across runs).
+    pub fn new(spec: &TrainSpec) -> Result<RunCtx, SessionError> {
+        let (obj, workload) = build_task(spec);
+        let engines = build_engine_factory(spec, obj.clone(), workload)?;
+        Ok(RunCtx { obj, spec: spec.clone(), engines: Mutex::new(engines) })
+    }
+
+    /// Build worker `w`'s compute engine (native math or PJRT artifacts).
+    pub fn make_engine(&self, w: usize) -> Box<dyn StepEngine> {
+        (self.engines.lock().unwrap())(w)
+    }
+
+    /// The spec's explicit batch schedule, or the algorithm's default.
+    pub fn batch_or(&self, default: impl FnOnce() -> BatchSchedule) -> BatchSchedule {
+        self.spec.batch.clone().unwrap_or_else(default)
+    }
+
+    /// Wrap a finished run into the uniform [`Report`].
+    pub fn report(&self, x: Mat, counters: Arc<Counters>, trace: Arc<LossTrace>) -> Report {
+        Report {
+            x,
+            counters,
+            trace,
+            spec_echo: self.spec.echo(),
+            f_star: self.obj.f_star_hint(),
+        }
+    }
+}
+
+fn build_task(spec: &TrainSpec) -> (Arc<dyn Objective>, Workload) {
+    let mut rng = Rng::new(spec.seed);
+    match &spec.task {
+        TaskSpec::MatrixSensing { d1, d2, rank, n, noise_std } => {
+            let p = MsParams { d1: *d1, d2: *d2, rank: *rank, n: *n, noise_std: *noise_std };
+            let obj = Arc::new(MatrixSensing::new(
+                MatrixSensingData::generate(&p, &mut rng),
+                spec.theta,
+            ));
+            (obj.clone() as Arc<dyn Objective>, Workload::Ms(obj))
+        }
+        TaskSpec::Pnn { d, n } => {
+            let p = PnnParams { d: *d, n: *n, ..Default::default() };
+            let obj = Arc::new(Pnn::new(PnnData::generate(&p, &mut rng), spec.theta));
+            (obj.clone() as Arc<dyn Objective>, Workload::Pnn(obj))
+        }
+        TaskSpec::Prebuilt(w) => (w.objective(), w.clone()),
+    }
+}
+
+fn build_engine_factory(
+    spec: &TrainSpec,
+    obj: Arc<dyn Objective>,
+    workload: Workload,
+) -> Result<EngineFactory, SessionError> {
+    let seed = spec.seed;
+    let power_iters = spec.power_iters;
+    match spec.engine {
+        EngineKind::Native => Ok(Box::new(move |w| {
+            Box::new(NativeEngine::new(obj.clone(), power_iters, seed ^ 0xE ^ w as u64))
+        })),
+        EngineKind::Pjrt => {
+            let rt = match &spec.pjrt_runtime {
+                Some(rt) => rt.clone(),
+                None => Arc::new(
+                    PjrtRuntime::new(&spec.artifacts_dir)
+                        .map_err(|e| SessionError::Engine(format!("PJRT runtime: {e}")))?,
+                ),
+            };
+            Ok(Box::new(move |w| {
+                Box::new(PjrtEngine::new(rt.clone(), workload.clone(), seed ^ 0xE ^ w as u64))
+            }))
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Transport harnesses: wire master + workers over the chosen transport
+//! and run one training job end to end (threads for workers, caller
+//! thread for the master — mirroring one MPI rank per process).
+//!
+//! This is the wiring that used to be duplicated across
+//! `coordinator::runner::{run_asyn_local, run_asyn_tcp}` and
+//! `coordinator::svrf_asyn::run_svrf_asyn_local`; the transport is now a
+//! parameter and those entry points are thin deprecated shims over this
+//! module.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::algo::engine::StepEngine;
+use crate::coordinator::eval::Evaluator;
+use crate::coordinator::master::{run_master, MasterOptions};
+use crate::coordinator::runner::{AsynOptions, RunResult};
+use crate::coordinator::svrf_asyn::{run_svrf_master, run_svrf_worker, SvrfAsynOptions};
+use crate::coordinator::worker::{run_worker, WorkerOptions};
+use crate::metrics::{Counters, LossTrace};
+use crate::objective::Objective;
+use crate::session::Transport;
+use crate::transport::local::local_links;
+
+/// Run SFW-asyn (Algorithm 3) over the requested transport.
+/// `make_engine(w)` builds worker w's compute engine.
+pub(crate) fn run_asyn<F>(
+    obj: Arc<dyn Objective>,
+    opts: &AsynOptions,
+    transport: Transport,
+    make_engine: F,
+) -> RunResult
+where
+    F: FnMut(usize) -> Box<dyn StepEngine>,
+{
+    match transport {
+        Transport::Local => run_asyn_over_local(obj, opts, make_engine),
+        Transport::Tcp => run_asyn_over_tcp(obj, opts, make_engine),
+    }
+}
+
+/// In-process mpsc transport with byte-accurate accounting.
+fn run_asyn_over_local<F>(
+    obj: Arc<dyn Objective>,
+    opts: &AsynOptions,
+    mut make_engine: F,
+) -> RunResult
+where
+    F: FnMut(usize) -> Box<dyn StepEngine>,
+{
+    let counters = Arc::new(Counters::new());
+    let trace = Arc::new(LossTrace::new());
+    let (mut mlink, wlinks) = local_links(opts.workers, counters.clone(), opts.link_latency);
+    let evaluator = Evaluator::new(obj.clone(), trace.clone());
+
+    let mut handles = Vec::new();
+    for (w, mut wlink) in wlinks.into_iter().enumerate() {
+        let mut engine = make_engine(w);
+        let counters = counters.clone();
+        let wopts = WorkerOptions {
+            worker_id: w as u32,
+            batch: opts.batch.clone(),
+            seed: opts.seed,
+            straggler: opts.straggler,
+        };
+        handles.push(std::thread::spawn(move || {
+            run_worker(&mut wlink, engine.as_mut(), &wopts, &counters);
+        }));
+    }
+
+    let mopts = MasterOptions {
+        iterations: opts.iterations,
+        tau: opts.tau,
+        eval_every: opts.eval_every,
+        seed: opts.seed,
+    };
+    let x = run_master(&mut mlink, &obj, &mopts, &counters, &trace, &evaluator);
+    for h in handles {
+        let _ = h.join();
+    }
+    evaluator.finish();
+    RunResult { x, counters, trace }
+}
+
+/// Real localhost TCP sockets (same protocol, true serialization + kernel
+/// queues).  Master binds an ephemeral port.
+fn run_asyn_over_tcp<F>(
+    obj: Arc<dyn Objective>,
+    opts: &AsynOptions,
+    mut make_engine: F,
+) -> RunResult
+where
+    F: FnMut(usize) -> Box<dyn StepEngine>,
+{
+    use crate::transport::tcp::{tcp_master, tcp_worker};
+    let counters = Arc::new(Counters::new());
+    let trace = Arc::new(LossTrace::new());
+    let evaluator = Evaluator::new(obj.clone(), trace.clone());
+
+    // Bind first on an ephemeral port, then hand the resolved address to
+    // the workers.
+    let workers = opts.workers;
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let counters_m = counters.clone();
+    let master_thread = {
+        let obj = obj.clone();
+        let trace = trace.clone();
+        let mopts = MasterOptions {
+            iterations: opts.iterations,
+            tau: opts.tau,
+            eval_every: opts.eval_every,
+            seed: opts.seed,
+        };
+        std::thread::spawn(move || {
+            // accept() inside tcp_master blocks until all workers connect;
+            // publish the address before constructing it.
+            let listener_addr = "127.0.0.1:0";
+            let (mut mlink, addr) = {
+                // Bind manually to learn the port before accepting.
+                let l = std::net::TcpListener::bind(listener_addr).unwrap();
+                let addr = l.local_addr().unwrap();
+                drop(l); // tcp_master re-binds; tiny race acceptable on loopback
+                addr_tx.send(addr).unwrap();
+                let (m, a) = tcp_master(&addr.to_string(), workers, counters_m.clone()).unwrap();
+                (m, a)
+            };
+            let _ = addr;
+            let x = run_master(&mut mlink, &obj, &mopts, &counters_m, &trace, &evaluator);
+            evaluator.finish();
+            x
+        })
+    };
+    let addr = addr_rx.recv().unwrap();
+    // workers connect (retry briefly while master rebinds)
+    let mut handles = Vec::new();
+    for w in 0..opts.workers {
+        let mut engine = make_engine(w);
+        let counters = counters.clone();
+        let wopts = WorkerOptions {
+            worker_id: w as u32,
+            batch: opts.batch.clone(),
+            seed: opts.seed,
+            straggler: opts.straggler,
+        };
+        handles.push(std::thread::spawn(move || {
+            let mut link = {
+                let mut tries = 0;
+                loop {
+                    match tcp_worker(&addr.to_string(), w as u32, counters.clone()) {
+                        Ok(l) => break l,
+                        Err(e) if tries < 50 => {
+                            tries += 1;
+                            std::thread::sleep(Duration::from_millis(20));
+                            let _ = e;
+                        }
+                        Err(e) => panic!("worker {w} cannot connect: {e}"),
+                    }
+                }
+            };
+            run_worker(&mut link, engine.as_mut(), &wopts, &counters);
+        }));
+    }
+    let x = master_thread.join().unwrap();
+    for h in handles {
+        let _ = h.join();
+    }
+    RunResult { x, counters, trace }
+}
+
+/// Run SVRF-asyn (Algorithm 5) over the in-process transport.
+pub(crate) fn run_svrf_asyn<F>(
+    obj: Arc<dyn Objective>,
+    opts: &SvrfAsynOptions,
+    mut make_engine: F,
+) -> RunResult
+where
+    F: FnMut(usize) -> Box<dyn StepEngine>,
+{
+    let counters = Arc::new(Counters::new());
+    let trace = Arc::new(LossTrace::new());
+    let (mut mlink, wlinks) = local_links(opts.workers, counters.clone(), None);
+    let evaluator = Evaluator::new(obj.clone(), trace.clone());
+
+    let mut handles = Vec::new();
+    for (w, mut wlink) in wlinks.into_iter().enumerate() {
+        let mut engine = make_engine(w);
+        let counters = counters.clone();
+        let batch = opts.batch.clone();
+        let seed = opts.seed;
+        handles.push(std::thread::spawn(move || {
+            run_svrf_worker(&mut wlink, engine.as_mut(), w as u32, &batch, seed, &counters);
+        }));
+    }
+    let x = run_svrf_master(&mut mlink, &obj, opts, &counters, &trace, &evaluator);
+    for h in handles {
+        let _ = h.join();
+    }
+    evaluator.finish();
+    RunResult { x, counters, trace }
+}

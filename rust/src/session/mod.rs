@@ -1,0 +1,184 @@
+//! `sfw::session` — the unified training entrypoint.
+//!
+//! Every algorithm the repo implements (the paper's SFW-asyn plus the full
+//! baseline family it is evaluated against) runs behind one composable
+//! API:
+//!
+//! * [`Solver`] — the trait all algorithm variants implement
+//!   (`name()` + `run(&RunCtx) -> Report`), registered in [`registry`];
+//! * [`TrainSpec`] — a builder owning all the shared wiring: objective
+//!   construction, engine factories (native math or PJRT artifacts),
+//!   transport selection (in-process channels vs localhost TCP),
+//!   counters/trace/evaluator setup, and schedule defaults;
+//! * [`Report`] — the uniform result: final iterate, counters, loss trace
+//!   and the relative-loss / time-to-target accessors of `experiments`.
+//!
+//! ```no_run
+//! use sfw::session::{TaskSpec, TrainSpec, Transport};
+//!
+//! let report = TrainSpec::new(TaskSpec::ms(30, 3, 20_000, 0.1))
+//!     .algo("sfw-asyn")
+//!     .workers(8)
+//!     .tau(8)
+//!     .iterations(300)
+//!     .transport(Transport::Local)
+//!     .run()
+//!     .expect("train");
+//! println!("final rel loss {:.3e}", report.final_relative());
+//! ```
+//!
+//! Adding a new algorithm, transport or workload is a registry entry plus
+//! a `Solver` impl — not a seventh copy of the counters/trace/engine
+//! plumbing.  The old `coordinator::run_*` entry points remain as thin
+//! deprecated shims for one release.
+
+pub mod ctx;
+pub(crate) mod harness;
+pub mod registry;
+pub mod solvers;
+pub mod spec;
+
+pub use ctx::RunCtx;
+pub use registry::{registry, Registry, Solver};
+pub use spec::TrainSpec;
+
+// Re-exported so spec construction needs only `use sfw::session::*`.
+pub use crate::algo::schedule::BatchSchedule;
+pub use crate::coordinator::worker::Straggler;
+
+use std::sync::Arc;
+
+use crate::experiments;
+use crate::linalg::Mat;
+use crate::metrics::{CounterSnapshot, Counters, LossTrace, TracePoint};
+use crate::runtime::Workload;
+
+/// Wire substrate between master and workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// In-process mpsc channels with byte-accurate accounting (default).
+    Local,
+    /// Real localhost TCP sockets: true serialization + kernel queues.
+    /// Currently implemented for the `sfw-asyn` protocol.
+    Tcp,
+}
+
+/// Which compute engine backs each worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-Rust math (`algo::engine::NativeEngine`).
+    Native,
+    /// AOT JAX/Pallas artifacts through the PJRT CPU client
+    /// (`runtime::PjrtEngine`); needs `TrainSpec::artifacts_dir`.
+    Pjrt,
+}
+
+/// What objective to train on.  Generated tasks derive their data from
+/// `TrainSpec::seed`; [`TaskSpec::Prebuilt`] shares one dataset across
+/// many runs (the benches' comparability requirement).
+#[derive(Clone)]
+pub enum TaskSpec {
+    MatrixSensing { d1: usize, d2: usize, rank: usize, n: usize, noise_std: f32 },
+    Pnn { d: usize, n: usize },
+    /// A pre-built workload (e.g. from `experiments::build_ms`), reused
+    /// verbatim — `TrainSpec::theta`/data fields are ignored for it.
+    Prebuilt(Workload),
+}
+
+impl TaskSpec {
+    /// Square matrix-sensing task (paper §5.1 uses d=30, rank=3, noise 0.1).
+    pub fn ms(d: usize, rank: usize, n: usize, noise_std: f32) -> Self {
+        TaskSpec::MatrixSensing { d1: d, d2: d, rank, n, noise_std }
+    }
+
+    /// PNN task at feature dim `d` (paper: 784; artifacts default 196).
+    pub fn pnn(d: usize, n: usize) -> Self {
+        TaskSpec::Pnn { d, n }
+    }
+
+    /// Tiny matrix-sensing problem for smoke tests and CI.
+    pub fn ms_small() -> Self {
+        TaskSpec::ms(8, 2, 400, 0.05)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskSpec::MatrixSensing { .. } => "matrix_sensing",
+            TaskSpec::Pnn { .. } => "pnn",
+            TaskSpec::Prebuilt(Workload::Ms(_)) => "matrix_sensing",
+            TaskSpec::Prebuilt(Workload::Pnn(_)) => "pnn",
+        }
+    }
+}
+
+/// Errors surfaced by spec validation and wiring (never by the hot loop).
+#[derive(Debug, thiserror::Error)]
+pub enum SessionError {
+    #[error("unknown algorithm '{name}' (valid: {valid})")]
+    UnknownAlgo { name: String, valid: String },
+    #[error("unknown task '{0}' (valid: matrix_sensing | pnn)")]
+    UnknownTask(String),
+    #[error("unknown engine '{0}' (valid: native | pjrt)")]
+    UnknownEngine(String),
+    #[error("unknown transport '{0}' (valid: local | tcp)")]
+    UnknownTransport(String),
+    #[error("algorithm '{algo}' does not support transport {transport:?}")]
+    UnsupportedTransport { algo: String, transport: Transport },
+    #[error("engine setup: {0}")]
+    Engine(String),
+    #[error(transparent)]
+    Config(#[from] crate::config::ConfigError),
+}
+
+/// Uniform result of one training run.
+pub struct Report {
+    /// Final iterate X_T.
+    pub x: Mat,
+    pub counters: Arc<Counters>,
+    pub trace: Arc<LossTrace>,
+    /// One-line echo of the resolved spec (task/algo/engine/transport/...).
+    pub spec_echo: String,
+    /// F* estimate of the objective (for relative-loss reporting).
+    pub f_star: f64,
+}
+
+impl std::fmt::Debug for Report {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Report")
+            .field("spec_echo", &self.spec_echo)
+            .field("trace_points", &self.trace.points().len())
+            .field("counters", &self.counters.snapshot())
+            .finish_non_exhaustive()
+    }
+}
+
+impl Report {
+    pub fn points(&self) -> Vec<TracePoint> {
+        self.trace.points()
+    }
+
+    pub fn snapshot(&self) -> CounterSnapshot {
+        self.counters.snapshot()
+    }
+
+    /// Relative-loss curve (t, iteration, (F - F*)/(F_0 - F*)).
+    pub fn relative(&self) -> Vec<(f64, u64, f64)> {
+        experiments::relative(&self.trace.points(), self.f_star)
+    }
+
+    /// First timestamp at which the relative loss reaches `target`
+    /// (Figures 5/7's time-to-target).
+    pub fn time_to_relative(&self, target: f64) -> Option<f64> {
+        experiments::time_to_relative(&self.trace.points(), self.f_star, target)
+    }
+
+    /// Relative loss of the last trace point (1.0 if the trace is empty).
+    pub fn final_relative(&self) -> f64 {
+        self.relative().last().map(|&(_, _, r)| r).unwrap_or(1.0)
+    }
+
+    /// Raw loss of the last trace point.
+    pub fn final_loss(&self) -> f64 {
+        self.trace.points().last().map(|p| p.loss).unwrap_or(f64::NAN)
+    }
+}

@@ -1,0 +1,80 @@
+//! The [`Solver`] trait and the central algorithm registry.
+//!
+//! Every algorithm variant is one registry entry; `sfw train --algo X`,
+//! the benches, the examples and the test matrix all dispatch through
+//! [`registry`].  Adding an algorithm = implement [`Solver`], push it in
+//! `build_registry`, done.
+
+use std::sync::OnceLock;
+
+use crate::session::solvers;
+use crate::session::{Report, RunCtx};
+
+/// One training algorithm behind the unified session API.
+pub trait Solver: Send + Sync {
+    /// Registry name (`sfw-asyn`, `sfw-dist`, ...).
+    fn name(&self) -> &'static str;
+    /// Whether the solver's protocol runs over real TCP sockets.
+    /// Default: local in-process transport only.
+    fn supports_tcp(&self) -> bool {
+        false
+    }
+    /// Run the algorithm against fully-resolved wiring.  Infallible:
+    /// everything that can fail happens in `RunCtx::new`.
+    fn run(&self, ctx: &RunCtx) -> Report;
+}
+
+pub struct Registry {
+    solvers: Vec<Box<dyn Solver>>,
+}
+
+impl Registry {
+    pub fn get(&self, name: &str) -> Option<&dyn Solver> {
+        self.solvers.iter().find(|s| s.name() == name).map(|s| s.as_ref())
+    }
+
+    /// All registered algorithm names, registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.solvers.iter().map(|s| s.name()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &dyn Solver> {
+        self.solvers.iter().map(|s| s.as_ref())
+    }
+}
+
+/// The process-wide solver registry (built once, immutable).
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry {
+        solvers: vec![
+            Box::new(solvers::SfwSolver),
+            Box::new(solvers::AsynSolver),
+            Box::new(solvers::SvrfAsynSolver),
+            Box::new(solvers::DistSolver),
+            Box::new(solvers::SvaSolver),
+            Box::new(solvers::DfwPowerSolver),
+            Box::new(solvers::PgdSolver),
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_contains_the_paper_family() {
+        let names = registry().names();
+        for required in ["sfw", "sfw-asyn", "svrf-asyn", "sfw-dist", "sva", "dfw-power"] {
+            assert!(names.contains(&required), "missing solver '{required}'");
+        }
+    }
+
+    #[test]
+    fn lookup_and_tcp_support() {
+        assert!(registry().get("sfw-asyn").unwrap().supports_tcp());
+        assert!(!registry().get("sva").unwrap().supports_tcp());
+        assert!(registry().get("nope").is_none());
+    }
+}

@@ -1,0 +1,193 @@
+//! [`Solver`](crate::session::Solver) implementations for the full
+//! algorithm family: the paper's SFW-asyn (Algorithm 3) and SVRF-asyn
+//! (Algorithm 5), the synchronous SFW-dist baseline (Algorithm 1), the
+//! serial SFW reference, and the prior-art baselines the paper compares
+//! against (SVA, Zheng et al.'s DFW-power, PGD).
+//!
+//! Solvers translate the resolved spec into the protocol options and run
+//! the coordinator machinery; all shared wiring (objective, engines,
+//! transport, report shape) lives in [`RunCtx`].
+
+use std::sync::Arc;
+
+use crate::algo::pgd::{run_pgd, PgdOptions};
+use crate::algo::schedule::BatchSchedule;
+use crate::algo::sfw::{run_sfw, SfwOptions};
+use crate::coordinator::dfw_power::{run_dfw_power_impl, DfwOptions};
+use crate::coordinator::runner::AsynOptions;
+use crate::coordinator::sva::{run_sva_impl, SvaOptions};
+use crate::coordinator::svrf_asyn::SvrfAsynOptions;
+use crate::coordinator::sync::{run_dist_impl, DistOptions};
+use crate::metrics::{Counters, LossTrace};
+use crate::session::{harness, Report, RunCtx, Solver};
+
+/// Serial Stochastic Frank-Wolfe (Hazan & Luo 2016).
+pub struct SfwSolver;
+
+impl Solver for SfwSolver {
+    fn name(&self) -> &'static str {
+        "sfw"
+    }
+
+    fn run(&self, ctx: &RunCtx) -> Report {
+        let spec = &ctx.spec;
+        let counters = Arc::new(Counters::new());
+        let trace = Arc::new(LossTrace::new());
+        let mut engine = ctx.make_engine(0);
+        let opts = SfwOptions {
+            iterations: spec.iterations,
+            batch: ctx.batch_or(|| BatchSchedule::sfw(spec.batch_scale, spec.batch_cap)),
+            eval_every: spec.eval_every,
+            seed: spec.seed,
+        };
+        let x = run_sfw(engine.as_mut(), &opts, &counters, &trace);
+        ctx.report(x, counters, trace)
+    }
+}
+
+/// SFW-asyn (Algorithm 3): the paper's asynchronous rank-one protocol.
+/// The only solver whose wire protocol also runs over real TCP.
+pub struct AsynSolver;
+
+impl Solver for AsynSolver {
+    fn name(&self) -> &'static str {
+        "sfw-asyn"
+    }
+
+    fn supports_tcp(&self) -> bool {
+        true
+    }
+
+    fn run(&self, ctx: &RunCtx) -> Report {
+        let spec = &ctx.spec;
+        let opts = AsynOptions {
+            iterations: spec.iterations,
+            tau: spec.tau,
+            workers: spec.workers,
+            batch: ctx
+                .batch_or(|| BatchSchedule::sfw_asyn(spec.batch_scale, spec.tau, spec.batch_cap)),
+            eval_every: spec.eval_every,
+            seed: spec.seed,
+            straggler: spec.straggler,
+            link_latency: spec.link_latency,
+        };
+        let r = harness::run_asyn(ctx.obj.clone(), &opts, spec.transport, |w| ctx.make_engine(w));
+        ctx.report(r.x, r.counters, r.trace)
+    }
+}
+
+/// SVRF-asyn (Algorithm 5): variance-reduced asynchronous FW.
+pub struct SvrfAsynSolver;
+
+impl Solver for SvrfAsynSolver {
+    fn name(&self) -> &'static str {
+        "svrf-asyn"
+    }
+
+    fn run(&self, ctx: &RunCtx) -> Report {
+        let spec = &ctx.spec;
+        let opts = SvrfAsynOptions {
+            epochs: spec.epochs_or_derived(),
+            tau: spec.tau,
+            workers: spec.workers,
+            batch: ctx.batch_or(|| BatchSchedule::svrf_asyn(spec.tau, spec.batch_cap)),
+            eval_every: spec.eval_every,
+            seed: spec.seed,
+        };
+        let r = harness::run_svrf_asyn(ctx.obj.clone(), &opts, |w| ctx.make_engine(w));
+        ctx.report(r.x, r.counters, r.trace)
+    }
+}
+
+/// SFW-dist (Algorithm 1): the synchronous distributed baseline.
+pub struct DistSolver;
+
+impl Solver for DistSolver {
+    fn name(&self) -> &'static str {
+        "sfw-dist"
+    }
+
+    fn run(&self, ctx: &RunCtx) -> Report {
+        let spec = &ctx.spec;
+        let opts = DistOptions {
+            iterations: spec.iterations,
+            workers: spec.workers,
+            batch: ctx.batch_or(|| BatchSchedule::sfw(spec.batch_scale, spec.batch_cap)),
+            eval_every: spec.eval_every,
+            seed: spec.seed,
+            straggler: spec.straggler,
+        };
+        let r = run_dist_impl(ctx.obj.clone(), &opts, |w| ctx.make_engine(w));
+        ctx.report(r.x, r.counters, r.trace)
+    }
+}
+
+/// Singular Vector Averaging — the paper's motivating negative baseline.
+pub struct SvaSolver;
+
+impl Solver for SvaSolver {
+    fn name(&self) -> &'static str {
+        "sva"
+    }
+
+    fn run(&self, ctx: &RunCtx) -> Report {
+        let spec = &ctx.spec;
+        let opts = SvaOptions {
+            iterations: spec.iterations,
+            workers: spec.workers,
+            batch: ctx.batch_or(|| BatchSchedule::sfw(spec.batch_scale, spec.batch_cap)),
+            eval_every: spec.eval_every,
+            seed: spec.seed,
+        };
+        let r = run_sva_impl(ctx.obj.clone(), &opts, |w| ctx.make_engine(w));
+        ctx.report(r.x, r.counters, r.trace)
+    }
+}
+
+/// Zheng et al. 2018 distributed-power-iteration DFW (prior art).
+pub struct DfwPowerSolver;
+
+impl Solver for DfwPowerSolver {
+    fn name(&self) -> &'static str {
+        "dfw-power"
+    }
+
+    fn run(&self, ctx: &RunCtx) -> Report {
+        let spec = &ctx.spec;
+        let opts = DfwOptions {
+            iterations: spec.iterations,
+            workers: spec.workers,
+            rounds_base: spec.dfw_rounds_base,
+            rounds_slope: spec.dfw_rounds_slope,
+            eval_every: spec.eval_every,
+            seed: spec.seed,
+        };
+        let r = run_dfw_power_impl(ctx.obj.clone(), &opts);
+        ctx.report(r.x, r.counters, r.trace)
+    }
+}
+
+/// Projected Gradient Descent baseline (full-SVD projection per step).
+pub struct PgdSolver;
+
+impl Solver for PgdSolver {
+    fn name(&self) -> &'static str {
+        "pgd"
+    }
+
+    fn run(&self, ctx: &RunCtx) -> Report {
+        let spec = &ctx.spec;
+        let counters = Arc::new(Counters::new());
+        let trace = Arc::new(LossTrace::new());
+        let mut engine = ctx.make_engine(0);
+        let opts = PgdOptions {
+            iterations: spec.iterations,
+            batch: ctx.batch_or(|| BatchSchedule::Constant(spec.batch_cap.min(1024))),
+            gamma: 0.05,
+            eval_every: spec.eval_every,
+            seed: spec.seed,
+        };
+        let x = run_pgd(engine.as_mut(), &opts, &counters, &trace);
+        ctx.report(x, counters, trace)
+    }
+}

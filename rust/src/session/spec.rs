@@ -1,0 +1,261 @@
+//! [`TrainSpec`]: the builder every training entrypoint goes through.
+//!
+//! A spec fully describes one run — task, algorithm, scale knobs,
+//! transport, engine — and `run()` resolves it against the solver
+//! [`registry`](crate::session::registry::registry): objective + engine
+//! factory construction happen in [`RunCtx`], the solver does only the
+//! algorithm, and the caller gets a uniform [`Report`].
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::algo::schedule::BatchSchedule;
+use crate::config::TrainConfig;
+use crate::coordinator::worker::Straggler;
+use crate::runtime::PjrtRuntime;
+use crate::session::registry::registry;
+use crate::session::{EngineKind, Report, RunCtx, SessionError, TaskSpec, Transport};
+
+/// Declarative description of one training run.  Construct with
+/// [`TrainSpec::new`], chain setters, finish with [`TrainSpec::run`].
+#[derive(Clone)]
+pub struct TrainSpec {
+    pub task: TaskSpec,
+    /// Registry name: `sfw | sfw-asyn | svrf-asyn | sfw-dist | sva |
+    /// dfw-power | pgd` (see `registry().names()`).
+    pub algo: String,
+    pub workers: usize,
+    /// Staleness tolerance tau of the asynchronous delay gate.
+    pub tau: u64,
+    /// Master iterations T (for `svrf-asyn` see [`TrainSpec::epochs`]).
+    pub iterations: u64,
+    /// SVRF-asyn outer epochs; `None` derives `ceil(log2(T))` from
+    /// `iterations` (matching the historical launcher behaviour).
+    pub epochs: Option<u32>,
+    /// Explicit batch schedule; `None` picks the algorithm's theorem
+    /// schedule from `batch_scale`/`batch_cap`/`tau`.
+    pub batch: Option<BatchSchedule>,
+    pub batch_scale: f64,
+    pub batch_cap: usize,
+    pub power_iters: usize,
+    /// Nuclear-ball radius for generated tasks (ignored for
+    /// [`TaskSpec::Prebuilt`], whose objective carries its own theta).
+    pub theta: f32,
+    pub seed: u64,
+    pub eval_every: u64,
+    pub engine: EngineKind,
+    pub artifacts_dir: String,
+    /// Pre-built PJRT runtime to share with the caller (e.g. for
+    /// artifact-based evaluation after training); `None` loads the
+    /// artifacts from `artifacts_dir` when `engine` is `Pjrt`.
+    pub pjrt_runtime: Option<Arc<PjrtRuntime>>,
+    pub transport: Transport,
+    pub straggler: Option<Straggler>,
+    /// Injected one-way link latency (local transport only).
+    pub link_latency: Option<Duration>,
+    /// DFW-power rounds at FW iteration t: `base + slope * t`.
+    pub dfw_rounds_base: u64,
+    pub dfw_rounds_slope: f64,
+}
+
+impl TrainSpec {
+    pub fn new(task: TaskSpec) -> Self {
+        TrainSpec {
+            task,
+            algo: "sfw-asyn".into(),
+            workers: 4,
+            tau: 8,
+            iterations: 300,
+            epochs: None,
+            batch: None,
+            batch_scale: 0.5,
+            batch_cap: 10_000,
+            power_iters: 24,
+            theta: 1.0,
+            seed: 42,
+            eval_every: 10,
+            engine: EngineKind::Native,
+            artifacts_dir: "artifacts".into(),
+            pjrt_runtime: None,
+            transport: Transport::Local,
+            straggler: None,
+            link_latency: None,
+            dfw_rounds_base: 1,
+            dfw_rounds_slope: 0.5,
+        }
+    }
+
+    pub fn algo(mut self, name: &str) -> Self {
+        self.algo = name.to_string();
+        self
+    }
+    pub fn workers(mut self, w: usize) -> Self {
+        self.workers = w;
+        self
+    }
+    pub fn tau(mut self, tau: u64) -> Self {
+        self.tau = tau;
+        self
+    }
+    pub fn iterations(mut self, t: u64) -> Self {
+        self.iterations = t;
+        self
+    }
+    pub fn epochs(mut self, e: u32) -> Self {
+        self.epochs = Some(e);
+        self
+    }
+    pub fn batch(mut self, b: BatchSchedule) -> Self {
+        self.batch = Some(b);
+        self
+    }
+    pub fn batch_scale(mut self, s: f64) -> Self {
+        self.batch_scale = s;
+        self
+    }
+    pub fn batch_cap(mut self, cap: usize) -> Self {
+        self.batch_cap = cap;
+        self
+    }
+    pub fn power_iters(mut self, p: usize) -> Self {
+        self.power_iters = p;
+        self
+    }
+    pub fn theta(mut self, theta: f32) -> Self {
+        self.theta = theta;
+        self
+    }
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+    pub fn eval_every(mut self, e: u64) -> Self {
+        self.eval_every = e;
+        self
+    }
+    pub fn engine(mut self, e: EngineKind) -> Self {
+        self.engine = e;
+        self
+    }
+    pub fn artifacts_dir(mut self, dir: &str) -> Self {
+        self.artifacts_dir = dir.to_string();
+        self
+    }
+    /// Share an already-loaded PJRT runtime (implies `EngineKind::Pjrt`).
+    pub fn pjrt_runtime(mut self, rt: Arc<PjrtRuntime>) -> Self {
+        self.pjrt_runtime = Some(rt);
+        self.engine = EngineKind::Pjrt;
+        self
+    }
+    pub fn transport(mut self, t: Transport) -> Self {
+        self.transport = t;
+        self
+    }
+    pub fn straggler(mut self, s: Straggler) -> Self {
+        self.straggler = Some(s);
+        self
+    }
+    pub fn maybe_straggler(mut self, s: Option<Straggler>) -> Self {
+        self.straggler = s;
+        self
+    }
+    pub fn link_latency(mut self, l: Duration) -> Self {
+        self.link_latency = Some(l);
+        self
+    }
+    pub fn dfw_rounds(mut self, base: u64, slope: f64) -> Self {
+        self.dfw_rounds_base = base;
+        self.dfw_rounds_slope = slope;
+        self
+    }
+
+    /// SVRF-asyn epoch count: explicit, or derived from `iterations`.
+    pub fn epochs_or_derived(&self) -> u32 {
+        self.epochs
+            .unwrap_or_else(|| (self.iterations as f64).log2().ceil().max(1.0) as u32)
+    }
+
+    /// One-line summary used for logs and `Report::spec_echo`.
+    pub fn echo(&self) -> String {
+        format!(
+            "task={} algo={} engine={} transport={} workers={} tau={} T={} seed={}",
+            self.task.name(),
+            self.algo,
+            match self.engine {
+                EngineKind::Native => "native",
+                EngineKind::Pjrt => "pjrt",
+            },
+            match self.transport {
+                Transport::Local => "local",
+                Transport::Tcp => "tcp",
+            },
+            self.workers,
+            self.tau,
+            self.iterations,
+            self.seed
+        )
+    }
+
+    /// Resolve the spec and run it: registry lookup, transport validation,
+    /// objective + engine wiring, then the solver.
+    pub fn run(&self) -> Result<Report, SessionError> {
+        let reg = registry();
+        let solver = reg.get(&self.algo).ok_or_else(|| SessionError::UnknownAlgo {
+            name: self.algo.clone(),
+            valid: reg.names().join(" | "),
+        })?;
+        if self.transport == Transport::Tcp && !solver.supports_tcp() {
+            return Err(SessionError::UnsupportedTransport {
+                algo: self.algo.clone(),
+                transport: self.transport,
+            });
+        }
+        let ctx = RunCtx::new(self)?;
+        Ok(solver.run(&ctx))
+    }
+
+    /// Map a launcher [`TrainConfig`] (config file + CLI overrides) onto a
+    /// spec, so every algo x task x engine x transport combination is
+    /// reachable from `sfw train` and from config files.
+    pub fn from_config(cfg: &TrainConfig) -> Result<TrainSpec, SessionError> {
+        let task = match cfg.task.as_str() {
+            "matrix_sensing" => TaskSpec::MatrixSensing {
+                d1: cfg.ms_d,
+                d2: cfg.ms_d,
+                rank: cfg.ms_rank,
+                n: cfg.ms_n,
+                noise_std: cfg.ms_noise,
+            },
+            "pnn" => TaskSpec::Pnn { d: cfg.pnn_d, n: cfg.pnn_n },
+            t => return Err(SessionError::UnknownTask(t.to_string())),
+        };
+        let engine = match cfg.engine.as_str() {
+            "native" => EngineKind::Native,
+            "pjrt" => EngineKind::Pjrt,
+            e => return Err(SessionError::UnknownEngine(e.to_string())),
+        };
+        let transport = match cfg.transport.as_str() {
+            "local" => Transport::Local,
+            "tcp" => Transport::Tcp,
+            t => return Err(SessionError::UnknownTransport(t.to_string())),
+        };
+        let mut spec = TrainSpec::new(task)
+            .algo(&cfg.algo)
+            .workers(cfg.workers)
+            .tau(cfg.tau)
+            .iterations(cfg.iterations)
+            .batch_scale(cfg.batch_scale)
+            .batch_cap(cfg.batch_cap)
+            .power_iters(cfg.power_iters)
+            .theta(cfg.theta)
+            .seed(cfg.seed)
+            .eval_every(cfg.eval_every)
+            .engine(engine)
+            .artifacts_dir(&cfg.artifacts_dir)
+            .transport(transport);
+        if cfg.epochs > 0 {
+            spec = spec.epochs(cfg.epochs);
+        }
+        Ok(spec)
+    }
+}

@@ -1,5 +1,5 @@
 //! Convergence-rate checks against the paper's theorems (native engine;
-//! deterministic seeds).
+//! deterministic seeds), driven through the unified `sfw::session` API.
 //!
 //! * Thm 1 / HL16: with the increasing batch schedule, the suboptimality
 //!   h_k decays like O(1/k) — we check the empirical decay exponent.
@@ -11,37 +11,34 @@
 
 use std::sync::Arc;
 
-use sfw::algo::engine::NativeEngine;
-use sfw::algo::schedule::BatchSchedule;
-use sfw::algo::sfw::{run_sfw, SfwOptions};
-use sfw::coordinator::sva::{run_sva, SvaOptions};
-use sfw::coordinator::{run_asyn_local, AsynOptions};
 use sfw::data::matrix_sensing::{MatrixSensingData, MsParams};
-use sfw::metrics::{Counters, LossTrace};
-use sfw::objective::{MatrixSensing, Objective};
+use sfw::objective::MatrixSensing;
+use sfw::runtime::Workload;
+use sfw::session::{BatchSchedule, Report, TaskSpec, TrainSpec};
 use sfw::util::rng::Rng;
 
-fn ms(seed: u64, n: usize) -> Arc<dyn Objective> {
+fn ms(seed: u64, n: usize) -> TaskSpec {
     let mut rng = Rng::new(seed);
     // noiseless => F* ~ 0, so h_k ~ F(X_k); clean rate measurement
     let p = MsParams { d1: 12, d2: 12, rank: 2, n, noise_std: 0.0 };
-    Arc::new(MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0))
+    TaskSpec::Prebuilt(Workload::Ms(Arc::new(MatrixSensing::new(
+        MatrixSensingData::generate(&p, &mut rng),
+        1.0,
+    ))))
 }
 
 #[test]
 fn sfw_rate_is_at_least_one_over_k() {
-    let obj = ms(400, 8_000);
-    let mut engine = NativeEngine::new(obj.clone(), 80, 401);
-    let counters = Counters::new();
-    let trace = LossTrace::new();
-    let opts = SfwOptions {
-        iterations: 256,
-        batch: BatchSchedule::sfw(0.25, 8_000),
-        eval_every: 1,
-        seed: 402,
-    };
-    run_sfw(&mut engine, &opts, &counters, &trace);
-    let pts = trace.points();
+    let r = TrainSpec::new(ms(400, 8_000))
+        .algo("sfw")
+        .iterations(256)
+        .batch(BatchSchedule::sfw(0.25, 8_000))
+        .eval_every(1)
+        .seed(402)
+        .power_iters(80)
+        .run()
+        .expect("train");
+    let pts = r.points();
     // fit decay exponent on k in [16, 256]: log h_k vs log k
     let series: Vec<(f64, f64)> = pts
         .iter()
@@ -63,20 +60,19 @@ fn sfw_rate_is_at_least_one_over_k() {
 fn constant_batch_floor_shrinks_with_batch_size() {
     // Thm 3: residual error ~ 1/c * L D^2 — bigger constant batch, lower
     // floor.  Use a noiseless problem so the floor is purely stochastic.
-    let obj = ms(410, 6_000);
+    let task = ms(410, 6_000);
     let floor = |m: usize, seed: u64| {
-        let mut engine = NativeEngine::new(obj.clone(), 80, seed);
-        let counters = Counters::new();
-        let trace = LossTrace::new();
-        let opts = SfwOptions {
-            iterations: 300,
-            batch: BatchSchedule::Constant(m),
-            eval_every: 10,
-            seed,
-        };
-        run_sfw(&mut engine, &opts, &counters, &trace);
+        let r = TrainSpec::new(task.clone())
+            .algo("sfw")
+            .iterations(300)
+            .batch(BatchSchedule::Constant(m))
+            .eval_every(10)
+            .seed(seed)
+            .power_iters(80)
+            .run()
+            .expect("train");
         // average the tail to estimate the plateau
-        let pts = trace.points();
+        let pts = r.points();
         let tail: Vec<f64> = pts.iter().rev().take(8).map(|p| p.loss).collect();
         tail.iter().sum::<f64>() / tail.len() as f64
     };
@@ -94,38 +90,20 @@ fn sva_plateaus_while_sfw_asyn_converges() {
     // direction is noisy, and averaging unit singular vectors (instead of
     // solving the LMO of the averaged gradient) has a systematic bias —
     // SVA stalls at a visibly higher floor with the same compute budget.
-    let obj = ms(420, 6_000);
-    let iters = 600u64;
-    let batch = BatchSchedule::Constant(32);
-    let opts = AsynOptions {
-        iterations: iters,
-        tau: 8,
-        workers: 4,
-        batch: batch.clone(),
-        eval_every: 50,
-        seed: 421,
-        straggler: None,
-        link_latency: None,
-    };
-    let o2 = obj.clone();
-    let asyn = run_asyn_local(obj.clone(), &opts, move |w| {
-        Box::new(NativeEngine::new(o2.clone(), 60, 422 + w as u64))
-    });
+    let spec = TrainSpec::new(ms(420, 6_000))
+        .iterations(600)
+        .tau(8)
+        .workers(4)
+        .batch(BatchSchedule::Constant(32))
+        .eval_every(50)
+        .seed(421)
+        .power_iters(60);
+    let asyn = spec.clone().algo("sfw-asyn").run().expect("asyn");
     // SVA with identical compute budget
-    let sopts = SvaOptions {
-        iterations: iters,
-        workers: 4,
-        batch,
-        eval_every: 50,
-        seed: 421,
-    };
-    let o3 = obj.clone();
-    let sva = run_sva(obj.clone(), &sopts, move |w| {
-        Box::new(NativeEngine::new(o3.clone(), 60, 422 + w as u64))
-    });
+    let sva = spec.clone().algo("sva").run().expect("sva");
     // compare plateau (tail average), not a single noisy endpoint
-    let tail = |r: &sfw::coordinator::RunResult| {
-        let pts = r.trace.points();
+    let tail = |r: &Report| {
+        let pts = r.points();
         let t: Vec<f64> = pts.iter().rev().take(4).map(|p| p.loss).collect();
         t.iter().sum::<f64>() / t.len() as f64
     };
@@ -142,27 +120,23 @@ fn tau_slowdown_is_bounded() {
     // Thm 1's (3 tau + 1) factor: larger tolerated staleness converges
     // slower per-iteration but must still converge.  Compare final losses
     // after the same iteration count.
-    let obj = ms(430, 6_000);
+    let task = ms(430, 6_000);
     let run = |tau: u64, seed: u64| {
-        let opts = AsynOptions {
-            iterations: 150,
-            tau,
-            workers: 4,
-            batch: BatchSchedule::Constant(256),
-            eval_every: 50,
-            seed,
-            straggler: None,
-            link_latency: None,
-        };
-        let o2 = obj.clone();
-        run_asyn_local(obj.clone(), &opts, move |w| {
-            Box::new(NativeEngine::new(o2.clone(), 60, seed + w as u64))
-        })
-        .trace
-        .points()
-        .last()
-        .unwrap()
-        .loss
+        TrainSpec::new(task.clone())
+            .algo("sfw-asyn")
+            .iterations(150)
+            .tau(tau)
+            .workers(4)
+            .batch(BatchSchedule::Constant(256))
+            .eval_every(50)
+            .seed(seed)
+            .power_iters(60)
+            .run()
+            .expect("train")
+            .points()
+            .last()
+            .unwrap()
+            .loss
     };
     let tight = run(2, 431);
     let loose = run(64, 432);

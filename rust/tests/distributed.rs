@@ -1,47 +1,46 @@
 //! Distributed-substrate integration: TCP transport end-to-end, straggler
-//! resilience, and cross-algorithm comm accounting on the same workload.
+//! resilience, and cross-algorithm comm accounting on the same workload —
+//! all driven through the unified `sfw::session` API.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use sfw::algo::engine::NativeEngine;
-use sfw::algo::schedule::BatchSchedule;
-use sfw::coordinator::dfw_power::{run_dfw_power, DfwOptions};
-use sfw::coordinator::{
-    run_asyn_local, run_asyn_tcp, run_dist, AsynOptions, DistOptions, Straggler,
-};
 use sfw::data::matrix_sensing::{MatrixSensingData, MsParams};
 use sfw::linalg::nuclear_norm;
-use sfw::objective::{MatrixSensing, Objective};
+use sfw::objective::MatrixSensing;
+use sfw::runtime::Workload;
+use sfw::session::{BatchSchedule, Straggler, TaskSpec, TrainSpec, Transport};
 use sfw::util::rng::Rng;
 
-fn ms(seed: u64, d: usize, n: usize) -> Arc<dyn Objective> {
+/// Shared-data task: dataset generation stays pinned to its own seed,
+/// independent of the spec's algorithm seed.
+fn ms(seed: u64, d: usize, n: usize) -> TaskSpec {
     let mut rng = Rng::new(seed);
     let p = MsParams { d1: d, d2: d, rank: 2, n, noise_std: 0.05 };
-    Arc::new(MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0))
+    TaskSpec::Prebuilt(Workload::Ms(Arc::new(MatrixSensing::new(
+        MatrixSensingData::generate(&p, &mut rng),
+        1.0,
+    ))))
 }
 
 #[test]
 fn tcp_transport_full_training_run() {
-    let obj = ms(500, 10, 2_000);
-    let opts = AsynOptions {
-        iterations: 80,
-        tau: 8,
-        workers: 3,
-        batch: BatchSchedule::Constant(64),
-        eval_every: 20,
-        seed: 501,
-        straggler: None,
-        link_latency: None,
-    };
-    let o2 = obj.clone();
-    let r = run_asyn_tcp(obj.clone(), &opts, move |w| {
-        Box::new(NativeEngine::new(o2.clone(), 50, 502 + w as u64))
-    });
-    let pts = r.trace.points();
+    let r = TrainSpec::new(ms(500, 10, 2_000))
+        .algo("sfw-asyn")
+        .transport(Transport::Tcp)
+        .iterations(80)
+        .tau(8)
+        .workers(3)
+        .batch(BatchSchedule::Constant(64))
+        .eval_every(20)
+        .seed(501)
+        .power_iters(50)
+        .run()
+        .expect("tcp train");
+    let pts = r.points();
     assert!(pts.last().unwrap().loss < 0.5 * pts.first().unwrap().loss);
     assert!(nuclear_norm(&r.x) <= 1.0 + 1e-3);
-    let s = r.counters.snapshot();
+    let s = r.snapshot();
     assert_eq!(s.iterations, 80);
     assert!(s.bytes_up > 0 && s.bytes_down > 0);
 }
@@ -50,26 +49,18 @@ fn tcp_transport_full_training_run() {
 fn tcp_and_local_transport_count_comparable_traffic() {
     // Same protocol + same workload => same order of bytes (TCP adds a
     // 5-byte frame header per message; totals must agree within 25%).
-    let obj = ms(510, 8, 1_500);
-    let opts = AsynOptions {
-        iterations: 60,
-        tau: 8,
-        workers: 2,
-        batch: BatchSchedule::Constant(32),
-        eval_every: 30,
-        seed: 511,
-        straggler: None,
-        link_latency: None,
-    };
-    let o2 = obj.clone();
-    let local = run_asyn_local(obj.clone(), &opts, |w| {
-        Box::new(NativeEngine::new(o2.clone(), 40, 512 + w as u64))
-    });
-    let o3 = obj.clone();
-    let tcp = run_asyn_tcp(obj.clone(), &opts, |w| {
-        Box::new(NativeEngine::new(o3.clone(), 40, 512 + w as u64))
-    });
-    let (l, t) = (local.counters.snapshot(), tcp.counters.snapshot());
+    let spec = TrainSpec::new(ms(510, 8, 1_500))
+        .algo("sfw-asyn")
+        .iterations(60)
+        .tau(8)
+        .workers(2)
+        .batch(BatchSchedule::Constant(32))
+        .eval_every(30)
+        .seed(511)
+        .power_iters(40);
+    let local = spec.clone().transport(Transport::Local).run().expect("local");
+    let tcp = spec.clone().transport(Transport::Tcp).run().expect("tcp");
+    let (l, t) = (local.snapshot(), tcp.snapshot());
     let rel = |a: u64, b: u64| (a as f64 - b as f64).abs() / (a as f64).max(1.0);
     // identical accepted-iteration count; message counts differ only by
     // scheduling nondeterminism
@@ -88,41 +79,22 @@ fn asyn_beats_dist_wall_clock_with_stragglers() {
     // straggler on every worker; the barrier in SFW-dist pays the max
     // delay every round, SFW-asyn only pays it on the straggling worker's
     // own updates.  Compare wall-clock to the same iteration count.
-    let obj = ms(520, 10, 2_000);
-    let straggler = Some(Straggler { unit: Duration::from_micros(50), p: 0.35 });
     let iters = 60;
-    let o2 = obj.clone();
+    let spec = TrainSpec::new(ms(520, 10, 2_000))
+        .iterations(iters)
+        .tau(16)
+        .workers(4)
+        .batch(BatchSchedule::Constant(64))
+        .eval_every(iters)
+        .seed(521)
+        .power_iters(40)
+        .straggler(Straggler { unit: Duration::from_micros(50), p: 0.35 });
     let t0 = std::time::Instant::now();
-    let _ = run_asyn_local(
-        obj.clone(),
-        &AsynOptions {
-            iterations: iters,
-            tau: 16,
-            workers: 4,
-            batch: BatchSchedule::Constant(64),
-            eval_every: iters,
-            seed: 521,
-            straggler,
-            link_latency: None,
-        },
-        |w| Box::new(NativeEngine::new(o2.clone(), 40, 522 + w as u64)),
-    );
+    let _ = spec.clone().algo("sfw-asyn").run().expect("asyn");
     let asyn_time = t0.elapsed().as_secs_f64();
 
-    let o3 = obj.clone();
     let t1 = std::time::Instant::now();
-    let _ = run_dist(
-        obj.clone(),
-        &DistOptions {
-            iterations: iters,
-            workers: 4,
-            batch: BatchSchedule::Constant(64),
-            eval_every: iters,
-            seed: 521,
-            straggler,
-        },
-        |w| Box::new(NativeEngine::new(o3.clone(), 40, 522u64.wrapping_add(w as u64))),
-    );
+    let _ = spec.clone().algo("sfw-dist").run().expect("dist");
     let dist_time = t1.elapsed().as_secs_f64();
     assert!(
         asyn_time < dist_time,
@@ -134,52 +106,19 @@ fn asyn_beats_dist_wall_clock_with_stragglers() {
 fn comm_cost_ordering_matches_paper() {
     // Per-master-iteration upload bytes: SFW-asyn O(D1+D2) << SFW-dist
     // O(W * D1*D2); DFW-power total grows superlinearly with T.
-    let d = 16;
-    let obj = ms(530, d, 2_000);
     let iters = 40u64;
-
-    let o2 = obj.clone();
-    let asyn = run_asyn_local(
-        obj.clone(),
-        &AsynOptions {
-            iterations: iters,
-            tau: 8,
-            workers: 4,
-            batch: BatchSchedule::Constant(64),
-            eval_every: iters,
-            seed: 531,
-            straggler: None,
-            link_latency: None,
-        },
-        |w| Box::new(NativeEngine::new(o2.clone(), 40, 532 + w as u64)),
-    );
-    let o3 = obj.clone();
-    let dist = run_dist(
-        obj.clone(),
-        &DistOptions {
-            iterations: iters,
-            workers: 4,
-            batch: BatchSchedule::Constant(64),
-            eval_every: iters,
-            seed: 531,
-            straggler: None,
-        },
-        |w| Box::new(NativeEngine::new(o3.clone(), 40, 532u64.wrapping_add(w as u64))),
-    );
-    let dfw = run_dfw_power(
-        obj.clone(),
-        &DfwOptions {
-            iterations: iters,
-            workers: 4,
-            rounds_base: 1,
-            rounds_slope: 0.5,
-            eval_every: iters,
-            seed: 531,
-        },
-    );
-    let a = asyn.counters.snapshot();
-    let di = dist.counters.snapshot();
-    let df = dfw.counters.snapshot();
+    let spec = TrainSpec::new(ms(530, 16, 2_000))
+        .iterations(iters)
+        .tau(8)
+        .workers(4)
+        .batch(BatchSchedule::Constant(64))
+        .eval_every(iters)
+        .seed(531)
+        .power_iters(40)
+        .dfw_rounds(1, 0.5);
+    let a = spec.clone().algo("sfw-asyn").run().expect("asyn").snapshot();
+    let di = spec.clone().algo("sfw-dist").run().expect("dist").snapshot();
+    let df = spec.clone().algo("dfw-power").run().expect("dfw").snapshot();
     // asyn upload per accepted iteration ~ 4(d1+d2) + header
     let asyn_up_per_iter = a.bytes_up as f64 / a.iterations as f64;
     let dist_up_per_iter = di.bytes_up as f64 / di.iterations as f64;
@@ -196,11 +135,15 @@ fn comm_cost_ordering_matches_paper() {
 fn svrf_asyn_and_serial_svrf_reach_similar_quality() {
     // Alg 5 must not lose quality vs its serial counterpart at equal
     // inner-iteration counts (same epochs => same N_t sequence).
+    use sfw::algo::engine::NativeEngine;
     use sfw::algo::svrf::{run_svrf, SvrfOptions};
-    use sfw::coordinator::{run_svrf_asyn_local, SvrfAsynOptions};
     use sfw::metrics::{Counters, LossTrace};
 
-    let obj = ms(550, 10, 3_000);
+    let task = ms(550, 10, 3_000);
+    let obj = match &task {
+        TaskSpec::Prebuilt(w) => w.objective(),
+        _ => unreachable!(),
+    };
     let counters = Counters::new();
     let trace = LossTrace::new();
     let mut engine = NativeEngine::new(obj.clone(), 50, 551);
@@ -217,50 +160,43 @@ fn svrf_asyn_and_serial_svrf_reach_similar_quality() {
     );
     let serial_final = trace.points().last().unwrap().loss;
 
-    let o2 = obj.clone();
-    let r = run_svrf_asyn_local(
-        obj.clone(),
-        &SvrfAsynOptions {
-            epochs: 3,
-            tau: 8,
-            workers: 3,
-            batch: BatchSchedule::Linear { scale: 24.0, cap: 1_024 },
-            eval_every: 10,
-            seed: 552,
-        },
-        move |w| Box::new(NativeEngine::new(o2.clone(), 50, 553 + w as u64)),
-    );
-    let asyn_final = r.trace.points().last().unwrap().loss;
+    let r = TrainSpec::new(task)
+        .algo("svrf-asyn")
+        .epochs(3)
+        .tau(8)
+        .workers(3)
+        .batch(BatchSchedule::Linear { scale: 24.0, cap: 1_024 })
+        .eval_every(10)
+        .seed(552)
+        .power_iters(50)
+        .run()
+        .expect("svrf-asyn");
+    let asyn_final = r.points().last().unwrap().loss;
     // staleness may cost a constant factor but not an order of magnitude
     assert!(
         asyn_final < 10.0 * serial_final + 1e-3,
         "SVRF-asyn {asyn_final} vs serial SVRF {serial_final}"
     );
-    assert_eq!(r.counters.snapshot().iterations, 50); // 6 + 14 + 30
+    assert_eq!(r.snapshot().iterations, 50); // 6 + 14 + 30
 }
 
 #[test]
 fn workers_terminate_when_master_reaches_t() {
     // Liveness/cleanup: after T accepted updates every worker gets Stop
-    // and joins — run_asyn_local returning at all proves it, but also
-    // check no pending messages are lost (counters consistent).
-    let obj = ms(560, 8, 1_000);
-    let o2 = obj.clone();
-    let r = run_asyn_local(
-        obj.clone(),
-        &AsynOptions {
-            iterations: 25,
-            tau: 4,
-            workers: 6,
-            batch: BatchSchedule::Constant(16),
-            eval_every: 25,
-            seed: 561,
-            straggler: None,
-            link_latency: None,
-        },
-        move |w| Box::new(NativeEngine::new(o2.clone(), 30, 562 + w as u64)),
-    );
-    let s = r.counters.snapshot();
+    // and joins — the run returning at all proves it, but also check no
+    // pending messages are lost (counters consistent).
+    let r = TrainSpec::new(ms(560, 8, 1_000))
+        .algo("sfw-asyn")
+        .iterations(25)
+        .tau(4)
+        .workers(6)
+        .batch(BatchSchedule::Constant(16))
+        .eval_every(25)
+        .seed(561)
+        .power_iters(30)
+        .run()
+        .expect("train");
+    let s = r.snapshot();
     assert_eq!(s.iterations, 25);
     // every up-message was either accepted or dropped
     assert!(s.msgs_up >= s.iterations + s.dropped_updates);
@@ -273,28 +209,34 @@ fn delay_gate_staleness_never_exceeds_tau() {
     // Instrument via counters: with tau large enough no drops occur; with
     // tau = 0 and several workers, drops must occur, but accepted
     // iterations still hit T (liveness).
-    let obj = ms(540, 8, 1_000);
     let run = |tau: u64| {
-        let o2 = obj.clone();
-        run_asyn_local(
-            obj.clone(),
-            &AsynOptions {
-                iterations: 50,
-                tau,
-                workers: 4,
-                batch: BatchSchedule::Constant(16),
-                eval_every: 50,
-                seed: 541,
-                straggler: None,
-                link_latency: None,
-            },
-            move |w| Box::new(NativeEngine::new(o2.clone(), 30, 542 + w as u64)),
-        )
+        TrainSpec::new(ms(540, 8, 1_000))
+            .algo("sfw-asyn")
+            .iterations(50)
+            .tau(tau)
+            .workers(4)
+            .batch(BatchSchedule::Constant(16))
+            .eval_every(50)
+            .seed(541)
+            .power_iters(30)
+            .run()
+            .expect("train")
     };
     let loose = run(1_000);
-    assert_eq!(loose.counters.snapshot().dropped_updates, 0);
-    assert_eq!(loose.counters.snapshot().iterations, 50);
+    assert_eq!(loose.snapshot().dropped_updates, 0);
+    assert_eq!(loose.snapshot().iterations, 50);
     let tight = run(0);
-    assert!(tight.counters.snapshot().dropped_updates > 0);
-    assert_eq!(tight.counters.snapshot().iterations, 50);
+    assert!(tight.snapshot().dropped_updates > 0);
+    assert_eq!(tight.snapshot().iterations, 50);
+}
+
+#[test]
+fn tcp_transport_is_rejected_for_local_only_solvers() {
+    let err = TrainSpec::new(ms(570, 8, 500))
+        .algo("sva")
+        .transport(Transport::Tcp)
+        .run()
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("sva") && msg.contains("Tcp"), "unexpected error: {msg}");
 }

@@ -7,8 +7,6 @@
 use std::sync::Arc;
 
 use sfw::algo::engine::{NativeEngine, StepEngine};
-use sfw::algo::schedule::BatchSchedule;
-use sfw::coordinator::{run_asyn_local, AsynOptions};
 use sfw::data::matrix_sensing::{MatrixSensingData, MsParams};
 use sfw::data::pnn::{PnnData, PnnParams};
 use sfw::linalg::{nuclear_norm, Mat};
@@ -142,23 +140,21 @@ fn fused_step_pjrt_consistent_with_parts() {
 
 #[test]
 fn sfw_asyn_trains_end_to_end_through_pjrt() {
+    use sfw::session::{BatchSchedule, TaskSpec, TrainSpec};
     let Some(rt) = runtime() else { return };
     let obj = ms_objective(340, 4_000);
-    let o: Arc<dyn Objective> = obj.clone();
-    let opts = AsynOptions {
-        iterations: 60,
-        tau: 8,
-        workers: 2,
-        batch: BatchSchedule::Constant(128),
-        eval_every: 10,
-        seed: 341,
-        straggler: None,
-        link_latency: None,
-    };
-    let r = run_asyn_local(o, &opts, move |w| {
-        Box::new(PjrtEngine::new(rt.clone(), Workload::Ms(obj.clone()), 342 + w as u64))
-    });
-    let pts = r.trace.points();
+    let r = TrainSpec::new(TaskSpec::Prebuilt(Workload::Ms(obj)))
+        .algo("sfw-asyn")
+        .pjrt_runtime(rt)
+        .iterations(60)
+        .tau(8)
+        .workers(2)
+        .batch(BatchSchedule::Constant(128))
+        .eval_every(10)
+        .seed(341)
+        .run()
+        .expect("pjrt train");
+    let pts = r.points();
     assert!(
         pts.last().unwrap().loss < 0.5 * pts.first().unwrap().loss,
         "PJRT e2e made no progress: {} -> {}",
@@ -166,5 +162,5 @@ fn sfw_asyn_trains_end_to_end_through_pjrt() {
         pts.last().unwrap().loss
     );
     assert!(nuclear_norm(&r.x) <= 1.0 + 1e-3);
-    assert_eq!(r.counters.snapshot().iterations, 60);
+    assert_eq!(r.snapshot().iterations, 60);
 }

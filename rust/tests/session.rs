@@ -1,0 +1,176 @@
+//! The session-API contract:
+//!
+//! * every registered algorithm runs end to end on a small
+//!   matrix-sensing task over the local transport and produces a
+//!   monotone-iteration loss trace;
+//! * spec validation errors name the registry's valid algorithms;
+//! * the launcher `Config`/CLI -> `TrainSpec` mapping round-trips,
+//!   including `--section.key` overrides and bad-value errors.
+
+use sfw::config::{ConfigError, TrainConfig};
+use sfw::session::{
+    registry, BatchSchedule, EngineKind, SessionError, TaskSpec, TrainSpec, Transport,
+};
+use sfw::util::cli::Args;
+
+fn small_spec() -> TrainSpec {
+    TrainSpec::new(TaskSpec::ms_small())
+        .workers(2)
+        .tau(4)
+        .iterations(10)
+        .epochs(1) // svrf-asyn: one outer epoch (6 inner iterations)
+        .batch(BatchSchedule::Constant(16))
+        .eval_every(2)
+        .seed(7)
+        .power_iters(20)
+}
+
+#[test]
+fn every_registered_algo_runs_and_traces_monotonically() {
+    for name in registry().names() {
+        let r = small_spec()
+            .algo(name)
+            .run()
+            .unwrap_or_else(|e| panic!("algo '{name}' failed: {e}"));
+        let pts = r.points();
+        assert!(pts.len() >= 2, "algo '{name}': trace too short ({} points)", pts.len());
+        for w in pts.windows(2) {
+            assert!(
+                w[1].iteration >= w[0].iteration,
+                "algo '{name}': trace iterations not monotone ({} then {})",
+                w[0].iteration,
+                w[1].iteration
+            );
+        }
+        let s = r.snapshot();
+        assert!(s.iterations > 0, "algo '{name}': no iterations counted");
+        assert!(
+            r.spec_echo.contains(&format!("algo={name}")),
+            "algo '{name}': spec echo missing algo ({})",
+            r.spec_echo
+        );
+        for p in &pts {
+            assert!(p.loss.is_finite(), "algo '{name}': non-finite loss");
+        }
+    }
+}
+
+#[test]
+fn unknown_algo_error_lists_valid_names() {
+    let err = small_spec().algo("not-an-algo").run().unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("not-an-algo"), "{msg}");
+    for name in registry().names() {
+        assert!(msg.contains(name), "error should list '{name}': {msg}");
+    }
+}
+
+#[test]
+fn registry_names_are_stable_and_complete() {
+    let names = registry().names();
+    for required in ["sfw", "sfw-asyn", "svrf-asyn", "sfw-dist", "sva", "dfw-power"] {
+        assert!(names.contains(&required), "registry missing '{required}'");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Config -> TrainSpec mapping
+// ---------------------------------------------------------------------------
+
+fn load(cli: &str) -> Result<TrainConfig, ConfigError> {
+    TrainConfig::load(&Args::parse_from(cli.split_whitespace().map(String::from)))
+}
+
+#[test]
+fn config_maps_onto_spec_fields() {
+    let cfg = load(
+        "--task pnn --algo sfw-dist --engine pjrt --transport tcp \
+         --workers 12 --tau 3 --iterations 77 --seed 5",
+    )
+    .unwrap();
+    let spec = TrainSpec::from_config(&cfg).unwrap();
+    assert_eq!(spec.task.name(), "pnn");
+    assert_eq!(spec.algo, "sfw-dist");
+    assert_eq!(spec.engine, EngineKind::Pjrt);
+    assert_eq!(spec.transport, Transport::Tcp);
+    assert_eq!(spec.workers, 12);
+    assert_eq!(spec.tau, 3);
+    assert_eq!(spec.iterations, 77);
+    assert_eq!(spec.seed, 5);
+    assert!(spec.echo().contains("transport=tcp"));
+}
+
+#[test]
+fn sectioned_cli_overrides_reach_the_spec() {
+    let cfg = load("--train.workers 9 --train.tau 2 --data.ms-d 14").unwrap();
+    let spec = TrainSpec::from_config(&cfg).unwrap();
+    assert_eq!(spec.workers, 9);
+    assert_eq!(spec.tau, 2);
+    match spec.task {
+        TaskSpec::MatrixSensing { d1, d2, .. } => {
+            assert_eq!(d1, 14);
+            assert_eq!(d2, 14);
+        }
+        _ => panic!("expected matrix_sensing task"),
+    }
+}
+
+#[test]
+fn config_file_sections_merge_with_cli() {
+    let dir = std::env::temp_dir().join("sfw_session_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.ini");
+    std::fs::write(
+        &path,
+        "algo = sva\n[train]\nworkers = 6\ntau = 5\n[data]\nms-n = 4321\n",
+    )
+    .unwrap();
+    let cli = format!("--config {} --tau 9", path.display());
+    let cfg = load(&cli).unwrap();
+    assert_eq!(cfg.algo, "sva");
+    assert_eq!(cfg.workers, 6); // from [train] section
+    assert_eq!(cfg.tau, 9); // CLI beats file
+    assert_eq!(cfg.ms_n, 4321); // from [data] section
+    let spec = TrainSpec::from_config(&cfg).unwrap();
+    assert_eq!(spec.algo, "sva");
+    assert_eq!(spec.workers, 6);
+}
+
+#[test]
+fn bad_values_surface_as_config_errors() {
+    match load("--workers not-a-number") {
+        Err(ConfigError::BadValue(key, value)) => {
+            assert_eq!(key, "workers");
+            assert_eq!(value, "not-a-number");
+        }
+        other => panic!("expected BadValue, got {other:?}"),
+    }
+    match load("--train.iterations nope") {
+        Err(ConfigError::BadValue(key, _)) => assert_eq!(key, "iterations"),
+        other => panic!("expected BadValue, got {other:?}"),
+    }
+}
+
+#[test]
+fn unknown_task_engine_transport_are_rejected() {
+    let cfg = load("--task tabular").unwrap();
+    assert!(matches!(TrainSpec::from_config(&cfg), Err(SessionError::UnknownTask(_))));
+    let cfg = load("--engine tpu").unwrap();
+    assert!(matches!(TrainSpec::from_config(&cfg), Err(SessionError::UnknownEngine(_))));
+    let cfg = load("--transport carrier-pigeon").unwrap();
+    assert!(matches!(
+        TrainSpec::from_config(&cfg),
+        Err(SessionError::UnknownTransport(_))
+    ));
+}
+
+#[test]
+fn spec_epochs_follow_config_or_derive_from_iterations() {
+    let cfg = load("--iterations 300").unwrap();
+    let spec = TrainSpec::from_config(&cfg).unwrap();
+    // ceil(log2(300)) = 9
+    assert_eq!(spec.epochs_or_derived(), 9);
+    let cfg = load("--epochs 3").unwrap();
+    let spec = TrainSpec::from_config(&cfg).unwrap();
+    assert_eq!(spec.epochs_or_derived(), 3);
+}
