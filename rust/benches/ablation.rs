@@ -9,6 +9,11 @@
 //! 3. **power-iteration depth** — LMO quality vs cost: iterations needed
 //!    for the 1-SVD to stop limiting convergence.
 //!
+//! The tau and power-iteration grids are `sfw::sweep::SweepSpec`
+//! declarations (single-axis sweeps over a shared base spec); bucket
+//! padding stays a hand-timed engine micro-bench — it exercises a PJRT
+//! engine call, not a training grid.
+//!
 //! Emits bench_out/ablation_*.csv.
 
 use std::sync::Arc;
@@ -19,6 +24,7 @@ use sfw::experiments::build_ms;
 use sfw::linalg::Mat;
 use sfw::runtime::{PjrtEngine, PjrtRuntime, Workload};
 use sfw::session::{BatchSchedule, TaskSpec, TrainSpec};
+use sfw::sweep::{SweepRunner, SweepSpec};
 use sfw::util::rng::Rng;
 
 fn main() {
@@ -37,23 +43,25 @@ fn tau_sweep() {
         .eval_every(200)
         .seed(42)
         .power_iters(30);
+    let sweep = SweepSpec::new("ablation_tau", base).taus(&[0, 1, 2, 4, 8, 16, 64]);
+    let result = SweepRunner::new().quiet(true).run(&sweep).expect("sweep");
+
     let mut table = Table::new(
         "ablation: staleness tolerance tau (W=8, T=200, m=256)",
         &["tau", "final rel", "dropped", "drop %"],
     );
     let mut csv = Table::new("csv", &["tau", "rel", "dropped"]);
-    for &tau in &[0u64, 1, 2, 4, 8, 16, 64] {
-        let r = base.clone().tau(tau).run().expect("train");
-        let rel = r.final_relative();
-        let s = r.snapshot();
-        let total = s.iterations + s.dropped_updates;
+    for c in &result.cells {
+        let tau = c.axis("tau").unwrap();
+        let dropped = c.counters.dropped_updates;
+        let total = c.counters.iterations + dropped;
         table.row(&[
-            tau.to_string(),
-            format!("{rel:.3e}"),
-            s.dropped_updates.to_string(),
-            format!("{:.1}%", 100.0 * s.dropped_updates as f64 / total as f64),
+            tau.into(),
+            format!("{:.3e}", c.final_rel),
+            dropped.to_string(),
+            format!("{:.1}%", 100.0 * dropped as f64 / total as f64),
         ]);
-        csv.row(&[tau.to_string(), format!("{rel:.5e}"), s.dropped_updates.to_string()]);
+        csv.row(&[tau.into(), format!("{:.5e}", c.final_rel), dropped.to_string()]);
     }
     table.print();
     csv.write_csv("bench_out/ablation_tau.csv").expect("csv");
@@ -106,16 +114,19 @@ fn power_iteration_depth() {
         .batch(BatchSchedule::Constant(512))
         .eval_every(150)
         .seed(9);
+    let sweep =
+        SweepSpec::new("ablation_power_iters", base).power_iters(&[1, 2, 4, 8, 16, 64]);
+    let result = SweepRunner::new().quiet(true).run(&sweep).expect("sweep");
+
     let mut table = Table::new(
         "ablation: power-iteration depth (serial SFW, T=150, m=512)",
         &["max iters", "final rel", "mean LMO iters used"],
     );
     let mut csv = Table::new("csv", &["iters", "rel"]);
-    for &pi in &[1usize, 2, 4, 8, 16, 64] {
-        let r = base.clone().power_iters(pi).run().expect("train");
-        let rel = r.final_relative();
-        table.row(&[pi.to_string(), format!("{rel:.3e}"), format!("<= {pi}")]);
-        csv.row(&[pi.to_string(), format!("{rel:.5e}")]);
+    for c in &result.cells {
+        let pi = c.axis("power_iters").unwrap();
+        table.row(&[pi.into(), format!("{:.3e}", c.final_rel), format!("<= {pi}")]);
+        csv.row(&[pi.into(), format!("{:.5e}", c.final_rel)]);
     }
     table.print();
     csv.write_csv("bench_out/ablation_power_iters.csv").expect("csv");

@@ -2,6 +2,10 @@
 //! paper workloads (matrix sensing row 1, PNN row 2), SFW-dist vs
 //! SFW-asyn, W ∈ {1, 7, 15} workers.
 //!
+//! The grid is a `sfw::sweep::SweepSpec` declaration — algo x workers
+//! axes over a shared base spec — executed by `SweepRunner`; the cells'
+//! stored relative-loss curves regenerate the figure's series.
+//!
 //! EC2's heterogeneous workers are emulated by injecting geometric
 //! straggler delays on every worker (DESIGN.md §6).  Expected shape (the
 //! paper's): SFW-asyn dominates SFW-dist at every W; both speed up with W
@@ -16,6 +20,7 @@ use std::time::Duration;
 use sfw::benchkit::Table;
 use sfw::experiments::{build_ms, build_pnn};
 use sfw::session::{BatchSchedule, Straggler, TaskSpec, TrainSpec};
+use sfw::sweep::{SweepRunner, SweepSpec};
 
 fn straggler() -> Straggler {
     // sleep-dominated heterogeneity: emulates EC2 worker skew and
@@ -23,13 +28,6 @@ fn straggler() -> Straggler {
     // shared host), so wall-clock scaling reflects the protocol, not the
     // local core count
     Straggler { unit: Duration::from_micros(20), p: 0.25 }
-}
-
-struct Curve {
-    algo: &'static str,
-    workers: usize,
-    points: Vec<(f64, u64, f64)>,
-    time_to_target: Option<f64>,
 }
 
 fn run_task(name: &str, task: TaskSpec, iterations: u64, batch: usize, tau: u64, target: f64) {
@@ -41,18 +39,11 @@ fn run_task(name: &str, task: TaskSpec, iterations: u64, batch: usize, tau: u64,
         .seed(42)
         .power_iters(30)
         .straggler(straggler());
-    let mut curves: Vec<Curve> = Vec::new();
-    for &w in &[1usize, 7, 15] {
-        for algo in ["sfw-dist", "sfw-asyn"] {
-            let r = base.clone().algo(algo).workers(w).run().expect("train");
-            curves.push(Curve {
-                algo,
-                workers: w,
-                points: r.relative(),
-                time_to_target: r.time_to_relative(target),
-            });
-        }
-    }
+    let sweep = SweepSpec::new(&format!("fig4_{name}"), base)
+        .algos(&["sfw-dist", "sfw-asyn"])
+        .workers(&[1, 7, 15])
+        .target(target);
+    let result = SweepRunner::new().quiet(true).run(&sweep).expect("sweep");
 
     // summary: time to target per curve
     let mut table = Table::new(
@@ -60,21 +51,17 @@ fn run_task(name: &str, task: TaskSpec, iterations: u64, batch: usize, tau: u64,
         &["algo", "W", "t_target(s)", "final rel"],
     );
     let mut csv = Table::new("csv", &["algo", "W", "t", "iter", "rel"]);
-    for c in &curves {
+    for c in &result.cells {
+        let (algo, w) = (c.axis("algo").unwrap(), c.axis("workers").unwrap());
         let tt = c
             .time_to_target
             .map(|t| format!("{t:.3}"))
             .unwrap_or_else(|| "—".into());
-        table.row(&[
-            c.algo.into(),
-            c.workers.to_string(),
-            tt,
-            format!("{:.3e}", c.points.last().unwrap().2),
-        ]);
-        for &(t, i, r) in &c.points {
+        table.row(&[algo.into(), w.into(), tt, format!("{:.3e}", c.final_rel)]);
+        for &(t, i, r) in &c.curve {
             csv.row(&[
-                c.algo.into(),
-                c.workers.to_string(),
+                algo.into(),
+                w.into(),
                 format!("{t:.4}"),
                 i.to_string(),
                 format!("{r:.5e}"),

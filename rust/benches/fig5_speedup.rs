@@ -3,6 +3,10 @@
 //! worker count grows, SFW-dist vs SFW-asyn, with injected straggler
 //! heterogeneity.
 //!
+//! The grid (algo x W) is a `sfw::sweep::SweepSpec` declaration; the
+//! speedup columns divide each cell's time-to-target by its algorithm's
+//! W=1 cell from the same sweep.
+//!
 //! Expected shape: SFW-asyn's speedup grows near-linearly in W and
 //! consistently exceeds SFW-dist's, which saturates (barrier + dense
 //! traffic).  Emits bench_out/fig5_<task>.csv.
@@ -13,24 +17,11 @@ use sfw::benchkit::Table;
 use sfw::experiments::{build_ms, build_pnn};
 use sfw::runtime::Workload;
 use sfw::session::{BatchSchedule, Straggler, TaskSpec, TrainSpec};
+use sfw::sweep::{SweepRunner, SweepSpec};
 
 fn straggler() -> Straggler {
     // sleep-dominated heterogeneity (see fig4_convergence.rs)
     Straggler { unit: Duration::from_micros(20), p: 0.25 }
-}
-
-fn time_to(
-    base: &TrainSpec,
-    algo: &str,
-    w: usize,
-    target: f64,
-) -> Option<f64> {
-    base.clone()
-        .algo(algo)
-        .workers(w)
-        .run()
-        .expect("train")
-        .time_to_relative(target)
 }
 
 fn run_task(name: &str, task: TaskSpec, iters: u64, batch: usize, tau: u64, target: f64) {
@@ -43,16 +34,28 @@ fn run_task(name: &str, task: TaskSpec, iters: u64, batch: usize, tau: u64, targ
         .power_iters(30)
         .straggler(straggler());
     let workers = [1usize, 3, 7, 11, 15];
+    let sweep = SweepSpec::new(&format!("fig5_{name}"), base)
+        .algos(&["sfw-dist", "sfw-asyn"])
+        .workers(&workers)
+        .target(target);
+    let result = SweepRunner::new().quiet(true).run(&sweep).expect("sweep");
+
+    let tt = |algo: &str, w: usize| -> Option<f64> {
+        result
+            .find(&[("algo", algo), ("workers", &w.to_string())])
+            .and_then(|c| c.time_to_target)
+    };
+    let base_d = tt("sfw-dist", 1);
+    let base_a = tt("sfw-asyn", 1);
+
     let mut table = Table::new(
         &format!("Fig 5 ({name}): speedup to rel err {target} vs 1 worker"),
         &["W", "dist t(s)", "dist speedup", "asyn t(s)", "asyn speedup"],
     );
     let mut csv = Table::new("csv", &["algo", "W", "t", "speedup"]);
-    let base_d = time_to(&base, "sfw-dist", 1, target);
-    let base_a = time_to(&base, "sfw-asyn", 1, target);
     for &w in &workers {
-        let td = time_to(&base, "sfw-dist", w, target);
-        let ta = time_to(&base, "sfw-asyn", w, target);
+        let td = tt("sfw-dist", w);
+        let ta = tt("sfw-asyn", w);
         let sp = |base: Option<f64>, t: Option<f64>| match (base, t) {
             (Some(b), Some(t)) if t > 0.0 => format!("{:.2}x", b / t),
             _ => "—".into(),

@@ -165,11 +165,18 @@ impl Default for TrainConfig {
 impl TrainConfig {
     /// Build from optional config file + CLI overrides.
     pub fn load(args: &Args) -> Result<Self, ConfigError> {
-        let mut cfg = if let Some(path) = args.get_opt("config") {
+        let cfg = if let Some(path) = args.get_opt("config") {
             Config::from_file(path)?
         } else {
             Config::new()
         };
+        Self::resolve(cfg, args)
+    }
+
+    /// Resolve an already-parsed file config + CLI overrides — for
+    /// callers that also read other sections of the same file (e.g. the
+    /// sweep harness's `[sweep]`) and must not parse it twice.
+    pub fn resolve(mut cfg: Config, args: &Args) -> Result<Self, ConfigError> {
         // Launcher keys by owning section: `[train]` groups run knobs,
         // `[data]` groups dataset knobs.  A key in the WRONG section is
         // ignored (not silently honored).

@@ -62,13 +62,6 @@ enum Rep {
     Mtv(Vec<f32>),
 }
 
-/// Run DFW-power — **deprecated shim**; prefer `sfw::session::TrainSpec`
-/// with `.algo("dfw-power")`.
-#[deprecated(since = "0.2.0", note = "use sfw::session::TrainSpec with .algo(\"dfw-power\")")]
-pub fn run_dfw_power(obj: Arc<dyn Objective>, opts: &DfwOptions) -> RunResult {
-    run_dfw_power_impl(obj, opts)
-}
-
 pub(crate) fn run_dfw_power_impl(obj: Arc<dyn Objective>, opts: &DfwOptions) -> RunResult {
     let counters = Arc::new(Counters::new());
     let trace = Arc::new(LossTrace::new());

@@ -10,11 +10,12 @@
 //! * [`update_log`] / [`messages`] — the rank-one log and wire types.
 //! * [`eval`] — off-thread objective evaluation for loss traces.
 //!
-//! **Entry points moved:** training runs start from
+//! **Entry points:** training runs start from
 //! [`crate::session::TrainSpec`], which owns the transport/engine/metrics
-//! wiring for every algorithm here.  The old `run_*` functions in
-//! [`runner`], [`svrf_asyn`], [`sync`], [`sva`] and [`dfw_power`] remain
-//! as thin deprecated shims for one release.
+//! wiring for every algorithm here.  (The 0.2 deprecated `run_*` shims
+//! in [`runner`], [`svrf_asyn`], [`sync`], [`sva`] and [`dfw_power`]
+//! have been removed; this module now exports only the protocol option
+//! types and the raw [`RunResult`].)
 
 pub mod dfw_power;
 pub mod eval;
@@ -28,14 +29,8 @@ pub mod update_log;
 pub mod worker;
 
 pub use messages::{LogEntry, MasterMsg, UpdateMsg};
-#[allow(deprecated)]
-pub use runner::{run_asyn_local, run_asyn_tcp};
 pub use runner::{AsynOptions, RunResult};
-#[allow(deprecated)]
-pub use svrf_asyn::run_svrf_asyn_local;
 pub use svrf_asyn::SvrfAsynOptions;
-#[allow(deprecated)]
-pub use sync::run_dist;
 pub use sync::DistOptions;
 pub use update_log::{replay, replay_after, UpdateLog};
 pub use worker::Straggler;

@@ -1,7 +1,9 @@
-//! SFW-asyn run entry points — **deprecated shims**.
+//! SFW-asyn protocol options and the raw run result.
 //!
-//! The harness that wires master + workers over a transport moved to
-//! `sfw::session` (one implementation, transport as a spec field); prefer
+//! Training runs start from [`crate::session::TrainSpec`]; the harness
+//! that wires master + workers over a transport lives in
+//! `sfw::session::harness` with the transport as a spec field.  This
+//! module keeps the protocol-level types that harness and solvers share:
 //!
 //! ```no_run
 //! use sfw::session::{TaskSpec, TrainSpec, Transport};
@@ -12,19 +14,17 @@
 //!     .unwrap();
 //! ```
 //!
-//! These wrappers are kept for one release for downstream callers that
-//! still hold an [`AsynOptions`] + engine closure.
+//! (The 0.2 `run_asyn_local`/`run_asyn_tcp` deprecated shims are gone;
+//! callers holding an [`AsynOptions`] + engine closure go through
+//! `session::harness::run_asyn` via a `TrainSpec` now.)
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::algo::engine::StepEngine;
 use crate::algo::schedule::BatchSchedule;
 use crate::coordinator::worker::Straggler;
 use crate::linalg::Mat;
 use crate::metrics::{Counters, LossTrace};
-use crate::objective::Objective;
-use crate::session::Transport;
 
 pub struct AsynOptions {
     pub iterations: u64,
@@ -59,45 +59,14 @@ pub struct RunResult {
     pub trace: Arc<LossTrace>,
 }
 
-/// Run SFW-asyn over the in-process transport.  `make_engine(w)` builds
-/// worker w's compute engine (native math or a PJRT artifact executor).
-#[deprecated(since = "0.2.0", note = "use sfw::session::TrainSpec with .algo(\"sfw-asyn\")")]
-pub fn run_asyn_local<F>(
-    obj: Arc<dyn Objective>,
-    opts: &AsynOptions,
-    make_engine: F,
-) -> RunResult
-where
-    F: FnMut(usize) -> Box<dyn StepEngine>,
-{
-    crate::session::harness::run_asyn(obj, opts, Transport::Local, make_engine)
-}
-
-/// Run SFW-asyn over real localhost TCP sockets (same protocol, true
-/// serialization + kernel queues).  Master binds an ephemeral port.
-#[deprecated(
-    since = "0.2.0",
-    note = "use sfw::session::TrainSpec with .algo(\"sfw-asyn\").transport(Transport::Tcp)"
-)]
-pub fn run_asyn_tcp<F>(
-    obj: Arc<dyn Objective>,
-    opts: &AsynOptions,
-    make_engine: F,
-) -> RunResult
-where
-    F: FnMut(usize) -> Box<dyn StepEngine>,
-{
-    crate::session::harness::run_asyn(obj, opts, Transport::Tcp, make_engine)
-}
-
 #[cfg(test)]
-#[allow(deprecated)] // exercises the back-compat shims on purpose
 mod tests {
     use super::*;
     use crate::algo::engine::NativeEngine;
     use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
     use crate::linalg::nuclear_norm;
-    use crate::objective::MatrixSensing;
+    use crate::objective::{MatrixSensing, Objective};
+    use crate::session::{harness, Transport};
     use crate::util::rng::Rng;
 
     fn obj(seed: u64) -> Arc<dyn Objective> {
@@ -120,7 +89,7 @@ mod tests {
             link_latency: None,
         };
         let o2 = obj.clone();
-        let r = run_asyn_local(obj, &opts, move |w| {
+        let r = harness::run_asyn(obj, &opts, Transport::Local, move |w| {
             Box::new(NativeEngine::new(o2.clone(), 60, 97 + w as u64))
         });
         let pts = r.trace.points();
@@ -155,7 +124,7 @@ mod tests {
             link_latency: None,
         };
         let o2 = obj.clone();
-        let r = run_asyn_local(obj, &opts, move |w| {
+        let r = harness::run_asyn(obj, &opts, Transport::Local, move |w| {
             Box::new(NativeEngine::new(o2.clone(), 30, 100 + w as u64))
         });
         let s = r.counters.snapshot();

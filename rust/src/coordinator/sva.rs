@@ -41,16 +41,6 @@ struct Rep {
     v: Vec<f32>,
 }
 
-/// Run SVA — **deprecated shim**; prefer `sfw::session::TrainSpec` with
-/// `.algo("sva")`.
-#[deprecated(since = "0.2.0", note = "use sfw::session::TrainSpec with .algo(\"sva\")")]
-pub fn run_sva<F>(obj: Arc<dyn Objective>, opts: &SvaOptions, make_engine: F) -> RunResult
-where
-    F: FnMut(usize) -> Box<dyn StepEngine>,
-{
-    run_sva_impl(obj, opts, make_engine)
-}
-
 pub(crate) fn run_sva_impl<F>(
     obj: Arc<dyn Objective>,
     opts: &SvaOptions,

@@ -23,7 +23,6 @@ use crate::algo::schedule::{eta, svrf_epoch_len, BatchSchedule};
 use crate::algo::sfw::init_rank_one;
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::messages::{MasterMsg, UpdateMsg};
-use crate::coordinator::runner::RunResult;
 use crate::coordinator::update_log::{replay_after, UpdateLog};
 use crate::linalg::Mat;
 use crate::metrics::{Counters, LossTrace};
@@ -210,28 +209,14 @@ pub(crate) fn run_svrf_worker<L: WorkerLink, E: StepEngine + ?Sized>(
     }
 }
 
-/// Run SVRF-asyn over the in-process transport — **deprecated shim**
-/// over the `sfw::session` harness.
-#[deprecated(since = "0.2.0", note = "use sfw::session::TrainSpec with .algo(\"svrf-asyn\")")]
-pub fn run_svrf_asyn_local<F>(
-    obj: Arc<dyn Objective>,
-    opts: &SvrfAsynOptions,
-    make_engine: F,
-) -> RunResult
-where
-    F: FnMut(usize) -> Box<dyn StepEngine>,
-{
-    crate::session::harness::run_svrf_asyn(obj, opts, make_engine)
-}
-
 #[cfg(test)]
-#[allow(deprecated)] // exercises the back-compat shim on purpose
 mod tests {
     use super::*;
     use crate::algo::engine::NativeEngine;
     use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
     use crate::linalg::nuclear_norm;
     use crate::objective::MatrixSensing;
+    use crate::session::harness;
 
     #[test]
     fn svrf_asyn_converges() {
@@ -248,7 +233,7 @@ mod tests {
             seed: 141,
         };
         let o2 = obj.clone();
-        let r = run_svrf_asyn_local(obj, &opts, move |w| {
+        let r = harness::run_svrf_asyn(obj, &opts, move |w| {
             Box::new(NativeEngine::new(o2.clone(), 50, 142 + w as u64))
         });
         let pts = r.trace.points();

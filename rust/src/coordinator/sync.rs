@@ -44,16 +44,6 @@ struct RoundReply {
     loss_sum: f64,
 }
 
-/// Run synchronous SFW-dist — **deprecated shim**; prefer
-/// `sfw::session::TrainSpec` with `.algo("sfw-dist")`.
-#[deprecated(since = "0.2.0", note = "use sfw::session::TrainSpec with .algo(\"sfw-dist\")")]
-pub fn run_dist<F>(obj: Arc<dyn Objective>, opts: &DistOptions, make_engine: F) -> RunResult
-where
-    F: FnMut(usize) -> Box<dyn StepEngine>,
-{
-    run_dist_impl(obj, opts, make_engine)
-}
-
 /// Run synchronous SFW-dist; the master thread is the caller.
 /// `make_engine(w)` supplies each worker's gradient engine; worker 0's
 /// engine type is also instantiated at the master (`make_engine(usize::MAX)`)

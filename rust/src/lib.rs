@@ -58,5 +58,6 @@ pub mod objective;
 pub mod runtime;
 pub mod session;
 pub mod sim;
+pub mod sweep;
 pub mod transport;
 pub mod util;

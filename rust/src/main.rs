@@ -6,6 +6,10 @@
 //!             so EVERY registered algorithm x task x engine x transport
 //!             combination is reachable from here (see
 //!             `sfw::session::registry()` for the algorithm list).
+//!   sweep     expand a `[sweep]` axis grid over TrainSpecs, run every
+//!             cell, print the summary table and write
+//!             bench_out/sweep_<name>.{json,csv} (`--smoke` runs the
+//!             tiny deterministic CI grid).
 //!   simulate  queuing-model simulation (Appendix D)
 //!   info      show the artifact manifest and PJRT platform
 //!
@@ -14,6 +18,10 @@
 //!   sfw train --task pnn --algo sfw-dist --engine pjrt --iterations 100
 //!   sfw train --algo sfw-asyn --transport tcp --workers 4
 //!   sfw train --config run.ini --train.workers 16
+//!   sfw sweep --smoke
+//!   sfw sweep --sweep.algos sfw-dist,sfw-asyn --sweep.workers 1,3,7,15 \
+//!             --sweep.target 0.02 --name speedup
+//!   sfw sweep --config run.ini --sweep.tau 0,2,8,64 --jobs 2
 //!   sfw simulate --p 0.1 --workers 15 --iterations 500
 //!   sfw info --artifacts-dir artifacts
 
@@ -22,6 +30,7 @@ use sfw::algo::schedule::BatchSchedule;
 use sfw::config::TrainConfig;
 use sfw::session::{registry, Report, TrainSpec};
 use sfw::sim::{simulate_asyn, simulate_dist, QueuingParams};
+use sfw::sweep::{SweepRunner, SweepSpec};
 use sfw::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -30,11 +39,12 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse_env(2);
     match cmd {
         "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
         "simulate" => cmd_simulate(&args),
         "info" => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: sfw <train|simulate|info> [--flags]\n\
+                "usage: sfw <train|sweep|simulate|info> [--flags]\n\
                  see rust/src/main.rs header for examples"
             );
             Ok(())
@@ -79,6 +89,46 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             registry().names().join(", ")
         ),
     }
+}
+
+/// `sfw sweep`: expand + run a `[sweep]` grid and emit the artifacts.
+/// `--smoke` runs the fixed CI grid (seed 42, W in {1,2}); otherwise the
+/// grid comes from `--sweep.*` keys / the config file's `[sweep]` section
+/// over the usual `[train]`/`[data]` base.
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let spec = if args.get_bool("smoke") {
+        // The smoke grid is fixed by contract (CI compares artifacts
+        // across runs); grid-shaping flags must fail loudly, not be
+        // ignored.
+        if let Some(key) = args.flag_keys().find(|k| {
+            k.starts_with("sweep.") || matches!(k.as_str(), "config" | "name" | "target")
+        }) {
+            anyhow::bail!("--{key} does not apply to --smoke (the grid is fixed; drop --smoke)");
+        }
+        let mut spec = SweepSpec::smoke();
+        // Execution knobs (not grid shape) still apply to the smoke grid.
+        if args.has("jobs") {
+            let jobs = args.get_usize("jobs", spec.jobs);
+            spec = spec.jobs(jobs);
+        }
+        if args.has("repeats") {
+            let repeats = args.get_usize("repeats", spec.repeats);
+            spec = spec.repeats(repeats);
+        }
+        spec
+    } else {
+        // --jobs/--repeats/--sweep.* resolve inside SweepSpec::load.
+        SweepSpec::load(args)?
+    };
+    let result = SweepRunner::new().run(&spec)?;
+    result.table().print();
+    let out_dir = args.get_str("out-dir", "bench_out");
+    let json_path = format!("{out_dir}/sweep_{}.json", spec.name);
+    let csv_path = format!("{out_dir}/sweep_{}.csv", spec.name);
+    result.write_json(&json_path)?;
+    result.write_csv(&csv_path)?;
+    println!("\nsweep '{}': {} cells -> {json_path}, {csv_path}", spec.name, result.cells.len());
+    Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {

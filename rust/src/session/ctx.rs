@@ -59,7 +59,7 @@ impl RunCtx {
     }
 }
 
-fn build_task(spec: &TrainSpec) -> (Arc<dyn Objective>, Workload) {
+pub(crate) fn build_task(spec: &TrainSpec) -> (Arc<dyn Objective>, Workload) {
     let mut rng = Rng::new(spec.seed);
     match &spec.task {
         TaskSpec::MatrixSensing { d1, d2, rank, n, noise_std } => {

@@ -2,11 +2,10 @@
 //! and run one training job end to end (threads for workers, caller
 //! thread for the master — mirroring one MPI rank per process).
 //!
-//! This is the wiring that used to be duplicated across
+//! This is the wiring that used to be duplicated across the 0.2
 //! `coordinator::runner::{run_asyn_local, run_asyn_tcp}` and
-//! `coordinator::svrf_asyn::run_svrf_asyn_local`; the transport is now a
-//! parameter and those entry points are thin deprecated shims over this
-//! module.
+//! `coordinator::svrf_asyn::run_svrf_asyn_local` entry points (removed);
+//! the transport is a parameter here and solvers are the only callers.
 
 use std::sync::Arc;
 use std::time::Duration;

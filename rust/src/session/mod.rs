@@ -29,8 +29,7 @@
 //!
 //! Adding a new algorithm, transport or workload is a registry entry plus
 //! a `Solver` impl — not a seventh copy of the counters/trace/engine
-//! plumbing.  The old `coordinator::run_*` entry points remain as thin
-//! deprecated shims for one release.
+//! plumbing.  Grids over specs are first-class too: see [`crate::sweep`].
 
 pub mod ctx;
 pub(crate) mod harness;
@@ -124,6 +123,8 @@ pub enum SessionError {
     UnknownTransport(String),
     #[error("algorithm '{algo}' does not support transport {transport:?}")]
     UnsupportedTransport { algo: String, transport: Transport },
+    #[error("invalid spec: {0}")]
+    InvalidSpec(String),
     #[error("engine setup: {0}")]
     Engine(String),
     #[error(transparent)]

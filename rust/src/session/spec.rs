@@ -169,6 +169,21 @@ impl TrainSpec {
         self
     }
 
+    /// Generate the task's dataset now and pin it as
+    /// [`TaskSpec::Prebuilt`], so clones of this spec (sweep cells,
+    /// repeated runs) share one workload via `Arc` instead of
+    /// regenerating it inside every timed `run()`.  Call only after the
+    /// data-shaping fields (task dims, `seed`, `theta`) are final; a
+    /// later `seed` change then varies only algorithm randomness, not
+    /// the dataset.  No-op for an already-prebuilt task.
+    pub fn prebuilt(mut self) -> Self {
+        if !matches!(self.task, TaskSpec::Prebuilt(_)) {
+            let (_, workload) = crate::session::ctx::build_task(&self);
+            self.task = TaskSpec::Prebuilt(workload);
+        }
+        self
+    }
+
     /// SVRF-asyn epoch count: explicit, or derived from `iterations`.
     pub fn epochs_or_derived(&self) -> u32 {
         self.epochs
@@ -199,6 +214,22 @@ impl TrainSpec {
     /// Resolve the spec and run it: registry lookup, transport validation,
     /// objective + engine wiring, then the solver.
     pub fn run(&self) -> Result<Report, SessionError> {
+        // Scale knobs the protocols divide/modulo by must be positive —
+        // caught here so a bad cell is a SessionError, not a worker panic.
+        if self.workers == 0 {
+            return Err(SessionError::InvalidSpec("workers must be >= 1".into()));
+        }
+        if self.eval_every == 0 {
+            return Err(SessionError::InvalidSpec("eval-every must be >= 1".into()));
+        }
+        // Latency injection is implemented by the in-process links only;
+        // real sockets have real latency.  Reject rather than silently
+        // measure a zero-latency TCP run.
+        if self.link_latency.is_some() && self.transport == Transport::Tcp {
+            return Err(SessionError::InvalidSpec(
+                "link-latency injection only applies to the local transport".into(),
+            ));
+        }
         let reg = registry();
         let solver = reg.get(&self.algo).ok_or_else(|| SessionError::UnknownAlgo {
             name: self.algo.clone(),

@@ -1,0 +1,282 @@
+//! `[sweep]` configuration: resolve a [`SweepSpec`] from the same
+//! INI-subset config file + CLI overrides the launcher uses, reusing the
+//! section-aware key resolution of `config::TrainConfig`.
+//!
+//! The base [`TrainSpec`] comes from the ordinary `[train]`/`[data]`
+//! keys; the `[sweep]` section declares the axes.  Axis keys are only
+//! accepted in their sectioned spelling (`sweep.workers = 1,3,7` in the
+//! file, `--sweep.workers 1,3,7` on the CLI) because the flat spellings
+//! (`--workers`) already belong to `[train]`; the sweep-owned scalars
+//! (`name`, `repeats`, `jobs`, `target`) also accept the flat spelling.
+//! A key in the `[sweep]` section that is not a known axis is an error
+//! that lists the valid names — same contract as the solver registry.
+
+use std::str::FromStr;
+
+use crate::config::{Config, TrainConfig};
+use crate::session::{TrainSpec, Transport};
+use crate::sweep::grid::{StragglerProfile, SweepSpec};
+use crate::sweep::SweepError;
+
+/// Keys the `[sweep]` section accepts (axes + run knobs).
+pub const SWEEP_KEYS: &[&str] = &[
+    "name", "algos", "workers", "tau", "batch", "power-iters", "transport", "straggler",
+    "seeds", "repeats", "jobs", "target",
+];
+
+impl SweepSpec {
+    /// Build a sweep from CLI args + optional `--config` file: base spec
+    /// from the `[train]`/`[data]` keys, axes from `[sweep]`.  The file
+    /// is parsed once and shared between both resolutions.
+    pub fn load(args: &crate::util::cli::Args) -> Result<SweepSpec, SweepError> {
+        let file = match args.get_opt("config") {
+            Some(path) => Config::from_file(path)?,
+            None => Config::new(),
+        };
+        let train = TrainConfig::resolve(file.clone(), args)?;
+        // Prebuild the dataset once: every cell (and repeat) shares the
+        // workload via Arc instead of regenerating it inside the timed
+        // run — a `seeds` axis then varies algorithm randomness only.
+        let base = TrainSpec::from_config(&train)?.prebuilt();
+        SweepSpec::from_sources(base, &file, args)
+    }
+
+    /// Resolve the `[sweep]` section of `file` + `--sweep.*` CLI
+    /// overrides against `base`.  Exposed separately for tests.
+    pub fn from_sources(
+        base: TrainSpec,
+        file: &Config,
+        args: &crate::util::cli::Args,
+    ) -> Result<SweepSpec, SweepError> {
+        // Reject misspelled keys in BOTH sources: the file's [sweep]
+        // section and `--sweep.*` CLI flags.
+        for key in file.keys().chain(args.flag_keys()) {
+            if let Some(suffix) = key.strip_prefix("sweep.") {
+                if !SWEEP_KEYS.contains(&suffix) {
+                    return Err(SweepError::UnknownKey {
+                        key: suffix.to_string(),
+                        valid: SWEEP_KEYS.join(" | "),
+                    });
+                }
+                // A valueless `--sweep.key` parses as a boolean flag and
+                // would otherwise drop the axis silently.
+                if args.has(key) && args.get_opt(key).is_none() {
+                    return Err(SweepError::BadAxisValue {
+                        axis: suffix.to_string(),
+                        value: String::new(),
+                        expected: format!("a value (--sweep.{suffix} <value>)"),
+                    });
+                }
+            }
+        }
+        // CLI `--sweep.key` beats the file's `[sweep]` section.
+        let get = |key: &str| -> Option<String> {
+            args.get_opt(&format!("sweep.{key}"))
+                .or_else(|| file.get_opt(&format!("sweep.{key}")))
+        };
+        // Sweep-owned scalars additionally accept the flat CLI spelling.
+        let get_scalar = |key: &str| get(key).or_else(|| args.get_opt(key));
+
+        let mut spec = SweepSpec::new(&get_scalar("name").unwrap_or_else(|| "sweep".into()), base);
+        if let Some(v) = get("algos") {
+            spec.algos = split_list("algos", &v)?
+                .into_iter()
+                .map(|s| s.to_string())
+                .collect();
+        }
+        if let Some(v) = get("workers") {
+            spec.workers = parse_list("workers", &v, "comma-separated worker counts")?;
+        }
+        if let Some(v) = get("tau") {
+            spec.taus = parse_list("tau", &v, "comma-separated staleness bounds")?;
+        }
+        if let Some(v) = get("batch") {
+            spec.batches = split_list("batch", &v)?
+                .into_iter()
+                .map(|s| {
+                    if s.eq_ignore_ascii_case("auto") {
+                        Ok(crate::sweep::grid::BATCH_AUTO)
+                    } else {
+                        parse_one("batch", s, "batch sizes or 'auto'")
+                    }
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = get("power-iters") {
+            spec.power_iters = parse_list("power-iters", &v, "comma-separated iteration counts")?;
+        }
+        if let Some(v) = get("transport") {
+            spec.transports = split_list("transport", &v)?
+                .into_iter()
+                .map(|s| match s {
+                    "local" => Ok(Transport::Local),
+                    "tcp" => Ok(Transport::Tcp),
+                    other => Err(SweepError::BadAxisValue {
+                        axis: "transport".into(),
+                        value: other.to_string(),
+                        expected: "local | tcp".into(),
+                    }),
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = get("straggler") {
+            spec.stragglers = split_list("straggler", &v)?
+                .into_iter()
+                .map(StragglerProfile::parse)
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = get("seeds") {
+            spec.seeds = parse_list("seeds", &v, "comma-separated seeds")?;
+        }
+        if let Some(v) = get_scalar("repeats") {
+            spec.repeats = parse_one::<usize>("repeats", &v, "a repeat count")?.max(1);
+        }
+        if let Some(v) = get_scalar("jobs") {
+            spec.jobs = parse_one::<usize>("jobs", &v, "a concurrency cap")?.max(1);
+        }
+        if let Some(v) = get_scalar("target") {
+            if !v.eq_ignore_ascii_case("none") {
+                spec.target = Some(parse_one("target", &v, "a relative-loss target or 'none'")?);
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The CI smoke sweep: a tiny deterministic grid (seed 42, W in
+    /// {1, 2}, both distributed algorithms) on the small matrix-sensing
+    /// task.  `sfw sweep --smoke` runs it and writes
+    /// `bench_out/sweep_smoke.json` — the artifact the CI pipeline
+    /// uploads (see `.github/workflows/ci.yml` and ROADMAP "Sweeps & CI").
+    pub fn smoke() -> SweepSpec {
+        use crate::algo::schedule::BatchSchedule;
+        use crate::session::TaskSpec;
+        let base = TrainSpec::new(TaskSpec::ms_small())
+            .iterations(20)
+            .batch(BatchSchedule::Constant(16))
+            .eval_every(5)
+            .power_iters(20)
+            .seed(42);
+        SweepSpec::new("smoke", base)
+            .algos(&["sfw-dist", "sfw-asyn"])
+            .workers(&[1, 2])
+            .taus(&[2])
+            .target(0.5)
+    }
+}
+
+fn split_list<'a>(axis: &str, v: &'a str) -> Result<Vec<&'a str>, SweepError> {
+    let items: Vec<&str> = v.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if items.is_empty() {
+        return Err(SweepError::BadAxisValue {
+            axis: axis.to_string(),
+            value: v.to_string(),
+            expected: "a non-empty comma-separated list".into(),
+        });
+    }
+    Ok(items)
+}
+
+fn parse_one<T: FromStr>(axis: &str, v: &str, expected: &str) -> Result<T, SweepError> {
+    v.trim().parse().map_err(|_| SweepError::BadAxisValue {
+        axis: axis.to_string(),
+        value: v.trim().to_string(),
+        expected: expected.to_string(),
+    })
+}
+
+fn parse_list<T: FromStr>(axis: &str, v: &str, expected: &str) -> Result<Vec<T>, SweepError> {
+    split_list(axis, v)?
+        .into_iter()
+        .map(|s| parse_one(axis, s, expected))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::TaskSpec;
+    use crate::util::cli::Args;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    fn base() -> TrainSpec {
+        TrainSpec::new(TaskSpec::ms_small())
+    }
+
+    #[test]
+    fn cli_axes_resolve() {
+        let a = args("--sweep.workers 1,3,7 --sweep.algos sfw-dist,sfw-asyn --sweep.target 0.02");
+        let s = SweepSpec::from_sources(base(), &Config::new(), &a).unwrap();
+        assert_eq!(s.workers, vec![1, 3, 7]);
+        assert_eq!(s.algos, vec!["sfw-dist", "sfw-asyn"]);
+        assert_eq!(s.target, Some(0.02));
+        assert_eq!(s.product_size(), 6);
+    }
+
+    #[test]
+    fn file_section_resolves_and_cli_wins() {
+        let file = Config::from_str("[sweep]\nworkers = 1,2\ntau = 4,8\nname = grid\n").unwrap();
+        let a = args("--sweep.workers 9");
+        let s = SweepSpec::from_sources(base(), &file, &a).unwrap();
+        assert_eq!(s.workers, vec![9]); // CLI beats file
+        assert_eq!(s.taus, vec![4, 8]);
+        assert_eq!(s.name, "grid");
+    }
+
+    #[test]
+    fn unknown_sweep_key_lists_valid_names() {
+        let file = Config::from_str("[sweep]\nworkerz = 1,2\n").unwrap();
+        let err = SweepSpec::from_sources(base(), &file, &args("")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("workerz"), "{msg}");
+        for key in SWEEP_KEYS {
+            assert!(msg.contains(key), "error should list '{key}': {msg}");
+        }
+    }
+
+    #[test]
+    fn bad_axis_values_name_the_axis() {
+        let a = args("--sweep.workers 1,x,3");
+        let err = SweepSpec::from_sources(base(), &Config::new(), &a).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("workers") && msg.contains("'x'"), "{msg}");
+
+        let a = args("--sweep.transport carrier-pigeon");
+        let err = SweepSpec::from_sources(base(), &Config::new(), &a).unwrap_err();
+        assert!(err.to_string().contains("local | tcp"));
+
+        let a = args("--sweep.straggler 20:0.25");
+        let err = SweepSpec::from_sources(base(), &Config::new(), &a).unwrap_err();
+        assert!(err.to_string().contains("unit_us"), "{err}");
+    }
+
+    #[test]
+    fn batch_axis_accepts_auto() {
+        let a = args("--sweep.batch auto,64");
+        let s = SweepSpec::from_sources(base(), &Config::new(), &a).unwrap();
+        assert_eq!(s.batches, vec![0, 64]);
+    }
+
+    #[test]
+    fn scalars_accept_flat_spelling() {
+        let a = args("--jobs 4 --repeats 2 --name nightly");
+        let s = SweepSpec::from_sources(base(), &Config::new(), &a).unwrap();
+        assert_eq!(s.jobs, 4);
+        assert_eq!(s.repeats, 2);
+        assert_eq!(s.name, "nightly");
+    }
+
+    #[test]
+    fn smoke_grid_is_tiny_and_deterministic() {
+        let s = SweepSpec::smoke();
+        assert_eq!(s.name, "smoke");
+        assert_eq!(s.base.seed, 42);
+        let cells = s.expand().unwrap();
+        assert_eq!(cells.len(), 4); // 2 algos x W in {1,2}
+        for c in &cells {
+            assert_eq!(c.axis("seed"), Some("42"));
+        }
+    }
+}

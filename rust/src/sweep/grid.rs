@@ -1,0 +1,403 @@
+//! [`SweepSpec`]: declarative grids over [`TrainSpec`]s.
+//!
+//! A sweep declares *axes* — lists of values for `algo`, `workers`,
+//! `tau`, `batch`, `power_iters`, `transport`, `straggler`, `seed` — and
+//! [`SweepSpec::expand`] takes their cartesian product, instantiating one
+//! [`TrainSpec`] per cell from the shared base spec.  Axes left empty
+//! inherit the base spec's value (a one-point axis), so a sweep is only
+//! ever as big as what it varies.  Identical cells (duplicated axis
+//! values) are deduplicated, preserving first-occurrence order.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use crate::algo::schedule::BatchSchedule;
+use crate::coordinator::worker::Straggler;
+use crate::session::{TrainSpec, Transport};
+use crate::sweep::SweepError;
+
+/// The fixed axis order: every cell id and result row lists axis values
+/// in this order, and `[sweep]` config keys resolve against these names.
+pub const AXIS_NAMES: &[&str] =
+    &["algo", "workers", "tau", "batch", "power_iters", "transport", "straggler", "seed"];
+
+/// Worker-heterogeneity profile, the sweep-axis form of
+/// [`Straggler`] (named, parseable, comparable).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StragglerProfile {
+    /// Homogeneous workers.
+    None,
+    /// Geometric straggling: per unit of work, sleep
+    /// `unit_us * (Geom(p) - 1)` microseconds (see [`Straggler`]).
+    Geometric { unit_us: u64, p: f64 },
+}
+
+impl StragglerProfile {
+    /// Parse `"none"` or `"<unit_us>us:<p>"` (e.g. `"20us:0.25"`).
+    pub fn parse(s: &str) -> Result<Self, SweepError> {
+        let bad = || SweepError::BadAxisValue {
+            axis: "straggler".into(),
+            value: s.to_string(),
+            expected: "'none' or '<unit_us>us:<p>' with 0 < p <= 1 (e.g. 20us:0.25)".into(),
+        };
+        if s.eq_ignore_ascii_case("none") {
+            return Ok(StragglerProfile::None);
+        }
+        let (unit, p) = s.split_once(':').ok_or_else(bad)?;
+        let unit_us: u64 = unit.strip_suffix("us").ok_or_else(bad)?.parse().map_err(|_| bad())?;
+        let p: f64 = p.parse().map_err(|_| bad())?;
+        // p = 0 is rejected rather than mapped to None: Rng::geometric
+        // requires p > 0, and "geometric with p = 0" has no finite mean.
+        if !(p > 0.0 && p <= 1.0) {
+            return Err(bad());
+        }
+        Ok(StragglerProfile::Geometric { unit_us, p })
+    }
+
+    pub fn from_straggler(s: Option<Straggler>) -> Self {
+        match s {
+            None => StragglerProfile::None,
+            Some(s) => StragglerProfile::Geometric {
+                unit_us: s.unit.as_micros() as u64,
+                p: s.p,
+            },
+        }
+    }
+
+    pub fn to_straggler(self) -> Option<Straggler> {
+        match self {
+            StragglerProfile::None => None,
+            StragglerProfile::Geometric { unit_us, p } => {
+                Some(Straggler { unit: Duration::from_micros(unit_us), p })
+            }
+        }
+    }
+
+    /// Axis-value label (round-trips through [`StragglerProfile::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            StragglerProfile::None => "none".into(),
+            StragglerProfile::Geometric { unit_us, p } => format!("{unit_us}us:{p}"),
+        }
+    }
+}
+
+/// Canonical `axis=value/...` id over ordered axis pairs — the ONE
+/// encoding shared by [`Cell`] and
+/// [`CellResult`](crate::sweep::CellResult), so expansion-time ids and
+/// result-time ids always correspond.
+pub(crate) fn axes_id(axes: &[(String, String)]) -> String {
+    axes.iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Value of one axis (by [`AXIS_NAMES`] name) in an ordered pair list.
+pub(crate) fn axis_value<'a>(axes: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    axes.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+/// One expanded grid cell: the axis values that identify it plus the
+/// fully-resolved [`TrainSpec`] to run.
+#[derive(Clone)]
+pub struct Cell {
+    /// `(axis, value)` pairs in [`AXIS_NAMES`] order.
+    pub axes: Vec<(String, String)>,
+    pub spec: TrainSpec,
+}
+
+impl Cell {
+    /// Canonical id, e.g. `algo=sfw-asyn/workers=2/tau=8/.../seed=42`.
+    pub fn id(&self) -> String {
+        axes_id(&self.axes)
+    }
+
+    /// Value of one axis (`AXIS_NAMES` member) in this cell.
+    pub fn axis(&self, name: &str) -> Option<&str> {
+        axis_value(&self.axes, name)
+    }
+}
+
+/// Batch-axis value: a constant size, or 0 = the algorithm's theorem
+/// schedule (clears any explicit base schedule for that cell).
+pub const BATCH_AUTO: usize = 0;
+
+/// Declarative grid over [`TrainSpec`]s.  Construct with
+/// [`SweepSpec::new`], set axes with the builder methods, expand with
+/// [`SweepSpec::expand`] or hand it to a
+/// [`SweepRunner`](crate::sweep::SweepRunner).
+#[derive(Clone)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Shared base: every cell starts from a clone of this spec.  Give
+    /// it a `TaskSpec::Prebuilt` workload (and/or a shared
+    /// `pjrt_runtime`) to reuse one dataset/runtime across all cells —
+    /// the benches' comparability requirement — instead of regenerating
+    /// per cell inside the timed run.
+    pub base: TrainSpec,
+    /// Axes; an empty vec = inherit the base spec's value.
+    pub algos: Vec<String>,
+    pub workers: Vec<usize>,
+    pub taus: Vec<u64>,
+    /// Constant batch sizes ([`BATCH_AUTO`] = theorem schedule).  Empty =
+    /// inherit the base spec's schedule verbatim.
+    pub batches: Vec<usize>,
+    pub power_iters: Vec<usize>,
+    pub transports: Vec<Transport>,
+    pub stragglers: Vec<StragglerProfile>,
+    pub seeds: Vec<u64>,
+    /// Timed repetitions per cell (same spec re-run; wall-clock stats).
+    pub repeats: usize,
+    /// Concurrent cells (each run already owns its worker threads).
+    pub jobs: usize,
+    /// Relative-loss target for time-to-target extraction (Figs 5/7).
+    pub target: Option<f64>,
+}
+
+impl SweepSpec {
+    pub fn new(name: &str, base: TrainSpec) -> Self {
+        SweepSpec {
+            name: name.to_string(),
+            base,
+            algos: Vec::new(),
+            workers: Vec::new(),
+            taus: Vec::new(),
+            batches: Vec::new(),
+            power_iters: Vec::new(),
+            transports: Vec::new(),
+            stragglers: Vec::new(),
+            seeds: Vec::new(),
+            repeats: 1,
+            jobs: 1,
+            target: None,
+        }
+    }
+
+    pub fn algos(mut self, names: &[&str]) -> Self {
+        self.algos = names.iter().map(|s| s.to_string()).collect();
+        self
+    }
+    pub fn workers(mut self, ws: &[usize]) -> Self {
+        self.workers = ws.to_vec();
+        self
+    }
+    pub fn taus(mut self, taus: &[u64]) -> Self {
+        self.taus = taus.to_vec();
+        self
+    }
+    pub fn batches(mut self, batches: &[usize]) -> Self {
+        self.batches = batches.to_vec();
+        self
+    }
+    pub fn power_iters(mut self, pi: &[usize]) -> Self {
+        self.power_iters = pi.to_vec();
+        self
+    }
+    pub fn transports(mut self, ts: &[Transport]) -> Self {
+        self.transports = ts.to_vec();
+        self
+    }
+    pub fn stragglers(mut self, ss: &[StragglerProfile]) -> Self {
+        self.stragglers = ss.to_vec();
+        self
+    }
+    pub fn seeds(mut self, seeds: &[u64]) -> Self {
+        self.seeds = seeds.to_vec();
+        self
+    }
+    pub fn repeats(mut self, r: usize) -> Self {
+        self.repeats = r.max(1);
+        self
+    }
+    pub fn jobs(mut self, j: usize) -> Self {
+        self.jobs = j.max(1);
+        self
+    }
+    pub fn target(mut self, t: f64) -> Self {
+        self.target = Some(t);
+        self
+    }
+
+    /// The number of cells `expand` yields before dedup (axis product).
+    pub fn product_size(&self) -> usize {
+        let len = |n: usize| n.max(1);
+        len(self.algos.len())
+            * len(self.workers.len())
+            * len(self.taus.len())
+            * len(self.batches.len())
+            * len(self.power_iters.len())
+            * len(self.transports.len())
+            * len(self.stragglers.len())
+            * len(self.seeds.len())
+    }
+
+    /// Expand the axes into the deduplicated cartesian product of cells.
+    pub fn expand(&self) -> Result<Vec<Cell>, SweepError> {
+        let base = &self.base;
+        let algos: Vec<String> =
+            if self.algos.is_empty() { vec![base.algo.clone()] } else { self.algos.clone() };
+        let workers =
+            if self.workers.is_empty() { vec![base.workers] } else { self.workers.clone() };
+        let taus = if self.taus.is_empty() { vec![base.tau] } else { self.taus.clone() };
+        // The batch axis carries Option<usize>: None = inherit the base
+        // schedule verbatim, Some(0) = theorem default, Some(m) = Constant(m).
+        let batches: Vec<Option<usize>> = if self.batches.is_empty() {
+            vec![None]
+        } else {
+            self.batches.iter().map(|&b| Some(b)).collect()
+        };
+        let power_iters = if self.power_iters.is_empty() {
+            vec![base.power_iters]
+        } else {
+            self.power_iters.clone()
+        };
+        let transports = if self.transports.is_empty() {
+            vec![base.transport]
+        } else {
+            self.transports.clone()
+        };
+        let stragglers = if self.stragglers.is_empty() {
+            vec![StragglerProfile::from_straggler(base.straggler)]
+        } else {
+            self.stragglers.clone()
+        };
+        let seeds = if self.seeds.is_empty() { vec![base.seed] } else { self.seeds.clone() };
+
+        let base_batch_label = match &base.batch {
+            None => "auto".to_string(),
+            Some(BatchSchedule::Constant(m)) => m.to_string(),
+            Some(_) => "base".to_string(), // non-constant explicit schedule
+        };
+
+        let mut cells = Vec::new();
+        let mut seen = BTreeSet::new();
+        for algo in &algos {
+            for &w in &workers {
+                for &tau in &taus {
+                    for &batch in &batches {
+                        for &pi in &power_iters {
+                            for &transport in &transports {
+                                for &straggler in &stragglers {
+                                    for &seed in &seeds {
+                                        let batch_label = match batch {
+                                            None => base_batch_label.clone(),
+                                            Some(BATCH_AUTO) => "auto".to_string(),
+                                            Some(m) => m.to_string(),
+                                        };
+                                        let transport_label = match transport {
+                                            Transport::Local => "local",
+                                            Transport::Tcp => "tcp",
+                                        };
+                                        let axes = vec![
+                                            ("algo".to_string(), algo.clone()),
+                                            ("workers".to_string(), w.to_string()),
+                                            ("tau".to_string(), tau.to_string()),
+                                            ("batch".to_string(), batch_label),
+                                            ("power_iters".to_string(), pi.to_string()),
+                                            ("transport".to_string(), transport_label.to_string()),
+                                            ("straggler".to_string(), straggler.label()),
+                                            ("seed".to_string(), seed.to_string()),
+                                        ];
+                                        let mut spec = base
+                                            .clone()
+                                            .algo(algo)
+                                            .workers(w)
+                                            .tau(tau)
+                                            .power_iters(pi)
+                                            .transport(transport)
+                                            .maybe_straggler(straggler.to_straggler())
+                                            .seed(seed);
+                                        match batch {
+                                            None => {} // keep base schedule
+                                            Some(BATCH_AUTO) => spec.batch = None,
+                                            Some(m) => {
+                                                spec = spec.batch(BatchSchedule::Constant(m))
+                                            }
+                                        }
+                                        let cell = Cell { axes, spec };
+                                        if seen.insert(cell.id()) {
+                                            cells.push(cell);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(cells)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::TaskSpec;
+
+    fn base() -> TrainSpec {
+        TrainSpec::new(TaskSpec::ms_small()).iterations(10).seed(1)
+    }
+
+    #[test]
+    fn empty_axes_yield_one_base_cell() {
+        let cells = SweepSpec::new("t", base()).expand().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].axis("algo"), Some("sfw-asyn"));
+        assert_eq!(cells[0].axis("seed"), Some("1"));
+        assert_eq!(cells[0].axes.len(), AXIS_NAMES.len());
+    }
+
+    #[test]
+    fn product_counts_multiply() {
+        let s = SweepSpec::new("t", base())
+            .algos(&["sfw-dist", "sfw-asyn"])
+            .workers(&[1, 2, 4])
+            .seeds(&[1, 2]);
+        assert_eq!(s.product_size(), 12);
+        assert_eq!(s.expand().unwrap().len(), 12);
+    }
+
+    #[test]
+    fn duplicate_axis_values_dedup() {
+        let s = SweepSpec::new("t", base()).workers(&[1, 2, 1, 2, 1]).taus(&[4, 4]);
+        assert_eq!(s.product_size(), 10);
+        let cells = s.expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        // first-occurrence order preserved
+        assert_eq!(cells[0].axis("workers"), Some("1"));
+        assert_eq!(cells[1].axis("workers"), Some("2"));
+    }
+
+    #[test]
+    fn batch_axis_zero_clears_explicit_schedule() {
+        let b = base().batch(BatchSchedule::Constant(64));
+        let cells = SweepSpec::new("t", b).batches(&[BATCH_AUTO, 32]).expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].axis("batch"), Some("auto"));
+        assert!(cells[0].spec.batch.is_none());
+        assert_eq!(cells[1].spec.batch, Some(BatchSchedule::Constant(32)));
+    }
+
+    #[test]
+    fn straggler_profile_round_trips() {
+        for s in ["none", "20us:0.25", "100us:0.5"] {
+            assert_eq!(StragglerProfile::parse(s).unwrap().label(), s);
+        }
+        assert!(StragglerProfile::parse("20ms:0.25").is_err());
+        assert!(StragglerProfile::parse("20us:1.5").is_err());
+        assert!(StragglerProfile::parse("20us:0").is_err(), "geometric p=0 must be rejected");
+        let p = StragglerProfile::parse("20us:0.25").unwrap();
+        let back = StragglerProfile::from_straggler(p.to_straggler());
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn cell_ids_are_canonical() {
+        let cells = SweepSpec::new("t", base()).workers(&[3]).expand().unwrap();
+        let id = cells[0].id();
+        assert!(id.contains("workers=3"), "{id}");
+        assert!(id.starts_with("algo="), "{id}");
+    }
+}

@@ -1,0 +1,68 @@
+//! `sfw::sweep` — grid sweeps over [`TrainSpec`]s.
+//!
+//! The paper's headline results (Figs 4–7, Table 1) are all *grids*:
+//! algorithm x worker count x tau x batch schedule x straggler profile.
+//! This module makes those grids first-class, layered on the session
+//! API:
+//!
+//! * [`SweepSpec`] — declares axes over a shared base [`TrainSpec`] and
+//!   expands them into a deduplicated cartesian product of cells;
+//! * [`SweepRunner`] — executes the cells (sequentially or `jobs` at a
+//!   time) and collects the uniform reports;
+//! * [`SweepResult`] — per-cell wall-clock [`Stats`], convergence
+//!   metrics, counters and relative-loss curves, with aligned-table,
+//!   CSV and machine-readable JSON emitters (the
+//!   `bench_out/sweep_<name>.json` artifact CI uploads).
+//!
+//! ```no_run
+//! use sfw::session::{TaskSpec, TrainSpec};
+//! use sfw::sweep::{SweepRunner, SweepSpec};
+//!
+//! let base = TrainSpec::new(TaskSpec::ms(30, 3, 20_000, 0.1)).iterations(300);
+//! let sweep = SweepSpec::new("speedup", base)
+//!     .algos(&["sfw-dist", "sfw-asyn"])
+//!     .workers(&[1, 3, 7, 15])
+//!     .target(0.02);
+//! let result = SweepRunner::new().run(&sweep).expect("sweep");
+//! result.table().print();
+//! result.write_json("bench_out/sweep_speedup.json").expect("json");
+//! ```
+//!
+//! The `sfw sweep` subcommand and the `[sweep]` config section expose
+//! the same thing from the CLI; `rust/benches/{fig4_convergence,
+//! fig5_speedup, ablation}.rs` are thin [`SweepSpec`] declarations.
+//!
+//! [`TrainSpec`]: crate::session::TrainSpec
+//! [`Stats`]: crate::benchkit::Stats
+
+pub mod config;
+pub mod grid;
+pub mod result;
+pub mod runner;
+
+pub use config::SWEEP_KEYS;
+pub use grid::{Cell, StragglerProfile, SweepSpec, AXIS_NAMES, BATCH_AUTO};
+pub use result::{CellResult, SweepResult};
+pub use runner::SweepRunner;
+
+use crate::config::ConfigError;
+use crate::session::SessionError;
+
+/// Errors surfaced by sweep declaration, expansion and execution.
+#[derive(Debug, thiserror::Error)]
+pub enum SweepError {
+    #[error("unknown [sweep] key '{key}' (valid: {valid})")]
+    UnknownKey { key: String, valid: String },
+    #[error("[sweep] {axis} = '{value}': expected {expected}")]
+    BadAxisValue { axis: String, value: String, expected: String },
+    #[error("cell {cell}: {source}")]
+    Cell { cell: String, source: SessionError },
+    #[error(transparent)]
+    Session(#[from] SessionError),
+    #[error(transparent)]
+    Config(#[from] ConfigError),
+    #[error("sweep json: {0}")]
+    Json(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}

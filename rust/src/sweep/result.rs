@@ -1,0 +1,392 @@
+//! [`SweepResult`]: the collected outcome of one sweep — one
+//! [`CellResult`] per grid cell with wall-clock [`Stats`], convergence
+//! metrics, counters and (for figure regeneration) the relative-loss
+//! curve — plus the aligned-table, CSV and JSON emitters.
+//!
+//! The JSON schema (`bench_out/sweep_<name>.json`) is stable and
+//! round-trips through [`SweepResult::from_json`], so the repo's
+//! `BENCH_*.json` trajectory tracking and CI artifacts can consume it.
+
+use crate::benchkit::{sig, Stats, Table};
+use crate::metrics::CounterSnapshot;
+use crate::sweep::SweepError;
+use crate::util::json::Json;
+
+/// Result of one grid cell (over `repeats` runs of the same spec).
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    /// `(axis, value)` pairs in [`crate::sweep::AXIS_NAMES`] order.
+    pub axes: Vec<(String, String)>,
+    /// `TrainSpec::echo()` of the resolved spec.
+    pub spec_echo: String,
+    /// Wall-clock seconds per repeat of `TrainSpec::run()` — includes
+    /// the run's wiring (dataset generation for generated tasks, PJRT
+    /// artifact loading), not just the solve.  Sweeps that must exclude
+    /// that setup share it across cells via the base spec: a
+    /// `TaskSpec::Prebuilt` workload and/or `TrainSpec::pjrt_runtime`
+    /// are cloned (`Arc`) into every cell.
+    pub wall: Stats,
+    /// Relative loss of the last trace point (last repeat).
+    pub final_rel: f64,
+    /// Raw loss of the last trace point (last repeat).
+    pub final_loss: f64,
+    /// First time the relative loss reached the sweep's target, if set.
+    pub time_to_target: Option<f64>,
+    /// Counter snapshot of the last repeat.
+    pub counters: CounterSnapshot,
+    /// Relative-loss curve `(t, iteration, rel)` of the last repeat.
+    pub curve: Vec<(f64, u64, f64)>,
+}
+
+impl CellResult {
+    /// Value of one axis in this cell.
+    pub fn axis(&self, name: &str) -> Option<&str> {
+        crate::sweep::grid::axis_value(&self.axes, name)
+    }
+
+    /// Canonical cell id (`axis=value/...`), matching `Cell::id`.
+    pub fn id(&self) -> String {
+        crate::sweep::grid::axes_id(&self.axes)
+    }
+
+    fn to_json(&self) -> Json {
+        let axes = Json::Obj(
+            self.axes.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+        );
+        let c = &self.counters;
+        let counters = Json::Obj(vec![
+            ("grad_evals".into(), Json::Num(c.grad_evals as f64)),
+            ("lmo_calls".into(), Json::Num(c.lmo_calls as f64)),
+            ("iterations".into(), Json::Num(c.iterations as f64)),
+            ("dropped_updates".into(), Json::Num(c.dropped_updates as f64)),
+            ("bytes_up".into(), Json::Num(c.bytes_up as f64)),
+            ("bytes_down".into(), Json::Num(c.bytes_down as f64)),
+            ("msgs_up".into(), Json::Num(c.msgs_up as f64)),
+            ("msgs_down".into(), Json::Num(c.msgs_down as f64)),
+        ]);
+        let w = &self.wall;
+        let wall = Json::Obj(vec![
+            ("n".into(), Json::Num(w.n as f64)),
+            ("mean_s".into(), Json::Num(w.mean_s)),
+            ("std_s".into(), Json::Num(w.std_s)),
+            ("min_s".into(), Json::Num(w.min_s)),
+            ("p50_s".into(), Json::Num(w.p50_s)),
+            ("p90_s".into(), Json::Num(w.p90_s)),
+            ("max_s".into(), Json::Num(w.max_s)),
+        ]);
+        let curve = Json::Arr(
+            self.curve
+                .iter()
+                .map(|&(t, i, r)| {
+                    Json::Arr(vec![Json::Num(t), Json::Num(i as f64), Json::Num(r)])
+                })
+                .collect(),
+        );
+        Json::Obj(vec![
+            ("axes".into(), axes),
+            ("spec_echo".into(), Json::Str(self.spec_echo.clone())),
+            ("wall".into(), wall),
+            ("final_rel".into(), Json::Num(self.final_rel)),
+            ("final_loss".into(), Json::Num(self.final_loss)),
+            (
+                "time_to_target".into(),
+                self.time_to_target.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("counters".into(), counters),
+            ("curve".into(), curve),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<CellResult, String> {
+        let axes = match v.get("axes") {
+            Some(Json::Obj(fields)) => fields
+                .iter()
+                .map(|(k, val)| {
+                    val.as_str()
+                        .map(|s| (k.clone(), s.to_string()))
+                        .ok_or_else(|| format!("axis '{k}' is not a string"))
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            _ => return Err("missing object 'axes'".into()),
+        };
+        let w = v.get("wall").ok_or("missing object 'wall'")?;
+        let wall = Stats {
+            n: w.u64_field("n")? as usize,
+            mean_s: w.f64_field("mean_s")?,
+            std_s: w.f64_field("std_s")?,
+            min_s: w.f64_field("min_s")?,
+            p50_s: w.f64_field("p50_s")?,
+            p90_s: w.f64_field("p90_s")?,
+            max_s: w.f64_field("max_s")?,
+        };
+        let c = v.get("counters").ok_or("missing object 'counters'")?;
+        let counters = CounterSnapshot {
+            grad_evals: c.u64_field("grad_evals")?,
+            lmo_calls: c.u64_field("lmo_calls")?,
+            iterations: c.u64_field("iterations")?,
+            dropped_updates: c.u64_field("dropped_updates")?,
+            bytes_up: c.u64_field("bytes_up")?,
+            bytes_down: c.u64_field("bytes_down")?,
+            msgs_up: c.u64_field("msgs_up")?,
+            msgs_down: c.u64_field("msgs_down")?,
+        };
+        let curve = match v.get("curve") {
+            Some(Json::Arr(pts)) => pts
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr().filter(|p| p.len() == 3).ok_or("bad curve point")?;
+                    Ok((
+                        f64_or_nan(&p[0], "curve t")?,
+                        p[1].as_u64().ok_or("bad curve iteration")?,
+                        f64_or_nan(&p[2], "curve rel")?,
+                    ))
+                })
+                .collect::<Result<Vec<_>, String>>()?,
+            _ => return Err("missing array 'curve'".into()),
+        };
+        let time_to_target = match v.get("time_to_target") {
+            Some(Json::Null) | None => None,
+            Some(t) => Some(t.as_f64().ok_or("bad 'time_to_target'")?),
+        };
+        Ok(CellResult {
+            axes,
+            spec_echo: v.str_field("spec_echo")?.to_string(),
+            wall,
+            final_rel: num_field_or_nan(v, "final_rel")?,
+            final_loss: num_field_or_nan(v, "final_loss")?,
+            time_to_target,
+            counters,
+            curve,
+        })
+    }
+}
+
+/// JSON has no NaN/Inf: the renderer emits `null` for non-finite values
+/// (util::json), so metric fields that can legitimately be non-finite
+/// (empty trace -> NaN loss) must parse `null` back to NaN rather than
+/// reject the artifact the sweep itself wrote.
+fn f64_or_nan(v: &Json, what: &str) -> Result<f64, String> {
+    match v {
+        Json::Null => Ok(f64::NAN),
+        _ => v.as_f64().ok_or_else(|| format!("bad {what}")),
+    }
+}
+
+fn num_field_or_nan(v: &Json, key: &str) -> Result<f64, String> {
+    match v.get(key) {
+        None => Err(format!("missing number '{key}'")),
+        Some(x) => f64_or_nan(x, key),
+    }
+}
+
+/// The collected results of one sweep, cells in expansion order.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub name: String,
+    /// Relative-loss target the per-cell `time_to_target` refers to.
+    pub target: Option<f64>,
+    pub cells: Vec<CellResult>,
+}
+
+impl SweepResult {
+    /// First cell whose axes match every `(axis, value)` pair in `want`.
+    pub fn find(&self, want: &[(&str, &str)]) -> Option<&CellResult> {
+        self.cells
+            .iter()
+            .find(|c| want.iter().all(|(k, v)| c.axis(k) == Some(*v)))
+    }
+
+    /// All cells passing `pred`, expansion order.
+    pub fn cells_where<'a>(
+        &'a self,
+        pred: impl Fn(&CellResult) -> bool + 'a,
+    ) -> impl Iterator<Item = &'a CellResult> {
+        self.cells.iter().filter(move |c| pred(c))
+    }
+
+    /// Aligned summary table: one row per cell, axes then metrics.
+    pub fn table(&self) -> Table {
+        let mut headers: Vec<&str> = self
+            .cells
+            .first()
+            .map(|c| c.axes.iter().map(|(k, _)| k.as_str()).collect())
+            .unwrap_or_default();
+        headers.extend(["mean t(s)", "final rel", "t_target(s)", "dropped"]);
+        let mut t = Table::new(&format!("sweep '{}' ({} cells)", self.name, self.cells.len()), &headers);
+        for c in &self.cells {
+            let mut row: Vec<String> = c.axes.iter().map(|(_, v)| v.clone()).collect();
+            row.push(format!("{:.3}", c.wall.mean_s));
+            row.push(sig(c.final_rel, 3));
+            row.push(
+                c.time_to_target
+                    .map(|x| format!("{x:.3}"))
+                    .unwrap_or_else(|| "—".into()),
+            );
+            row.push(c.counters.dropped_updates.to_string());
+            t.row(&row);
+        }
+        t
+    }
+
+    /// Write the summary table as CSV (axes + metric columns).
+    pub fn write_csv(&self, path: &str) -> Result<(), SweepError> {
+        self.table().write_csv(path)?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("schema".into(), Json::Str("sfw.sweep/v1".into())),
+            ("name".into(), Json::Str(self.name.clone())),
+            (
+                "target".into(),
+                self.target.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "cells".into(),
+                Json::Arr(self.cells.iter().map(CellResult::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Parse a `sfw.sweep/v1` JSON document back into a result.
+    pub fn from_json(text: &str) -> Result<SweepResult, SweepError> {
+        let v = Json::parse(text).map_err(SweepError::Json)?;
+        let parse = || -> Result<SweepResult, String> {
+            match v.get("schema").and_then(Json::as_str) {
+                Some("sfw.sweep/v1") => {}
+                other => return Err(format!("unknown sweep schema {other:?}")),
+            }
+            let target = match v.get("target") {
+                Some(Json::Null) | None => None,
+                Some(t) => Some(t.as_f64().ok_or("bad 'target'")?),
+            };
+            let cells = match v.get("cells") {
+                Some(Json::Arr(cells)) => cells
+                    .iter()
+                    .map(CellResult::from_json)
+                    .collect::<Result<Vec<_>, _>>()?,
+                _ => return Err("missing array 'cells'".into()),
+            };
+            Ok(SweepResult {
+                name: v.str_field("name")?.to_string(),
+                target,
+                cells,
+            })
+        };
+        parse().map_err(SweepError::Json)
+    }
+
+    /// Write the machine-readable JSON artifact (creates parent dirs).
+    pub fn write_json(&self, path: &str) -> Result<(), SweepError> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().render())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_cell(algo: &str, w: usize) -> CellResult {
+        CellResult {
+            axes: vec![
+                ("algo".into(), algo.into()),
+                ("workers".into(), w.to_string()),
+                ("tau".into(), "8".into()),
+                ("batch".into(), "256".into()),
+                ("power_iters".into(), "24".into()),
+                ("transport".into(), "local".into()),
+                ("straggler".into(), "none".into()),
+                ("seed".into(), "42".into()),
+            ],
+            spec_echo: format!("task=matrix_sensing algo={algo} workers={w}"),
+            wall: Stats::from_samples(vec![0.5, 0.7, 0.6]),
+            final_rel: 0.0123,
+            final_loss: 0.456,
+            time_to_target: if w > 1 { Some(0.25) } else { None },
+            counters: CounterSnapshot {
+                grad_evals: 1000,
+                lmo_calls: 10,
+                iterations: 100,
+                dropped_updates: 3,
+                bytes_up: 4096,
+                bytes_down: 8192,
+                msgs_up: 100,
+                msgs_down: 100,
+            },
+            curve: vec![(0.0, 0, 1.0), (0.5, 50, 0.2), (1.0, 100, 0.0123)],
+        }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let res = SweepResult {
+            name: "unit".into(),
+            target: Some(0.02),
+            cells: vec![sample_cell("sfw-asyn", 1), sample_cell("sfw-dist", 4)],
+        };
+        let text = res.to_json().render();
+        let back = SweepResult::from_json(&text).unwrap();
+        assert_eq!(back.name, res.name);
+        assert_eq!(back.target, res.target);
+        assert_eq!(back.cells.len(), 2);
+        for (a, b) in res.cells.iter().zip(&back.cells) {
+            assert_eq!(a.axes, b.axes);
+            assert_eq!(a.spec_echo, b.spec_echo);
+            assert_eq!(a.final_rel, b.final_rel);
+            assert_eq!(a.time_to_target, b.time_to_target);
+            assert_eq!(a.counters, b.counters);
+            assert_eq!(a.curve, b.curve);
+            assert_eq!(a.wall.n, b.wall.n);
+            assert_eq!(a.wall.mean_s, b.wall.mean_s);
+            assert_eq!(a.wall.p90_s, b.wall.p90_s);
+        }
+    }
+
+    #[test]
+    fn find_matches_on_axes() {
+        let res = SweepResult {
+            name: "unit".into(),
+            target: None,
+            cells: vec![sample_cell("sfw-asyn", 1), sample_cell("sfw-asyn", 4)],
+        };
+        let c = res.find(&[("algo", "sfw-asyn"), ("workers", "4")]).unwrap();
+        assert_eq!(c.axis("workers"), Some("4"));
+        assert!(res.find(&[("algo", "pgd")]).is_none());
+        assert_eq!(res.cells_where(|c| c.axis("algo") == Some("sfw-asyn")).count(), 2);
+    }
+
+    #[test]
+    fn non_finite_metrics_survive_the_round_trip() {
+        // An empty trace (e.g. iterations=0) leaves final_loss = NaN; the
+        // renderer writes null and the parser must accept its own output.
+        let mut cell = sample_cell("sfw", 1);
+        cell.final_loss = f64::NAN;
+        cell.final_rel = f64::INFINITY;
+        let res = SweepResult { name: "nan".into(), target: None, cells: vec![cell] };
+        let back = SweepResult::from_json(&res.to_json().render()).unwrap();
+        assert!(back.cells[0].final_loss.is_nan());
+        assert!(back.cells[0].final_rel.is_nan()); // Inf renders as null too
+    }
+
+    #[test]
+    fn bad_schema_is_rejected() {
+        assert!(SweepResult::from_json("{\"schema\":\"other/v9\"}").is_err());
+        assert!(SweepResult::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn table_has_axis_and_metric_columns() {
+        let res = SweepResult {
+            name: "unit".into(),
+            target: Some(0.1),
+            cells: vec![sample_cell("sfw-asyn", 2)],
+        };
+        // Table::row asserts the width matches the headers; print smoke.
+        res.table().print();
+    }
+}

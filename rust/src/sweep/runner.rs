@@ -1,0 +1,211 @@
+//! [`SweepRunner`]: executes an expanded [`SweepSpec`], sequentially or
+//! on a small thread pool (`jobs` cells in flight; each cell's run
+//! already owns its worker threads, so the cap is a *cell* cap, not a
+//! thread cap), and collects the uniform [`Report`]s into a
+//! [`SweepResult`] with per-cell wall-clock [`Stats`].
+//!
+//! [`Report`]: crate::session::Report
+//! [`Stats`]: crate::benchkit::Stats
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::benchkit::Stats;
+use crate::sweep::grid::{Cell, SweepSpec};
+use crate::sweep::result::{CellResult, SweepResult};
+use crate::sweep::SweepError;
+
+/// Executes sweeps.  Construct with [`SweepRunner::new`]; `quiet(true)`
+/// suppresses the per-cell progress lines (unit tests).
+#[derive(Default)]
+pub struct SweepRunner {
+    quiet: bool,
+}
+
+impl SweepRunner {
+    pub fn new() -> Self {
+        SweepRunner::default()
+    }
+
+    pub fn quiet(mut self, q: bool) -> Self {
+        self.quiet = q;
+        self
+    }
+
+    /// Expand and run every cell of `spec` (`spec.jobs` cells in flight),
+    /// preserving expansion order in the result.  The first failing cell
+    /// aborts the sweep with its error.
+    pub fn run(&self, spec: &SweepSpec) -> Result<SweepResult, SweepError> {
+        let cells = spec.expand()?;
+        let total = cells.len();
+        if !self.quiet {
+            println!(
+                "sweep '{}': {} cells x {} repeat(s), {} job(s)",
+                spec.name,
+                total,
+                spec.repeats,
+                spec.jobs.min(total.max(1))
+            );
+        }
+        let mut slots: Vec<Option<CellResult>> = Vec::new();
+        slots.resize_with(total, || None);
+        let results = Mutex::new(slots);
+        let next = AtomicUsize::new(0);
+        let first_err: Mutex<Option<SweepError>> = Mutex::new(None);
+
+        let worker = |cells: &[Cell]| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= cells.len() || first_err.lock().unwrap().is_some() {
+                return;
+            }
+            match run_cell(&cells[i], spec, self.quiet, i, cells.len()) {
+                Ok(r) => results.lock().unwrap()[i] = Some(r),
+                Err(e) => {
+                    let mut slot = first_err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                    return;
+                }
+            }
+        };
+
+        let jobs = spec.jobs.max(1).min(total.max(1));
+        if jobs <= 1 {
+            worker(&cells);
+        } else {
+            std::thread::scope(|scope| {
+                for _ in 0..jobs {
+                    scope.spawn(|| worker(&cells));
+                }
+            });
+        }
+
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        let cells = results
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .collect::<Option<Vec<_>>>()
+            .expect("every cell ran or the sweep errored");
+        Ok(SweepResult { name: spec.name.clone(), target: spec.target, cells })
+    }
+}
+
+fn run_cell(
+    cell: &Cell,
+    spec: &SweepSpec,
+    quiet: bool,
+    index: usize,
+    total: usize,
+) -> Result<CellResult, SweepError> {
+    let mut samples = Vec::with_capacity(spec.repeats);
+    let mut last = None;
+    for _ in 0..spec.repeats.max(1) {
+        let t = Instant::now();
+        let report = cell.spec.run().map_err(|e| SweepError::Cell {
+            cell: cell.id(),
+            source: e,
+        })?;
+        samples.push(t.elapsed().as_secs_f64());
+        last = Some(report);
+    }
+    let report = last.expect("repeats >= 1");
+    let wall = Stats::from_samples(samples);
+    let result = CellResult {
+        axes: cell.axes.clone(),
+        spec_echo: report.spec_echo.clone(),
+        wall,
+        final_rel: report.final_relative(),
+        final_loss: report.final_loss(),
+        time_to_target: spec.target.and_then(|t| report.time_to_relative(t)),
+        counters: report.snapshot(),
+        curve: report.relative(),
+    };
+    if !quiet {
+        println!(
+            "  [{}/{}] {}  t={:.3}s rel={:.3e}",
+            index + 1,
+            total,
+            cell.id(),
+            result.wall.mean_s,
+            result.final_rel
+        );
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::schedule::BatchSchedule;
+    use crate::session::{TaskSpec, TrainSpec};
+
+    fn tiny_base() -> TrainSpec {
+        TrainSpec::new(TaskSpec::ms_small())
+            .iterations(8)
+            .batch(BatchSchedule::Constant(8))
+            .eval_every(2)
+            .power_iters(10)
+            .seed(5)
+    }
+
+    #[test]
+    fn sequential_sweep_preserves_expansion_order() {
+        let spec = SweepSpec::new("unit", tiny_base())
+            .algos(&["sfw", "sfw-asyn"])
+            .workers(&[1, 2])
+            .target(0.9);
+        let res = SweepRunner::new().quiet(true).run(&spec).unwrap();
+        assert_eq!(res.cells.len(), 4);
+        let order: Vec<_> = res
+            .cells
+            .iter()
+            .map(|c| (c.axis("algo").unwrap().to_string(), c.axis("workers").unwrap().to_string()))
+            .collect();
+        assert_eq!(
+            order,
+            [("sfw", "1"), ("sfw", "2"), ("sfw-asyn", "1"), ("sfw-asyn", "2")]
+                .map(|(a, w)| (a.to_string(), w.to_string()))
+        );
+        for c in &res.cells {
+            assert!(c.wall.n == 1 && c.wall.mean_s >= 0.0);
+            assert!(c.counters.iterations > 0, "{}: no iterations", c.id());
+            assert!(!c.curve.is_empty());
+        }
+    }
+
+    #[test]
+    fn parallel_jobs_fill_every_slot() {
+        let spec = SweepSpec::new("unit-par", tiny_base())
+            .algos(&["sfw-asyn"])
+            .workers(&[1, 2])
+            .seeds(&[5, 6])
+            .jobs(2);
+        let res = SweepRunner::new().quiet(true).run(&spec).unwrap();
+        assert_eq!(res.cells.len(), 4);
+        for c in &res.cells {
+            assert!(c.counters.iterations > 0);
+        }
+    }
+
+    #[test]
+    fn unknown_algo_fails_with_cell_context() {
+        let spec = SweepSpec::new("unit-bad", tiny_base()).algos(&["definitely-not"]);
+        let err = SweepRunner::new().quiet(true).run(&spec).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("definitely-not"), "{msg}");
+        assert!(msg.contains("algo=definitely-not"), "cell id missing: {msg}");
+    }
+
+    #[test]
+    fn repeats_feed_wall_stats() {
+        let spec = SweepSpec::new("unit-rep", tiny_base()).repeats(3);
+        let res = SweepRunner::new().quiet(true).run(&spec).unwrap();
+        assert_eq!(res.cells.len(), 1);
+        assert_eq!(res.cells[0].wall.n, 3);
+    }
+}

@@ -49,6 +49,13 @@ impl Args {
         &self.positional
     }
 
+    /// All flag keys given on the command line (boolean flags included) —
+    /// lets callers reject misspelled `--section.key` flags instead of
+    /// silently ignoring them.
+    pub fn flag_keys(&self) -> impl Iterator<Item = &String> {
+        self.flags.keys()
+    }
+
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }

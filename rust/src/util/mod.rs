@@ -1,8 +1,11 @@
-//! Dependency-free utilities: PRNG, CLI parsing, property-test runner.
+//! Dependency-free utilities: PRNG, CLI parsing, property-test runner,
+//! minimal JSON (for the sweep result artifacts).
 
 pub mod cli;
+pub mod json;
 pub mod prop;
 pub mod rng;
 
 pub use cli::Args;
+pub use json::Json;
 pub use rng::Rng;

@@ -66,6 +66,15 @@ fn unknown_algo_error_lists_valid_names() {
 }
 
 #[test]
+fn zero_scale_knobs_error_instead_of_panicking() {
+    // workers=0 / eval_every=0 used to reach the protocols' divide/modulo.
+    let err = small_spec().workers(0).run().unwrap_err();
+    assert!(matches!(err, SessionError::InvalidSpec(_)), "{err}");
+    let err = small_spec().eval_every(0).run().unwrap_err();
+    assert!(matches!(err, SessionError::InvalidSpec(_)), "{err}");
+}
+
+#[test]
 fn registry_names_are_stable_and_complete() {
     let names = registry().names();
     for required in ["sfw", "sfw-asyn", "svrf-asyn", "sfw-dist", "sva", "dfw-power"] {

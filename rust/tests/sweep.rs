@@ -1,0 +1,284 @@
+//! The sweep-subsystem contract:
+//!
+//! * axis grids expand to the cartesian product, with identical cells
+//!   deduplicated and expansion order stable;
+//! * the `[sweep]` config section resolves through the same
+//!   section-aware key machinery as `[train]`/`[data]`, and bad keys /
+//!   values produce errors that list the valid axis names (mirroring the
+//!   registry-driven errors pinned in `tests/session.rs`);
+//! * a sweep runs end to end (sequentially and with `jobs > 1`) and its
+//!   `SweepResult` round-trips through the `sfw.sweep/v1` JSON schema
+//!   the CI smoke artifact uses.
+
+use sfw::algo::schedule::BatchSchedule;
+use sfw::config::Config;
+use sfw::session::{TaskSpec, TrainSpec, Transport};
+use sfw::sweep::{
+    StragglerProfile, SweepError, SweepRunner, SweepSpec, AXIS_NAMES, SWEEP_KEYS,
+};
+use sfw::util::cli::Args;
+
+fn tiny_base() -> TrainSpec {
+    TrainSpec::new(TaskSpec::ms_small())
+        .iterations(8)
+        .batch(BatchSchedule::Constant(8))
+        .eval_every(2)
+        .power_iters(10)
+        .seed(42)
+}
+
+fn args(s: &str) -> Args {
+    Args::parse_from(s.split_whitespace().map(String::from))
+}
+
+// ---------------------------------------------------------------------------
+// Grid expansion
+// ---------------------------------------------------------------------------
+
+#[test]
+fn expansion_is_the_axis_product() {
+    let sweep = SweepSpec::new("grid", tiny_base())
+        .algos(&["sfw-dist", "sfw-asyn"])
+        .workers(&[1, 2, 4])
+        .taus(&[2, 8])
+        .seeds(&[42, 43]);
+    assert_eq!(sweep.product_size(), 24);
+    let cells = sweep.expand().unwrap();
+    assert_eq!(cells.len(), 24);
+    // every cell carries every axis, in the canonical order
+    for cell in &cells {
+        let names: Vec<&str> = cell.axes.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, AXIS_NAMES);
+    }
+    // all ids distinct
+    let mut ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), 24);
+}
+
+#[test]
+fn unset_axes_inherit_the_base_spec() {
+    let base = tiny_base().workers(7).tau(3).transport(Transport::Local);
+    let cells = SweepSpec::new("inherit", base).seeds(&[1, 2]).expand().unwrap();
+    assert_eq!(cells.len(), 2);
+    for c in &cells {
+        assert_eq!(c.axis("workers"), Some("7"));
+        assert_eq!(c.axis("tau"), Some("3"));
+        assert_eq!(c.spec.workers, 7);
+        assert_eq!(c.spec.tau, 3);
+    }
+    assert_eq!(cells[0].spec.seed, 1);
+    assert_eq!(cells[1].spec.seed, 2);
+}
+
+#[test]
+fn identical_cells_are_deduplicated() {
+    let sweep = SweepSpec::new("dup", tiny_base())
+        .workers(&[1, 2, 1, 1, 2])
+        .seeds(&[9, 9]);
+    assert_eq!(sweep.product_size(), 10);
+    let cells = sweep.expand().unwrap();
+    assert_eq!(cells.len(), 2, "5x2 grid with duplicates must collapse to 2 cells");
+    assert_eq!(cells[0].axis("workers"), Some("1"));
+    assert_eq!(cells[1].axis("workers"), Some("2"));
+}
+
+#[test]
+fn cell_specs_reflect_their_axis_values() {
+    let cells = SweepSpec::new("spec", tiny_base())
+        .algos(&["sfw-asyn"])
+        .batches(&[0, 32]) // 0 = the algorithm's theorem schedule
+        .stragglers(&[
+            StragglerProfile::None,
+            StragglerProfile::Geometric { unit_us: 20, p: 0.25 },
+        ])
+        .expand()
+        .unwrap();
+    assert_eq!(cells.len(), 4);
+    let auto = &cells[0];
+    assert_eq!(auto.axis("batch"), Some("auto"));
+    assert!(auto.spec.batch.is_none());
+    assert_eq!(auto.axis("straggler"), Some("none"));
+    assert!(auto.spec.straggler.is_none());
+    let geo = &cells[1];
+    assert_eq!(geo.axis("straggler"), Some("20us:0.25"));
+    assert!(geo.spec.straggler.is_some());
+    let constant = &cells[2];
+    assert_eq!(constant.spec.batch, Some(BatchSchedule::Constant(32)));
+}
+
+// ---------------------------------------------------------------------------
+// [sweep] config section
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sweep_section_resolves_from_file_and_cli() {
+    let dir = std::env::temp_dir().join("sfw_sweep_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sweep.ini");
+    std::fs::write(
+        &path,
+        "[train]\niterations = 8\nseed = 7\n[data]\nms-n = 500\nms-d = 8\n\
+         [sweep]\nname = grid\nworkers = 1,2\ntau = 2,4\nstraggler = none,20us:0.25\n",
+    )
+    .unwrap();
+    let cli = format!("--config {} --sweep.tau 8", path.display());
+    let sweep = SweepSpec::load(&args(&cli)).unwrap();
+    assert_eq!(sweep.name, "grid");
+    assert_eq!(sweep.base.iterations, 8); // [train] feeds the base spec
+    assert_eq!(sweep.base.seed, 7);
+    // load() prebuilds the dataset once so cells share it via Arc
+    assert!(matches!(sweep.base.task, TaskSpec::Prebuilt(_)));
+    assert_eq!(sweep.workers, vec![1, 2]);
+    assert_eq!(sweep.taus, vec![8]); // CLI beats the file section
+    assert_eq!(
+        sweep.stragglers,
+        vec![
+            StragglerProfile::None,
+            StragglerProfile::Geometric { unit_us: 20, p: 0.25 }
+        ]
+    );
+    assert_eq!(sweep.expand().unwrap().len(), 4); // 2 workers x 1 tau x 2 stragglers
+}
+
+#[test]
+fn unknown_sweep_key_error_lists_valid_names() {
+    let file = Config::from_str("[sweep]\nworckers = 1,2\n").unwrap();
+    let err = SweepSpec::from_sources(tiny_base(), &file, &args("")).unwrap_err();
+    assert!(matches!(err, SweepError::UnknownKey { .. }));
+    let msg = err.to_string();
+    assert!(msg.contains("worckers"), "{msg}");
+    for key in SWEEP_KEYS {
+        assert!(msg.contains(key), "error should list valid key '{key}': {msg}");
+    }
+}
+
+#[test]
+fn misspelled_sweep_cli_flag_is_rejected_not_ignored() {
+    // `--sweep.worker` (typo for `workers`) must error like the file
+    // section does, not silently run a single base cell.
+    let err =
+        SweepSpec::from_sources(tiny_base(), &Config::new(), &args("--sweep.worker 1,3")).unwrap_err();
+    let msg = err.to_string();
+    assert!(matches!(err, SweepError::UnknownKey { .. }), "{msg}");
+    assert!(msg.contains("worker"), "{msg}");
+}
+
+#[test]
+fn valueless_sweep_cli_flag_is_rejected_not_ignored() {
+    // `--sweep.workers` with the value forgotten parses as a boolean
+    // flag; the axis must not be silently dropped.
+    let err = SweepSpec::from_sources(
+        tiny_base(),
+        &Config::new(),
+        &args("--sweep.workers --sweep.algos sfw-dist,sfw-asyn"),
+    )
+    .unwrap_err();
+    match &err {
+        SweepError::BadAxisValue { axis, .. } => assert_eq!(axis, "workers"),
+        other => panic!("expected BadAxisValue, got {other:?}"),
+    }
+}
+
+#[test]
+fn bad_axis_values_name_axis_and_value() {
+    for (cli, axis) in [
+        ("--sweep.workers 1,two", "workers"),
+        ("--sweep.tau -3", "tau"),
+        ("--sweep.batch tiny", "batch"),
+        ("--sweep.transport smoke-signals", "transport"),
+        ("--sweep.straggler geometric", "straggler"),
+        ("--sweep.seeds ,", "seeds"),
+    ] {
+        let err = SweepSpec::from_sources(tiny_base(), &Config::new(), &args(cli)).unwrap_err();
+        match &err {
+            SweepError::BadAxisValue { axis: a, .. } => {
+                assert_eq!(a, axis, "wrong axis named for '{cli}': {err}")
+            }
+            other => panic!("expected BadAxisValue for '{cli}', got {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end runs + JSON round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sweep_runs_and_json_round_trips() {
+    let sweep = SweepSpec::new("e2e", tiny_base())
+        .algos(&["sfw", "sfw-asyn"])
+        .workers(&[1, 2])
+        .target(0.9);
+    let result = SweepRunner::new().quiet(true).run(&sweep).unwrap();
+    assert_eq!(result.cells.len(), 4);
+    for cell in &result.cells {
+        assert!(cell.counters.iterations > 0, "{}: no iterations", cell.id());
+        assert!(cell.wall.mean_s >= 0.0);
+        assert!(!cell.curve.is_empty(), "{}: no curve", cell.id());
+        assert!(cell.final_rel.is_finite());
+    }
+
+    let text = result.to_json().render();
+    let back = sfw::sweep::SweepResult::from_json(&text).unwrap();
+    assert_eq!(back.name, result.name);
+    assert_eq!(back.target, result.target);
+    assert_eq!(back.cells.len(), result.cells.len());
+    for (a, b) in result.cells.iter().zip(&back.cells) {
+        assert_eq!(a.axes, b.axes);
+        assert_eq!(a.spec_echo, b.spec_echo);
+        assert_eq!(a.final_rel, b.final_rel);
+        assert_eq!(a.final_loss, b.final_loss);
+        assert_eq!(a.time_to_target, b.time_to_target);
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.curve, b.curve);
+        assert_eq!(a.wall.n, b.wall.n);
+        assert_eq!(a.wall.mean_s, b.wall.mean_s);
+    }
+    // the rendering itself is stable (CI diffs artifacts across runs)
+    assert_eq!(text, back.to_json().render());
+}
+
+#[test]
+fn parallel_jobs_match_sequential_grid() {
+    let grid = |jobs| {
+        SweepSpec::new("par", tiny_base())
+            .algos(&["sfw-asyn"])
+            .workers(&[1, 2])
+            .seeds(&[42, 43])
+            .jobs(jobs)
+    };
+    let seq = SweepRunner::new().quiet(true).run(&grid(1)).unwrap();
+    let par = SweepRunner::new().quiet(true).run(&grid(3)).unwrap();
+    assert_eq!(seq.cells.len(), 4);
+    assert_eq!(par.cells.len(), 4);
+    // same cells, same order, regardless of execution interleaving
+    let ids = |r: &sfw::sweep::SweepResult| -> Vec<String> {
+        r.cells.iter().map(|c| c.id()).collect()
+    };
+    assert_eq!(ids(&seq), ids(&par));
+}
+
+#[test]
+fn smoke_sweep_contract() {
+    // The CI pipeline depends on this exact shape (see ROADMAP "Sweeps &
+    // CI"): tiny deterministic grid, seed 42, W in {1, 2}, both
+    // distributed algorithms, and a written sweep_smoke.json artifact.
+    let sweep = SweepSpec::smoke();
+    assert_eq!(sweep.name, "smoke");
+    let cells = sweep.expand().unwrap();
+    assert_eq!(cells.len(), 4);
+    for cell in &cells {
+        assert_eq!(cell.axis("seed"), Some("42"));
+        assert!(matches!(cell.axis("workers"), Some("1") | Some("2")));
+        assert!(matches!(cell.axis("algo"), Some("sfw-dist") | Some("sfw-asyn")));
+    }
+    let result = SweepRunner::new().quiet(true).run(&sweep).unwrap();
+    let dir = std::env::temp_dir().join("sfw_sweep_smoke_test");
+    let path = dir.join("sweep_smoke.json");
+    result.write_json(path.to_str().unwrap()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let back = sfw::sweep::SweepResult::from_json(&text).unwrap();
+    assert_eq!(back.cells.len(), 4);
+}

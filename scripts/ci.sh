@@ -1,17 +1,31 @@
 #!/usr/bin/env bash
 # Tier-1 verification for the repo (referenced from ROADMAP.md):
 #
-#   scripts/ci.sh            build + test + style
+#   scripts/ci.sh            build + test + style + benches/examples compile
 #   scripts/ci.sh --fast     skip the style pass
+#   scripts/ci.sh --smoke    additionally run the deterministic smoke sweep
+#                            (writes bench_out/sweep_smoke.json)
 #
-# Runs: cargo build --release, cargo test -q, and cargo fmt --check
-# (falling back to cargo clippy when rustfmt is unavailable offline).
-# Python kernel tests run too when pytest is present.
+# Runs: cargo build --release, cargo test -q, cargo bench --no-run and
+# cargo build --examples (so benches/examples can't silently rot), then
+# the style pass — cargo fmt --check AND cargo clippy when both are
+# installed, whichever subset exists otherwise.  Python kernel tests run
+# too when pytest is present.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 fast=0
-[ "${1:-}" = "--fast" ] && fast=1
+smoke=0
+for arg in "$@"; do
+    case "$arg" in
+        --fast) fast=1 ;;
+        --smoke) smoke=1 ;;
+        *)
+            echo "ci.sh: unknown flag '$arg' (known: --fast --smoke)" >&2
+            exit 2
+            ;;
+    esac
+done
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "ci.sh: FATAL: no cargo in PATH — the Rust tier-1 suite cannot run." >&2
@@ -25,14 +39,25 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== cargo bench --no-run (benches must keep compiling) =="
+cargo bench --no-run
+
+echo "== cargo build --examples (examples must keep compiling) =="
+cargo build --examples
+
 if [ "$fast" -eq 0 ]; then
+    ran_style=0
     if cargo fmt --version >/dev/null 2>&1; then
         echo "== cargo fmt --check =="
         cargo fmt --check
-    elif cargo clippy --version >/dev/null 2>&1; then
-        echo "== cargo clippy (fmt unavailable) =="
-        cargo clippy --release -- -D warnings
-    else
+        ran_style=1
+    fi
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "== cargo clippy =="
+        cargo clippy --release --all-targets -- -D warnings
+        ran_style=1
+    fi
+    if [ "$ran_style" -eq 0 ]; then
         echo "== style pass skipped (neither rustfmt nor clippy available offline) =="
     fi
 fi
@@ -45,6 +70,16 @@ if command -v pytest >/dev/null 2>&1; then
     }
 else
     echo "== pytest unavailable; python kernel tests skipped =="
+fi
+
+if [ "$smoke" -eq 1 ]; then
+    echo "== smoke sweep (sfw sweep --smoke) =="
+    cargo run --release -- sweep --smoke
+    test -s bench_out/sweep_smoke.json || {
+        echo "ci.sh: smoke sweep did not write bench_out/sweep_smoke.json" >&2
+        exit 1
+    }
+    echo "ci.sh: smoke artifact at bench_out/sweep_smoke.json"
 fi
 
 echo "ci.sh: OK"
