@@ -15,7 +15,8 @@ use sfw::experiments::{build_ms, build_pnn};
 use sfw::linalg::{power_iteration_rand, Mat};
 use sfw::objective::Objective;
 use sfw::runtime::{PjrtEngine, PjrtRuntime, Workload};
-use sfw::transport::tcp::{decode_update, encode_update};
+use sfw::comms::Wire;
+use sfw::coordinator::messages::UpdateMsg;
 use sfw::util::rng::Rng;
 
 const BUDGET: Duration = Duration::from_millis(600);
@@ -93,7 +94,7 @@ fn main() {
     row("replay 64 log entries 196x196", "worker catch-up", &mut || {
         replay(&mut x_rep, &slice);
     });
-    let msg = sfw::coordinator::messages::UpdateMsg {
+    let msg = UpdateMsg {
         worker_id: 1,
         t_w: 100,
         u: u.clone(),
@@ -102,9 +103,11 @@ fn main() {
         loss_sum: 0.5,
         m: 128,
     };
-    row("tcp codec roundtrip (196+196 floats)", "encode+decode", &mut || {
-        let b = encode_update(&msg);
-        let _ = decode_update(&b);
+    let mut buf = Vec::new();
+    row("wire codec roundtrip (196+196 floats)", "encode+decode", &mut || {
+        buf.clear();
+        msg.encode(&mut buf);
+        let _ = UpdateMsg::decode(msg.tag(), &buf).unwrap();
     });
 
     // ---- PJRT (artifact) engines ----------------------------------------------

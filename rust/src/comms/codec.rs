@@ -1,0 +1,161 @@
+//! Binary codec primitives shared by every protocol's
+//! [`Wire`](crate::comms::Wire) implementation: little-endian scalar
+//! writers/readers over a plain byte buffer, plus the vector/matrix
+//! composites the protocols actually ship.
+
+use crate::comms::WireError;
+use crate::linalg::Mat;
+
+/// Appends little-endian fields to a frame payload buffer.
+pub struct Enc<'a>(pub &'a mut Vec<u8>);
+
+impl Enc<'_> {
+    pub fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn f32(&mut self, v: f32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    /// Length-prefixed f32 vector.
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.f32(*x);
+        }
+    }
+    /// Dense row-major matrix: rows, cols, then the f32 entries.
+    pub fn mat(&mut self, m: &Mat) {
+        self.u32(m.rows as u32);
+        self.u32(m.cols as u32);
+        for x in &m.data {
+            self.f32(*x);
+        }
+    }
+}
+
+/// Cursor over a frame payload.  Every read is bounds-checked so a
+/// truncated or corrupt frame surfaces as a [`WireError`], never a panic.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or(WireError::Malformed("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(WireError::Truncated { need: n, have: self.buf.len() - self.pos });
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed f32 vector.
+    pub fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.u32()? as usize;
+        let nb = n.checked_mul(4).ok_or(WireError::Malformed("vector length overflow"))?;
+        let bytes = self.take(nb)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Dense row-major matrix (see [`Enc::mat`]).
+    pub fn mat(&mut self) -> Result<Mat, WireError> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let nb = rows
+            .checked_mul(cols)
+            .and_then(|n| n.checked_mul(4))
+            .ok_or(WireError::Malformed("matrix dims overflow"))?;
+        let bytes = self.take(nb)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    /// Assert the payload was consumed exactly.
+    pub fn finish(self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Trailing(self.buf.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_vectors_round_trip() {
+        let mut buf = Vec::new();
+        let mut e = Enc(&mut buf);
+        e.u32(7);
+        e.u64(1 << 40);
+        e.f32(-2.5);
+        e.f64(0.125);
+        e.f32s(&[1.0, 2.0, 3.0]);
+        let mut d = Dec::new(&buf);
+        assert_eq!(d.u32().unwrap(), 7);
+        assert_eq!(d.u64().unwrap(), 1 << 40);
+        assert_eq!(d.f32().unwrap(), -2.5);
+        assert_eq!(d.f64().unwrap(), 0.125);
+        assert_eq!(d.f32s().unwrap(), vec![1.0, 2.0, 3.0]);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn matrices_round_trip() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut buf = Vec::new();
+        Enc(&mut buf).mat(&m);
+        let mut d = Dec::new(&buf);
+        assert_eq!(d.mat().unwrap(), m);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn truncated_and_trailing_payloads_error() {
+        let mut buf = Vec::new();
+        Enc(&mut buf).u64(9);
+        assert!(matches!(Dec::new(&buf[..5]).u64(), Err(WireError::Truncated { .. })));
+        let mut d = Dec::new(&buf);
+        d.u32().unwrap();
+        assert!(matches!(d.finish(), Err(WireError::Trailing(4))));
+        // vector length prefix pointing past the buffer
+        let mut buf = Vec::new();
+        Enc(&mut buf).u32(1_000);
+        assert!(matches!(Dec::new(&buf).f32s(), Err(WireError::Truncated { .. })));
+    }
+}

@@ -1,41 +1,42 @@
 //! In-process transport: std::sync::mpsc channels with byte-accurate
-//! accounting (every message is charged its `wire_bytes()` — exactly what
-//! the TCP framing would put on the wire) and optional injected latency to
-//! emulate heterogeneous cluster links.
+//! accounting (every message is charged its derived
+//! [`Wire::wire_bytes`] — exactly what the TCP framing puts on a real
+//! socket) and optional injected latency to emulate heterogeneous
+//! cluster links.  Generic over the protocol's `(Up, Down)` message
+//! pair, so every coordinator runs over it unchanged.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::coordinator::messages::{MasterMsg, UpdateMsg};
+use crate::comms::{MasterLink, Wire, WorkerLink};
 use crate::metrics::Counters;
-use crate::transport::{MasterLink, WorkerLink};
 
-pub struct LocalMaster {
-    rx: Receiver<UpdateMsg>,
-    txs: Vec<Sender<MasterMsg>>,
+pub struct LocalMaster<Up, Down> {
+    rx: Receiver<Up>,
+    txs: Vec<Sender<Down>>,
     counters: Arc<Counters>,
 }
 
-pub struct LocalWorker {
-    tx: Sender<UpdateMsg>,
-    rx: Receiver<MasterMsg>,
+pub struct LocalWorker<Up, Down> {
+    tx: Sender<Up>,
+    rx: Receiver<Down>,
     counters: Arc<Counters>,
     /// Fixed one-way latency injected on send (None = none).
     pub latency: Option<Duration>,
 }
 
 /// Build a master endpoint + `workers` worker endpoints sharing `counters`.
-pub fn local_links(
+pub fn local_links<Up: Wire, Down: Wire>(
     workers: usize,
     counters: Arc<Counters>,
     latency: Option<Duration>,
-) -> (LocalMaster, Vec<LocalWorker>) {
-    let (up_tx, up_rx) = channel::<UpdateMsg>();
+) -> (LocalMaster<Up, Down>, Vec<LocalWorker<Up, Down>>) {
+    let (up_tx, up_rx) = channel::<Up>();
     let mut txs = Vec::with_capacity(workers);
     let mut wlinks = Vec::with_capacity(workers);
     for _ in 0..workers {
-        let (down_tx, down_rx) = channel::<MasterMsg>();
+        let (down_tx, down_rx) = channel::<Down>();
         txs.push(down_tx);
         wlinks.push(LocalWorker {
             tx: up_tx.clone(),
@@ -47,12 +48,12 @@ pub fn local_links(
     (LocalMaster { rx: up_rx, txs, counters }, wlinks)
 }
 
-impl MasterLink for LocalMaster {
-    fn recv(&mut self) -> Option<UpdateMsg> {
+impl<Up: Wire, Down: Wire> MasterLink<Up, Down> for LocalMaster<Up, Down> {
+    fn recv(&mut self) -> Option<Up> {
         self.rx.recv().ok()
     }
 
-    fn send_to(&mut self, w: usize, msg: MasterMsg) {
+    fn send_to(&mut self, w: usize, msg: Down) {
         self.counters.add_down(msg.wire_bytes());
         // worker may have exited already; dropping the message then is fine
         let _ = self.txs[w].send(msg);
@@ -63,8 +64,8 @@ impl MasterLink for LocalMaster {
     }
 }
 
-impl WorkerLink for LocalWorker {
-    fn send(&mut self, msg: UpdateMsg) {
+impl<Up: Wire, Down: Wire> WorkerLink<Up, Down> for LocalWorker<Up, Down> {
+    fn send(&mut self, msg: Up) {
         if let Some(lat) = self.latency {
             std::thread::sleep(lat);
         }
@@ -72,7 +73,7 @@ impl WorkerLink for LocalWorker {
         let _ = self.tx.send(msg);
     }
 
-    fn recv(&mut self) -> Option<MasterMsg> {
+    fn recv(&mut self) -> Option<Down> {
         self.rx.recv().ok()
     }
 }
@@ -80,6 +81,8 @@ impl WorkerLink for LocalWorker {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comms::FRAME_HEADER;
+    use crate::coordinator::messages::{MasterMsg, UpdateMsg};
 
     fn upd(w: u32, d: usize) -> UpdateMsg {
         UpdateMsg {
@@ -96,7 +99,8 @@ mod tests {
     #[test]
     fn roundtrip_and_accounting() {
         let counters = Arc::new(Counters::new());
-        let (mut master, mut workers) = local_links(2, counters.clone(), None);
+        let (mut master, mut workers) =
+            local_links::<UpdateMsg, MasterMsg>(2, counters.clone(), None);
         let msg = upd(1, 10);
         let up_bytes = msg.wire_bytes();
         workers[1].send(msg);
@@ -106,7 +110,8 @@ mod tests {
         assert!(matches!(workers[1].recv(), Some(MasterMsg::Stop)));
         let s = counters.snapshot();
         assert_eq!(s.bytes_up, up_bytes);
-        assert_eq!(s.bytes_down, 1);
+        // Stop is an empty payload: exactly one frame header on the wire.
+        assert_eq!(s.bytes_down, FRAME_HEADER as u64);
         assert_eq!(s.msgs_up, 1);
         assert_eq!(s.msgs_down, 1);
     }
@@ -114,7 +119,7 @@ mod tests {
     #[test]
     fn master_recv_none_when_workers_dropped() {
         let counters = Arc::new(Counters::new());
-        let (mut master, workers) = local_links(1, counters, None);
+        let (mut master, workers) = local_links::<UpdateMsg, MasterMsg>(1, counters, None);
         drop(workers);
         assert!(master.recv().is_none());
     }
@@ -122,7 +127,7 @@ mod tests {
     #[test]
     fn send_to_dead_worker_does_not_panic() {
         let counters = Arc::new(Counters::new());
-        let (mut master, workers) = local_links(1, counters, None);
+        let (mut master, workers) = local_links::<UpdateMsg, MasterMsg>(1, counters, None);
         drop(workers);
         master.send_to(0, MasterMsg::Stop);
     }

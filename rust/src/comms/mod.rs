@@ -1,0 +1,183 @@
+//! `sfw::comms` — the protocol-generic communication layer.
+//!
+//! Every distributed algorithm in the repo speaks a small typed protocol
+//! (the paper's rank-one `{u, v, t_w}` exchange for SFW-asyn/SVRF-asyn,
+//! the dense broadcast/reduce round of SFW-dist).  This module factors
+//! what is common to all of them:
+//!
+//! * [`Wire`] — encode/decode of one protocol message to a
+//!   length-prefixed frame (`[u32 payload_len][u8 tag][payload]`).
+//!   `wire_bytes()` is **derived from the actual encoded length**, never
+//!   hand-counted, so the byte accounting the paper's comm-cost claims
+//!   rest on is pinned to the real framing by construction (and by the
+//!   round-trip property tests in `rust/tests/properties.rs`).
+//! * [`MasterLink`] / [`WorkerLink`] — the generic endpoints a protocol
+//!   master/worker runs against.  Byte/message accounting happens *in
+//!   the link* ([`metrics::Counters`]), not at protocol call-sites, so
+//!   every transport reports identical totals for identical traffic.
+//! * [`local`] — in-process mpsc channels charging exact frame sizes
+//!   (the default experimental substrate, with optional injected link
+//!   latency).
+//! * [`tcp`] — real blocking std::net sockets over the same frames
+//!   (tokio is not in the offline crate set), one connection per worker
+//!   rank, usable in-process, cross-process and cross-host.
+//!
+//! # Multi-process quickstart (master + two workers on loopback)
+//!
+//! ```text
+//! # terminal 1 — master: bind a fixed port, don't spawn local workers
+//! sfw train --algo sfw-asyn --transport tcp --workers 2 \
+//!           --tcp-bind 127.0.0.1:7070 --tcp-await true \
+//!           --task matrix_sensing --seed 42 --batch 64
+//!
+//! # terminals 2 & 3 — one process per worker rank, same spec flags
+//! sfw worker --connect 127.0.0.1:7070 --rank 0 --algo sfw-asyn \
+//!            --task matrix_sensing --seed 42 --batch 64
+//! sfw worker --connect 127.0.0.1:7070 --rank 1 --algo sfw-asyn \
+//!            --task matrix_sensing --seed 42 --batch 64
+//! ```
+//!
+//! The spec fields that shape the data and the schedules (task + `[data]`
+//! keys, `--seed`, `--batch`/`--tau`) must match across the processes:
+//! workers regenerate the dataset and the batch schedule locally from
+//! them — shipping the data is exactly what the paper's protocol avoids.
+//!
+//! [`metrics::Counters`]: crate::metrics::Counters
+
+pub mod codec;
+pub mod local;
+pub mod tcp;
+
+pub use codec::{Dec, Enc};
+pub use local::{local_links, LocalMaster, LocalWorker};
+pub use tcp::{connect_retry, tcp_master, tcp_master_on, tcp_worker, TcpMaster, TcpWorker};
+
+/// Length-prefixed frame header size: `[u32 payload_len][u8 tag]`.
+pub const FRAME_HEADER: usize = 5;
+
+/// Upper bound on a single frame payload (256 MiB — a dense f32 matrix
+/// up to ~8190x8190; today's workloads are <= 784x784).  The TCP reader
+/// rejects larger length prefixes *before* allocating, so a corrupt
+/// peer cannot force a multi-GiB allocation.  Bump if workloads grow.
+pub const MAX_FRAME_LEN: usize = 1 << 28;
+
+/// Frame tag reserved for the transport-level hello (the worker-rank
+/// announcement `tcp` sends on connect).  Protocol tags must stay below
+/// this value.
+pub const TAG_HELLO: u8 = 0xF0;
+
+/// Decode failures of a framed message.  Surfaced as errors (never
+/// panics) so a corrupt peer cannot crash the coordinator.
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("unknown frame tag {0}")]
+    BadTag(u8),
+    #[error("frame truncated: needed {need} more byte(s), {have} left")]
+    Truncated { need: usize, have: usize },
+    #[error("frame has {0} trailing byte(s)")]
+    Trailing(usize),
+    #[error("malformed frame: {0}")]
+    Malformed(&'static str),
+}
+
+/// One protocol message that can cross a transport boundary.
+///
+/// Implementations define the payload layout (via [`Enc`]/[`Dec`]) and a
+/// per-variant `tag`; the frame header itself is owned by this module
+/// ([`frame`]), so every protocol shares one framing and one notion of
+/// message size.
+pub trait Wire: Sized + Send + 'static {
+    /// Frame tag identifying the message variant within its protocol
+    /// (must be `< TAG_HELLO`).
+    fn tag(&self) -> u8;
+
+    /// Append the frame payload (everything after the header) to `buf`.
+    fn encode(&self, buf: &mut Vec<u8>);
+
+    /// Rebuild a message from its frame tag + payload.
+    fn decode(tag: u8, payload: &[u8]) -> Result<Self, WireError>;
+
+    /// Exact on-the-wire size of this message: frame header plus the
+    /// encoded payload length.  This is what every transport charges to
+    /// [`Counters`], which is why local-channel byte totals equal real
+    /// TCP byte totals.  The default derives it by encoding; messages on
+    /// hot accounting paths may override with an O(1) closed form, but
+    /// any override MUST be pinned equal to the actual encoding by a
+    /// round-trip property test (`tests/properties.rs` does this for
+    /// every protocol message).
+    ///
+    /// [`Counters`]: crate::metrics::Counters
+    fn wire_bytes(&self) -> u64 {
+        let mut buf = Vec::with_capacity(64);
+        self.encode(&mut buf);
+        (FRAME_HEADER + buf.len()) as u64
+    }
+}
+
+/// Serialize a message into one complete frame (header + payload).
+///
+/// Panics (sender-side, with the real cause named) if the payload
+/// exceeds [`MAX_FRAME_LEN`]: shipping it would only get the frame
+/// rejected by the receiver as corrupt — and a >= 4 GiB payload would
+/// silently truncate the u32 length prefix and desynchronize the stream.
+pub fn frame<W: Wire>(msg: &W) -> Vec<u8> {
+    let mut buf = vec![0u8; FRAME_HEADER];
+    msg.encode(&mut buf);
+    let payload = buf.len() - FRAME_HEADER;
+    assert!(
+        payload <= MAX_FRAME_LEN,
+        "frame payload of {payload} bytes exceeds comms::MAX_FRAME_LEN ({MAX_FRAME_LEN}); \
+         bump the limit for this workload size"
+    );
+    buf[..4].copy_from_slice(&(payload as u32).to_le_bytes());
+    buf[4] = msg.tag();
+    buf
+}
+
+/// Master-side endpoint of a `(Up, Down)` protocol: receive any worker's
+/// message, reply to one worker by rank.
+pub trait MasterLink<Up: Wire, Down: Wire>: Send {
+    /// Block until some worker's message arrives.  `None` = all workers
+    /// disconnected.
+    fn recv(&mut self) -> Option<Up>;
+    /// Send a reply to worker rank `w` (accounted as downlink traffic).
+    fn send_to(&mut self, w: usize, msg: Down);
+    /// Number of worker ranks attached.
+    fn workers(&self) -> usize;
+}
+
+/// Worker-side endpoint of a `(Up, Down)` protocol.
+pub trait WorkerLink<Up: Wire, Down: Wire>: Send {
+    fn send(&mut self, msg: Up);
+    /// Block until the master replies.  `None` = master gone.
+    fn recv(&mut self) -> Option<Down>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::{MasterMsg, UpdateMsg};
+
+    #[test]
+    fn frame_layout_is_len_tag_payload() {
+        let f = frame(&MasterMsg::Stop);
+        assert_eq!(f.len(), FRAME_HEADER);
+        assert_eq!(u32::from_le_bytes(f[..4].try_into().unwrap()), 0);
+        assert_eq!(f[4], MasterMsg::Stop.tag());
+    }
+
+    #[test]
+    fn wire_bytes_is_the_frame_length() {
+        let m = UpdateMsg {
+            worker_id: 1,
+            t_w: 7,
+            u: vec![1.0; 13],
+            v: vec![2.0; 9],
+            sigma: 0.5,
+            loss_sum: 1.25,
+            m: 64,
+        };
+        assert_eq!(m.wire_bytes(), frame(&m).len() as u64);
+        assert_eq!(MasterMsg::Stop.wire_bytes(), FRAME_HEADER as u64);
+    }
+}

@@ -1,0 +1,394 @@
+//! Real TCP transport: length-prefixed frames over blocking std::net
+//! sockets, one connection per worker rank (MPI-rank semantics; tokio is
+//! not in the offline crate set).  Generic over the protocol's
+//! `(Up, Down)` message pair — the same endpoints carry SFW-asyn,
+//! SVRF-asyn and SFW-dist, in-process or across processes/hosts.
+//!
+//! Connection handshake: the worker's first frame is a transport-level
+//! hello ([`TAG_HELLO`] + rank u32) — connection order is not identity.
+//!
+//! Accounting convention: uplink bytes are counted once, master-side (by
+//! the per-connection reader threads), and downlink bytes at
+//! [`MasterLink::send_to`]; [`TcpWorker`] counts nothing.  The master's
+//! [`Counters`] therefore hold the complete both-direction totals even
+//! when workers are external processes, and the totals equal the local
+//! transport's because both charge exact frame sizes.
+//!
+//! [`Counters`]: crate::metrics::Counters
+
+use std::io::{Read, Write};
+use std::marker::PhantomData;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::comms::{
+    frame, MasterLink, Wire, WireError, WorkerLink, FRAME_HEADER, MAX_FRAME_LEN, TAG_HELLO,
+};
+use crate::metrics::Counters;
+
+fn read_frame(s: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
+    let mut head = [0u8; FRAME_HEADER];
+    s.read_exact(&mut head)?;
+    let len = u32::from_le_bytes(head[..4].try_into().unwrap()) as usize;
+    // reject a corrupt length prefix BEFORE allocating for it
+    if len > MAX_FRAME_LEN {
+        return Err(io_invalid(format!(
+            "frame payload length {len} exceeds MAX_FRAME_LEN {MAX_FRAME_LEN}"
+        )));
+    }
+    let tag = head[4];
+    let mut payload = vec![0u8; len];
+    s.read_exact(&mut payload)?;
+    Ok((tag, payload))
+}
+
+fn hello_frame(rank: u32) -> Vec<u8> {
+    let mut buf = vec![0u8; FRAME_HEADER];
+    buf.extend_from_slice(&rank.to_le_bytes());
+    buf[..4].copy_from_slice(&4u32.to_le_bytes());
+    buf[4] = TAG_HELLO;
+    buf
+}
+
+fn decode_hello(tag: u8, payload: &[u8]) -> Result<usize, WireError> {
+    if tag != TAG_HELLO {
+        return Err(WireError::BadTag(tag));
+    }
+    if payload.len() != 4 {
+        return Err(WireError::Malformed("hello payload must be a u32 rank"));
+    }
+    Ok(u32::from_le_bytes(payload.try_into().unwrap()) as usize)
+}
+
+fn io_invalid<E: Into<Box<dyn std::error::Error + Send + Sync>>>(e: E) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e)
+}
+
+// ------------------------------------------------------------ master side
+
+pub struct TcpMaster<Up, Down> {
+    /// Upstream demux: per-connection reader threads push decoded
+    /// messages (and charge their frame bytes) as they arrive.
+    rx: Receiver<Up>,
+    write_halves: Vec<TcpStream>,
+    counters: Arc<Counters>,
+    _down: PhantomData<fn(Down)>,
+}
+
+/// Accept `workers` valid worker connections on an **already-bound**
+/// listener.  Binding first (and handing the listener here) is what lets
+/// callers learn the port of an ephemeral bind before any worker
+/// connects — there is no drop-and-rebind race.
+///
+/// A stray or misbehaving connection (port scanner, bad hello frame,
+/// out-of-range or duplicate rank) is logged and dropped; the accept
+/// loop keeps waiting for the remaining valid workers rather than
+/// aborting the run.
+pub fn tcp_master_on<Up: Wire, Down: Wire>(
+    listener: TcpListener,
+    workers: usize,
+    counters: Arc<Counters>,
+) -> std::io::Result<TcpMaster<Up, Down>> {
+    let (tx, rx) = channel::<Up>();
+    let mut write_halves: Vec<Option<TcpStream>> = (0..workers).map(|_| None).collect();
+    let mut accepted = 0;
+    while accepted < workers {
+        let (mut stream, peer) = match listener.accept() {
+            Ok(conn) => conn,
+            // a connection reset before accept (port scanner RST) is not
+            // a master failure — keep accepting
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::ConnectionAborted
+                        | std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                eprintln!("comms: transient accept error: {e}");
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        let _ = stream.set_nodelay(true);
+        // A silent stray connection (half-open client, health check) must
+        // not stall acceptance of the real workers: the hello must arrive
+        // promptly.  The timeout is cleared once the worker is validated —
+        // protocol reads may legitimately block for minutes.
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+        let rank = match read_frame(&mut stream) {
+            Ok((tag, payload)) => match decode_hello(tag, &payload) {
+                Ok(rank) if rank < workers && write_halves[rank].is_none() => rank,
+                Ok(rank) => {
+                    eprintln!("comms: rejecting {peer}: rank {rank} out of range or duplicate");
+                    continue;
+                }
+                Err(e) => {
+                    eprintln!("comms: rejecting {peer}: bad hello: {e}");
+                    continue;
+                }
+            },
+            Err(e) => {
+                eprintln!("comms: rejecting {peer}: {e}");
+                continue;
+            }
+        };
+        let _ = stream.set_read_timeout(None);
+        write_halves[rank] = Some(stream.try_clone()?);
+        let tx = tx.clone();
+        let counters = counters.clone();
+        std::thread::spawn(move || loop {
+            match read_frame(&mut stream) {
+                Ok((tag, payload)) => {
+                    let bytes = (FRAME_HEADER + payload.len()) as u64;
+                    match Up::decode(tag, &payload) {
+                        Ok(msg) => {
+                            counters.add_up(bytes);
+                            if tx.send(msg).is_err() {
+                                return;
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("comms: closing worker {rank}: {e}");
+                            return;
+                        }
+                    }
+                }
+                Err(_) => return,
+            }
+        });
+        accepted += 1;
+    }
+    Ok(TcpMaster {
+        rx,
+        write_halves: write_halves.into_iter().map(Option::unwrap).collect(),
+        counters,
+        _down: PhantomData,
+    })
+}
+
+/// Bind `addr` and accept exactly `workers` connections.  Returns the
+/// resolved local address (useful with an ephemeral `:0` bind).
+pub fn tcp_master<Up: Wire, Down: Wire>(
+    addr: &str,
+    workers: usize,
+    counters: Arc<Counters>,
+) -> std::io::Result<(TcpMaster<Up, Down>, SocketAddr)> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    Ok((tcp_master_on(listener, workers, counters)?, local))
+}
+
+impl<Up: Wire, Down: Wire> MasterLink<Up, Down> for TcpMaster<Up, Down> {
+    fn recv(&mut self) -> Option<Up> {
+        self.rx.recv().ok()
+    }
+
+    fn send_to(&mut self, w: usize, msg: Down) {
+        let f = frame(&msg);
+        if self.write_halves[w].write_all(&f).is_ok() {
+            self.counters.add_down(f.len() as u64);
+        }
+    }
+
+    fn workers(&self) -> usize {
+        self.write_halves.len()
+    }
+}
+
+// ------------------------------------------------------------ worker side
+
+pub struct TcpWorker<Up, Down> {
+    stream: TcpStream,
+    _proto: PhantomData<fn(Up) -> Down>,
+}
+
+/// Connect to the master and send the identifying hello frame.
+pub fn tcp_worker<Up: Wire, Down: Wire>(
+    addr: &str,
+    rank: u32,
+) -> std::io::Result<TcpWorker<Up, Down>> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    stream.write_all(&hello_frame(rank))?;
+    Ok(TcpWorker { stream, _proto: PhantomData })
+}
+
+/// [`tcp_worker`], retrying until `timeout` — for external worker
+/// processes started before (or racing) the master's bind.
+pub fn connect_retry<Up: Wire, Down: Wire>(
+    addr: &str,
+    rank: u32,
+    timeout: Duration,
+) -> std::io::Result<TcpWorker<Up, Down>> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match tcp_worker(addr, rank) {
+            Ok(w) => return Ok(w),
+            Err(e) if Instant::now() >= deadline => return Err(e),
+            Err(_) => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+}
+
+impl<Up: Wire, Down: Wire> WorkerLink<Up, Down> for TcpWorker<Up, Down> {
+    fn send(&mut self, msg: Up) {
+        // Uplink bytes are counted once, master-side (see module docs).
+        let _ = self.stream.write_all(&frame(&msg));
+    }
+
+    fn recv(&mut self) -> Option<Down> {
+        let (tag, payload) = read_frame(&mut self.stream).ok()?;
+        match Down::decode(tag, &payload) {
+            Ok(m) => Some(m),
+            Err(e) => {
+                eprintln!("comms: bad frame from master: {e}");
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::{DistDown, DistUp, MasterMsg, UpdateMsg};
+    use crate::linalg::Mat;
+
+    fn upd(id: u32) -> UpdateMsg {
+        UpdateMsg {
+            worker_id: id,
+            t_w: 17,
+            u: vec![1.0, -2.5, 3.25],
+            v: vec![0.5, 4.0],
+            sigma: 6.5,
+            loss_sum: 2.25,
+            m: 99,
+        }
+    }
+
+    #[test]
+    fn tcp_end_to_end_roundtrip_with_rank_mapping() {
+        let counters = Arc::new(Counters::new());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let cm = counters.clone();
+        let handle = std::thread::spawn(move || {
+            let mut master = tcp_master_on::<UpdateMsg, MasterMsg>(listener, 2, cm).unwrap();
+            let mut seen = Vec::new();
+            for _ in 0..2 {
+                let u = master.recv().unwrap();
+                seen.push(u.worker_id);
+                master.send_to(u.worker_id as usize, MasterMsg::Stop);
+            }
+            seen.sort();
+            assert_eq!(seen, vec![0, 1]);
+        });
+        let mut hs = Vec::new();
+        for id in 0..2u32 {
+            hs.push(std::thread::spawn(move || {
+                let mut w =
+                    tcp_worker::<UpdateMsg, MasterMsg>(&addr.to_string(), id).unwrap();
+                w.send(upd(id));
+                assert!(matches!(w.recv(), Some(MasterMsg::Stop)));
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        handle.join().unwrap();
+        let s = counters.snapshot();
+        assert_eq!(s.msgs_up, 2);
+        assert_eq!(s.msgs_down, 2);
+        // both directions charge exact frame sizes
+        assert_eq!(s.bytes_up, 2 * upd(0).wire_bytes());
+        assert_eq!(s.bytes_down, 2 * MasterMsg::Stop.wire_bytes());
+    }
+
+    #[test]
+    fn dist_protocol_crosses_the_same_wire() {
+        let counters = Arc::new(Counters::new());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut master =
+                tcp_master_on::<DistUp, DistDown>(listener, 1, counters).unwrap();
+            master.send_to(
+                0,
+                DistDown::Compute {
+                    k: 3,
+                    m_share: 8,
+                    x: Arc::new(Mat::from_vec(1, 2, vec![1.0, 2.0])),
+                },
+            );
+            let up = master.recv().unwrap();
+            assert_eq!(up.worker_id, 0);
+            assert_eq!(up.grad.data, vec![0.5, -0.5]);
+            master.send_to(0, DistDown::Stop);
+        });
+        let mut w = tcp_worker::<DistUp, DistDown>(&addr.to_string(), 0).unwrap();
+        match w.recv() {
+            Some(DistDown::Compute { k, m_share, x }) => {
+                assert_eq!((k, m_share), (3, 8));
+                assert_eq!(x.data, vec![1.0, 2.0]);
+            }
+            other => panic!("expected Compute, got {other:?}"),
+        }
+        w.send(DistUp {
+            worker_id: 0,
+            loss_sum: 1.0,
+            grad: Mat::from_vec(1, 2, vec![0.5, -0.5]),
+        });
+        assert!(matches!(w.recv(), Some(DistDown::Stop)));
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn stray_and_bad_rank_connections_are_skipped_not_fatal() {
+        // A port scanner (connect + close, no hello) and a worker with an
+        // out-of-range rank must not abort the master: it keeps accepting
+        // until a valid worker arrives and then runs the protocol.
+        let counters = Arc::new(Counters::new());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut master = tcp_master_on::<UpdateMsg, MasterMsg>(listener, 1, counters).unwrap();
+            let u = master.recv().unwrap();
+            assert_eq!(u.worker_id, 0);
+            master.send_to(0, MasterMsg::Stop);
+        });
+        drop(TcpStream::connect(addr).unwrap()); // stray: no hello
+        let bad = tcp_worker::<UpdateMsg, MasterMsg>(&addr.to_string(), 9).unwrap();
+        let mut w = tcp_worker::<UpdateMsg, MasterMsg>(&addr.to_string(), 0).unwrap();
+        w.send(upd(0));
+        assert!(matches!(w.recv(), Some(MasterMsg::Stop)));
+        drop(bad);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let counters = Arc::new(Counters::new());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let evil = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // claims a ~4 GiB payload; master must reject, not allocate
+            let mut head = u32::MAX.to_le_bytes().to_vec();
+            head.push(TAG_HELLO);
+            let _ = s.write_all(&head);
+            s
+        });
+        // master rejects the frame and keeps accepting; a valid worker
+        // then completes the handshake.
+        let master = std::thread::spawn(move || {
+            tcp_master_on::<UpdateMsg, MasterMsg>(listener, 1, counters).unwrap()
+        });
+        let _s = evil.join().unwrap();
+        let _w = tcp_worker::<UpdateMsg, MasterMsg>(&addr.to_string(), 0).unwrap();
+        let m = master.join().unwrap();
+        assert_eq!(m.workers(), 1);
+    }
+}

@@ -112,6 +112,9 @@ pub struct TrainConfig {
     pub workers: usize,
     pub tau: u64,
     pub iterations: u64,
+    /// Constant minibatch size; 0 = the algorithm's theorem schedule
+    /// (from `batch_scale`/`batch_cap`/`tau`).
+    pub batch: usize,
     pub batch_cap: usize,
     pub batch_scale: f64,
     pub power_iters: usize,
@@ -122,6 +125,11 @@ pub struct TrainConfig {
     pub engine: String,
     /// "local" | "tcp".
     pub transport: String,
+    /// TCP master bind address (`host:port`); empty = loopback ephemeral.
+    pub tcp_bind: String,
+    /// TCP: await external `sfw worker` processes instead of spawning
+    /// worker threads.
+    pub tcp_await: bool,
     /// SVRF-asyn outer epochs; 0 = derive from `iterations`.
     pub epochs: u32,
     pub artifacts_dir: String,
@@ -142,6 +150,7 @@ impl Default for TrainConfig {
             workers: 4,
             tau: 8,
             iterations: 300,
+            batch: 0,
             batch_cap: 10_000,
             batch_scale: 0.5,
             power_iters: 24,
@@ -150,6 +159,8 @@ impl Default for TrainConfig {
             eval_every: 10,
             engine: "native".into(),
             transport: "local".into(),
+            tcp_bind: String::new(),
+            tcp_await: false,
             epochs: 0,
             artifacts_dir: "artifacts".into(),
             ms_n: 90_000,
@@ -181,9 +192,9 @@ impl TrainConfig {
         // `[data]` groups dataset knobs.  A key in the WRONG section is
         // ignored (not silently honored).
         const TRAIN_KEYS: &[&str] = &[
-            "task", "algo", "engine", "transport", "artifacts-dir",
-            "workers", "tau", "iterations", "epochs", "batch-cap",
-            "batch-scale", "power-iters", "theta", "seed", "eval-every",
+            "task", "algo", "engine", "transport", "tcp-bind", "tcp-await",
+            "artifacts-dir", "workers", "tau", "iterations", "epochs", "batch",
+            "batch-cap", "batch-scale", "power-iters", "theta", "seed", "eval-every",
         ];
         const DATA_KEYS: &[&str] = &["ms-n", "ms-d", "ms-rank", "ms-noise", "pnn-n", "pnn-d"];
 
@@ -211,6 +222,14 @@ impl TrainConfig {
                 }
             }
         }
+        // Bare `--tcp-await` (boolean flag spelling) counts as true.  An
+        // explicit value was already resolved above and must keep going
+        // through the bool parse so typos ("--tcp-await no") error
+        // instead of silently awaiting workers that never come.
+        let is_bare = |key: &str| args.has(key) && args.get_opt(key).is_none();
+        if is_bare("tcp-await") || is_bare("train.tcp-await") {
+            cfg.set("tcp-await", "true");
+        }
         let d = TrainConfig::default();
         Ok(TrainConfig {
             task: cfg.get_str("task", &d.task),
@@ -218,6 +237,7 @@ impl TrainConfig {
             workers: cfg.get("workers", d.workers)?,
             tau: cfg.get("tau", d.tau)?,
             iterations: cfg.get("iterations", d.iterations)?,
+            batch: cfg.get("batch", d.batch)?,
             batch_cap: cfg.get("batch-cap", d.batch_cap)?,
             batch_scale: cfg.get("batch-scale", d.batch_scale)?,
             power_iters: cfg.get("power-iters", d.power_iters)?,
@@ -226,6 +246,8 @@ impl TrainConfig {
             eval_every: cfg.get("eval-every", d.eval_every)?,
             engine: cfg.get_str("engine", &d.engine),
             transport: cfg.get_str("transport", &d.transport),
+            tcp_bind: cfg.get_str("tcp-bind", &d.tcp_bind),
+            tcp_await: cfg.get("tcp-await", d.tcp_await)?,
             epochs: cfg.get("epochs", d.epochs)?,
             artifacts_dir: cfg.get_str("artifacts-dir", &d.artifacts_dir),
             ms_n: cfg.get("ms-n", d.ms_n)?,
@@ -322,6 +344,20 @@ n = 90000
         );
         let tc = TrainConfig::load(&args).unwrap();
         assert_eq!(tc.workers, 3);
+    }
+
+    #[test]
+    fn tcp_await_accepts_bare_flag_but_rejects_typos() {
+        let load = |s: &str| TrainConfig::load(&Args::parse_from(s.split_whitespace().map(String::from)));
+        assert!(load("--tcp-await").unwrap().tcp_await); // bare boolean spelling
+        assert!(load("--tcp-await true").unwrap().tcp_await);
+        assert!(!load("--tcp-await false").unwrap().tcp_await);
+        assert!(!load("").unwrap().tcp_await);
+        // a typo must error, not silently await workers that never come
+        assert!(matches!(
+            load("--tcp-await no"),
+            Err(ConfigError::BadValue(k, _)) if k == "tcp-await"
+        ));
     }
 
     #[test]

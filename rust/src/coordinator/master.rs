@@ -13,13 +13,13 @@
 use std::sync::Arc;
 
 use crate::algo::sfw::init_rank_one;
+use crate::comms::MasterLink;
 use crate::coordinator::eval::Evaluator;
-use crate::coordinator::messages::MasterMsg;
+use crate::coordinator::messages::{MasterMsg, UpdateMsg};
 use crate::coordinator::update_log::UpdateLog;
 use crate::linalg::Mat;
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
-use crate::transport::MasterLink;
 use crate::util::rng::Rng;
 
 pub struct MasterOptions {
@@ -36,7 +36,7 @@ pub struct MasterOptions {
 
 /// Run the master until T accepted updates, then stop all workers.
 /// Returns the final dense iterate X_T.
-pub fn run_master<L: MasterLink>(
+pub fn run_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
     link: &mut L,
     obj: &Arc<dyn Objective>,
     opts: &MasterOptions,
@@ -52,8 +52,23 @@ pub fn run_master<L: MasterLink>(
 
     while log.t_m() < opts.iterations {
         let Some(upd) = link.recv() else { break };
+        // an out-of-range rank (corrupt or misconfigured external
+        // worker) must not index the link's reply table
+        if upd.worker_id as usize >= link.workers() {
+            eprintln!("sfw-asyn: ignoring update with bad worker id {}", upd.worker_id);
+            continue;
+        }
         let t_m = log.t_m();
-        debug_assert!(upd.t_w <= t_m, "worker claims future iterate");
+        // a sync point from the future (worker resumed against the wrong
+        // master, or frame corruption that still decodes) would wrap the
+        // delay subtraction — reject it like a bad rank
+        if upd.t_w > t_m {
+            eprintln!(
+                "sfw-asyn: ignoring update claiming future iterate (t_w={} > t_m={t_m})",
+                upd.t_w
+            );
+            continue;
+        }
         let delay = t_m - upd.t_w;
         if delay > opts.tau {
             // Alg 3 line 7: drop, but resynchronize the straggler.

@@ -1,14 +1,30 @@
-//! Wire messages of the SFW-asyn protocol (Algorithm 3) and their byte
-//! accounting.
+//! Typed wire messages of every protocol the coordinator speaks, with
+//! their [`Wire`] codecs.
 //!
 //! The entire point of the paper's communication design is visible in the
-//! types: a worker sends `{u, v, t_w}` — O(D1 + D2) floats — and the master
-//! replies with the update-log slice `{(u_k, v_k)} k = t_w+1..t_m` — again
-//! O(D1 + D2) per entry — instead of gradient/parameter matrices of size
-//! O(D1 * D2).  `wire_bytes()` on each type is what the comm-cost bench
-//! measures, and the TCP transport serializes exactly these layouts.
+//! types: an SFW-asyn worker sends `{u, v, t_w}` — O(D1 + D2) floats —
+//! and the master replies with the update-log slice `{(u_k, v_k)}
+//! k = t_w+1..t_m` — again O(D1 + D2) per entry — instead of
+//! gradient/parameter matrices of size O(D1 * D2).  The synchronous
+//! SFW-dist baseline ships exactly those dense matrices ([`DistUp`] /
+//! [`DistDown`]), which is what makes the contrast measurable on the same
+//! wire.  `wire_bytes()` on each message is derived from the actual
+//! encoding (see [`Wire`]), and is what the comm-cost bench measures.
+//!
+//! [`Wire`]: crate::comms::Wire
 
 use std::sync::Arc;
+
+use crate::comms::{Dec, Enc, Wire, WireError};
+use crate::linalg::Mat;
+
+// ------------------------------------------------- SFW-asyn / SVRF-asyn
+
+/// Frame tags of the asynchronous rank-one protocol (Algorithms 3/5).
+pub const TAG_UPDATE: u8 = 1;
+pub const TAG_UPDATES: u8 = 2;
+pub const TAG_STOP: u8 = 3;
+pub const TAG_UPDATE_W: u8 = 4;
 
 /// Rank-one LMO result sent worker -> master: `{u_w, v_w, t_w}` plus the
 /// minibatch loss ride-along (f32 telemetry, negligible on the wire).
@@ -25,11 +41,46 @@ pub struct UpdateMsg {
     pub m: u32,
 }
 
-impl UpdateMsg {
-    /// Serialized size: header (id 4 + t_w 8 + sigma 4 + loss 8 + m 4 +
-    /// two u32 lengths) + payload vectors.
-    pub fn wire_bytes(&self) -> u64 {
-        (4 + 8 + 4 + 8 + 4 + 4 + 4) as u64 + 4 * (self.u.len() + self.v.len()) as u64
+impl Wire for UpdateMsg {
+    fn tag(&self) -> u8 {
+        TAG_UPDATE
+    }
+
+    /// O(1) closed form of the encoded frame size; pinned equal to the
+    /// real encoding by `tests/properties.rs::wire_bytes_exact`.
+    fn wire_bytes(&self) -> u64 {
+        crate::comms::FRAME_HEADER as u64
+            + (4 + 8 + 4 + 8 + 4 + 4 + 4) as u64
+            + 4 * (self.u.len() + self.v.len()) as u64
+    }
+
+    fn encode(&self, buf: &mut Vec<u8>) {
+        let mut e = Enc(buf);
+        e.u32(self.worker_id);
+        e.u64(self.t_w);
+        e.f32(self.sigma);
+        e.f64(self.loss_sum);
+        e.u32(self.m);
+        e.f32s(&self.u);
+        e.f32s(&self.v);
+    }
+
+    fn decode(tag: u8, payload: &[u8]) -> Result<Self, WireError> {
+        if tag != TAG_UPDATE {
+            return Err(WireError::BadTag(tag));
+        }
+        let mut d = Dec::new(payload);
+        let msg = UpdateMsg {
+            worker_id: d.u32()?,
+            t_w: d.u64()?,
+            sigma: d.f32()?,
+            loss_sum: d.f64()?,
+            m: d.u32()?,
+            u: d.f32s()?,
+            v: d.f32s()?,
+        };
+        d.finish()?;
+        Ok(msg)
     }
 }
 
@@ -48,6 +99,10 @@ pub struct LogEntry {
 }
 
 impl LogEntry {
+    /// Payload bytes this entry contributes to a framed [`MasterMsg`]
+    /// (pinned to the codec by the wire-bytes property tests).  Used by
+    /// the queuing simulator, which accounts per-entry catch-up traffic
+    /// without constructing messages.
     pub fn wire_bytes(&self) -> u64 {
         (8 + 4 + 4 + 4 + 4) as u64 + 4 * (self.u.len() + self.v.len()) as u64
     }
@@ -64,13 +119,196 @@ pub enum MasterMsg {
     Stop,
 }
 
-impl MasterMsg {
-    pub fn wire_bytes(&self) -> u64 {
+fn encode_entries(buf: &mut Vec<u8>, t_m: u64, entries: &[LogEntry]) {
+    let mut e = Enc(buf);
+    e.u64(t_m);
+    e.u32(entries.len() as u32);
+    for le in entries {
+        e.u64(le.k);
+        e.f32(le.eta);
+        e.f32(le.scale);
+        e.f32s(&le.u);
+        e.f32s(&le.v);
+    }
+}
+
+fn decode_entries(payload: &[u8]) -> Result<(u64, Vec<LogEntry>), WireError> {
+    let mut d = Dec::new(payload);
+    let t_m = d.u64()?;
+    let n = d.u32()? as usize;
+    let mut entries = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        entries.push(LogEntry {
+            k: d.u64()?,
+            eta: d.f32()?,
+            scale: d.f32()?,
+            u: Arc::new(d.f32s()?),
+            v: Arc::new(d.f32s()?),
+        });
+    }
+    d.finish()?;
+    Ok((t_m, entries))
+}
+
+impl Wire for MasterMsg {
+    fn tag(&self) -> u8 {
         match self {
+            MasterMsg::Updates { .. } => TAG_UPDATES,
+            MasterMsg::UpdateW { .. } => TAG_UPDATE_W,
+            MasterMsg::Stop => TAG_STOP,
+        }
+    }
+
+    /// O(1)-per-entry closed form, pinned to the codec by property test.
+    fn wire_bytes(&self) -> u64 {
+        let header = crate::comms::FRAME_HEADER as u64;
+        match self {
+            MasterMsg::Stop => header,
             MasterMsg::Updates { entries, .. } | MasterMsg::UpdateW { entries, .. } => {
-                (8 + 4 + 1) as u64 + entries.iter().map(|e| e.wire_bytes()).sum::<u64>()
+                header + (8 + 4) as u64 + entries.iter().map(|e| e.wire_bytes()).sum::<u64>()
             }
-            MasterMsg::Stop => 1,
+        }
+    }
+
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            MasterMsg::Stop => {}
+            MasterMsg::Updates { t_m, entries } | MasterMsg::UpdateW { t_m, entries } => {
+                encode_entries(buf, *t_m, entries);
+            }
+        }
+    }
+
+    fn decode(tag: u8, payload: &[u8]) -> Result<Self, WireError> {
+        match tag {
+            TAG_STOP => {
+                // strict like every other variant: Stop carries no payload
+                if !payload.is_empty() {
+                    return Err(WireError::Trailing(payload.len()));
+                }
+                Ok(MasterMsg::Stop)
+            }
+            TAG_UPDATES => {
+                let (t_m, entries) = decode_entries(payload)?;
+                Ok(MasterMsg::Updates { t_m, entries })
+            }
+            TAG_UPDATE_W => {
+                let (t_m, entries) = decode_entries(payload)?;
+                Ok(MasterMsg::UpdateW { t_m, entries })
+            }
+            t => Err(WireError::BadTag(t)),
+        }
+    }
+}
+
+// --------------------------------------------------------- SFW-dist
+
+/// Frame tags of the synchronous SFW-dist protocol (Algorithm 1).
+pub const TAG_DIST_GRAD: u8 = 1;
+pub const TAG_DIST_COMPUTE: u8 = 1;
+pub const TAG_DIST_STOP: u8 = 2;
+
+/// Worker -> master round reply: the dense partial gradient —
+/// O(D1 * D2) on the wire, the cost the paper's protocol eliminates.
+#[derive(Clone, Debug)]
+pub struct DistUp {
+    pub worker_id: u32,
+    /// Minibatch loss telemetry (kept on the wire for parity with Alg 3;
+    /// the master reports full-objective loss via the evaluator).
+    pub loss_sum: f64,
+    pub grad: Mat,
+}
+
+impl Wire for DistUp {
+    fn tag(&self) -> u8 {
+        TAG_DIST_GRAD
+    }
+
+    /// O(1) closed form, pinned to the codec by property test.
+    fn wire_bytes(&self) -> u64 {
+        crate::comms::FRAME_HEADER as u64
+            + (4 + 8 + 4 + 4) as u64
+            + 4 * self.grad.data.len() as u64
+    }
+
+    fn encode(&self, buf: &mut Vec<u8>) {
+        let mut e = Enc(buf);
+        e.u32(self.worker_id);
+        e.f64(self.loss_sum);
+        e.mat(&self.grad);
+    }
+
+    fn decode(tag: u8, payload: &[u8]) -> Result<Self, WireError> {
+        if tag != TAG_DIST_GRAD {
+            return Err(WireError::BadTag(tag));
+        }
+        let mut d = Dec::new(payload);
+        let msg = DistUp { worker_id: d.u32()?, loss_sum: d.f64()?, grad: d.mat()? };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Master -> worker round broadcast: the dense iterate plus each
+/// worker's minibatch share — again O(D1 * D2) per worker per round.
+/// The iterate is `Arc`ed so the local transport's per-worker broadcast
+/// is a refcount bump, not W deep copies.
+#[derive(Clone, Debug)]
+pub enum DistDown {
+    Compute { k: u64, m_share: u32, x: Arc<Mat> },
+    Stop,
+}
+
+impl Wire for DistDown {
+    fn tag(&self) -> u8 {
+        match self {
+            DistDown::Compute { .. } => TAG_DIST_COMPUTE,
+            DistDown::Stop => TAG_DIST_STOP,
+        }
+    }
+
+    /// O(1) closed form, pinned to the codec by property test.
+    fn wire_bytes(&self) -> u64 {
+        let header = crate::comms::FRAME_HEADER as u64;
+        match self {
+            DistDown::Stop => header,
+            DistDown::Compute { x, .. } => {
+                header + (8 + 4 + 4 + 4) as u64 + 4 * x.data.len() as u64
+            }
+        }
+    }
+
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            DistDown::Stop => {}
+            DistDown::Compute { k, m_share, x } => {
+                let mut e = Enc(buf);
+                e.u64(*k);
+                e.u32(*m_share);
+                e.mat(x);
+            }
+        }
+    }
+
+    fn decode(tag: u8, payload: &[u8]) -> Result<Self, WireError> {
+        match tag {
+            TAG_DIST_STOP => {
+                if !payload.is_empty() {
+                    return Err(WireError::Trailing(payload.len()));
+                }
+                Ok(DistDown::Stop)
+            }
+            TAG_DIST_COMPUTE => {
+                let mut d = Dec::new(payload);
+                let msg = DistDown::Compute {
+                    k: d.u64()?,
+                    m_share: d.u32()?,
+                    x: Arc::new(d.mat()?),
+                };
+                d.finish()?;
+                Ok(msg)
+            }
+            t => Err(WireError::BadTag(t)),
         }
     }
 }
@@ -78,6 +316,7 @@ impl MasterMsg {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comms::FRAME_HEADER;
 
     fn entry(k: u64, d1: usize, d2: usize) -> LogEntry {
         LogEntry {
@@ -100,8 +339,8 @@ mod tests {
             loss_sum: 0.0,
             m: 64,
         };
-        // 36-byte header + 4*(30+40)
-        assert_eq!(m.wire_bytes(), 36 + 280);
+        // 5-byte frame header + 36-byte payload header + 4*(30+40)
+        assert_eq!(m.wire_bytes(), (FRAME_HEADER + 36) as u64 + 280);
         // crucially NOT 4 * 30 * 40 (the dense-gradient cost)
         assert!(m.wire_bytes() < 4 * 30 * 40);
     }
@@ -113,8 +352,76 @@ mod tests {
             t_m: 3,
             entries: vec![entry(1, 30, 40), entry(2, 30, 40), entry(3, 30, 40)],
         };
+        // the per-entry cost the simulator uses matches the real codec
         let per_entry = entry(0, 30, 40).wire_bytes();
         assert_eq!(three.wire_bytes() - one.wire_bytes(), 2 * per_entry);
-        assert_eq!(MasterMsg::Stop.wire_bytes(), 1);
+        // Stop is a bare frame header
+        assert_eq!(MasterMsg::Stop.wire_bytes(), FRAME_HEADER as u64);
+    }
+
+    #[test]
+    fn asyn_codec_round_trips() {
+        let m = UpdateMsg {
+            worker_id: 3,
+            t_w: 17,
+            u: vec![1.0, -2.5, 3.25],
+            v: vec![0.5, 4.0],
+            sigma: 6.5,
+            loss_sum: 2.25,
+            m: 99,
+        };
+        let mut buf = Vec::new();
+        m.encode(&mut buf);
+        let d = UpdateMsg::decode(m.tag(), &buf).unwrap();
+        assert_eq!((d.worker_id, d.t_w, d.m), (3, 17, 99));
+        assert_eq!(d.u, m.u);
+        assert_eq!(d.v, m.v);
+
+        let msg = MasterMsg::Updates { t_m: 5, entries: vec![entry(5, 2, 1)] };
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        match MasterMsg::decode(msg.tag(), &buf).unwrap() {
+            MasterMsg::Updates { t_m, entries } => {
+                assert_eq!(t_m, 5);
+                assert_eq!(entries.len(), 1);
+                assert_eq!(entries[0].k, 5);
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert!(matches!(MasterMsg::decode(TAG_STOP, &[]).unwrap(), MasterMsg::Stop));
+        assert!(MasterMsg::decode(77, &[]).is_err());
+        // a garbage payload under a Stop tag is corruption, not a Stop
+        assert!(MasterMsg::decode(TAG_STOP, &[1]).is_err());
+        assert!(DistDown::decode(TAG_DIST_STOP, &[1]).is_err());
+    }
+
+    #[test]
+    fn dist_messages_cost_d1_times_d2() {
+        let x = Mat::zeros(30, 40);
+        let down = DistDown::Compute { k: 1, m_share: 16, x: Arc::new(x.clone()) };
+        let up = DistUp { worker_id: 0, loss_sum: 0.0, grad: x };
+        // both directions carry the dense matrix: >= 4 * D1 * D2 bytes
+        assert!(down.wire_bytes() >= 4 * 30 * 40);
+        assert!(up.wire_bytes() >= 4 * 30 * 40);
+        assert_eq!(DistDown::Stop.wire_bytes(), FRAME_HEADER as u64);
+    }
+
+    #[test]
+    fn truncated_frames_error_not_panic() {
+        let m = UpdateMsg {
+            worker_id: 1,
+            t_w: 2,
+            u: vec![1.0; 4],
+            v: vec![1.0; 4],
+            sigma: 0.0,
+            loss_sum: 0.0,
+            m: 1,
+        };
+        let mut buf = Vec::new();
+        m.encode(&mut buf);
+        assert!(UpdateMsg::decode(m.tag(), &buf[..buf.len() - 3]).is_err());
+        let mut extended = buf.clone();
+        extended.push(0);
+        assert!(UpdateMsg::decode(m.tag(), &extended).is_err());
     }
 }

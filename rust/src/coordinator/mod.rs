@@ -3,11 +3,14 @@
 //! * [`master`] / [`worker`] — SFW-asyn (Algorithm 3): the asynchronous,
 //!   O(D1+D2)-per-message protocol.
 //! * [`svrf_asyn`] — SVRF-asyn (Algorithm 5).
-//! * [`sync`] — SFW-dist (Algorithm 1), the synchronous baseline.
+//! * [`sync`] — SFW-dist (Algorithm 1), the synchronous baseline — now a
+//!   framed protocol over the same [`crate::comms`] links as the
+//!   asynchronous solvers, so it runs over TCP too.
 //! * [`sva`] — Singular Vector Averaging, the divergent naive baseline.
 //! * [`dfw_power`] — Zheng et al. 2018 distributed-power-iteration DFW,
 //!   the O(T^2 (D1+D2)) communication prior art.
-//! * [`update_log`] / [`messages`] — the rank-one log and wire types.
+//! * [`update_log`] / [`messages`] — the rank-one log and the typed wire
+//!   messages of every protocol (with their `Wire` codecs).
 //! * [`eval`] — off-thread objective evaluation for loss traces.
 //!
 //! **Entry points:** training runs start from
@@ -28,7 +31,7 @@ pub mod sync;
 pub mod update_log;
 pub mod worker;
 
-pub use messages::{LogEntry, MasterMsg, UpdateMsg};
+pub use messages::{DistDown, DistUp, LogEntry, MasterMsg, UpdateMsg};
 pub use runner::{AsynOptions, RunResult};
 pub use svrf_asyn::SvrfAsynOptions;
 pub use sync::DistOptions;

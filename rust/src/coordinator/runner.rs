@@ -14,12 +14,11 @@
 //!     .unwrap();
 //! ```
 //!
-//! (The 0.2 `run_asyn_local`/`run_asyn_tcp` deprecated shims are gone;
-//! callers holding an [`AsynOptions`] + engine closure go through
-//! `session::harness::run_asyn` via a `TrainSpec` now.)
+//! (Run-scale knobs — worker count, transport, injected link latency —
+//! are not protocol options: they live in the harness's
+//! `TransportOpts`, built from the spec.)
 
 use std::sync::Arc;
-use std::time::Duration;
 
 use crate::algo::schedule::BatchSchedule;
 use crate::coordinator::worker::Straggler;
@@ -29,13 +28,10 @@ use crate::metrics::{Counters, LossTrace};
 pub struct AsynOptions {
     pub iterations: u64,
     pub tau: u64,
-    pub workers: usize,
     pub batch: BatchSchedule,
     pub eval_every: u64,
     pub seed: u64,
     pub straggler: Option<Straggler>,
-    /// Injected one-way link latency for the local transport.
-    pub link_latency: Option<Duration>,
 }
 
 impl Default for AsynOptions {
@@ -43,12 +39,10 @@ impl Default for AsynOptions {
         AsynOptions {
             iterations: 300,
             tau: 8,
-            workers: 4,
             batch: BatchSchedule::sfw_asyn(0.5, 8, 10_000),
             eval_every: 10,
             seed: 42,
             straggler: None,
-            link_latency: None,
         }
     }
 }
@@ -66,7 +60,7 @@ mod tests {
     use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
     use crate::linalg::nuclear_norm;
     use crate::objective::{MatrixSensing, Objective};
-    use crate::session::{harness, Transport};
+    use crate::session::harness::{self, TransportOpts};
     use crate::util::rng::Rng;
 
     fn obj(seed: u64) -> Arc<dyn Objective> {
@@ -81,15 +75,13 @@ mod tests {
         let opts = AsynOptions {
             iterations: 150,
             tau: 8,
-            workers: 4,
             batch: BatchSchedule::sfw_asyn(2.0, 8, 1_024),
             eval_every: 15,
             seed: 96,
             straggler: None,
-            link_latency: None,
         };
         let o2 = obj.clone();
-        let r = harness::run_asyn(obj, &opts, Transport::Local, move |w| {
+        let r = harness::run_asyn(obj, &opts, TransportOpts::local(4), move |w| {
             Box::new(NativeEngine::new(o2.clone(), 60, 97 + w as u64))
         });
         let pts = r.trace.points();
@@ -116,15 +108,13 @@ mod tests {
         let opts = AsynOptions {
             iterations: 60,
             tau: 0,
-            workers: 4,
             batch: BatchSchedule::Constant(32),
             eval_every: 30,
             seed: 99,
             straggler: None,
-            link_latency: None,
         };
         let o2 = obj.clone();
-        let r = harness::run_asyn(obj, &opts, Transport::Local, move |w| {
+        let r = harness::run_asyn(obj, &opts, TransportOpts::local(4), move |w| {
             Box::new(NativeEngine::new(o2.clone(), 30, 100 + w as u64))
         });
         let s = r.counters.snapshot();

@@ -21,19 +21,18 @@ use std::sync::Arc;
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::{eta, svrf_epoch_len, BatchSchedule};
 use crate::algo::sfw::init_rank_one;
+use crate::comms::{MasterLink, WorkerLink};
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::messages::{MasterMsg, UpdateMsg};
 use crate::coordinator::update_log::{replay_after, UpdateLog};
 use crate::linalg::Mat;
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
-use crate::transport::{MasterLink, WorkerLink};
 use crate::util::rng::Rng;
 
 pub struct SvrfAsynOptions {
     pub epochs: u32,
     pub tau: u64,
-    pub workers: usize,
     pub batch: BatchSchedule,
     pub eval_every: u64,
     pub seed: u64,
@@ -44,7 +43,6 @@ impl Default for SvrfAsynOptions {
         SvrfAsynOptions {
             epochs: 4,
             tau: 8,
-            workers: 4,
             batch: BatchSchedule::svrf_asyn(8, 4_096),
             eval_every: 10,
             seed: 0,
@@ -53,7 +51,7 @@ impl Default for SvrfAsynOptions {
 }
 
 /// Master side of Algorithm 5.
-pub(crate) fn run_svrf_master<L: MasterLink>(
+pub(crate) fn run_svrf_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
     link: &mut L,
     obj: &Arc<dyn Objective>,
     opts: &SvrfAsynOptions,
@@ -83,7 +81,20 @@ pub(crate) fn run_svrf_master<L: MasterLink>(
         while log.t_m() - epoch_start < n_t {
             let Some(upd) = link.recv() else { break 'outer };
             let w = upd.worker_id as usize;
+            if w >= w_count {
+                eprintln!("svrf-asyn: ignoring update with bad worker id {w}");
+                continue;
+            }
             let t_m = log.t_m();
+            // a future sync point would wrap the staleness subtraction —
+            // reject it like a bad rank
+            if upd.t_w > t_m {
+                eprintln!(
+                    "svrf-asyn: ignoring update claiming future iterate (t_w={} > t_m={t_m})",
+                    upd.t_w
+                );
+                continue;
+            }
             // computed against an older epoch's W -> drop + boundary resync
             if last_epoch[w] < epoch || upd.t_w < epoch_start {
                 counters.add_dropped();
@@ -132,7 +143,7 @@ pub(crate) fn run_svrf_master<L: MasterLink>(
 }
 
 /// Worker side of Algorithm 5.
-pub(crate) fn run_svrf_worker<L: WorkerLink, E: StepEngine + ?Sized>(
+pub(crate) fn run_svrf_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: StepEngine + ?Sized>(
     link: &mut L,
     engine: &mut E,
     worker_id: u32,
@@ -227,13 +238,12 @@ mod tests {
         let opts = SvrfAsynOptions {
             epochs: 3,
             tau: 8,
-            workers: 3,
             batch: BatchSchedule::svrf_asyn(4, 512),
             eval_every: 10,
             seed: 141,
         };
         let o2 = obj.clone();
-        let r = harness::run_svrf_asyn(obj, &opts, move |w| {
+        let r = harness::run_svrf_asyn(obj, &opts, harness::TransportOpts::local(3), move |w| {
             Box::new(NativeEngine::new(o2.clone(), 50, 142 + w as u64))
         });
         let pts = r.trace.points();

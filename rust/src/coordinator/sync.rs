@@ -1,20 +1,27 @@
-//! SFW-dist (Algorithm 1): the synchronous distributed baseline.
+//! SFW-dist (Algorithm 1): the synchronous distributed baseline, now a
+//! framed `(DistUp, DistDown)` protocol over the generic comms links.
 //!
 //! Per iteration the master broadcasts the dense iterate X — O(D1*D2)
 //! bytes to each of W workers — each worker returns its dense partial
-//! gradient — O(D1*D2) bytes again — and the master aggregates, solves the
-//! LMO itself, and updates.  The barrier makes every iteration as slow as
-//! the slowest worker; the byte counters make the O(D1*D2) vs O(D1+D2)
-//! contrast measurable (comm_cost bench).
+//! gradient — O(D1*D2) bytes again — and the master aggregates, solves
+//! the LMO itself, and updates.  The barrier makes every iteration as
+//! slow as the slowest worker; the links' byte accounting makes the
+//! O(D1*D2) vs O(D1+D2) contrast measurable (comm_cost bench), and the
+//! same master/worker loops run over in-process channels or real TCP
+//! ([`crate::session::harness`] picks the transport).
+//!
+//! Replies are reduced in worker-rank order (not arrival order), so the
+//! float summation — and therefore the whole run — is bit-identical
+//! across transports for a fixed seed.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::{eta, BatchSchedule};
 use crate::algo::sfw::init_rank_one;
+use crate::comms::{MasterLink, WorkerLink};
 use crate::coordinator::eval::Evaluator;
-use crate::coordinator::runner::RunResult;
+use crate::coordinator::messages::{DistDown, DistUp};
 use crate::coordinator::worker::Straggler;
 use crate::linalg::Mat;
 use crate::metrics::{Counters, LossTrace};
@@ -23,126 +30,119 @@ use crate::util::rng::Rng;
 
 pub struct DistOptions {
     pub iterations: u64,
-    pub workers: usize,
     pub batch: BatchSchedule,
     pub eval_every: u64,
     pub seed: u64,
     pub straggler: Option<Straggler>,
 }
 
-enum RoundMsg {
-    /// Broadcast of the dense iterate + per-worker share m/W.
-    Compute { x: Arc<Mat>, m_share: usize },
-    Stop,
-}
-
-struct RoundReply {
-    grad_sum: Mat,
-    /// Minibatch loss telemetry (kept on the wire for parity with Alg 3;
-    /// the master reports full-objective loss via the evaluator instead).
-    #[allow(dead_code)]
-    loss_sum: f64,
-}
-
-/// Run synchronous SFW-dist; the master thread is the caller.
-/// `make_engine(w)` supplies each worker's gradient engine; worker 0's
-/// engine type is also instantiated at the master (`make_engine(usize::MAX)`)
-/// for the LMO.
-pub(crate) fn run_dist_impl<F>(
-    obj: Arc<dyn Objective>,
+/// Master side of Algorithm 1.  `master_engine` supplies the LMO (worker
+/// engines only compute gradients).
+///
+/// Liveness caveat (inherited from the synchronous barrier, same as the
+/// pre-comms thread implementation and MPI collectives): if one of
+/// several workers dies mid-run, the round blocks waiting for its reply
+/// — only the loss of ALL workers turns `recv` into a clean `None`.
+/// Worker-failure detection/timeouts are a deliberate non-goal of
+/// Algorithm 1; use the asynchronous solvers for crash tolerance.
+pub(crate) fn run_dist_master<L: MasterLink<DistUp, DistDown> + ?Sized>(
+    link: &mut L,
+    obj: &Arc<dyn Objective>,
     opts: &DistOptions,
-    mut make_engine: F,
-) -> RunResult
-where
-    F: FnMut(usize) -> Box<dyn StepEngine>,
-{
-    let counters = Arc::new(Counters::new());
-    let trace = Arc::new(LossTrace::new());
-    let evaluator = Evaluator::new(obj.clone(), trace.clone());
+    master_engine: &mut dyn StepEngine,
+    counters: &Counters,
+    trace: &LossTrace,
+    evaluator: &Evaluator,
+) -> Mat {
     let (d1, d2) = obj.dims();
-    let k_bytes = (d1 * d2 * 4) as u64;
     let theta = obj.theta();
-    let n = obj.n();
-
-    // spawn workers
-    let (up_tx, up_rx): (Sender<RoundReply>, Receiver<RoundReply>) = channel();
-    let mut down_txs = Vec::new();
-    let mut handles = Vec::new();
-    for w in 0..opts.workers {
-        let (tx, rx): (Sender<RoundMsg>, Receiver<RoundMsg>) = channel();
-        down_txs.push(tx);
-        let mut engine = make_engine(w);
-        let up = up_tx.clone();
-        let counters_w = counters.clone();
-        let straggler = opts.straggler;
-        let seed = opts.seed ^ 0x5BC ^ (w as u64) << 8;
-        handles.push(std::thread::spawn(move || {
-            let obj = engine.objective().clone();
-            let (d1, d2) = obj.dims();
-            let mut rng = Rng::new(seed);
-            let mut idx = Vec::new();
-            let mut g = Mat::zeros(d1, d2);
-            while let Ok(RoundMsg::Compute { x, m_share }) = rx.recv() {
-                rng.sample_indices(obj.n(), m_share, &mut idx);
-                let loss_sum = engine.grad_sum(&x, &idx, &mut g);
-                counters_w.add_grad_evals(m_share as u64);
-                if let Some(s) = &straggler {
-                    s.sleep(&mut rng, m_share as u64);
-                }
-                if up.send(RoundReply { grad_sum: g.clone(), loss_sum }).is_err() {
-                    return;
-                }
-            }
-        }));
-    }
-    drop(up_tx);
-
-    let mut master_engine = make_engine(usize::MAX);
+    let workers = link.workers();
     let mut x = init_rank_one(d1, d2, theta, &mut Rng::new(opts.seed));
     evaluator.submit(trace.elapsed(), 0, x.clone());
     let mut grad = Mat::zeros(d1, d2);
     for k in 1..=opts.iterations {
-        let m = opts.batch.m(k).max(opts.workers);
-        let m_share = m / opts.workers;
+        let m = opts.batch.m(k).max(workers);
+        let m_share = (m / workers) as u32;
         let xa = Arc::new(x.clone());
-        for tx in &down_txs {
-            // dense parameter broadcast: O(D1 D2) down per worker
-            counters.add_down(k_bytes);
-            let _ = tx.send(RoundMsg::Compute { x: xa.clone(), m_share });
+        for w in 0..workers {
+            // dense parameter broadcast: O(D1 D2) down per worker (one
+            // snapshot per round; the local transport shares it by Arc)
+            link.send_to(w, DistDown::Compute { k, m_share, x: xa.clone() });
         }
-        // barrier: wait for ALL workers (the straggler pays here)
+        // barrier: wait for ALL workers (the straggler pays here); slot
+        // replies by rank so the reduction order is deterministic.  An
+        // out-of-range or duplicate rank is a protocol violation by a
+        // hello-validated peer (ranks are checked at accept): abort the
+        // round loudly rather than corrupt the gradient silently or
+        // deadlock waiting for a reply that will never come.
+        let mut replies: Vec<Option<Mat>> = (0..workers).map(|_| None).collect();
+        for _ in 0..workers {
+            let up = link.recv().expect("worker died mid-round");
+            let w = up.worker_id as usize;
+            assert!(
+                w < workers && replies[w].is_none(),
+                "sfw-dist: protocol violation — reply rank {w} out of range or duplicated"
+            );
+            replies[w] = Some(up.grad);
+        }
         grad.fill(0.0);
-        for _ in 0..opts.workers {
-            let reply = up_rx.recv().expect("worker died");
-            counters.add_up(k_bytes); // dense gradient upload
-            grad.axpy(1.0, &reply.grad_sum);
+        for g in replies.into_iter().flatten() {
+            grad.axpy(1.0, &g);
         }
         let s = master_engine.lmo(&grad);
         counters.add_lmo();
         counters.add_iteration();
         x.fw_rank_one_update(eta(k), -theta, &s.u, &s.v);
-        let _ = n;
         if k % opts.eval_every == 0 || k == opts.iterations {
             evaluator.submit(trace.elapsed(), k, x.clone());
         }
     }
-    for tx in &down_txs {
-        let _ = tx.send(RoundMsg::Stop);
+    for w in 0..workers {
+        link.send_to(w, DistDown::Stop);
     }
-    for h in handles {
-        let _ = h.join();
+    x
+}
+
+/// Worker side of Algorithm 1: gradient rounds until Stop.
+pub(crate) fn run_dist_worker<L: WorkerLink<DistUp, DistDown> + ?Sized, E: StepEngine + ?Sized>(
+    link: &mut L,
+    engine: &mut E,
+    worker_id: u32,
+    seed: u64,
+    straggler: Option<Straggler>,
+    counters: &Counters,
+) {
+    let obj = engine.objective().clone();
+    let (d1, d2) = obj.dims();
+    let n = obj.n();
+    let mut rng = Rng::new(seed ^ 0x5BC ^ (worker_id as u64) << 8);
+    let mut idx: Vec<usize> = Vec::new();
+    let mut g = Mat::zeros(d1, d2);
+    loop {
+        match link.recv() {
+            Some(DistDown::Compute { m_share, x, .. }) => {
+                rng.sample_indices(n, m_share as usize, &mut idx);
+                let loss_sum = engine.grad_sum(&x, &idx, &mut g);
+                counters.add_grad_evals(idx.len() as u64);
+                if let Some(s) = &straggler {
+                    s.sleep(&mut rng, idx.len() as u64);
+                }
+                link.send(DistUp { worker_id, loss_sum, grad: g.clone() });
+            }
+            Some(DistDown::Stop) | None => return,
+        }
     }
-    evaluator.finish();
-    RunResult { x, counters, trace }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::algo::engine::NativeEngine;
+    use crate::comms::Wire;
     use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
     use crate::linalg::nuclear_norm;
     use crate::objective::MatrixSensing;
+    use crate::session::harness;
 
     #[test]
     fn dist_converges_and_counts_dense_traffic() {
@@ -152,14 +152,13 @@ mod tests {
             Arc::new(MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0));
         let opts = DistOptions {
             iterations: 100,
-            workers: 4,
             batch: BatchSchedule::sfw(2.0, 1_024),
             eval_every: 20,
             seed: 111,
             straggler: None,
         };
         let o2 = obj.clone();
-        let r = run_dist_impl(obj, &opts, move |w| {
+        let r = harness::run_dist(obj, &opts, harness::TransportOpts::local(4), move |w| {
             Box::new(NativeEngine::new(o2.clone(), 60, 112u64.wrapping_add(w as u64)))
         });
         let pts = r.trace.points();
@@ -168,8 +167,16 @@ mod tests {
         let s = r.counters.snapshot();
         assert_eq!(s.iterations, 100);
         assert_eq!(s.lmo_calls, 100); // master-side only
-        // dense O(D1*D2) traffic each way, every round, every worker
-        assert_eq!(s.bytes_down, 100 * 4 * (10 * 10 * 4));
-        assert_eq!(s.bytes_up, 100 * 4 * (10 * 10 * 4));
+        // dense O(D1*D2) traffic each way, every round, every worker —
+        // expected totals derived from the real frame sizes.
+        let per_down =
+            DistDown::Compute { k: 1, m_share: 1, x: Arc::new(Mat::zeros(10, 10)) }.wire_bytes();
+        let per_up =
+            DistUp { worker_id: 0, loss_sum: 0.0, grad: Mat::zeros(10, 10) }.wire_bytes();
+        assert_eq!(s.bytes_down, 100 * 4 * per_down + 4 * DistDown::Stop.wire_bytes());
+        assert_eq!(s.bytes_up, 100 * 4 * per_up);
+        assert_eq!(s.msgs_up, 100 * 4);
+        assert_eq!(s.msgs_down, 100 * 4 + 4);
+        assert!(per_down >= 4 * 10 * 10 && per_up >= 4 * 10 * 10);
     }
 }

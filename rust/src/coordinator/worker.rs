@@ -12,10 +12,10 @@ use std::time::Duration;
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::BatchSchedule;
 use crate::algo::sfw::init_rank_one;
+use crate::comms::WorkerLink;
 use crate::coordinator::messages::{MasterMsg, UpdateMsg};
 use crate::coordinator::update_log::replay;
 use crate::metrics::Counters;
-use crate::transport::WorkerLink;
 use crate::util::rng::Rng;
 
 /// Injected straggler model (Assumption 3): a task of `units` work whose
@@ -51,7 +51,7 @@ pub struct WorkerOptions {
 }
 
 /// Run the worker loop until the master says Stop (or disconnects).
-pub fn run_worker<L: WorkerLink, E: StepEngine + ?Sized>(
+pub fn run_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: StepEngine + ?Sized>(
     link: &mut L,
     engine: &mut E,
     opts: &WorkerOptions,

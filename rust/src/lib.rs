@@ -38,6 +38,10 @@
 //!   update vectors (O(D1+D2) per message) with a bounded-staleness delay
 //!   gate, plus every baseline the paper compares against and the
 //!   Appendix-D queuing-model simulator ([`sim`]).
+//! * **[`comms`]** — the protocol-generic comms layer: `Wire` framed
+//!   codecs with derived byte accounting, and the local-channel / TCP
+//!   link endpoints every coordinator runs over (in-process or
+//!   multi-process via `sfw worker`).
 //! * **[`runtime`]** — PJRT CPU client executing AOT artifacts built once
 //!   from `python/compile` (L2 JAX graphs calling L1 Pallas kernels);
 //!   Python is never on the request path.
@@ -48,6 +52,7 @@
 
 pub mod algo;
 pub mod benchkit;
+pub mod comms;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -59,5 +64,4 @@ pub mod runtime;
 pub mod session;
 pub mod sim;
 pub mod sweep;
-pub mod transport;
 pub mod util;

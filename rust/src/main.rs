@@ -6,6 +6,12 @@
 //!             so EVERY registered algorithm x task x engine x transport
 //!             combination is reachable from here (see
 //!             `sfw::session::registry()` for the algorithm list).
+//!             `--transport tcp --tcp-bind HOST:PORT --tcp-await true`
+//!             makes the master await external worker processes.
+//!   worker    join a remote master as one worker rank over TCP:
+//!             `sfw worker --connect HOST:PORT --rank R` plus the same
+//!             task/seed/batch flags the master was started with (the
+//!             dataset and schedules are regenerated locally from them).
 //!   sweep     expand a `[sweep]` axis grid over TrainSpecs, run every
 //!             cell, print the summary table and write
 //!             bench_out/sweep_<name>.{json,csv} (`--smoke` runs the
@@ -17,6 +23,9 @@
 //!   sfw train --task matrix_sensing --algo sfw-asyn --workers 8 --tau 8
 //!   sfw train --task pnn --algo sfw-dist --engine pjrt --iterations 100
 //!   sfw train --algo sfw-asyn --transport tcp --workers 4
+//!   sfw train --algo svrf-asyn --transport tcp --workers 2 \
+//!             --tcp-bind 127.0.0.1:7070 --tcp-await true --seed 42 --batch 64
+//!   sfw worker --connect 127.0.0.1:7070 --rank 0 --algo svrf-asyn --seed 42 --batch 64
 //!   sfw train --config run.ini --train.workers 16
 //!   sfw sweep --smoke
 //!   sfw sweep --sweep.algos sfw-dist,sfw-asyn --sweep.workers 1,3,7,15 \
@@ -39,12 +48,13 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse_env(2);
     match cmd {
         "train" => cmd_train(&args),
+        "worker" => cmd_worker(&args),
         "sweep" => cmd_sweep(&args),
         "simulate" => cmd_simulate(&args),
         "info" => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: sfw <train|sweep|simulate|info> [--flags]\n\
+                "usage: sfw <train|worker|sweep|simulate|info> [--flags]\n\
                  see rust/src/main.rs header for examples"
             );
             Ok(())
@@ -89,6 +99,31 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             registry().names().join(", ")
         ),
     }
+}
+
+/// `sfw worker`: the worker side of a multi-process TCP run.  Builds the
+/// same spec the master was configured with (task/seed/batch must match —
+/// the dataset is regenerated locally, never shipped), connects to
+/// `--connect` as `--rank`, and serves gradient/LMO work until the
+/// master sends Stop.
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let connect = args
+        .get_opt("connect")
+        .ok_or_else(|| anyhow::anyhow!("sfw worker: --connect HOST:PORT is required"))?;
+    let rank: u32 = args
+        .get_opt("rank")
+        .ok_or_else(|| anyhow::anyhow!("sfw worker: --rank <R> is required"))?
+        .parse()
+        .map_err(|_| anyhow::anyhow!("sfw worker: --rank must be a non-negative integer"))?;
+    let cfg = TrainConfig::load(args)?;
+    let mut spec = TrainSpec::from_config(&cfg)?;
+    spec.transport = sfw::session::Transport::Tcp;
+    spec.tcp_bind = None; // bind options belong to the master
+    spec.tcp_await = false;
+    println!("worker rank {rank} -> {connect} ({})", spec.echo());
+    spec.run_worker(&connect, rank)?;
+    println!("worker rank {rank}: master finished; exiting");
+    Ok(())
 }
 
 /// `sfw sweep`: expand + run a `[sweep]` grid and emit the artifacts.

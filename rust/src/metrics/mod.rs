@@ -2,6 +2,11 @@
 //! (stochastic gradient evaluations, linear-optimization calls — Table 1 —
 //! and communication bytes — §3 "Communication Cost of SFW-asyn"), plus a
 //! time-stamped loss trace used to regenerate Figures 4–7.
+//!
+//! Byte/message counters are charged centrally by the
+//! [`crate::comms`] link endpoints (never at protocol call-sites), with
+//! sizes derived from the actual frame encoding, so totals are identical
+//! across the local and TCP transports for identical traffic.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;

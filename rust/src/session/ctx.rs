@@ -5,6 +5,7 @@
 //! happens here, before the solver starts; solvers themselves are
 //! infallible.
 
+use std::net::TcpListener;
 use std::sync::{Arc, Mutex};
 
 use crate::algo::engine::{NativeEngine, StepEngine};
@@ -25,6 +26,11 @@ pub struct RunCtx {
     pub obj: Arc<dyn Objective>,
     pub spec: TrainSpec,
     engines: Mutex<EngineFactory>,
+    /// TCP master listener, pre-bound by `TrainSpec::run` so bind
+    /// failures (port in use, privileged port) surface as
+    /// `SessionError::Comms` before the solver starts.  Taken once by
+    /// the harness.
+    tcp_listener: Mutex<Option<TcpListener>>,
 }
 
 impl RunCtx {
@@ -34,7 +40,20 @@ impl RunCtx {
     pub fn new(spec: &TrainSpec) -> Result<RunCtx, SessionError> {
         let (obj, workload) = build_task(spec);
         let engines = build_engine_factory(spec, obj.clone(), workload)?;
-        Ok(RunCtx { obj, spec: spec.clone(), engines: Mutex::new(engines) })
+        Ok(RunCtx {
+            obj,
+            spec: spec.clone(),
+            engines: Mutex::new(engines),
+            tcp_listener: Mutex::new(None),
+        })
+    }
+
+    pub(crate) fn set_tcp_listener(&self, listener: TcpListener) {
+        *self.tcp_listener.lock().unwrap() = Some(listener);
+    }
+
+    pub(crate) fn take_tcp_listener(&self) -> Option<TcpListener> {
+        self.tcp_listener.lock().unwrap().take()
     }
 
     /// Build worker `w`'s compute engine (native math or PJRT artifacts).

@@ -1,47 +1,173 @@
-//! Transport harnesses: wire master + workers over the chosen transport
-//! and run one training job end to end (threads for workers, caller
-//! thread for the master — mirroring one MPI rank per process).
+//! Transport harness: wire a protocol master + workers over the chosen
+//! transport and run one training job end to end.
 //!
-//! This is the wiring that used to be duplicated across the 0.2
-//! `coordinator::runner::{run_asyn_local, run_asyn_tcp}` and
-//! `coordinator::svrf_asyn::run_svrf_asyn_local` entry points (removed);
-//! the transport is a parameter here and solvers are the only callers.
+//! [`run_over`] is the single wiring point for every `(Up, Down)`
+//! protocol: it builds the [`comms`] endpoints (in-process channels or
+//! TCP), runs the master on the caller thread and the workers on scoped
+//! threads — or, with [`TransportOpts::await_external`], awaits external
+//! `sfw worker` processes instead of spawning threads (mirroring one MPI
+//! rank per process).  The protocol-specific entry points
+//! ([`run_asyn`], [`run_svrf_asyn`], [`run_dist`]) are thin closures
+//! over their coordinator loops.
+//!
+//! TCP runs bind the listener **once** and hand it to the accept loop
+//! ([`comms::tcp_master_on`]), so an ephemeral-port address is known
+//! before any worker connects — no drop-and-rebind race.
+//!
+//! [`comms`]: crate::comms
 
+use std::net::TcpListener;
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::algo::engine::StepEngine;
+use crate::comms::{local_links, tcp_master_on, tcp_worker, MasterLink, Wire, WorkerLink};
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::master::{run_master, MasterOptions};
+use crate::coordinator::messages::{DistDown, DistUp, MasterMsg, UpdateMsg};
 use crate::coordinator::runner::{AsynOptions, RunResult};
 use crate::coordinator::svrf_asyn::{run_svrf_master, run_svrf_worker, SvrfAsynOptions};
+use crate::coordinator::sync::{run_dist_master, run_dist_worker, DistOptions};
 use crate::coordinator::worker::{run_worker, WorkerOptions};
+use crate::linalg::Mat;
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
-use crate::session::Transport;
-use crate::transport::local::local_links;
+use crate::session::spec::TrainSpec;
+use crate::session::{RunCtx, SessionError, Transport};
+
+/// How (and at what scale) to wire master and workers — everything about
+/// a run that is *not* protocol state.
+pub(crate) struct TransportOpts {
+    pub transport: Transport,
+    pub workers: usize,
+    /// TCP bind address (`None` = loopback ephemeral).
+    pub bind: Option<String>,
+    /// TCP only: spawn no worker threads; await `workers` external
+    /// `sfw worker` processes instead.
+    pub await_external: bool,
+    /// Injected one-way link latency (local transport only).
+    pub link_latency: Option<Duration>,
+    /// Observer for the bound TCP address (multi-process orchestration).
+    pub bound_notify: Option<crate::session::BoundNotify>,
+    /// Pre-bound TCP master listener (from `TrainSpec::run`'s pre-flight
+    /// bind); `None` makes the harness bind `bind` itself.
+    pub listener: Option<TcpListener>,
+}
+
+impl TransportOpts {
+    pub(crate) fn from_ctx(ctx: &RunCtx) -> TransportOpts {
+        let spec: &TrainSpec = &ctx.spec;
+        TransportOpts {
+            transport: spec.transport,
+            workers: spec.workers,
+            bind: spec.tcp_bind.clone(),
+            await_external: spec.tcp_await,
+            link_latency: spec.link_latency,
+            bound_notify: spec.bound_notify.clone(),
+            listener: ctx.take_tcp_listener(),
+        }
+    }
+
+    /// In-process transport at `workers` scale (unit tests).
+    #[cfg(test)]
+    pub(crate) fn local(workers: usize) -> TransportOpts {
+        TransportOpts {
+            transport: Transport::Local,
+            workers,
+            bind: None,
+            await_external: false,
+            link_latency: None,
+            bound_notify: None,
+            listener: None,
+        }
+    }
+}
+
+/// One worker's job, handed its protocol endpoint by the harness.
+pub(crate) type WorkerJob<Up, Down> = Box<dyn FnOnce(Box<dyn WorkerLink<Up, Down>>) + Send>;
+
+/// Run `master` against `t.workers` workers over the selected transport.
+/// The master runs on the caller thread; in-process workers run on
+/// scoped threads (joined before returning).
+pub(crate) fn run_over<Up, Down, M, F>(
+    mut t: TransportOpts,
+    counters: &Arc<Counters>,
+    master: M,
+    mut make_worker: F,
+) -> Mat
+where
+    Up: Wire,
+    Down: Wire,
+    M: FnOnce(Box<dyn MasterLink<Up, Down>>) -> Mat,
+    F: FnMut(usize) -> WorkerJob<Up, Down>,
+{
+    match t.transport {
+        Transport::Local => {
+            let (ml, wls) = local_links::<Up, Down>(t.workers, counters.clone(), t.link_latency);
+            std::thread::scope(|s| {
+                for (w, wl) in wls.into_iter().enumerate() {
+                    let job = make_worker(w);
+                    s.spawn(move || job(Box::new(wl)));
+                }
+                master(Box::new(ml))
+            })
+        }
+        Transport::Tcp => {
+            // Normally pre-bound by `TrainSpec::run` (bind errors surface
+            // there as SessionError); the fallback serves direct harness
+            // callers such as unit tests.
+            let listener = t.listener.take().unwrap_or_else(|| {
+                let bind = t.bind.as_deref().unwrap_or("127.0.0.1:0");
+                TcpListener::bind(bind)
+                    .unwrap_or_else(|e| panic!("comms: cannot bind {bind}: {e}"))
+            });
+            let addr = listener.local_addr().expect("listener address");
+            if let Some(notify) = &t.bound_notify {
+                notify(addr);
+            }
+            std::thread::scope(|s| {
+                if t.await_external {
+                    println!(
+                        "sfw: master listening on {addr}; awaiting {} external worker(s) \
+                         (`sfw worker --connect {addr} --rank <r>` with a matching spec)",
+                        t.workers
+                    );
+                } else {
+                    for w in 0..t.workers {
+                        let job = make_worker(w);
+                        s.spawn(move || {
+                            let wl = tcp_worker::<Up, Down>(&addr.to_string(), w as u32)
+                                .unwrap_or_else(|e| panic!("worker {w}: connect {addr}: {e}"));
+                            job(Box::new(wl));
+                        });
+                    }
+                }
+                let ml = tcp_master_on::<Up, Down>(listener, t.workers, counters.clone())
+                    .unwrap_or_else(|e| panic!("comms: master setup failed: {e}"));
+                master(Box::new(ml))
+            })
+        }
+    }
+}
+
+/// Connect an external worker process to a remote master (used by the
+/// solvers' `run_worker` entry points behind `sfw worker`).  Retries
+/// briefly so workers may be launched before the master binds.
+pub(crate) fn connect_worker<Up: Wire, Down: Wire>(
+    addr: &str,
+    rank: u32,
+) -> Result<crate::comms::TcpWorker<Up, Down>, SessionError> {
+    crate::comms::connect_retry(addr, rank, Duration::from_secs(30)).map_err(|e| {
+        SessionError::Comms(format!("worker {rank}: cannot reach master at {addr}: {e}"))
+    })
+}
 
 /// Run SFW-asyn (Algorithm 3) over the requested transport.
 /// `make_engine(w)` builds worker w's compute engine.
 pub(crate) fn run_asyn<F>(
     obj: Arc<dyn Objective>,
     opts: &AsynOptions,
-    transport: Transport,
-    make_engine: F,
-) -> RunResult
-where
-    F: FnMut(usize) -> Box<dyn StepEngine>,
-{
-    match transport {
-        Transport::Local => run_asyn_over_local(obj, opts, make_engine),
-        Transport::Tcp => run_asyn_over_tcp(obj, opts, make_engine),
-    }
-}
-
-/// In-process mpsc transport with byte-accurate accounting.
-fn run_asyn_over_local<F>(
-    obj: Arc<dyn Objective>,
-    opts: &AsynOptions,
+    t: TransportOpts,
     mut make_engine: F,
 ) -> RunResult
 where
@@ -49,127 +175,43 @@ where
 {
     let counters = Arc::new(Counters::new());
     let trace = Arc::new(LossTrace::new());
-    let (mut mlink, wlinks) = local_links(opts.workers, counters.clone(), opts.link_latency);
     let evaluator = Evaluator::new(obj.clone(), trace.clone());
-
-    let mut handles = Vec::new();
-    for (w, mut wlink) in wlinks.into_iter().enumerate() {
-        let mut engine = make_engine(w);
-        let counters = counters.clone();
-        let wopts = WorkerOptions {
-            worker_id: w as u32,
-            batch: opts.batch.clone(),
-            seed: opts.seed,
-            straggler: opts.straggler,
-        };
-        handles.push(std::thread::spawn(move || {
-            run_worker(&mut wlink, engine.as_mut(), &wopts, &counters);
-        }));
-    }
-
     let mopts = MasterOptions {
         iterations: opts.iterations,
         tau: opts.tau,
         eval_every: opts.eval_every,
         seed: opts.seed,
     };
-    let x = run_master(&mut mlink, &obj, &mopts, &counters, &trace, &evaluator);
-    for h in handles {
-        let _ = h.join();
-    }
+    let x = run_over(
+        t,
+        &counters,
+        |mut ml: Box<dyn MasterLink<UpdateMsg, MasterMsg>>| {
+            run_master(&mut *ml, &obj, &mopts, &counters, &trace, &evaluator)
+        },
+        |w| {
+            let mut engine = make_engine(w);
+            let counters = counters.clone();
+            let wopts = WorkerOptions {
+                worker_id: w as u32,
+                batch: opts.batch.clone(),
+                seed: opts.seed,
+                straggler: opts.straggler,
+            };
+            let job: WorkerJob<UpdateMsg, MasterMsg> = Box::new(move |mut wl| {
+                run_worker(&mut *wl, engine.as_mut(), &wopts, &counters)
+            });
+            job
+        },
+    );
     evaluator.finish();
     RunResult { x, counters, trace }
 }
 
-/// Real localhost TCP sockets (same protocol, true serialization + kernel
-/// queues).  Master binds an ephemeral port.
-fn run_asyn_over_tcp<F>(
-    obj: Arc<dyn Objective>,
-    opts: &AsynOptions,
-    mut make_engine: F,
-) -> RunResult
-where
-    F: FnMut(usize) -> Box<dyn StepEngine>,
-{
-    use crate::transport::tcp::{tcp_master, tcp_worker};
-    let counters = Arc::new(Counters::new());
-    let trace = Arc::new(LossTrace::new());
-    let evaluator = Evaluator::new(obj.clone(), trace.clone());
-
-    // Bind first on an ephemeral port, then hand the resolved address to
-    // the workers.
-    let workers = opts.workers;
-    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
-    let counters_m = counters.clone();
-    let master_thread = {
-        let obj = obj.clone();
-        let trace = trace.clone();
-        let mopts = MasterOptions {
-            iterations: opts.iterations,
-            tau: opts.tau,
-            eval_every: opts.eval_every,
-            seed: opts.seed,
-        };
-        std::thread::spawn(move || {
-            // accept() inside tcp_master blocks until all workers connect;
-            // publish the address before constructing it.
-            let listener_addr = "127.0.0.1:0";
-            let (mut mlink, addr) = {
-                // Bind manually to learn the port before accepting.
-                let l = std::net::TcpListener::bind(listener_addr).unwrap();
-                let addr = l.local_addr().unwrap();
-                drop(l); // tcp_master re-binds; tiny race acceptable on loopback
-                addr_tx.send(addr).unwrap();
-                let (m, a) = tcp_master(&addr.to_string(), workers, counters_m.clone()).unwrap();
-                (m, a)
-            };
-            let _ = addr;
-            let x = run_master(&mut mlink, &obj, &mopts, &counters_m, &trace, &evaluator);
-            evaluator.finish();
-            x
-        })
-    };
-    let addr = addr_rx.recv().unwrap();
-    // workers connect (retry briefly while master rebinds)
-    let mut handles = Vec::new();
-    for w in 0..opts.workers {
-        let mut engine = make_engine(w);
-        let counters = counters.clone();
-        let wopts = WorkerOptions {
-            worker_id: w as u32,
-            batch: opts.batch.clone(),
-            seed: opts.seed,
-            straggler: opts.straggler,
-        };
-        handles.push(std::thread::spawn(move || {
-            let mut link = {
-                let mut tries = 0;
-                loop {
-                    match tcp_worker(&addr.to_string(), w as u32, counters.clone()) {
-                        Ok(l) => break l,
-                        Err(e) if tries < 50 => {
-                            tries += 1;
-                            std::thread::sleep(Duration::from_millis(20));
-                            let _ = e;
-                        }
-                        Err(e) => panic!("worker {w} cannot connect: {e}"),
-                    }
-                }
-            };
-            run_worker(&mut link, engine.as_mut(), &wopts, &counters);
-        }));
-    }
-    let x = master_thread.join().unwrap();
-    for h in handles {
-        let _ = h.join();
-    }
-    RunResult { x, counters, trace }
-}
-
-/// Run SVRF-asyn (Algorithm 5) over the in-process transport.
+/// Run SVRF-asyn (Algorithm 5) over the requested transport.
 pub(crate) fn run_svrf_asyn<F>(
     obj: Arc<dyn Objective>,
     opts: &SvrfAsynOptions,
+    t: TransportOpts,
     mut make_engine: F,
 ) -> RunResult
 where
@@ -177,23 +219,69 @@ where
 {
     let counters = Arc::new(Counters::new());
     let trace = Arc::new(LossTrace::new());
-    let (mut mlink, wlinks) = local_links(opts.workers, counters.clone(), None);
     let evaluator = Evaluator::new(obj.clone(), trace.clone());
+    let x = run_over(
+        t,
+        &counters,
+        |mut ml: Box<dyn MasterLink<UpdateMsg, MasterMsg>>| {
+            run_svrf_master(&mut *ml, &obj, opts, &counters, &trace, &evaluator)
+        },
+        |w| {
+            let mut engine = make_engine(w);
+            let counters = counters.clone();
+            let batch = opts.batch.clone();
+            let seed = opts.seed;
+            let job: WorkerJob<UpdateMsg, MasterMsg> = Box::new(move |mut wl| {
+                run_svrf_worker(&mut *wl, engine.as_mut(), w as u32, &batch, seed, &counters)
+            });
+            job
+        },
+    );
+    evaluator.finish();
+    RunResult { x, counters, trace }
+}
 
-    let mut handles = Vec::new();
-    for (w, mut wlink) in wlinks.into_iter().enumerate() {
-        let mut engine = make_engine(w);
-        let counters = counters.clone();
-        let batch = opts.batch.clone();
-        let seed = opts.seed;
-        handles.push(std::thread::spawn(move || {
-            run_svrf_worker(&mut wlink, engine.as_mut(), w as u32, &batch, seed, &counters);
-        }));
-    }
-    let x = run_svrf_master(&mut mlink, &obj, opts, &counters, &trace, &evaluator);
-    for h in handles {
-        let _ = h.join();
-    }
+/// Run SFW-dist (Algorithm 1) over the requested transport.
+pub(crate) fn run_dist<F>(
+    obj: Arc<dyn Objective>,
+    opts: &DistOptions,
+    t: TransportOpts,
+    mut make_engine: F,
+) -> RunResult
+where
+    F: FnMut(usize) -> Box<dyn StepEngine>,
+{
+    let counters = Arc::new(Counters::new());
+    let trace = Arc::new(LossTrace::new());
+    let evaluator = Evaluator::new(obj.clone(), trace.clone());
+    // Worker 0's engine type is also instantiated at the master for the
+    // LMO (the historical `make_engine(usize::MAX)` convention).
+    let mut master_engine = make_engine(usize::MAX);
+    let x = run_over(
+        t,
+        &counters,
+        |mut ml: Box<dyn MasterLink<DistUp, DistDown>>| {
+            run_dist_master(
+                &mut *ml,
+                &obj,
+                opts,
+                master_engine.as_mut(),
+                &counters,
+                &trace,
+                &evaluator,
+            )
+        },
+        |w| {
+            let mut engine = make_engine(w);
+            let counters = counters.clone();
+            let seed = opts.seed;
+            let straggler = opts.straggler;
+            let job: WorkerJob<DistUp, DistDown> = Box::new(move |mut wl| {
+                run_dist_worker(&mut *wl, engine.as_mut(), w as u32, seed, straggler, &counters)
+            });
+            job
+        },
+    );
     evaluator.finish();
     RunResult { x, counters, trace }
 }

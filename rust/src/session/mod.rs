@@ -30,6 +30,24 @@
 //! Adding a new algorithm, transport or workload is a registry entry plus
 //! a `Solver` impl — not a seventh copy of the counters/trace/engine
 //! plumbing.  Grids over specs are first-class too: see [`crate::sweep`].
+//!
+//! # Multi-process training (TCP)
+//!
+//! Every solver that lists `Transport::Tcp` in its
+//! `supported_transports()` (sfw-asyn, svrf-asyn, sfw-dist) also runs
+//! with workers in **separate processes**: the master binds with
+//! `tcp_bind`/`tcp_await` and each rank joins via `sfw worker`:
+//!
+//! ```text
+//! sfw train  --algo sfw-asyn --transport tcp --workers 2 \
+//!            --tcp-bind 127.0.0.1:7070 --tcp-await true --seed 42 --batch 64
+//! sfw worker --connect 127.0.0.1:7070 --rank 0 --algo sfw-asyn --seed 42 --batch 64
+//! sfw worker --connect 127.0.0.1:7070 --rank 1 --algo sfw-asyn --seed 42 --batch 64
+//! ```
+//!
+//! Workers regenerate the dataset and schedules from the spec (task +
+//! seed + batch/tau must match the master); only protocol messages cross
+//! the wire — see [`crate::comms`] for the framing and byte accounting.
 
 pub mod ctx;
 pub(crate) mod harness;
@@ -52,13 +70,20 @@ use crate::linalg::Mat;
 use crate::metrics::{CounterSnapshot, Counters, LossTrace, TracePoint};
 use crate::runtime::Workload;
 
-/// Wire substrate between master and workers.
+/// Callback observing the bound TCP master address of a run (fires after
+/// bind, before workers connect) — multi-process orchestration and tests.
+pub type BoundNotify = Arc<dyn Fn(std::net::SocketAddr) + Send + Sync>;
+
+/// Wire substrate between master and workers (see [`crate::comms`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Transport {
     /// In-process mpsc channels with byte-accurate accounting (default).
     Local,
-    /// Real localhost TCP sockets: true serialization + kernel queues.
-    /// Currently implemented for the `sfw-asyn` protocol.
+    /// Real TCP sockets: true serialization + kernel queues.  Supported
+    /// by every solver with a framed protocol — `sfw-asyn`, `svrf-asyn`
+    /// and `sfw-dist` (see `registry().supporting(Transport::Tcp)`) —
+    /// and, with [`TrainSpec`]'s `tcp_bind`/`tcp_await` options plus the
+    /// `sfw worker` subcommand, across processes and hosts.
     Tcp,
 }
 
@@ -121,12 +146,14 @@ pub enum SessionError {
     UnknownEngine(String),
     #[error("unknown transport '{0}' (valid: local | tcp)")]
     UnknownTransport(String),
-    #[error("algorithm '{algo}' does not support transport {transport:?}")]
-    UnsupportedTransport { algo: String, transport: Transport },
+    #[error("algorithm '{algo}' does not support transport {transport:?} (supported by: {supported})")]
+    UnsupportedTransport { algo: String, transport: Transport, supported: String },
     #[error("invalid spec: {0}")]
     InvalidSpec(String),
     #[error("engine setup: {0}")]
     Engine(String),
+    #[error("comms: {0}")]
+    Comms(String),
     #[error(transparent)]
     Config(#[from] crate::config::ConfigError),
 }

@@ -1,27 +1,41 @@
 //! The [`Solver`] trait and the central algorithm registry.
 //!
 //! Every algorithm variant is one registry entry; `sfw train --algo X`,
-//! the benches, the examples and the test matrix all dispatch through
-//! [`registry`].  Adding an algorithm = implement [`Solver`], push it in
-//! `build_registry`, done.
+//! `sfw worker`, the benches, the examples and the test matrix all
+//! dispatch through [`registry`].  Adding an algorithm = implement
+//! [`Solver`], push it in `build_registry`, done.
 
 use std::sync::OnceLock;
 
 use crate::session::solvers;
-use crate::session::{Report, RunCtx};
+use crate::session::{Report, RunCtx, SessionError, Transport};
 
 /// One training algorithm behind the unified session API.
 pub trait Solver: Send + Sync {
     /// Registry name (`sfw-asyn`, `sfw-dist`, ...).
     fn name(&self) -> &'static str;
-    /// Whether the solver's protocol runs over real TCP sockets.
-    /// Default: local in-process transport only.
-    fn supports_tcp(&self) -> bool {
-        false
+
+    /// Transports this solver's protocol runs over.  Every solver runs
+    /// in-process; solvers whose protocol is framed for the wire
+    /// (see [`crate::comms::Wire`]) also list [`Transport::Tcp`].
+    fn supported_transports(&self) -> &'static [Transport] {
+        &[Transport::Local]
     }
+
     /// Run the algorithm against fully-resolved wiring.  Infallible:
     /// everything that can fail happens in `RunCtx::new`.
     fn run(&self, ctx: &RunCtx) -> Report;
+
+    /// Run this solver's *worker side* against a remote master at
+    /// `connect` as rank `rank` (the `sfw worker` subcommand).  Only
+    /// meaningful for solvers that support [`Transport::Tcp`].
+    fn run_worker(&self, ctx: &RunCtx, connect: &str, rank: u32) -> Result<(), SessionError> {
+        let _ = (ctx, connect, rank);
+        Err(SessionError::InvalidSpec(format!(
+            "algorithm '{}' has no remote worker protocol",
+            self.name()
+        )))
+    }
 }
 
 pub struct Registry {
@@ -36,6 +50,15 @@ impl Registry {
     /// All registered algorithm names, registration order.
     pub fn names(&self) -> Vec<&'static str> {
         self.solvers.iter().map(|s| s.name()).collect()
+    }
+
+    /// Names of the solvers supporting transport `t`, registration order
+    /// (drives the `UnsupportedTransport` error and the capability docs).
+    pub fn supporting(&self, t: Transport) -> Vec<&'static str> {
+        self.iter()
+            .filter(|s| s.supported_transports().contains(&t))
+            .map(|s| s.name())
+            .collect()
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &dyn Solver> {
@@ -72,9 +95,18 @@ mod tests {
     }
 
     #[test]
-    fn lookup_and_tcp_support() {
-        assert!(registry().get("sfw-asyn").unwrap().supports_tcp());
-        assert!(!registry().get("sva").unwrap().supports_tcp());
-        assert!(registry().get("nope").is_none());
+    fn lookup_and_transport_capabilities() {
+        let reg = registry();
+        for algo in ["sfw-asyn", "svrf-asyn", "sfw-dist"] {
+            assert!(
+                reg.get(algo).unwrap().supported_transports().contains(&Transport::Tcp),
+                "'{algo}' must support TCP"
+            );
+        }
+        assert!(!reg.get("sva").unwrap().supported_transports().contains(&Transport::Tcp));
+        assert!(reg.get("nope").is_none());
+        // registry-driven capability listing, registration order
+        assert_eq!(reg.supporting(Transport::Tcp), vec!["sfw-asyn", "svrf-asyn", "sfw-dist"]);
+        assert_eq!(reg.supporting(Transport::Local).len(), reg.names().len());
     }
 }

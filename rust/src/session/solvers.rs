@@ -6,7 +6,11 @@
 //!
 //! Solvers translate the resolved spec into the protocol options and run
 //! the coordinator machinery; all shared wiring (objective, engines,
-//! transport, report shape) lives in [`RunCtx`].
+//! transport, report shape) lives in [`RunCtx`] and `session::harness`.
+//! The three solvers with framed wire protocols (sfw-asyn, svrf-asyn,
+//! sfw-dist) advertise `Transport::Tcp` in `supported_transports()` and
+//! implement the worker side of their protocol for external `sfw worker`
+//! processes.
 
 use std::sync::Arc;
 
@@ -14,12 +18,17 @@ use crate::algo::pgd::{run_pgd, PgdOptions};
 use crate::algo::schedule::BatchSchedule;
 use crate::algo::sfw::{run_sfw, SfwOptions};
 use crate::coordinator::dfw_power::{run_dfw_power_impl, DfwOptions};
+use crate::coordinator::messages::{DistDown, DistUp, MasterMsg, UpdateMsg};
 use crate::coordinator::runner::AsynOptions;
 use crate::coordinator::sva::{run_sva_impl, SvaOptions};
-use crate::coordinator::svrf_asyn::SvrfAsynOptions;
-use crate::coordinator::sync::{run_dist_impl, DistOptions};
+use crate::coordinator::svrf_asyn::{run_svrf_worker, SvrfAsynOptions};
+use crate::coordinator::sync::{run_dist_worker, DistOptions};
+use crate::coordinator::worker::WorkerOptions;
 use crate::metrics::{Counters, LossTrace};
-use crate::session::{harness, Report, RunCtx, Solver};
+use crate::session::harness::{self, TransportOpts};
+use crate::session::{Report, RunCtx, SessionError, Solver, Transport};
+
+const LOCAL_AND_TCP: &[Transport] = &[Transport::Local, Transport::Tcp];
 
 /// Serial Stochastic Frank-Wolfe (Hazan & Luo 2016).
 pub struct SfwSolver;
@@ -46,79 +55,136 @@ impl Solver for SfwSolver {
 }
 
 /// SFW-asyn (Algorithm 3): the paper's asynchronous rank-one protocol.
-/// The only solver whose wire protocol also runs over real TCP.
 pub struct AsynSolver;
+
+impl AsynSolver {
+    fn protocol_opts(ctx: &RunCtx) -> AsynOptions {
+        let spec = &ctx.spec;
+        AsynOptions {
+            iterations: spec.iterations,
+            tau: spec.tau,
+            batch: ctx
+                .batch_or(|| BatchSchedule::sfw_asyn(spec.batch_scale, spec.tau, spec.batch_cap)),
+            eval_every: spec.eval_every,
+            seed: spec.seed,
+            straggler: spec.straggler,
+        }
+    }
+}
 
 impl Solver for AsynSolver {
     fn name(&self) -> &'static str {
         "sfw-asyn"
     }
 
-    fn supports_tcp(&self) -> bool {
-        true
+    fn supported_transports(&self) -> &'static [Transport] {
+        LOCAL_AND_TCP
     }
 
     fn run(&self, ctx: &RunCtx) -> Report {
-        let spec = &ctx.spec;
-        let opts = AsynOptions {
-            iterations: spec.iterations,
-            tau: spec.tau,
-            workers: spec.workers,
-            batch: ctx
-                .batch_or(|| BatchSchedule::sfw_asyn(spec.batch_scale, spec.tau, spec.batch_cap)),
-            eval_every: spec.eval_every,
-            seed: spec.seed,
-            straggler: spec.straggler,
-            link_latency: spec.link_latency,
-        };
-        let r = harness::run_asyn(ctx.obj.clone(), &opts, spec.transport, |w| ctx.make_engine(w));
+        let opts = Self::protocol_opts(ctx);
+        let t = TransportOpts::from_ctx(ctx);
+        let r = harness::run_asyn(ctx.obj.clone(), &opts, t, |w| ctx.make_engine(w));
         ctx.report(r.x, r.counters, r.trace)
+    }
+
+    fn run_worker(&self, ctx: &RunCtx, connect: &str, rank: u32) -> Result<(), SessionError> {
+        let opts = Self::protocol_opts(ctx);
+        let wopts = WorkerOptions {
+            worker_id: rank,
+            batch: opts.batch,
+            seed: opts.seed,
+            straggler: opts.straggler,
+        };
+        let counters = Counters::new(); // process-local telemetry only
+        let mut engine = ctx.make_engine(rank as usize);
+        let mut link = harness::connect_worker::<UpdateMsg, MasterMsg>(connect, rank)?;
+        crate::coordinator::worker::run_worker(&mut link, engine.as_mut(), &wopts, &counters);
+        Ok(())
     }
 }
 
 /// SVRF-asyn (Algorithm 5): variance-reduced asynchronous FW.
 pub struct SvrfAsynSolver;
 
+impl SvrfAsynSolver {
+    fn protocol_opts(ctx: &RunCtx) -> SvrfAsynOptions {
+        let spec = &ctx.spec;
+        SvrfAsynOptions {
+            epochs: spec.epochs_or_derived(),
+            tau: spec.tau,
+            batch: ctx.batch_or(|| BatchSchedule::svrf_asyn(spec.tau, spec.batch_cap)),
+            eval_every: spec.eval_every,
+            seed: spec.seed,
+        }
+    }
+}
+
 impl Solver for SvrfAsynSolver {
     fn name(&self) -> &'static str {
         "svrf-asyn"
     }
 
+    fn supported_transports(&self) -> &'static [Transport] {
+        LOCAL_AND_TCP
+    }
+
     fn run(&self, ctx: &RunCtx) -> Report {
-        let spec = &ctx.spec;
-        let opts = SvrfAsynOptions {
-            epochs: spec.epochs_or_derived(),
-            tau: spec.tau,
-            workers: spec.workers,
-            batch: ctx.batch_or(|| BatchSchedule::svrf_asyn(spec.tau, spec.batch_cap)),
-            eval_every: spec.eval_every,
-            seed: spec.seed,
-        };
-        let r = harness::run_svrf_asyn(ctx.obj.clone(), &opts, |w| ctx.make_engine(w));
+        let opts = Self::protocol_opts(ctx);
+        let t = TransportOpts::from_ctx(ctx);
+        let r = harness::run_svrf_asyn(ctx.obj.clone(), &opts, t, |w| ctx.make_engine(w));
         ctx.report(r.x, r.counters, r.trace)
+    }
+
+    fn run_worker(&self, ctx: &RunCtx, connect: &str, rank: u32) -> Result<(), SessionError> {
+        let opts = Self::protocol_opts(ctx);
+        let counters = Counters::new();
+        let mut engine = ctx.make_engine(rank as usize);
+        let mut link = harness::connect_worker::<UpdateMsg, MasterMsg>(connect, rank)?;
+        run_svrf_worker(&mut link, engine.as_mut(), rank, &opts.batch, opts.seed, &counters);
+        Ok(())
     }
 }
 
 /// SFW-dist (Algorithm 1): the synchronous distributed baseline.
 pub struct DistSolver;
 
+impl DistSolver {
+    fn protocol_opts(ctx: &RunCtx) -> DistOptions {
+        let spec = &ctx.spec;
+        DistOptions {
+            iterations: spec.iterations,
+            batch: ctx.batch_or(|| BatchSchedule::sfw(spec.batch_scale, spec.batch_cap)),
+            eval_every: spec.eval_every,
+            seed: spec.seed,
+            straggler: spec.straggler,
+        }
+    }
+}
+
 impl Solver for DistSolver {
     fn name(&self) -> &'static str {
         "sfw-dist"
     }
 
+    fn supported_transports(&self) -> &'static [Transport] {
+        LOCAL_AND_TCP
+    }
+
     fn run(&self, ctx: &RunCtx) -> Report {
-        let spec = &ctx.spec;
-        let opts = DistOptions {
-            iterations: spec.iterations,
-            workers: spec.workers,
-            batch: ctx.batch_or(|| BatchSchedule::sfw(spec.batch_scale, spec.batch_cap)),
-            eval_every: spec.eval_every,
-            seed: spec.seed,
-            straggler: spec.straggler,
-        };
-        let r = run_dist_impl(ctx.obj.clone(), &opts, |w| ctx.make_engine(w));
+        let opts = Self::protocol_opts(ctx);
+        let t = TransportOpts::from_ctx(ctx);
+        let r = harness::run_dist(ctx.obj.clone(), &opts, t, |w| ctx.make_engine(w));
         ctx.report(r.x, r.counters, r.trace)
+    }
+
+    fn run_worker(&self, ctx: &RunCtx, connect: &str, rank: u32) -> Result<(), SessionError> {
+        let opts = Self::protocol_opts(ctx);
+        let counters = Counters::new();
+        let mut engine = ctx.make_engine(rank as usize);
+        let mut link = harness::connect_worker::<DistUp, DistDown>(connect, rank)?;
+        run_dist_worker(&mut link, engine.as_mut(), rank, opts.seed, opts.straggler, &counters);
+        Ok(())
     }
 }
 

@@ -50,6 +50,15 @@ pub struct TrainSpec {
     /// artifacts from `artifacts_dir` when `engine` is `Pjrt`.
     pub pjrt_runtime: Option<Arc<PjrtRuntime>>,
     pub transport: Transport,
+    /// TCP only: explicit master bind address (`host:port`); `None`
+    /// binds a loopback ephemeral port.
+    pub tcp_bind: Option<String>,
+    /// TCP only: spawn no local worker threads; await `workers` external
+    /// `sfw worker --connect ... --rank R` processes instead.
+    pub tcp_await: bool,
+    /// Observer for the bound TCP master address (fires after bind,
+    /// before workers are awaited) — multi-process orchestration/tests.
+    pub bound_notify: Option<crate::session::BoundNotify>,
     pub straggler: Option<Straggler>,
     /// Injected one-way link latency (local transport only).
     pub link_latency: Option<Duration>,
@@ -78,6 +87,9 @@ impl TrainSpec {
             artifacts_dir: "artifacts".into(),
             pjrt_runtime: None,
             transport: Transport::Local,
+            tcp_bind: None,
+            tcp_await: false,
+            bound_notify: None,
             straggler: None,
             link_latency: None,
             dfw_rounds_base: 1,
@@ -149,6 +161,24 @@ impl TrainSpec {
     }
     pub fn transport(mut self, t: Transport) -> Self {
         self.transport = t;
+        self
+    }
+    /// Bind the TCP master at an explicit `host:port`.
+    pub fn tcp_bind(mut self, addr: &str) -> Self {
+        self.tcp_bind = Some(addr.to_string());
+        self
+    }
+    /// Await external `sfw worker` processes instead of spawning threads.
+    pub fn tcp_await(mut self, await_external: bool) -> Self {
+        self.tcp_await = await_external;
+        self
+    }
+    /// Observe the bound TCP master address (multi-process orchestration).
+    pub fn bound_notify(
+        mut self,
+        f: impl Fn(std::net::SocketAddr) + Send + Sync + 'static,
+    ) -> Self {
+        self.bound_notify = Some(Arc::new(f));
         self
     }
     pub fn straggler(mut self, s: Straggler) -> Self {
@@ -230,19 +260,49 @@ impl TrainSpec {
                 "link-latency injection only applies to the local transport".into(),
             ));
         }
+        // The multi-process knobs only mean something on a real wire.
+        if (self.tcp_bind.is_some() || self.tcp_await) && self.transport != Transport::Tcp {
+            return Err(SessionError::InvalidSpec(
+                "tcp-bind/tcp-await require the tcp transport".into(),
+            ));
+        }
         let reg = registry();
         let solver = reg.get(&self.algo).ok_or_else(|| SessionError::UnknownAlgo {
             name: self.algo.clone(),
             valid: reg.names().join(" | "),
         })?;
-        if self.transport == Transport::Tcp && !solver.supports_tcp() {
-            return Err(SessionError::UnsupportedTransport {
-                algo: self.algo.clone(),
-                transport: self.transport,
-            });
+        if !solver.supported_transports().contains(&self.transport) {
+            return Err(unsupported_transport(&self.algo, self.transport));
         }
         let ctx = RunCtx::new(self)?;
+        // Pre-bind the TCP master listener so ordinary bind failures
+        // (port in use, privileged port) are a SessionError, not a panic
+        // inside the infallible solver.
+        if self.transport == Transport::Tcp {
+            let bind = self.tcp_bind.as_deref().unwrap_or("127.0.0.1:0");
+            let listener = std::net::TcpListener::bind(bind)
+                .map_err(|e| SessionError::Comms(format!("cannot bind {bind}: {e}")))?;
+            ctx.set_tcp_listener(listener);
+        }
         Ok(solver.run(&ctx))
+    }
+
+    /// Run this spec's algorithm **worker-side** against a remote master
+    /// at `connect`, as worker rank `rank` — the `sfw worker` subcommand.
+    /// The spec's data-shaping fields (task, seed, batch/tau) must match
+    /// the master's: workers regenerate the dataset and schedules
+    /// locally instead of receiving them over the wire.
+    pub fn run_worker(&self, connect: &str, rank: u32) -> Result<(), SessionError> {
+        let reg = registry();
+        let solver = reg.get(&self.algo).ok_or_else(|| SessionError::UnknownAlgo {
+            name: self.algo.clone(),
+            valid: reg.names().join(" | "),
+        })?;
+        if !solver.supported_transports().contains(&Transport::Tcp) {
+            return Err(unsupported_transport(&self.algo, Transport::Tcp));
+        }
+        let ctx = RunCtx::new(self)?;
+        solver.run_worker(&ctx, connect, rank)
     }
 
     /// Map a launcher [`TrainConfig`] (config file + CLI overrides) onto a
@@ -283,10 +343,29 @@ impl TrainSpec {
             .eval_every(cfg.eval_every)
             .engine(engine)
             .artifacts_dir(&cfg.artifacts_dir)
-            .transport(transport);
+            .transport(transport)
+            .tcp_await(cfg.tcp_await);
         if cfg.epochs > 0 {
             spec = spec.epochs(cfg.epochs);
         }
+        if cfg.batch > 0 {
+            spec = spec.batch(BatchSchedule::Constant(cfg.batch));
+        }
+        if !cfg.tcp_bind.is_empty() {
+            spec = spec.tcp_bind(&cfg.tcp_bind);
+        }
         Ok(spec)
+    }
+}
+
+/// The registry-driven `UnsupportedTransport` error: names the
+/// algorithms that *do* support the requested transport (same style as
+/// the unknown-algo error).
+fn unsupported_transport(algo: &str, transport: Transport) -> SessionError {
+    let names = registry().supporting(transport);
+    SessionError::UnsupportedTransport {
+        algo: algo.to_string(),
+        transport,
+        supported: if names.is_empty() { "none".into() } else { names.join(" | ") },
     }
 }

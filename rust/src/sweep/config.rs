@@ -143,23 +143,27 @@ impl SweepSpec {
     }
 
     /// The CI smoke sweep: a tiny deterministic grid (seed 42, W in
-    /// {1, 2}, both distributed algorithms) on the small matrix-sensing
-    /// task.  `sfw sweep --smoke` runs it and writes
-    /// `bench_out/sweep_smoke.json` — the artifact the CI pipeline
-    /// uploads (see `.github/workflows/ci.yml` and ROADMAP "Sweeps & CI").
+    /// {1, 2}, every TCP-capable distributed algorithm, local AND tcp
+    /// transports) on the small matrix-sensing task.  `sfw sweep --smoke`
+    /// runs it and writes `bench_out/sweep_smoke.json` — the artifact
+    /// the CI pipeline uploads and asserts nonzero `bytes_up`/
+    /// `bytes_down` on (see `.github/workflows/ci.yml` and ROADMAP
+    /// "Sweeps & CI").
     pub fn smoke() -> SweepSpec {
         use crate::algo::schedule::BatchSchedule;
         use crate::session::TaskSpec;
         let base = TrainSpec::new(TaskSpec::ms_small())
             .iterations(20)
+            .epochs(2) // svrf-asyn cells: 6 + 14 = 20 inner iterations
             .batch(BatchSchedule::Constant(16))
             .eval_every(5)
             .power_iters(20)
             .seed(42);
         SweepSpec::new("smoke", base)
-            .algos(&["sfw-dist", "sfw-asyn"])
+            .algos(&["sfw-dist", "sfw-asyn", "svrf-asyn"])
             .workers(&[1, 2])
             .taus(&[2])
+            .transports(&[Transport::Local, Transport::Tcp])
             .target(0.5)
     }
 }
@@ -274,9 +278,17 @@ mod tests {
         assert_eq!(s.name, "smoke");
         assert_eq!(s.base.seed, 42);
         let cells = s.expand().unwrap();
-        assert_eq!(cells.len(), 4); // 2 algos x W in {1,2}
+        assert_eq!(cells.len(), 12); // 3 algos x W in {1,2} x 2 transports
         for c in &cells {
             assert_eq!(c.axis("seed"), Some("42"));
+        }
+        // one tcp cell per TCP-capable solver, pinning the wire path in CI
+        for algo in ["sfw-dist", "sfw-asyn", "svrf-asyn"] {
+            assert!(
+                cells.iter().any(|c| c.axis("algo") == Some(algo)
+                    && c.axis("transport") == Some("tcp")),
+                "smoke grid must include a tcp cell for '{algo}'"
+            );
         }
     }
 }

@@ -204,14 +204,16 @@ impl SweepResult {
         self.cells.iter().filter(move |c| pred(c))
     }
 
-    /// Aligned summary table: one row per cell, axes then metrics.
+    /// Aligned summary table: one row per cell, axes then metrics
+    /// (including the comm-cost columns — the paper's headline metric
+    /// must show up in artifacts, not only in the JSON counters).
     pub fn table(&self) -> Table {
         let mut headers: Vec<&str> = self
             .cells
             .first()
             .map(|c| c.axes.iter().map(|(k, _)| k.as_str()).collect())
             .unwrap_or_default();
-        headers.extend(["mean t(s)", "final rel", "t_target(s)", "dropped"]);
+        headers.extend(["mean t(s)", "final rel", "t_target(s)", "dropped", "up B", "down B"]);
         let mut t = Table::new(&format!("sweep '{}' ({} cells)", self.name, self.cells.len()), &headers);
         for c in &self.cells {
             let mut row: Vec<String> = c.axes.iter().map(|(_, v)| v.clone()).collect();
@@ -223,6 +225,8 @@ impl SweepResult {
                     .unwrap_or_else(|| "—".into()),
             );
             row.push(c.counters.dropped_updates.to_string());
+            row.push(c.counters.bytes_up.to_string());
+            row.push(c.counters.bytes_down.to_string());
             t.row(&row);
         }
         t

@@ -239,4 +239,161 @@ fn tcp_transport_is_rejected_for_local_only_solvers() {
         .unwrap_err();
     let msg = err.to_string();
     assert!(msg.contains("sva") && msg.contains("Tcp"), "unexpected error: {msg}");
+    // registry-driven: the error lists the algorithms that DO support tcp
+    for supporter in ["sfw-asyn", "svrf-asyn", "sfw-dist"] {
+        assert!(msg.contains(supporter), "error should list '{supporter}': {msg}");
+    }
+}
+
+#[test]
+fn svrf_asyn_runs_over_tcp_with_local_quality() {
+    // Same seed, both transports: identical inner-iteration counts and
+    // comparable convergence (async arrival order may differ, so this is
+    // a quality bound, not bitwise equality).
+    let spec = TrainSpec::new(ms(580, 8, 1_500))
+        .algo("svrf-asyn")
+        .epochs(3)
+        .tau(8)
+        .workers(3)
+        .batch(BatchSchedule::Constant(32))
+        .eval_every(10)
+        .seed(581)
+        .power_iters(40);
+    let local = spec.clone().transport(Transport::Local).run().expect("local");
+    let tcp = spec.clone().transport(Transport::Tcp).run().expect("tcp");
+    for (name, r) in [("local", &local), ("tcp", &tcp)] {
+        let pts = r.points();
+        assert!(
+            pts.last().unwrap().loss < 0.5 * pts.first().unwrap().loss,
+            "{name}: no progress"
+        );
+        let s = r.snapshot();
+        assert_eq!(s.iterations, 50, "{name}: 6 + 14 + 30 inner iterations"); // N_t sums
+        assert!(s.bytes_up > 0 && s.bytes_down > 0, "{name}: comm not accounted");
+    }
+}
+
+#[test]
+fn sfw_dist_is_bit_identical_across_transports() {
+    // SFW-dist reduces worker replies in rank order, so a fixed seed must
+    // produce the same iterate over channels and over real sockets — and
+    // since both transports charge exact frame sizes, the same byte
+    // totals too.
+    let spec = TrainSpec::new(ms(590, 8, 1_200))
+        .algo("sfw-dist")
+        .iterations(40)
+        .workers(3)
+        .batch(BatchSchedule::Constant(48))
+        .eval_every(10)
+        .seed(591)
+        .power_iters(40);
+    let local = spec.clone().transport(Transport::Local).run().expect("local");
+    let tcp = spec.clone().transport(Transport::Tcp).run().expect("tcp");
+    assert_eq!(local.x.data, tcp.x.data, "iterates diverged across transports");
+    let (l, t) = (local.snapshot(), tcp.snapshot());
+    assert_eq!(l.iterations, t.iterations);
+    assert_eq!(l.bytes_up, t.bytes_up, "uplink byte accounting diverged");
+    assert_eq!(l.bytes_down, t.bytes_down, "downlink byte accounting diverged");
+    assert_eq!(local.final_loss(), tcp.final_loss());
+}
+
+#[test]
+fn sfw_asyn_same_seed_tcp_matches_local_convergence() {
+    let spec = TrainSpec::new(ms(600, 8, 1_200))
+        .algo("sfw-asyn")
+        .iterations(60)
+        .tau(8)
+        .workers(2)
+        .batch(BatchSchedule::Constant(32))
+        .eval_every(30)
+        .seed(601)
+        .power_iters(40);
+    let local = spec.clone().transport(Transport::Local).run().expect("local");
+    let tcp = spec.clone().transport(Transport::Tcp).run().expect("tcp");
+    assert_eq!(local.snapshot().iterations, tcp.snapshot().iterations);
+    for (name, r) in [("local", &local), ("tcp", &tcp)] {
+        let pts = r.points();
+        assert!(
+            pts.last().unwrap().loss < 0.5 * pts.first().unwrap().loss,
+            "{name}: no progress"
+        );
+    }
+}
+
+#[test]
+fn multi_process_workers_over_loopback() {
+    // The full multi-process path, exactly as a user would run it: the
+    // master awaits external workers on an ephemeral loopback port, and
+    // two real `sfw worker` processes (the launcher binary) join by rank.
+    // Workers regenerate the dataset from the same task/seed flags.
+    use std::process::{Command, Stdio};
+
+    let (tx, rx) = std::sync::mpsc::channel::<std::net::SocketAddr>();
+    let tx = std::sync::Mutex::new(tx);
+    let spec = TrainSpec::new(TaskSpec::ms(8, 2, 400, 0.05))
+        .algo("sfw-asyn")
+        .transport(Transport::Tcp)
+        .tcp_await(true)
+        .bound_notify(move |addr| {
+            let _ = tx.lock().unwrap().send(addr);
+        })
+        .iterations(20)
+        .tau(4)
+        .workers(2)
+        .batch(BatchSchedule::Constant(16))
+        .eval_every(10)
+        .seed(42)
+        .power_iters(20);
+    let master = std::thread::spawn(move || spec.run().expect("master run"));
+    let addr = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("master never published its bound address");
+
+    let bin = env!("CARGO_BIN_EXE_sfw");
+    let mut children = Vec::new();
+    for rank in 0..2 {
+        let child = Command::new(bin)
+            .args([
+                "worker",
+                "--connect",
+                &addr.to_string(),
+                "--rank",
+                &rank.to_string(),
+                "--algo",
+                "sfw-asyn",
+                "--task",
+                "matrix_sensing",
+                "--data.ms-d",
+                "8",
+                "--data.ms-rank",
+                "2",
+                "--data.ms-n",
+                "400",
+                "--data.ms-noise",
+                "0.05",
+                "--seed",
+                "42",
+                "--batch",
+                "16",
+                "--tau",
+                "4",
+                "--power-iters",
+                "20",
+            ])
+            .stdout(Stdio::null())
+            .spawn()
+            .expect("spawn sfw worker process");
+        children.push(child);
+    }
+
+    let report = master.join().expect("master thread");
+    for mut child in children {
+        let status = child.wait().expect("wait for worker process");
+        assert!(status.success(), "worker process failed: {status}");
+    }
+    let s = report.snapshot();
+    assert_eq!(s.iterations, 20);
+    assert!(s.bytes_up > 0 && s.bytes_down > 0, "no wire traffic accounted");
+    let pts = report.points();
+    assert!(!pts.is_empty() && pts.last().unwrap().loss.is_finite());
 }

@@ -6,13 +6,13 @@ use std::sync::Arc;
 
 use sfw::algo::engine::{NativeEngine, StepEngine};
 use sfw::algo::init_rank_one;
-use sfw::coordinator::messages::{LogEntry, MasterMsg, UpdateMsg};
+use sfw::comms::{frame, Wire};
+use sfw::coordinator::messages::{DistDown, DistUp, LogEntry, MasterMsg, UpdateMsg};
 use sfw::coordinator::update_log::{replay, replay_after, UpdateLog};
 use sfw::data::matrix_sensing::{MatrixSensingData, MsParams};
 use sfw::linalg::{jacobi_svd, nuclear_ball_projection, nuclear_norm, Mat};
 use sfw::objective::{MatrixSensing, Objective};
 use sfw::prop_assert;
-use sfw::transport::tcp::{decode_master, decode_update, encode_master, encode_update};
 use sfw::util::prop::check;
 use sfw::util::rng::Rng;
 
@@ -71,11 +71,33 @@ fn prop_replay_after_is_idempotent() {
     });
 }
 
+/// encode -> decode through the real framing must be the identity.
+fn roundtrip<W: Wire>(msg: &W) -> Result<W, String> {
+    let f = frame(msg);
+    let len = u32::from_le_bytes(f[..4].try_into().unwrap()) as usize;
+    if len != f.len() - sfw::comms::FRAME_HEADER {
+        return Err(format!("frame length prefix {len} vs payload {}", f.len() - 5));
+    }
+    W::decode(f[4], &f[sfw::comms::FRAME_HEADER..]).map_err(|e| format!("decode: {e}"))
+}
+
+/// The byte accounting every transport charges must equal the actual
+/// encoded frame length — the paper's comm-cost numbers hang on this.
+fn wire_bytes_exact<W: Wire>(msg: &W) -> Result<(), String> {
+    let actual = frame(msg).len() as u64;
+    if msg.wire_bytes() != actual {
+        return Err(format!("wire_bytes {} vs encoded frame {actual}", msg.wire_bytes()));
+    }
+    Ok(())
+}
+
 #[test]
-fn prop_tcp_codec_roundtrips_all_messages() {
-    check("tcp-codec-roundtrip", 620, 40, |rng| {
+fn prop_every_wire_message_roundtrips_with_exact_byte_accounting() {
+    check("wire-roundtrip", 620, 40, |rng| {
         let d1 = 1 + rng.next_below(40);
         let d2 = 1 + rng.next_below(40);
+
+        // --- asyn protocol: UpdateMsg up, MasterMsg down -------------
         let upd = UpdateMsg {
             worker_id: rng.next_below(16) as u32,
             t_w: rng.next_u64() % 10_000,
@@ -85,9 +107,10 @@ fn prop_tcp_codec_roundtrips_all_messages() {
             loss_sum: rng.normal(),
             m: rng.next_below(10_000) as u32,
         };
-        let rt = decode_update(&encode_update(&upd));
+        let rt = roundtrip(&upd)?;
         prop_assert!(rt.u == upd.u && rt.v == upd.v, "vectors corrupted");
         prop_assert!(rt.t_w == upd.t_w && rt.m == upd.m, "header corrupted");
+        wire_bytes_exact(&upd)?;
 
         let entries: Vec<LogEntry> = (1..=3)
             .map(|k| LogEntry {
@@ -98,44 +121,54 @@ fn prop_tcp_codec_roundtrips_all_messages() {
                 v: Arc::new((0..d2).map(|_| rng.normal_f32()).collect()),
             })
             .collect();
-        let msg = MasterMsg::Updates { t_m: 3, entries: entries.clone() };
-        let (tag, payload) = encode_master(&msg);
-        match decode_master(tag, &payload) {
-            MasterMsg::Updates { t_m, entries: back } => {
-                prop_assert!(t_m == 3, "t_m");
-                prop_assert!(back.len() == 3, "len");
-                for (a, b) in back.iter().zip(&entries) {
-                    prop_assert!(*a.u == *b.u && *a.v == *b.v && a.k == b.k, "entry");
+        for msg in [
+            MasterMsg::Updates { t_m: 3, entries: entries.clone() },
+            MasterMsg::UpdateW { t_m: 3, entries: entries.clone() },
+        ] {
+            match roundtrip(&msg)? {
+                MasterMsg::Updates { t_m, entries: back }
+                | MasterMsg::UpdateW { t_m, entries: back } => {
+                    prop_assert!(t_m == 3, "t_m");
+                    prop_assert!(back.len() == 3, "len");
+                    for (a, b) in back.iter().zip(&entries) {
+                        prop_assert!(*a.u == *b.u && *a.v == *b.v && a.k == b.k, "entry");
+                    }
                 }
+                MasterMsg::Stop => return Err("variant flipped to Stop".into()),
             }
-            _ => return Err("wrong variant".into()),
+            wire_bytes_exact(&msg)?;
         }
-        Ok(())
-    });
-}
-
-#[test]
-fn prop_wire_bytes_match_actual_encoding() {
-    // `wire_bytes()` (used by the local transport's accounting) must be
-    // within the 5-byte frame header of what the TCP codec really emits.
-    check("wire-bytes-accurate", 630, 30, |rng| {
-        let d1 = 1 + rng.next_below(64);
-        let d2 = 1 + rng.next_below(64);
-        let upd = UpdateMsg {
-            worker_id: 1,
-            t_w: 5,
-            u: vec![0.5; d1],
-            v: vec![0.5; d2],
-            sigma: 1.0,
-            loss_sum: 2.0,
-            m: 7,
-        };
-        let actual = encode_update(&upd).len() as u64 + 5;
-        let claimed = upd.wire_bytes();
         prop_assert!(
-            claimed.abs_diff(actual) <= 5,
-            "claimed {claimed} vs actual {actual}"
+            matches!(roundtrip(&MasterMsg::Stop)?, MasterMsg::Stop),
+            "Stop corrupted"
         );
+        wire_bytes_exact(&MasterMsg::Stop)?;
+
+        // --- dist protocol: DistUp up, DistDown down -----------------
+        let x = Mat::randn(d1, d2, 1.0, &mut rng.fork(7));
+        let down = DistDown::Compute {
+            k: rng.next_u64() % 1_000,
+            m_share: rng.next_below(512) as u32,
+            x: Arc::new(x.clone()),
+        };
+        match roundtrip(&down)? {
+            DistDown::Compute { x: back, .. } => {
+                prop_assert!(*back == x, "dist iterate corrupted")
+            }
+            DistDown::Stop => return Err("dist variant flipped".into()),
+        }
+        wire_bytes_exact(&down)?;
+        wire_bytes_exact(&DistDown::Stop)?;
+
+        let up = DistUp {
+            worker_id: rng.next_below(16) as u32,
+            loss_sum: rng.normal(),
+            grad: Mat::randn(d1, d2, 1.0, &mut rng.fork(8)),
+        };
+        let rt = roundtrip(&up)?;
+        prop_assert!(rt.grad == up.grad, "dist gradient corrupted");
+        prop_assert!(rt.worker_id == up.worker_id, "dist header corrupted");
+        wire_bytes_exact(&up)?;
         Ok(())
     });
 }

@@ -75,6 +75,28 @@ fn zero_scale_knobs_error_instead_of_panicking() {
 }
 
 #[test]
+fn tcp_only_knobs_are_rejected_on_the_local_transport() {
+    let err = small_spec().tcp_bind("127.0.0.1:7070").run().unwrap_err();
+    assert!(matches!(err, SessionError::InvalidSpec(_)), "{err}");
+    let err = small_spec().tcp_await(true).run().unwrap_err();
+    assert!(matches!(err, SessionError::InvalidSpec(_)), "{err}");
+}
+
+#[test]
+fn worker_side_rejects_algorithms_without_a_wire_protocol() {
+    let err = small_spec().algo("sva").run_worker("127.0.0.1:1", 0).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        matches!(err, SessionError::UnsupportedTransport { .. }),
+        "expected UnsupportedTransport, got: {msg}"
+    );
+    // registry-driven listing of the solvers that DO speak TCP
+    for supporter in ["sfw-asyn", "svrf-asyn", "sfw-dist"] {
+        assert!(msg.contains(supporter), "error should list '{supporter}': {msg}");
+    }
+}
+
+#[test]
 fn registry_names_are_stable_and_complete() {
     let names = registry().names();
     for required in ["sfw", "sfw-asyn", "svrf-asyn", "sfw-dist", "sva", "dfw-power"] {
@@ -107,6 +129,27 @@ fn config_maps_onto_spec_fields() {
     assert_eq!(spec.iterations, 77);
     assert_eq!(spec.seed, 5);
     assert!(spec.echo().contains("transport=tcp"));
+}
+
+#[test]
+fn multi_process_keys_map_onto_spec_fields() {
+    let cfg = load(
+        "--algo sfw-dist --transport tcp --tcp-bind 127.0.0.1:7070 --tcp-await --batch 64",
+    )
+    .unwrap();
+    assert_eq!(cfg.tcp_bind, "127.0.0.1:7070");
+    assert!(cfg.tcp_await); // bare boolean flag spelling
+    assert_eq!(cfg.batch, 64);
+    let spec = TrainSpec::from_config(&cfg).unwrap();
+    assert_eq!(spec.tcp_bind.as_deref(), Some("127.0.0.1:7070"));
+    assert!(spec.tcp_await);
+    assert_eq!(spec.batch, Some(BatchSchedule::Constant(64)));
+
+    // defaults: no bind, threads spawned in-process, theorem schedule
+    let spec = TrainSpec::from_config(&load("").unwrap()).unwrap();
+    assert_eq!(spec.tcp_bind, None);
+    assert!(!spec.tcp_await);
+    assert!(spec.batch.is_none());
 }
 
 #[test]

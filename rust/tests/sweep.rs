@@ -263,22 +263,40 @@ fn parallel_jobs_match_sequential_grid() {
 #[test]
 fn smoke_sweep_contract() {
     // The CI pipeline depends on this exact shape (see ROADMAP "Sweeps &
-    // CI"): tiny deterministic grid, seed 42, W in {1, 2}, both
-    // distributed algorithms, and a written sweep_smoke.json artifact.
+    // CI"): tiny deterministic grid, seed 42, W in {1, 2}, every
+    // TCP-capable distributed algorithm over BOTH transports, and a
+    // written sweep_smoke.json artifact with nonzero comm bytes.
     let sweep = SweepSpec::smoke();
     assert_eq!(sweep.name, "smoke");
     let cells = sweep.expand().unwrap();
-    assert_eq!(cells.len(), 4);
+    assert_eq!(cells.len(), 12); // 3 algos x W in {1,2} x {local, tcp}
     for cell in &cells {
         assert_eq!(cell.axis("seed"), Some("42"));
         assert!(matches!(cell.axis("workers"), Some("1") | Some("2")));
-        assert!(matches!(cell.axis("algo"), Some("sfw-dist") | Some("sfw-asyn")));
+        assert!(matches!(
+            cell.axis("algo"),
+            Some("sfw-dist") | Some("sfw-asyn") | Some("svrf-asyn")
+        ));
+        assert!(matches!(cell.axis("transport"), Some("local") | Some("tcp")));
     }
     let result = SweepRunner::new().quiet(true).run(&sweep).unwrap();
+    // every cell is a distributed run: comm bytes must be accounted —
+    // this is the assertion CI repeats on the uploaded artifact
+    for cell in &result.cells {
+        assert!(
+            cell.counters.bytes_up > 0 && cell.counters.bytes_down > 0,
+            "{}: comm bytes not accounted",
+            cell.id()
+        );
+    }
     let dir = std::env::temp_dir().join("sfw_sweep_smoke_test");
     let path = dir.join("sweep_smoke.json");
     result.write_json(path.to_str().unwrap()).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
     let back = sfw::sweep::SweepResult::from_json(&text).unwrap();
-    assert_eq!(back.cells.len(), 4);
+    assert_eq!(back.cells.len(), 12);
+    for (a, b) in result.cells.iter().zip(&back.cells) {
+        assert_eq!(a.counters.bytes_up, b.counters.bytes_up);
+        assert_eq!(a.counters.bytes_down, b.counters.bytes_down);
+    }
 }

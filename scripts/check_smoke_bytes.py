@@ -1,0 +1,17 @@
+#!/usr/bin/env python3
+"""Assert the smoke-sweep artifact accounts comm bytes in every cell.
+
+Shared by scripts/ci.sh --smoke and .github/workflows/ci.yml so the
+check cannot drift between the two.  Every smoke cell is a distributed
+run, so zero bytes_up/bytes_down means the transport accounting broke.
+"""
+import json
+import sys
+
+path = sys.argv[1] if len(sys.argv) > 1 else "bench_out/sweep_smoke.json"
+cells = json.load(open(path))["cells"]
+assert cells, f"{path}: smoke artifact has no cells"
+bad = [c["axes"] for c in cells
+       if c["counters"]["bytes_up"] <= 0 or c["counters"]["bytes_down"] <= 0]
+assert not bad, f"cells without comm bytes: {bad}"
+print(f"OK: {len(cells)} cells in {path}, bytes_up/bytes_down nonzero in all")

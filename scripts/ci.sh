@@ -79,6 +79,11 @@ if [ "$smoke" -eq 1 ]; then
         echo "ci.sh: smoke sweep did not write bench_out/sweep_smoke.json" >&2
         exit 1
     }
+    if command -v python3 >/dev/null 2>&1; then
+        python3 scripts/check_smoke_bytes.py bench_out/sweep_smoke.json
+    else
+        echo "ci.sh: python3 unavailable; skipping smoke-artifact byte check"
+    fi
     echo "ci.sh: smoke artifact at bench_out/sweep_smoke.json"
 fi
 
