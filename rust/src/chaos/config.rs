@@ -1,0 +1,157 @@
+//! `[chaos]` configuration: resolve an optional [`FaultPlan`] from the
+//! same INI-subset config file + CLI overrides the launcher uses.
+//!
+//! Keys are accepted only in their sectioned spelling (`plan = flaky-net`
+//! under `[chaos]` in the file, `--chaos.plan flaky-net` on the CLI) —
+//! chaos is an orthogonal concern, not a `[train]` knob.  An unknown
+//! `chaos.*` key errors with the valid-key listing, the same contract as
+//! the `[sweep]` section and the solver registry; and subcommands that
+//! cannot inject faults (`sfw worker`, `sfw simulate`, `sfw info`)
+//! reject `[chaos]`/`--chaos.*` outright instead of silently ignoring a
+//! plan the user thinks is active.
+
+use crate::chaos::plan::{FaultPlan, DEFAULT_CHAOS_SEED};
+use crate::chaos::ChaosError;
+use crate::config::Config;
+use crate::util::cli::Args;
+
+/// Keys the `[chaos]` section accepts.
+pub const CHAOS_KEYS: &[&str] = &["plan", "seed"];
+
+/// Reject unknown / valueless `chaos.*` keys in both sources.
+fn check_keys(file: &Config, args: &Args) -> Result<(), ChaosError> {
+    for key in file.keys().map(String::as_str).chain(args.flag_keys().map(String::as_str)) {
+        if let Some(suffix) = key.strip_prefix("chaos.") {
+            if !CHAOS_KEYS.contains(&suffix) {
+                return Err(ChaosError::UnknownKey {
+                    key: suffix.to_string(),
+                    valid: CHAOS_KEYS.join(" | "),
+                });
+            }
+            if args.has(key) && args.get_opt(key).is_none() {
+                return Err(ChaosError::BadValue {
+                    key: suffix.to_string(),
+                    value: String::new(),
+                    expected: format!("a value (--chaos.{suffix} <value>)"),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Resolve the `[chaos]` section + `--chaos.*` CLI overrides into an
+/// optional plan (CLI beats file, like every other section).  `None`
+/// when neither source configures a plan.
+pub fn resolve(file: &Config, args: &Args) -> Result<Option<FaultPlan>, ChaosError> {
+    check_keys(file, args)?;
+    let get = |key: &str| -> Option<String> {
+        args.get_opt(&format!("chaos.{key}"))
+            .or_else(|| file.get_opt(&format!("chaos.{key}")))
+    };
+    let seed = match get("seed") {
+        None => DEFAULT_CHAOS_SEED,
+        Some(v) => v.parse().map_err(|_| ChaosError::BadValue {
+            key: "seed".into(),
+            value: v,
+            expected: "an unsigned integer".into(),
+        })?,
+    };
+    match get("plan") {
+        None => {
+            // a bare seed with no plan is a misconfiguration, not a no-op
+            if get("seed").is_some() {
+                return Err(ChaosError::BadValue {
+                    key: "seed".into(),
+                    value: seed.to_string(),
+                    expected: "a `plan` key alongside it (seed alone injects nothing)".into(),
+                });
+            }
+            Ok(None)
+        }
+        Some(name) if name.eq_ignore_ascii_case("none") => Ok(None),
+        Some(name) => Ok(Some(FaultPlan::preset(&name, seed)?)),
+    }
+}
+
+/// Reject any chaos configuration on a subcommand that cannot honor it.
+pub fn reject_chaos_keys(cmd: &str, file: &Config, args: &Args) -> Result<(), ChaosError> {
+    let offending = file
+        .keys()
+        .map(String::as_str)
+        .chain(args.flag_keys().map(String::as_str))
+        .find(|k| k.starts_with("chaos."));
+    match offending {
+        Some(key) => Err(ChaosError::NotApplicable {
+            cmd: cmd.to_string(),
+            key: key.to_string(),
+        }),
+        None => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn no_chaos_config_resolves_to_none() {
+        assert!(resolve(&Config::new(), &args("")).unwrap().is_none());
+        assert!(resolve(&Config::new(), &args("--chaos.plan none")).unwrap().is_none());
+    }
+
+    #[test]
+    fn cli_plan_resolves_and_beats_the_file() {
+        let file = Config::from_str("[chaos]\nplan = slow-tail\nseed = 9\n").unwrap();
+        let p = resolve(&file, &args("")).unwrap().unwrap();
+        assert_eq!(p.name, "slow-tail");
+        assert_eq!(p.seed, 9);
+        let p = resolve(&file, &args("--chaos.plan flaky-net")).unwrap().unwrap();
+        assert_eq!(p.name, "flaky-net");
+        assert_eq!(p.seed, 9, "file seed still applies under a CLI plan");
+        let p = resolve(&Config::new(), &args("--chaos.plan crash-1")).unwrap().unwrap();
+        assert_eq!(p.seed, DEFAULT_CHAOS_SEED);
+    }
+
+    #[test]
+    fn unknown_chaos_key_lists_valid_names() {
+        for source in [
+            resolve(&Config::from_str("[chaos]\nplann = clean\n").unwrap(), &args("")),
+            resolve(&Config::new(), &args("--chaos.plann clean")),
+        ] {
+            let msg = source.unwrap_err().to_string();
+            assert!(msg.contains("plann"), "{msg}");
+            for key in CHAOS_KEYS {
+                assert!(msg.contains(key), "error should list '{key}': {msg}");
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_plan_and_values_error() {
+        let err = resolve(&Config::new(), &args("--chaos.plan flakey-net")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("flakey-net") && msg.contains("flaky-net"), "{msg}");
+        // valueless flag must not be coerced
+        assert!(resolve(&Config::new(), &args("--chaos.plan")).is_err());
+        // non-numeric seed
+        assert!(resolve(&Config::new(), &args("--chaos.plan clean --chaos.seed abc")).is_err());
+        // seed with no plan is a misconfiguration, not silence
+        assert!(resolve(&Config::new(), &args("--chaos.seed 7")).is_err());
+    }
+
+    #[test]
+    fn non_chaos_subcommands_reject_chaos_keys() {
+        assert!(reject_chaos_keys("worker", &Config::new(), &args("")).is_ok());
+        let err =
+            reject_chaos_keys("worker", &Config::new(), &args("--chaos.plan clean")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("worker") && msg.contains("chaos.plan"), "{msg}");
+        let file = Config::from_str("[chaos]\nplan = clean\n").unwrap();
+        assert!(reject_chaos_keys("simulate", &file, &args("")).is_err());
+    }
+}

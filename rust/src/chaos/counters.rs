@@ -1,0 +1,141 @@
+//! Per-event chaos accounting, mirroring the structure of
+//! [`crate::metrics::Counters`]: one atomic per injected-event kind,
+//! bumped by the [`ChaosWorker`](crate::chaos::ChaosWorker) wrappers and
+//! snapshotted into every [`Report`](crate::session::Report) and sweep
+//! cell.  Because fault decisions are a pure function of
+//! `(plan seed, rank, message index)` (see [`crate::chaos`]), these
+//! counters are the replay witness: two runs of the same plan on the
+//! same protocol schedule must produce *identical* snapshots.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared, thread-safe fault-injection event counters (one per run; all
+/// rank wrappers of a run share one instance via `Arc`).
+#[derive(Debug, Default)]
+pub struct ChaosCounters {
+    /// Injected message delays (send- or recv-side) that actually slept.
+    pub delays: AtomicU64,
+    /// Total injected sleep time across all delay events, nanoseconds.
+    pub delay_ns: AtomicU64,
+    /// Frames "lost" on the wire.  The stream transport retransmits
+    /// (delivery after the retransmit penalty), so a drop is a latency +
+    /// accounting event, never a protocol hole — see the fault model.
+    pub drops: AtomicU64,
+    /// Frames delivered twice.
+    pub duplicates: AtomicU64,
+    /// Bit-corrupted frames that still decoded and were delivered
+    /// corrupted (the receiver's semantic gates are on their own).
+    pub corrupt_delivered: AtomicU64,
+    /// Bit-corrupted frames the receiver's codec rejected: counted,
+    /// skipped, and recovered via retransmission of the original.
+    pub corrupt_rejected: AtomicU64,
+    /// Messages delivered out of order (a later message overtook them
+    /// inside the reorder window).
+    pub reorders: AtomicU64,
+    /// Worker crash events (both `Halt` and `Restart`).
+    pub crashes: AtomicU64,
+    /// Workers that joined the protocol late (initial join delay slept).
+    pub late_joins: AtomicU64,
+}
+
+impl ChaosCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn add_delay(&self, ns: u64) {
+        self.delays.fetch_add(1, Ordering::Relaxed);
+        self.delay_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+    pub(crate) fn add_drop(&self) {
+        self.drops.fetch_add(1, Ordering::Relaxed);
+    }
+    pub(crate) fn add_duplicate(&self) {
+        self.duplicates.fetch_add(1, Ordering::Relaxed);
+    }
+    pub(crate) fn add_corrupt_delivered(&self) {
+        self.corrupt_delivered.fetch_add(1, Ordering::Relaxed);
+    }
+    pub(crate) fn add_corrupt_rejected(&self) {
+        self.corrupt_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+    pub(crate) fn add_reorder(&self) {
+        self.reorders.fetch_add(1, Ordering::Relaxed);
+    }
+    pub(crate) fn add_crash(&self) {
+        self.crashes.fetch_add(1, Ordering::Relaxed);
+    }
+    pub(crate) fn add_late_join(&self) {
+        self.late_joins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ChaosSnapshot {
+        ChaosSnapshot {
+            delays: self.delays.load(Ordering::Relaxed),
+            delay_ns: self.delay_ns.load(Ordering::Relaxed),
+            drops: self.drops.load(Ordering::Relaxed),
+            duplicates: self.duplicates.load(Ordering::Relaxed),
+            corrupt_delivered: self.corrupt_delivered.load(Ordering::Relaxed),
+            corrupt_rejected: self.corrupt_rejected.load(Ordering::Relaxed),
+            reorders: self.reorders.load(Ordering::Relaxed),
+            crashes: self.crashes.load(Ordering::Relaxed),
+            late_joins: self.late_joins.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`ChaosCounters`] — the value carried by
+/// [`Report`](crate::session::Report) and sweep artifacts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChaosSnapshot {
+    pub delays: u64,
+    pub delay_ns: u64,
+    pub drops: u64,
+    pub duplicates: u64,
+    pub corrupt_delivered: u64,
+    pub corrupt_rejected: u64,
+    pub reorders: u64,
+    pub crashes: u64,
+    pub late_joins: u64,
+}
+
+impl ChaosSnapshot {
+    /// Total injected events (delay time excluded — it is a magnitude,
+    /// not a count).  Nonzero iff the plan actually touched the run;
+    /// `scripts/check_smoke_bytes.py` asserts this on the CI smoke
+    /// artifact's chaos cells.
+    pub fn events_total(&self) -> u64 {
+        self.delays
+            + self.drops
+            + self.duplicates
+            + self.corrupt_delivered
+            + self.corrupt_rejected
+            + self.reorders
+            + self.crashes
+            + self.late_joins
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_totals_every_event_kind() {
+        let c = ChaosCounters::new();
+        c.add_delay(500);
+        c.add_delay(250);
+        c.add_drop();
+        c.add_duplicate();
+        c.add_corrupt_delivered();
+        c.add_corrupt_rejected();
+        c.add_reorder();
+        c.add_crash();
+        c.add_late_join();
+        let s = c.snapshot();
+        assert_eq!(s.delays, 2);
+        assert_eq!(s.delay_ns, 750);
+        assert_eq!(s.events_total(), 9);
+        assert_eq!(ChaosSnapshot::default().events_total(), 0);
+    }
+}

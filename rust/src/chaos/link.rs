@@ -1,0 +1,480 @@
+//! [`ChaosWorker`]: the fault-injecting [`WorkerLink`] decorator.
+//!
+//! The wrapper sits *above* a real transport endpoint (local channel or
+//! TCP socket) and below the protocol loop, so every solver runs over it
+//! unchanged and both transports see the exact same injected fates.
+//! Faults are injected on the worker side of the link for both
+//! directions, because a worker's sequence of link operations is
+//! deterministic (its protocol loop is sequential) while the master's
+//! receive order is not — injecting here is what makes a plan replay
+//! bit-identically across transports.
+//!
+//! Delivery discipline (see the fault-model table in [`crate::chaos`]):
+//! a dropped or codec-rejected frame is re-delivered after the plan's
+//! retransmit penalty — the links model *stream* transports, which
+//! retransmit rather than lose frames — and held (reordered) frames are
+//! flushed before the worker blocks on `recv`, so a ping-pong protocol
+//! can never deadlock on its own held message.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::chaos::counters::ChaosCounters;
+use crate::chaos::plan::{CrashMode, FaultPlan, RankPlan};
+use crate::comms::{Wire, WorkerLink};
+use crate::util::rng::Rng;
+
+/// Everything the harness needs to install chaos on a run's worker
+/// links: the shared plan, the shared event counters, and the
+/// protocol's corruption guard (leading payload bytes — routing and
+/// barrier-identity fields — that bit flips must not touch; corrupting
+/// those models Byzantine misrouting, which no solver here claims to
+/// tolerate).
+#[derive(Clone)]
+pub struct ChaosInject {
+    pub plan: Arc<FaultPlan>,
+    pub counters: Arc<ChaosCounters>,
+    pub guard: usize,
+}
+
+impl ChaosInject {
+    pub fn new(plan: FaultPlan) -> ChaosInject {
+        ChaosInject {
+            plan: Arc::new(plan),
+            counters: Arc::new(ChaosCounters::new()),
+            guard: 0,
+        }
+    }
+
+    /// Wrap rank `rank`'s endpoint in its scripted fault layer.
+    pub fn wrap<Up: Wire, Down: Wire>(
+        &self,
+        rank: usize,
+        inner: Box<dyn WorkerLink<Up, Down>>,
+    ) -> Box<dyn WorkerLink<Up, Down>> {
+        Box::new(ChaosWorker::new(inner, &self.plan, rank, self.counters.clone(), self.guard))
+    }
+}
+
+struct Held<Up> {
+    msg: Up,
+    /// Later sends this message may still be deferred past.
+    remaining: u32,
+    /// Messages actually delivered ahead of it while held.
+    passed: u32,
+}
+
+/// Fault-injecting decorator over any worker-side link endpoint.
+pub struct ChaosWorker<Up, Down> {
+    /// `None` after a [`CrashMode::Halt`]: the "process" is dead — sends
+    /// vanish, receives report a closed link.
+    inner: Option<Box<dyn WorkerLink<Up, Down>>>,
+    plan: RankPlan,
+    retransmit: Duration,
+    rng: Rng,
+    counters: Arc<ChaosCounters>,
+    guard: usize,
+    /// Uplink send index (drives the crash script).
+    sent: u64,
+    joined: bool,
+    held: Vec<Held<Up>>,
+}
+
+enum CorruptFate<Up> {
+    /// The flipped frame still decoded: deliver it corrupted.
+    Delivered(Up),
+    /// The receiver's codec rejected the flipped frame.
+    Rejected,
+    /// Payload no larger than the guard: nothing corruptible.
+    TooSmall,
+}
+
+/// Re-materialize a message through its own codec (frame-accurate
+/// duplication without a `Clone` bound on the protocol types).
+fn reencode<W: Wire>(msg: &W) -> W {
+    let mut payload = Vec::new();
+    msg.encode(&mut payload);
+    W::decode(msg.tag(), &payload).expect("re-decoding an encoded message cannot fail")
+}
+
+impl<Up: Wire, Down: Wire> ChaosWorker<Up, Down> {
+    pub fn new(
+        inner: Box<dyn WorkerLink<Up, Down>>,
+        plan: &FaultPlan,
+        rank: usize,
+        counters: Arc<ChaosCounters>,
+        guard: usize,
+    ) -> ChaosWorker<Up, Down> {
+        ChaosWorker {
+            inner: Some(inner),
+            plan: plan.rank(rank).clone(),
+            retransmit: plan.retransmit,
+            rng: plan.rank_rng(rank),
+            counters,
+            guard,
+            sent: 0,
+            joined: false,
+            held: Vec::new(),
+        }
+    }
+
+    fn join_once(&mut self) {
+        if !self.joined {
+            self.joined = true;
+            if let Some(d) = self.plan.join_delay {
+                if d > Duration::ZERO {
+                    self.counters.add_late_join();
+                    std::thread::sleep(d);
+                }
+            }
+        }
+    }
+
+    fn sleep_counted(&mut self, d: Duration) {
+        self.counters.add_delay(d.as_nanos() as u64);
+        std::thread::sleep(d);
+    }
+
+    fn deliver(&mut self, msg: Up) {
+        if let Some(inner) = &mut self.inner {
+            inner.send(msg);
+        }
+    }
+
+    fn corrupt(&mut self, msg: &Up) -> CorruptFate<Up> {
+        let tag = msg.tag();
+        let mut payload = Vec::new();
+        msg.encode(&mut payload);
+        if payload.len() <= self.guard {
+            return CorruptFate::TooSmall;
+        }
+        let bits = (payload.len() - self.guard) * 8;
+        let bit = self.guard * 8 + self.rng.next_below(bits);
+        payload[bit / 8] ^= 1 << (bit % 8);
+        match Up::decode(tag, &payload) {
+            Ok(m) => CorruptFate::Delivered(m),
+            Err(_) => CorruptFate::Rejected,
+        }
+    }
+
+    /// Age previously-held messages by one send call and release the
+    /// expired ones (in FIFO order, after this call's deliveries).
+    fn age_held(&mut self, delivered_now: u32, skip_newest: bool) {
+        let aged = self.held.len() - usize::from(skip_newest && !self.held.is_empty());
+        for h in self.held.iter_mut().take(aged) {
+            h.remaining = h.remaining.saturating_sub(1);
+            h.passed += delivered_now;
+        }
+        let mut i = 0;
+        while i < self.held.len() {
+            if self.held[i].remaining == 0 {
+                let h = self.held.remove(i);
+                if h.passed > 0 {
+                    self.counters.add_reorder();
+                }
+                self.deliver(h.msg);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Release every held message (FIFO) — called before blocking on
+    /// `recv`, where holding longer could deadlock a ping-pong protocol.
+    fn flush_held(&mut self) {
+        let held = std::mem::take(&mut self.held);
+        for h in held {
+            if h.passed > 0 {
+                self.counters.add_reorder();
+            }
+            self.deliver(h.msg);
+        }
+    }
+}
+
+impl<Up: Wire, Down: Wire> WorkerLink<Up, Down> for ChaosWorker<Up, Down> {
+    fn send(&mut self, msg: Up) {
+        self.join_once();
+        // Scripted crash fires when the rank is about to make send
+        // #at_send (0-based) — same instant on every transport.
+        if let Some(crash) = self.plan.crash {
+            if self.sent == crash.at_send {
+                self.counters.add_crash();
+                match crash.mode {
+                    CrashMode::Halt => {
+                        // the process dies: link closes, in-flight
+                        // (held) frames are lost with it
+                        self.inner = None;
+                        self.held.clear();
+                    }
+                    CrashMode::Restart { stall } => std::thread::sleep(stall),
+                }
+            }
+        }
+        self.sent += 1;
+        if self.inner.is_none() {
+            return;
+        }
+        // Fault draws happen in a FIXED order per message, so each
+        // rank's decision stream is a pure function of (plan seed, rank,
+        // op index) — the replay guarantee.
+        let plan = self.plan.clone();
+        if let Some(d) = plan.send_delay.draw(&mut self.rng) {
+            self.sleep_counted(d);
+        }
+        if plan.drop_prob > 0.0 && self.rng.next_f64() < plan.drop_prob {
+            // the frame is lost; the stream transport retransmits it
+            self.counters.add_drop();
+            std::thread::sleep(self.retransmit);
+        }
+        let mut msg = msg;
+        if plan.corrupt_prob > 0.0 && self.rng.next_f64() < plan.corrupt_prob {
+            match self.corrupt(&msg) {
+                CorruptFate::Delivered(m) => {
+                    self.counters.add_corrupt_delivered();
+                    msg = m;
+                }
+                CorruptFate::Rejected => {
+                    // receiver codec discards it; original retransmitted
+                    self.counters.add_corrupt_rejected();
+                    std::thread::sleep(self.retransmit);
+                }
+                CorruptFate::TooSmall => {}
+            }
+        }
+        let dup = plan.dup_prob > 0.0 && self.rng.next_f64() < plan.dup_prob;
+        let hold = match plan.reorder {
+            Some(r) if r.window > 0 && r.prob > 0.0 && self.rng.next_f64() < r.prob => {
+                1 + self.rng.next_below(r.window as usize) as u32
+            }
+            _ => 0,
+        };
+        let dup_copy = if dup { Some(reencode(&msg)) } else { None };
+        let mut delivered_now = 0u32;
+        if hold > 0 {
+            self.held.push(Held { msg, remaining: hold, passed: 0 });
+        } else {
+            self.deliver(msg);
+            delivered_now += 1;
+        }
+        if let Some(copy) = dup_copy {
+            self.counters.add_duplicate();
+            self.deliver(copy);
+            delivered_now += 1;
+        }
+        self.age_held(delivered_now, hold > 0);
+    }
+
+    fn recv(&mut self) -> Option<Down> {
+        self.join_once();
+        self.flush_held();
+        let msg = self.inner.as_mut()?.recv()?;
+        if let Some(d) = self.plan.recv_delay.draw(&mut self.rng) {
+            self.sleep_counted(d);
+        }
+        Some(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::plan::{Crash, DelayModel, Reorder};
+    use crate::comms::local::local_links;
+    use crate::coordinator::messages::{MasterMsg, UpdateMsg};
+    use crate::metrics::Counters;
+
+    fn upd(rank: u32, t_w: u64) -> UpdateMsg {
+        UpdateMsg {
+            worker_id: rank,
+            t_w,
+            u: vec![0.25; 6],
+            v: vec![-0.5; 6],
+            sigma: 1.0,
+            loss_sum: 0.5,
+            m: 8,
+        }
+    }
+
+    /// A chaos-wrapped rank-0 worker over in-process links, plus the
+    /// master endpoint and the chaos counters.
+    fn rig(
+        plan: FaultPlan,
+    ) -> (
+        crate::comms::LocalMaster<UpdateMsg, MasterMsg>,
+        ChaosWorker<UpdateMsg, MasterMsg>,
+        Arc<ChaosCounters>,
+    ) {
+        let counters = Arc::new(Counters::new());
+        let (master, mut workers) = local_links::<UpdateMsg, MasterMsg>(1, counters, None);
+        let inject = ChaosInject { guard: 4, ..ChaosInject::new(plan) };
+        let chaos = inject.counters.clone();
+        let inner: Box<dyn WorkerLink<UpdateMsg, MasterMsg>> = Box::new(workers.remove(0));
+        let wrapped = ChaosWorker::new(inner, &inject.plan, 0, chaos.clone(), inject.guard);
+        (master, wrapped, chaos)
+    }
+
+    #[test]
+    fn clean_plan_is_a_transparent_passthrough() {
+        let (mut master, mut w, chaos) = rig(FaultPlan::clean(1));
+        for t in 0..5 {
+            w.send(upd(0, t));
+        }
+        for t in 0..5 {
+            assert_eq!(master.recv().unwrap().t_w, t);
+        }
+        master.send_to(0, MasterMsg::Stop);
+        assert!(matches!(w.recv(), Some(MasterMsg::Stop)));
+        assert_eq!(chaos.snapshot().events_total(), 0);
+    }
+
+    #[test]
+    fn dropped_frames_are_retransmitted_not_lost() {
+        let mut plan = FaultPlan::clean(2);
+        plan.default_rank.drop_prob = 1.0;
+        plan.retransmit = Duration::from_micros(50);
+        let (mut master, mut w, chaos) = rig(plan);
+        for t in 0..8 {
+            w.send(upd(0, t));
+        }
+        for t in 0..8 {
+            assert_eq!(master.recv().unwrap().t_w, t, "dropped frame truly lost");
+        }
+        assert_eq!(chaos.snapshot().drops, 8);
+    }
+
+    #[test]
+    fn duplicates_arrive_twice() {
+        let mut plan = FaultPlan::clean(3);
+        plan.default_rank.dup_prob = 1.0;
+        let (mut master, mut w, chaos) = rig(plan);
+        for t in 0..4 {
+            w.send(upd(0, t));
+        }
+        let mut seen = Vec::new();
+        for _ in 0..8 {
+            seen.push(master.recv().unwrap().t_w);
+        }
+        assert_eq!(seen, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+        assert_eq!(chaos.snapshot().duplicates, 4);
+    }
+
+    #[test]
+    fn corruption_respects_the_guard_and_never_loses_messages() {
+        let mut plan = FaultPlan::clean(4);
+        plan.default_rank.corrupt_prob = 1.0;
+        plan.retransmit = Duration::from_micros(10);
+        let (mut master, mut w, chaos) = rig(plan);
+        let n = 128u64;
+        for t in 0..n {
+            w.send(upd(0, t));
+        }
+        for _ in 0..n {
+            let got = master.recv().unwrap();
+            // guard = 4 protects worker_id: routing identity survives
+            assert_eq!(got.worker_id, 0);
+        }
+        let s = chaos.snapshot();
+        assert_eq!(s.corrupt_delivered + s.corrupt_rejected, n);
+        assert!(s.corrupt_delivered > 0, "some flips must decode");
+        assert!(s.corrupt_rejected > 0, "some flips must be rejected by the codec");
+    }
+
+    #[test]
+    fn reordering_actually_inverts_and_preserves_the_message_set() {
+        let mut plan = FaultPlan::clean(5);
+        plan.default_rank.reorder = Some(Reorder { window: 2, prob: 0.5 });
+        let (mut master, mut w, chaos) = rig(plan);
+        let n = 40u64;
+        for t in 0..n {
+            w.send(upd(0, t));
+        }
+        // flush any trailing held frame the way a protocol would: by
+        // blocking on recv
+        master.send_to(0, MasterMsg::Stop);
+        assert!(matches!(w.recv(), Some(MasterMsg::Stop)));
+        let mut seen = Vec::new();
+        for _ in 0..n {
+            seen.push(master.recv().unwrap().t_w);
+        }
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "messages lost or duplicated");
+        assert_ne!(seen, sorted, "no inversion ever happened");
+        assert!(chaos.snapshot().reorders > 0);
+    }
+
+    #[test]
+    fn halt_crash_kills_the_link_at_the_scripted_send() {
+        let mut plan = FaultPlan::clean(6);
+        plan.default_rank.crash = Some(Crash { at_send: 3, mode: CrashMode::Halt });
+        let (mut master, mut w, chaos) = rig(plan);
+        for t in 0..6 {
+            w.send(upd(0, t));
+        }
+        for t in 0..3 {
+            assert_eq!(master.recv().unwrap().t_w, t);
+        }
+        assert!(w.recv().is_none(), "a halted worker's link must read as closed");
+        assert_eq!(chaos.snapshot().crashes, 1);
+        // master now sees the disconnect (wrapper dropped its sender)
+        drop(w);
+        assert!(master.recv().is_none());
+    }
+
+    #[test]
+    fn same_plan_same_rank_replays_identically() {
+        let run = || {
+            let mut plan = FaultPlan::flaky_net(7);
+            plan.retransmit = Duration::from_micros(10);
+            plan.default_rank.send_delay = DelayModel::None;
+            plan.default_rank.recv_delay = DelayModel::None;
+            let (mut master, mut w, chaos) = rig(plan);
+            for t in 0..50 {
+                w.send(upd(0, t));
+            }
+            master.send_to(0, MasterMsg::Stop);
+            assert!(matches!(w.recv(), Some(MasterMsg::Stop)));
+            // drain exactly what was delivered: 50 + duplicates
+            let mut seen = Vec::new();
+            let expect = 50 + chaos.snapshot().duplicates;
+            for _ in 0..expect {
+                seen.push(master.recv().unwrap().t_w);
+            }
+            (seen, chaos.snapshot())
+        };
+        let (seq_a, snap_a) = run();
+        let (seq_b, snap_b) = run();
+        assert_eq!(seq_a, seq_b, "delivery order must replay bit-identically");
+        assert_eq!(snap_a, snap_b, "event accounting must replay bit-identically");
+        assert!(snap_a.events_total() > 0);
+    }
+
+    #[test]
+    fn restart_crash_delays_but_continues() {
+        let mut plan = FaultPlan::clean(8);
+        plan.default_rank.crash = Some(Crash {
+            at_send: 2,
+            mode: CrashMode::Restart { stall: Duration::from_millis(1) },
+        });
+        let (mut master, mut w, chaos) = rig(plan);
+        for t in 0..5 {
+            w.send(upd(0, t));
+        }
+        for t in 0..5 {
+            assert_eq!(master.recv().unwrap().t_w, t);
+        }
+        assert_eq!(chaos.snapshot().crashes, 1);
+    }
+
+    #[test]
+    fn late_join_sleeps_once_before_the_first_op() {
+        let mut plan = FaultPlan::clean(9);
+        plan.default_rank.join_delay = Some(Duration::from_millis(1));
+        let (mut master, mut w, chaos) = rig(plan);
+        w.send(upd(0, 0));
+        w.send(upd(0, 1));
+        assert_eq!(master.recv().unwrap().t_w, 0);
+        assert_eq!(chaos.snapshot().late_joins, 1, "join delay fires exactly once");
+    }
+}

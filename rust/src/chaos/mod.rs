@@ -1,0 +1,104 @@
+//! `sfw::chaos` — deterministic fault injection for the comms layer.
+//!
+//! The paper's central claim is *robustness to asynchrony*: SFW-asyn
+//! keeps the vanilla SFW rate despite stragglers and bounded delay tau
+//! (Thm 1).  This module turns that claim — and every future robustness
+//! claim — into a runnable scenario: a seeded [`FaultPlan`] scripts
+//! delays, drops, duplicates, reorderings, bit corruption, crashes and
+//! late joins per worker rank, and a [`ChaosWorker`] decorator injects
+//! them behind the ordinary [`WorkerLink`](crate::comms::WorkerLink)
+//! trait, so every solver and both transports run over it unchanged.
+//!
+//! # Fault model
+//!
+//! | event            | scripted by                    | semantics                                                                 | counter             |
+//! |------------------|--------------------------------|---------------------------------------------------------------------------|---------------------|
+//! | message delay    | `RankPlan::send_delay`/`recv_delay` (fixed or geometric) | sleep before delivery / after receipt                   | `delays`/`delay_ns` |
+//! | drop             | `RankPlan::drop_prob`          | frame lost on the wire; the *stream* transport retransmits: delivered after `FaultPlan::retransmit` | `drops` |
+//! | duplicate        | `RankPlan::dup_prob`           | frame delivered twice (codec-exact copy)                                  | `duplicates`        |
+//! | bit corruption   | `RankPlan::corrupt_prob`       | one payload bit flipped past the protocol's corrupt guard; still-decodable frames are delivered corrupted, codec-rejected frames are counted and the original retransmitted | `corrupt_delivered`/`corrupt_rejected` |
+//! | reorder          | `RankPlan::reorder` (window, prob) | frame held past up to `window` later sends; always flushed before the worker blocks on `recv` (ping-pong protocols cannot deadlock on their own held frame).  NOTE: today's three protocols are strict ping-pong — never two uplink frames in flight — so end-to-end this degrades to pass-through (`reorders` stays 0 in solver runs); the mechanism exists for pipelined protocols and is exercised by the unit tests in [`link`] | `reorders` |
+//! | crash at step k  | `RankPlan::crash`              | `Halt`: link closes forever, held frames lost (async solvers only — the sfw-dist barrier rejects halting plans at spec validation); `Restart`: stall, then continue | `crashes` |
+//! | late join        | `RankPlan::join_delay`         | sleep once before the rank's first protocol op                            | `late_joins`        |
+//!
+//! # Determinism and replay
+//!
+//! Every fault decision is drawn from a per-rank RNG that is a pure
+//! function of `(plan.seed, rank)`, in a fixed order per link operation
+//! — never from wall-clock time or arrival order.  Consequences:
+//!
+//! * the *fate of rank w's k-th message is identical* under
+//!   `Transport::Local` and `Transport::Tcp`, and across repeated runs;
+//! * for protocols whose message schedule is itself deterministic
+//!   (sfw-dist's barrier rounds), whole runs replay bit-identically:
+//!   same iterate, same byte totals, same event counters — pinned by
+//!   `rust/tests/chaos.rs`;
+//! * for the asynchronous protocols the *per-message* fates replay, but
+//!   how many messages a worker sends before `Stop` depends on thread
+//!   scheduling, so end-to-end event totals may differ run to run (just
+//!   as `msgs_up` already does without chaos).
+//!
+//! Corruption never touches a protocol's first `guard` payload bytes
+//! (routing and barrier-identity fields — `UpdateMsg::CORRUPT_GUARD`,
+//! `DistUp::CORRUPT_GUARD`): flipping those models Byzantine
+//! misrouting, which no solver here claims to tolerate.  Everything
+//! after the guard — sync points, telemetry, the update vectors and
+//! gradients themselves — is fair game, and the masters' semantic gates
+//! (bad-rank skip, future-`t_w` rejection with a liveness-preserving
+//! empty reply, gap-tolerant catch-up replay that refuses the echo of a
+//! corrupted sync-point claim, unit-norm sanity check,
+//! non-finite-gradient rejection) are what the conformance suite
+//! exercises end to end.
+//!
+//! # Wiring
+//!
+//! `TrainSpec::fault_plan` (builder), the `[chaos]` config section /
+//! `--chaos.plan`/`--chaos.seed` CLI keys ([`config`]), and the sweep
+//! `chaos` axis (preset names: [`FaultPlan::PRESETS`], or `none`) all
+//! install the same wrapper via `session::harness`.  Event counts
+//! surface on every [`Report`](crate::session::Report) (`report.chaos`)
+//! and in the sweep table/CSV/JSON artifacts; the CI smoke sweep runs a
+//! `flaky-net` cell per TCP-capable solver and asserts nonzero injected
+//! events (`scripts/check_smoke_bytes.py`).
+//!
+//! ```no_run
+//! use sfw::chaos::FaultPlan;
+//! use sfw::session::{TaskSpec, TrainSpec};
+//!
+//! let report = TrainSpec::new(TaskSpec::ms_small())
+//!     .algo("sfw-asyn")
+//!     .workers(4)
+//!     .fault_plan(FaultPlan::flaky_net(7))
+//!     .run()
+//!     .expect("train under chaos");
+//! println!("injected events: {}", report.chaos.events_total());
+//! ```
+
+pub mod config;
+pub mod counters;
+pub mod link;
+pub mod plan;
+
+pub use config::{reject_chaos_keys, CHAOS_KEYS};
+pub use counters::{ChaosCounters, ChaosSnapshot};
+pub use link::{ChaosInject, ChaosWorker};
+pub use plan::{
+    Crash, CrashMode, DelayModel, FaultPlan, RankPlan, Reorder, DEFAULT_CHAOS_SEED,
+};
+
+/// Errors surfaced by chaos plan resolution and validation (never by the
+/// injection hot path — a resolved plan cannot fail).
+#[derive(Debug, thiserror::Error)]
+pub enum ChaosError {
+    #[error("unknown [chaos] key '{key}' (valid: {valid})")]
+    UnknownKey { key: String, valid: String },
+    #[error("unknown chaos plan '{value}' (valid: {valid})")]
+    UnknownPlan { value: String, valid: String },
+    #[error("[chaos] {key} = '{value}': expected {expected}")]
+    BadValue { key: String, value: String, expected: String },
+    #[error(
+        "--{key} does not apply to 'sfw {cmd}': fault injection is configured on the \
+         training master (use `sfw train` or `sfw sweep`)"
+    )]
+    NotApplicable { cmd: String, key: String },
+}

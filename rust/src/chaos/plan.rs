@@ -1,0 +1,333 @@
+//! [`FaultPlan`]: the declarative, seeded script of faults a run is
+//! subjected to.  A plan is data — it carries no clocks and no
+//! randomness of its own; every decision made from it is drawn from a
+//! per-rank RNG derived from `(plan.seed, rank)`, so the same plan
+//! replays the same fates regardless of transport or wall-clock timing.
+//!
+//! Plans are built programmatically (tests) or from the named presets
+//! the `[chaos]` config section / `--chaos.plan` CLI key and the sweep
+//! `chaos` axis accept: [`FaultPlan::PRESETS`].
+
+use std::time::Duration;
+
+use crate::chaos::ChaosError;
+use crate::util::rng::Rng;
+
+/// Default seed for preset plans resolved from config (`--chaos.seed`
+/// overrides).  Fixed so that two invocations of the same preset replay
+/// the same fault script by default.
+pub const DEFAULT_CHAOS_SEED: u64 = 0xC4A05;
+
+/// Per-message latency model.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum DelayModel {
+    /// No injected delay (no RNG consumed).
+    #[default]
+    None,
+    /// Every message sleeps exactly this long.
+    Fixed(Duration),
+    /// Heavy-tailed delay in the style of the paper's Assumption 3: the
+    /// message sleeps `unit * (Geometric(p) - 1)` — usually nothing,
+    /// occasionally a long tail (small `p` = heavier tail).
+    Geometric { unit: Duration, p: f64 },
+}
+
+impl DelayModel {
+    /// Draw one delay.  Consumes RNG only for the geometric model, so a
+    /// rank's decision stream is a function of its enabled faults.
+    pub(crate) fn draw(&self, rng: &mut Rng) -> Option<Duration> {
+        match *self {
+            DelayModel::None => None,
+            DelayModel::Fixed(d) => (d > Duration::ZERO).then_some(d),
+            DelayModel::Geometric { unit, p } => {
+                let mult = rng.geometric(p).saturating_sub(1);
+                (mult > 0).then(|| unit.saturating_mul(mult.min(u32::MAX as u64) as u32))
+            }
+        }
+    }
+}
+
+/// Reorder-within-window: a sent message may be held and released only
+/// after up to `window` later sends (or when the worker next blocks on
+/// `recv`, whichever comes first — holding past that point would
+/// deadlock a ping-pong protocol).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Reorder {
+    pub window: u32,
+    pub prob: f64,
+}
+
+/// What happens when a worker crashes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CrashMode {
+    /// The worker process dies: its link closes, nothing it held is
+    /// delivered, and it never comes back.  Only solvers that tolerate
+    /// worker loss (the asynchronous ones) accept plans containing this.
+    Halt,
+    /// Crash-and-recover: the worker freezes for `stall`, then resumes.
+    /// Composed with the async protocols this exercises the paper's
+    /// actual recovery path — the stalled worker's next update is stale,
+    /// gets dropped by the delay gate, and the master resynchronizes it
+    /// with a catch-up slice.
+    Restart { stall: Duration },
+}
+
+/// Scripted crash: fires when the rank is about to make its
+/// `at_send`-th uplink send (0-based).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Crash {
+    pub at_send: u64,
+    pub mode: CrashMode,
+}
+
+/// The fault script of one worker rank.  `Default` is fully inert.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RankPlan {
+    /// Injected latency per uplink (worker -> master) message.
+    pub send_delay: DelayModel,
+    /// Injected latency per downlink (master -> worker) message.
+    pub recv_delay: DelayModel,
+    /// Probability an uplink frame is lost on the wire (recovered by
+    /// retransmission after [`FaultPlan::retransmit`]).
+    pub drop_prob: f64,
+    /// Probability an uplink frame is delivered twice.
+    pub dup_prob: f64,
+    /// Probability an uplink frame has one payload bit flipped.
+    pub corrupt_prob: f64,
+    /// Reorder-within-window on the uplink.
+    pub reorder: Option<Reorder>,
+    /// Scripted crash at a fixed send index.
+    pub crash: Option<Crash>,
+    /// Late join: sleep this long before the rank's first protocol op.
+    pub join_delay: Option<Duration>,
+}
+
+impl RankPlan {
+    /// True when this rank's script injects nothing.
+    pub fn is_inert(&self) -> bool {
+        *self == RankPlan::default()
+    }
+}
+
+/// A complete, seeded fault-injection script for one run.
+///
+/// `default_rank` applies to every rank without an entry in
+/// `overrides`.  See the module docs of [`crate::chaos`] for the fault
+/// model and the determinism guarantees.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Label used in spec echoes and as the sweep `chaos` axis value
+    /// (a preset name, or `"custom"` for programmatic plans).
+    pub name: String,
+    /// Seed of the per-rank decision RNGs.
+    pub seed: u64,
+    /// Script applied to ranks without an override.
+    pub default_rank: RankPlan,
+    /// `(rank, script)` overrides.
+    pub overrides: Vec<(usize, RankPlan)>,
+    /// Retransmission penalty paid when a frame is dropped or rejected
+    /// as corrupt: the original is delivered after this much extra
+    /// latency (stream transports retransmit; they do not lose frames).
+    pub retransmit: Duration,
+}
+
+impl FaultPlan {
+    /// Names accepted by [`FaultPlan::preset`], the `[chaos]` config
+    /// section and the sweep `chaos` axis (which additionally accepts
+    /// `"none"` = no injection at all).
+    pub const PRESETS: &'static [&'static str] =
+        &["clean", "slow-tail", "flaky-net", "crash-1"];
+
+    /// An inert plan named `name` (building block for the presets).
+    fn named(name: &str, seed: u64) -> FaultPlan {
+        FaultPlan {
+            name: name.to_string(),
+            seed,
+            default_rank: RankPlan::default(),
+            overrides: Vec::new(),
+            retransmit: Duration::from_millis(1),
+        }
+    }
+
+    /// Fully inert plan: the wrapper is installed (so the event counters
+    /// exist and read zero) but injects nothing.  The control cell of
+    /// every chaos comparison.
+    pub fn clean(seed: u64) -> FaultPlan {
+        FaultPlan::named("clean", seed)
+    }
+
+    /// One heavy-tailed straggler rank (rank 0), everyone else clean —
+    /// the paper's Assumption-3 scenario on the wire instead of in the
+    /// compute model.
+    pub fn slow_tail(seed: u64) -> FaultPlan {
+        let mut p = FaultPlan::named("slow-tail", seed);
+        p.overrides.push((
+            0,
+            RankPlan {
+                send_delay: DelayModel::Geometric { unit: Duration::from_micros(300), p: 0.25 },
+                ..RankPlan::default()
+            },
+        ));
+        p
+    }
+
+    /// Every rank sees a lossy, jittery, occasionally-corrupting link:
+    /// fixed per-message latency (guarantees nonzero delay events — the
+    /// CI smoke check relies on that), drops, duplicates, bit flips and
+    /// a small reorder window.
+    pub fn flaky_net(seed: u64) -> FaultPlan {
+        let mut p = FaultPlan::named("flaky-net", seed);
+        p.default_rank = RankPlan {
+            send_delay: DelayModel::Fixed(Duration::from_micros(200)),
+            recv_delay: DelayModel::Geometric { unit: Duration::from_micros(100), p: 0.5 },
+            drop_prob: 0.10,
+            dup_prob: 0.08,
+            corrupt_prob: 0.06,
+            reorder: Some(Reorder { window: 2, prob: 0.10 }),
+            crash: None,
+            join_delay: None,
+        };
+        p
+    }
+
+    /// Rank 0 crashes at its 5th send and recovers after a stall; rank 1
+    /// (when present) joins late.  `Restart` rather than `Halt` so the
+    /// synchronous barrier solver survives the same preset the async
+    /// solvers do — true worker death is Halt, which sfw-dist rejects
+    /// at spec validation (its barrier cannot outlive a worker).
+    pub fn crash_one(seed: u64) -> FaultPlan {
+        let mut p = FaultPlan::named("crash-1", seed);
+        p.overrides.push((
+            0,
+            RankPlan {
+                crash: Some(Crash {
+                    at_send: 5,
+                    mode: CrashMode::Restart { stall: Duration::from_millis(30) },
+                }),
+                ..RankPlan::default()
+            },
+        ));
+        p.overrides.push((
+            1,
+            RankPlan {
+                join_delay: Some(Duration::from_millis(10)),
+                ..RankPlan::default()
+            },
+        ));
+        p
+    }
+
+    /// Resolve a preset by name ([`FaultPlan::PRESETS`]); unknown names
+    /// error with the valid listing, registry-style.
+    pub fn preset(name: &str, seed: u64) -> Result<FaultPlan, ChaosError> {
+        match name {
+            "clean" => Ok(FaultPlan::clean(seed)),
+            "slow-tail" => Ok(FaultPlan::slow_tail(seed)),
+            "flaky-net" => Ok(FaultPlan::flaky_net(seed)),
+            "crash-1" => Ok(FaultPlan::crash_one(seed)),
+            other => Err(ChaosError::UnknownPlan {
+                value: other.to_string(),
+                valid: FaultPlan::PRESETS.join(" | "),
+            }),
+        }
+    }
+
+    /// The script applied to `rank`.
+    pub fn rank(&self, rank: usize) -> &RankPlan {
+        self.overrides
+            .iter()
+            .find(|(r, _)| *r == rank)
+            .map(|(_, p)| p)
+            .unwrap_or(&self.default_rank)
+    }
+
+    /// Decision RNG of `rank`: a pure function of `(seed, rank)` — the
+    /// root of the bit-identical-replay guarantee.
+    pub fn rank_rng(&self, rank: usize) -> Rng {
+        Rng::new(self.seed ^ (rank as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// True if any rank's script can permanently kill a worker
+    /// ([`CrashMode::Halt`]).  Solvers whose protocol cannot outlive a
+    /// worker (the synchronous barrier) reject such plans up front.
+    pub fn has_halt(&self) -> bool {
+        let halts = |p: &RankPlan| {
+            matches!(p.crash, Some(Crash { mode: CrashMode::Halt, .. }))
+        };
+        halts(&self.default_rank) || self.overrides.iter().any(|(_, p)| halts(p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_unknown_lists_valid_names() {
+        for name in FaultPlan::PRESETS {
+            let p = FaultPlan::preset(name, 7).unwrap();
+            assert_eq!(&p.name, name);
+            assert_eq!(p.seed, 7);
+        }
+        let err = FaultPlan::preset("slow-taill", 7).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("slow-taill"), "{msg}");
+        for name in FaultPlan::PRESETS {
+            assert!(msg.contains(name), "error should list '{name}': {msg}");
+        }
+    }
+
+    #[test]
+    fn rank_overrides_fall_back_to_default() {
+        let p = FaultPlan::slow_tail(1);
+        assert!(!p.rank(0).is_inert());
+        assert!(p.rank(1).is_inert());
+        assert!(p.rank(17).is_inert());
+        assert!(FaultPlan::flaky_net(1).rank(17).drop_prob > 0.0);
+    }
+
+    #[test]
+    fn rank_rngs_are_deterministic_and_distinct() {
+        let p = FaultPlan::flaky_net(42);
+        let mut a = p.rank_rng(0);
+        let mut b = p.rank_rng(0);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut a = p.rank_rng(0);
+        let mut c = p.rank_rng(1);
+        let same = (0..64).filter(|_| a.next_u64() == c.next_u64()).count();
+        assert!(same < 2, "rank streams must differ");
+    }
+
+    #[test]
+    fn halt_detection() {
+        assert!(!FaultPlan::crash_one(1).has_halt(), "crash-1 is a Restart preset");
+        let mut p = FaultPlan::clean(1);
+        p.overrides.push((
+            0,
+            RankPlan {
+                crash: Some(Crash { at_send: 2, mode: CrashMode::Halt }),
+                ..RankPlan::default()
+            },
+        ));
+        assert!(p.has_halt());
+    }
+
+    #[test]
+    fn delay_models_draw_deterministically() {
+        let mut rng = Rng::new(5);
+        assert_eq!(DelayModel::None.draw(&mut rng), None);
+        assert_eq!(
+            DelayModel::Fixed(Duration::from_micros(10)).draw(&mut rng),
+            Some(Duration::from_micros(10))
+        );
+        assert_eq!(DelayModel::Fixed(Duration::ZERO).draw(&mut rng), None);
+        let g = DelayModel::Geometric { unit: Duration::from_micros(10), p: 0.5 };
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        for _ in 0..100 {
+            assert_eq!(g.draw(&mut r1), g.draw(&mut r2));
+        }
+    }
+}

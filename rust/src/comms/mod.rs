@@ -42,6 +42,14 @@
 //! workers regenerate the dataset and the batch schedule locally from
 //! them — shipping the data is exactly what the paper's protocol avoids.
 //!
+//! # Fault injection
+//!
+//! [`crate::chaos`] wraps any [`WorkerLink`] in a deterministic, seeded
+//! fault layer (delays, drops, duplicates, reordering, bit corruption,
+//! crashes, late joins) behind these same traits — see its fault-model
+//! table for the semantics and replay guarantees, and
+//! `rust/tests/chaos.rs` for the per-solver conformance matrix.
+//!
 //! [`metrics::Counters`]: crate::metrics::Counters
 
 pub mod codec;
@@ -50,7 +58,10 @@ pub mod tcp;
 
 pub use codec::{Dec, Enc};
 pub use local::{local_links, LocalMaster, LocalWorker};
-pub use tcp::{connect_retry, tcp_master, tcp_master_on, tcp_worker, TcpMaster, TcpWorker};
+pub use tcp::{
+    connect_retry, tcp_master, tcp_master_on, tcp_master_on_with, tcp_worker, TcpMaster,
+    TcpWorker, DEFAULT_HELLO_TIMEOUT,
+};
 
 /// Length-prefixed frame header size: `[u32 payload_len][u8 tag]`.
 pub const FRAME_HEADER: usize = 5;

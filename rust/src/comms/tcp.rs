@@ -77,6 +77,22 @@ pub struct TcpMaster<Up, Down> {
     _down: PhantomData<fn(Down)>,
 }
 
+/// How long the accept loop waits for a freshly-connected client's
+/// hello frame before rejecting it as a silent stray (half-open client,
+/// health check).  Overridable via [`tcp_master_on_with`]: chaos/CI
+/// tests shrink it so a silent stray costs milliseconds, saturated CI
+/// hosts can grow it.
+pub const DEFAULT_HELLO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// [`tcp_master_on_with`] with [`DEFAULT_HELLO_TIMEOUT`].
+pub fn tcp_master_on<Up: Wire, Down: Wire>(
+    listener: TcpListener,
+    workers: usize,
+    counters: Arc<Counters>,
+) -> std::io::Result<TcpMaster<Up, Down>> {
+    tcp_master_on_with(listener, workers, counters, DEFAULT_HELLO_TIMEOUT)
+}
+
 /// Accept `workers` valid worker connections on an **already-bound**
 /// listener.  Binding first (and handing the listener here) is what lets
 /// callers learn the port of an ephemeral bind before any worker
@@ -85,11 +101,13 @@ pub struct TcpMaster<Up, Down> {
 /// A stray or misbehaving connection (port scanner, bad hello frame,
 /// out-of-range or duplicate rank) is logged and dropped; the accept
 /// loop keeps waiting for the remaining valid workers rather than
-/// aborting the run.
-pub fn tcp_master_on<Up: Wire, Down: Wire>(
+/// aborting the run.  `hello_timeout` bounds how long a silent stray
+/// can stall acceptance.
+pub fn tcp_master_on_with<Up: Wire, Down: Wire>(
     listener: TcpListener,
     workers: usize,
     counters: Arc<Counters>,
+    hello_timeout: Duration,
 ) -> std::io::Result<TcpMaster<Up, Down>> {
     let (tx, rx) = channel::<Up>();
     let mut write_halves: Vec<Option<TcpStream>> = (0..workers).map(|_| None).collect();
@@ -117,7 +135,7 @@ pub fn tcp_master_on<Up: Wire, Down: Wire>(
         // not stall acceptance of the real workers: the hello must arrive
         // promptly.  The timeout is cleared once the worker is validated —
         // protocol reads may legitimately block for minutes.
-        let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+        let _ = stream.set_read_timeout(Some(hello_timeout));
         let rank = match read_frame(&mut stream) {
             Ok((tag, payload)) => match decode_hello(tag, &payload) {
                 Ok(rank) if rank < workers && write_halves[rank].is_none() => rank,
@@ -325,6 +343,7 @@ mod tests {
             );
             let up = master.recv().unwrap();
             assert_eq!(up.worker_id, 0);
+            assert_eq!(up.k, 3);
             assert_eq!(up.grad.data, vec![0.5, -0.5]);
             master.send_to(0, DistDown::Stop);
         });
@@ -338,6 +357,7 @@ mod tests {
         }
         w.send(DistUp {
             worker_id: 0,
+            k: 3,
             loss_sum: 1.0,
             grad: Mat::from_vec(1, 2, vec![0.5, -0.5]),
         });
@@ -366,6 +386,36 @@ mod tests {
         assert!(matches!(w.recv(), Some(MasterMsg::Stop)));
         drop(bad);
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn hello_timeout_knob_unsticks_a_silent_stray() {
+        // A connected-but-silent client (half-open peer) must only stall
+        // acceptance for the configured hello timeout — the knob exists
+        // so tests like this one pay milliseconds, not the 10s default.
+        let counters = Arc::new(Counters::new());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let master = std::thread::spawn(move || {
+            tcp_master_on_with::<UpdateMsg, MasterMsg>(
+                listener,
+                1,
+                counters,
+                Duration::from_millis(100),
+            )
+            .unwrap()
+        });
+        let _silent = TcpStream::connect(addr).unwrap(); // never says hello
+        std::thread::sleep(Duration::from_millis(20));
+        let start = Instant::now();
+        let _w = tcp_worker::<UpdateMsg, MasterMsg>(&addr.to_string(), 0).unwrap();
+        let m = master.join().unwrap();
+        assert_eq!(m.workers(), 1);
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "silent stray stalled acceptance for {:?}",
+            start.elapsed()
+        );
     }
 
     #[test]

@@ -186,7 +186,7 @@ pub(crate) fn run_dfw_power_impl(obj: Arc<dyn Objective>, opts: &DfwOptions) -> 
         let _ = h.join();
     }
     evaluator.finish();
-    RunResult { x, counters, trace }
+    RunResult { x, counters, trace, chaos: Default::default() }
 }
 
 #[cfg(test)]

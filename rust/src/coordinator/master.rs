@@ -52,41 +52,56 @@ pub fn run_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
 
     while log.t_m() < opts.iterations {
         let Some(upd) = link.recv() else { break };
+        let w = upd.worker_id as usize;
         // an out-of-range rank (corrupt or misconfigured external
         // worker) must not index the link's reply table
-        if upd.worker_id as usize >= link.workers() {
+        if w >= link.workers() {
             eprintln!("sfw-asyn: ignoring update with bad worker id {}", upd.worker_id);
             continue;
         }
         let t_m = log.t_m();
-        // a sync point from the future (worker resumed against the wrong
-        // master, or frame corruption that still decodes) would wrap the
-        // delay subtraction — reject it like a bad rank
+        // The claimed sync point is the worker's true iterate version —
+        // the quantity Thm 1's delay gate is about — so it is what gets
+        // gated and sliced on, even though a bit flip can mangle it.  A
+        // FUTURE claim would wrap the delay subtraction and cannot be
+        // sliced for: reject it, but still REPLY (empty catch-up) —
+        // the sender is a rank-addressed worker blocked on this reply,
+        // and silence would wedge its ping-pong loop (fatal with a
+        // single worker).  An in-range corrupted claim at worst
+        // misjudges one gate decision and produces a gapped slice,
+        // which the worker's gap-tolerant `replay_after` refuses to
+        // apply — its next, honest claim self-heals.
         if upd.t_w > t_m {
             eprintln!(
-                "sfw-asyn: ignoring update claiming future iterate (t_w={} > t_m={t_m})",
+                "sfw-asyn: rejecting update claiming future iterate (t_w={} > t_m={t_m})",
                 upd.t_w
             );
+            counters.add_dropped();
+            link.send_to(w, MasterMsg::Updates { t_m, entries: Vec::new() });
+            continue;
+        }
+        // corrupted-but-decodable update vectors (wrong dims, NaN, wild
+        // norms) are counted, skipped and the sender resynchronized —
+        // never appended to the log, never a panic
+        if !crate::coordinator::sane_rank_one(&upd.u, &upd.v, d1, d2) {
+            eprintln!("sfw-asyn: discarding corrupt update from worker {w}");
+            counters.add_dropped();
+            link.send_to(w, MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) });
             continue;
         }
         let delay = t_m - upd.t_w;
         if delay > opts.tau {
             // Alg 3 line 7: drop, but resynchronize the straggler.
             counters.add_dropped();
-            link.send_to(
-                upd.worker_id as usize,
-                MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) },
-            );
+            link.send_to(w, MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) });
             continue;
         }
+        counters.note_accepted_delay(delay);
         let e = log.append(upd.u, upd.v, theta);
         x.fw_rank_one_update(e.eta, e.scale, &e.u, &e.v);
         counters.add_iteration();
         let t_m = log.t_m();
-        link.send_to(
-            upd.worker_id as usize,
-            MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) },
-        );
+        link.send_to(w, MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) });
         if t_m % opts.eval_every == 0 || t_m == opts.iterations {
             evaluator.submit(trace.elapsed(), t_m, x.clone());
         }

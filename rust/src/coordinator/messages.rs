@@ -41,6 +41,16 @@ pub struct UpdateMsg {
     pub m: u32,
 }
 
+impl UpdateMsg {
+    /// Leading payload bytes the chaos layer must not bit-flip: the
+    /// `worker_id` routing field.  A flipped rank would misroute the
+    /// master's reply (Byzantine misrouting — out of scope for the
+    /// rank-addressed reply protocol); everything after it — `t_w`,
+    /// telemetry, the update vectors — is fair corruption game, handled
+    /// by the master's semantic gates.
+    pub const CORRUPT_GUARD: usize = 4;
+}
+
 impl Wire for UpdateMsg {
     fn tag(&self) -> u8 {
         TAG_UPDATE
@@ -210,13 +220,28 @@ pub const TAG_DIST_STOP: u8 = 2;
 
 /// Worker -> master round reply: the dense partial gradient —
 /// O(D1 * D2) on the wire, the cost the paper's protocol eliminates.
+/// Carries the round index `k` it answers, so the barrier can discard
+/// duplicated or straggling frames from earlier rounds instead of
+/// folding a stale gradient into the wrong reduction.
 #[derive(Clone, Debug)]
 pub struct DistUp {
     pub worker_id: u32,
+    /// Round (master iteration) this reply answers — echoed from
+    /// [`DistDown::Compute`].
+    pub k: u64,
     /// Minibatch loss telemetry (kept on the wire for parity with Alg 3;
     /// the master reports full-objective loss via the evaluator).
     pub loss_sum: f64,
     pub grad: Mat,
+}
+
+impl DistUp {
+    /// Leading payload bytes the chaos layer must not bit-flip:
+    /// `worker_id` (reply routing) and `k` (barrier identity).  A
+    /// flipped round index would make the barrier wait forever for a
+    /// reply that already arrived under the wrong round — the
+    /// synchronous protocol has no retransmission to recover with.
+    pub const CORRUPT_GUARD: usize = 4 + 8;
 }
 
 impl Wire for DistUp {
@@ -227,13 +252,14 @@ impl Wire for DistUp {
     /// O(1) closed form, pinned to the codec by property test.
     fn wire_bytes(&self) -> u64 {
         crate::comms::FRAME_HEADER as u64
-            + (4 + 8 + 4 + 4) as u64
+            + (4 + 8 + 8 + 4 + 4) as u64
             + 4 * self.grad.data.len() as u64
     }
 
     fn encode(&self, buf: &mut Vec<u8>) {
         let mut e = Enc(buf);
         e.u32(self.worker_id);
+        e.u64(self.k);
         e.f64(self.loss_sum);
         e.mat(&self.grad);
     }
@@ -243,7 +269,7 @@ impl Wire for DistUp {
             return Err(WireError::BadTag(tag));
         }
         let mut d = Dec::new(payload);
-        let msg = DistUp { worker_id: d.u32()?, loss_sum: d.f64()?, grad: d.mat()? };
+        let msg = DistUp { worker_id: d.u32()?, k: d.u64()?, loss_sum: d.f64()?, grad: d.mat()? };
         d.finish()?;
         Ok(msg)
     }
@@ -399,7 +425,7 @@ mod tests {
     fn dist_messages_cost_d1_times_d2() {
         let x = Mat::zeros(30, 40);
         let down = DistDown::Compute { k: 1, m_share: 16, x: Arc::new(x.clone()) };
-        let up = DistUp { worker_id: 0, loss_sum: 0.0, grad: x };
+        let up = DistUp { worker_id: 0, k: 1, loss_sum: 0.0, grad: x };
         // both directions carry the dense matrix: >= 4 * D1 * D2 bytes
         assert!(down.wire_bytes() >= 4 * 30 * 40);
         assert!(up.wire_bytes() >= 4 * 30 * 40);

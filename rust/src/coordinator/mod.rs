@@ -37,3 +37,28 @@ pub use svrf_asyn::SvrfAsynOptions;
 pub use sync::DistOptions;
 pub use update_log::{replay, replay_after, UpdateLog};
 pub use worker::Straggler;
+
+/// Semantic sanity gate for a received rank-one update `{u, v}`: the
+/// protocol's vectors are unit singular vectors from the LMO, so
+/// anything with the wrong dimensions, non-finite entries, or a norm far
+/// from 1 is a corrupted frame that still decoded — folding it into the
+/// log would blow the iterate out of the nuclear ball (or poison it with
+/// NaN).  The masters count such updates as dropped and resynchronize
+/// the sender instead.
+pub(crate) fn sane_rank_one(u: &[f32], v: &[f32], d1: usize, d2: usize) -> bool {
+    if u.len() != d1 || v.len() != d2 {
+        return false;
+    }
+    let norm_ok = |x: &[f32]| {
+        let mut s = 0.0f64;
+        for &a in x {
+            if !a.is_finite() {
+                return false;
+            }
+            s += a as f64 * a as f64;
+        }
+        let n = s.sqrt();
+        (0.5..=2.0).contains(&n)
+    };
+    norm_ok(u) && norm_ok(v)
+}

@@ -21,6 +21,7 @@
 use std::sync::Arc;
 
 use crate::algo::schedule::BatchSchedule;
+use crate::chaos::ChaosCounters;
 use crate::coordinator::worker::Straggler;
 use crate::linalg::Mat;
 use crate::metrics::{Counters, LossTrace};
@@ -51,6 +52,9 @@ pub struct RunResult {
     pub x: Mat,
     pub counters: Arc<Counters>,
     pub trace: Arc<LossTrace>,
+    /// Injected-fault accounting (all zeros when no
+    /// [`FaultPlan`](crate::chaos::FaultPlan) was installed).
+    pub chaos: Arc<ChaosCounters>,
 }
 
 #[cfg(test)]

@@ -136,7 +136,7 @@ where
         let _ = h.join();
     }
     evaluator.finish();
-    RunResult { x, counters, trace }
+    RunResult { x, counters, trace, chaos: Default::default() }
 }
 
 #[cfg(test)]

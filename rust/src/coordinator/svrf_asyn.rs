@@ -66,7 +66,6 @@ pub(crate) fn run_svrf_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
     evaluator.submit(trace.elapsed(), 0, x.clone());
 
     let w_count = link.workers();
-    let mut last_t = vec![0u64; w_count];
     let mut last_epoch = vec![0u64; w_count];
 
     // Epoch 0 boundary: initial UpdateW broadcast (workers block on it).
@@ -86,13 +85,29 @@ pub(crate) fn run_svrf_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
                 continue;
             }
             let t_m = log.t_m();
-            // a future sync point would wrap the staleness subtraction —
-            // reject it like a bad rank
+            // The claimed sync point is gated and sliced on (it is the
+            // worker's true iterate version); a FUTURE claim is frame
+            // corruption — reject it but still reply (empty catch-up)
+            // so the blocked sender's ping-pong loop stays live, and
+            // let its next honest claim self-heal.  An in-range
+            // corrupted claim at worst misjudges one gate decision and
+            // yields a gapped slice, which the worker's gap-tolerant
+            // `replay_after` refuses to apply.  (Same scheme as the
+            // plain SFW-asyn master.)
             if upd.t_w > t_m {
                 eprintln!(
-                    "svrf-asyn: ignoring update claiming future iterate (t_w={} > t_m={t_m})",
+                    "svrf-asyn: rejecting update claiming future iterate (t_w={} > t_m={t_m})",
                     upd.t_w
                 );
+                counters.add_dropped();
+                link.send_to(w, MasterMsg::Updates { t_m, entries: Vec::new() });
+                continue;
+            }
+            // corrupted-but-decodable update vectors: count, skip, resync
+            if !crate::coordinator::sane_rank_one(&upd.u, &upd.v, d1, d2) {
+                eprintln!("svrf-asyn: discarding corrupt update from worker {w}");
+                counters.add_dropped();
+                link.send_to(w, MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) });
                 continue;
             }
             // computed against an older epoch's W -> drop + boundary resync
@@ -100,9 +115,8 @@ pub(crate) fn run_svrf_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
                 counters.add_dropped();
                 link.send_to(
                     w,
-                    MasterMsg::UpdateW { t_m, entries: log.slice_from(last_t[w]) },
+                    MasterMsg::UpdateW { t_m, entries: log.slice_from(upd.t_w) },
                 );
-                last_t[w] = t_m;
                 last_epoch[w] = epoch;
                 continue;
             }
@@ -113,9 +127,10 @@ pub(crate) fn run_svrf_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
                     w,
                     MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) },
                 );
-                last_t[w] = t_m;
                 continue;
             }
+            counters.note_accepted_delay(t_m - upd.t_w);
+            let t_w = upd.t_w;
             let inner_k = (t_m - epoch_start) + 1;
             let e = log.append_custom(upd.u, upd.v, eta(inner_k), -theta);
             x.fw_rank_one_update(e.eta, e.scale, &e.u, &e.v);
@@ -123,9 +138,8 @@ pub(crate) fn run_svrf_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
             let t_m = log.t_m();
             link.send_to(
                 w,
-                MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) },
+                MasterMsg::Updates { t_m, entries: log.slice_from(t_w) },
             );
-            last_t[w] = t_m;
             if t_m % opts.eval_every == 0 {
                 evaluator.submit(trace.elapsed(), t_m, x.clone());
             }
@@ -169,8 +183,8 @@ pub(crate) fn run_svrf_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: S
 
     // Block on the initial epoch-0 boundary.
     match link.recv() {
-        Some(MasterMsg::UpdateW { t_m, entries }) => {
-            t_w = replay_after(&mut x, &entries, t_w).max(t_m);
+        Some(MasterMsg::UpdateW { entries, .. }) => {
+            t_w = replay_after(&mut x, &entries, t_w);
             epoch_start = t_w;
         }
         _ => return,
@@ -204,11 +218,13 @@ pub(crate) fn run_svrf_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: S
             m: m as u32,
         });
         match link.recv() {
-            Some(MasterMsg::Updates { t_m, entries }) => {
-                t_w = replay_after(&mut x, &entries, t_w).max(t_m);
+            Some(MasterMsg::Updates { entries, .. }) => {
+                // gap-tolerant: t_w advances only as far as entries
+                // actually applied (see the plain worker loop)
+                t_w = replay_after(&mut x, &entries, t_w);
             }
-            Some(MasterMsg::UpdateW { t_m, entries }) => {
-                t_w = replay_after(&mut x, &entries, t_w).max(t_m);
+            Some(MasterMsg::UpdateW { entries, .. }) => {
+                t_w = replay_after(&mut x, &entries, t_w);
                 epoch_start = t_w;
                 w_snap.data.copy_from_slice(&x.data);
                 let _ = engine.grad_sum(&w_snap, &all, &mut full_g);

@@ -70,24 +70,66 @@ pub(crate) fn run_dist_master<L: MasterLink<DistUp, DistDown> + ?Sized>(
             link.send_to(w, DistDown::Compute { k, m_share, x: xa.clone() });
         }
         // barrier: wait for ALL workers (the straggler pays here); slot
-        // replies by rank so the reduction order is deterministic.  An
-        // out-of-range or duplicate rank is a protocol violation by a
-        // hello-validated peer (ranks are checked at accept): abort the
-        // round loudly rather than corrupt the gradient silently or
-        // deadlock waiting for a reply that will never come.
+        // replies by rank so the reduction order is deterministic.  A
+        // reply with an out-of-range rank, the wrong round index, or a
+        // rank that already answered this round (duplicated / reordered
+        // frames under fault injection) is counted and skipped — never a
+        // panic, and never folded into the wrong reduction.  Losing all
+        // workers mid-round aborts the run gracefully with the progress
+        // made so far.
         let mut replies: Vec<Option<Mat>> = (0..workers).map(|_| None).collect();
-        for _ in 0..workers {
-            let up = link.recv().expect("worker died mid-round");
+        let mut answered = vec![false; workers];
+        let mut filled = 0usize;
+        while filled < workers {
+            let Some(up) = link.recv() else {
+                eprintln!(
+                    "sfw-dist: all workers lost mid-round {k}; aborting at t={}",
+                    k - 1
+                );
+                evaluator.submit(trace.elapsed(), k - 1, x.clone());
+                return x;
+            };
             let w = up.worker_id as usize;
-            assert!(
-                w < workers && replies[w].is_none(),
-                "sfw-dist: protocol violation — reply rank {w} out of range or duplicated"
-            );
-            replies[w] = Some(up.grad);
+            if w >= workers || up.k != k || answered[w] {
+                eprintln!(
+                    "sfw-dist: ignoring reply (rank {w}, round {} vs {k}, answered={})",
+                    up.k,
+                    *answered.get(w).unwrap_or(&false)
+                );
+                counters.add_dropped();
+                continue;
+            }
+            answered[w] = true;
+            filled += 1;
+            // a corrupted gradient (wrong shape or non-finite entries)
+            // must not poison the reduction: count it as a dropped
+            // contribution and reduce without it
+            let ok = up.grad.rows == d1
+                && up.grad.cols == d2
+                && up.grad.data.iter().all(|v| v.is_finite());
+            if ok {
+                replies[w] = Some(up.grad);
+            } else {
+                eprintln!("sfw-dist: discarding corrupt gradient from rank {w} in round {k}");
+                counters.add_dropped();
+            }
         }
         grad.fill(0.0);
+        let mut contributed = false;
         for g in replies.into_iter().flatten() {
             grad.axpy(1.0, &g);
+            contributed = true;
+        }
+        // every contribution corrupt (possible under fault injection):
+        // an LMO on the zero matrix would hand back NaN vectors and
+        // poison the iterate — skip the update, keep the round
+        if !contributed {
+            eprintln!("sfw-dist: round {k} lost every gradient contribution; skipping update");
+            counters.add_iteration();
+            if k % opts.eval_every == 0 || k == opts.iterations {
+                evaluator.submit(trace.elapsed(), k, x.clone());
+            }
+            continue;
         }
         let s = master_engine.lmo(&grad);
         counters.add_lmo();
@@ -120,14 +162,15 @@ pub(crate) fn run_dist_worker<L: WorkerLink<DistUp, DistDown> + ?Sized, E: StepE
     let mut g = Mat::zeros(d1, d2);
     loop {
         match link.recv() {
-            Some(DistDown::Compute { m_share, x, .. }) => {
+            Some(DistDown::Compute { k, m_share, x }) => {
                 rng.sample_indices(n, m_share as usize, &mut idx);
                 let loss_sum = engine.grad_sum(&x, &idx, &mut g);
                 counters.add_grad_evals(idx.len() as u64);
                 if let Some(s) = &straggler {
                     s.sleep(&mut rng, idx.len() as u64);
                 }
-                link.send(DistUp { worker_id, loss_sum, grad: g.clone() });
+                // echo k so the barrier can match replies to rounds
+                link.send(DistUp { worker_id, k, loss_sum, grad: g.clone() });
             }
             Some(DistDown::Stop) | None => return,
         }
@@ -172,7 +215,7 @@ mod tests {
         let per_down =
             DistDown::Compute { k: 1, m_share: 1, x: Arc::new(Mat::zeros(10, 10)) }.wire_bytes();
         let per_up =
-            DistUp { worker_id: 0, loss_sum: 0.0, grad: Mat::zeros(10, 10) }.wire_bytes();
+            DistUp { worker_id: 0, k: 1, loss_sum: 0.0, grad: Mat::zeros(10, 10) }.wire_bytes();
         assert_eq!(s.bytes_down, 100 * 4 * per_down + 4 * DistDown::Stop.wire_bytes());
         assert_eq!(s.bytes_up, 100 * 4 * per_up);
         assert_eq!(s.msgs_up, 100 * 4);

@@ -78,16 +78,23 @@ pub fn replay(x: &mut Mat, entries: &[LogEntry]) -> Option<u64> {
     last
 }
 
-/// Idempotent replay: apply only entries with k > `t_cur` (a worker may
-/// receive overlapping slices around SVRF epoch boundaries; applying an
-/// entry twice would corrupt the iterate).  Returns the new iteration.
+/// Idempotent, gap-tolerant replay: apply only entries with k > `t_cur`
+/// (a worker may receive overlapping slices around SVRF epoch
+/// boundaries; applying an entry twice would corrupt the iterate), and
+/// stop at the first gap (a slice cut from a point ahead of ours — a
+/// corrupted sync-point claim echoed back; applying past the gap would
+/// silently skip updates).  Returns the new iteration: unchanged when
+/// the whole slice gapped, so the next exchange re-slices from the true
+/// sync point and self-heals.
 pub fn replay_after(x: &mut Mat, entries: &[LogEntry], t_cur: u64) -> u64 {
     let mut t = t_cur;
     for e in entries {
         if e.k <= t {
             continue;
         }
-        debug_assert_eq!(e.k, t + 1, "gap in catch-up slice");
+        if e.k > t + 1 {
+            break;
+        }
         x.fw_rank_one_update(e.eta, e.scale, &e.u, &e.v);
         t = e.k;
     }
@@ -173,6 +180,26 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn replay_after_refuses_gapped_slices() {
+        // A slice cut from a point ahead of the worker's sync point (the
+        // echo of a bit-corrupted t_w claim) must apply NOTHING: neither
+        // the iterate nor t advances, so the next exchange re-slices
+        // from the true sync point and self-heals.
+        let mut rng = Rng::new(84);
+        let log = random_log(&mut rng, 8, 3, 3, 1.0);
+        let mut x = crate::algo::init_rank_one(3, 3, 1.0, &mut rng.fork(3));
+        let before = x.clone();
+        // worker is at t=2; slice starts at entry 6 — gap of 3
+        let t = replay_after(&mut x, &log.slice_from(5), 2);
+        assert_eq!(t, 2, "t advanced across a gap");
+        assert_eq!(x.data, before.data, "iterate advanced across a gap");
+        // the contiguous prefix of a partially-gapped slice still applies
+        let mut y = before.clone();
+        let t = replay_after(&mut y, &log.slice_from(2), 2);
+        assert_eq!(t, 8);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::algo::schedule::BatchSchedule;
 use crate::algo::sfw::init_rank_one;
 use crate::comms::WorkerLink;
 use crate::coordinator::messages::{MasterMsg, UpdateMsg};
-use crate::coordinator::update_log::replay;
+use crate::coordinator::update_log::replay_after;
 use crate::metrics::Counters;
 use crate::util::rng::Rng;
 
@@ -87,9 +87,14 @@ pub fn run_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: StepEngine + 
             m: m as u32,
         });
         match link.recv() {
-            Some(MasterMsg::Updates { t_m, entries }) => {
-                replay(&mut x, &entries);
-                t_w = t_m;
+            Some(MasterMsg::Updates { entries, .. }) => {
+                // Idempotent, gap-tolerant replay: resync slices may
+                // overlap entries already applied, and a gapped slice
+                // (the echo of a corrupted t_w claim) applies nothing.
+                // t_w advances only as far as entries were actually
+                // applied — never to the reply's t_m blindly — so the
+                // next claim is always this iterate's true version.
+                t_w = replay_after(&mut x, &entries, t_w);
             }
             Some(MasterMsg::UpdateW { .. }) => {
                 unreachable!("plain SFW-asyn master never sends UpdateW")

@@ -52,6 +52,7 @@
 
 pub mod algo;
 pub mod benchkit;
+pub mod chaos;
 pub mod comms;
 pub mod config;
 pub mod coordinator;

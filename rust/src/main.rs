@@ -27,20 +27,32 @@
 //!             --tcp-bind 127.0.0.1:7070 --tcp-await true --seed 42 --batch 64
 //!   sfw worker --connect 127.0.0.1:7070 --rank 0 --algo svrf-asyn --seed 42 --batch 64
 //!   sfw train --config run.ini --train.workers 16
+//!   sfw train --algo sfw-asyn --workers 4 --chaos.plan flaky-net --chaos.seed 7
 //!   sfw sweep --smoke
 //!   sfw sweep --sweep.algos sfw-dist,sfw-asyn --sweep.workers 1,3,7,15 \
 //!             --sweep.target 0.02 --name speedup
+//!   sfw sweep --sweep.chaos none,slow-tail,flaky-net --sweep.algos sfw-asyn --name chaos
 //!   sfw sweep --config run.ini --sweep.tau 0,2,8,64 --jobs 2
 //!   sfw simulate --p 0.1 --workers 15 --iterations 500
 //!   sfw info --artifacts-dir artifacts
 
 use sfw::algo::engine::NativeEngine;
 use sfw::algo::schedule::BatchSchedule;
-use sfw::config::TrainConfig;
+use sfw::config::{Config, TrainConfig};
 use sfw::session::{registry, Report, TrainSpec};
 use sfw::sim::{simulate_asyn, simulate_dist, QueuingParams};
 use sfw::sweep::{SweepRunner, SweepSpec};
 use sfw::util::cli::Args;
+
+/// Parse the `--config` file once (empty config when absent) so both the
+/// `[train]`/`[data]` resolution and the `[chaos]` section read the same
+/// document.
+fn load_config_file(args: &Args) -> anyhow::Result<Config> {
+    Ok(match args.get_opt("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::new(),
+    })
+}
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().collect();
@@ -71,23 +83,43 @@ fn print_result(report: &Report) {
     }
     let s = report.snapshot();
     println!(
-        "\ncounters: iters={} grads={} lmos={} dropped={} up={}B/{}msg down={}B/{}msg",
+        "\ncounters: iters={} grads={} lmos={} dropped={} max-delay={} up={}B/{}msg down={}B/{}msg",
         s.iterations,
         s.grad_evals,
         s.lmo_calls,
         s.dropped_updates,
+        s.max_accepted_delay,
         s.bytes_up,
         s.msgs_up,
         s.bytes_down,
         s.msgs_down
     );
+    let c = &report.chaos;
+    if c.events_total() > 0 {
+        println!(
+            "chaos:    delays={} ({:.1}ms) drops={} dups={} corrupt={}+{} reorders={} \
+             crashes={} late-joins={}",
+            c.delays,
+            c.delay_ns as f64 / 1e6,
+            c.drops,
+            c.duplicates,
+            c.corrupt_delivered,
+            c.corrupt_rejected,
+            c.reorders,
+            c.crashes,
+            c.late_joins
+        );
+    }
 }
 
 /// `sfw train`: a thin Config/CLI -> `TrainSpec` mapping; all wiring
 /// (objective, engines, transport, metrics) lives in `sfw::session`.
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let cfg = TrainConfig::load(args)?;
-    let spec = TrainSpec::from_config(&cfg)?;
+    let file = load_config_file(args)?;
+    let cfg = TrainConfig::resolve(file.clone(), args)?;
+    let mut spec = TrainSpec::from_config(&cfg)?;
+    // `[chaos]` section / --chaos.* keys install a fault plan
+    spec = spec.maybe_fault_plan(sfw::chaos::config::resolve(&file, args)?);
     println!("{}", spec.echo());
     match spec.run() {
         Ok(report) => {
@@ -115,7 +147,11 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("sfw worker: --rank <R> is required"))?
         .parse()
         .map_err(|_| anyhow::anyhow!("sfw worker: --rank must be a non-negative integer"))?;
-    let cfg = TrainConfig::load(args)?;
+    let file = load_config_file(args)?;
+    // chaos is configured on the master (it wraps in-process links); a
+    // plan on the worker command would silently do nothing
+    sfw::chaos::reject_chaos_keys("worker", &file, args)?;
+    let cfg = TrainConfig::resolve(file, args)?;
     let mut spec = TrainSpec::from_config(&cfg)?;
     spec.transport = sfw::session::Transport::Tcp;
     spec.tcp_bind = None; // bind options belong to the master
@@ -136,7 +172,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         // across runs); grid-shaping flags must fail loudly, not be
         // ignored.
         if let Some(key) = args.flag_keys().find(|k| {
-            k.starts_with("sweep.") || matches!(k.as_str(), "config" | "name" | "target")
+            k.starts_with("sweep.")
+                || k.starts_with("chaos.")
+                || matches!(k.as_str(), "config" | "name" | "target")
         }) {
             anyhow::bail!("--{key} does not apply to --smoke (the grid is fixed; drop --smoke)");
         }
@@ -167,7 +205,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let cfg = TrainConfig::load(args)?;
+    let file = load_config_file(args)?;
+    sfw::chaos::reject_chaos_keys("simulate", &file, args)?;
+    let cfg = TrainConfig::resolve(file, args)?;
     // The simulator always drives native engines; the spec is only used
     // to build the objective from the task fields.
     let spec = TrainSpec::from_config(&cfg)?.engine(sfw::session::EngineKind::Native);
@@ -205,6 +245,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    sfw::chaos::reject_chaos_keys("info", &Config::new(), args)?;
     let dir = args.get_str("artifacts-dir", "artifacts");
     let rt = sfw::runtime::PjrtRuntime::new(&dir)?;
     println!("PJRT platform: {}", rt.platform());

@@ -23,6 +23,10 @@ pub struct Counters {
     pub iterations: AtomicU64,
     /// Updates dropped by the delay gate (t_m - t_w > tau).
     pub dropped_updates: AtomicU64,
+    /// Largest staleness t_m - t_w among ACCEPTED updates.  The delay
+    /// gate guarantees this never exceeds tau; the chaos conformance
+    /// suite asserts exactly that under every fault plan.
+    pub max_accepted_delay: AtomicU64,
     /// Bytes worker -> master.
     pub bytes_up: AtomicU64,
     /// Bytes master -> worker.
@@ -50,6 +54,10 @@ impl Counters {
     pub fn add_dropped(&self) {
         self.dropped_updates.fetch_add(1, Ordering::Relaxed);
     }
+    /// Record the staleness of an accepted update.
+    pub fn note_accepted_delay(&self, delay: u64) {
+        self.max_accepted_delay.fetch_max(delay, Ordering::Relaxed);
+    }
     pub fn add_up(&self, bytes: u64) {
         self.bytes_up.fetch_add(bytes, Ordering::Relaxed);
         self.msgs_up.fetch_add(1, Ordering::Relaxed);
@@ -65,6 +73,7 @@ impl Counters {
             lmo_calls: self.lmo_calls.load(Ordering::Relaxed),
             iterations: self.iterations.load(Ordering::Relaxed),
             dropped_updates: self.dropped_updates.load(Ordering::Relaxed),
+            max_accepted_delay: self.max_accepted_delay.load(Ordering::Relaxed),
             bytes_up: self.bytes_up.load(Ordering::Relaxed),
             bytes_down: self.bytes_down.load(Ordering::Relaxed),
             msgs_up: self.msgs_up.load(Ordering::Relaxed),
@@ -79,6 +88,7 @@ pub struct CounterSnapshot {
     pub lmo_calls: u64,
     pub iterations: u64,
     pub dropped_updates: u64,
+    pub max_accepted_delay: u64,
     pub bytes_up: u64,
     pub bytes_down: u64,
     pub msgs_up: u64,

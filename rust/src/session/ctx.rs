@@ -66,12 +66,15 @@ impl RunCtx {
         self.spec.batch.clone().unwrap_or_else(default)
     }
 
-    /// Wrap a finished run into the uniform [`Report`].
+    /// Wrap a finished run into the uniform [`Report`].  Solvers that
+    /// ran over chaos-wrapped links overwrite `report.chaos` with their
+    /// run's snapshot.
     pub fn report(&self, x: Mat, counters: Arc<Counters>, trace: Arc<LossTrace>) -> Report {
         Report {
             x,
             counters,
             trace,
+            chaos: crate::chaos::ChaosSnapshot::default(),
             spec_echo: self.spec.echo(),
             f_star: self.obj.f_star_hint(),
         }

@@ -21,6 +21,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::algo::engine::StepEngine;
+use crate::chaos::{ChaosCounters, ChaosInject};
 use crate::comms::{local_links, tcp_master_on, tcp_worker, MasterLink, Wire, WorkerLink};
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::master::{run_master, MasterOptions};
@@ -52,6 +53,12 @@ pub(crate) struct TransportOpts {
     /// Pre-bound TCP master listener (from `TrainSpec::run`'s pre-flight
     /// bind); `None` makes the harness bind `bind` itself.
     pub listener: Option<TcpListener>,
+    /// Fault injection: when set, every worker link (local channel or
+    /// TCP socket alike) is wrapped in its scripted
+    /// [`ChaosWorker`](crate::chaos::ChaosWorker) layer.  The protocol
+    /// entry points fill in the per-protocol corruption guard before
+    /// handing this to [`run_over`].
+    pub chaos: Option<ChaosInject>,
 }
 
 impl TransportOpts {
@@ -65,6 +72,7 @@ impl TransportOpts {
             link_latency: spec.link_latency,
             bound_notify: spec.bound_notify.clone(),
             listener: ctx.take_tcp_listener(),
+            chaos: spec.fault_plan.clone().map(ChaosInject::new),
         }
     }
 
@@ -79,7 +87,21 @@ impl TransportOpts {
             link_latency: None,
             bound_notify: None,
             listener: None,
+            chaos: None,
         }
+    }
+}
+
+/// Wrap one worker's endpoint in its fault layer (pass-through when no
+/// plan is installed).
+fn chaos_wrap<Up: Wire, Down: Wire>(
+    chaos: &Option<ChaosInject>,
+    rank: usize,
+    inner: Box<dyn WorkerLink<Up, Down>>,
+) -> Box<dyn WorkerLink<Up, Down>> {
+    match chaos {
+        Some(inject) => inject.wrap(rank, inner),
+        None => inner,
     }
 }
 
@@ -107,7 +129,8 @@ where
             std::thread::scope(|s| {
                 for (w, wl) in wls.into_iter().enumerate() {
                     let job = make_worker(w);
-                    s.spawn(move || job(Box::new(wl)));
+                    let link = chaos_wrap(&t.chaos, w, Box::new(wl) as Box<dyn WorkerLink<Up, Down>>);
+                    s.spawn(move || job(link));
                 }
                 master(Box::new(ml))
             })
@@ -135,10 +158,11 @@ where
                 } else {
                     for w in 0..t.workers {
                         let job = make_worker(w);
+                        let chaos = t.chaos.clone();
                         s.spawn(move || {
                             let wl = tcp_worker::<Up, Down>(&addr.to_string(), w as u32)
                                 .unwrap_or_else(|e| panic!("worker {w}: connect {addr}: {e}"));
-                            job(Box::new(wl));
+                            job(chaos_wrap(&chaos, w, Box::new(wl)));
                         });
                     }
                 }
@@ -167,12 +191,13 @@ pub(crate) fn connect_worker<Up: Wire, Down: Wire>(
 pub(crate) fn run_asyn<F>(
     obj: Arc<dyn Objective>,
     opts: &AsynOptions,
-    t: TransportOpts,
+    mut t: TransportOpts,
     mut make_engine: F,
 ) -> RunResult
 where
     F: FnMut(usize) -> Box<dyn StepEngine>,
 {
+    let chaos = install_chaos_guard(&mut t, UpdateMsg::CORRUPT_GUARD);
     let counters = Arc::new(Counters::new());
     let trace = Arc::new(LossTrace::new());
     let evaluator = Evaluator::new(obj.clone(), trace.clone());
@@ -204,19 +229,20 @@ where
         },
     );
     evaluator.finish();
-    RunResult { x, counters, trace }
+    RunResult { x, counters, trace, chaos }
 }
 
 /// Run SVRF-asyn (Algorithm 5) over the requested transport.
 pub(crate) fn run_svrf_asyn<F>(
     obj: Arc<dyn Objective>,
     opts: &SvrfAsynOptions,
-    t: TransportOpts,
+    mut t: TransportOpts,
     mut make_engine: F,
 ) -> RunResult
 where
     F: FnMut(usize) -> Box<dyn StepEngine>,
 {
+    let chaos = install_chaos_guard(&mut t, UpdateMsg::CORRUPT_GUARD);
     let counters = Arc::new(Counters::new());
     let trace = Arc::new(LossTrace::new());
     let evaluator = Evaluator::new(obj.clone(), trace.clone());
@@ -238,19 +264,20 @@ where
         },
     );
     evaluator.finish();
-    RunResult { x, counters, trace }
+    RunResult { x, counters, trace, chaos }
 }
 
 /// Run SFW-dist (Algorithm 1) over the requested transport.
 pub(crate) fn run_dist<F>(
     obj: Arc<dyn Objective>,
     opts: &DistOptions,
-    t: TransportOpts,
+    mut t: TransportOpts,
     mut make_engine: F,
 ) -> RunResult
 where
     F: FnMut(usize) -> Box<dyn StepEngine>,
 {
+    let chaos = install_chaos_guard(&mut t, DistUp::CORRUPT_GUARD);
     let counters = Arc::new(Counters::new());
     let trace = Arc::new(LossTrace::new());
     let evaluator = Evaluator::new(obj.clone(), trace.clone());
@@ -283,5 +310,17 @@ where
         },
     );
     evaluator.finish();
-    RunResult { x, counters, trace }
+    RunResult { x, counters, trace, chaos }
+}
+
+/// Set the protocol's corruption guard on the injection config (if any)
+/// and return the run's chaos counters (zeros when chaos is off).
+fn install_chaos_guard(t: &mut TransportOpts, guard: usize) -> Arc<ChaosCounters> {
+    match &mut t.chaos {
+        Some(inject) => {
+            inject.guard = guard;
+            inject.counters.clone()
+        }
+        None => Arc::new(ChaosCounters::new()),
+    }
 }

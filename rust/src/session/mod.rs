@@ -61,6 +61,7 @@ pub use spec::TrainSpec;
 
 // Re-exported so spec construction needs only `use sfw::session::*`.
 pub use crate::algo::schedule::BatchSchedule;
+pub use crate::chaos::{ChaosSnapshot, FaultPlan};
 pub use crate::coordinator::worker::Straggler;
 
 use std::sync::Arc;
@@ -164,6 +165,9 @@ pub struct Report {
     pub x: Mat,
     pub counters: Arc<Counters>,
     pub trace: Arc<LossTrace>,
+    /// Injected-fault accounting of the run — all zeros unless the spec
+    /// carried a [`FaultPlan`] (see [`crate::chaos`]).
+    pub chaos: ChaosSnapshot,
     /// One-line echo of the resolved spec (task/algo/engine/transport/...).
     pub spec_echo: String,
     /// F* estimate of the objective (for relative-loss reporting).
@@ -176,6 +180,7 @@ impl std::fmt::Debug for Report {
             .field("spec_echo", &self.spec_echo)
             .field("trace_points", &self.trace.points().len())
             .field("counters", &self.counters.snapshot())
+            .field("chaos", &self.chaos)
             .finish_non_exhaustive()
     }
 }

@@ -22,6 +22,16 @@ pub trait Solver: Send + Sync {
         &[Transport::Local]
     }
 
+    /// Whether the protocol keeps making progress when a worker dies
+    /// permanently mid-run.  True for the asynchronous solvers (the
+    /// master never waits for a specific worker); false for the
+    /// synchronous barrier, whose round blocks on every rank.  Gates
+    /// which chaos [`FaultPlan`](crate::chaos::FaultPlan)s a spec
+    /// accepts (`CrashMode::Halt` requires loss tolerance).
+    fn tolerates_worker_loss(&self) -> bool {
+        false
+    }
+
     /// Run the algorithm against fully-resolved wiring.  Infallible:
     /// everything that can fail happens in `RunCtx::new`.
     fn run(&self, ctx: &RunCtx) -> Report;

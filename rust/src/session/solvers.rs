@@ -81,11 +81,17 @@ impl Solver for AsynSolver {
         LOCAL_AND_TCP
     }
 
+    fn tolerates_worker_loss(&self) -> bool {
+        true // the master never waits for a specific worker
+    }
+
     fn run(&self, ctx: &RunCtx) -> Report {
         let opts = Self::protocol_opts(ctx);
         let t = TransportOpts::from_ctx(ctx);
         let r = harness::run_asyn(ctx.obj.clone(), &opts, t, |w| ctx.make_engine(w));
-        ctx.report(r.x, r.counters, r.trace)
+        let mut report = ctx.report(r.x, r.counters, r.trace);
+        report.chaos = r.chaos.snapshot();
+        report
     }
 
     fn run_worker(&self, ctx: &RunCtx, connect: &str, rank: u32) -> Result<(), SessionError> {
@@ -129,11 +135,17 @@ impl Solver for SvrfAsynSolver {
         LOCAL_AND_TCP
     }
 
+    fn tolerates_worker_loss(&self) -> bool {
+        true // same asynchronous master loop as sfw-asyn
+    }
+
     fn run(&self, ctx: &RunCtx) -> Report {
         let opts = Self::protocol_opts(ctx);
         let t = TransportOpts::from_ctx(ctx);
         let r = harness::run_svrf_asyn(ctx.obj.clone(), &opts, t, |w| ctx.make_engine(w));
-        ctx.report(r.x, r.counters, r.trace)
+        let mut report = ctx.report(r.x, r.counters, r.trace);
+        report.chaos = r.chaos.snapshot();
+        report
     }
 
     fn run_worker(&self, ctx: &RunCtx, connect: &str, rank: u32) -> Result<(), SessionError> {
@@ -175,7 +187,9 @@ impl Solver for DistSolver {
         let opts = Self::protocol_opts(ctx);
         let t = TransportOpts::from_ctx(ctx);
         let r = harness::run_dist(ctx.obj.clone(), &opts, t, |w| ctx.make_engine(w));
-        ctx.report(r.x, r.counters, r.trace)
+        let mut report = ctx.report(r.x, r.counters, r.trace);
+        report.chaos = r.chaos.snapshot();
+        report
     }
 
     fn run_worker(&self, ctx: &RunCtx, connect: &str, rank: u32) -> Result<(), SessionError> {

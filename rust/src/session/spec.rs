@@ -10,6 +10,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::algo::schedule::BatchSchedule;
+use crate::chaos::FaultPlan;
 use crate::config::TrainConfig;
 use crate::coordinator::worker::Straggler;
 use crate::runtime::PjrtRuntime;
@@ -62,6 +63,10 @@ pub struct TrainSpec {
     pub straggler: Option<Straggler>,
     /// Injected one-way link latency (local transport only).
     pub link_latency: Option<Duration>,
+    /// Deterministic fault-injection plan wrapping every worker link
+    /// (see [`crate::chaos`]); applies to the link-based solvers on
+    /// both transports, with in-process workers.
+    pub fault_plan: Option<FaultPlan>,
     /// DFW-power rounds at FW iteration t: `base + slope * t`.
     pub dfw_rounds_base: u64,
     pub dfw_rounds_slope: f64,
@@ -92,6 +97,7 @@ impl TrainSpec {
             bound_notify: None,
             straggler: None,
             link_latency: None,
+            fault_plan: None,
             dfw_rounds_base: 1,
             dfw_rounds_slope: 0.5,
         }
@@ -193,6 +199,16 @@ impl TrainSpec {
         self.link_latency = Some(l);
         self
     }
+    /// Subject the run to a deterministic fault-injection plan
+    /// (see [`crate::chaos`]).
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+    pub fn maybe_fault_plan(mut self, plan: Option<FaultPlan>) -> Self {
+        self.fault_plan = plan;
+        self
+    }
     pub fn dfw_rounds(mut self, base: u64, slope: f64) -> Self {
         self.dfw_rounds_base = base;
         self.dfw_rounds_slope = slope;
@@ -222,7 +238,7 @@ impl TrainSpec {
 
     /// One-line summary used for logs and `Report::spec_echo`.
     pub fn echo(&self) -> String {
-        format!(
+        let mut echo = format!(
             "task={} algo={} engine={} transport={} workers={} tau={} T={} seed={}",
             self.task.name(),
             self.algo,
@@ -238,7 +254,11 @@ impl TrainSpec {
             self.tau,
             self.iterations,
             self.seed
-        )
+        );
+        if let Some(plan) = &self.fault_plan {
+            echo.push_str(&format!(" chaos={}@{}", plan.name, plan.seed));
+        }
+        echo
     }
 
     /// Resolve the spec and run it: registry lookup, transport validation,
@@ -273,6 +293,46 @@ impl TrainSpec {
         })?;
         if !solver.supported_transports().contains(&self.transport) {
             return Err(unsupported_transport(&self.algo, self.transport));
+        }
+        if let Some(plan) = &self.fault_plan {
+            // Chaos wraps the in-process worker links; external
+            // `sfw worker` processes are out of its reach, and a plan
+            // the user thinks is active but isn't would be worse than
+            // an error.
+            if self.tcp_await {
+                return Err(SessionError::InvalidSpec(
+                    "chaos fault injection wraps in-process worker links; it cannot reach \
+                     external --tcp-await worker processes"
+                        .into(),
+                ));
+            }
+            // Exactly the solvers with framed wire protocols run over
+            // links — the same capability that makes them TCP-capable.
+            if !solver.supported_transports().contains(&Transport::Tcp) {
+                return Err(SessionError::InvalidSpec(format!(
+                    "algorithm '{}' has no comms links to inject faults into \
+                     (chaos applies to: {})",
+                    self.algo,
+                    registry().supporting(Transport::Tcp).join(" | ")
+                )));
+            }
+            // A permanently-halted worker deadlocks a synchronous
+            // barrier (documented liveness caveat of Algorithm 1);
+            // only loss-tolerant solvers accept halting plans.
+            if plan.has_halt() && !solver.tolerates_worker_loss() {
+                return Err(SessionError::InvalidSpec(format!(
+                    "fault plan '{}' halts a worker, and '{}' cannot outlive one \
+                     (its barrier waits forever); use a Restart crash or one of: {}",
+                    plan.name,
+                    self.algo,
+                    registry()
+                        .iter()
+                        .filter(|s| s.tolerates_worker_loss())
+                        .map(|s| s.name())
+                        .collect::<Vec<_>>()
+                        .join(" | ")
+                )));
+            }
         }
         let ctx = RunCtx::new(self)?;
         // Pre-bind the TCP master listener so ordinary bind failures

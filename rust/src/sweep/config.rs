@@ -21,7 +21,7 @@ use crate::sweep::SweepError;
 /// Keys the `[sweep]` section accepts (axes + run knobs).
 pub const SWEEP_KEYS: &[&str] = &[
     "name", "algos", "workers", "tau", "batch", "power-iters", "transport", "straggler",
-    "seeds", "repeats", "jobs", "target",
+    "chaos", "seeds", "repeats", "jobs", "target",
 ];
 
 impl SweepSpec {
@@ -37,7 +37,11 @@ impl SweepSpec {
         // Prebuild the dataset once: every cell (and repeat) shares the
         // workload via Arc instead of regenerating it inside the timed
         // run — a `seeds` axis then varies algorithm randomness only.
-        let base = TrainSpec::from_config(&train)?.prebuilt();
+        // The `[chaos]`/`--chaos.*` section configures the BASE plan
+        // (cells inherit it unless a `chaos` axis overrides per cell).
+        let base = TrainSpec::from_config(&train)?
+            .maybe_fault_plan(crate::chaos::config::resolve(&file, args)?)
+            .prebuilt();
         SweepSpec::from_sources(base, &file, args)
     }
 
@@ -125,6 +129,22 @@ impl SweepSpec {
                 .map(StragglerProfile::parse)
                 .collect::<Result<_, _>>()?;
         }
+        if let Some(v) = get("chaos") {
+            spec.chaos = split_list("chaos", &v)?
+                .into_iter()
+                .map(|s| {
+                    // validate names at resolution time (expand would
+                    // catch them too, but here the user gets the error
+                    // before any cell runs); membership is delegated to
+                    // FaultPlan::preset so the list cannot drift
+                    if s != "none" {
+                        crate::chaos::FaultPlan::preset(s, 0)
+                            .map_err(|_| crate::sweep::grid::bad_chaos_axis(s))?;
+                    }
+                    Ok(s.to_string())
+                })
+                .collect::<Result<_, _>>()?;
+        }
         if let Some(v) = get("seeds") {
             spec.seeds = parse_list("seeds", &v, "comma-separated seeds")?;
         }
@@ -144,11 +164,13 @@ impl SweepSpec {
 
     /// The CI smoke sweep: a tiny deterministic grid (seed 42, W in
     /// {1, 2}, every TCP-capable distributed algorithm, local AND tcp
-    /// transports) on the small matrix-sensing task.  `sfw sweep --smoke`
-    /// runs it and writes `bench_out/sweep_smoke.json` — the artifact
-    /// the CI pipeline uploads and asserts nonzero `bytes_up`/
-    /// `bytes_down` on (see `.github/workflows/ci.yml` and ROADMAP
-    /// "Sweeps & CI").
+    /// transports, with and without the `flaky-net` chaos plan) on the
+    /// small matrix-sensing task.  `sfw sweep --smoke` runs it and
+    /// writes `bench_out/sweep_smoke.json` — the artifact the CI
+    /// pipeline uploads and asserts nonzero `bytes_up`/`bytes_down` on
+    /// every cell plus nonzero injected-event counts on the chaos cells
+    /// (`scripts/check_smoke_bytes.py`; see `.github/workflows/ci.yml`
+    /// and ROADMAP "Sweeps & CI"/"Chaos").
     pub fn smoke() -> SweepSpec {
         use crate::algo::schedule::BatchSchedule;
         use crate::session::TaskSpec;
@@ -164,6 +186,7 @@ impl SweepSpec {
             .workers(&[1, 2])
             .taus(&[2])
             .transports(&[Transport::Local, Transport::Tcp])
+            .chaos_plans(&["none", "flaky-net"])
             .target(0.5)
     }
 }
@@ -278,17 +301,56 @@ mod tests {
         assert_eq!(s.name, "smoke");
         assert_eq!(s.base.seed, 42);
         let cells = s.expand().unwrap();
-        assert_eq!(cells.len(), 12); // 3 algos x W in {1,2} x 2 transports
+        // 3 algos x W in {1,2} x 2 transports x {none, flaky-net}
+        assert_eq!(cells.len(), 24);
         for c in &cells {
             assert_eq!(c.axis("seed"), Some("42"));
         }
-        // one tcp cell per TCP-capable solver, pinning the wire path in CI
         for algo in ["sfw-dist", "sfw-asyn", "svrf-asyn"] {
+            // one tcp cell per TCP-capable solver, pinning the wire path
             assert!(
                 cells.iter().any(|c| c.axis("algo") == Some(algo)
                     && c.axis("transport") == Some("tcp")),
                 "smoke grid must include a tcp cell for '{algo}'"
             );
+            // and one flaky-net chaos cell per solver, pinning injection
+            let chaos = cells
+                .iter()
+                .find(|c| c.axis("algo") == Some(algo) && c.axis("chaos") == Some("flaky-net"))
+                .unwrap_or_else(|| panic!("smoke grid must include a flaky-net cell for '{algo}'"));
+            assert_eq!(chaos.spec.fault_plan.as_ref().unwrap().name, "flaky-net");
         }
+    }
+
+    #[test]
+    fn chaos_axis_resolves_and_rejects_bad_presets() {
+        let a = args("--sweep.chaos none,flaky-net,crash-1");
+        let s = SweepSpec::from_sources(base(), &Config::new(), &a).unwrap();
+        assert_eq!(s.chaos, vec!["none", "flaky-net", "crash-1"]);
+        let a = args("--sweep.chaos clean,flakey-net");
+        let err = SweepSpec::from_sources(base(), &Config::new(), &a).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("chaos") && msg.contains("flakey-net"), "{msg}");
+        assert!(msg.contains("flaky-net") && msg.contains("crash-1"), "{msg}");
+    }
+
+    #[test]
+    fn chaos_section_feeds_the_base_spec() {
+        // [chaos] (or --chaos.*) sets the BASE plan the cells inherit.
+        let small = "--data.ms-n 300 --data.ms-d 8 --data.ms-rank 2";
+        let a = args(&format!("{small} --chaos.plan slow-tail --chaos.seed 11"));
+        let s = SweepSpec::load(&a).unwrap();
+        let plan = s.base.fault_plan.as_ref().unwrap();
+        assert_eq!(plan.name, "slow-tail");
+        assert_eq!(plan.seed, 11);
+        // a chaos-axis preset cell derives its seed from the base plan
+        let s2 = SweepSpec::load(&args(&format!(
+            "{small} --chaos.plan slow-tail --chaos.seed 11 --sweep.chaos flaky-net"
+        )))
+        .unwrap();
+        let cells = s2.expand().unwrap();
+        assert_eq!(cells[0].spec.fault_plan.as_ref().unwrap().seed, 11);
+        // unknown --chaos.* keys error through the sweep loader too
+        assert!(SweepSpec::load(&args("--chaos.plann clean")).is_err());
     }
 }

@@ -12,14 +12,16 @@ use std::collections::BTreeSet;
 use std::time::Duration;
 
 use crate::algo::schedule::BatchSchedule;
+use crate::chaos::{FaultPlan, DEFAULT_CHAOS_SEED};
 use crate::coordinator::worker::Straggler;
 use crate::session::{TrainSpec, Transport};
 use crate::sweep::SweepError;
 
 /// The fixed axis order: every cell id and result row lists axis values
 /// in this order, and `[sweep]` config keys resolve against these names.
-pub const AXIS_NAMES: &[&str] =
-    &["algo", "workers", "tau", "batch", "power_iters", "transport", "straggler", "seed"];
+pub const AXIS_NAMES: &[&str] = &[
+    "algo", "workers", "tau", "batch", "power_iters", "transport", "straggler", "chaos", "seed",
+];
 
 /// Worker-heterogeneity profile, the sweep-axis form of
 /// [`Straggler`] (named, parseable, comparable).
@@ -98,6 +100,18 @@ pub(crate) fn axis_value<'a>(axes: &'a [(String, String)], name: &str) -> Option
     axes.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
 }
 
+/// The chaos axis's bad-value error — ONE constructor shared by the
+/// `[sweep]` resolver and `expand`, so the accepted-name listing cannot
+/// drift from [`FaultPlan::PRESETS`] (membership itself is delegated to
+/// [`FaultPlan::preset`]).
+pub(crate) fn bad_chaos_axis(value: &str) -> SweepError {
+    SweepError::BadAxisValue {
+        axis: "chaos".into(),
+        value: value.to_string(),
+        expected: format!("none | {}", FaultPlan::PRESETS.join(" | ")),
+    }
+}
+
 /// One expanded grid cell: the axis values that identify it plus the
 /// fully-resolved [`TrainSpec`] to run.
 #[derive(Clone)]
@@ -146,6 +160,11 @@ pub struct SweepSpec {
     pub power_iters: Vec<usize>,
     pub transports: Vec<Transport>,
     pub stragglers: Vec<StragglerProfile>,
+    /// Chaos fault-plan presets ([`FaultPlan::PRESETS`]) or `"none"`
+    /// (no injection).  Empty = inherit the base spec's plan verbatim.
+    /// Preset cells derive their plan seed from the base plan (when
+    /// set) or [`DEFAULT_CHAOS_SEED`], so a chaos axis stays replayable.
+    pub chaos: Vec<String>,
     pub seeds: Vec<u64>,
     /// Timed repetitions per cell (same spec re-run; wall-clock stats).
     pub repeats: usize,
@@ -167,6 +186,7 @@ impl SweepSpec {
             power_iters: Vec::new(),
             transports: Vec::new(),
             stragglers: Vec::new(),
+            chaos: Vec::new(),
             seeds: Vec::new(),
             repeats: 1,
             jobs: 1,
@@ -202,6 +222,10 @@ impl SweepSpec {
         self.stragglers = ss.to_vec();
         self
     }
+    pub fn chaos_plans(mut self, plans: &[&str]) -> Self {
+        self.chaos = plans.iter().map(|s| s.to_string()).collect();
+        self
+    }
     pub fn seeds(mut self, seeds: &[u64]) -> Self {
         self.seeds = seeds.to_vec();
         self
@@ -229,6 +253,7 @@ impl SweepSpec {
             * len(self.power_iters.len())
             * len(self.transports.len())
             * len(self.stragglers.len())
+            * len(self.chaos.len())
             * len(self.seeds.len())
     }
 
@@ -262,6 +287,19 @@ impl SweepSpec {
         } else {
             self.stragglers.clone()
         };
+        // The chaos axis carries plan labels; `None` = inherit the base
+        // spec's plan verbatim (labelled by its name, or "none").
+        let chaos_seed = base.fault_plan.as_ref().map(|p| p.seed).unwrap_or(DEFAULT_CHAOS_SEED);
+        let chaos_axis: Vec<Option<String>> = if self.chaos.is_empty() {
+            vec![None]
+        } else {
+            self.chaos.iter().map(|c| Some(c.clone())).collect()
+        };
+        let base_chaos_label = base
+            .fault_plan
+            .as_ref()
+            .map(|p| p.name.clone())
+            .unwrap_or_else(|| "none".to_string());
         let seeds = if self.seeds.is_empty() { vec![base.seed] } else { self.seeds.clone() };
 
         let base_batch_label = match &base.batch {
@@ -279,45 +317,69 @@ impl SweepSpec {
                         for &pi in &power_iters {
                             for &transport in &transports {
                                 for &straggler in &stragglers {
-                                    for &seed in &seeds {
-                                        let batch_label = match batch {
-                                            None => base_batch_label.clone(),
-                                            Some(BATCH_AUTO) => "auto".to_string(),
-                                            Some(m) => m.to_string(),
-                                        };
-                                        let transport_label = match transport {
-                                            Transport::Local => "local",
-                                            Transport::Tcp => "tcp",
-                                        };
-                                        let axes = vec![
-                                            ("algo".to_string(), algo.clone()),
-                                            ("workers".to_string(), w.to_string()),
-                                            ("tau".to_string(), tau.to_string()),
-                                            ("batch".to_string(), batch_label),
-                                            ("power_iters".to_string(), pi.to_string()),
-                                            ("transport".to_string(), transport_label.to_string()),
-                                            ("straggler".to_string(), straggler.label()),
-                                            ("seed".to_string(), seed.to_string()),
-                                        ];
-                                        let mut spec = base
-                                            .clone()
-                                            .algo(algo)
-                                            .workers(w)
-                                            .tau(tau)
-                                            .power_iters(pi)
-                                            .transport(transport)
-                                            .maybe_straggler(straggler.to_straggler())
-                                            .seed(seed);
-                                        match batch {
-                                            None => {} // keep base schedule
-                                            Some(BATCH_AUTO) => spec.batch = None,
-                                            Some(m) => {
-                                                spec = spec.batch(BatchSchedule::Constant(m))
+                                    for chaos in &chaos_axis {
+                                        for &seed in &seeds {
+                                            let batch_label = match batch {
+                                                None => base_batch_label.clone(),
+                                                Some(BATCH_AUTO) => "auto".to_string(),
+                                                Some(m) => m.to_string(),
+                                            };
+                                            let transport_label = match transport {
+                                                Transport::Local => "local",
+                                                Transport::Tcp => "tcp",
+                                            };
+                                            // resolve the cell's fault plan
+                                            // (axis value, or inherit base)
+                                            let (chaos_label, fault_plan) = match chaos {
+                                                None => {
+                                                    (base_chaos_label.clone(),
+                                                     base.fault_plan.clone())
+                                                }
+                                                Some(name) if name == "none" => {
+                                                    ("none".to_string(), None)
+                                                }
+                                                Some(name) => {
+                                                    let plan =
+                                                        FaultPlan::preset(name, chaos_seed)
+                                                            .map_err(|_| bad_chaos_axis(name))?;
+                                                    (name.clone(), Some(plan))
+                                                }
+                                            };
+                                            let axes = vec![
+                                                ("algo".to_string(), algo.clone()),
+                                                ("workers".to_string(), w.to_string()),
+                                                ("tau".to_string(), tau.to_string()),
+                                                ("batch".to_string(), batch_label),
+                                                ("power_iters".to_string(), pi.to_string()),
+                                                (
+                                                    "transport".to_string(),
+                                                    transport_label.to_string(),
+                                                ),
+                                                ("straggler".to_string(), straggler.label()),
+                                                ("chaos".to_string(), chaos_label),
+                                                ("seed".to_string(), seed.to_string()),
+                                            ];
+                                            let mut spec = base
+                                                .clone()
+                                                .algo(algo)
+                                                .workers(w)
+                                                .tau(tau)
+                                                .power_iters(pi)
+                                                .transport(transport)
+                                                .maybe_straggler(straggler.to_straggler())
+                                                .maybe_fault_plan(fault_plan)
+                                                .seed(seed);
+                                            match batch {
+                                                None => {} // keep base schedule
+                                                Some(BATCH_AUTO) => spec.batch = None,
+                                                Some(m) => {
+                                                    spec = spec.batch(BatchSchedule::Constant(m))
+                                                }
                                             }
-                                        }
-                                        let cell = Cell { axes, spec };
-                                        if seen.insert(cell.id()) {
-                                            cells.push(cell);
+                                            let cell = Cell { axes, spec };
+                                            if seen.insert(cell.id()) {
+                                                cells.push(cell);
+                                            }
                                         }
                                     }
                                 }
@@ -391,6 +453,28 @@ mod tests {
         let p = StragglerProfile::parse("20us:0.25").unwrap();
         let back = StragglerProfile::from_straggler(p.to_straggler());
         assert_eq!(p, back);
+    }
+
+    #[test]
+    fn chaos_axis_resolves_presets_and_none() {
+        let cells = SweepSpec::new("t", base())
+            .chaos_plans(&["none", "flaky-net"])
+            .expand()
+            .unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].axis("chaos"), Some("none"));
+        assert!(cells[0].spec.fault_plan.is_none());
+        assert_eq!(cells[1].axis("chaos"), Some("flaky-net"));
+        assert_eq!(cells[1].spec.fault_plan.as_ref().unwrap().name, "flaky-net");
+        // unset axis inherits the base plan and labels it by name
+        let with_base = base().fault_plan(FaultPlan::slow_tail(3));
+        let cells = SweepSpec::new("t", with_base).workers(&[2]).expand().unwrap();
+        assert_eq!(cells[0].axis("chaos"), Some("slow-tail"));
+        assert_eq!(cells[0].spec.fault_plan.as_ref().unwrap().seed, 3);
+        // a bad preset names the axis and lists the valid values
+        let err = SweepSpec::new("t", base()).chaos_plans(&["flakey"]).expand().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("chaos") && msg.contains("flaky-net"), "{msg}");
     }
 
     #[test]

@@ -61,6 +61,8 @@ pub enum SweepError {
     Session(#[from] SessionError),
     #[error(transparent)]
     Config(#[from] ConfigError),
+    #[error(transparent)]
+    Chaos(#[from] crate::chaos::ChaosError),
     #[error("sweep json: {0}")]
     Json(String),
     #[error("io: {0}")]

@@ -8,6 +8,7 @@
 //! `BENCH_*.json` trajectory tracking and CI artifacts can consume it.
 
 use crate::benchkit::{sig, Stats, Table};
+use crate::chaos::ChaosSnapshot;
 use crate::metrics::CounterSnapshot;
 use crate::sweep::SweepError;
 use crate::util::json::Json;
@@ -34,6 +35,9 @@ pub struct CellResult {
     pub time_to_target: Option<f64>,
     /// Counter snapshot of the last repeat.
     pub counters: CounterSnapshot,
+    /// Injected-fault accounting of the last repeat (zeros when the
+    /// cell ran without a chaos plan).
+    pub chaos: ChaosSnapshot,
     /// Relative-loss curve `(t, iteration, rel)` of the last repeat.
     pub curve: Vec<(f64, u64, f64)>,
 }
@@ -59,10 +63,23 @@ impl CellResult {
             ("lmo_calls".into(), Json::Num(c.lmo_calls as f64)),
             ("iterations".into(), Json::Num(c.iterations as f64)),
             ("dropped_updates".into(), Json::Num(c.dropped_updates as f64)),
+            ("max_accepted_delay".into(), Json::Num(c.max_accepted_delay as f64)),
             ("bytes_up".into(), Json::Num(c.bytes_up as f64)),
             ("bytes_down".into(), Json::Num(c.bytes_down as f64)),
             ("msgs_up".into(), Json::Num(c.msgs_up as f64)),
             ("msgs_down".into(), Json::Num(c.msgs_down as f64)),
+        ]);
+        let h = &self.chaos;
+        let chaos = Json::Obj(vec![
+            ("delays".into(), Json::Num(h.delays as f64)),
+            ("delay_ns".into(), Json::Num(h.delay_ns as f64)),
+            ("drops".into(), Json::Num(h.drops as f64)),
+            ("duplicates".into(), Json::Num(h.duplicates as f64)),
+            ("corrupt_delivered".into(), Json::Num(h.corrupt_delivered as f64)),
+            ("corrupt_rejected".into(), Json::Num(h.corrupt_rejected as f64)),
+            ("reorders".into(), Json::Num(h.reorders as f64)),
+            ("crashes".into(), Json::Num(h.crashes as f64)),
+            ("late_joins".into(), Json::Num(h.late_joins as f64)),
         ]);
         let w = &self.wall;
         let wall = Json::Obj(vec![
@@ -93,6 +110,7 @@ impl CellResult {
                 self.time_to_target.map(Json::Num).unwrap_or(Json::Null),
             ),
             ("counters".into(), counters),
+            ("chaos".into(), chaos),
             ("curve".into(), curve),
         ])
     }
@@ -125,10 +143,27 @@ impl CellResult {
             lmo_calls: c.u64_field("lmo_calls")?,
             iterations: c.u64_field("iterations")?,
             dropped_updates: c.u64_field("dropped_updates")?,
+            // absent in pre-chaos artifacts: default 0 rather than reject
+            max_accepted_delay: c.u64_field("max_accepted_delay").unwrap_or(0),
             bytes_up: c.u64_field("bytes_up")?,
             bytes_down: c.u64_field("bytes_down")?,
             msgs_up: c.u64_field("msgs_up")?,
             msgs_down: c.u64_field("msgs_down")?,
+        };
+        // chaos block is absent in pre-chaos artifacts: default zeros
+        let chaos = match v.get("chaos") {
+            None => ChaosSnapshot::default(),
+            Some(h) => ChaosSnapshot {
+                delays: h.u64_field("delays")?,
+                delay_ns: h.u64_field("delay_ns")?,
+                drops: h.u64_field("drops")?,
+                duplicates: h.u64_field("duplicates")?,
+                corrupt_delivered: h.u64_field("corrupt_delivered")?,
+                corrupt_rejected: h.u64_field("corrupt_rejected")?,
+                reorders: h.u64_field("reorders")?,
+                crashes: h.u64_field("crashes")?,
+                late_joins: h.u64_field("late_joins")?,
+            },
         };
         let curve = match v.get("curve") {
             Some(Json::Arr(pts)) => pts
@@ -156,6 +191,7 @@ impl CellResult {
             final_loss: num_field_or_nan(v, "final_loss")?,
             time_to_target,
             counters,
+            chaos,
             curve,
         })
     }
@@ -213,7 +249,9 @@ impl SweepResult {
             .first()
             .map(|c| c.axes.iter().map(|(k, _)| k.as_str()).collect())
             .unwrap_or_default();
-        headers.extend(["mean t(s)", "final rel", "t_target(s)", "dropped", "up B", "down B"]);
+        headers.extend([
+            "mean t(s)", "final rel", "t_target(s)", "dropped", "up B", "down B", "faults",
+        ]);
         let mut t = Table::new(&format!("sweep '{}' ({} cells)", self.name, self.cells.len()), &headers);
         for c in &self.cells {
             let mut row: Vec<String> = c.axes.iter().map(|(_, v)| v.clone()).collect();
@@ -227,6 +265,7 @@ impl SweepResult {
             row.push(c.counters.dropped_updates.to_string());
             row.push(c.counters.bytes_up.to_string());
             row.push(c.counters.bytes_down.to_string());
+            row.push(c.chaos.events_total().to_string());
             t.row(&row);
         }
         t
@@ -305,6 +344,7 @@ mod tests {
                 ("power_iters".into(), "24".into()),
                 ("transport".into(), "local".into()),
                 ("straggler".into(), "none".into()),
+                ("chaos".into(), "flaky-net".into()),
                 ("seed".into(), "42".into()),
             ],
             spec_echo: format!("task=matrix_sensing algo={algo} workers={w}"),
@@ -317,10 +357,22 @@ mod tests {
                 lmo_calls: 10,
                 iterations: 100,
                 dropped_updates: 3,
+                max_accepted_delay: 5,
                 bytes_up: 4096,
                 bytes_down: 8192,
                 msgs_up: 100,
                 msgs_down: 100,
+            },
+            chaos: ChaosSnapshot {
+                delays: 7,
+                delay_ns: 1_500_000,
+                drops: 2,
+                duplicates: 1,
+                corrupt_delivered: 1,
+                corrupt_rejected: 1,
+                reorders: 1,
+                crashes: 0,
+                late_joins: 0,
             },
             curve: vec![(0.0, 0, 1.0), (0.5, 50, 0.2), (1.0, 100, 0.0123)],
         }
@@ -344,11 +396,45 @@ mod tests {
             assert_eq!(a.final_rel, b.final_rel);
             assert_eq!(a.time_to_target, b.time_to_target);
             assert_eq!(a.counters, b.counters);
+            assert_eq!(a.chaos, b.chaos);
             assert_eq!(a.curve, b.curve);
             assert_eq!(a.wall.n, b.wall.n);
             assert_eq!(a.wall.mean_s, b.wall.mean_s);
             assert_eq!(a.wall.p90_s, b.wall.p90_s);
         }
+    }
+
+    #[test]
+    fn pre_chaos_artifacts_still_parse() {
+        // A v1 artifact written before the chaos layer existed has no
+        // "chaos" object and no max_accepted_delay counter; it must
+        // parse with zeros, not be rejected.  Build one by surgically
+        // removing those fields from a freshly-rendered document.
+        let res = SweepResult {
+            name: "old".into(),
+            target: None,
+            cells: vec![sample_cell("sfw-asyn", 1)],
+        };
+        let mut doc = res.to_json();
+        if let Json::Obj(top) = &mut doc {
+            if let Some((_, Json::Arr(cells))) = top.iter_mut().find(|(k, _)| k == "cells") {
+                for cell in cells {
+                    if let Json::Obj(fields) = cell {
+                        fields.retain(|(k, _)| k != "chaos");
+                        if let Some((_, Json::Obj(counters))) =
+                            fields.iter_mut().find(|(k, _)| k == "counters")
+                        {
+                            counters.retain(|(k, _)| k != "max_accepted_delay");
+                        }
+                    }
+                }
+            }
+        }
+        let back = SweepResult::from_json(&doc.render()).unwrap();
+        assert_eq!(back.cells[0].counters.max_accepted_delay, 0);
+        assert_eq!(back.cells[0].chaos, ChaosSnapshot::default());
+        // everything else survived
+        assert_eq!(back.cells[0].counters.bytes_up, res.cells[0].counters.bytes_up);
     }
 
     #[test]

@@ -123,6 +123,7 @@ fn run_cell(
         final_loss: report.final_loss(),
         time_to_target: spec.target.and_then(|t| report.time_to_relative(t)),
         counters: report.snapshot(),
+        chaos: report.chaos,
         curve: report.relative(),
     };
     if !quiet {

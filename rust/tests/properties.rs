@@ -162,13 +162,92 @@ fn prop_every_wire_message_roundtrips_with_exact_byte_accounting() {
 
         let up = DistUp {
             worker_id: rng.next_below(16) as u32,
+            k: rng.next_u64() % 10_000,
             loss_sum: rng.normal(),
             grad: Mat::randn(d1, d2, 1.0, &mut rng.fork(8)),
         };
         let rt = roundtrip(&up)?;
         prop_assert!(rt.grad == up.grad, "dist gradient corrupted");
-        prop_assert!(rt.worker_id == up.worker_id, "dist header corrupted");
+        prop_assert!(
+            rt.worker_id == up.worker_id && rt.k == up.k,
+            "dist header corrupted"
+        );
         wire_bytes_exact(&up)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_schedules_honor_monotonicity_caps_and_floors() {
+    // The theorem-bearing schedules: Increasing (SFW/SFW-asyn, Thm 1)
+    // and Linear (SVRF-asyn, Thm 2) must be nondecreasing in k, clamped
+    // to [1, cap]; Constant must be invariant in k.
+    use sfw::algo::schedule::BatchSchedule;
+    check("batch-schedule-shape", 670, 60, |rng| {
+        let scale = rng.next_f64() * 4.0 + 1e-6;
+        let cap = 1 + rng.next_below(5_000);
+        for schedule in [
+            BatchSchedule::Increasing { scale, cap },
+            BatchSchedule::Linear { scale, cap },
+        ] {
+            let mut prev = 0usize;
+            for k in 1..=200u64 {
+                let m = schedule.m(k);
+                prop_assert!(m >= 1, "{schedule:?}: m({k}) = {m} below floor");
+                prop_assert!(m <= cap, "{schedule:?}: m({k}) = {m} above cap {cap}");
+                prop_assert!(
+                    m >= prev,
+                    "{schedule:?}: m({k}) = {m} < m({}) = {prev} (not monotone)",
+                    k - 1
+                );
+                prev = m;
+            }
+            // once the cap binds it stays bound
+            if schedule.m(200) == cap {
+                prop_assert!(schedule.m(10_000) == cap, "cap released");
+            }
+        }
+        let m0 = 1 + rng.next_below(10_000);
+        let constant = BatchSchedule::Constant(m0);
+        for k in [1u64, 7, 100, 1 << 40] {
+            prop_assert!(constant.m(k) == m0, "Constant varied at k={k}");
+        }
+        // the degenerate Constant(0) still floors at 1
+        prop_assert!(BatchSchedule::Constant(0).m(1) == 1, "zero batch not floored");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_asyn_schedule_is_tau_squared_cheaper_and_eta_bounded() {
+    use sfw::algo::schedule::{eta, BatchSchedule};
+    check("asyn-schedule-and-eta", 680, 40, |rng| {
+        // eta_k = 2/(k+1): exactly the theorem value, in (0, 1], and
+        // strictly decreasing
+        for k in 1..=500u64 {
+            let e = eta(k);
+            let exact = 2.0 / (k as f32 + 1.0);
+            prop_assert!((e - exact).abs() < 1e-7, "eta({k}) = {e} != {exact}");
+            prop_assert!(e > 0.0 && e <= 1.0, "eta({k}) = {e} out of (0, 1]");
+            if k > 1 {
+                prop_assert!(e < eta(k - 1), "eta not decreasing at {k}");
+            }
+        }
+        // SFW-asyn's batch is ~tau^2 smaller than SFW's at the same k
+        // (Thm 1) wherever neither cap nor floor binds
+        let tau = 2 + rng.next_below(7) as u64;
+        let scale = 1.0 + rng.next_f64() * 3.0;
+        let sfw = BatchSchedule::sfw(scale, usize::MAX);
+        let asyn = BatchSchedule::sfw_asyn(scale, tau, usize::MAX);
+        for k in [20u64, 100, 400] {
+            let (a, b) = (sfw.m(k) as f64, asyn.m(k) as f64);
+            let want = (tau * tau) as f64;
+            prop_assert!(
+                (a / b - want).abs() / want < 0.25,
+                "tau={tau} k={k}: ratio {} vs tau^2 {want}",
+                a / b
+            );
+        }
         Ok(())
     });
 }

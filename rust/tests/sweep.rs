@@ -189,6 +189,7 @@ fn bad_axis_values_name_axis_and_value() {
         ("--sweep.batch tiny", "batch"),
         ("--sweep.transport smoke-signals", "transport"),
         ("--sweep.straggler geometric", "straggler"),
+        ("--sweep.chaos flakey-net", "chaos"),
         ("--sweep.seeds ,", "seeds"),
     ] {
         let err = SweepSpec::from_sources(tiny_base(), &Config::new(), &args(cli)).unwrap_err();
@@ -263,13 +264,16 @@ fn parallel_jobs_match_sequential_grid() {
 #[test]
 fn smoke_sweep_contract() {
     // The CI pipeline depends on this exact shape (see ROADMAP "Sweeps &
-    // CI"): tiny deterministic grid, seed 42, W in {1, 2}, every
-    // TCP-capable distributed algorithm over BOTH transports, and a
-    // written sweep_smoke.json artifact with nonzero comm bytes.
+    // CI" and "Chaos"): tiny deterministic grid, seed 42, W in {1, 2},
+    // every TCP-capable distributed algorithm over BOTH transports, each
+    // with and without the flaky-net chaos plan, and a written
+    // sweep_smoke.json artifact with nonzero comm bytes everywhere plus
+    // nonzero injected-event counts in the chaos cells.
     let sweep = SweepSpec::smoke();
     assert_eq!(sweep.name, "smoke");
     let cells = sweep.expand().unwrap();
-    assert_eq!(cells.len(), 12); // 3 algos x W in {1,2} x {local, tcp}
+    // 3 algos x W in {1,2} x {local, tcp} x {none, flaky-net}
+    assert_eq!(cells.len(), 24);
     for cell in &cells {
         assert_eq!(cell.axis("seed"), Some("42"));
         assert!(matches!(cell.axis("workers"), Some("1") | Some("2")));
@@ -278,6 +282,7 @@ fn smoke_sweep_contract() {
             Some("sfw-dist") | Some("sfw-asyn") | Some("svrf-asyn")
         ));
         assert!(matches!(cell.axis("transport"), Some("local") | Some("tcp")));
+        assert!(matches!(cell.axis("chaos"), Some("none") | Some("flaky-net")));
     }
     let result = SweepRunner::new().quiet(true).run(&sweep).unwrap();
     // every cell is a distributed run: comm bytes must be accounted —
@@ -288,15 +293,25 @@ fn smoke_sweep_contract() {
             "{}: comm bytes not accounted",
             cell.id()
         );
+        // chaos cells must actually inject; clean cells must not
+        match cell.axis("chaos") {
+            Some("flaky-net") => assert!(
+                cell.chaos.events_total() > 0,
+                "{}: chaos cell injected nothing",
+                cell.id()
+            ),
+            _ => assert_eq!(cell.chaos.events_total(), 0, "{}", cell.id()),
+        }
     }
     let dir = std::env::temp_dir().join("sfw_sweep_smoke_test");
     let path = dir.join("sweep_smoke.json");
     result.write_json(path.to_str().unwrap()).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
     let back = sfw::sweep::SweepResult::from_json(&text).unwrap();
-    assert_eq!(back.cells.len(), 12);
+    assert_eq!(back.cells.len(), 24);
     for (a, b) in result.cells.iter().zip(&back.cells) {
         assert_eq!(a.counters.bytes_up, b.counters.bytes_up);
         assert_eq!(a.counters.bytes_down, b.counters.bytes_down);
+        assert_eq!(a.chaos, b.chaos);
     }
 }

@@ -1,9 +1,12 @@
 #!/usr/bin/env python3
-"""Assert the smoke-sweep artifact accounts comm bytes in every cell.
+"""Assert the smoke-sweep artifact accounts comm bytes in every cell and
+injected chaos events in every chaos cell.
 
 Shared by scripts/ci.sh --smoke and .github/workflows/ci.yml so the
 check cannot drift between the two.  Every smoke cell is a distributed
-run, so zero bytes_up/bytes_down means the transport accounting broke.
+run, so zero bytes_up/bytes_down means the transport accounting broke;
+every `chaos=flaky-net` cell runs under fault injection, so zero
+injected events means the chaos layer silently stopped wrapping links.
 """
 import json
 import sys
@@ -14,4 +17,14 @@ assert cells, f"{path}: smoke artifact has no cells"
 bad = [c["axes"] for c in cells
        if c["counters"]["bytes_up"] <= 0 or c["counters"]["bytes_down"] <= 0]
 assert not bad, f"cells without comm bytes: {bad}"
-print(f"OK: {len(cells)} cells in {path}, bytes_up/bytes_down nonzero in all")
+
+chaos_cells = [c for c in cells if c["axes"].get("chaos") == "flaky-net"]
+assert chaos_cells, f"{path}: smoke grid lost its flaky-net chaos cells"
+quiet = [c["axes"] for c in chaos_cells if sum(c["chaos"].values()) <= 0]
+assert not quiet, f"chaos cells without injected events: {quiet}"
+clean_noisy = [c["axes"] for c in cells
+               if c["axes"].get("chaos") == "none" and sum(c["chaos"].values()) > 0]
+assert not clean_noisy, f"clean cells with injected events: {clean_noisy}"
+
+print(f"OK: {len(cells)} cells in {path}, bytes nonzero in all, "
+      f"events nonzero in {len(chaos_cells)} chaos cell(s)")

@@ -4,7 +4,10 @@
 #   scripts/ci.sh            build + test + style + benches/examples compile
 #   scripts/ci.sh --fast     skip the style pass
 #   scripts/ci.sh --smoke    additionally run the deterministic smoke sweep
-#                            (writes bench_out/sweep_smoke.json)
+#                            (writes bench_out/sweep_smoke.json; the grid
+#                            includes one flaky-net chaos cell per
+#                            TCP-capable solver, and the artifact check
+#                            asserts nonzero injected-event counts there)
 #
 # Runs: cargo build --release, cargo test -q, cargo bench --no-run and
 # cargo build --examples (so benches/examples can't silently rot), then
