@@ -1,18 +1,23 @@
 //! Hot-path microbenchmarks (§Perf): the per-operation costs that compose
 //! a worker step and a master iteration, native vs PJRT (AOT JAX/Pallas),
-//! plus the protocol-side costs (replay, codec, rank-one update).
+//! plus the protocol-side costs (replay, codec, rank-one update) and the
+//! dense-vs-factored iterate cells (operator-form LMO, factored loss and
+//! gradient) that feed the `BENCH_hotpath.json` perf trajectory
+//! (`scripts/bench_snapshot.py`).
 //!
 //! Used by the EXPERIMENTS.md §Perf iteration log.  Run with artifacts
-//! built (`make artifacts`) to get the PJRT rows.
+//! built (`make artifacts`) to get the PJRT rows.  Writes the humanized
+//! table to `bench_out/hotpath.csv` and the machine-readable numbers to
+//! `bench_out/hotpath_raw.csv`.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use sfw::algo::engine::{NativeEngine, StepEngine};
-use sfw::benchkit::{bench_for, humanize, Table};
+use sfw::benchkit::{bench_for, humanize, Stats, Table};
 use sfw::coordinator::update_log::{replay, UpdateLog};
 use sfw::experiments::{build_ms, build_pnn};
-use sfw::linalg::{power_iteration_rand, Mat};
+use sfw::linalg::{power_iteration_rand, FactoredMat, Mat};
 use sfw::objective::Objective;
 use sfw::runtime::{PjrtEngine, PjrtRuntime, Workload};
 use sfw::comms::Wire;
@@ -23,6 +28,7 @@ const BUDGET: Duration = Duration::from_millis(600);
 
 fn main() {
     let mut table = Table::new("hot-path microbenchmarks", &["op", "mean", "p50", "p90", "notes"]);
+    let mut raw: Vec<(String, Stats, String)> = Vec::new();
     let mut rng = Rng::new(42);
 
     let ms = build_ms(1, 20_000);
@@ -39,6 +45,7 @@ fn main() {
             humanize(s.p90_s),
             notes.into(),
         ]);
+        raw.push((name.to_string(), s, notes.to_string()));
     };
 
     // ---- native gradient + LMO -------------------------------------------
@@ -76,6 +83,61 @@ fn main() {
     });
     row("jacobi FULL SVD 30x30 (PGD's projection cost)", "why FW wins", &mut || {
         let _ = sfw::linalg::jacobi_svd(&g30);
+    });
+
+    // ---- dense vs factored iterate (operator-form LMO, loss, grad) -------
+    let fact196 = {
+        let mut f = FactoredMat::zeros(196, 196);
+        for _ in 0..64 {
+            f.push_atom(
+                rng.normal_f32() * 0.1,
+                Arc::new(rng.unit_vector(196)),
+                Arc::new(rng.unit_vector(196)),
+            );
+        }
+        f
+    };
+    row("lmo 196x196 dense operator", "power_iteration on Mat", &mut || {
+        let _ = power_iteration_rand(&g196, &mut rng, 24, 1e-7);
+    });
+    row("lmo 196x196 factored operator k=64", "no dense X built", &mut || {
+        let _ = power_iteration_rand(&fact196, &mut rng, 24, 1e-7);
+    });
+    let fact30 = {
+        let mut f = FactoredMat::zeros(30, 30);
+        for _ in 0..16 {
+            f.push_atom(
+                rng.normal_f32() * 0.1,
+                Arc::new(rng.unit_vector(30)),
+                Arc::new(rng.unit_vector(30)),
+            );
+        }
+        f
+    };
+    let dense30 = fact30.to_dense();
+    row("ms loss_full dense 30x30", "N=20k residuals", &mut || {
+        let _ = ms_o.loss_full(&dense30);
+    });
+    row("ms loss_full factored 30x30 k=16", "factored inner products", &mut || {
+        let _ = ms_o.loss_full_factored(&fact30);
+    });
+    let fact_pnn = {
+        let mut f = FactoredMat::zeros(196, 196);
+        for _ in 0..16 {
+            f.push_atom(
+                rng.normal_f32() * 0.1,
+                Arc::new(rng.unit_vector(196)),
+                Arc::new(rng.unit_vector(196)),
+            );
+        }
+        f
+    };
+    let dense_pnn = fact_pnn.to_dense();
+    row("pnn grad m=256 dense 196x196", "O(d^2) forward per sample", &mut || {
+        let _ = pnn_o.grad_sum(&dense_pnn, &idxp, &mut gp);
+    });
+    row("pnn grad m=256 factored k=16", "O(k d) forward per sample", &mut || {
+        let _ = pnn_o.grad_sum_factored(&fact_pnn, &idxp, &mut gp);
     });
 
     // ---- protocol ops --------------------------------------------------------
@@ -144,5 +206,15 @@ fn main() {
     table.print();
     let _ = std::fs::create_dir_all("bench_out");
     table.write_csv("bench_out/hotpath.csv").expect("csv");
-    println!("series written to bench_out/hotpath.csv");
+    // machine-readable twin for scripts/bench_snapshot.py (seconds, not
+    // humanized strings)
+    let mut out = String::from("op,mean_s,p50_s,p90_s,notes\n");
+    for (name, s, notes) in &raw {
+        out.push_str(&format!(
+            "{:?},{:.9},{:.9},{:.9},{:?}\n",
+            name, s.mean_s, s.p50_s, s.p90_s, notes
+        ));
+    }
+    std::fs::write("bench_out/hotpath_raw.csv", out).expect("raw csv");
+    println!("series written to bench_out/hotpath.csv and bench_out/hotpath_raw.csv");
 }

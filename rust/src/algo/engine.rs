@@ -13,7 +13,7 @@
 
 use std::sync::Arc;
 
-use crate::linalg::{power_iteration, Mat, Svd1};
+use crate::linalg::{power_iteration, Iterate, Mat, Svd1};
 use crate::objective::Objective;
 use crate::util::rng::Rng;
 
@@ -38,6 +38,25 @@ pub trait StepEngine: Send {
     fn lmo(&mut self, g: &Mat) -> Svd1;
     /// Objective handle (dims, theta, loss evaluation).
     fn objective(&self) -> &Arc<dyn Objective>;
+
+    /// [`StepEngine::step`] against either iterate representation.  The
+    /// default densifies a factored iterate (correct for any engine —
+    /// the PJRT artifacts take dense inputs); `NativeEngine` overrides
+    /// it to evaluate the factored form directly.
+    fn step_it(&mut self, x: &Iterate, idx: &[usize]) -> StepOut {
+        match x {
+            Iterate::Dense(m) => self.step(m, idx),
+            Iterate::Factored(f) => self.step(&f.to_dense(), idx),
+        }
+    }
+
+    /// [`StepEngine::grad_sum`] against either iterate representation.
+    fn grad_sum_it(&mut self, x: &Iterate, idx: &[usize], out: &mut Mat) -> f64 {
+        match x {
+            Iterate::Dense(m) => self.grad_sum(m, idx, out),
+            Iterate::Factored(f) => self.grad_sum(&f.to_dense(), idx, out),
+        }
+    }
 }
 
 /// Pure-Rust engine: exact mirror of the AOT artifact semantics.
@@ -47,6 +66,9 @@ pub struct NativeEngine {
     pub tol: f64,
     rng: Rng,
     scratch: Mat,
+    /// Power-iteration restart buffer, reused across calls so the fused
+    /// gradient->LMO step allocates only its (u, v) outputs.
+    v0: Vec<f32>,
 }
 
 impl NativeEngine {
@@ -58,15 +80,21 @@ impl NativeEngine {
             tol: 1e-7,
             rng: Rng::new(seed),
             scratch: Mat::zeros(d1, d2),
+            v0: vec![0.0; d2],
         }
+    }
+
+    /// LMO on the (already-filled) gradient scratch.
+    fn lmo_on_scratch(&mut self) -> Svd1 {
+        self.rng.fill_unit_vector(&mut self.v0);
+        power_iteration(&self.scratch, &self.v0, self.power_iters, self.tol)
     }
 }
 
 impl StepEngine for NativeEngine {
     fn step(&mut self, x: &Mat, idx: &[usize]) -> StepOut {
         let loss_sum = self.obj.grad_sum(x, idx, &mut self.scratch);
-        let v0 = self.rng.unit_vector(self.scratch.cols);
-        let s = power_iteration(&self.scratch, &v0, self.power_iters, self.tol);
+        let s = self.lmo_on_scratch();
         StepOut { u: s.u, v: s.v, sigma: s.sigma, loss_sum, m: idx.len() }
     }
 
@@ -75,8 +103,21 @@ impl StepEngine for NativeEngine {
     }
 
     fn lmo(&mut self, g: &Mat) -> Svd1 {
-        let v0 = self.rng.unit_vector(g.cols);
-        power_iteration(g, &v0, self.power_iters, self.tol)
+        debug_assert_eq!(g.cols, self.v0.len());
+        self.rng.fill_unit_vector(&mut self.v0);
+        power_iteration(g, &self.v0, self.power_iters, self.tol)
+    }
+
+    /// Factored iterates are evaluated directly (factored inner
+    /// products in the objective) — no dense X is ever built.
+    fn step_it(&mut self, x: &Iterate, idx: &[usize]) -> StepOut {
+        let loss_sum = self.obj.grad_sum_it(x, idx, &mut self.scratch);
+        let s = self.lmo_on_scratch();
+        StepOut { u: s.u, v: s.v, sigma: s.sigma, loss_sum, m: idx.len() }
+    }
+
+    fn grad_sum_it(&mut self, x: &Iterate, idx: &[usize], out: &mut Mat) -> f64 {
+        self.obj.grad_sum_it(x, idx, out)
     }
 
     fn objective(&self) -> &Arc<dyn Objective> {

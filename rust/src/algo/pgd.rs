@@ -10,8 +10,9 @@ use std::sync::Arc;
 
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::BatchSchedule;
-use crate::algo::sfw::init_rank_one;
-use crate::linalg::{nuclear_ball_projection, Mat};
+use crate::linalg::{
+    factored_nuclear_projection, nuclear_ball_projection, Iterate, Mat, Repr,
+};
 use crate::metrics::{Counters, LossTrace};
 use crate::util::rng::Rng;
 
@@ -22,6 +23,10 @@ pub struct PgdOptions {
     pub gamma: f32,
     pub eval_every: u64,
     pub seed: u64,
+    /// Iterate representation.  Factored-mode PGD takes its atoms
+    /// straight from the projection's SVD (which it computes anyway), so
+    /// the iterate's rank is visible for free.
+    pub repr: Repr,
 }
 
 impl Default for PgdOptions {
@@ -32,6 +37,7 @@ impl Default for PgdOptions {
             gamma: 0.05,
             eval_every: 10,
             seed: 0,
+            repr: Repr::Dense,
         }
     }
 }
@@ -42,28 +48,44 @@ pub fn run_pgd<E: StepEngine + ?Sized>(
     opts: &PgdOptions,
     counters: &Counters,
     trace: &LossTrace,
-) -> Mat {
+) -> Iterate {
     let obj: Arc<dyn crate::objective::Objective> = engine.objective().clone();
     let (d1, d2) = obj.dims();
     let theta = obj.theta();
     let n = obj.n();
     let mut rng = Rng::new(opts.seed);
-    let mut x = init_rank_one(d1, d2, theta, &mut rng);
+    let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut rng);
     let mut g = Mat::zeros(d1, d2);
     let mut idx = Vec::new();
+    let mut peak = x.peak_atoms();
 
-    trace.record(0, obj.loss_full(&x));
+    trace.record(0, obj.loss_full_it(&x));
     for k in 1..=opts.iterations {
         let m = opts.batch.m(k);
         rng.sample_indices(n, m, &mut idx);
-        let _ = engine.grad_sum(&x, &idx, &mut g);
+        let _ = engine.grad_sum_it(&x, &idx, &mut g);
         counters.add_grad_evals(m as u64);
         counters.add_iteration();
-        x.axpy(-opts.gamma / m as f32, &g);
-        x = nuclear_ball_projection(&x, theta);
+        // gradient step on the dense form (the projection needs a full
+        // SVD of it anyway), then project back — into atoms when the
+        // run is factored
+        let mut xd = x.into_dense();
+        xd.axpy(-opts.gamma / m as f32, &g);
+        x = match opts.repr {
+            Repr::Dense => Iterate::Dense(nuclear_ball_projection(&xd, theta)),
+            Repr::Factored => {
+                let f = factored_nuclear_projection(&xd, theta);
+                peak = peak.max(f.peak_atoms());
+                Iterate::Factored(f)
+            }
+        };
         if k % opts.eval_every == 0 || k == opts.iterations {
-            trace.record(k, obj.loss_full(&x));
+            trace.record(k, obj.loss_full_it(&x));
         }
+    }
+    if let Iterate::Factored(f) = &mut x {
+        // surface the run-wide peak, not just the final projection's
+        f.note_peak(peak);
     }
     x
 }
@@ -93,12 +115,46 @@ mod tests {
             gamma: 0.1,
             eval_every: 20,
             seed: 62,
+            repr: Repr::Dense,
         };
         let x = run_pgd(&mut engine, &opts, &counters, &trace);
         let pts = trace.points();
         assert!(pts.last().unwrap().loss < 0.5 * pts.first().unwrap().loss);
-        assert!(nuclear_norm(&x) <= 1.0 + 1e-3);
+        assert!(nuclear_norm(&x.to_dense()) <= 1.0 + 1e-3);
         // PGD performs no LMO calls — the comparison axis of the paper
         assert_eq!(counters.snapshot().lmo_calls, 0);
+    }
+
+    #[test]
+    fn factored_pgd_tracks_dense_pgd() {
+        let mut rng = Rng::new(63);
+        let p = MsParams { d1: 7, d2: 5, rank: 2, n: 800, noise_std: 0.05 };
+        let obj = Arc::new(MatrixSensing::new(
+            MatrixSensingData::generate(&p, &mut rng),
+            1.0,
+        ));
+        let run = |repr: Repr| {
+            let mut engine = NativeEngine::new(obj.clone(), 50, 64);
+            let counters = Counters::new();
+            let trace = LossTrace::new();
+            let opts = PgdOptions {
+                iterations: 40,
+                batch: BatchSchedule::Constant(64),
+                gamma: 0.1,
+                eval_every: 10,
+                seed: 65,
+                repr,
+            };
+            run_pgd(&mut engine, &opts, &counters, &trace)
+        };
+        let dense = run(Repr::Dense).into_dense();
+        let fact_it = run(Repr::Factored);
+        let peak = fact_it.peak_atoms();
+        let fact = fact_it.into_dense();
+        let mut d = dense.clone();
+        d.axpy(-1.0, &fact);
+        let rel = d.frob_norm() / (1.0 + dense.frob_norm());
+        assert!(rel < 1e-2, "factored PGD diverged from dense: {rel}");
+        assert!(peak >= 1);
     }
 }

@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::{eta, BatchSchedule};
-use crate::linalg::Mat;
+use crate::linalg::{Iterate, Mat, Repr};
 use crate::metrics::{Counters, LossTrace};
 use crate::util::rng::Rng;
 
@@ -17,6 +17,8 @@ pub struct SfwOptions {
     /// Evaluate F(X) every this many iterations (full-data pass).
     pub eval_every: u64,
     pub seed: u64,
+    /// Iterate representation (dense reference or factored atoms).
+    pub repr: Repr,
 }
 
 impl Default for SfwOptions {
@@ -26,6 +28,7 @@ impl Default for SfwOptions {
             batch: BatchSchedule::sfw(0.05, 10_000),
             eval_every: 10,
             seed: 0,
+            repr: Repr::Dense,
         }
     }
 }
@@ -44,34 +47,35 @@ pub fn init_rank_one(d1: usize, d2: usize, theta: f32, rng: &mut Rng) -> Mat {
     x
 }
 
-/// Run serial SFW; returns the final iterate.  Every LMO, gradient
-/// evaluation and loss point is recorded in `counters` / `trace`.
+/// Run serial SFW; returns the final iterate (dense or factored per
+/// `opts.repr`).  Every LMO, gradient evaluation and loss point is
+/// recorded in `counters` / `trace`.
 pub fn run_sfw<E: StepEngine + ?Sized>(
     engine: &mut E,
     opts: &SfwOptions,
     counters: &Counters,
     trace: &LossTrace,
-) -> Mat {
+) -> Iterate {
     let obj: Arc<dyn crate::objective::Objective> = engine.objective().clone();
     let (d1, d2) = obj.dims();
     let theta = obj.theta();
     let n = obj.n();
     let mut rng = Rng::new(opts.seed);
-    let mut x = init_rank_one(d1, d2, theta, &mut rng);
+    let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut rng);
     let mut idx = Vec::new();
 
-    trace.record(0, obj.loss_full(&x));
+    trace.record(0, obj.loss_full_it(&x));
     for k in 1..=opts.iterations {
         let m = opts.batch.m(k);
         rng.sample_indices(n, m, &mut idx);
-        let out = engine.step(&x, &idx);
+        let out = engine.step_it(&x, &idx);
         counters.add_grad_evals(m as u64);
         counters.add_lmo();
         counters.add_iteration();
         // X <- (1 - eta) X + eta * (-theta u v^T)
         x.fw_rank_one_update(eta(k), -theta, &out.u, &out.v);
         if k % opts.eval_every == 0 || k == opts.iterations {
-            trace.record(k, obj.loss_full(&x));
+            trace.record(k, obj.loss_full_it(&x));
         }
     }
     x
@@ -109,6 +113,7 @@ mod tests {
             batch: BatchSchedule::sfw(0.05, 2_000),
             eval_every: 20,
             seed: 53,
+            repr: crate::linalg::Repr::Dense,
         };
         let x = run_sfw(&mut engine, &opts, &counters, &trace);
         let pts = trace.points();
@@ -119,7 +124,7 @@ mod tests {
             "SFW failed to make progress: {first} -> {last}"
         );
         // iterates stay in the nuclear ball (convex combination of feasible pts)
-        assert!(nuclear_norm(&x) <= 1.0 + 1e-3);
+        assert!(nuclear_norm(&x.to_dense()) <= 1.0 + 1e-3);
         let s = counters.snapshot();
         assert_eq!(s.lmo_calls, 120);
         assert_eq!(s.iterations, 120);
@@ -138,6 +143,7 @@ mod tests {
             batch: BatchSchedule::Constant(128),
             eval_every: 25,
             seed: 56,
+            repr: crate::linalg::Repr::Dense,
         };
         run_sfw(&mut engine, &opts, &counters, &trace);
         let pts = trace.points();

@@ -9,8 +9,7 @@ use std::sync::Arc;
 
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::{eta, svrf_epoch_len, BatchSchedule};
-use crate::algo::sfw::init_rank_one;
-use crate::linalg::Mat;
+use crate::linalg::{Iterate, Mat, Repr};
 use crate::metrics::{Counters, LossTrace};
 use crate::util::rng::Rng;
 
@@ -19,6 +18,8 @@ pub struct SvrfOptions {
     pub batch: BatchSchedule,
     pub eval_every: u64,
     pub seed: u64,
+    /// Iterate representation (dense reference or factored atoms).
+    pub repr: Repr,
 }
 
 impl Default for SvrfOptions {
@@ -28,6 +29,7 @@ impl Default for SvrfOptions {
             batch: BatchSchedule::Linear { scale: 96.0, cap: 4096 },
             eval_every: 10,
             seed: 0,
+            repr: Repr::Dense,
         }
     }
 }
@@ -35,14 +37,14 @@ impl Default for SvrfOptions {
 /// Compute the full gradient at `w` in chunks (counts N gradient evals).
 pub fn full_gradient<E: StepEngine + ?Sized>(
     engine: &mut E,
-    w: &Mat,
+    w: &Iterate,
     counters: &Counters,
     out: &mut Mat,
 ) {
     let obj = engine.objective().clone();
     let n = obj.n();
     let all: Vec<usize> = (0..n).collect();
-    let _ = engine.grad_sum(w, &all, out);
+    let _ = engine.grad_sum_it(w, &all, out);
     out.scale(1.0 / n as f32);
     counters.add_grad_evals(n as u64);
 }
@@ -52,13 +54,13 @@ pub fn run_svrf<E: StepEngine + ?Sized>(
     opts: &SvrfOptions,
     counters: &Counters,
     trace: &LossTrace,
-) -> Mat {
+) -> Iterate {
     let obj: Arc<dyn crate::objective::Objective> = engine.objective().clone();
     let (d1, d2) = obj.dims();
     let theta = obj.theta();
     let n = obj.n();
     let mut rng = Rng::new(opts.seed);
-    let mut x = init_rank_one(d1, d2, theta, &mut rng);
+    let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut rng);
 
     let mut full_g = Mat::zeros(d1, d2);
     let mut gx = Mat::zeros(d1, d2);
@@ -66,7 +68,7 @@ pub fn run_svrf<E: StepEngine + ?Sized>(
     let mut idx = Vec::new();
     let mut global_k = 0u64;
 
-    trace.record(0, obj.loss_full(&x));
+    trace.record(0, obj.loss_full_it(&x));
     for t in 0..opts.epochs {
         let w = x.clone();
         full_gradient(engine, &w, counters, &mut full_g);
@@ -75,8 +77,8 @@ pub fn run_svrf<E: StepEngine + ?Sized>(
             let m = opts.batch.m(k);
             rng.sample_indices(n, m, &mut idx);
             // VR gradient: (grad_sum(X) - grad_sum(W))/m + full_g
-            let _ = engine.grad_sum(&x, &idx, &mut gx);
-            let _ = engine.grad_sum(&w, &idx, &mut gw);
+            let _ = engine.grad_sum_it(&x, &idx, &mut gx);
+            let _ = engine.grad_sum_it(&w, &idx, &mut gw);
             counters.add_grad_evals(2 * m as u64);
             gx.axpy(-1.0, &gw);
             gx.scale(1.0 / m as f32);
@@ -87,10 +89,10 @@ pub fn run_svrf<E: StepEngine + ?Sized>(
             x.fw_rank_one_update(eta(k), -theta, &s.u, &s.v);
             global_k += 1;
             if global_k % opts.eval_every == 0 {
-                trace.record(global_k, obj.loss_full(&x));
+                trace.record(global_k, obj.loss_full_it(&x));
             }
         }
-        trace.record(global_k, obj.loss_full(&x));
+        trace.record(global_k, obj.loss_full_it(&x));
     }
     x
 }
@@ -119,6 +121,7 @@ mod tests {
             batch: BatchSchedule::Linear { scale: 24.0, cap: 1_500 },
             eval_every: 10,
             seed: 72,
+            repr: Repr::Dense,
         };
         let x = run_svrf(&mut engine, &opts, &counters, &trace);
         let pts = trace.points();
@@ -128,7 +131,7 @@ mod tests {
             pts.first().unwrap().loss,
             pts.last().unwrap().loss
         );
-        assert!(nuclear_norm(&x) <= 1.0 + 1e-3);
+        assert!(nuclear_norm(&x.to_dense()) <= 1.0 + 1e-3);
         // inner iterations = N_0 + N_1 + N_2 = 6 + 14 + 30
         assert_eq!(counters.snapshot().lmo_calls, 50);
     }
@@ -145,7 +148,7 @@ mod tests {
         let counters = Counters::new();
         let x = Mat::randn(4, 4, 0.2, &mut rng);
         let mut fg = Mat::zeros(4, 4);
-        full_gradient(&mut engine, &x, &counters, &mut fg);
+        full_gradient(&mut engine, &Iterate::Dense(x.clone()), &counters, &mut fg);
         let idx: Vec<usize> = (0..120).collect();
         let mut gs = Mat::zeros(4, 4);
         obj.grad_sum(&x, &idx, &mut gs);

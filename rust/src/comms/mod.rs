@@ -2,8 +2,10 @@
 //!
 //! Every distributed algorithm in the repo speaks a small typed protocol
 //! (the paper's rank-one `{u, v, t_w}` exchange for SFW-asyn/SVRF-asyn,
-//! the dense broadcast/reduce round of SFW-dist).  This module factors
-//! what is common to all of them:
+//! the dense — or, in factored-iterate mode, atoms-only
+//! (`DistDown::ComputeFactored`, see [`crate::linalg::FactoredMat`] and
+//! the `sfw::session` factored quickstart) — broadcast/reduce round of
+//! SFW-dist).  This module factors what is common to all of them:
 //!
 //! * [`Wire`] — encode/decode of one protocol message to a
 //!   length-prefixed frame (`[u32 payload_len][u8 tag][payload]`).

@@ -118,6 +118,9 @@ pub struct TrainConfig {
     pub batch_cap: usize,
     pub batch_scale: f64,
     pub power_iters: usize,
+    /// Iterate representation: "auto" | "dense" | "factored" (auto =
+    /// per-objective default; see `session::ReprKind`).
+    pub repr: String,
     pub theta: f32,
     pub seed: u64,
     pub eval_every: u64,
@@ -154,6 +157,7 @@ impl Default for TrainConfig {
             batch_cap: 10_000,
             batch_scale: 0.5,
             power_iters: 24,
+            repr: "auto".into(),
             theta: 1.0,
             seed: 42,
             eval_every: 10,
@@ -194,7 +198,8 @@ impl TrainConfig {
         const TRAIN_KEYS: &[&str] = &[
             "task", "algo", "engine", "transport", "tcp-bind", "tcp-await",
             "artifacts-dir", "workers", "tau", "iterations", "epochs", "batch",
-            "batch-cap", "batch-scale", "power-iters", "theta", "seed", "eval-every",
+            "batch-cap", "batch-scale", "power-iters", "repr", "theta", "seed",
+            "eval-every",
         ];
         const DATA_KEYS: &[&str] = &["ms-n", "ms-d", "ms-rank", "ms-noise", "pnn-n", "pnn-d"];
 
@@ -241,6 +246,7 @@ impl TrainConfig {
             batch_cap: cfg.get("batch-cap", d.batch_cap)?,
             batch_scale: cfg.get("batch-scale", d.batch_scale)?,
             power_iters: cfg.get("power-iters", d.power_iters)?,
+            repr: cfg.get_str("repr", &d.repr),
             theta: cfg.get("theta", d.theta)?,
             seed: cfg.get("seed", d.seed)?,
             eval_every: cfg.get("eval-every", d.eval_every)?,

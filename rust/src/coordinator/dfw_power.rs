@@ -14,10 +14,9 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
 use crate::algo::schedule::eta;
-use crate::algo::sfw::init_rank_one;
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::runner::RunResult;
-use crate::linalg::{normalize, Mat};
+use crate::linalg::{normalize, Iterate, Mat, Repr};
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
 use crate::util::rng::Rng;
@@ -31,6 +30,9 @@ pub struct DfwOptions {
     pub rounds_slope: f64,
     pub eval_every: u64,
     pub seed: u64,
+    /// Master-side iterate representation (workers shard dense
+    /// gradients either way — DFW's LMO is what is distributed).
+    pub repr: Repr,
 }
 
 impl Default for DfwOptions {
@@ -42,6 +44,7 @@ impl Default for DfwOptions {
             rounds_slope: 0.5,
             eval_every: 5,
             seed: 0,
+            repr: Repr::Dense,
         }
     }
 }
@@ -115,12 +118,12 @@ pub(crate) fn run_dfw_power_impl(obj: Arc<dyn Objective>, opts: &DfwOptions) -> 
     }
     drop(up_tx);
 
-    let mut x = init_rank_one(d1, d2, theta, &mut Rng::new(opts.seed));
+    let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut Rng::new(opts.seed));
     evaluator.submit(trace.elapsed(), 0, x.clone());
     let mut rng = Rng::new(opts.seed ^ 0xDF);
     for t in 1..=opts.iterations {
         // 1. fresh local gradients at X_t (X broadcast: dense down)
-        let xa = Arc::new(x.clone());
+        let xa = Arc::new(x.to_dense());
         for tx in &down_txs {
             counters.add_down((d1 * d2 * 4) as u64);
             let _ = tx.send(Req::NewGrad { x: xa.clone() });
@@ -186,7 +189,8 @@ pub(crate) fn run_dfw_power_impl(obj: Arc<dyn Objective>, opts: &DfwOptions) -> 
         let _ = h.join();
     }
     evaluator.finish();
-    RunResult { x, counters, trace, chaos: Default::default() }
+    let (rank, peak_atoms) = (x.rank(), x.peak_atoms());
+    RunResult { x: x.into_dense(), rank, peak_atoms, counters, trace, chaos: Default::default() }
 }
 
 #[cfg(test)]
@@ -209,6 +213,7 @@ mod tests {
             rounds_slope: 0.5,
             eval_every: 10,
             seed: 131,
+            repr: Repr::Dense,
         };
         let r = run_dfw_power_impl(obj, &opts);
         let pts = r.trace.points();

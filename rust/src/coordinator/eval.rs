@@ -2,31 +2,33 @@
 //!
 //! Full-objective evaluation is a pass over all N samples — orders of
 //! magnitude more work than one master iteration.  Algorithm 3's master
-//! keeps its dense X copy "not run in real time ... for output only"; we
-//! honor that by snapshotting X (one D1*D2 memcpy) with its wall-clock
-//! timestamp and shipping it to a dedicated evaluator thread, so the loss
-//! curves of Figures 4–7 are timestamped at snapshot time and the hot loop
-//! never pays for an evaluation.
+//! keeps its model copy "not run in real time ... for output only"; we
+//! honor that by snapshotting the iterate with its wall-clock timestamp
+//! and shipping it to a dedicated evaluator thread, so the loss curves of
+//! Figures 4–7 are timestamped at snapshot time and the hot loop never
+//! pays for an evaluation.  Snapshots are [`Iterate`]s: a dense snapshot
+//! is one D1*D2 memcpy, a factored snapshot is an O(k) atom-list clone
+//! (`Arc`'d factors) — another place the factored representation pays.
 
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::linalg::Mat;
+use crate::linalg::Iterate;
 use crate::metrics::LossTrace;
 use crate::objective::Objective;
 
 pub struct Evaluator {
-    tx: Option<Sender<(f64, u64, Mat)>>,
+    tx: Option<Sender<(f64, u64, Iterate)>>,
     handle: Option<JoinHandle<()>>,
 }
 
 impl Evaluator {
     pub fn new(obj: Arc<dyn Objective>, trace: Arc<LossTrace>) -> Self {
-        let (tx, rx) = channel::<(f64, u64, Mat)>();
+        let (tx, rx) = channel::<(f64, u64, Iterate)>();
         let handle = std::thread::spawn(move || {
             for (t, k, x) in rx {
-                let loss = obj.loss_full(&x);
+                let loss = obj.loss_full_it(&x);
                 trace.record_at(t, k, loss);
             }
         });
@@ -34,7 +36,7 @@ impl Evaluator {
     }
 
     /// Submit a snapshot taken at time `t` (seconds since trace start).
-    pub fn submit(&self, t: f64, k: u64, x: Mat) {
+    pub fn submit(&self, t: f64, k: u64, x: Iterate) {
         if let Some(tx) = &self.tx {
             let _ = tx.send((t, k, x));
         }
@@ -62,6 +64,7 @@ impl Drop for Evaluator {
 mod tests {
     use super::*;
     use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
+    use crate::linalg::Mat;
     use crate::objective::MatrixSensing;
     use crate::util::rng::Rng;
 
@@ -76,8 +79,8 @@ mod tests {
         let trace = Arc::new(LossTrace::new());
         let ev = Evaluator::new(obj.clone(), trace.clone());
         let x = Mat::zeros(4, 4);
-        ev.submit(1.5, 10, x.clone());
-        ev.submit(2.5, 20, x.clone());
+        ev.submit(1.5, 10, Iterate::Dense(x.clone()));
+        ev.submit(2.5, 20, Iterate::Dense(x.clone()));
         ev.finish();
         let pts = trace.points();
         assert_eq!(pts.len(), 2);

@@ -6,18 +6,19 @@
 //! (`t_m - t_w > tau` => drop, but still ship the catch-up slice so the
 //! straggler resynchronizes), appends accepted updates to the rank-one
 //! log, and replies with exactly the log entries the sender is missing.
-//! The dense X copy is maintained out of the reply path and snapshotted to
-//! the off-thread evaluator ("not run in real time; maintain a copy for
-//! output only" — Alg 3 line 12).
+//! The model copy (dense or factored, per `MasterOptions::repr`) is
+//! maintained out of the reply path and snapshotted to the off-thread
+//! evaluator ("not run in real time; maintain a copy for output only" —
+//! Alg 3 line 12); in factored mode the copy adopts the log entries as
+//! atoms, so log and iterate are one representation.
 
 use std::sync::Arc;
 
-use crate::algo::sfw::init_rank_one;
 use crate::comms::MasterLink;
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::messages::{MasterMsg, UpdateMsg};
-use crate::coordinator::update_log::UpdateLog;
-use crate::linalg::Mat;
+use crate::coordinator::update_log::{ApplyEntry, UpdateLog};
+use crate::linalg::{Iterate, Repr};
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
 use crate::util::rng::Rng;
@@ -32,10 +33,14 @@ pub struct MasterOptions {
     /// Seed shared with the workers: X_0 = init_rank_one(seed) on both
     /// sides, standing in for the paper's initial {u_0, v_0} broadcast.
     pub seed: u64,
+    /// Iterate representation of the master's model copy.  In factored
+    /// mode the copy shares the update log's atom `Arc`s — the log IS
+    /// the iterate.
+    pub repr: Repr,
 }
 
 /// Run the master until T accepted updates, then stop all workers.
-/// Returns the final dense iterate X_T.
+/// Returns the final iterate X_T.
 pub fn run_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
     link: &mut L,
     obj: &Arc<dyn Objective>,
@@ -43,11 +48,11 @@ pub fn run_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
     counters: &Counters,
     trace: &LossTrace,
     evaluator: &Evaluator,
-) -> Mat {
+) -> Iterate {
     let (d1, d2) = obj.dims();
     let theta = obj.theta();
     let mut log = UpdateLog::new();
-    let mut x = init_rank_one(d1, d2, theta, &mut Rng::new(opts.seed));
+    let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut Rng::new(opts.seed));
     evaluator.submit(trace.elapsed(), 0, x.clone());
 
     while log.t_m() < opts.iterations {
@@ -98,7 +103,7 @@ pub fn run_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
         }
         counters.note_accepted_delay(delay);
         let e = log.append(upd.u, upd.v, theta);
-        x.fw_rank_one_update(e.eta, e.scale, &e.u, &e.v);
+        x.apply_entry(e);
         counters.add_iteration();
         let t_m = log.t_m();
         link.send_to(w, MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) });

@@ -217,6 +217,7 @@ impl Wire for MasterMsg {
 pub const TAG_DIST_GRAD: u8 = 1;
 pub const TAG_DIST_COMPUTE: u8 = 1;
 pub const TAG_DIST_STOP: u8 = 2;
+pub const TAG_DIST_COMPUTE_FACTORED: u8 = 3;
 
 /// Worker -> master round reply: the dense partial gradient —
 /// O(D1 * D2) on the wire, the cost the paper's protocol eliminates.
@@ -275,13 +276,21 @@ impl Wire for DistUp {
     }
 }
 
-/// Master -> worker round broadcast: the dense iterate plus each
-/// worker's minibatch share — again O(D1 * D2) per worker per round.
-/// The iterate is `Arc`ed so the local transport's per-worker broadcast
-/// is a refcount bump, not W deep copies.
+/// Master -> worker round broadcast.  The dense variant ships the full
+/// iterate plus each worker's minibatch share — O(D1 * D2) per worker
+/// per round, `Arc`ed so the local transport's per-worker broadcast is a
+/// refcount bump, not W deep copies.  The factored variant ships only
+/// the rank-one atoms appended since the previous round — the same
+/// [`LogEntry`]s the asynchronous protocol replays — cutting the
+/// downlink to O((D1 + D2) * new-atoms) per worker per round (workers
+/// reconstruct X locally from the shared-seed X_0; see
+/// `coordinator::sync`).
 #[derive(Clone, Debug)]
 pub enum DistDown {
     Compute { k: u64, m_share: u32, x: Arc<Mat> },
+    /// Factored-downlink round: atoms since the last broadcast (0 or 1
+    /// in the lockstep barrier protocol; a slice after skipped rounds).
+    ComputeFactored { k: u64, m_share: u32, entries: Vec<LogEntry> },
     Stop,
 }
 
@@ -289,17 +298,23 @@ impl Wire for DistDown {
     fn tag(&self) -> u8 {
         match self {
             DistDown::Compute { .. } => TAG_DIST_COMPUTE,
+            DistDown::ComputeFactored { .. } => TAG_DIST_COMPUTE_FACTORED,
             DistDown::Stop => TAG_DIST_STOP,
         }
     }
 
-    /// O(1) closed form, pinned to the codec by property test.
+    /// O(1)-per-entry closed form, pinned to the codec by property test.
     fn wire_bytes(&self) -> u64 {
         let header = crate::comms::FRAME_HEADER as u64;
         match self {
             DistDown::Stop => header,
             DistDown::Compute { x, .. } => {
                 header + (8 + 4 + 4 + 4) as u64 + 4 * x.data.len() as u64
+            }
+            DistDown::ComputeFactored { entries, .. } => {
+                header
+                    + (8 + 4 + 4) as u64
+                    + entries.iter().map(|e| e.wire_bytes()).sum::<u64>()
             }
         }
     }
@@ -312,6 +327,19 @@ impl Wire for DistDown {
                 e.u64(*k);
                 e.u32(*m_share);
                 e.mat(x);
+            }
+            DistDown::ComputeFactored { k, m_share, entries } => {
+                let mut e = Enc(buf);
+                e.u64(*k);
+                e.u32(*m_share);
+                e.u32(entries.len() as u32);
+                for le in entries {
+                    e.u64(le.k);
+                    e.f32(le.eta);
+                    e.f32(le.scale);
+                    e.f32s(&le.u);
+                    e.f32s(&le.v);
+                }
             }
         }
     }
@@ -333,6 +361,24 @@ impl Wire for DistDown {
                 };
                 d.finish()?;
                 Ok(msg)
+            }
+            TAG_DIST_COMPUTE_FACTORED => {
+                let mut d = Dec::new(payload);
+                let k = d.u64()?;
+                let m_share = d.u32()?;
+                let n = d.u32()? as usize;
+                let mut entries = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    entries.push(LogEntry {
+                        k: d.u64()?,
+                        eta: d.f32()?,
+                        scale: d.f32()?,
+                        u: Arc::new(d.f32s()?),
+                        v: Arc::new(d.f32s()?),
+                    });
+                }
+                d.finish()?;
+                Ok(DistDown::ComputeFactored { k, m_share, entries })
             }
             t => Err(WireError::BadTag(t)),
         }
@@ -430,6 +476,46 @@ mod tests {
         assert!(down.wire_bytes() >= 4 * 30 * 40);
         assert!(up.wire_bytes() >= 4 * 30 * 40);
         assert_eq!(DistDown::Stop.wire_bytes(), FRAME_HEADER as u64);
+    }
+
+    #[test]
+    fn factored_dist_downlink_costs_d1_plus_d2() {
+        // One new atom per round: the factored broadcast is linear in
+        // D1 + D2 where the dense broadcast is D1 * D2 — the tentpole's
+        // whole point, on the wire.
+        let factored =
+            DistDown::ComputeFactored { k: 5, m_share: 16, entries: vec![entry(5, 30, 40)] };
+        let dense =
+            DistDown::Compute { k: 5, m_share: 16, x: Arc::new(Mat::zeros(30, 40)) };
+        assert!(factored.wire_bytes() < 8 * 4 * (30 + 40));
+        assert!(dense.wire_bytes() >= 4 * 30 * 40);
+        assert!(factored.wire_bytes() * 4 < dense.wire_bytes());
+        // an empty round ships a near-bare frame
+        let empty = DistDown::ComputeFactored { k: 6, m_share: 16, entries: Vec::new() };
+        assert_eq!(empty.wire_bytes(), (FRAME_HEADER + 8 + 4 + 4) as u64);
+    }
+
+    #[test]
+    fn factored_dist_downlink_round_trips() {
+        let msg = DistDown::ComputeFactored {
+            k: 9,
+            m_share: 8,
+            entries: vec![entry(9, 3, 2), entry(10, 3, 2)],
+        };
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        match DistDown::decode(msg.tag(), &buf).unwrap() {
+            DistDown::ComputeFactored { k, m_share, entries } => {
+                assert_eq!((k, m_share), (9, 8));
+                assert_eq!(entries.len(), 2);
+                assert_eq!(entries[1].k, 10);
+                assert_eq!(entries[0].u.len(), 3);
+                assert_eq!(entries[0].v.len(), 2);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // truncation errors, never panics
+        assert!(DistDown::decode(TAG_DIST_COMPUTE_FACTORED, &buf[..buf.len() - 2]).is_err());
     }
 
     #[test]

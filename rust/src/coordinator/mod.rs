@@ -35,7 +35,7 @@ pub use messages::{DistDown, DistUp, LogEntry, MasterMsg, UpdateMsg};
 pub use runner::{AsynOptions, RunResult};
 pub use svrf_asyn::SvrfAsynOptions;
 pub use sync::DistOptions;
-pub use update_log::{replay, replay_after, UpdateLog};
+pub use update_log::{replay, replay_after, ApplyEntry, UpdateLog};
 pub use worker::Straggler;
 
 /// Semantic sanity gate for a received rank-one update `{u, v}`: the

@@ -23,7 +23,7 @@ use std::sync::Arc;
 use crate::algo::schedule::BatchSchedule;
 use crate::chaos::ChaosCounters;
 use crate::coordinator::worker::Straggler;
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Repr};
 use crate::metrics::{Counters, LossTrace};
 
 pub struct AsynOptions {
@@ -33,6 +33,8 @@ pub struct AsynOptions {
     pub eval_every: u64,
     pub seed: u64,
     pub straggler: Option<Straggler>,
+    /// Iterate representation shared by master and workers.
+    pub repr: Repr,
 }
 
 impl Default for AsynOptions {
@@ -44,12 +46,18 @@ impl Default for AsynOptions {
             eval_every: 10,
             seed: 42,
             straggler: None,
+            repr: Repr::Dense,
         }
     }
 }
 
 pub struct RunResult {
     pub x: Mat,
+    /// Final-iterate rank (atom count in factored mode; numerical rank
+    /// or dimension bound in dense mode — see `Iterate::rank`).
+    pub rank: usize,
+    /// Peak atom count held by the master's iterate (0 in dense mode).
+    pub peak_atoms: usize,
     pub counters: Arc<Counters>,
     pub trace: Arc<LossTrace>,
     /// Injected-fault accounting (all zeros when no
@@ -83,6 +91,7 @@ mod tests {
             eval_every: 15,
             seed: 96,
             straggler: None,
+            repr: Repr::Dense,
         };
         let o2 = obj.clone();
         let r = harness::run_asyn(obj, &opts, TransportOpts::local(4), move |w| {
@@ -116,6 +125,7 @@ mod tests {
             eval_every: 30,
             seed: 99,
             straggler: None,
+            repr: Repr::Dense,
         };
         let o2 = obj.clone();
         let r = harness::run_asyn(obj, &opts, TransportOpts::local(4), move |w| {

@@ -15,10 +15,9 @@ use std::sync::Arc;
 
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::{eta, BatchSchedule};
-use crate::algo::sfw::init_rank_one;
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::runner::RunResult;
-use crate::linalg::{normalize, Mat};
+use crate::linalg::{normalize, Iterate, Mat, Repr};
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
 use crate::util::rng::Rng;
@@ -29,6 +28,9 @@ pub struct SvaOptions {
     pub batch: BatchSchedule,
     pub eval_every: u64,
     pub seed: u64,
+    /// Master-side iterate representation (workers receive the dense
+    /// broadcast either way — SVA is the dense-downlink baseline).
+    pub repr: Repr,
 }
 
 enum Req {
@@ -83,12 +85,12 @@ where
     }
     drop(up_tx);
 
-    let mut x = init_rank_one(d1, d2, theta, &mut Rng::new(opts.seed));
+    let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut Rng::new(opts.seed));
     evaluator.submit(trace.elapsed(), 0, x.clone());
     for k in 1..=opts.iterations {
         let m = opts.batch.m(k).max(opts.workers);
         let m_share = m / opts.workers;
-        let xa = Arc::new(x.clone());
+        let xa = Arc::new(x.to_dense());
         for tx in &down_txs {
             counters.add_down((d1 * d2 * 4) as u64); // still broadcasts X
             let _ = tx.send(Req::Compute { x: xa.clone(), m_share });
@@ -136,7 +138,8 @@ where
         let _ = h.join();
     }
     evaluator.finish();
-    RunResult { x, counters, trace, chaos: Default::default() }
+    let (rank, peak_atoms) = (x.rank(), x.peak_atoms());
+    RunResult { x: x.into_dense(), rank, peak_atoms, counters, trace, chaos: Default::default() }
 }
 
 #[cfg(test)]
@@ -158,6 +161,7 @@ mod tests {
             batch: BatchSchedule::Constant(96),
             eval_every: 10,
             seed: 121,
+            repr: Repr::Dense,
         };
         let o2 = obj.clone();
         let r = run_sva_impl(obj, &opts, move |w| {

@@ -20,12 +20,11 @@ use std::sync::Arc;
 
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::{eta, svrf_epoch_len, BatchSchedule};
-use crate::algo::sfw::init_rank_one;
 use crate::comms::{MasterLink, WorkerLink};
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::messages::{MasterMsg, UpdateMsg};
-use crate::coordinator::update_log::{replay_after, UpdateLog};
-use crate::linalg::Mat;
+use crate::coordinator::update_log::{replay_after, ApplyEntry, UpdateLog};
+use crate::linalg::{Iterate, Mat, Repr};
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
 use crate::util::rng::Rng;
@@ -36,6 +35,8 @@ pub struct SvrfAsynOptions {
     pub batch: BatchSchedule,
     pub eval_every: u64,
     pub seed: u64,
+    /// Iterate representation shared by master and workers.
+    pub repr: Repr,
 }
 
 impl Default for SvrfAsynOptions {
@@ -46,6 +47,7 @@ impl Default for SvrfAsynOptions {
             batch: BatchSchedule::svrf_asyn(8, 4_096),
             eval_every: 10,
             seed: 0,
+            repr: Repr::Dense,
         }
     }
 }
@@ -58,11 +60,11 @@ pub(crate) fn run_svrf_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
     counters: &Counters,
     trace: &LossTrace,
     evaluator: &Evaluator,
-) -> Mat {
+) -> Iterate {
     let (d1, d2) = obj.dims();
     let theta = obj.theta();
     let mut log = UpdateLog::new();
-    let mut x = init_rank_one(d1, d2, theta, &mut Rng::new(opts.seed));
+    let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut Rng::new(opts.seed));
     evaluator.submit(trace.elapsed(), 0, x.clone());
 
     let w_count = link.workers();
@@ -133,7 +135,7 @@ pub(crate) fn run_svrf_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
             let t_w = upd.t_w;
             let inner_k = (t_m - epoch_start) + 1;
             let e = log.append_custom(upd.u, upd.v, eta(inner_k), -theta);
-            x.fw_rank_one_update(e.eta, e.scale, &e.u, &e.v);
+            x.apply_entry(e);
             counters.add_iteration();
             let t_m = log.t_m();
             link.send_to(
@@ -164,12 +166,13 @@ pub(crate) fn run_svrf_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: S
     batch: &BatchSchedule,
     seed: u64,
     counters: &Counters,
+    repr: Repr,
 ) {
     let obj = engine.objective().clone();
     let (d1, d2) = obj.dims();
     let theta = obj.theta();
     let n = obj.n();
-    let mut x = init_rank_one(d1, d2, theta, &mut Rng::new(seed));
+    let mut x = Iterate::init_rank_one(repr, d1, d2, theta, &mut Rng::new(seed));
     let mut t_w = 0u64;
     #[allow(unused_assignments)]
     let mut epoch_start = 0u64;
@@ -190,18 +193,18 @@ pub(crate) fn run_svrf_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: S
         _ => return,
     }
     // ∇F(W_0)
-    let _ = engine.grad_sum(&x, &all, &mut full_g);
+    let _ = engine.grad_sum_it(&x, &all, &mut full_g);
     full_g.scale(1.0 / n as f32);
     counters.add_grad_evals(n as u64);
-    w_snap.data.copy_from_slice(&x.data);
+    w_snap.clone_from(&x);
 
     loop {
         let inner_k = (t_w - epoch_start).max(0) + 1;
         let m = batch.m(inner_k);
         rng.sample_indices(n, m, &mut idx);
         // VR gradient: (grad(X) - grad(W))/m + ∇F(W)
-        let loss_sum = engine.grad_sum(&x, &idx, &mut gx);
-        let _ = engine.grad_sum(&w_snap, &idx, &mut gw);
+        let loss_sum = engine.grad_sum_it(&x, &idx, &mut gx);
+        let _ = engine.grad_sum_it(&w_snap, &idx, &mut gw);
         counters.add_grad_evals(2 * m as u64);
         gx.axpy(-1.0, &gw);
         gx.scale(1.0 / m as f32);
@@ -226,8 +229,8 @@ pub(crate) fn run_svrf_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: S
             Some(MasterMsg::UpdateW { entries, .. }) => {
                 t_w = replay_after(&mut x, &entries, t_w);
                 epoch_start = t_w;
-                w_snap.data.copy_from_slice(&x.data);
-                let _ = engine.grad_sum(&w_snap, &all, &mut full_g);
+                w_snap.clone_from(&x);
+                let _ = engine.grad_sum_it(&w_snap, &all, &mut full_g);
                 full_g.scale(1.0 / n as f32);
                 counters.add_grad_evals(n as u64);
             }
@@ -257,6 +260,7 @@ mod tests {
             batch: BatchSchedule::svrf_asyn(4, 512),
             eval_every: 10,
             seed: 141,
+            repr: Repr::Dense,
         };
         let o2 = obj.clone();
         let r = harness::run_svrf_asyn(obj, &opts, harness::TransportOpts::local(3), move |w| {

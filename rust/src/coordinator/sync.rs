@@ -1,14 +1,29 @@
 //! SFW-dist (Algorithm 1): the synchronous distributed baseline, now a
 //! framed `(DistUp, DistDown)` protocol over the generic comms links.
 //!
-//! Per iteration the master broadcasts the dense iterate X — O(D1*D2)
-//! bytes to each of W workers — each worker returns its dense partial
-//! gradient — O(D1*D2) bytes again — and the master aggregates, solves
-//! the LMO itself, and updates.  The barrier makes every iteration as
-//! slow as the slowest worker; the links' byte accounting makes the
-//! O(D1*D2) vs O(D1+D2) contrast measurable (comm_cost bench), and the
-//! same master/worker loops run over in-process channels or real TCP
+//! Per iteration the master broadcasts the iterate — in **dense** mode
+//! the full X, O(D1*D2) bytes to each of W workers; in **factored**
+//! mode only the rank-one atoms appended since the previous round
+//! ([`DistDown::ComputeFactored`]), O(D1+D2) bytes per round, with
+//! every worker reconstructing X locally from the shared-seed X_0 —
+//! each worker returns its dense partial gradient, and the master
+//! aggregates, solves the LMO itself, and updates.  The barrier makes
+//! every iteration as slow as the slowest worker; the links' byte
+//! accounting makes the O(D1*D2) vs O(D1+D2) downlink contrast
+//! measurable (comm_cost bench, smoke-sweep artifact), and the same
+//! master/worker loops run over in-process channels or real TCP
 //! ([`crate::session::harness`] picks the transport).
+//!
+//! The factored downlink relies on the links' reliable in-order
+//! delivery (true for both transports; the chaos layer injects only
+//! delays on the master->worker direction) — a worker that misses a
+//! delta could not resynchronize, unlike the stateless dense broadcast.
+//! Replay is idempotent and gap-tolerant regardless (`replay_after`),
+//! and a worker that does detect a rejected or gapped slice marks
+//! itself desynced and thereafter answers with non-finite gradients, so
+//! the master's corrupt-gradient gate drops (and counts) its
+//! contributions instead of silently folding stale-X gradients into
+//! every remaining reduction.
 //!
 //! Replies are reduced in worker-rank order (not arrival order), so the
 //! float summation — and therefore the whole run — is bit-identical
@@ -18,12 +33,12 @@ use std::sync::Arc;
 
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::{eta, BatchSchedule};
-use crate::algo::sfw::init_rank_one;
 use crate::comms::{MasterLink, WorkerLink};
 use crate::coordinator::eval::Evaluator;
-use crate::coordinator::messages::{DistDown, DistUp};
+use crate::coordinator::messages::{DistDown, DistUp, LogEntry};
+use crate::coordinator::update_log::{replay_after, ApplyEntry};
 use crate::coordinator::worker::Straggler;
-use crate::linalg::Mat;
+use crate::linalg::{Iterate, Mat, Repr};
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
 use crate::util::rng::Rng;
@@ -34,6 +49,9 @@ pub struct DistOptions {
     pub eval_every: u64,
     pub seed: u64,
     pub straggler: Option<Straggler>,
+    /// Iterate representation — also selects the downlink wire variant
+    /// (dense X broadcast vs atoms-since-last-round).
+    pub repr: Repr,
 }
 
 /// Master side of Algorithm 1.  `master_engine` supplies the LMO (worker
@@ -53,21 +71,42 @@ pub(crate) fn run_dist_master<L: MasterLink<DistUp, DistDown> + ?Sized>(
     counters: &Counters,
     trace: &LossTrace,
     evaluator: &Evaluator,
-) -> Mat {
+) -> Iterate {
     let (d1, d2) = obj.dims();
     let theta = obj.theta();
     let workers = link.workers();
-    let mut x = init_rank_one(d1, d2, theta, &mut Rng::new(opts.seed));
+    let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut Rng::new(opts.seed));
     evaluator.submit(trace.elapsed(), 0, x.clone());
     let mut grad = Mat::zeros(d1, d2);
+    // Factored mode: atoms accepted since the last broadcast (0 or 1 in
+    // lockstep; more only after all-corrupt skipped rounds) and the
+    // entry counter workers replay against.
+    let mut pending: Vec<LogEntry> = Vec::new();
+    let mut t_log: u64 = 0;
     for k in 1..=opts.iterations {
         let m = opts.batch.m(k).max(workers);
         let m_share = (m / workers) as u32;
-        let xa = Arc::new(x.clone());
-        for w in 0..workers {
-            // dense parameter broadcast: O(D1 D2) down per worker (one
-            // snapshot per round; the local transport shares it by Arc)
-            link.send_to(w, DistDown::Compute { k, m_share, x: xa.clone() });
+        match opts.repr {
+            Repr::Dense => {
+                // dense parameter broadcast: O(D1 D2) down per worker
+                // (one snapshot per round; the local transport shares
+                // it by Arc)
+                let xa = Arc::new(x.to_dense());
+                for w in 0..workers {
+                    link.send_to(w, DistDown::Compute { k, m_share, x: xa.clone() });
+                }
+            }
+            Repr::Factored => {
+                // factored downlink: only the atoms the workers are
+                // missing — O(D1 + D2) per round instead of O(D1 D2)
+                let entries = std::mem::take(&mut pending);
+                for w in 0..workers {
+                    link.send_to(
+                        w,
+                        DistDown::ComputeFactored { k, m_share, entries: entries.clone() },
+                    );
+                }
+            }
         }
         // barrier: wait for ALL workers (the straggler pays here); slot
         // replies by rank so the reduction order is deterministic.  A
@@ -134,7 +173,18 @@ pub(crate) fn run_dist_master<L: MasterLink<DistUp, DistDown> + ?Sized>(
         let s = master_engine.lmo(&grad);
         counters.add_lmo();
         counters.add_iteration();
-        x.fw_rank_one_update(eta(k), -theta, &s.u, &s.v);
+        let e = LogEntry {
+            k: t_log + 1,
+            eta: eta(k),
+            scale: -theta,
+            u: Arc::new(s.u),
+            v: Arc::new(s.v),
+        };
+        x.apply_entry(&e);
+        if opts.repr == Repr::Factored {
+            t_log += 1;
+            pending.push(e);
+        }
         if k % opts.eval_every == 0 || k == opts.iterations {
             evaluator.submit(trace.elapsed(), k, x.clone());
         }
@@ -145,7 +195,10 @@ pub(crate) fn run_dist_master<L: MasterLink<DistUp, DistDown> + ?Sized>(
     x
 }
 
-/// Worker side of Algorithm 1: gradient rounds until Stop.
+/// Worker side of Algorithm 1: gradient rounds until Stop.  Handles both
+/// downlink variants; in factored rounds it advances a local iterate by
+/// replaying the broadcast atoms (idempotent, gap-tolerant) instead of
+/// receiving X.
 pub(crate) fn run_dist_worker<L: WorkerLink<DistUp, DistDown> + ?Sized, E: StepEngine + ?Sized>(
     link: &mut L,
     engine: &mut E,
@@ -153,13 +206,24 @@ pub(crate) fn run_dist_worker<L: WorkerLink<DistUp, DistDown> + ?Sized, E: StepE
     seed: u64,
     straggler: Option<Straggler>,
     counters: &Counters,
+    repr: Repr,
 ) {
     let obj = engine.objective().clone();
     let (d1, d2) = obj.dims();
+    let theta = obj.theta();
     let n = obj.n();
     let mut rng = Rng::new(seed ^ 0x5BC ^ (worker_id as u64) << 8);
     let mut idx: Vec<usize> = Vec::new();
     let mut g = Mat::zeros(d1, d2);
+    // Local iterate from the shared-seed X_0 (same recipe as the
+    // master's), advanced only by broadcast atoms.  Built lazily: a
+    // dense-mode worker receives X itself and never needs one.
+    let mut x_loc: Option<Iterate> = None;
+    let mut t_w = 0u64;
+    // Set once a slice is rejected: the delta protocol cannot resync a
+    // worker that missed atoms (unlike the async catch-up protocol), so
+    // a desynced worker must not keep shipping gradients of a stale X.
+    let mut desynced = false;
     loop {
         match link.recv() {
             Some(DistDown::Compute { k, m_share, x }) => {
@@ -170,6 +234,55 @@ pub(crate) fn run_dist_worker<L: WorkerLink<DistUp, DistDown> + ?Sized, E: StepE
                     s.sleep(&mut rng, idx.len() as u64);
                 }
                 // echo k so the barrier can match replies to rounds
+                link.send(DistUp { worker_id, k, loss_sum, grad: g.clone() });
+            }
+            Some(DistDown::ComputeFactored { k, m_share, entries }) => {
+                let x_loc = x_loc.get_or_insert_with(|| {
+                    Iterate::init_rank_one(repr, d1, d2, theta, &mut Rng::new(seed))
+                });
+                // a corrupted entry must not poison the persistent local
+                // iterate: apply only slices that look like Eqn-6 steps
+                let sane = entries.iter().all(|e| {
+                    e.eta.is_finite()
+                        && e.scale.is_finite()
+                        && crate::coordinator::sane_rank_one(&e.u, &e.v, d1, d2)
+                });
+                if sane && !desynced {
+                    t_w = replay_after(x_loc, &entries, t_w);
+                    // replay must land exactly on the slice's last entry;
+                    // falling short (a gap anywhere in the slice — e.g. a
+                    // corrupted entry index, which the value gate above
+                    // cannot see) means atoms were lost for good — same
+                    // desync as a rejected slice
+                    if entries.last().is_some_and(|e| t_w < e.k) {
+                        desynced = true;
+                    }
+                } else if !desynced {
+                    eprintln!(
+                        "sfw-dist: worker {worker_id} rejecting corrupt atom slice in round {k}"
+                    );
+                    desynced = true;
+                }
+                if desynced {
+                    // A stale-X gradient folded silently into the
+                    // reduction would skew every remaining round; a
+                    // non-finite one is dropped (and counted) by the
+                    // master's corrupt-gradient gate while keeping the
+                    // barrier live.
+                    eprintln!(
+                        "sfw-dist: worker {worker_id} desynced; sending poisoned reply \
+                         for round {k} so the master drops this contribution"
+                    );
+                    g.fill(f32::NAN);
+                    link.send(DistUp { worker_id, k, loss_sum: 0.0, grad: g.clone() });
+                    continue;
+                }
+                rng.sample_indices(n, m_share as usize, &mut idx);
+                let loss_sum = engine.grad_sum_it(x_loc, &idx, &mut g);
+                counters.add_grad_evals(idx.len() as u64);
+                if let Some(s) = &straggler {
+                    s.sleep(&mut rng, idx.len() as u64);
+                }
                 link.send(DistUp { worker_id, k, loss_sum, grad: g.clone() });
             }
             Some(DistDown::Stop) | None => return,
@@ -187,18 +300,22 @@ mod tests {
     use crate::objective::MatrixSensing;
     use crate::session::harness;
 
+    fn dist_obj(seed: u64) -> Arc<dyn Objective> {
+        let mut rng = Rng::new(seed);
+        let p = MsParams { d1: 10, d2: 10, rank: 2, n: 3_000, noise_std: 0.05 };
+        Arc::new(MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0))
+    }
+
     #[test]
     fn dist_converges_and_counts_dense_traffic() {
-        let mut rng = Rng::new(110);
-        let p = MsParams { d1: 10, d2: 10, rank: 2, n: 3_000, noise_std: 0.05 };
-        let obj: Arc<dyn Objective> =
-            Arc::new(MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0));
+        let obj = dist_obj(110);
         let opts = DistOptions {
             iterations: 100,
             batch: BatchSchedule::sfw(2.0, 1_024),
             eval_every: 20,
             seed: 111,
             straggler: None,
+            repr: Repr::Dense,
         };
         let o2 = obj.clone();
         let r = harness::run_dist(obj, &opts, harness::TransportOpts::local(4), move |w| {
@@ -221,5 +338,45 @@ mod tests {
         assert_eq!(s.msgs_up, 100 * 4);
         assert_eq!(s.msgs_down, 100 * 4 + 4);
         assert!(per_down >= 4 * 10 * 10 && per_up >= 4 * 10 * 10);
+    }
+
+    #[test]
+    fn factored_dist_matches_dense_and_shrinks_downlink() {
+        let obj = dist_obj(115);
+        let run = |repr: Repr| {
+            let opts = DistOptions {
+                iterations: 40,
+                batch: BatchSchedule::Constant(256),
+                eval_every: 10,
+                seed: 116,
+                straggler: None,
+                repr,
+            };
+            let o2 = obj.clone();
+            harness::run_dist(obj.clone(), &opts, harness::TransportOpts::local(2), move |w| {
+                Box::new(NativeEngine::new(o2.clone(), 60, 117u64.wrapping_add(w as u64)))
+            })
+        };
+        let dense = run(Repr::Dense);
+        let fact = run(Repr::Factored);
+        // same-seed agreement to f32 tolerance on the final iterate
+        let mut diff = dense.x.clone();
+        diff.axpy(-1.0, &fact.x);
+        let rel = diff.frob_norm() / (1.0 + dense.x.frob_norm());
+        assert!(rel < 1e-2, "dense vs factored diverged: rel {rel}");
+        // the factored downlink is the paper-relevant win: measurably
+        // below the dense broadcast (uplink unchanged: dense gradients)
+        let (sd, sf) = (dense.counters.snapshot(), fact.counters.snapshot());
+        assert!(
+            sf.bytes_down * 2 < sd.bytes_down,
+            "factored downlink {} not clearly below dense {}",
+            sf.bytes_down,
+            sd.bytes_down
+        );
+        assert_eq!(sf.msgs_down, sd.msgs_down);
+        assert_eq!(sf.bytes_up, sd.bytes_up);
+        // factored run reports its atom budget
+        assert!(fact.peak_atoms > 0 && fact.rank > 0);
+        assert_eq!(dense.peak_atoms, 0);
     }
 }

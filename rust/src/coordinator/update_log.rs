@@ -6,11 +6,34 @@
 //! t+1 ..= t', each a rank-one GER — O((t'-t)(D1+D2) * min(D1,D2))...
 //! actually O((t'-t) * D1 * D2) compute but only O((t'-t)(D1+D2)) bytes,
 //! which is the paper's entire communication saving.
+//!
+//! Replay is generic over [`ApplyEntry`], so it drives a dense [`Mat`]
+//! (O(D1*D2) GER per entry) or an [`Iterate`] in factored form — where a
+//! log entry is adopted as an atom outright (`Arc` clone, O(1)): the
+//! catch-up replay and the factored iterate are literally one
+//! representation.
 
 use crate::algo::schedule::eta;
 use crate::coordinator::messages::LogEntry;
-use crate::linalg::Mat;
+use crate::linalg::{Iterate, Mat};
 use std::sync::Arc;
+
+/// Anything that can absorb one Eqn-6 log entry.
+pub trait ApplyEntry {
+    fn apply_entry(&mut self, e: &LogEntry);
+}
+
+impl ApplyEntry for Mat {
+    fn apply_entry(&mut self, e: &LogEntry) {
+        self.fw_rank_one_update(e.eta, e.scale, &e.u, &e.v);
+    }
+}
+
+impl ApplyEntry for Iterate {
+    fn apply_entry(&mut self, e: &LogEntry) {
+        self.fw_update_arc(e.eta, e.scale, &e.u, &e.v);
+    }
+}
 
 /// Append-only rank-one update log (entry k at index k-1).
 #[derive(Default)]
@@ -66,13 +89,13 @@ impl UpdateLog {
 /// Replay Eqn (6) over `x` (which must be at iteration entries[0].k - 1):
 /// X_k = (1 - eta_k) X_{k-1} + eta_k * scale_k * u_k v_k^T.
 /// Returns the new iteration count.
-pub fn replay(x: &mut Mat, entries: &[LogEntry]) -> Option<u64> {
+pub fn replay<X: ApplyEntry + ?Sized>(x: &mut X, entries: &[LogEntry]) -> Option<u64> {
     let mut last = None;
     for e in entries {
         if let Some(prev) = last {
             debug_assert_eq!(e.k, prev + 1, "non-contiguous log slice");
         }
-        x.fw_rank_one_update(e.eta, e.scale, &e.u, &e.v);
+        x.apply_entry(e);
         last = Some(e.k);
     }
     last
@@ -86,7 +109,7 @@ pub fn replay(x: &mut Mat, entries: &[LogEntry]) -> Option<u64> {
 /// silently skip updates).  Returns the new iteration: unchanged when
 /// the whole slice gapped, so the next exchange re-slices from the true
 /// sync point and self-heals.
-pub fn replay_after(x: &mut Mat, entries: &[LogEntry], t_cur: u64) -> u64 {
+pub fn replay_after<X: ApplyEntry + ?Sized>(x: &mut X, entries: &[LogEntry], t_cur: u64) -> u64 {
     let mut t = t_cur;
     for e in entries {
         if e.k <= t {
@@ -95,7 +118,7 @@ pub fn replay_after(x: &mut Mat, entries: &[LogEntry], t_cur: u64) -> u64 {
         if e.k > t + 1 {
             break;
         }
-        x.fw_rank_one_update(e.eta, e.scale, &e.u, &e.v);
+        x.apply_entry(e);
         t = e.k;
     }
     t
@@ -200,6 +223,27 @@ mod tests {
         let mut y = before.clone();
         let t = replay_after(&mut y, &log.slice_from(2), 2);
         assert_eq!(t, 8);
+    }
+
+    #[test]
+    fn factored_replay_matches_dense_replay() {
+        // The factored iterate absorbs log entries as atoms; replaying
+        // the same slice into a dense Mat and a factored Iterate must
+        // land on the same matrix (to f32 round-off) — the "entries ARE
+        // the atoms" unification.
+        use crate::linalg::{Iterate, Repr};
+        let mut rng = Rng::new(85);
+        let log = random_log(&mut rng, 12, 5, 4, 1.0);
+        let mut dense = crate::algo::init_rank_one(5, 4, 1.0, &mut Rng::new(86));
+        let mut fact = Iterate::init_rank_one(Repr::Factored, 5, 4, 1.0, &mut Rng::new(86));
+        replay(&mut dense, &log.slice_from(0));
+        let t = replay_after(&mut fact, &log.slice_from(0), 0);
+        assert_eq!(t, 12);
+        let mut diff = fact.to_dense();
+        diff.axpy(-1.0, &dense);
+        assert!(diff.frob_norm() < 1e-5, "representations diverged: {}", diff.frob_norm());
+        // atoms = init atom + 12 replayed entries, shared via Arc
+        assert_eq!(fact.peak_atoms(), 13);
     }
 
     #[test]

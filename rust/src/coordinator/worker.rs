@@ -1,20 +1,22 @@
 //! The SFW-asyn worker loop (Algorithm 3, lines 14–23).
 //!
-//! Each worker keeps a local dense X it advances ONLY by replaying the
-//! master's rank-one log slices (Eqn 6) — it never receives a parameter
-//! matrix.  Per cycle it samples a minibatch of the schedule size for its
-//! current sync point, runs the fused gradient->LMO step (native math or
-//! the AOT JAX/Pallas artifact via PJRT), ships `{u, v, t_w}`, and blocks
-//! on the master's catch-up reply.
+//! Each worker keeps a local X (dense or factored, matching the run's
+//! representation) it advances ONLY by replaying the master's rank-one
+//! log slices (Eqn 6) — it never receives a parameter matrix.  In
+//! factored mode a replayed entry becomes an atom of the local iterate
+//! outright.  Per cycle it samples a minibatch of the schedule size for
+//! its current sync point, runs the fused gradient->LMO step (native
+//! math or the AOT JAX/Pallas artifact via PJRT), ships `{u, v, t_w}`,
+//! and blocks on the master's catch-up reply.
 
 use std::time::Duration;
 
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::BatchSchedule;
-use crate::algo::sfw::init_rank_one;
 use crate::comms::WorkerLink;
 use crate::coordinator::messages::{MasterMsg, UpdateMsg};
 use crate::coordinator::update_log::replay_after;
+use crate::linalg::{Iterate, Repr};
 use crate::metrics::Counters;
 use crate::util::rng::Rng;
 
@@ -48,6 +50,9 @@ pub struct WorkerOptions {
     pub batch: BatchSchedule,
     pub seed: u64,
     pub straggler: Option<Straggler>,
+    /// Local iterate representation (must match the master's so the
+    /// shared-seed X_0 and every replayed slice land on the same model).
+    pub repr: Repr,
 }
 
 /// Run the worker loop until the master says Stop (or disconnects).
@@ -62,7 +67,7 @@ pub fn run_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: StepEngine + 
     let theta = obj.theta();
     let n = obj.n();
     // X_0 from the shared seed (stands in for the {u_0, v_0} broadcast).
-    let mut x = init_rank_one(d1, d2, theta, &mut Rng::new(opts.seed));
+    let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut Rng::new(opts.seed));
     let mut t_w = 0u64;
     let mut rng = Rng::new(opts.seed ^ 0xD1F7).fork(opts.worker_id as u64 + 1);
     let mut idx: Vec<usize> = Vec::new();
@@ -71,7 +76,7 @@ pub fn run_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: StepEngine + 
         // Alg 3 line 20: |S| = m_{t_w} (schedule indexed by the sync point).
         let m = opts.batch.m(t_w.max(1));
         rng.sample_indices(n, m, &mut idx);
-        let out = engine.step(&x, &idx);
+        let out = engine.step_it(&x, &idx);
         counters.add_grad_evals(m as u64);
         counters.add_lmo();
         if let Some(s) = &opts.straggler {

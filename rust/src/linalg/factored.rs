@@ -1,0 +1,393 @@
+//! [`FactoredMat`]: the Frank-Wolfe iterate in factored (atom-list) form.
+//!
+//! FW over the nuclear ball only ever moves along rank-one atoms:
+//! `X_k = (1 - eta_k) X_{k-1} + eta_k * scale_k * u_k v_k^T` (Eqn 6).
+//! Instead of a dense `d1 x d2` array, this type stores the atoms
+//! themselves — `X = sum_i w_i * u_i v_i^T` — which cuts iterate memory,
+//! snapshot cost and broadcast bytes from `O(d1*d2)` to `O((d1+d2)*k)`,
+//! where `k` is the atom count.  The factors are `Arc`'d so a worker
+//! replaying the master's update-log slice shares the log entries'
+//! vectors outright: the log entries ARE the atoms (see
+//! [`crate::coordinator::update_log`]).
+//!
+//! A re-compression pass keeps `k` bounded: negligible-weight atoms are
+//! dropped eagerly, and when the list exceeds its cap the iterate is
+//! re-factorized through an exact SVD (rank <= min(d1, d2) always, so
+//! this merges redundant directions without losing the iterate beyond
+//! f32 round-off — pinned by a property test).
+
+use std::sync::Arc;
+
+use super::mat::{dot, norm2, Mat};
+use super::op::LinOp;
+use super::svd::jacobi_svd;
+
+/// Relative weight threshold below which an atom is dropped eagerly.
+const DROP_REL: f32 = 1e-9;
+/// Relative singular-value threshold of the SVD re-factorization.
+const SVD_REL: f32 = 1e-7;
+
+/// A matrix held as a weighted sum of rank-one atoms
+/// `X = sum_i w_i u_i v_i^T`.
+#[derive(Clone, Debug)]
+pub struct FactoredMat {
+    pub rows: usize,
+    pub cols: usize,
+    w: Vec<f32>,
+    us: Vec<Arc<Vec<f32>>>,
+    vs: Vec<Arc<Vec<f32>>>,
+    cap: usize,
+    peak: usize,
+}
+
+impl FactoredMat {
+    /// Empty (zero) matrix with the default atom cap
+    /// `2 * min(rows, cols) + 16` — large enough that the SVD
+    /// re-factorization (which can return up to `min(rows, cols)` atoms)
+    /// always relieves the pressure.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self::with_cap(rows, cols, 2 * rows.min(cols) + 16)
+    }
+
+    /// Empty matrix with an explicit atom cap.  Caps below
+    /// `min(rows, cols) + 8` are raised to it: re-compression is exact
+    /// (SVD), so a cap under the true max rank could thrash.
+    pub fn with_cap(rows: usize, cols: usize, cap: usize) -> Self {
+        FactoredMat {
+            rows,
+            cols,
+            w: Vec::new(),
+            us: Vec::new(),
+            vs: Vec::new(),
+            cap: cap.max(rows.min(cols) + 8),
+            peak: 0,
+        }
+    }
+
+    /// Build `U diag(s) V^T` as an atom list from an SVD triple
+    /// (columns of `u`/`v`; `s` sorted descending, `jacobi_svd`'s
+    /// contract), skipping singular values `<= cutoff`.  The ONE
+    /// SVD-to-atoms conversion — used by both the re-compression pass
+    /// and the factored nuclear projection.
+    pub fn from_svd(u: &Mat, s: &[f32], v: &Mat, cutoff: f32) -> FactoredMat {
+        let mut f = FactoredMat::zeros(u.rows, v.rows);
+        for (k, &sk) in s.iter().enumerate() {
+            if sk <= cutoff {
+                break; // descending order: nothing larger follows
+            }
+            let uk: Vec<f32> = (0..u.rows).map(|i| u.at(i, k)).collect();
+            let vk: Vec<f32> = (0..v.rows).map(|i| v.at(i, k)).collect();
+            f.push_atom(sk, Arc::new(uk), Arc::new(vk));
+        }
+        f
+    }
+
+    /// Current atom count (an upper bound on the rank).
+    pub fn atoms(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Largest atom count ever held (before re-compression ran).
+    pub fn peak_atoms(&self) -> usize {
+        self.peak
+    }
+
+    /// Raise the recorded peak (callers that rebuild the factored form
+    /// from scratch each step carry the run-wide peak through this).
+    pub fn note_peak(&mut self, peak: usize) {
+        self.peak = self.peak.max(peak);
+    }
+
+    /// Atom cap the re-compression pass maintains.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Append one atom `w * u v^T` (shared factors), re-compressing when
+    /// the cap is exceeded.
+    pub fn push_atom(&mut self, w: f32, u: Arc<Vec<f32>>, v: Arc<Vec<f32>>) {
+        debug_assert_eq!(u.len(), self.rows);
+        debug_assert_eq!(v.len(), self.cols);
+        self.w.push(w);
+        self.us.push(u);
+        self.vs.push(v);
+        self.peak = self.peak.max(self.w.len());
+        if self.w.len() > self.cap {
+            self.recompress();
+        }
+    }
+
+    /// Scale every atom weight (the `(1 - eta)` shrink of Eqn 6 is O(k)
+    /// here instead of O(d1*d2)).
+    pub fn scale_weights(&mut self, s: f32) {
+        self.w.iter_mut().for_each(|w| *w *= s);
+    }
+
+    /// The FW iterate recursion
+    /// `X <- (1 - eta) X + eta * scale * u v^T` on the factored form.
+    pub fn fw_rank_one_update(&mut self, eta: f32, scale: f32, u: &[f32], v: &[f32]) {
+        self.fw_update_arc(eta, scale, Arc::new(u.to_vec()), Arc::new(v.to_vec()));
+    }
+
+    /// [`FactoredMat::fw_rank_one_update`] with shared factors (no copy —
+    /// the path update-log replay takes).
+    pub fn fw_update_arc(&mut self, eta: f32, scale: f32, u: Arc<Vec<f32>>, v: Arc<Vec<f32>>) {
+        self.scale_weights(1.0 - eta);
+        self.push_atom(eta * scale, u, v);
+    }
+
+    /// Materialize the dense matrix (evaluation / reporting only; the
+    /// hot paths stay on the factored form).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for ((&w, u), v) in self.w.iter().zip(&self.us).zip(&self.vs) {
+            if w == 0.0 {
+                continue;
+            }
+            for (r, &ur) in u.iter().enumerate() {
+                let c = w * ur;
+                if c == 0.0 {
+                    continue;
+                }
+                let row = m.row_mut(r);
+                for (x, &vc) in row.iter_mut().zip(v.iter()) {
+                    *x += c * vc;
+                }
+            }
+        }
+        m
+    }
+
+    /// `<mat(a), X>` for a row-major flattened `a` of length
+    /// `rows * cols`: `sum_i w_i * u_i^T mat(a) v_i`, computed atom by
+    /// atom without materializing X (the matrix-sensing residual).
+    pub fn inner_flat(&self, a: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), self.rows * self.cols);
+        let mut acc = 0.0f64;
+        for ((&w, u), v) in self.w.iter().zip(&self.us).zip(&self.vs) {
+            if w == 0.0 {
+                continue;
+            }
+            let mut s = 0.0f64;
+            for (r, &ur) in u.iter().enumerate() {
+                if ur != 0.0 {
+                    s += ur as f64 * dot(&a[r * self.cols..(r + 1) * self.cols], v) as f64;
+                }
+            }
+            acc += w as f64 * s;
+        }
+        acc as f32
+    }
+
+    /// Upper bound on the nuclear norm: `sum_i |w_i| ||u_i|| ||v_i||`
+    /// (exact when the atoms are orthogonal; always >= `||X||_*` by the
+    /// triangle inequality).  O(k (d1 + d2)) — no SVD.
+    pub fn nuclear_norm_bound(&self) -> f64 {
+        self.w
+            .iter()
+            .zip(&self.us)
+            .zip(&self.vs)
+            .map(|((&w, u), v)| (w.abs() as f64) * norm2(u) * norm2(v))
+            .sum()
+    }
+
+    /// Re-compression: drop negligible-weight atoms, then (if still over
+    /// the cap) re-factorize exactly through an SVD of the materialized
+    /// matrix — the rank is at most `min(rows, cols)`, so this merges
+    /// redundant directions losslessly up to f32 round-off.
+    pub fn recompress(&mut self) {
+        let wmax = self.w.iter().fold(0.0f32, |m, w| m.max(w.abs()));
+        let thresh = DROP_REL * wmax;
+        if wmax > 0.0 && self.w.iter().any(|w| w.abs() <= thresh) {
+            let ws = std::mem::take(&mut self.w);
+            let us = std::mem::take(&mut self.us);
+            let vs = std::mem::take(&mut self.vs);
+            for ((w, u), v) in ws.into_iter().zip(us).zip(vs) {
+                if w.abs() > thresh {
+                    self.w.push(w);
+                    self.us.push(u);
+                    self.vs.push(v);
+                }
+            }
+        }
+        if self.w.len() <= self.cap {
+            return;
+        }
+        let (u, s, v) = jacobi_svd(&self.to_dense());
+        let s0 = s.first().copied().unwrap_or(0.0);
+        let rebuilt = FactoredMat::from_svd(&u, &s, &v, SVD_REL * s0);
+        self.w = rebuilt.w;
+        self.us = rebuilt.us;
+        self.vs = rebuilt.vs;
+    }
+}
+
+impl LinOp for FactoredMat {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `y = X x = sum_i w_i u_i (v_i . x)` — O(k (d1 + d2)), no dense
+    /// materialization, no allocation.
+    fn apply(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        y.iter_mut().for_each(|z| *z = 0.0);
+        for ((&w, u), v) in self.w.iter().zip(&self.us).zip(&self.vs) {
+            let c = w * dot(v, x);
+            if c == 0.0 {
+                continue;
+            }
+            for (yr, &ur) in y.iter_mut().zip(u.iter()) {
+                *yr += c * ur;
+            }
+        }
+    }
+
+    /// `y = X^T x = sum_i w_i v_i (u_i . x)`.
+    fn tapply(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.rows);
+        debug_assert_eq!(y.len(), self.cols);
+        y.iter_mut().for_each(|z| *z = 0.0);
+        for ((&w, u), v) in self.w.iter().zip(&self.us).zip(&self.vs) {
+            let c = w * dot(u, x);
+            if c == 0.0 {
+                continue;
+            }
+            for (yc, &vc) in y.iter_mut().zip(v.iter()) {
+                *yc += c * vc;
+            }
+        }
+    }
+
+    /// `y^T X x = sum_i w_i (y . u_i)(v_i . x)` — allocation-free.
+    fn apply_dot(&self, y: &[f32], x: &[f32]) -> f32 {
+        debug_assert_eq!(y.len(), self.rows);
+        debug_assert_eq!(x.len(), self.cols);
+        let mut acc = 0.0f64;
+        for ((&w, u), v) in self.w.iter().zip(&self.us).zip(&self.vs) {
+            if w != 0.0 {
+                acc += w as f64 * dot(y, u) as f64 * dot(v, x) as f64;
+            }
+        }
+        acc as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_factored(rng: &mut Rng, d1: usize, d2: usize, k: usize) -> FactoredMat {
+        let mut f = FactoredMat::zeros(d1, d2);
+        for _ in 0..k {
+            f.push_atom(
+                rng.normal_f32(),
+                Arc::new(rng.unit_vector(d1)),
+                Arc::new(rng.unit_vector(d2)),
+            );
+        }
+        f
+    }
+
+    fn frob_diff(a: &Mat, b: &Mat) -> f64 {
+        let mut d = a.clone();
+        d.axpy(-1.0, b);
+        d.frob_norm()
+    }
+
+    #[test]
+    fn apply_and_tapply_match_dense() {
+        let mut rng = Rng::new(310);
+        let f = random_factored(&mut rng, 7, 5, 6);
+        let d = f.to_dense();
+        let x: Vec<f32> = (0..5).map(|_| rng.normal_f32()).collect();
+        let y: Vec<f32> = (0..7).map(|_| rng.normal_f32()).collect();
+        let (mut fa, mut da) = (vec![0.0f32; 7], vec![0.0f32; 7]);
+        f.apply(&x, &mut fa);
+        d.matvec(&x, &mut da);
+        for (a, b) in fa.iter().zip(&da) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        let (mut ft, mut dt) = (vec![0.0f32; 5], vec![0.0f32; 5]);
+        f.tapply(&y, &mut ft);
+        d.tmatvec(&y, &mut dt);
+        for (a, b) in ft.iter().zip(&dt) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        let want = {
+            let mut ax = vec![0.0f32; 7];
+            d.matvec(&x, &mut ax);
+            dot(&y, &ax)
+        };
+        assert!((f.apply_dot(&y, &x) - want).abs() < 1e-4 * (1.0 + want.abs()));
+    }
+
+    #[test]
+    fn inner_flat_matches_dense_inner_product() {
+        let mut rng = Rng::new(311);
+        let f = random_factored(&mut rng, 6, 4, 5);
+        let d = f.to_dense();
+        let a: Vec<f32> = (0..24).map(|_| rng.normal_f32()).collect();
+        let want = dot(&a, &d.data);
+        assert!((f.inner_flat(&a) - want).abs() < 1e-5 * (1.0 + want.abs()));
+    }
+
+    #[test]
+    fn fw_update_matches_dense_recursion() {
+        let mut rng = Rng::new(312);
+        let mut f = FactoredMat::zeros(6, 5);
+        let mut d = Mat::zeros(6, 5);
+        for k in 1..=20u64 {
+            let u = rng.unit_vector(6);
+            let v = rng.unit_vector(5);
+            let eta = 2.0 / (k as f32 + 1.0);
+            f.fw_rank_one_update(eta, -1.0, &u, &v);
+            d.fw_rank_one_update(eta, -1.0, &u, &v);
+        }
+        assert!(frob_diff(&f.to_dense(), &d) < 1e-5 * (1.0 + d.frob_norm()));
+        assert_eq!(f.peak_atoms(), 20);
+    }
+
+    #[test]
+    fn recompression_caps_atoms_and_preserves_iterate() {
+        let mut rng = Rng::new(313);
+        let mut f = FactoredMat::with_cap(6, 5, 0); // floored to min+8 = 13
+        assert_eq!(f.cap(), 13);
+        let mut d = Mat::zeros(6, 5);
+        for k in 1..=60u64 {
+            let u = rng.unit_vector(6);
+            let v = rng.unit_vector(5);
+            let eta = 2.0 / (k as f32 + 1.0);
+            f.fw_rank_one_update(eta, -1.0, &u, &v);
+            d.fw_rank_one_update(eta, -1.0, &u, &v);
+        }
+        assert!(f.atoms() <= f.cap(), "{} atoms over cap {}", f.atoms(), f.cap());
+        assert!(f.peak_atoms() > f.cap());
+        let err = frob_diff(&f.to_dense(), &d) / (1.0 + d.frob_norm());
+        assert!(err < 1e-4, "recompression moved the iterate: {err}");
+    }
+
+    #[test]
+    fn nuclear_bound_dominates_true_norm() {
+        let mut rng = Rng::new(314);
+        let f = random_factored(&mut rng, 6, 6, 8);
+        let exact = crate::linalg::nuclear_norm(&f.to_dense());
+        let bound = f.nuclear_norm_bound();
+        assert!(bound + 1e-6 >= exact, "bound {bound} < exact {exact}");
+    }
+
+    #[test]
+    fn zero_weight_atoms_are_dropped() {
+        let mut rng = Rng::new(315);
+        let mut f = FactoredMat::zeros(4, 4);
+        f.push_atom(1.0, Arc::new(rng.unit_vector(4)), Arc::new(rng.unit_vector(4)));
+        f.push_atom(0.0, Arc::new(rng.unit_vector(4)), Arc::new(rng.unit_vector(4)));
+        f.recompress();
+        assert_eq!(f.atoms(), 1);
+    }
+}

@@ -1,0 +1,256 @@
+//! [`Iterate`]: the FW iterate, in dense or factored representation.
+//!
+//! Every solver in the repo advances its model only through the Eqn-6
+//! rank-one recursion, so the iterate can be held either as a dense
+//! [`Mat`] (the reference path) or as a [`FactoredMat`] atom list (the
+//! scale path: O((d1+d2)*k) memory, O(k) weight-shrink per update,
+//! cheap clones for evaluator snapshots).  Which one a run uses is a
+//! [`TrainSpec`](crate::session::TrainSpec) knob with per-objective
+//! defaults; same-seed dense-vs-factored runs agree to f32 tolerance
+//! (pinned by `rust/tests/factored.rs`).
+
+use std::sync::Arc;
+
+use super::factored::FactoredMat;
+use super::mat::Mat;
+use super::op::LinOp;
+use super::svd::numerical_rank;
+use crate::util::rng::Rng;
+
+/// Iterate representation of one run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Repr {
+    /// Dense `d1 x d2` array; every update is an O(d1*d2) GER.
+    Dense,
+    /// Rank-one atom list; see [`FactoredMat`].
+    Factored,
+}
+
+impl Repr {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Repr::Dense => "dense",
+            Repr::Factored => "factored",
+        }
+    }
+}
+
+/// The FW iterate in its chosen representation.
+#[derive(Debug)]
+pub enum Iterate {
+    Dense(Mat),
+    Factored(FactoredMat),
+}
+
+impl Clone for Iterate {
+    fn clone(&self) -> Self {
+        match self {
+            Iterate::Dense(m) => Iterate::Dense(m.clone()),
+            Iterate::Factored(f) => Iterate::Factored(f.clone()),
+        }
+    }
+
+    /// Allocation-free when both sides are dense with matching dims (the
+    /// SVRF snapshot path).
+    fn clone_from(&mut self, src: &Self) {
+        match (self, src) {
+            (Iterate::Dense(a), Iterate::Dense(b))
+                if a.rows == b.rows && a.cols == b.cols =>
+            {
+                a.data.copy_from_slice(&b.data)
+            }
+            (me, other) => *me = other.clone(),
+        }
+    }
+}
+
+impl Iterate {
+    /// Zero iterate in the requested representation.
+    pub fn zeros(repr: Repr, d1: usize, d2: usize) -> Iterate {
+        match repr {
+            Repr::Dense => Iterate::Dense(Mat::zeros(d1, d2)),
+            Repr::Factored => Iterate::Factored(FactoredMat::zeros(d1, d2)),
+        }
+    }
+
+    /// Random rank-one start on the nuclear sphere of radius `theta` —
+    /// draws `u` then `v` from `rng` exactly like
+    /// [`crate::algo::sfw::init_rank_one`], so dense and factored runs
+    /// share one random stream for a fixed seed.
+    pub fn init_rank_one(repr: Repr, d1: usize, d2: usize, theta: f32, rng: &mut Rng) -> Iterate {
+        let u = rng.unit_vector(d1);
+        let v = rng.unit_vector(d2);
+        match repr {
+            Repr::Dense => {
+                let mut x = Mat::zeros(d1, d2);
+                for i in 0..d1 {
+                    for j in 0..d2 {
+                        *x.at_mut(i, j) = theta * u[i] * v[j];
+                    }
+                }
+                Iterate::Dense(x)
+            }
+            Repr::Factored => {
+                let mut f = FactoredMat::zeros(d1, d2);
+                f.push_atom(theta, Arc::new(u), Arc::new(v));
+                Iterate::Factored(f)
+            }
+        }
+    }
+
+    pub fn repr(&self) -> Repr {
+        match self {
+            Iterate::Dense(_) => Repr::Dense,
+            Iterate::Factored(_) => Repr::Factored,
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            Iterate::Dense(m) => (m.rows, m.cols),
+            Iterate::Factored(f) => (f.rows, f.cols),
+        }
+    }
+
+    /// Eqn-6 update `X <- (1 - eta) X + eta * scale * u v^T` on either
+    /// representation.
+    pub fn fw_rank_one_update(&mut self, eta: f32, scale: f32, u: &[f32], v: &[f32]) {
+        match self {
+            Iterate::Dense(m) => m.fw_rank_one_update(eta, scale, u, v),
+            Iterate::Factored(f) => f.fw_rank_one_update(eta, scale, u, v),
+        }
+    }
+
+    /// Eqn-6 update with shared factors (log-entry replay: the factored
+    /// iterate adopts the entry's `Arc`s outright).
+    pub fn fw_update_arc(&mut self, eta: f32, scale: f32, u: &Arc<Vec<f32>>, v: &Arc<Vec<f32>>) {
+        match self {
+            Iterate::Dense(m) => m.fw_rank_one_update(eta, scale, u, v),
+            Iterate::Factored(f) => f.fw_update_arc(eta, scale, u.clone(), v.clone()),
+        }
+    }
+
+    /// Materialize a dense copy (reporting / dense broadcasts).
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            Iterate::Dense(m) => m.clone(),
+            Iterate::Factored(f) => f.to_dense(),
+        }
+    }
+
+    /// Materialize, consuming self (no copy for the dense case).
+    pub fn into_dense(self) -> Mat {
+        match self {
+            Iterate::Dense(m) => m,
+            Iterate::Factored(f) => f.to_dense(),
+        }
+    }
+
+    /// Final-iterate rank: the atom count for the factored form (its
+    /// representation rank); for dense iterates [`dense_rank`].
+    pub fn rank(&self) -> usize {
+        match self {
+            Iterate::Factored(f) => f.atoms(),
+            Iterate::Dense(m) => dense_rank(m),
+        }
+    }
+
+    /// Peak atom count held during the run (0 for dense iterates).
+    pub fn peak_atoms(&self) -> usize {
+        match self {
+            Iterate::Dense(_) => 0,
+            Iterate::Factored(f) => f.peak_atoms(),
+        }
+    }
+}
+
+/// Reporting-path rank of a dense iterate: the numerical rank where the
+/// SVD is cheap, the dimension bound beyond.  The ONE policy shared by
+/// [`Iterate::rank`] and `RunCtx::report`.
+pub fn dense_rank(m: &Mat) -> usize {
+    if m.rows.min(m.cols) <= 64 {
+        numerical_rank(m)
+    } else {
+        m.rows.min(m.cols)
+    }
+}
+
+impl LinOp for Iterate {
+    fn rows(&self) -> usize {
+        self.dims().0
+    }
+    fn cols(&self) -> usize {
+        self.dims().1
+    }
+    fn apply(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            Iterate::Dense(m) => m.apply(x, y),
+            Iterate::Factored(f) => f.apply(x, y),
+        }
+    }
+    fn tapply(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            Iterate::Dense(m) => m.tapply(x, y),
+            Iterate::Factored(f) => f.tapply(x, y),
+        }
+    }
+    fn apply_dot(&self, y: &[f32], x: &[f32]) -> f32 {
+        match self {
+            Iterate::Dense(m) => m.apply_dot(y, x),
+            Iterate::Factored(f) => f.apply_dot(y, x),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_rank_one_agrees_across_representations() {
+        let theta = 1.5f32;
+        let dense = Iterate::init_rank_one(Repr::Dense, 6, 4, theta, &mut Rng::new(9));
+        let fact = Iterate::init_rank_one(Repr::Factored, 6, 4, theta, &mut Rng::new(9));
+        let (d, f) = (dense.to_dense(), fact.to_dense());
+        for (a, b) in d.data.iter().zip(&f.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // and both match the historical Mat-returning initializer
+        let legacy = crate::algo::sfw::init_rank_one(6, 4, theta, &mut Rng::new(9));
+        for (a, b) in d.data.iter().zip(&legacy.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn updates_track_across_representations() {
+        let mut rng = Rng::new(10);
+        let mut a = Iterate::init_rank_one(Repr::Dense, 5, 5, 1.0, &mut Rng::new(77));
+        let mut b = Iterate::init_rank_one(Repr::Factored, 5, 5, 1.0, &mut Rng::new(77));
+        for k in 1..=15u64 {
+            let u = rng.unit_vector(5);
+            let v = rng.unit_vector(5);
+            let eta = 2.0 / (k as f32 + 1.0);
+            a.fw_rank_one_update(eta, -1.0, &u, &v);
+            b.fw_rank_one_update(eta, -1.0, &u, &v);
+        }
+        let (da, db) = (a.to_dense(), b.to_dense());
+        let mut d = da.clone();
+        d.axpy(-1.0, &db);
+        assert!(d.frob_norm() < 1e-5);
+        assert_eq!(b.peak_atoms(), 16); // init atom + 15 updates
+        assert_eq!(a.peak_atoms(), 0);
+        assert!(b.rank() <= 16);
+    }
+
+    #[test]
+    fn clone_from_reuses_dense_storage() {
+        let mut rng = Rng::new(11);
+        let a = Iterate::init_rank_one(Repr::Dense, 4, 3, 1.0, &mut rng);
+        let mut b = Iterate::zeros(Repr::Dense, 4, 3);
+        b.clone_from(&a);
+        let mut d = a.to_dense();
+        d.axpy(-1.0, &b.to_dense());
+        assert_eq!(d.frob_norm(), 0.0);
+    }
+}

@@ -1,14 +1,37 @@
-//! Dense linear-algebra substrate (no external BLAS in the offline build).
+//! Dense + factored linear-algebra substrate (no external BLAS in the
+//! offline build).
 //!
 //! `mat` — row-major f32 matrices with allocation-free hot-loop ops;
-//! `svd` — power-iteration 1-SVD (the FW LMO) + one-sided Jacobi full SVD;
+//! `op` — the [`LinOp`] implicit-operator trait the LMO runs against;
+//! `factored` — [`FactoredMat`], the iterate as a rank-one atom list
+//! (O((d1+d2)*k) memory/bytes instead of O(d1*d2); see the ROADMAP's
+//! "Iterate representation" section);
+//! `iterate` — [`Iterate`]/[`Repr`], the dense-or-factored iterate every
+//! solver threads through (chosen per run by `TrainSpec::repr`);
+//! `svd` — operator-form power-iteration 1-SVD (the FW LMO) + one-sided
+//! Jacobi full SVD;
 //! `project` — simplex / l1 / nuclear-ball Euclidean projections (PGD
 //! baseline; FW famously avoids these).
+//!
+//! The wire-level counterpart of the factored form lives in
+//! [`crate::coordinator::messages`] (`DistDown::ComputeFactored`
+//! broadcasts atoms instead of the dense X) and
+//! [`crate::coordinator::update_log`] (log entries ARE the atoms).
 
+pub mod factored;
+pub mod iterate;
 pub mod mat;
+pub mod op;
 pub mod project;
 pub mod svd;
 
+pub use factored::FactoredMat;
+pub use iterate::{dense_rank, Iterate, Repr};
 pub use mat::{dot, norm2, normalize, Mat};
-pub use project::{l1_projection, nuclear_ball_projection, simplex_projection};
-pub use svd::{jacobi_svd, nuclear_norm, power_iteration, power_iteration_rand, Svd1};
+pub use op::LinOp;
+pub use project::{
+    factored_nuclear_projection, l1_projection, nuclear_ball_projection, simplex_projection,
+};
+pub use svd::{
+    jacobi_svd, nuclear_norm, numerical_rank, power_iteration, power_iteration_rand, Svd1,
+};

@@ -1,0 +1,86 @@
+//! [`LinOp`]: the implicit linear-operator interface the LMO runs against.
+//!
+//! The Frank-Wolfe LMO only ever needs matrix-vector products `A x` /
+//! `A^T x` of the gradient — never its entries — so `power_iteration`
+//! is written against this trait instead of a concrete [`Mat`].  A dense
+//! gradient is one implementation; a [`FactoredMat`] iterate (sum of
+//! rank-one atoms) is another that never materializes the `d1 x d2`
+//! array.  Implementations should override [`LinOp::apply_dot`] with an
+//! allocation-free form: it is the hot-path sigma recompute of the LMO
+//! (`u^T A v`), called once per `power_iteration`.
+//!
+//! [`FactoredMat`]: crate::linalg::FactoredMat
+
+use super::mat::{dot, Mat};
+
+/// A linear operator `A: R^cols -> R^rows` exposed through matvecs.
+pub trait LinOp {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// `y = A x` (`x` of length `cols`, `y` of length `rows`).
+    fn apply(&self, x: &[f32], y: &mut [f32]);
+    /// `y = A^T x` (`x` of length `rows`, `y` of length `cols`).
+    fn tapply(&self, x: &[f32], y: &mut [f32]);
+    /// `y^T A x` — the LMO's sigma estimate.  The default materializes
+    /// `A x`; hot-path operators override it allocation-free.
+    fn apply_dot(&self, y: &[f32], x: &[f32]) -> f32 {
+        let mut ax = vec![0.0f32; self.rows()];
+        self.apply(x, &mut ax);
+        dot(y, &ax)
+    }
+}
+
+impl LinOp for Mat {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn apply(&self, x: &[f32], y: &mut [f32]) {
+        self.matvec(x, y);
+    }
+    fn tapply(&self, x: &[f32], y: &mut [f32]) {
+        self.tmatvec(x, y);
+    }
+    /// Row-wise `sum_r y_r * (A x)_r` with the same f32-round-then-f64-
+    /// accumulate placement as `dot(y, A x)` (equal to it up to f64
+    /// summation order), so the generic LMO matches the historical dense
+    /// path — without the `A x` scratch vector.
+    fn apply_dot(&self, y: &[f32], x: &[f32]) -> f32 {
+        debug_assert_eq!(y.len(), self.rows);
+        debug_assert_eq!(x.len(), self.cols);
+        let mut acc = 0.0f64;
+        for (r, &yr) in y.iter().enumerate() {
+            acc += yr as f64 * dot(self.row(r), x) as f64;
+        }
+        acc as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mat_linop_matches_matvec_and_dot() {
+        let mut rng = Rng::new(300);
+        let a = Mat::randn(5, 7, 1.0, &mut rng);
+        let x: Vec<f32> = (0..7).map(|_| rng.normal_f32()).collect();
+        let y: Vec<f32> = (0..5).map(|_| rng.normal_f32()).collect();
+        let mut ax = vec![0.0f32; 5];
+        LinOp::apply(&a, &x, &mut ax);
+        let mut ax_ref = vec![0.0f32; 5];
+        a.matvec(&x, &mut ax_ref);
+        assert_eq!(ax, ax_ref);
+        // apply_dot override must equal the default (dot against A x)
+        let want = dot(&y, &ax_ref);
+        assert!((a.apply_dot(&y, &x) - want).abs() <= 1e-6 * (1.0 + want.abs()));
+        let mut atx = vec![0.0f32; 7];
+        LinOp::tapply(&a, &y, &mut atx);
+        let mut atx_ref = vec![0.0f32; 7];
+        a.tmatvec(&y, &mut atx_ref);
+        assert_eq!(atx, atx_ref);
+    }
+}

@@ -1,8 +1,15 @@
 //! Singular-value machinery: power-iteration 1-SVD (the Frank-Wolfe LMO)
 //! and a one-sided Jacobi full SVD (needed only by the PGD baseline's
 //! nuclear-ball projection and by tests as an exact oracle).
+//!
+//! The 1-SVD is written against [`LinOp`], so it runs on any implicit
+//! operator — a dense gradient [`Mat`] or a
+//! [`FactoredMat`](crate::linalg::FactoredMat) atom list — without
+//! materializing anything, and without allocating beyond its output
+//! vectors (the sigma recompute goes through [`LinOp::apply_dot`]).
 
-use super::mat::{dot, norm2, normalize, Mat};
+use super::mat::{norm2, normalize, Mat};
+use super::op::LinOp;
 use crate::util::rng::Rng;
 
 /// Result of a leading-singular-triple computation.
@@ -22,38 +29,43 @@ pub struct Svd1 {
 /// `max_iters` caps work, `tol` stops early when the singular-value
 /// estimate stabilizes — the paper solves the 1-SVD "to a practical
 /// precision" (Appendix D cites Allen-Zhu et al. 2017).
-pub fn power_iteration(g: &Mat, v0: &[f32], max_iters: usize, tol: f64) -> Svd1 {
-    let (d1, d2) = (g.rows, g.cols);
+pub fn power_iteration<A: LinOp + ?Sized>(g: &A, v0: &[f32], max_iters: usize, tol: f64) -> Svd1 {
+    let (d1, d2) = (g.rows(), g.cols());
     assert_eq!(v0.len(), d2);
     let mut v = v0.to_vec();
     normalize(&mut v);
     let mut u = vec![0.0f32; d1];
-    g.matvec(&v, &mut u);
+    g.apply(&v, &mut u);
     normalize(&mut u);
     let mut sigma_prev = 0.0f64;
     let mut iters = 0;
     for k in 0..max_iters {
         iters = k + 1;
         // u <- G v / ||.||, v <- G^T u / ||.||
-        g.matvec(&v, &mut u);
+        g.apply(&v, &mut u);
         normalize(&mut u);
-        g.tmatvec(&u, &mut v);
+        g.tapply(&u, &mut v);
         let sigma = normalize(&mut v);
         if (sigma - sigma_prev).abs() <= tol * sigma.max(1e-30) {
             break;
         }
         sigma_prev = sigma;
     }
-    // sigma = u^T G v (>= 0 by construction of the pair)
-    let mut gv = vec![0.0f32; d1];
-    g.matvec(&v, &mut gv);
-    let sigma = dot(&u, &gv);
+    // sigma = u^T G v (>= 0 by construction of the pair); apply_dot
+    // avoids the historical `G v` recompute buffer, so the only
+    // allocations per call are the returned (u, v) themselves
+    let sigma = g.apply_dot(&u, &v);
     Svd1 { u, v, sigma, iters }
 }
 
 /// Power iteration with a random restart vector drawn from `rng`.
-pub fn power_iteration_rand(g: &Mat, rng: &mut Rng, max_iters: usize, tol: f64) -> Svd1 {
-    let v0 = rng.unit_vector(g.cols);
+pub fn power_iteration_rand<A: LinOp + ?Sized>(
+    g: &A,
+    rng: &mut Rng,
+    max_iters: usize,
+    tol: f64,
+) -> Svd1 {
+    let v0 = rng.unit_vector(g.cols());
     power_iteration(g, &v0, max_iters, tol)
 }
 
@@ -135,6 +147,17 @@ pub fn jacobi_svd(a: &Mat) -> (Mat, Vec<f32>, Mat) {
 pub fn nuclear_norm(a: &Mat) -> f64 {
     let (_, s, _) = jacobi_svd(a);
     s.iter().map(|x| *x as f64).sum()
+}
+
+/// Numerical rank: singular values above `1e-6 * sigma_max` (exact, via
+/// Jacobi SVD — reporting-path only, never the hot loop).
+pub fn numerical_rank(a: &Mat) -> usize {
+    let (_, s, _) = jacobi_svd(a);
+    let s0 = s.first().copied().unwrap_or(0.0);
+    if s0 <= 0.0 {
+        return 0;
+    }
+    s.iter().filter(|&&x| x > 1e-6 * s0).count()
 }
 
 fn dot64(a: &[f32], b: &[f32]) -> f64 {

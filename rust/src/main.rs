@@ -94,6 +94,10 @@ fn print_result(report: &Report) {
         s.bytes_down,
         s.msgs_down
     );
+    println!(
+        "iterate:  rank={} peak-atoms={}",
+        report.final_rank, report.peak_atoms
+    );
     let c = &report.chaos;
     if c.events_total() > 0 {
         println!(
@@ -193,7 +197,14 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         // --jobs/--repeats/--sweep.* resolve inside SweepSpec::load.
         SweepSpec::load(args)?
     };
-    let result = SweepRunner::new().run(&spec)?;
+    let mut result = SweepRunner::new().run(&spec)?;
+    if args.get_bool("smoke") {
+        // The scale cells (larger shape, dense vs factored sfw-dist)
+        // ride along in the same artifact; check_smoke_bytes.py asserts
+        // the factored downlink win on them.
+        let scale = SweepRunner::new().run(&SweepSpec::smoke_scale())?;
+        result.cells.extend(scale.cells);
+    }
     result.table().print();
     let out_dir = args.get_str("out-dir", "bench_out");
     let json_path = format!("{out_dir}/sweep_{}.json", spec.name);

@@ -6,9 +6,16 @@
 //! evaluation (the master-side reporting path).  Both paper workloads have
 //! native Rust implementations here; the PJRT/AOT path in `runtime/` must
 //! agree with these to f32 tolerance (enforced by integration tests).
+//!
+//! Every evaluation also exists against the factored iterate
+//! ([`crate::linalg::FactoredMat`]): residuals/forward passes go through
+//! factored inner products (`X` applied atom by atom) instead of a dense
+//! materialization, and the `_it` dispatchers pick the path from the
+//! [`Iterate`] variant.  Dense-vs-factored agreement to f32 tolerance is
+//! pinned by `rust/tests/factored.rs`.
 
 use crate::data::{MatrixSensingData, PnnData};
-use crate::linalg::Mat;
+use crate::linalg::{FactoredMat, Iterate, LinOp, Mat};
 
 pub trait Objective: Send + Sync {
     /// (D1, D2) of the matrix variable.
@@ -23,6 +30,33 @@ pub trait Objective: Send + Sync {
     fn grad_sum(&self, x: &Mat, idx: &[usize], out: &mut Mat) -> f64;
     /// Full objective F(X).
     fn loss_full(&self, x: &Mat) -> f64;
+    /// [`Objective::grad_sum`] against a factored iterate.  The default
+    /// densifies; the paper workloads override it with factored inner
+    /// products (no dense X is ever built).  The gradient itself stays a
+    /// dense accumulator — it is a SUM over the minibatch, generally
+    /// full-rank, and feeds the LMO.
+    fn grad_sum_factored(&self, x: &FactoredMat, idx: &[usize], out: &mut Mat) -> f64 {
+        self.grad_sum(&x.to_dense(), idx, out)
+    }
+    /// [`Objective::loss_full`] against a factored iterate (default
+    /// densifies; workloads override with factored inner products).
+    fn loss_full_factored(&self, x: &FactoredMat) -> f64 {
+        self.loss_full(&x.to_dense())
+    }
+    /// Representation-dispatching gradient.
+    fn grad_sum_it(&self, x: &Iterate, idx: &[usize], out: &mut Mat) -> f64 {
+        match x {
+            Iterate::Dense(m) => self.grad_sum(m, idx, out),
+            Iterate::Factored(f) => self.grad_sum_factored(f, idx, out),
+        }
+    }
+    /// Representation-dispatching full objective.
+    fn loss_full_it(&self, x: &Iterate) -> f64 {
+        match x {
+            Iterate::Dense(m) => self.loss_full(m),
+            Iterate::Factored(f) => self.loss_full_factored(f),
+        }
+    }
     /// Best known objective value (for relative-error reporting).
     fn f_star_hint(&self) -> f64 {
         0.0
@@ -74,6 +108,35 @@ impl Objective for MatrixSensing {
 
     fn loss_full(&self, x: &Mat) -> f64 {
         self.data.loss_full(x)
+    }
+
+    /// Residuals via the factored inner product `<A_i, X> =
+    /// sum_j w_j u_j^T A_i v_j` — no dense X materialized.
+    fn grad_sum_factored(&self, x: &FactoredMat, idx: &[usize], out: &mut Mat) -> f64 {
+        debug_assert_eq!((x.rows, x.cols), (self.data.d1, self.data.d2));
+        out.fill(0.0);
+        let g = &mut out.data;
+        let mut loss = 0.0f64;
+        for &i in idx {
+            let row = self.data.af.row(i);
+            let r = x.inner_flat(row) - self.data.y[i];
+            loss += (r as f64).powi(2);
+            let c = 2.0 * r;
+            for (gk, &ak) in g.iter_mut().zip(row.iter()) {
+                *gk += c * ak;
+            }
+        }
+        loss
+    }
+
+    fn loss_full_factored(&self, x: &FactoredMat) -> f64 {
+        debug_assert_eq!((x.rows, x.cols), (self.data.d1, self.data.d2));
+        let mut acc = 0.0f64;
+        for i in 0..self.data.n {
+            let r = x.inner_flat(self.data.af.row(i)) - self.data.y[i];
+            acc += (r as f64).powi(2);
+        }
+        acc / self.data.n as f64
     }
 
     fn f_star_hint(&self) -> f64 {
@@ -144,6 +207,55 @@ impl Objective for Pnn {
         self.data.loss_full(x)
     }
 
+    /// Forward pass `a^T X a` through the factored matvec — O(k d) per
+    /// sample instead of O(d^2).  (The win is scoped to the forward
+    /// pass: the `g a a^T` accumulation below stays O(d^2) whenever the
+    /// hinge is active, same as the dense path.)
+    fn grad_sum_factored(&self, x: &FactoredMat, idx: &[usize], out: &mut Mat) -> f64 {
+        let d = self.data.d;
+        debug_assert_eq!((x.rows, x.cols), (d, d));
+        out.fill(0.0);
+        let mut w = vec![0.0f32; d];
+        let mut loss = 0.0f64;
+        for &i in idx {
+            let a = self.data.a.row(i);
+            let yi = self.data.y[i];
+            x.apply(a, &mut w);
+            let z = crate::linalg::dot(a, &w);
+            let ty = yi * z;
+            loss += PnnData::smooth_hinge(ty) as f64;
+            let g = PnnData::smooth_hinge_dt(ty) * yi;
+            if g == 0.0 {
+                continue;
+            }
+            for (r, &ar) in a.iter().enumerate() {
+                let c = g * ar;
+                if c == 0.0 {
+                    continue;
+                }
+                let row = out.row_mut(r);
+                for (o, &ac) in row.iter_mut().zip(a.iter()) {
+                    *o += c * ac;
+                }
+            }
+        }
+        loss
+    }
+
+    fn loss_full_factored(&self, x: &FactoredMat) -> f64 {
+        let d = self.data.d;
+        debug_assert_eq!((x.rows, x.cols), (d, d));
+        let mut w = vec![0.0f32; d];
+        let mut acc = 0.0f64;
+        for i in 0..self.data.n {
+            let a = self.data.a.row(i);
+            x.apply(a, &mut w);
+            let z = crate::linalg::dot(a, &w);
+            acc += PnnData::smooth_hinge(self.data.y[i] * z) as f64;
+        }
+        acc / self.data.n as f64
+    }
+
     fn name(&self) -> &'static str {
         "pnn"
     }
@@ -198,6 +310,55 @@ mod tests {
         let x = Mat::randn(6, 6, 0.1, &mut rng);
         let idx: Vec<usize> = (0..64).map(|_| rng.next_below(200)).collect();
         fd_check(&obj, &x, &idx, &[(0, 0), (1, 4), (5, 5)]);
+    }
+
+    #[test]
+    fn factored_grad_and_loss_match_dense_paths() {
+        use crate::linalg::FactoredMat;
+        use std::sync::Arc as StdArc;
+        let mut rng = Rng::new(34);
+        let ms_p = MsParams { d1: 6, d2: 5, rank: 2, n: 250, noise_std: 0.1 };
+        let ms = MatrixSensing::new(MatrixSensingData::generate(&ms_p, &mut rng), 1.0);
+        let pnn_p = PnnParams { d: 7, n: 250, teacher_rank: 2, mixture_components: 3 };
+        let pnn = Pnn::new(PnnData::generate(&pnn_p, &mut rng), 1.0);
+        let objs: [&dyn Objective; 2] = [&ms, &pnn];
+        for obj in objs {
+            let (d1, d2) = obj.dims();
+            let mut f = FactoredMat::zeros(d1, d2);
+            for _ in 0..5 {
+                f.push_atom(
+                    0.4 * rng.normal_f32(),
+                    StdArc::new(rng.unit_vector(d1)),
+                    StdArc::new(rng.unit_vector(d2)),
+                );
+            }
+            let dense = f.to_dense();
+            let idx: Vec<usize> = (0..48).map(|_| rng.next_below(250)).collect();
+            let mut gd = Mat::zeros(d1, d2);
+            let mut gf = Mat::zeros(d1, d2);
+            let ld = obj.grad_sum(&dense, &idx, &mut gd);
+            let lf = obj.grad_sum_factored(&f, &idx, &mut gf);
+            assert!(
+                (ld - lf).abs() < 1e-4 * (1.0 + ld.abs()),
+                "{}: batch loss {ld} vs {lf}",
+                obj.name()
+            );
+            let mut diff = gd.clone();
+            diff.axpy(-1.0, &gf);
+            assert!(
+                diff.frob_norm() < 1e-4 * (1.0 + gd.frob_norm()),
+                "{}: grad diff {}",
+                obj.name(),
+                diff.frob_norm()
+            );
+            let full_d = obj.loss_full(&dense);
+            let full_f = obj.loss_full_factored(&f);
+            assert!(
+                (full_d - full_f).abs() < 1e-5 * (1.0 + full_d.abs()),
+                "{}: full loss {full_d} vs {full_f}",
+                obj.name()
+            );
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::algo::engine::{NativeEngine, StepEngine};
 use crate::algo::schedule::BatchSchedule;
 use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
 use crate::data::pnn::{PnnData, PnnParams};
-use crate::linalg::Mat;
+use crate::linalg::{Iterate, Mat};
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::{MatrixSensing, Objective, Pnn};
 use crate::runtime::{PjrtEngine, PjrtRuntime, Workload};
@@ -68,16 +68,35 @@ impl RunCtx {
 
     /// Wrap a finished run into the uniform [`Report`].  Solvers that
     /// ran over chaos-wrapped links overwrite `report.chaos` with their
-    /// run's snapshot.
+    /// run's snapshot, and solvers whose harness already extracted the
+    /// representation stats overwrite `final_rank`/`peak_atoms`.
     pub fn report(&self, x: Mat, counters: Arc<Counters>, trace: Arc<LossTrace>) -> Report {
+        let final_rank = crate::linalg::dense_rank(&x);
         Report {
             x,
+            final_rank,
+            peak_atoms: 0,
             counters,
             trace,
             chaos: crate::chaos::ChaosSnapshot::default(),
             spec_echo: self.spec.echo(),
             f_star: self.obj.f_star_hint(),
         }
+    }
+
+    /// [`RunCtx::report`] from a final [`Iterate`]: extracts the rank
+    /// and peak-atom stats before densifying.
+    pub fn report_it(
+        &self,
+        x: Iterate,
+        counters: Arc<Counters>,
+        trace: Arc<LossTrace>,
+    ) -> Report {
+        let (final_rank, peak_atoms) = (x.rank(), x.peak_atoms());
+        let mut report = self.report(x.into_dense(), counters, trace);
+        report.final_rank = final_rank;
+        report.peak_atoms = peak_atoms;
+        report
     }
 }
 

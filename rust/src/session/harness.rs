@@ -30,7 +30,7 @@ use crate::coordinator::runner::{AsynOptions, RunResult};
 use crate::coordinator::svrf_asyn::{run_svrf_master, run_svrf_worker, SvrfAsynOptions};
 use crate::coordinator::sync::{run_dist_master, run_dist_worker, DistOptions};
 use crate::coordinator::worker::{run_worker, WorkerOptions};
-use crate::linalg::Mat;
+use crate::linalg::Iterate;
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
 use crate::session::spec::TrainSpec;
@@ -110,17 +110,18 @@ pub(crate) type WorkerJob<Up, Down> = Box<dyn FnOnce(Box<dyn WorkerLink<Up, Down
 
 /// Run `master` against `t.workers` workers over the selected transport.
 /// The master runs on the caller thread; in-process workers run on
-/// scoped threads (joined before returning).
-pub(crate) fn run_over<Up, Down, M, F>(
+/// scoped threads (joined before returning).  Generic in the master's
+/// return value (the protocol loops return their final [`Iterate`]).
+pub(crate) fn run_over<Up, Down, R, M, F>(
     mut t: TransportOpts,
     counters: &Arc<Counters>,
     master: M,
     mut make_worker: F,
-) -> Mat
+) -> R
 where
     Up: Wire,
     Down: Wire,
-    M: FnOnce(Box<dyn MasterLink<Up, Down>>) -> Mat,
+    M: FnOnce(Box<dyn MasterLink<Up, Down>>) -> R,
     F: FnMut(usize) -> WorkerJob<Up, Down>,
 {
     match t.transport {
@@ -206,6 +207,7 @@ where
         tau: opts.tau,
         eval_every: opts.eval_every,
         seed: opts.seed,
+        repr: opts.repr,
     };
     let x = run_over(
         t,
@@ -221,6 +223,7 @@ where
                 batch: opts.batch.clone(),
                 seed: opts.seed,
                 straggler: opts.straggler,
+                repr: opts.repr,
             };
             let job: WorkerJob<UpdateMsg, MasterMsg> = Box::new(move |mut wl| {
                 run_worker(&mut *wl, engine.as_mut(), &wopts, &counters)
@@ -229,7 +232,19 @@ where
         },
     );
     evaluator.finish();
-    RunResult { x, counters, trace, chaos }
+    finish_result(x, counters, trace, chaos)
+}
+
+/// Fold the master's final [`Iterate`] into the dense-reporting
+/// [`RunResult`], extracting the representation stats first.
+fn finish_result(
+    x: Iterate,
+    counters: Arc<Counters>,
+    trace: Arc<LossTrace>,
+    chaos: Arc<ChaosCounters>,
+) -> RunResult {
+    let (rank, peak_atoms) = (x.rank(), x.peak_atoms());
+    RunResult { x: x.into_dense(), rank, peak_atoms, counters, trace, chaos }
 }
 
 /// Run SVRF-asyn (Algorithm 5) over the requested transport.
@@ -257,14 +272,23 @@ where
             let counters = counters.clone();
             let batch = opts.batch.clone();
             let seed = opts.seed;
+            let repr = opts.repr;
             let job: WorkerJob<UpdateMsg, MasterMsg> = Box::new(move |mut wl| {
-                run_svrf_worker(&mut *wl, engine.as_mut(), w as u32, &batch, seed, &counters)
+                run_svrf_worker(
+                    &mut *wl,
+                    engine.as_mut(),
+                    w as u32,
+                    &batch,
+                    seed,
+                    &counters,
+                    repr,
+                )
             });
             job
         },
     );
     evaluator.finish();
-    RunResult { x, counters, trace, chaos }
+    finish_result(x, counters, trace, chaos)
 }
 
 /// Run SFW-dist (Algorithm 1) over the requested transport.
@@ -303,14 +327,23 @@ where
             let counters = counters.clone();
             let seed = opts.seed;
             let straggler = opts.straggler;
+            let repr = opts.repr;
             let job: WorkerJob<DistUp, DistDown> = Box::new(move |mut wl| {
-                run_dist_worker(&mut *wl, engine.as_mut(), w as u32, seed, straggler, &counters)
+                run_dist_worker(
+                    &mut *wl,
+                    engine.as_mut(),
+                    w as u32,
+                    seed,
+                    straggler,
+                    &counters,
+                    repr,
+                )
             });
             job
         },
     );
     evaluator.finish();
-    RunResult { x, counters, trace, chaos }
+    finish_result(x, counters, trace, chaos)
 }
 
 /// Set the protocol's corruption guard on the injection config (if any)

@@ -48,6 +48,31 @@
 //! Workers regenerate the dataset and schedules from the spec (task +
 //! seed + batch/tau must match the master); only protocol messages cross
 //! the wire — see [`crate::comms`] for the framing and byte accounting.
+//!
+//! # Factored-iterate quickstart
+//!
+//! Every solver can hold its iterate as a rank-one atom list
+//! ([`crate::linalg::FactoredMat`]) instead of a dense matrix:
+//!
+//! ```text
+//! sfw train --task matrix_sensing --algo sfw-dist --workers 4 --repr factored
+//! ```
+//!
+//! or `TrainSpec::repr(ReprKind::Factored)` from code.  The default is `auto`:
+//! `pnn` runs factored (matvec-dominated forward pass — O(k d) per
+//! sample instead of O(d^2)), `matrix_sensing` runs dense, and any
+//! PJRT-engine run stays dense (the AOT artifacts take dense inputs, so
+//! a factored iterate would be densified every step).  Prefer
+//! `factored` when (a) the matrix shape is large relative to the
+//! iteration count, so O((d1+d2)*k) beats O(d1*d2) on memory and
+//! snapshot cost, or (b) the run is `sfw-dist`, whose downlink then
+//! broadcasts only atoms-since-last-round
+//! ([`DistDown::ComputeFactored`](crate::coordinator::messages::DistDown))
+//! instead of the dense X — the `bytes_down` column collapses from
+//! O(d1*d2) to O(d1+d2) per round.  Same-seed dense-vs-factored runs
+//! agree to f32 tolerance on every solver (`rust/tests/factored.rs`);
+//! `Report::{final_rank, peak_atoms}` and the sweep `rank` column
+//! surface the representation's size.
 
 pub mod ctx;
 pub(crate) mod harness;
@@ -63,6 +88,7 @@ pub use spec::TrainSpec;
 pub use crate::algo::schedule::BatchSchedule;
 pub use crate::chaos::{ChaosSnapshot, FaultPlan};
 pub use crate::coordinator::worker::Straggler;
+pub use crate::linalg::Repr;
 
 use std::sync::Arc;
 
@@ -70,6 +96,40 @@ use crate::experiments;
 use crate::linalg::Mat;
 use crate::metrics::{CounterSnapshot, Counters, LossTrace, TracePoint};
 use crate::runtime::Workload;
+
+/// Iterate-representation knob of a [`TrainSpec`]: the concrete
+/// [`Repr`] or `Auto`, which resolves per objective — `pnn` runs
+/// factored (its forward pass is matvec-dominated, where the atom form
+/// is O(k d) instead of O(d^2)), `matrix_sensing` runs dense (its
+/// residuals contract against dense sensing rows) — and always dense on
+/// the PJRT engine (artifacts take dense inputs).  See the factored
+/// quickstart in this module's docs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReprKind {
+    Auto,
+    Dense,
+    Factored,
+}
+
+impl ReprKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReprKind::Auto => "auto",
+            ReprKind::Dense => "dense",
+            ReprKind::Factored => "factored",
+        }
+    }
+
+    /// Parse a CLI/config value (`auto | dense | factored`).
+    pub fn parse(s: &str) -> Option<ReprKind> {
+        match s {
+            "auto" => Some(ReprKind::Auto),
+            "dense" => Some(ReprKind::Dense),
+            "factored" => Some(ReprKind::Factored),
+            _ => None,
+        }
+    }
+}
 
 /// Callback observing the bound TCP master address of a run (fires after
 /// bind, before workers connect) — multi-process orchestration and tests.
@@ -134,6 +194,15 @@ impl TaskSpec {
             TaskSpec::Prebuilt(Workload::Pnn(_)) => "pnn",
         }
     }
+
+    /// (D1, D2) of the matrix variable this task trains.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            TaskSpec::MatrixSensing { d1, d2, .. } => (*d1, *d2),
+            TaskSpec::Pnn { d, .. } => (*d, *d),
+            TaskSpec::Prebuilt(w) => w.objective().dims(),
+        }
+    }
 }
 
 /// Errors surfaced by spec validation and wiring (never by the hot loop).
@@ -161,8 +230,14 @@ pub enum SessionError {
 
 /// Uniform result of one training run.
 pub struct Report {
-    /// Final iterate X_T.
+    /// Final iterate X_T (densified for reporting regardless of the
+    /// run's representation).
     pub x: Mat,
+    /// Final-iterate rank: the atom count for factored runs, the
+    /// numerical rank (small problems) or dimension bound for dense.
+    pub final_rank: usize,
+    /// Peak atom count held by the run's iterate (0 for dense runs).
+    pub peak_atoms: usize,
     pub counters: Arc<Counters>,
     pub trace: Arc<LossTrace>,
     /// Injected-fault accounting of the run — all zeros unless the spec
@@ -179,6 +254,8 @@ impl std::fmt::Debug for Report {
         f.debug_struct("Report")
             .field("spec_echo", &self.spec_echo)
             .field("trace_points", &self.trace.points().len())
+            .field("final_rank", &self.final_rank)
+            .field("peak_atoms", &self.peak_atoms)
             .field("counters", &self.counters.snapshot())
             .field("chaos", &self.chaos)
             .finish_non_exhaustive()

@@ -48,9 +48,10 @@ impl Solver for SfwSolver {
             batch: ctx.batch_or(|| BatchSchedule::sfw(spec.batch_scale, spec.batch_cap)),
             eval_every: spec.eval_every,
             seed: spec.seed,
+            repr: spec.resolved_repr(),
         };
         let x = run_sfw(engine.as_mut(), &opts, &counters, &trace);
-        ctx.report(x, counters, trace)
+        ctx.report_it(x, counters, trace)
     }
 }
 
@@ -68,6 +69,7 @@ impl AsynSolver {
             eval_every: spec.eval_every,
             seed: spec.seed,
             straggler: spec.straggler,
+            repr: spec.resolved_repr(),
         }
     }
 }
@@ -90,6 +92,8 @@ impl Solver for AsynSolver {
         let t = TransportOpts::from_ctx(ctx);
         let r = harness::run_asyn(ctx.obj.clone(), &opts, t, |w| ctx.make_engine(w));
         let mut report = ctx.report(r.x, r.counters, r.trace);
+        report.final_rank = r.rank;
+        report.peak_atoms = r.peak_atoms;
         report.chaos = r.chaos.snapshot();
         report
     }
@@ -101,6 +105,7 @@ impl Solver for AsynSolver {
             batch: opts.batch,
             seed: opts.seed,
             straggler: opts.straggler,
+            repr: opts.repr,
         };
         let counters = Counters::new(); // process-local telemetry only
         let mut engine = ctx.make_engine(rank as usize);
@@ -122,6 +127,7 @@ impl SvrfAsynSolver {
             batch: ctx.batch_or(|| BatchSchedule::svrf_asyn(spec.tau, spec.batch_cap)),
             eval_every: spec.eval_every,
             seed: spec.seed,
+            repr: spec.resolved_repr(),
         }
     }
 }
@@ -144,6 +150,8 @@ impl Solver for SvrfAsynSolver {
         let t = TransportOpts::from_ctx(ctx);
         let r = harness::run_svrf_asyn(ctx.obj.clone(), &opts, t, |w| ctx.make_engine(w));
         let mut report = ctx.report(r.x, r.counters, r.trace);
+        report.final_rank = r.rank;
+        report.peak_atoms = r.peak_atoms;
         report.chaos = r.chaos.snapshot();
         report
     }
@@ -153,7 +161,15 @@ impl Solver for SvrfAsynSolver {
         let counters = Counters::new();
         let mut engine = ctx.make_engine(rank as usize);
         let mut link = harness::connect_worker::<UpdateMsg, MasterMsg>(connect, rank)?;
-        run_svrf_worker(&mut link, engine.as_mut(), rank, &opts.batch, opts.seed, &counters);
+        run_svrf_worker(
+            &mut link,
+            engine.as_mut(),
+            rank,
+            &opts.batch,
+            opts.seed,
+            &counters,
+            opts.repr,
+        );
         Ok(())
     }
 }
@@ -170,6 +186,7 @@ impl DistSolver {
             eval_every: spec.eval_every,
             seed: spec.seed,
             straggler: spec.straggler,
+            repr: spec.resolved_repr(),
         }
     }
 }
@@ -188,6 +205,8 @@ impl Solver for DistSolver {
         let t = TransportOpts::from_ctx(ctx);
         let r = harness::run_dist(ctx.obj.clone(), &opts, t, |w| ctx.make_engine(w));
         let mut report = ctx.report(r.x, r.counters, r.trace);
+        report.final_rank = r.rank;
+        report.peak_atoms = r.peak_atoms;
         report.chaos = r.chaos.snapshot();
         report
     }
@@ -197,7 +216,15 @@ impl Solver for DistSolver {
         let counters = Counters::new();
         let mut engine = ctx.make_engine(rank as usize);
         let mut link = harness::connect_worker::<DistUp, DistDown>(connect, rank)?;
-        run_dist_worker(&mut link, engine.as_mut(), rank, opts.seed, opts.straggler, &counters);
+        run_dist_worker(
+            &mut link,
+            engine.as_mut(),
+            rank,
+            opts.seed,
+            opts.straggler,
+            &counters,
+            opts.repr,
+        );
         Ok(())
     }
 }
@@ -218,9 +245,13 @@ impl Solver for SvaSolver {
             batch: ctx.batch_or(|| BatchSchedule::sfw(spec.batch_scale, spec.batch_cap)),
             eval_every: spec.eval_every,
             seed: spec.seed,
+            repr: spec.resolved_repr(),
         };
         let r = run_sva_impl(ctx.obj.clone(), &opts, |w| ctx.make_engine(w));
-        ctx.report(r.x, r.counters, r.trace)
+        let mut report = ctx.report(r.x, r.counters, r.trace);
+        report.final_rank = r.rank;
+        report.peak_atoms = r.peak_atoms;
+        report
     }
 }
 
@@ -241,9 +272,13 @@ impl Solver for DfwPowerSolver {
             rounds_slope: spec.dfw_rounds_slope,
             eval_every: spec.eval_every,
             seed: spec.seed,
+            repr: spec.resolved_repr(),
         };
         let r = run_dfw_power_impl(ctx.obj.clone(), &opts);
-        ctx.report(r.x, r.counters, r.trace)
+        let mut report = ctx.report(r.x, r.counters, r.trace);
+        report.final_rank = r.rank;
+        report.peak_atoms = r.peak_atoms;
+        report
     }
 }
 
@@ -266,8 +301,9 @@ impl Solver for PgdSolver {
             gamma: 0.05,
             eval_every: spec.eval_every,
             seed: spec.seed,
+            repr: spec.resolved_repr(),
         };
         let x = run_pgd(engine.as_mut(), &opts, &counters, &trace);
-        ctx.report(x, counters, trace)
+        ctx.report_it(x, counters, trace)
     }
 }

@@ -13,9 +13,10 @@ use crate::algo::schedule::BatchSchedule;
 use crate::chaos::FaultPlan;
 use crate::config::TrainConfig;
 use crate::coordinator::worker::Straggler;
+use crate::linalg::Repr;
 use crate::runtime::PjrtRuntime;
 use crate::session::registry::registry;
-use crate::session::{EngineKind, Report, RunCtx, SessionError, TaskSpec, Transport};
+use crate::session::{EngineKind, Report, ReprKind, RunCtx, SessionError, TaskSpec, Transport};
 
 /// Declarative description of one training run.  Construct with
 /// [`TrainSpec::new`], chain setters, finish with [`TrainSpec::run`].
@@ -39,6 +40,9 @@ pub struct TrainSpec {
     pub batch_scale: f64,
     pub batch_cap: usize,
     pub power_iters: usize,
+    /// Iterate representation: dense, factored, or `Auto` (per-objective
+    /// default — see [`ReprKind`] and the module-doc quickstart).
+    pub repr: ReprKind,
     /// Nuclear-ball radius for generated tasks (ignored for
     /// [`TaskSpec::Prebuilt`], whose objective carries its own theta).
     pub theta: f32,
@@ -85,6 +89,7 @@ impl TrainSpec {
             batch_scale: 0.5,
             batch_cap: 10_000,
             power_iters: 24,
+            repr: ReprKind::Auto,
             theta: 1.0,
             seed: 42,
             eval_every: 10,
@@ -137,6 +142,10 @@ impl TrainSpec {
     }
     pub fn power_iters(mut self, p: usize) -> Self {
         self.power_iters = p;
+        self
+    }
+    pub fn repr(mut self, r: ReprKind) -> Self {
+        self.repr = r;
         self
     }
     pub fn theta(mut self, theta: f32) -> Self {
@@ -236,10 +245,28 @@ impl TrainSpec {
             .unwrap_or_else(|| (self.iterations as f64).log2().ceil().max(1.0) as u32)
     }
 
+    /// The concrete iterate representation this spec runs with:
+    /// `ReprKind::Auto` resolves per objective — `pnn` factored,
+    /// `matrix_sensing` dense (see [`ReprKind`]) — except on the PJRT
+    /// engine, whose artifacts take dense inputs: a factored iterate
+    /// there would be densified on every step, so `Auto` stays dense
+    /// (explicit `Factored` is honored and pays the densify).
+    pub fn resolved_repr(&self) -> Repr {
+        match self.repr {
+            ReprKind::Dense => Repr::Dense,
+            ReprKind::Factored => Repr::Factored,
+            ReprKind::Auto => match (self.task.name(), self.engine) {
+                (_, EngineKind::Pjrt) => Repr::Dense,
+                ("pnn", _) => Repr::Factored,
+                _ => Repr::Dense,
+            },
+        }
+    }
+
     /// One-line summary used for logs and `Report::spec_echo`.
     pub fn echo(&self) -> String {
         let mut echo = format!(
-            "task={} algo={} engine={} transport={} workers={} tau={} T={} seed={}",
+            "task={} algo={} engine={} transport={} repr={} workers={} tau={} T={} seed={}",
             self.task.name(),
             self.algo,
             match self.engine {
@@ -250,6 +277,7 @@ impl TrainSpec {
                 Transport::Local => "local",
                 Transport::Tcp => "tcp",
             },
+            self.resolved_repr().label(),
             self.workers,
             self.tau,
             self.iterations,
@@ -390,7 +418,14 @@ impl TrainSpec {
             "tcp" => Transport::Tcp,
             t => return Err(SessionError::UnknownTransport(t.to_string())),
         };
+        let repr = ReprKind::parse(&cfg.repr).ok_or_else(|| {
+            SessionError::InvalidSpec(format!(
+                "unknown repr '{}' (valid: auto | dense | factored)",
+                cfg.repr
+            ))
+        })?;
         let mut spec = TrainSpec::new(task)
+            .repr(repr)
             .algo(&cfg.algo)
             .workers(cfg.workers)
             .tau(cfg.tau)

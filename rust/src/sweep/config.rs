@@ -14,14 +14,14 @@
 use std::str::FromStr;
 
 use crate::config::{Config, TrainConfig};
-use crate::session::{TrainSpec, Transport};
-use crate::sweep::grid::{StragglerProfile, SweepSpec};
+use crate::session::{ReprKind, TrainSpec, Transport};
+use crate::sweep::grid::{parse_dims, StragglerProfile, SweepSpec};
 use crate::sweep::SweepError;
 
 /// Keys the `[sweep]` section accepts (axes + run knobs).
 pub const SWEEP_KEYS: &[&str] = &[
-    "name", "algos", "workers", "tau", "batch", "power-iters", "transport", "straggler",
-    "chaos", "seeds", "repeats", "jobs", "target",
+    "name", "algos", "dims", "repr", "workers", "tau", "batch", "power-iters", "transport",
+    "straggler", "chaos", "seeds", "repeats", "jobs", "target",
 ];
 
 impl SweepSpec {
@@ -34,15 +34,20 @@ impl SweepSpec {
             None => Config::new(),
         };
         let train = TrainConfig::resolve(file.clone(), args)?;
-        // Prebuild the dataset once: every cell (and repeat) shares the
-        // workload via Arc instead of regenerating it inside the timed
-        // run — a `seeds` axis then varies algorithm randomness only.
         // The `[chaos]`/`--chaos.*` section configures the BASE plan
         // (cells inherit it unless a `chaos` axis overrides per cell).
         let base = TrainSpec::from_config(&train)?
-            .maybe_fault_plan(crate::chaos::config::resolve(&file, args)?)
-            .prebuilt();
-        SweepSpec::from_sources(base, &file, args)
+            .maybe_fault_plan(crate::chaos::config::resolve(&file, args)?);
+        let mut spec = SweepSpec::from_sources(base, &file, args)?;
+        // Prebuild the dataset once: every cell (and repeat) shares the
+        // workload via Arc instead of regenerating it inside the timed
+        // run — a `seeds` axis then varies algorithm randomness only.
+        // A `dims` axis regenerates the dataset per cell, so it keeps
+        // the generated task instead.
+        if spec.dims.is_empty() {
+            spec.base = spec.base.prebuilt();
+        }
+        Ok(spec)
     }
 
     /// Resolve the `[sweep]` section of `file` + `--sweep.*` CLI
@@ -87,6 +92,26 @@ impl SweepSpec {
                 .into_iter()
                 .map(|s| s.to_string())
                 .collect();
+        }
+        if let Some(v) = get("dims") {
+            spec.dims = split_list("dims", &v)?
+                .into_iter()
+                .map(|s| parse_dims(s).map(|_| s.to_string()))
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = get("repr") {
+            spec.reprs = split_list("repr", &v)?
+                .into_iter()
+                .map(|s| {
+                    ReprKind::parse(s).map(|_| s.to_string()).ok_or_else(|| {
+                        SweepError::BadAxisValue {
+                            axis: "repr".into(),
+                            value: s.to_string(),
+                            expected: "auto | dense | factored".into(),
+                        }
+                    })
+                })
+                .collect::<Result<_, _>>()?;
         }
         if let Some(v) = get("workers") {
             spec.workers = parse_list("workers", &v, "comma-separated worker counts")?;
@@ -187,6 +212,37 @@ impl SweepSpec {
             .taus(&[2])
             .transports(&[Transport::Local, Transport::Tcp])
             .chaos_plans(&["none", "flaky-net"])
+            .target(0.5)
+    }
+
+    /// The CI scale cells that ride along with [`SweepSpec::smoke`]
+    /// (`sfw sweep --smoke` merges both into one `sweep_smoke.json`):
+    /// one larger non-square matrix-sensing shape, sfw-dist, W = 2,
+    /// dense vs factored.  `scripts/check_smoke_bytes.py` asserts the
+    /// factored cell's `bytes_down` is measurably below the dense
+    /// cell's — the representation's headline saving, pinned in the
+    /// artifact.
+    pub fn smoke_scale() -> SweepSpec {
+        use crate::algo::schedule::BatchSchedule;
+        use crate::session::TaskSpec;
+        let base = TrainSpec::new(TaskSpec::MatrixSensing {
+            d1: 48,
+            d2: 32,
+            rank: 3,
+            n: 600,
+            noise_std: 0.05,
+        })
+        .iterations(20)
+        .batch(BatchSchedule::Constant(16))
+        .eval_every(5)
+        .power_iters(20)
+        .seed(42);
+        SweepSpec::new("smoke-scale", base)
+            .algos(&["sfw-dist"])
+            .workers(&[2])
+            .taus(&[2])
+            .transports(&[Transport::Local])
+            .reprs(&["dense", "factored"])
             .target(0.5)
     }
 }
@@ -320,6 +376,49 @@ mod tests {
                 .unwrap_or_else(|| panic!("smoke grid must include a flaky-net cell for '{algo}'"));
             assert_eq!(chaos.spec.fault_plan.as_ref().unwrap().name, "flaky-net");
         }
+    }
+
+    #[test]
+    fn smoke_scale_grid_is_the_dense_vs_factored_pair() {
+        let cells = SweepSpec::smoke_scale().expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert_eq!(c.axis("algo"), Some("sfw-dist"));
+            assert_eq!(c.axis("dims"), Some("48x32"));
+            assert_eq!(c.axis("workers"), Some("2"));
+            assert_eq!(c.axis("seed"), Some("42"));
+        }
+        assert_eq!(cells[0].axis("repr"), Some("dense"));
+        assert_eq!(cells[1].axis("repr"), Some("factored"));
+        assert!(matches!(cells[1].spec.repr, crate::session::ReprKind::Factored));
+    }
+
+    #[test]
+    fn dims_and_repr_keys_resolve_from_cli() {
+        let a = args("--sweep.dims 8x8,16x12 --sweep.repr dense,factored");
+        let s = SweepSpec::from_sources(base(), &Config::new(), &a).unwrap();
+        assert_eq!(s.dims, vec!["8x8", "16x12"]);
+        assert_eq!(s.reprs, vec!["dense", "factored"]);
+        assert_eq!(s.product_size(), 4);
+        // bad values name the axis
+        let err = SweepSpec::from_sources(base(), &Config::new(), &args("--sweep.dims 8by8"))
+            .unwrap_err();
+        assert!(err.to_string().contains("dims"), "{err}");
+        let err = SweepSpec::from_sources(base(), &Config::new(), &args("--sweep.repr sparse"))
+            .unwrap_err();
+        assert!(err.to_string().contains("factored"), "{err}");
+    }
+
+    #[test]
+    fn dims_axis_skips_prebuilding_the_base() {
+        let small = "--data.ms-n 300 --data.ms-d 8 --data.ms-rank 2";
+        let s = SweepSpec::load(&args(&format!("{small} --sweep.dims 8x8,10x6"))).unwrap();
+        assert!(
+            !matches!(s.base.task, crate::session::TaskSpec::Prebuilt(_)),
+            "dims axis must keep a generated task"
+        );
+        let s = SweepSpec::load(&args(small)).unwrap();
+        assert!(matches!(s.base.task, crate::session::TaskSpec::Prebuilt(_)));
     }
 
     #[test]

@@ -14,14 +14,37 @@ use std::time::Duration;
 use crate::algo::schedule::BatchSchedule;
 use crate::chaos::{FaultPlan, DEFAULT_CHAOS_SEED};
 use crate::coordinator::worker::Straggler;
-use crate::session::{TrainSpec, Transport};
+use crate::session::{ReprKind, TaskSpec, TrainSpec, Transport};
 use crate::sweep::SweepError;
 
 /// The fixed axis order: every cell id and result row lists axis values
 /// in this order, and `[sweep]` config keys resolve against these names.
 pub const AXIS_NAMES: &[&str] = &[
-    "algo", "workers", "tau", "batch", "power_iters", "transport", "straggler", "chaos", "seed",
+    "algo", "dims", "repr", "workers", "tau", "batch", "power_iters", "transport", "straggler",
+    "chaos", "seed",
 ];
+
+/// Parse a `dims` axis value `"D1xD2"` (e.g. `"48x32"`).
+pub(crate) fn parse_dims(s: &str) -> Result<(usize, usize), SweepError> {
+    let bad = || SweepError::BadAxisValue {
+        axis: "dims".into(),
+        value: s.to_string(),
+        expected: "'<d1>x<d2>' with both positive (e.g. 48x32)".into(),
+    };
+    let (a, b) = s.split_once('x').ok_or_else(bad)?;
+    let d1: usize = a.trim().parse().map_err(|_| bad())?;
+    let d2: usize = b.trim().parse().map_err(|_| bad())?;
+    if d1 == 0 || d2 == 0 {
+        return Err(bad());
+    }
+    Ok((d1, d2))
+}
+
+/// Label of a task's matrix shape in the `dims` axis encoding.
+pub(crate) fn dims_label(task: &TaskSpec) -> String {
+    let (d1, d2) = task.dims();
+    format!("{d1}x{d2}")
+}
 
 /// Worker-heterogeneity profile, the sweep-axis form of
 /// [`Straggler`] (named, parseable, comparable).
@@ -152,6 +175,13 @@ pub struct SweepSpec {
     pub base: TrainSpec,
     /// Axes; an empty vec = inherit the base spec's value.
     pub algos: Vec<String>,
+    /// Matrix shapes `"D1xD2"` — regenerates the dataset per cell, so it
+    /// is incompatible with a [`TaskSpec::Prebuilt`] base (rejected by
+    /// `expand`).
+    pub dims: Vec<String>,
+    /// Iterate representations (`auto | dense | factored`); cell labels
+    /// carry the RESOLVED value, so `auto` never appears in artifacts.
+    pub reprs: Vec<String>,
     pub workers: Vec<usize>,
     pub taus: Vec<u64>,
     /// Constant batch sizes ([`BATCH_AUTO`] = theorem schedule).  Empty =
@@ -180,6 +210,8 @@ impl SweepSpec {
             name: name.to_string(),
             base,
             algos: Vec::new(),
+            dims: Vec::new(),
+            reprs: Vec::new(),
             workers: Vec::new(),
             taus: Vec::new(),
             batches: Vec::new(),
@@ -196,6 +228,14 @@ impl SweepSpec {
 
     pub fn algos(mut self, names: &[&str]) -> Self {
         self.algos = names.iter().map(|s| s.to_string()).collect();
+        self
+    }
+    pub fn dims_axis(mut self, dims: &[&str]) -> Self {
+        self.dims = dims.iter().map(|s| s.to_string()).collect();
+        self
+    }
+    pub fn reprs(mut self, reprs: &[&str]) -> Self {
+        self.reprs = reprs.iter().map(|s| s.to_string()).collect();
         self
     }
     pub fn workers(mut self, ws: &[usize]) -> Self {
@@ -247,6 +287,8 @@ impl SweepSpec {
     pub fn product_size(&self) -> usize {
         let len = |n: usize| n.max(1);
         len(self.algos.len())
+            * len(self.dims.len())
+            * len(self.reprs.len())
             * len(self.workers.len())
             * len(self.taus.len())
             * len(self.batches.len())
@@ -262,6 +304,40 @@ impl SweepSpec {
         let base = &self.base;
         let algos: Vec<String> =
             if self.algos.is_empty() { vec![base.algo.clone()] } else { self.algos.clone() };
+        // The dims axis regenerates the dataset per cell, which a
+        // prebuilt base (one shared workload) cannot do.
+        if !self.dims.is_empty() && matches!(base.task, TaskSpec::Prebuilt(_)) {
+            return Err(SweepError::BadAxisValue {
+                axis: "dims".into(),
+                value: self.dims.join(","),
+                expected: "a non-prebuilt base task (the dims axis regenerates the dataset)"
+                    .into(),
+            });
+        }
+        // `None` = inherit the base task's shape (labelled from it).
+        let dims_axis: Vec<Option<(usize, usize)>> = if self.dims.is_empty() {
+            vec![None]
+        } else {
+            self.dims
+                .iter()
+                .map(|s| parse_dims(s).map(Some))
+                .collect::<Result<_, _>>()?
+        };
+        // `None` = inherit the base spec's repr knob.
+        let repr_axis: Vec<Option<ReprKind>> = if self.reprs.is_empty() {
+            vec![None]
+        } else {
+            self.reprs
+                .iter()
+                .map(|s| {
+                    ReprKind::parse(s).map(Some).ok_or_else(|| SweepError::BadAxisValue {
+                        axis: "repr".into(),
+                        value: s.clone(),
+                        expected: "auto | dense | factored".into(),
+                    })
+                })
+                .collect::<Result<_, _>>()?
+        };
         let workers =
             if self.workers.is_empty() { vec![base.workers] } else { self.workers.clone() };
         let taus = if self.taus.is_empty() { vec![base.tau] } else { self.taus.clone() };
@@ -311,6 +387,10 @@ impl SweepSpec {
         let mut cells = Vec::new();
         let mut seen = BTreeSet::new();
         for algo in &algos {
+            for (&dims, &repr) in dims_axis
+                .iter()
+                .flat_map(|d| repr_axis.iter().map(move |r| (d, r)))
+            {
             for &w in &workers {
                 for &tau in &taus {
                     for &batch in &batches {
@@ -345,8 +425,37 @@ impl SweepSpec {
                                                     (name.clone(), Some(plan))
                                                 }
                                             };
+                                            let mut spec = base
+                                                .clone()
+                                                .algo(algo)
+                                                .workers(w)
+                                                .tau(tau)
+                                                .power_iters(pi)
+                                                .transport(transport)
+                                                .maybe_straggler(straggler.to_straggler())
+                                                .maybe_fault_plan(fault_plan)
+                                                .seed(seed);
+                                            if let Some((d1, d2)) = dims {
+                                                spec.task = retask(&spec.task, d1, d2)?;
+                                            }
+                                            if let Some(r) = repr {
+                                                spec.repr = r;
+                                            }
+                                            match batch {
+                                                None => {} // keep base schedule
+                                                Some(BATCH_AUTO) => spec.batch = None,
+                                                Some(m) => {
+                                                    spec = spec.batch(BatchSchedule::Constant(m))
+                                                }
+                                            }
                                             let axes = vec![
                                                 ("algo".to_string(), algo.clone()),
+                                                ("dims".to_string(), dims_label(&spec.task)),
+                                                (
+                                                    "repr".to_string(),
+                                                    // resolved, never "auto"
+                                                    spec.resolved_repr().label().to_string(),
+                                                ),
                                                 ("workers".to_string(), w.to_string()),
                                                 ("tau".to_string(), tau.to_string()),
                                                 ("batch".to_string(), batch_label),
@@ -359,23 +468,6 @@ impl SweepSpec {
                                                 ("chaos".to_string(), chaos_label),
                                                 ("seed".to_string(), seed.to_string()),
                                             ];
-                                            let mut spec = base
-                                                .clone()
-                                                .algo(algo)
-                                                .workers(w)
-                                                .tau(tau)
-                                                .power_iters(pi)
-                                                .transport(transport)
-                                                .maybe_straggler(straggler.to_straggler())
-                                                .maybe_fault_plan(fault_plan)
-                                                .seed(seed);
-                                            match batch {
-                                                None => {} // keep base schedule
-                                                Some(BATCH_AUTO) => spec.batch = None,
-                                                Some(m) => {
-                                                    spec = spec.batch(BatchSchedule::Constant(m))
-                                                }
-                                            }
                                             let cell = Cell { axes, spec };
                                             if seen.insert(cell.id()) {
                                                 cells.push(cell);
@@ -388,8 +480,34 @@ impl SweepSpec {
                     }
                 }
             }
+            }
         }
         Ok(cells)
+    }
+}
+
+/// Apply a `dims` axis value to a generated task (prebuilt bases were
+/// rejected before expansion).
+fn retask(task: &TaskSpec, d1: usize, d2: usize) -> Result<TaskSpec, SweepError> {
+    match task {
+        TaskSpec::MatrixSensing { rank, n, noise_std, .. } => Ok(TaskSpec::MatrixSensing {
+            d1,
+            d2,
+            rank: *rank,
+            n: *n,
+            noise_std: *noise_std,
+        }),
+        TaskSpec::Pnn { n, .. } => {
+            if d1 != d2 {
+                return Err(SweepError::BadAxisValue {
+                    axis: "dims".into(),
+                    value: format!("{d1}x{d2}"),
+                    expected: "a square shape for the pnn task (DxD)".into(),
+                });
+            }
+            Ok(TaskSpec::Pnn { d: d1, n: *n })
+        }
+        TaskSpec::Prebuilt(_) => unreachable!("prebuilt bases rejected before expansion"),
     }
 }
 
@@ -440,6 +558,56 @@ mod tests {
         assert_eq!(cells[0].axis("batch"), Some("auto"));
         assert!(cells[0].spec.batch.is_none());
         assert_eq!(cells[1].spec.batch, Some(BatchSchedule::Constant(32)));
+    }
+
+    #[test]
+    fn dims_and_repr_axes_expand() {
+        let cells = SweepSpec::new("t", base())
+            .dims_axis(&["8x8", "12x6"])
+            .reprs(&["dense", "factored"])
+            .expand()
+            .unwrap();
+        assert_eq!(cells.len(), 4);
+        // dims outer, repr inner, expansion order stable
+        assert_eq!(cells[0].axis("dims"), Some("8x8"));
+        assert_eq!(cells[0].axis("repr"), Some("dense"));
+        assert_eq!(cells[1].axis("repr"), Some("factored"));
+        assert_eq!(cells[2].axis("dims"), Some("12x6"));
+        // dims rewrites the generated task shape
+        assert_eq!(cells[2].spec.task.dims(), (12, 6));
+        assert_eq!(cells[0].spec.task.dims(), (8, 8));
+        // repr axis sets the spec knob
+        assert!(matches!(cells[1].spec.repr, ReprKind::Factored));
+    }
+
+    #[test]
+    fn repr_auto_resolves_in_labels_and_dedups() {
+        // matrix-sensing base: auto resolves to dense, so auto + dense
+        // collapse to one cell and "auto" never reaches an artifact.
+        let cells =
+            SweepSpec::new("t", base()).reprs(&["auto", "dense"]).expand().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].axis("repr"), Some("dense"));
+    }
+
+    #[test]
+    fn dims_axis_rejects_prebuilt_base_and_bad_values() {
+        let err = SweepSpec::new("t", base().prebuilt())
+            .dims_axis(&["8x8"])
+            .expand()
+            .unwrap_err();
+        assert!(err.to_string().contains("dims"), "{err}");
+        for bad in ["8", "0x4", "4x0", "x", "axb"] {
+            assert!(parse_dims(bad).is_err(), "parse_dims accepted '{bad}'");
+        }
+        assert_eq!(parse_dims("48x32").unwrap(), (48, 32));
+        // pnn requires a square shape
+        let pnn_base = TrainSpec::new(TaskSpec::pnn(8, 100)).iterations(2);
+        let err = SweepSpec::new("t", pnn_base)
+            .dims_axis(&["8x6"])
+            .expand()
+            .unwrap_err();
+        assert!(err.to_string().contains("square"), "{err}");
     }
 
     #[test]

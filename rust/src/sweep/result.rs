@@ -33,6 +33,11 @@ pub struct CellResult {
     pub final_loss: f64,
     /// First time the relative loss reached the sweep's target, if set.
     pub time_to_target: Option<f64>,
+    /// Final-iterate rank of the last repeat (`Report::final_rank`).
+    pub rank: u64,
+    /// Peak atom count of the last repeat (`Report::peak_atoms`; 0 for
+    /// dense-representation cells).
+    pub peak_atoms: u64,
     /// Counter snapshot of the last repeat.
     pub counters: CounterSnapshot,
     /// Injected-fault accounting of the last repeat (zeros when the
@@ -109,6 +114,8 @@ impl CellResult {
                 "time_to_target".into(),
                 self.time_to_target.map(Json::Num).unwrap_or(Json::Null),
             ),
+            ("rank".into(), Json::Num(self.rank as f64)),
+            ("peak_atoms".into(), Json::Num(self.peak_atoms as f64)),
             ("counters".into(), counters),
             ("chaos".into(), chaos),
             ("curve".into(), curve),
@@ -190,6 +197,9 @@ impl CellResult {
             final_rel: num_field_or_nan(v, "final_rel")?,
             final_loss: num_field_or_nan(v, "final_loss")?,
             time_to_target,
+            // absent in pre-factored artifacts: default 0 rather than reject
+            rank: v.get("rank").and_then(Json::as_u64).unwrap_or(0),
+            peak_atoms: v.get("peak_atoms").and_then(Json::as_u64).unwrap_or(0),
             counters,
             chaos,
             curve,
@@ -250,7 +260,8 @@ impl SweepResult {
             .map(|c| c.axes.iter().map(|(k, _)| k.as_str()).collect())
             .unwrap_or_default();
         headers.extend([
-            "mean t(s)", "final rel", "t_target(s)", "dropped", "up B", "down B", "faults",
+            "mean t(s)", "final rel", "t_target(s)", "dropped", "up B", "down B", "rank",
+            "faults",
         ]);
         let mut t = Table::new(&format!("sweep '{}' ({} cells)", self.name, self.cells.len()), &headers);
         for c in &self.cells {
@@ -265,6 +276,7 @@ impl SweepResult {
             row.push(c.counters.dropped_updates.to_string());
             row.push(c.counters.bytes_up.to_string());
             row.push(c.counters.bytes_down.to_string());
+            row.push(c.rank.to_string());
             row.push(c.chaos.events_total().to_string());
             t.row(&row);
         }
@@ -352,6 +364,8 @@ mod tests {
             final_rel: 0.0123,
             final_loss: 0.456,
             time_to_target: if w > 1 { Some(0.25) } else { None },
+            rank: 7,
+            peak_atoms: 21,
             counters: CounterSnapshot {
                 grad_evals: 1000,
                 lmo_calls: 10,
@@ -395,6 +409,7 @@ mod tests {
             assert_eq!(a.spec_echo, b.spec_echo);
             assert_eq!(a.final_rel, b.final_rel);
             assert_eq!(a.time_to_target, b.time_to_target);
+            assert_eq!((a.rank, a.peak_atoms), (b.rank, b.peak_atoms));
             assert_eq!(a.counters, b.counters);
             assert_eq!(a.chaos, b.chaos);
             assert_eq!(a.curve, b.curve);
@@ -402,6 +417,29 @@ mod tests {
             assert_eq!(a.wall.mean_s, b.wall.mean_s);
             assert_eq!(a.wall.p90_s, b.wall.p90_s);
         }
+    }
+
+    #[test]
+    fn pre_factored_artifacts_default_rank_to_zero() {
+        // Artifacts written before the rank column existed must parse.
+        let res = SweepResult {
+            name: "old".into(),
+            target: None,
+            cells: vec![sample_cell("sfw-asyn", 1)],
+        };
+        let mut doc = res.to_json();
+        if let Json::Obj(top) = &mut doc {
+            if let Some((_, Json::Arr(cells))) = top.iter_mut().find(|(k, _)| k == "cells") {
+                for cell in cells {
+                    if let Json::Obj(fields) = cell {
+                        fields.retain(|(k, _)| k != "rank" && k != "peak_atoms");
+                    }
+                }
+            }
+        }
+        let back = SweepResult::from_json(&doc.render()).unwrap();
+        assert_eq!(back.cells[0].rank, 0);
+        assert_eq!(back.cells[0].peak_atoms, 0);
     }
 
     #[test]

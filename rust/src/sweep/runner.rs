@@ -122,6 +122,8 @@ fn run_cell(
         final_rel: report.final_relative(),
         final_loss: report.final_loss(),
         time_to_target: spec.target.and_then(|t| report.time_to_relative(t)),
+        rank: report.final_rank as u64,
+        peak_atoms: report.peak_atoms as u64,
         counters: report.snapshot(),
         chaos: report.chaos,
         curve: report.relative(),

@@ -132,13 +132,22 @@ impl Rng {
 
     /// Random unit vector (for LMO power-iteration restarts).
     pub fn unit_vector(&mut self, d: usize) -> Vec<f32> {
-        let mut v: Vec<f32> = (0..d).map(|_| self.normal_f32()).collect();
+        let mut v = vec![0.0f32; d];
+        self.fill_unit_vector(&mut v);
+        v
+    }
+
+    /// [`Rng::unit_vector`] into a caller-owned buffer — same draws, same
+    /// rounding, no allocation (the per-step LMO restart path).
+    pub fn fill_unit_vector(&mut self, v: &mut [f32]) {
+        for x in v.iter_mut() {
+            *x = self.normal_f32();
+        }
         let n = v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32;
         let n = if n == 0.0 { 1.0 } else { n };
-        for x in &mut v {
+        for x in v.iter_mut() {
             *x /= n;
         }
-        v
     }
 }
 

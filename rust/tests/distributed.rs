@@ -154,6 +154,7 @@ fn svrf_asyn_and_serial_svrf_reach_similar_quality() {
             batch: BatchSchedule::Linear { scale: 24.0, cap: 1_024 },
             eval_every: 10,
             seed: 552,
+            repr: sfw::linalg::Repr::Dense,
         },
         &counters,
         &trace,

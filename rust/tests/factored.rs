@@ -1,0 +1,221 @@
+//! The factored-iterate contract (ROADMAP "Iterate representation"):
+//!
+//! * same-seed dense-vs-factored runs agree to f32 tolerance for EVERY
+//!   registry solver, on every transport the solver supports;
+//! * the factored sfw-dist downlink is measurably below the dense one
+//!   (`bytes_down`), while the dense-gradient uplink stays identical;
+//! * re-compression keeps the iterate within tolerance under a tight
+//!   atom cap;
+//! * `ReprKind::Auto` resolves per objective (pnn factored, ms dense)
+//!   and the rank/peak-atom accounting lands in the `Report`.
+//!
+//! Deterministic worker counts are used where arrival order feeds the
+//! float reduction (async/SVA/DFW run W = 1; sfw-dist reduces in rank
+//! order, so W = 2 stays bit-deterministic).
+
+use sfw::linalg::{FactoredMat, Iterate, Mat, Repr};
+use sfw::session::{
+    registry, BatchSchedule, EngineKind, Report, ReprKind, Solver, TaskSpec, TrainSpec,
+    Transport,
+};
+use sfw::util::rng::Rng;
+
+fn ms_task() -> TaskSpec {
+    // non-square on purpose: catches row/col mixups in the factored path
+    TaskSpec::MatrixSensing { d1: 10, d2: 8, rank: 2, n: 1_200, noise_std: 0.05 }
+}
+
+fn base_spec(algo: &str, workers: usize, transport: Transport) -> TrainSpec {
+    TrainSpec::new(ms_task())
+        .algo(algo)
+        .workers(workers)
+        .tau(4)
+        .iterations(20)
+        .epochs(2) // svrf-asyn: 6 + 14 = 20 inner iterations
+        .batch(BatchSchedule::Constant(32))
+        .eval_every(5)
+        .power_iters(40)
+        .seed(7)
+        .transport(transport)
+}
+
+fn rel_frob_diff(a: &Mat, b: &Mat) -> f64 {
+    let mut d = a.clone();
+    d.axpy(-1.0, b);
+    d.frob_norm() / (1.0 + a.frob_norm())
+}
+
+fn assert_reports_agree(what: &str, dense: &Report, fact: &Report) {
+    let rel = rel_frob_diff(&dense.x, &fact.x);
+    assert!(rel < 2e-2, "{what}: dense vs factored iterate diverged (rel {rel})");
+    let dl = dense.final_loss();
+    let fl = fact.final_loss();
+    assert!(
+        (dl - fl).abs() < 2e-2 * (1.0 + dl.abs()),
+        "{what}: final loss {dl} vs {fl}"
+    );
+    // identical protocol traffic shape: same message counts both ways
+    let (sd, sf) = (dense.snapshot(), fact.snapshot());
+    assert_eq!(sd.iterations, sf.iterations, "{what}: iteration counts diverged");
+    assert_eq!(sd.grad_evals, sf.grad_evals, "{what}: gradient counts diverged");
+}
+
+#[test]
+fn every_registry_solver_agrees_dense_vs_factored_on_every_transport() {
+    for solver in registry().iter() {
+        let algo = solver.name();
+        // deterministic worker counts (see module docs)
+        let workers = if algo == "sfw-dist" { 2 } else { 1 };
+        for &transport in solver.supported_transports() {
+            let spec = base_spec(algo, workers, transport);
+            let dense = spec.clone().repr(ReprKind::Dense).run().unwrap_or_else(|e| {
+                panic!("{algo}/{transport:?} dense: {e}")
+            });
+            let fact = spec.clone().repr(ReprKind::Factored).run().unwrap_or_else(|e| {
+                panic!("{algo}/{transport:?} factored: {e}")
+            });
+            let what = format!("{algo}/{transport:?}");
+            assert_reports_agree(&what, &dense, &fact);
+            assert_eq!(dense.peak_atoms, 0, "{what}: dense run reported atoms");
+            assert!(fact.peak_atoms > 0, "{what}: factored run lost its atom accounting");
+            assert!(fact.final_rank > 0, "{what}: factored run lost its rank");
+            assert!(
+                fact.spec_echo.contains("repr=factored"),
+                "{what}: echo missing repr: {}",
+                fact.spec_echo
+            );
+        }
+    }
+}
+
+#[test]
+fn factored_dist_downlink_beats_dense_on_both_transports() {
+    for transport in [Transport::Local, Transport::Tcp] {
+        let spec = base_spec("sfw-dist", 2, transport);
+        let dense = spec.clone().repr(ReprKind::Dense).run().unwrap();
+        let fact = spec.clone().repr(ReprKind::Factored).run().unwrap();
+        let (sd, sf) = (dense.snapshot(), fact.snapshot());
+        assert!(
+            sf.bytes_down * 4 < sd.bytes_down,
+            "{transport:?}: factored downlink {} B not measurably below dense {} B",
+            sf.bytes_down,
+            sd.bytes_down
+        );
+        // uplink ships dense partial gradients in both modes
+        assert_eq!(sf.bytes_up, sd.bytes_up, "{transport:?}: uplink diverged");
+        assert_eq!(sf.msgs_down, sd.msgs_down, "{transport:?}: message counts diverged");
+    }
+}
+
+#[test]
+fn factored_dist_is_deterministic_across_transports() {
+    // Rank-order reduction + atoms-only broadcast: the factored run must
+    // stay bit-identical local vs tcp, like the dense one (pinned by
+    // tests/chaos.rs for dense).
+    let run = |transport| {
+        base_spec("sfw-dist", 2, transport)
+            .repr(ReprKind::Factored)
+            .run()
+            .unwrap()
+    };
+    let local = run(Transport::Local);
+    let tcp = run(Transport::Tcp);
+    assert_eq!(local.x.data, tcp.x.data, "factored dist diverged across transports");
+    let (sl, st) = (local.snapshot(), tcp.snapshot());
+    assert_eq!(sl.bytes_down, st.bytes_down);
+    assert_eq!(sl.bytes_up, st.bytes_up);
+}
+
+#[test]
+fn pnn_task_agrees_and_defaults_to_factored() {
+    let spec = TrainSpec::new(TaskSpec::pnn(10, 400))
+        .algo("sfw")
+        .iterations(15)
+        .batch(BatchSchedule::Constant(32))
+        .eval_every(5)
+        .power_iters(30)
+        .seed(9);
+    // Auto resolves factored for pnn
+    assert_eq!(spec.resolved_repr(), Repr::Factored);
+    assert!(spec.echo().contains("repr=factored"), "{}", spec.echo());
+    let auto = spec.clone().run().unwrap();
+    let dense = spec.clone().repr(ReprKind::Dense).run().unwrap();
+    assert!(auto.peak_atoms > 0);
+    assert_eq!(dense.peak_atoms, 0);
+    assert_reports_agree("pnn/sfw", &dense, &auto);
+    // ms defaults dense; and auto stays dense on the PJRT engine, whose
+    // artifacts take dense inputs (factored there would densify per step)
+    assert_eq!(TrainSpec::new(ms_task()).resolved_repr(), Repr::Dense);
+    assert_eq!(spec.clone().engine(EngineKind::Pjrt).resolved_repr(), Repr::Dense);
+    assert_eq!(
+        spec.engine(EngineKind::Pjrt).repr(ReprKind::Factored).resolved_repr(),
+        Repr::Factored,
+        "an explicit factored knob is honored on PJRT"
+    );
+}
+
+#[test]
+fn recompression_under_tight_cap_preserves_long_runs() {
+    // Drive a factored iterate far past its cap with the FW recursion
+    // and check it still matches the dense recursion — the SVD-merge
+    // re-compression is lossless up to f32 round-off.
+    let mut rng = Rng::new(31);
+    let mut fact = FactoredMat::with_cap(9, 7, 0); // floored to min+8 = 15
+    let mut dense = Mat::zeros(9, 7);
+    for k in 1..=120u64 {
+        let u = rng.unit_vector(9);
+        let v = rng.unit_vector(7);
+        let eta = 2.0 / (k as f32 + 1.0);
+        fact.fw_rank_one_update(eta, -1.0, &u, &v);
+        dense.fw_rank_one_update(eta, -1.0, &u, &v);
+    }
+    assert!(fact.atoms() <= fact.cap());
+    assert!(fact.peak_atoms() > fact.cap());
+    let rel = rel_frob_diff(&fact.to_dense(), &dense);
+    assert!(rel < 1e-3, "re-compression drifted: {rel}");
+    // the nuclear bound still certifies feasibility of the recursion
+    assert!(fact.nuclear_norm_bound() <= 1.0 + 1e-3);
+}
+
+#[test]
+fn operator_form_lmo_matches_dense_lmo() {
+    // power_iteration over the FactoredMat LinOp lands on the same
+    // leading pair as over its dense materialization.
+    let mut rng = Rng::new(33);
+    let mut f = FactoredMat::zeros(12, 9);
+    for _ in 0..6 {
+        f.push_atom(
+            rng.normal_f32(),
+            std::sync::Arc::new(rng.unit_vector(12)),
+            std::sync::Arc::new(rng.unit_vector(9)),
+        );
+    }
+    let d = f.to_dense();
+    let v0 = rng.unit_vector(9);
+    let sf = sfw::linalg::power_iteration(&f, &v0, 200, 1e-10);
+    let sd = sfw::linalg::power_iteration(&d, &v0, 200, 1e-10);
+    assert!(
+        (sf.sigma - sd.sigma).abs() < 1e-3 * (1.0 + sd.sigma.abs()),
+        "sigma {} vs {}",
+        sf.sigma,
+        sd.sigma
+    );
+    let align: f32 = sf.u.iter().zip(&sd.u).map(|(a, b)| a * b).sum();
+    assert!(align.abs() > 0.999, "u misaligned: {align}");
+}
+
+#[test]
+fn iterate_snapshots_are_cheap_in_factored_mode() {
+    // An evaluator snapshot of a factored iterate clones the atom list,
+    // not a d1*d2 array: the Arcs are shared.
+    let mut rng = Rng::new(35);
+    let mut it = Iterate::init_rank_one(Repr::Factored, 40, 30, 1.0, &mut rng);
+    for k in 1..=5u64 {
+        let u = rng.unit_vector(40);
+        let v = rng.unit_vector(30);
+        it.fw_rank_one_update(2.0 / (k as f32 + 1.0), -1.0, &u, &v);
+    }
+    let snap = it.clone();
+    assert_eq!(rel_frob_diff(&snap.to_dense(), &it.to_dense()), 0.0);
+    assert_eq!(snap.peak_atoms(), it.peak_atoms());
+}

@@ -173,6 +173,42 @@ fn prop_every_wire_message_roundtrips_with_exact_byte_accounting() {
             "dist header corrupted"
         );
         wire_bytes_exact(&up)?;
+
+        // --- factored dist downlink: atoms instead of the dense X ----
+        let n_entries = rng.next_below(4);
+        let fdown = DistDown::ComputeFactored {
+            k: rng.next_u64() % 1_000,
+            m_share: rng.next_below(512) as u32,
+            entries: (1..=n_entries as u64)
+                .map(|k| LogEntry {
+                    k,
+                    eta: rng.next_f32(),
+                    scale: -1.0,
+                    u: Arc::new((0..d1).map(|_| rng.normal_f32()).collect()),
+                    v: Arc::new((0..d2).map(|_| rng.normal_f32()).collect()),
+                })
+                .collect(),
+        };
+        match roundtrip(&fdown)? {
+            DistDown::ComputeFactored { entries: back, .. } => {
+                prop_assert!(back.len() == n_entries, "entry count corrupted");
+                if let DistDown::ComputeFactored { entries, .. } = &fdown {
+                    for (a, b) in back.iter().zip(entries) {
+                        prop_assert!(
+                            *a.u == *b.u && *a.v == *b.v && a.k == b.k,
+                            "factored entry corrupted"
+                        );
+                    }
+                }
+            }
+            _ => return Err("factored dist variant flipped".into()),
+        }
+        wire_bytes_exact(&fdown)?;
+        // the factored frame is O(d1 + d2) per entry, never O(d1 * d2)
+        prop_assert!(
+            fdown.wire_bytes() <= 21 + n_entries as u64 * (28 + 4 * (d1 + d2) as u64),
+            "factored downlink over budget"
+        );
         Ok(())
     });
 }

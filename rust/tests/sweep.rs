@@ -262,6 +262,39 @@ fn parallel_jobs_match_sequential_grid() {
 }
 
 #[test]
+fn smoke_scale_cells_pin_the_factored_downlink_saving() {
+    // `sfw sweep --smoke` appends these two cells to the artifact;
+    // scripts/check_smoke_bytes.py repeats this assertion on the JSON.
+    let result = SweepRunner::new().quiet(true).run(&SweepSpec::smoke_scale()).unwrap();
+    assert_eq!(result.cells.len(), 2);
+    let dense = result.find(&[("repr", "dense")]).expect("dense scale cell");
+    let fact = result.find(&[("repr", "factored")]).expect("factored scale cell");
+    assert_eq!(dense.axis("dims"), Some("48x32"));
+    // the factored downlink broadcasts atoms, not the 48x32 matrix
+    assert!(
+        fact.counters.bytes_down * 4 < dense.counters.bytes_down,
+        "factored downlink {} B not measurably below dense {} B",
+        fact.counters.bytes_down,
+        dense.counters.bytes_down
+    );
+    // uplink unchanged: both ship dense partial gradients
+    assert_eq!(fact.counters.bytes_up, dense.counters.bytes_up);
+    // same-seed runs agree on convergence to f32-level tolerance
+    assert!(
+        (fact.final_loss - dense.final_loss).abs() < 1e-2 * (1.0 + dense.final_loss.abs()),
+        "dense {} vs factored {} final loss",
+        dense.final_loss,
+        fact.final_loss
+    );
+    // representation accounting lands in the artifact
+    assert!(fact.rank > 0 && fact.peak_atoms > 0);
+    assert_eq!(dense.peak_atoms, 0);
+    // and survives the JSON round-trip the CI check reads
+    let back = sfw::sweep::SweepResult::from_json(&result.to_json().render()).unwrap();
+    assert_eq!(back.cells[1].rank, result.cells[1].rank);
+}
+
+#[test]
 fn smoke_sweep_contract() {
     // The CI pipeline depends on this exact shape (see ROADMAP "Sweeps &
     // CI" and "Chaos"): tiny deterministic grid, seed 42, W in {1, 2},

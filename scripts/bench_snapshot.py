@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""Run the hotpath microbenchmarks and snapshot them as BENCH_hotpath.json.
+
+Usage:
+    scripts/bench_snapshot.py [--out bench_out/BENCH_hotpath.json] [--skip-run]
+
+Runs `cargo bench --bench hotpath` (which writes the machine-readable
+series to bench_out/hotpath_raw.csv), converts it to a stable JSON
+document (schema `sfw.bench/v1`), and asserts the dense-vs-factored
+cells are present — the perf trajectory the ROADMAP's "make hot paths
+measurably faster" goal is tracked against.  `--skip-run` converts an
+existing hotpath_raw.csv (used by tests and by CI steps that already ran
+the bench).
+"""
+import csv
+import json
+import os
+import subprocess
+import sys
+
+out_path = "bench_out/BENCH_hotpath.json"
+skip_run = False
+args = sys.argv[1:]
+while args:
+    a = args.pop(0)
+    if a == "--out":
+        out_path = args.pop(0)
+    elif a == "--skip-run":
+        skip_run = True
+    else:
+        sys.exit(f"bench_snapshot.py: unknown arg '{a}' (known: --out, --skip-run)")
+
+raw_path = "bench_out/hotpath_raw.csv"
+if not skip_run:
+    subprocess.run(["cargo", "bench", "--bench", "hotpath"], check=True)
+
+if not os.path.exists(raw_path):
+    sys.exit(f"bench_snapshot.py: {raw_path} missing (bench did not run?)")
+
+rows = []
+with open(raw_path, newline="") as f:
+    for rec in csv.DictReader(f):
+        rows.append({
+            "op": rec["op"],
+            "mean_s": float(rec["mean_s"]),
+            "p50_s": float(rec["p50_s"]),
+            "p90_s": float(rec["p90_s"]),
+            "notes": rec["notes"],
+        })
+
+assert rows, f"{raw_path}: no benchmark rows"
+ops = [r["op"] for r in rows]
+for needed in ("lmo 196x196 dense operator",
+               "lmo 196x196 factored operator k=64",
+               "pnn grad m=256 factored k=16"):
+    assert needed in ops, f"hotpath bench lost its '{needed}' cell (have: {ops})"
+
+doc = {
+    "schema": "sfw.bench/v1",
+    "bench": "hotpath",
+    "rows": rows,
+}
+os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+with open(out_path, "w") as f:
+    json.dump(doc, f, indent=1, sort_keys=True)
+    f.write("\n")
+print(f"OK: {len(rows)} hotpath rows -> {out_path}")

@@ -1,12 +1,17 @@
 #!/usr/bin/env python3
-"""Assert the smoke-sweep artifact accounts comm bytes in every cell and
-injected chaos events in every chaos cell.
+"""Assert the smoke-sweep artifact accounts comm bytes in every cell,
+injected chaos events in every chaos cell, and the factored-downlink
+saving on the scale cells.
 
 Shared by scripts/ci.sh --smoke and .github/workflows/ci.yml so the
 check cannot drift between the two.  Every smoke cell is a distributed
 run, so zero bytes_up/bytes_down means the transport accounting broke;
 every `chaos=flaky-net` cell runs under fault injection, so zero
-injected events means the chaos layer silently stopped wrapping links.
+injected events means the chaos layer silently stopped wrapping links;
+and the sfw-dist scale cells (one dense, one factored, same seed/shape)
+pin the representation's headline saving: the factored atoms-only
+broadcast must be measurably below the dense X broadcast on
+`bytes_down` while the (dense-gradient) uplink stays equal.
 """
 import json
 import sys
@@ -26,5 +31,22 @@ clean_noisy = [c["axes"] for c in cells
                if c["axes"].get("chaos") == "none" and sum(c["chaos"].values()) > 0]
 assert not clean_noisy, f"clean cells with injected events: {clean_noisy}"
 
+# --- factored-downlink scale cells -----------------------------------------
+scale = [c for c in cells
+         if c["axes"].get("algo") == "sfw-dist" and c["axes"].get("dims") == "48x32"]
+by_repr = {c["axes"].get("repr"): c for c in scale}
+assert "dense" in by_repr and "factored" in by_repr, (
+    f"{path}: smoke grid lost its dense/factored scale cells (have "
+    f"{sorted(by_repr)})")
+dense, fact = by_repr["dense"], by_repr["factored"]
+dd, fd = dense["counters"]["bytes_down"], fact["counters"]["bytes_down"]
+assert fd * 4 < dd, (
+    f"factored downlink {fd} B not measurably below dense {dd} B")
+assert fact["counters"]["bytes_up"] == dense["counters"]["bytes_up"], (
+    "uplink should be identical (dense gradients both ways)")
+assert fact.get("rank", 0) > 0 and fact.get("peak_atoms", 0) > 0, (
+    "factored scale cell lost its rank/peak_atoms accounting")
+
 print(f"OK: {len(cells)} cells in {path}, bytes nonzero in all, "
-      f"events nonzero in {len(chaos_cells)} chaos cell(s)")
+      f"events nonzero in {len(chaos_cells)} chaos cell(s), "
+      f"factored downlink {fd} B vs dense {dd} B")

@@ -6,8 +6,13 @@
 #   scripts/ci.sh --smoke    additionally run the deterministic smoke sweep
 #                            (writes bench_out/sweep_smoke.json; the grid
 #                            includes one flaky-net chaos cell per
-#                            TCP-capable solver, and the artifact check
-#                            asserts nonzero injected-event counts there)
+#                            TCP-capable solver plus the dense-vs-factored
+#                            scale cells, and the artifact check asserts
+#                            nonzero injected-event counts and the
+#                            factored-downlink saving)
+#   scripts/ci.sh --bench    additionally run the hotpath microbenchmarks
+#                            and write bench_out/BENCH_hotpath.json (the
+#                            perf trajectory; scripts/bench_snapshot.py)
 #
 # Runs: cargo build --release, cargo test -q, cargo bench --no-run and
 # cargo build --examples (so benches/examples can't silently rot), then
@@ -19,12 +24,14 @@ cd "$(dirname "$0")/.."
 
 fast=0
 smoke=0
+bench=0
 for arg in "$@"; do
     case "$arg" in
         --fast) fast=1 ;;
         --smoke) smoke=1 ;;
+        --bench) bench=1 ;;
         *)
-            echo "ci.sh: unknown flag '$arg' (known: --fast --smoke)" >&2
+            echo "ci.sh: unknown flag '$arg' (known: --fast --smoke --bench)" >&2
             exit 2
             ;;
     esac
@@ -88,6 +95,20 @@ if [ "$smoke" -eq 1 ]; then
         echo "ci.sh: python3 unavailable; skipping smoke-artifact byte check"
     fi
     echo "ci.sh: smoke artifact at bench_out/sweep_smoke.json"
+fi
+
+if [ "$bench" -eq 1 ]; then
+    echo "== hotpath bench snapshot (scripts/bench_snapshot.py) =="
+    if command -v python3 >/dev/null 2>&1; then
+        python3 scripts/bench_snapshot.py
+        test -s bench_out/BENCH_hotpath.json || {
+            echo "ci.sh: bench snapshot did not write bench_out/BENCH_hotpath.json" >&2
+            exit 1
+        }
+    else
+        echo "ci.sh: python3 unavailable; running the bench without the JSON snapshot"
+        cargo bench --bench hotpath
+    fi
 fi
 
 echo "ci.sh: OK"
