@@ -94,6 +94,9 @@ enum CorruptFate<Up> {
 fn reencode<W: Wire>(msg: &W) -> W {
     let mut payload = Vec::new();
     msg.encode(&mut payload);
+    // lint: allow(panic-free): encode/decode round-tripping is exactly the
+    // invariant the wire property tests pin for every Wire type; a failure
+    // here is a codec bug that must abort the chaos run loudly.
     W::decode(msg.tag(), &payload).expect("re-decoding an encoded message cannot fail")
 }
 

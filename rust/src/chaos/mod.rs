@@ -73,6 +73,12 @@
 //!     .expect("train under chaos");
 //! println!("injected events: {}", report.chaos.events_total());
 //! ```
+//!
+//! The chaos suite is the *dynamic* half of the robustness story; the
+//! *static* half is `sfw lint` ([`crate::lint`]), which machine-checks
+//! that this module and the protocol layer stay panic-free outside
+//! tests and keep their wire types covered by the round-trip property
+//! tests.
 
 pub mod config;
 pub mod counters;

@@ -6,6 +6,12 @@
 use crate::comms::WireError;
 use crate::linalg::Mat;
 
+/// Decode one little-endian f32 from an exact 4-byte chunk (the chunk
+/// size is guaranteed by `chunks_exact(4)` at the call sites).
+fn le_f32(c: &[u8]) -> f32 {
+    f32::from_le_bytes([c[0], c[1], c[2], c[3]])
+}
+
 /// Appends little-endian fields to a frame payload buffer.
 pub struct Enc<'a>(pub &'a mut Vec<u8>);
 
@@ -64,17 +70,29 @@ impl<'a> Dec<'a> {
         Ok(s)
     }
 
+    /// Bounds-checked 4-byte read as an array (the panic-free spelling
+    /// of `take(4)?.try_into().unwrap()`).
+    fn take4(&mut self) -> Result<[u8; 4], WireError> {
+        let s = self.take(4)?;
+        Ok([s[0], s[1], s[2], s[3]])
+    }
+
+    fn take8(&mut self) -> Result<[u8; 8], WireError> {
+        let s = self.take(8)?;
+        Ok([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]])
+    }
+
     pub fn u32(&mut self) -> Result<u32, WireError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take4()?))
     }
     pub fn u64(&mut self) -> Result<u64, WireError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take8()?))
     }
     pub fn f32(&mut self) -> Result<f32, WireError> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(self.take4()?))
     }
     pub fn f64(&mut self) -> Result<f64, WireError> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(f64::from_le_bytes(self.take8()?))
     }
 
     /// Length-prefixed f32 vector.
@@ -82,10 +100,7 @@ impl<'a> Dec<'a> {
         let n = self.u32()? as usize;
         let nb = n.checked_mul(4).ok_or(WireError::Malformed("vector length overflow"))?;
         let bytes = self.take(nb)?;
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        Ok(bytes.chunks_exact(4).map(le_f32).collect())
     }
 
     /// Dense row-major matrix (see [`Enc::mat`]).
@@ -97,10 +112,7 @@ impl<'a> Dec<'a> {
             .and_then(|n| n.checked_mul(4))
             .ok_or(WireError::Malformed("matrix dims overflow"))?;
         let bytes = self.take(nb)?;
-        let data = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
+        let data = bytes.chunks_exact(4).map(le_f32).collect();
         Ok(Mat::from_vec(rows, cols, data))
     }
 

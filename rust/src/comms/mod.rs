@@ -52,6 +52,15 @@
 //! table for the semantics and replay guarantees, and
 //! `rust/tests/chaos.rs` for the per-solver conformance matrix.
 //!
+//! # Static guarantees
+//!
+//! This module is a `sfw lint` hot module ([`crate::lint`] has the rule
+//! table and the allow grammar): non-test code here must be panic-free
+//! (decode errors are [`WireError`] values, never unwraps), every
+//! `Wire` implementor must appear in the round-trip property tests, and
+//! no mutex guard may be held across a `send`/`recv`.  CI runs the pass
+//! on every push.
+//!
 //! [`metrics::Counters`]: crate::metrics::Counters
 
 pub mod codec;

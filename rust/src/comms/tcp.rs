@@ -31,7 +31,7 @@ use crate::metrics::Counters;
 fn read_frame(s: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
     let mut head = [0u8; FRAME_HEADER];
     s.read_exact(&mut head)?;
-    let len = u32::from_le_bytes(head[..4].try_into().unwrap()) as usize;
+    let len = u32::from_le_bytes([head[0], head[1], head[2], head[3]]) as usize;
     // reject a corrupt length prefix BEFORE allocating for it
     if len > MAX_FRAME_LEN {
         return Err(io_invalid(format!(
@@ -59,7 +59,7 @@ fn decode_hello(tag: u8, payload: &[u8]) -> Result<usize, WireError> {
     if payload.len() != 4 {
         return Err(WireError::Malformed("hello payload must be a u32 rank"));
     }
-    Ok(u32::from_le_bytes(payload.try_into().unwrap()) as usize)
+    Ok(u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize)
 }
 
 fn io_invalid<E: Into<Box<dyn std::error::Error + Send + Sync>>>(e: E) -> std::io::Error {
@@ -179,12 +179,13 @@ pub fn tcp_master_on_with<Up: Wire, Down: Wire>(
         });
         accepted += 1;
     }
-    Ok(TcpMaster {
-        rx,
-        write_halves: write_halves.into_iter().map(Option::unwrap).collect(),
-        counters,
-        _down: PhantomData,
-    })
+    // The accept loop only exits once every rank slot is filled, but a
+    // logic slip here must surface as an error, not a panic mid-accept.
+    let write_halves: Vec<TcpStream> = write_halves.into_iter().flatten().collect();
+    if write_halves.len() != workers {
+        return Err(io_invalid("accept loop exited with unfilled worker rank slots"));
+    }
+    Ok(TcpMaster { rx, write_halves, counters, _down: PhantomData })
 }
 
 /// Bind `addr` and accept exactly `workers` connections.  Returns the

@@ -121,7 +121,9 @@ pub(crate) fn run_dfw_power_impl(obj: Arc<dyn Objective>, opts: &DfwOptions) -> 
     let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut Rng::new(opts.seed));
     evaluator.submit(trace.elapsed(), 0, x.clone());
     let mut rng = Rng::new(opts.seed ^ 0xDF);
-    for t in 1..=opts.iterations {
+    // A dead worker or an out-of-phase reply ends the run early (with the
+    // partial trace) instead of panicking the coordinator thread.
+    'train: for t in 1..=opts.iterations {
         // 1. fresh local gradients at X_t (X broadcast: dense down)
         let xa = Arc::new(x.to_dense());
         for tx in &down_txs {
@@ -129,7 +131,10 @@ pub(crate) fn run_dfw_power_impl(obj: Arc<dyn Objective>, opts: &DfwOptions) -> 
             let _ = tx.send(Req::NewGrad { x: xa.clone() });
         }
         for _ in 0..w_count {
-            let _ = up_rx.recv().expect("worker died");
+            if up_rx.recv().is_err() {
+                eprintln!("dfw-power: worker died at iteration {t}; stopping early");
+                break 'train;
+            }
         }
         // 2. O(t) distributed power-iteration rounds
         let rounds = opts.rounds_base + (opts.rounds_slope * t as f64).floor() as u64;
@@ -144,14 +149,21 @@ pub(crate) fn run_dfw_power_impl(obj: Arc<dyn Objective>, opts: &DfwOptions) -> 
             }
             u.iter_mut().for_each(|z| *z = 0.0);
             for _ in 0..w_count {
-                match up_rx.recv().expect("worker died") {
-                    (_, Rep::Mv(part)) => {
+                match up_rx.recv() {
+                    Ok((_, Rep::Mv(part))) => {
                         counters.add_up((d1 * 4) as u64);
                         for (a, b) in u.iter_mut().zip(&part) {
                             *a += b;
                         }
                     }
-                    _ => panic!("protocol violation"),
+                    Ok(_) => {
+                        eprintln!("dfw-power: protocol violation in Mv round at t={t}; stopping");
+                        break 'train;
+                    }
+                    Err(_) => {
+                        eprintln!("dfw-power: worker died at iteration {t}; stopping early");
+                        break 'train;
+                    }
                 }
             }
             normalize(&mut u);
@@ -163,14 +175,21 @@ pub(crate) fn run_dfw_power_impl(obj: Arc<dyn Objective>, opts: &DfwOptions) -> 
             }
             v.iter_mut().for_each(|z| *z = 0.0);
             for _ in 0..w_count {
-                match up_rx.recv().expect("worker died") {
-                    (_, Rep::Mtv(part)) => {
+                match up_rx.recv() {
+                    Ok((_, Rep::Mtv(part))) => {
                         counters.add_up((d2 * 4) as u64);
                         for (a, b) in v.iter_mut().zip(&part) {
                             *a += b;
                         }
                     }
-                    _ => panic!("protocol violation"),
+                    Ok(_) => {
+                        eprintln!("dfw-power: protocol violation in Mtv round at t={t}; stopping");
+                        break 'train;
+                    }
+                    Err(_) => {
+                        eprintln!("dfw-power: worker died at iteration {t}; stopping early");
+                        break 'train;
+                    }
                 }
             }
             normalize(&mut v);

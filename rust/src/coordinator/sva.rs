@@ -87,7 +87,9 @@ where
 
     let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut Rng::new(opts.seed));
     evaluator.submit(trace.elapsed(), 0, x.clone());
-    for k in 1..=opts.iterations {
+    // A dead worker ends the run early (with the partial trace) instead
+    // of panicking the coordinator thread.
+    'train: for k in 1..=opts.iterations {
         let m = opts.batch.m(k).max(opts.workers);
         let m_share = m / opts.workers;
         let xa = Arc::new(x.to_dense());
@@ -100,7 +102,10 @@ where
         let mut v_avg = vec![0.0f32; d2];
         let mut first: Option<Rep> = None;
         for _ in 0..opts.workers {
-            let rep = up_rx.recv().expect("worker died");
+            let Ok(rep) = up_rx.recv() else {
+                eprintln!("sva: worker died at iteration {k}; stopping early");
+                break 'train;
+            };
             counters.add_up(rank1_bytes); // rank-one upload (the SVA selling point)
             let sgn = match &first {
                 None => 1.0f32,

@@ -63,8 +63,9 @@ impl UpdateLog {
     /// epoch: eta is indexed by the INNER iteration, not the global one).
     pub fn append_custom(&mut self, u: Vec<f32>, v: Vec<f32>, eta: f32, scale: f32) -> &LogEntry {
         let k = self.t_m() + 1;
+        let idx = self.entries.len();
         self.entries.push(LogEntry { k, eta, scale, u: Arc::new(u), v: Arc::new(v) });
-        self.entries.last().unwrap()
+        &self.entries[idx]
     }
 
     /// The catch-up slice a worker at iteration `t_w` needs to reach the

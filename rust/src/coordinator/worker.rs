@@ -102,7 +102,10 @@ pub fn run_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: StepEngine + 
                 t_w = replay_after(&mut x, &entries, t_w);
             }
             Some(MasterMsg::UpdateW { .. }) => {
-                unreachable!("plain SFW-asyn master never sends UpdateW")
+                // Plain SFW-asyn masters never send UpdateW (it belongs to
+                // the SVRF epoch protocol).  Tolerate rather than crash:
+                // ignore it and resubmit at the unchanged t_w.
+                eprintln!("worker {}: ignoring unexpected UpdateW", opts.worker_id);
             }
             Some(MasterMsg::Stop) | None => return,
         }

@@ -59,6 +59,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod linalg;
+pub mod lint;
 pub mod metrics;
 pub mod objective;
 pub mod runtime;

@@ -1,0 +1,8 @@
+//! Fixture: an allow comment without its mandatory reason.  The allow
+//! still suppresses the panic-free finding underneath it, so the file
+//! must trigger exactly `bad-allow`.
+
+pub fn newest_entry(entries: &[u64]) -> u64 {
+    // lint: allow(panic-free)
+    *entries.last().unwrap()
+}

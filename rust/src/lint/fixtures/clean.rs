@@ -1,0 +1,26 @@
+//! Fixture: every annotation mechanism used correctly — a justified
+//! allow, a SAFETY comment, and a guard dropped before I/O.  Must
+//! trigger no rule at all, even under the hot-module test config.
+
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+pub struct RawHandle(*mut u8);
+
+// SAFETY: the pointer is only ever dereferenced by the thread that owns
+// the handle's session; sending the handle moves that ownership whole.
+unsafe impl Send for RawHandle {}
+
+pub fn first_worker(ranks: &[u32]) -> u32 {
+    // lint: allow(panic-free): callers validate rank lists at spec time,
+    // so an empty list cannot reach this helper.
+    *ranks.first().expect("validated non-empty")
+}
+
+pub fn publish(state: &Mutex<u64>, tx: &Sender<u64>) {
+    let snapshot = {
+        let Ok(guard) = state.lock() else { return };
+        *guard
+    };
+    let _ = tx.send(snapshot);
+}

@@ -1,0 +1,8 @@
+//! Fixture: an audited error enum with a variant nothing constructs or
+//! matches (the test config audits `GhostError`).  Must trigger exactly
+//! `error-variant-liveness`.
+
+#[derive(Debug)]
+pub enum GhostError {
+    Vanished(String),
+}

@@ -1,0 +1,11 @@
+//! Fixture: a Mutex guard held across a channel send — a blocked peer
+//! would keep the lock pinned indefinitely.  Must trigger exactly
+//! `no-lock-across-io`.
+
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+pub fn publish(state: &Mutex<u64>, tx: &Sender<u64>) {
+    let Ok(guard) = state.lock() else { return };
+    let _ = tx.send(*guard);
+}

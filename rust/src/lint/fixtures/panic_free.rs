@@ -1,0 +1,6 @@
+//! Fixture: a bare panic path in (what the test config treats as) a
+//! protocol hot module.  Must trigger exactly `panic-free`.
+
+pub fn first_worker(ranks: &[u32]) -> u32 {
+    *ranks.first().unwrap()
+}

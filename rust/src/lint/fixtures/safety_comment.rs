@@ -1,0 +1,6 @@
+//! Fixture: an `unsafe` impl with no adjacent `// SAFETY:` argument.
+//! Must trigger exactly `safety-comment`.
+
+pub struct RawHandle(*mut u8);
+
+unsafe impl Send for RawHandle {}

@@ -1,0 +1,26 @@
+//! Fixture: a `Wire` implementor that never appears in the round-trip
+//! property tests (the test feeds an empty property corpus).  Must
+//! trigger exactly `wire-coverage`.
+
+use crate::comms::{Wire, WireError};
+
+pub struct GhostMsg {
+    pub rank: u32,
+}
+
+impl Wire for GhostMsg {
+    fn tag(&self) -> u8 {
+        0x7F
+    }
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.rank.to_le_bytes());
+    }
+
+    fn decode(_tag: u8, payload: &[u8]) -> Result<Self, WireError> {
+        if payload.len() != 4 {
+            return Err(WireError::Malformed("ghost payload must be a u32"));
+        }
+        Ok(GhostMsg { rank: u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) })
+    }
+}

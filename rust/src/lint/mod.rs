@@ -1,0 +1,288 @@
+//! `sfw lint` — the repo-native static-analysis pass.
+//!
+//! The paper's central claim (asynchronous SFW keeps the vanilla rate
+//! while tolerating stragglers) rests on the master/worker protocols
+//! never wedging or panicking under adversarial timing.  The chaos
+//! conformance suite enforces that *dynamically*; this module is the
+//! *static* gate: a dependency-free line/token scanner over `rust/src`
+//! that machine-checks the invariants the protocol layer is written
+//! against, so regressions fail `scripts/ci.sh` on every container —
+//! unlike clippy/rustfmt, which the style pass skips when absent.
+//!
+//! Run it as `cargo run --release -- lint`: prints a human table,
+//! writes `bench_out/lint_report.json` (schema `sfw.lint/v1`), and
+//! exits nonzero on any violation.
+//!
+//! # Rules
+//!
+//! | rule | scope | checks |
+//! |------|-------|--------|
+//! | `panic-free` | non-test code of the hot modules (`comms`, `coordinator`, `chaos`, `session`, `algo`) | no `.unwrap()` / `.expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` — a master or worker must degrade, never abort |
+//! | `safety-comment` | all of `rust/src` | every `unsafe` block/impl has a `// SAFETY:` comment on the same line or within the preceding 6 lines |
+//! | `wire-coverage` | all of `rust/src` | every `impl Wire for T` type is named in the wire round-trip property tests (`rust/tests/properties.rs`) |
+//! | `no-lock-across-io` | non-test code of the hot modules | no `send(` / `recv(` while a `Mutex` guard bound earlier in the same scope is live (a blocked peer would hold the lock indefinitely) |
+//! | `error-variant-liveness` | `WireError` / `SessionError` | every variant is both constructed and matched somewhere in `rust/src` + `rust/tests` (`#[from]` / `#[error(transparent)]` count as constructed) |
+//! | `bad-allow` | everywhere, including tests | every allow comment names a known rule and carries a reason |
+//!
+//! # Suppression grammar
+//!
+//! A finding is suppressed only by an adjacent allow comment with a
+//! mandatory reason (the rule name is one of the table above):
+//!
+//! ```text
+//! lint: allow(panic-free): <why this invariant makes the panic unreachable>
+//! ```
+//!
+//! written as a plain `//` comment either trailing the offending line or
+//! on its own line(s) directly above it (doc comments are prose and are
+//! never parsed as allows).  An allow with an unknown rule name or a
+//! missing reason is itself a `bad-allow` violation — it still
+//! suppresses its target so the actionable finding is the allow itself,
+//! not a duplicate report of what it covers.
+//!
+//! # Heuristics, honestly
+//!
+//! The scanner is token-level by design (no syn/proc-macro in the
+//! offline crate set) — see [`scan`] for the exact lexing rules.  Known
+//! blind spots: `#[cfg(test)]` detection is brace-depth based (an
+//! attribute and its `{` must be within the same item header), pattern
+//! vs construction classification of `Enum::Variant` looks at `=>`
+//! position and a 3-line `matches!` window, and guard tracking keys on
+//! `let` + `.lock()` on one line.  Every blind spot fails *loud* (a
+//! false violation you annotate) rather than silent (a missed one).
+
+pub mod report;
+pub mod scan;
+
+pub use report::LintReport;
+pub use scan::{scan_source, scan_test_uses, FileScan};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// The enforced rules.  [`Rule::BadAllow`] is the meta-rule for
+/// malformed suppression comments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    PanicFree,
+    SafetyComment,
+    WireCoverage,
+    NoLockAcrossIo,
+    ErrorVariantLiveness,
+    BadAllow,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 6] = [
+        Rule::PanicFree,
+        Rule::SafetyComment,
+        Rule::WireCoverage,
+        Rule::NoLockAcrossIo,
+        Rule::ErrorVariantLiveness,
+        Rule::BadAllow,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::PanicFree => "panic-free",
+            Rule::SafetyComment => "safety-comment",
+            Rule::WireCoverage => "wire-coverage",
+            Rule::NoLockAcrossIo => "no-lock-across-io",
+            Rule::ErrorVariantLiveness => "error-variant-liveness",
+            Rule::BadAllow => "bad-allow",
+        }
+    }
+
+    /// The allow-grammar lookup ([`Rule::BadAllow`] cannot be allowed).
+    pub fn from_name(name: &str) -> Option<Rule> {
+        Rule::ALL[..5].iter().copied().find(|r| r.name() == name)
+    }
+}
+
+/// One finding.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: Rule,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Violation {
+    pub fn new(rule: Rule, path: &str, line: usize, message: String) -> Violation {
+        Violation { rule, path: path.to_string(), line, message }
+    }
+}
+
+/// What to scan and how.  [`LintConfig::repo`] is the configuration the
+/// `sfw lint` subcommand and CI run; tests build narrower ones to drive
+/// single fixtures through single rules.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// Path substrings marking the protocol/solver hot modules
+    /// (`panic-free` and `no-lock-across-io` scope).
+    pub hot_modules: Vec<String>,
+    /// Enums whose variants the liveness rule audits.
+    pub error_enums: Vec<String>,
+    /// Path substrings excluded from the walk (the rule fixtures are
+    /// deliberate violations).
+    pub skip: Vec<String>,
+    /// File names (under the tests root) whose content satisfies
+    /// `wire-coverage` by naming the implementing type.
+    pub property_tests: Vec<String>,
+}
+
+impl LintConfig {
+    pub fn repo() -> LintConfig {
+        LintConfig {
+            hot_modules: ["comms", "coordinator", "chaos", "session", "algo"]
+                .iter()
+                .map(|m| format!("/{m}/"))
+                .collect(),
+            error_enums: vec!["WireError".to_string(), "SessionError".to_string()],
+            skip: vec!["lint/fixtures".to_string()],
+            property_tests: vec!["properties.rs".to_string()],
+        }
+    }
+
+    /// Is `path` inside a hot module?  Matched on `/<module>/` path
+    /// segments, with a virtual leading slash so `comms/mod.rs` given
+    /// relative to the src root still matches.
+    pub fn is_hot(&self, path: &str) -> bool {
+        let slashed = format!("/{}", path.replace('\\', "/"));
+        self.hot_modules.iter().any(|m| slashed.contains(m.as_str()))
+    }
+}
+
+/// Aggregated inputs for the cross-file rules.
+#[derive(Default)]
+pub struct CrossFileInput {
+    pub scans: Vec<FileScan>,
+    /// Concatenated content of the wire round-trip property tests.
+    pub property_text: String,
+    /// `Enum::Variant` uses collected from test files.
+    pub test_uses: Vec<scan::VariantUse>,
+}
+
+/// Evaluate `wire-coverage` and `error-variant-liveness` over every
+/// file's facts.
+pub fn cross_file_violations(input: &CrossFileInput, paths: &[String]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    // wire-coverage: the implementing type must be named in the
+    // round-trip property tests
+    for (scan, path) in input.scans.iter().zip(paths) {
+        for (ty, line) in &scan.wire_impls {
+            if !input.property_text.contains(ty.as_str()) {
+                out.push(Violation::new(
+                    Rule::WireCoverage,
+                    path,
+                    *line,
+                    format!("`{ty}` implements Wire but never appears in the round-trip property tests"),
+                ));
+            }
+        }
+    }
+    // error-variant-liveness: constructed AND matched somewhere
+    let mut constructed: HashMap<(String, String), bool> = HashMap::new();
+    let mut matched: HashMap<(String, String), bool> = HashMap::new();
+    let all_uses = input
+        .scans
+        .iter()
+        .flat_map(|s| s.uses.iter())
+        .chain(input.test_uses.iter());
+    for u in all_uses {
+        let key = (u.enum_name.clone(), u.variant.clone());
+        if u.matched {
+            matched.insert(key, true);
+        } else {
+            constructed.insert(key, true);
+        }
+    }
+    for scan in &input.scans {
+        for v in &scan.variants {
+            if v.allowed {
+                continue;
+            }
+            let key = (v.enum_name.clone(), v.variant.clone());
+            let is_constructed =
+                v.constructed_via_attr || constructed.contains_key(&key);
+            let is_matched = matched.contains_key(&key);
+            let missing = match (is_constructed, is_matched) {
+                (true, true) => continue,
+                (false, true) => "never constructed",
+                (true, false) => "never matched",
+                (false, false) => "never constructed nor matched",
+            };
+            out.push(Violation::new(
+                Rule::ErrorVariantLiveness,
+                &v.path,
+                v.line,
+                format!("{}::{} is {missing} (dead error surface)", v.enum_name, v.variant),
+            ));
+        }
+    }
+    out
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for determinism,
+/// minus the configured skip list.
+fn walk_rs(root: &Path, skip: &[String], out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(root)?.map(|e| e.map(|e| e.path())).collect::<Result<_, _>>()?;
+    entries.sort();
+    for p in entries {
+        let norm = p.to_string_lossy().replace('\\', "/");
+        if skip.iter().any(|s| norm.contains(s.as_str())) {
+            continue;
+        }
+        if p.is_dir() {
+            walk_rs(&p, skip, out)?;
+        } else if norm.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the tree: per-file rules over every `.rs` file under
+/// `src_root`, cross-file rules fed by the property tests and the
+/// variant uses under `tests_root`.
+pub fn lint_repo(src_root: &str, tests_root: &str, cfg: &LintConfig) -> std::io::Result<LintReport> {
+    let mut files = Vec::new();
+    walk_rs(Path::new(src_root), &cfg.skip, &mut files)?;
+
+    let mut input = CrossFileInput::default();
+    let mut paths = Vec::new();
+    let mut violations = Vec::new();
+    let mut suppressed = 0usize;
+    for f in &files {
+        let src = std::fs::read_to_string(f)?;
+        let label = f.to_string_lossy().replace('\\', "/");
+        let scan = scan_source(&label, &src, cfg);
+        violations.extend(scan.violations.iter().cloned());
+        suppressed += scan.suppressed.len();
+        paths.push(label);
+        input.scans.push(scan);
+    }
+
+    let mut test_files = Vec::new();
+    if Path::new(tests_root).is_dir() {
+        walk_rs(Path::new(tests_root), &cfg.skip, &mut test_files)?;
+    }
+    for f in &test_files {
+        let src = std::fs::read_to_string(f)?;
+        let name = f.file_name().map(|n| n.to_string_lossy().to_string()).unwrap_or_default();
+        if cfg.property_tests.iter().any(|p| *p == name) {
+            input.property_text.push_str(&src);
+        }
+        input.test_uses.extend(scan_test_uses(&src, cfg));
+    }
+
+    violations.extend(cross_file_violations(&input, &paths));
+    violations.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    Ok(LintReport {
+        files_scanned: files.len() + test_files.len(),
+        suppressed,
+        violations,
+    })
+}

@@ -1,0 +1,91 @@
+//! Lint output: the human table `sfw lint` prints and the
+//! machine-readable `bench_out/lint_report.json` artifact (schema
+//! `sfw.lint/v1`) the CI lint job uploads.
+
+use crate::lint::{Rule, Violation};
+use crate::util::json::Json;
+
+/// The result of one lint run over the tree.
+pub struct LintReport {
+    /// `.rs` files scanned (src + tests, minus the fixture skip list).
+    pub files_scanned: usize,
+    /// Findings suppressed by allow comments.
+    pub suppressed: usize,
+    /// Findings that survive suppression, sorted by (path, line).
+    pub violations: Vec<Violation>,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    fn count(&self, rule: Rule) -> usize {
+        self.violations.iter().filter(|v| v.rule == rule).count()
+    }
+
+    /// The human table: per-rule counts, then every finding with its
+    /// clickable `path:line` location.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str("rule                      violations\n");
+        for rule in Rule::ALL {
+            out.push_str(&format!("{:<25} {}\n", rule.name(), self.count(rule)));
+        }
+        if !self.violations.is_empty() {
+            out.push('\n');
+            for v in &self.violations {
+                out.push_str(&format!(
+                    "{}:{}  [{}]  {}\n",
+                    v.path,
+                    v.line,
+                    v.rule.name(),
+                    v.message
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "\n{} file(s) scanned, {} finding(s) suppressed by allows, {} violation(s)\n",
+            self.files_scanned,
+            self.suppressed,
+            self.violations.len()
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rules = Rule::ALL
+            .iter()
+            .map(|r| (r.name().to_string(), Json::Num(self.count(*r) as f64)))
+            .collect();
+        let violations = self
+            .violations
+            .iter()
+            .map(|v| {
+                Json::Obj(vec![
+                    ("rule".to_string(), Json::Str(v.rule.name().to_string())),
+                    ("path".to_string(), Json::Str(v.path.clone())),
+                    ("line".to_string(), Json::Num(v.line as f64)),
+                    ("message".to_string(), Json::Str(v.message.clone())),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("schema".to_string(), Json::Str("sfw.lint/v1".to_string())),
+            ("files_scanned".to_string(), Json::Num(self.files_scanned as f64)),
+            ("suppressed".to_string(), Json::Num(self.suppressed as f64)),
+            ("counts".to_string(), Json::Obj(rules)),
+            ("violations".to_string(), Json::Arr(violations)),
+        ])
+    }
+
+    /// Write the JSON artifact (creates parent dirs).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut text = self.to_json().render();
+        text.push('\n');
+        std::fs::write(path, text)
+    }
+}

@@ -1,0 +1,587 @@
+//! The line scanner behind [`sfw::lint`](crate::lint): splits each
+//! source line into code and comment text (string/char literals, raw
+//! strings, block comments and multi-line strings are tracked across
+//! lines), gates out `#[cfg(test)]` items by brace depth, parses
+//! `// lint: allow(<rule>): <reason>` comments, and evaluates the
+//! per-file rules while collecting the cross-file facts (`Wire` impls,
+//! error-enum variant declarations and uses).
+//!
+//! The scanner is deliberately token-level, not a parser: every rule it
+//! enforces keys on constructs this repo writes one way (see the rule
+//! table in the [module docs](crate::lint)).  Where a heuristic has a
+//! known blind spot it is documented on the rule that uses it.
+
+use crate::lint::{LintConfig, Rule, Violation};
+
+/// How many preceding lines may separate a `// SAFETY:` comment from its
+/// `unsafe` token (comment blocks and split statements both fit).
+const SAFETY_WINDOW: usize = 6;
+
+/// How many preceding lines count as "inside a `matches!` context" when
+/// classifying an `Enum::Variant` occurrence as a pattern (multi-line
+/// `assert!(matches!(...))` calls put the pattern 1–3 lines below the
+/// macro name).
+const MATCH_WINDOW: usize = 3;
+
+/// Everything the scanner learned about one file.
+#[derive(Debug, Default)]
+pub struct FileScan {
+    pub violations: Vec<Violation>,
+    /// `(line, rule)` of findings suppressed by an allow comment.
+    pub suppressed: Vec<(usize, Rule)>,
+    /// `(type name, line)` of every un-allowed `impl Wire for <type>`
+    /// outside tests.
+    pub wire_impls: Vec<(String, usize)>,
+    /// Variant declarations of the configured error enums.
+    pub variants: Vec<VariantDecl>,
+    /// `Enum::Variant` occurrences (patterns and constructions).
+    pub uses: Vec<VariantUse>,
+}
+
+#[derive(Debug)]
+pub struct VariantDecl {
+    pub enum_name: String,
+    pub variant: String,
+    pub path: String,
+    pub line: usize,
+    /// `#[from]` / `#[error(transparent)]` conversions construct the
+    /// variant implicitly.
+    pub constructed_via_attr: bool,
+    /// An allow at the declaration line suppresses the liveness rule.
+    pub allowed: bool,
+}
+
+#[derive(Debug)]
+pub struct VariantUse {
+    pub enum_name: String,
+    pub variant: String,
+    /// true = pattern position (match arm, `matches!`, `if let`),
+    /// false = construction.
+    pub matched: bool,
+}
+
+/// Lexer state carried across lines.
+enum Mode {
+    Normal,
+    /// Inside a `"..."` string literal (may span lines).
+    Str,
+    /// Inside a raw string; payload is the `#` count of the delimiter.
+    RawStr(usize),
+    /// Inside nested `/* ... */` comments; payload is the nesting depth.
+    Block(usize),
+}
+
+/// One parsed allow comment.
+struct Allow {
+    rule: Option<Rule>,
+    reason_ok: bool,
+    raw_rule: String,
+    line: usize,
+}
+
+/// Split one line into (code, comment, is_doc_comment) under the carried
+/// lexer `mode`.  Comment text covers `//` line comments and `/* */`
+/// contents; string-literal contents are dropped from both so quoted
+/// braces and rule-token spellings are inert.
+fn split_line(line: &str, mode: &mut Mode) -> (String, String, bool) {
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut is_doc = false;
+    let chars: Vec<char> = line.chars().collect();
+    let n = chars.len();
+    let mut i = 0;
+    while i < n {
+        match mode {
+            Mode::Str => {
+                if chars[i] == '\\' {
+                    i += 2;
+                } else {
+                    if chars[i] == '"' {
+                        *mode = Mode::Normal;
+                        code.push('"');
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            Mode::RawStr(hashes) => {
+                if chars[i] == '"'
+                    && chars[i + 1..].iter().take_while(|c| **c == '#').count() >= *hashes
+                {
+                    let h = *hashes;
+                    *mode = Mode::Normal;
+                    code.push('"');
+                    i += 1 + h;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            Mode::Block(depth) => {
+                if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    *depth -= 1;
+                    if *depth == 0 {
+                        *mode = Mode::Normal;
+                    }
+                    i += 2;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    *depth += 1;
+                    i += 2;
+                } else {
+                    comment.push(chars[i]);
+                    i += 1;
+                }
+                continue;
+            }
+            Mode::Normal => {}
+        }
+        let c = chars[i];
+        match c {
+            '"' => {
+                code.push('"');
+                *mode = Mode::Str;
+                i += 1;
+            }
+            'r' if i + 1 < n && (chars[i + 1] == '"' || chars[i + 1] == '#') => {
+                // raw string candidate: r", r#", r##"...
+                let hashes = chars[i + 1..].iter().take_while(|c| **c == '#').count();
+                if i + 1 + hashes < n && chars[i + 1 + hashes] == '"' {
+                    code.push('"');
+                    *mode = Mode::RawStr(hashes);
+                    i += 2 + hashes;
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            '\'' => {
+                // char literal vs lifetime: a lifetime has no closing quote
+                if i + 1 < n && chars[i + 1] == '\\' {
+                    let mut j = i + 2;
+                    while j < n && chars[j] != '\'' {
+                        j += 1;
+                    }
+                    i = j + 1;
+                } else if i + 2 < n && chars[i + 2] == '\'' {
+                    i += 3; // plain char literal like '{'
+                } else {
+                    code.push(c); // lifetime; keep scanning normally
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < n && chars[i + 1] == '/' => {
+                is_doc = matches!(chars.get(i + 2), Some('/') | Some('!'));
+                comment.extend(&chars[i..]);
+                break;
+            }
+            '/' if i + 1 < n && chars[i + 1] == '*' => {
+                *mode = Mode::Block(1);
+                i += 2;
+            }
+            _ => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    (code, comment, is_doc)
+}
+
+/// Panic-path tokens the panic-free rule rejects.  `.unwrap_or*` /
+/// `.expect_err` do not match: `.unwrap()` requires the closing paren
+/// and `.expect(` the opening one right after the name.
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+    "Option::unwrap",
+    "Result::unwrap",
+];
+
+fn boundary_before(code: &str, at: usize) -> bool {
+    at == 0
+        || !code[..at]
+            .chars()
+            .next_back()
+            .is_some_and(|p| p.is_alphanumeric() || p == '_')
+}
+
+/// Find a panic token in stripped code, honoring the word boundary on
+/// the left (so an identifier like `dont_panic` is inert).
+fn find_panic_token(code: &str) -> Option<&'static str> {
+    for tok in PANIC_TOKENS {
+        let mut from = 0;
+        while let Some(pos) = code[from..].find(tok) {
+            let at = from + pos;
+            if boundary_before(code, at) {
+                return Some(tok);
+            }
+            from = at + tok.len();
+        }
+    }
+    None
+}
+
+/// True when `word` occurs in `code` delimited by non-identifier chars.
+fn has_word(code: &str, word: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let after = code[at + word.len()..].chars().next();
+        if boundary_before(code, at) && !after.is_some_and(|p| p.is_alphanumeric() || p == '_') {
+            return true;
+        }
+        from = at + word.len();
+    }
+    false
+}
+
+/// Parse every `lint: allow(<rule>): <reason>` occurrence in a comment.
+fn parse_allows(comment: &str, line: usize) -> Vec<Allow> {
+    let marker = "lint: allow(";
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = comment[from..].find(marker) {
+        let start = from + pos + marker.len();
+        let rest = &comment[start..];
+        let Some(close) = rest.find(')') else {
+            from = start;
+            continue;
+        };
+        let raw_rule = rest[..close].trim().to_string();
+        let after = rest[close + 1..].trim_start();
+        let reason_ok = after.strip_prefix(':').is_some_and(|r| !r.trim().is_empty());
+        out.push(Allow { rule: Rule::from_name(&raw_rule), reason_ok, raw_rule, line });
+        from = start + close;
+    }
+    out
+}
+
+/// Collect `Enum::Variant` occurrences from one stripped code line,
+/// classifying pattern position vs construction.  Left of a `=>` (or
+/// inside a `matches!` / `if let` / `while let` context, looking back
+/// [`MATCH_WINDOW`] lines for multi-line `matches!` calls) is a
+/// pattern; anything else is a construction.
+fn collect_uses(
+    code: &str,
+    code_history: &[String],
+    cfg: &LintConfig,
+    uses: &mut Vec<VariantUse>,
+) {
+    for name in &cfg.error_enums {
+        let needle = format!("{name}::");
+        let mut from = 0;
+        while let Some(pos) = code[from..].find(needle.as_str()) {
+            let at = from + pos;
+            let variant: String = code[at + needle.len()..]
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            from = at + needle.len();
+            if variant.is_empty() {
+                continue;
+            }
+            let matched = match code.find("=>") {
+                Some(arrow) => at < arrow,
+                None => {
+                    code.contains("matches!")
+                        || code.contains("if let")
+                        || code.contains("while let")
+                        || code_history
+                            .iter()
+                            .rev()
+                            .take(MATCH_WINDOW)
+                            .any(|c| c.contains("matches!("))
+                }
+            };
+            uses.push(VariantUse { enum_name: name.clone(), variant, matched });
+        }
+    }
+}
+
+/// Scan one file's source text.  `path` is used for labels and for the
+/// hot-module decision.
+pub fn scan_source(path: &str, src: &str, cfg: &LintConfig) -> FileScan {
+    let hot = cfg.is_hot(path);
+    let mut scan = FileScan::default();
+    let mut mode = Mode::Normal;
+
+    // brace-depth bookkeeping
+    let mut depth: i64 = 0;
+    let mut test_gates: Vec<i64> = Vec::new(); // depths of #[cfg(test)] items
+    let mut pending_cfg_test = false;
+
+    // allows on comment-only lines apply to the next code line; allows
+    // with trailing code apply to their own line
+    let mut pending_allows: Vec<Allow> = Vec::new();
+
+    // mutex-guard scopes for no-lock-across-io
+    let mut guard_depths: Vec<i64> = Vec::new();
+
+    // enum-body bookkeeping for error-variant-liveness
+    let mut in_enum: Option<(String, i64)> = None;
+    let mut pending_from_attr = false;
+
+    // lookback windows for SAFETY comments and multi-line matches!
+    let mut comment_history: Vec<String> = Vec::new();
+    let mut code_history: Vec<String> = Vec::new();
+
+    for (idx, raw_line) in src.lines().enumerate() {
+        let line_no = idx + 1;
+        let (code, comment, is_doc) = split_line(raw_line, &mut mode);
+        let code_is_empty = code.trim().is_empty();
+        let in_test = !test_gates.is_empty();
+
+        // ---- allow comments (plain //, not doc prose) ---------------
+        if !is_doc {
+            pending_allows.extend(parse_allows(&comment, line_no));
+        }
+        let active: Vec<Allow> =
+            if code_is_empty { Vec::new() } else { std::mem::take(&mut pending_allows) };
+        // a malformed allow is itself a violation, even in test code —
+        // the grammar is the contract the whole tool hangs off
+        for a in &active {
+            if a.rule.is_none() {
+                scan.violations.push(Violation::new(
+                    Rule::BadAllow,
+                    path,
+                    a.line,
+                    format!("unknown lint rule '{}' in allow comment", a.raw_rule),
+                ));
+            } else if !a.reason_ok {
+                scan.violations.push(Violation::new(
+                    Rule::BadAllow,
+                    path,
+                    a.line,
+                    format!("allow({}) is missing its mandatory ': <reason>'", a.raw_rule),
+                ));
+            }
+        }
+        // even a reason-less allow suppresses its rule: the bad-allow
+        // violation above already fails the run, and double-reporting
+        // the suppressed finding would obscure the actual fix (add the
+        // reason or remove the allow)
+        let allowed = |rule: Rule, scan: &mut FileScan| -> bool {
+            let hit = active.iter().any(|a| a.rule == Some(rule));
+            if hit {
+                scan.suppressed.push((line_no, rule));
+            }
+            hit
+        };
+
+        // ---- cfg(test) gating ---------------------------------------
+        if code.contains("#[cfg(test)]") {
+            pending_cfg_test = true;
+        }
+        if pending_cfg_test && code.contains('{') {
+            test_gates.push(depth);
+            pending_cfg_test = false;
+        }
+
+        // ---- per-file rules (non-test code only) --------------------
+        if !in_test && !code_is_empty {
+            if hot {
+                if let Some(tok) = find_panic_token(&code) {
+                    if !allowed(Rule::PanicFree, &mut scan) {
+                        scan.violations.push(Violation::new(
+                            Rule::PanicFree,
+                            path,
+                            line_no,
+                            format!("`{tok}` on a non-test path of a protocol hot module"),
+                        ));
+                    }
+                }
+                // no-lock-across-io: a guard bound on an earlier line of
+                // this scope is still live when send(/recv( runs
+                if !guard_depths.is_empty()
+                    && (code.contains(".send(") || code.contains(".recv("))
+                    && !allowed(Rule::NoLockAcrossIo, &mut scan)
+                {
+                    scan.violations.push(Violation::new(
+                        Rule::NoLockAcrossIo,
+                        path,
+                        line_no,
+                        "send/recv while a Mutex guard bound in this scope is live".to_string(),
+                    ));
+                }
+            }
+            if has_word(&code, "unsafe") {
+                let nearby = comment.contains("SAFETY:")
+                    || comment_history
+                        .iter()
+                        .rev()
+                        .take(SAFETY_WINDOW)
+                        .any(|c| c.contains("SAFETY:"));
+                if !nearby && !allowed(Rule::SafetyComment, &mut scan) {
+                    scan.violations.push(Violation::new(
+                        Rule::SafetyComment,
+                        path,
+                        line_no,
+                        "`unsafe` without an adjacent `// SAFETY:` justification".to_string(),
+                    ));
+                }
+            }
+        }
+
+        // ---- cross-file facts ---------------------------------------
+        if !in_test && !code_is_empty {
+            if let Some(rest) = code.split("impl Wire for ").nth(1) {
+                let ty: String = rest
+                    .trim_start()
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                if !ty.is_empty() && !allowed(Rule::WireCoverage, &mut scan) {
+                    scan.wire_impls.push((ty, line_no));
+                }
+            }
+            if in_enum.is_none() {
+                for name in &cfg.error_enums {
+                    if has_word(&code, "enum") && has_word(&code, name) && code.contains('{') {
+                        in_enum = Some((name.clone(), depth));
+                        pending_from_attr = false;
+                    }
+                }
+            }
+            if let Some((enum_name, enum_depth)) = &in_enum {
+                // variant lines sit exactly one level inside the body
+                let trimmed = code.trim();
+                if depth == *enum_depth + 1 && !trimmed.starts_with('{') {
+                    if trimmed.starts_with('#') {
+                        if code.contains("#[from]") || code.contains("transparent") {
+                            pending_from_attr = true;
+                        }
+                    } else {
+                        let ident: String = trimmed
+                            .chars()
+                            .take_while(|c| c.is_alphanumeric() || *c == '_')
+                            .collect();
+                        if ident.chars().next().is_some_and(|c| c.is_uppercase()) {
+                            let via_attr = pending_from_attr
+                                || code.contains("#[from]")
+                                || code.contains("transparent");
+                            let lv_allowed = allowed(Rule::ErrorVariantLiveness, &mut scan);
+                            scan.variants.push(VariantDecl {
+                                enum_name: enum_name.clone(),
+                                variant: ident,
+                                path: path.to_string(),
+                                line: line_no,
+                                constructed_via_attr: via_attr,
+                                allowed: lv_allowed,
+                            });
+                            pending_from_attr = false;
+                        }
+                    }
+                }
+            }
+        }
+        collect_uses(&code, &code_history, cfg, &mut scan.uses);
+
+        // ---- depth bookkeeping (after rule evaluation) --------------
+        // guards bound on this line live at the depth the line STARTS at
+        if code.contains("let ") && code.contains(".lock()") {
+            guard_depths.push(depth);
+        }
+        depth += code.matches('{').count() as i64 - code.matches('}').count() as i64;
+        while test_gates.last().is_some_and(|g| depth <= *g) {
+            test_gates.pop();
+        }
+        // a guard bound at depth g dies when its enclosing block closes
+        // (depth drops below g); this over-approximates guards that are
+        // really statement temporaries, which fails loud, not silent
+        while guard_depths.last().is_some_and(|g| depth < *g) {
+            guard_depths.pop();
+        }
+        if in_enum.as_ref().is_some_and(|(_, d)| depth <= *d) {
+            in_enum = None;
+        }
+
+        // doc comments are prose (they may *mention* SAFETY:); only
+        // plain // comments count for the SAFETY lookback
+        comment_history.push(if is_doc { String::new() } else { comment });
+        code_history.push(code);
+    }
+    scan
+}
+
+/// Collect `Enum::Variant` uses from a test file.  Tests are exempt from
+/// the per-file rules, but they count for error-variant liveness (a
+/// variant matched only by a conformance test is still matched).
+pub fn scan_test_uses(src: &str, cfg: &LintConfig) -> Vec<VariantUse> {
+    let mut mode = Mode::Normal;
+    let mut uses = Vec::new();
+    let mut code_history: Vec<String> = Vec::new();
+    for line in src.lines() {
+        let (code, _, _) = split_line(line, &mut mode);
+        collect_uses(&code, &code_history, cfg, &mut uses);
+        code_history.push(code);
+    }
+    uses
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> LintConfig {
+        LintConfig::repo()
+    }
+
+    #[test]
+    fn strings_and_comments_are_inert() {
+        let src = r#"
+fn f() {
+    let s = "contains .unwrap() and panic! and unsafe";
+    println!("{s}");
+}
+"#;
+        let scan = scan_source("rust/src/comms/x.rs", src, &cfg());
+        assert!(scan.violations.is_empty(), "{:?}", scan.violations);
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_exempt() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap() }\n}\n";
+        let scan = scan_source("rust/src/comms/x.rs", src, &cfg());
+        assert!(scan.violations.is_empty(), "{:?}", scan.violations);
+    }
+
+    #[test]
+    fn panic_token_in_hot_module_is_flagged_and_allow_suppresses() {
+        let bad = "fn f() { x.unwrap(); }\n";
+        let scan = scan_source("rust/src/comms/x.rs", bad, &cfg());
+        assert_eq!(scan.violations.len(), 1);
+        assert_eq!(scan.violations[0].rule, Rule::PanicFree);
+        let ok = "// lint: allow(panic-free): invariant documented here\nfn f() { x.unwrap(); }\n";
+        let scan = scan_source("rust/src/comms/x.rs", ok, &cfg());
+        assert!(scan.violations.is_empty(), "{:?}", scan.violations);
+        assert_eq!(scan.suppressed.len(), 1);
+    }
+
+    #[test]
+    fn cold_modules_skip_panic_free_but_not_safety() {
+        let src = "fn f() { x.unwrap(); }\nunsafe impl Send for X {}\n";
+        let scan = scan_source("rust/src/runtime/x.rs", src, &cfg());
+        assert_eq!(scan.violations.len(), 1);
+        assert_eq!(scan.violations[0].rule, Rule::SafetyComment);
+    }
+
+    #[test]
+    fn missing_allow_reason_is_a_violation_but_still_suppresses() {
+        let src = "// lint: allow(panic-free)\nfn f() { x.unwrap(); }\n";
+        let scan = scan_source("rust/src/comms/x.rs", src, &cfg());
+        assert_eq!(scan.violations.len(), 1, "{:?}", scan.violations);
+        assert_eq!(scan.violations[0].rule, Rule::BadAllow);
+    }
+
+    #[test]
+    fn multiline_matches_context_classifies_patterns() {
+        let src = "fn t() {\n    assert!(matches!(\n        err,\n        SessionError::Comms(_)\n    ));\n}\n";
+        let uses = scan_test_uses(src, &cfg());
+        assert_eq!(uses.len(), 1);
+        assert!(uses[0].matched);
+    }
+}

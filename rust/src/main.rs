@@ -18,6 +18,11 @@
 //!             tiny deterministic CI grid).
 //!   simulate  queuing-model simulation (Appendix D)
 //!   info      show the artifact manifest and PJRT platform
+//!   lint      repo-native static analysis (panic-freedom, SAFETY
+//!             comments, wire coverage, lock discipline, error-variant
+//!             liveness — see sfw::lint for the rule table); prints a
+//!             table, writes bench_out/lint_report.json, exits nonzero
+//!             on violations
 //!
 //! Examples:
 //!   sfw train --task matrix_sensing --algo sfw-asyn --workers 8 --tau 8
@@ -64,9 +69,10 @@ fn main() -> anyhow::Result<()> {
         "sweep" => cmd_sweep(&args),
         "simulate" => cmd_simulate(&args),
         "info" => cmd_info(&args),
+        "lint" => cmd_lint(&args),
         _ => {
             eprintln!(
-                "usage: sfw <train|worker|sweep|simulate|info> [--flags]\n\
+                "usage: sfw <train|worker|sweep|simulate|info|lint> [--flags]\n\
                  see rust/src/main.rs header for examples"
             );
             Ok(())
@@ -253,6 +259,32 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     );
     println!("asyn/dist virtual-time speedup: {:.2}x", rd.virtual_time / ra.virtual_time);
     Ok(())
+}
+
+/// `sfw lint`: the repo-native static-analysis gate (see `sfw::lint`).
+/// Scans `--src` (default rust/src) with the repo rule set, feeds the
+/// cross-file rules from `--tests` (default rust/tests), prints the
+/// table, writes the JSON artifact, and fails on any violation.
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    sfw::chaos::reject_chaos_keys("lint", &Config::new(), args)?;
+    let src = args.get_str("src", "rust/src");
+    let tests = args.get_str("tests", "rust/tests");
+    let out = args.get_str("out", "bench_out/lint_report.json");
+    let cfg = sfw::lint::LintConfig::repo();
+    let report = sfw::lint::lint_repo(&src, &tests, &cfg)
+        .map_err(|e| anyhow::anyhow!("sfw lint: cannot scan {src}: {e}"))?;
+    print!("{}", report.render_table());
+    report.write_json(&out)?;
+    println!("lint report -> {out}");
+    if report.is_clean() {
+        Ok(())
+    } else {
+        anyhow::bail!(
+            "sfw lint: {} violation(s) — annotate with `// lint: allow(<rule>): <reason>` \
+             only where the invariant genuinely holds",
+            report.violations.len()
+        )
+    }
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {

@@ -18,18 +18,25 @@ use std::sync::Mutex;
 
 /// Shared PJRT state: one CPU client + a lazily compiled executable cache.
 ///
-/// SAFETY of the `Send + Sync` impls: the PJRT C API requires clients,
-/// loaded executables and buffers to be thread-safe (concurrent
-/// `Execute`/`BufferFromHostBuffer` calls are part of the contract — jax
-/// itself drives TfrtCpuClient from many threads).  The `xla` crate
-/// wrappers are `!Send` only because they hold raw pointers.
+/// The runtime is `Arc`-shared across worker threads (the session engine
+/// factory clones one runtime into every `PjrtEngine`), so it needs both
+/// `Send` and `Sync`; the safety arguments live on the impls below.
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     manifest: Manifest,
     exes: Mutex<HashMap<String, &'static xla::PjRtLoadedExecutable>>,
 }
 
+// SAFETY: every field is movable across threads.  `manifest` and `exes`
+// are plain owned data; `client` wraps a PJRT C-API client pointer that
+// the `xla` crate marks `!Send` only because it is a raw pointer — the
+// PJRT contract imposes no thread affinity on clients.
 unsafe impl Send for PjrtRuntime {}
+// SAFETY: shared access is thread-safe.  The PJRT C API requires clients,
+// loaded executables and buffers to tolerate concurrent
+// `Execute`/`BufferFromHostBuffer` calls (jax itself drives TfrtCpuClient
+// from many threads), and the only interior-mutable field, `exes`, is
+// behind a `Mutex`.
 unsafe impl Sync for PjrtRuntime {}
 
 impl PjrtRuntime {
@@ -130,6 +137,9 @@ impl PjrtRuntime {
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
     let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
     debug_assert_eq!(dims_usize.iter().product::<usize>(), data.len());
+    // SAFETY: reinterpreting `&[f32]` as `&[u8]` of 4x the length stays
+    // inside the same allocation, and u8 has no alignment or validity
+    // requirements; the borrow keeps `data` alive for the slice's lifetime.
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Ok(xla::Literal::create_from_shape_and_untyped_data(

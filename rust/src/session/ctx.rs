@@ -22,6 +22,13 @@ use crate::util::rng::Rng;
 
 type EngineFactory = Box<dyn FnMut(usize) -> Box<dyn StepEngine> + Send>;
 
+/// Lock a context mutex, treating poisoning as recoverable: both slots
+/// hold plain owned data (a factory closure, an optional listener) whose
+/// invariants cannot be left half-updated by a panicking holder.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 pub struct RunCtx {
     pub obj: Arc<dyn Objective>,
     pub spec: TrainSpec,
@@ -49,16 +56,16 @@ impl RunCtx {
     }
 
     pub(crate) fn set_tcp_listener(&self, listener: TcpListener) {
-        *self.tcp_listener.lock().unwrap() = Some(listener);
+        *lock_ignore_poison(&self.tcp_listener) = Some(listener);
     }
 
     pub(crate) fn take_tcp_listener(&self) -> Option<TcpListener> {
-        self.tcp_listener.lock().unwrap().take()
+        lock_ignore_poison(&self.tcp_listener).take()
     }
 
     /// Build worker `w`'s compute engine (native math or PJRT artifacts).
     pub fn make_engine(&self, w: usize) -> Box<dyn StepEngine> {
-        (self.engines.lock().unwrap())(w)
+        (lock_ignore_poison(&self.engines))(w)
     }
 
     /// The spec's explicit batch schedule, or the algorithm's default.

@@ -143,8 +143,14 @@ where
             let listener = t.listener.take().unwrap_or_else(|| {
                 let bind = t.bind.as_deref().unwrap_or("127.0.0.1:0");
                 TcpListener::bind(bind)
+                    // lint: allow(panic-free): the harness is infallible by
+                    // design — `TrainSpec::run` pre-binds and surfaces bind
+                    // failures as SessionError; this fallback serves direct
+                    // test callers only.
                     .unwrap_or_else(|e| panic!("comms: cannot bind {bind}: {e}"))
             });
+            // lint: allow(panic-free): local_addr on a freshly-bound listener
+            // fails only on OS descriptor corruption; no error channel here.
             let addr = listener.local_addr().expect("listener address");
             if let Some(notify) = &t.bound_notify {
                 notify(addr);
@@ -162,12 +168,19 @@ where
                         let chaos = t.chaos.clone();
                         s.spawn(move || {
                             let wl = tcp_worker::<Up, Down>(&addr.to_string(), w as u32)
+                                // lint: allow(panic-free): in-process worker
+                                // threads have no error channel; a loopback
+                                // connect to our own live listener failing
+                                // means the run is unrecoverable anyway.
                                 .unwrap_or_else(|e| panic!("worker {w}: connect {addr}: {e}"));
                             job(chaos_wrap(&chaos, w, Box::new(wl)));
                         });
                     }
                 }
                 let ml = tcp_master_on::<Up, Down>(listener, t.workers, counters.clone())
+                    // lint: allow(panic-free): the scoped worker threads are
+                    // already spawned; there is no path to unwind them cleanly
+                    // besides propagating a panic through the scope.
                     .unwrap_or_else(|e| panic!("comms: master setup failed: {e}"));
                 master(Box::new(ml))
             })

@@ -31,6 +31,12 @@
 //! a `Solver` impl — not a seventh copy of the counters/trace/engine
 //! plumbing.  Grids over specs are first-class too: see [`crate::sweep`].
 //!
+//! Everything fallible happens before a solver starts ([`SessionError`]
+//! from spec validation and wiring); solvers themselves are infallible.
+//! That split is machine-checked: this module is a `sfw lint` hot module
+//! ([`crate::lint`]), so non-test code here must be panic-free and every
+//! `SessionError` variant must stay both constructed and matched.
+//!
 //! # Multi-process training (TCP)
 //!
 //! Every solver that lists `Transport::Tcp` in its
@@ -224,8 +230,6 @@ pub enum SessionError {
     Engine(String),
     #[error("comms: {0}")]
     Comms(String),
-    #[error(transparent)]
-    Config(#[from] crate::config::ConfigError),
 }
 
 /// Uniform result of one training run.

@@ -1,0 +1,135 @@
+//! The `sfw lint` contract, fixture by fixture:
+//!
+//! * every file under `rust/src/lint/fixtures/` triggers exactly the
+//!   rule it is named after (and nothing else);
+//! * `clean.rs` — a file using every annotation mechanism correctly —
+//!   triggers nothing while still exercising the suppression path;
+//! * the real tree (`rust/src` + `rust/tests` under the repo config)
+//!   is clean, which is the same gate `scripts/ci.sh` runs.
+
+use sfw::lint::{
+    cross_file_violations, lint_repo, scan_source, CrossFileInput, LintConfig, Rule, Violation,
+};
+
+/// The narrowed config the fixtures are written against: the fixture
+/// directory itself is the "hot module", and the audited error enum is
+/// the fixture-local `GhostError`.
+fn fixture_cfg() -> LintConfig {
+    LintConfig {
+        hot_modules: vec!["/fixtures/".to_string()],
+        error_enums: vec!["GhostError".to_string()],
+        skip: Vec::new(),
+        property_tests: vec!["properties.rs".to_string()],
+    }
+}
+
+/// Run one fixture through the full per-file + cross-file pipeline with
+/// an empty property-test corpus and no external variant uses.
+fn lint_fixture(name: &str) -> (Vec<Violation>, usize) {
+    let path = format!(
+        "{}/rust/src/lint/fixtures/{name}",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read fixture {path}: {e}"));
+    let scan = scan_source(&path, &src, &fixture_cfg());
+    let mut violations = scan.violations.clone();
+    let suppressed = scan.suppressed.len();
+    let input = CrossFileInput {
+        scans: vec![scan],
+        property_text: String::new(),
+        test_uses: Vec::new(),
+    };
+    violations.extend(cross_file_violations(&input, std::slice::from_ref(&path)));
+    (violations, suppressed)
+}
+
+/// Assert the fixture trips its own rule exactly once and no other.
+fn assert_triggers_exactly(name: &str, rule: Rule) {
+    let (violations, _) = lint_fixture(name);
+    assert_eq!(
+        violations.len(),
+        1,
+        "{name}: expected exactly one violation, got {violations:#?}"
+    );
+    assert_eq!(violations[0].rule, rule, "{name}: {violations:#?}");
+}
+
+#[test]
+fn panic_free_fixture_triggers_its_rule() {
+    assert_triggers_exactly("panic_free.rs", Rule::PanicFree);
+}
+
+#[test]
+fn safety_comment_fixture_triggers_its_rule() {
+    assert_triggers_exactly("safety_comment.rs", Rule::SafetyComment);
+}
+
+#[test]
+fn wire_coverage_fixture_triggers_its_rule() {
+    assert_triggers_exactly("wire_coverage.rs", Rule::WireCoverage);
+}
+
+#[test]
+fn no_lock_across_io_fixture_triggers_its_rule() {
+    assert_triggers_exactly("no_lock_across_io.rs", Rule::NoLockAcrossIo);
+}
+
+#[test]
+fn error_liveness_fixture_triggers_its_rule() {
+    assert_triggers_exactly("error_liveness.rs", Rule::ErrorVariantLiveness);
+    let (violations, _) = lint_fixture("error_liveness.rs");
+    assert!(
+        violations[0].message.contains("GhostError::Vanished"),
+        "{violations:#?}"
+    );
+}
+
+#[test]
+fn reasonless_allow_is_a_bad_allow_and_still_suppresses() {
+    // The finding under the allow is suppressed (one suppression, no
+    // panic-free violation) — the actionable report is the allow itself.
+    let (violations, suppressed) = lint_fixture("bad_allow.rs");
+    assert_eq!(violations.len(), 1, "{violations:#?}");
+    assert_eq!(violations[0].rule, Rule::BadAllow, "{violations:#?}");
+    assert_eq!(suppressed, 1);
+}
+
+#[test]
+fn clean_fixture_triggers_nothing_while_exercising_suppression() {
+    let (violations, suppressed) = lint_fixture("clean.rs");
+    assert!(violations.is_empty(), "{violations:#?}");
+    assert_eq!(suppressed, 1, "the justified allow should register once");
+}
+
+#[test]
+fn the_real_tree_is_clean_under_the_repo_config() {
+    let root = env!("CARGO_MANIFEST_DIR");
+    let report = lint_repo(
+        &format!("{root}/rust/src"),
+        &format!("{root}/rust/tests"),
+        &LintConfig::repo(),
+    )
+    .expect("scan the repo tree");
+    assert!(report.is_clean(), "\n{}", report.render_table());
+    assert!(
+        report.files_scanned > 40,
+        "suspiciously few files scanned ({})",
+        report.files_scanned
+    );
+    // the repo legitimately carries a handful of justified allows
+    assert!(report.suppressed > 0, "expected at least one justified allow");
+}
+
+#[test]
+fn report_table_and_json_name_every_finding() {
+    let (violations, _) = lint_fixture("panic_free.rs");
+    let report = sfw::lint::LintReport { files_scanned: 1, suppressed: 0, violations };
+    let table = report.render_table();
+    assert!(table.contains("panic-free"), "{table}");
+    assert!(table.contains("panic_free.rs"), "{table}");
+    let json = report.to_json().render();
+    assert!(json.contains("\"sfw.lint/v1\""), "{json}");
+    assert!(json.contains("\"panic-free\""), "{json}");
+    assert!(!report.is_clean());
+}

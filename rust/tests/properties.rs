@@ -214,6 +214,38 @@ fn prop_every_wire_message_roundtrips_with_exact_byte_accounting() {
 }
 
 #[test]
+fn wire_errors_classify_bad_tags_and_malformed_payloads() {
+    use sfw::comms::{Dec, Enc, WireError};
+    // a frame carrying any tag but the message's own is BadTag, and the
+    // error names the offending tag byte
+    let upd = UpdateMsg {
+        worker_id: 1,
+        t_w: 2,
+        u: vec![1.0],
+        v: vec![2.0],
+        sigma: 3.0,
+        loss_sum: 4.0,
+        m: 5,
+    };
+    let f = frame(&upd);
+    let bad = upd.tag().wrapping_add(1);
+    match UpdateMsg::decode(bad, &f[sfw::comms::FRAME_HEADER..]).err() {
+        Some(WireError::BadTag(t)) => assert_eq!(t, bad),
+        other => panic!("expected BadTag, got {other:?}"),
+    }
+    // a matrix header whose byte budget overflows usize is Malformed —
+    // rejected by arithmetic, never attempted as an allocation
+    let mut buf = Vec::new();
+    let mut e = Enc(&mut buf);
+    e.u32(u32::MAX);
+    e.u32(u32::MAX);
+    match Dec::new(&buf).mat().err() {
+        Some(WireError::Malformed(what)) => assert!(what.contains("overflow"), "{what}"),
+        other => panic!("expected Malformed, got {other:?}"),
+    }
+}
+
+#[test]
 fn prop_batch_schedules_honor_monotonicity_caps_and_floors() {
     // The theorem-bearing schedules: Increasing (SFW/SFW-asyn, Thm 1)
     // and Linear (SVRF-asyn, Thm 2) must be nondecreasing in k, clamped

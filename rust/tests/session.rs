@@ -58,11 +58,38 @@ fn every_registered_algo_runs_and_traces_monotonically() {
 #[test]
 fn unknown_algo_error_lists_valid_names() {
     let err = small_spec().algo("not-an-algo").run().unwrap_err();
+    assert!(matches!(err, SessionError::UnknownAlgo { .. }), "{err}");
     let msg = err.to_string();
     assert!(msg.contains("not-an-algo"), "{msg}");
     for name in registry().names() {
         assert!(msg.contains(name), "error should list '{name}': {msg}");
     }
+}
+
+#[test]
+fn tcp_bind_conflicts_surface_as_comms_errors_before_the_run() {
+    // Occupy a port, then ask a TCP run to bind the same one: the
+    // pre-bind in TrainSpec::run must fail as Comms, not mid-protocol.
+    let holder = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = holder.local_addr().unwrap().to_string();
+    let err = small_spec()
+        .algo("sfw-asyn")
+        .transport(Transport::Tcp)
+        .tcp_bind(&addr)
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, SessionError::Comms(_)), "{err}");
+    assert!(err.to_string().contains(&addr), "{err}");
+}
+
+#[test]
+fn missing_pjrt_artifacts_surface_as_engine_errors_before_the_run() {
+    let err = small_spec()
+        .engine(EngineKind::Pjrt)
+        .artifacts_dir("/nonexistent/sfw-artifacts")
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, SessionError::Engine(_)), "{err}");
 }
 
 #[test]

@@ -3,6 +3,7 @@
 
 Usage:
     scripts/bench_snapshot.py [--out bench_out/BENCH_hotpath.json] [--skip-run]
+                              [--compare prev.json] [--threshold 1.25]
 
 Runs `cargo bench --bench hotpath` (which writes the machine-readable
 series to bench_out/hotpath_raw.csv), converts it to a stable JSON
@@ -11,6 +12,12 @@ cells are present — the perf trajectory the ROADMAP's "make hot paths
 measurably faster" goal is tracked against.  `--skip-run` converts an
 existing hotpath_raw.csv (used by tests and by CI steps that already ran
 the bench).
+
+`--compare prev.json` additionally diffs the fresh snapshot against a
+previous one (matching rows by op name): prints the mean-time ratio per
+op and exits nonzero when any op slowed past `--threshold` (default
+1.25x).  CI runs the compare step with continue-on-error — shared-runner
+noise makes it advisory, not a gate.
 """
 import csv
 import json
@@ -20,6 +27,8 @@ import sys
 
 out_path = "bench_out/BENCH_hotpath.json"
 skip_run = False
+compare_path = None
+threshold = 1.25
 args = sys.argv[1:]
 while args:
     a = args.pop(0)
@@ -27,8 +36,13 @@ while args:
         out_path = args.pop(0)
     elif a == "--skip-run":
         skip_run = True
+    elif a == "--compare":
+        compare_path = args.pop(0)
+    elif a == "--threshold":
+        threshold = float(args.pop(0))
     else:
-        sys.exit(f"bench_snapshot.py: unknown arg '{a}' (known: --out, --skip-run)")
+        sys.exit(f"bench_snapshot.py: unknown arg '{a}' "
+                 "(known: --out, --skip-run, --compare, --threshold)")
 
 raw_path = "bench_out/hotpath_raw.csv"
 if not skip_run:
@@ -65,3 +79,30 @@ with open(out_path, "w") as f:
     json.dump(doc, f, indent=1, sort_keys=True)
     f.write("\n")
 print(f"OK: {len(rows)} hotpath rows -> {out_path}")
+
+if compare_path:
+    with open(compare_path) as f:
+        prev = json.load(f)
+    prev_means = {r["op"]: r["mean_s"] for r in prev.get("rows", [])}
+    regressions = []
+    print(f"\ncompare vs {compare_path} (threshold {threshold:.2f}x):")
+    for r in rows:
+        base = prev_means.get(r["op"])
+        if base is None:
+            print(f"  {r['op']:<42} NEW (no previous row)")
+            continue
+        ratio = r["mean_s"] / base if base > 0 else float("inf")
+        marker = ""
+        if ratio > threshold:
+            marker = "  <-- REGRESSION"
+            regressions.append((r["op"], ratio))
+        print(f"  {r['op']:<42} {base:.3e}s -> {r['mean_s']:.3e}s "
+              f"({ratio:.2f}x){marker}")
+    for op in prev_means:
+        if op not in {r["op"] for r in rows}:
+            print(f"  {op:<42} DROPPED (no current row)")
+    if regressions:
+        names = ", ".join(f"{op} ({ratio:.2f}x)" for op, ratio in regressions)
+        sys.exit(f"bench_snapshot.py: {len(regressions)} op(s) slowed past "
+                 f"{threshold:.2f}x: {names}")
+    print("compare: no regressions past threshold")

@@ -1,8 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 verification for the repo (referenced from ROADMAP.md):
 #
-#   scripts/ci.sh            build + test + style + benches/examples compile
+#   scripts/ci.sh            build + test + lint + style + benches/examples compile
 #   scripts/ci.sh --fast     skip the style pass
+#   scripts/ci.sh --lint-only  run only `sfw lint` (the repo-native
+#                            static-analysis pass: panic-freedom in the
+#                            protocol hot modules, SAFETY comments, wire
+#                            round-trip coverage, lock-across-IO, error
+#                            variant liveness; writes
+#                            bench_out/lint_report.json) and exit
 #   scripts/ci.sh --smoke    additionally run the deterministic smoke sweep
 #                            (writes bench_out/sweep_smoke.json; the grid
 #                            includes one flaky-net chaos cell per
@@ -25,13 +31,15 @@ cd "$(dirname "$0")/.."
 fast=0
 smoke=0
 bench=0
+lint_only=0
 for arg in "$@"; do
     case "$arg" in
         --fast) fast=1 ;;
         --smoke) smoke=1 ;;
         --bench) bench=1 ;;
+        --lint-only) lint_only=1 ;;
         *)
-            echo "ci.sh: unknown flag '$arg' (known: --fast --smoke --bench)" >&2
+            echo "ci.sh: unknown flag '$arg' (known: --fast --smoke --bench --lint-only)" >&2
             exit 2
             ;;
     esac
@@ -43,11 +51,21 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 1
 fi
 
+if [ "$lint_only" -eq 1 ]; then
+    echo "== sfw lint (static-analysis pass only) =="
+    cargo run --release -- lint
+    echo "ci.sh: OK (lint only)"
+    exit 0
+fi
+
 echo "== cargo build --release =="
 cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== sfw lint (repo-native static analysis) =="
+cargo run --release -- lint
 
 echo "== cargo bench --no-run (benches must keep compiling) =="
 cargo bench --no-run
