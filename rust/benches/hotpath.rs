@@ -20,8 +20,8 @@ use sfw::experiments::{build_ms, build_pnn};
 use sfw::linalg::{power_iteration_rand, FactoredMat, Mat};
 use sfw::objective::Objective;
 use sfw::runtime::{PjrtEngine, PjrtRuntime, Workload};
-use sfw::comms::Wire;
-use sfw::coordinator::messages::UpdateMsg;
+use sfw::comms::{GradCodec, Wire};
+use sfw::coordinator::messages::{DistUp, UpdateMsg};
 use sfw::util::rng::Rng;
 
 const BUDGET: Duration = Duration::from_millis(600);
@@ -156,21 +156,25 @@ fn main() {
     row("replay 64 log entries 196x196", "worker catch-up", &mut || {
         replay(&mut x_rep, &slice);
     });
-    let msg = UpdateMsg {
-        worker_id: 1,
-        t_w: 100,
-        u: u.clone(),
-        v: v.clone(),
-        sigma: 1.0,
-        loss_sum: 0.5,
-        m: 128,
-    };
+    let msg = UpdateMsg::dense(1, 100, u.clone(), v.clone(), 1.0, 0.5, 128);
     let mut buf = Vec::new();
     row("wire codec roundtrip (196+196 floats)", "encode+decode", &mut || {
         buf.clear();
         msg.encode(&mut buf);
         let _ = UpdateMsg::decode(msg.tag(), &buf).unwrap();
     });
+    // compressed dense-gradient uplink: quantize-at-construction + encode,
+    // per codec — the sfw-dist worker's per-round wire cost
+    let g_up = Mat::randn(196, 196, 1.0, &mut rng);
+    for codec in [GradCodec::F32, GradCodec::Bf16, GradCodec::Int8] {
+        let name = format!("dist uplink quantize+encode 196x196 {}", codec.label());
+        let bytes = DistUp::quantized(codec, 1, 10, 0.5, g_up.clone()).wire_bytes();
+        let notes = format!("{bytes} B/frame");
+        row(&name, &notes, &mut || {
+            buf.clear();
+            DistUp::quantized(codec, 1, 10, 0.5, g_up.clone()).encode(&mut buf);
+        });
+    }
 
     // ---- PJRT (artifact) engines ----------------------------------------------
     match PjrtRuntime::new("artifacts") {

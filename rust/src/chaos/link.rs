@@ -288,15 +288,7 @@ mod tests {
     use crate::metrics::Counters;
 
     fn upd(rank: u32, t_w: u64) -> UpdateMsg {
-        UpdateMsg {
-            worker_id: rank,
-            t_w,
-            u: vec![0.25; 6],
-            v: vec![-0.5; 6],
-            sigma: 1.0,
-            loss_sum: 0.5,
-            m: 8,
-        }
+        UpdateMsg::dense(rank, t_w, vec![0.25; 6], vec![-0.5; 6], 1.0, 0.5, 8)
     }
 
     /// A chaos-wrapped rank-0 worker over in-process links, plus the

@@ -16,6 +16,9 @@ fn le_f32(c: &[u8]) -> f32 {
 pub struct Enc<'a>(pub &'a mut Vec<u8>);
 
 impl Enc<'_> {
+    pub fn u16(&mut self, v: u16) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
     pub fn u32(&mut self, v: u32) {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
@@ -42,6 +45,11 @@ impl Enc<'_> {
         for x in &m.data {
             self.f32(*x);
         }
+    }
+    /// Raw bytes, no length prefix (the length is fixed by surrounding
+    /// fields — e.g. the int8 entry block of a quantized gradient).
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.0.extend_from_slice(bytes);
     }
 }
 
@@ -82,6 +90,10 @@ impl<'a> Dec<'a> {
         Ok([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]])
     }
 
+    pub fn u16(&mut self) -> Result<u16, WireError> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
     pub fn u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_le_bytes(self.take4()?))
     }
@@ -116,6 +128,11 @@ impl<'a> Dec<'a> {
         Ok(Mat::from_vec(rows, cols, data))
     }
 
+    /// Raw byte block of a known length (see [`Enc::raw`]).
+    pub fn raw(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        self.take(n)
+    }
+
     /// Assert the payload was consumed exactly.
     pub fn finish(self) -> Result<(), WireError> {
         if self.pos != self.buf.len() {
@@ -133,17 +150,21 @@ mod tests {
     fn scalars_and_vectors_round_trip() {
         let mut buf = Vec::new();
         let mut e = Enc(&mut buf);
+        e.u16(60_000);
         e.u32(7);
         e.u64(1 << 40);
         e.f32(-2.5);
         e.f64(0.125);
         e.f32s(&[1.0, 2.0, 3.0]);
+        e.raw(&[9, 8, 7]);
         let mut d = Dec::new(&buf);
+        assert_eq!(d.u16().unwrap(), 60_000);
         assert_eq!(d.u32().unwrap(), 7);
         assert_eq!(d.u64().unwrap(), 1 << 40);
         assert_eq!(d.f32().unwrap(), -2.5);
         assert_eq!(d.f64().unwrap(), 0.125);
         assert_eq!(d.f32s().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(d.raw(3).unwrap(), &[9, 8, 7]);
         d.finish().unwrap();
     }
 

@@ -85,15 +85,7 @@ mod tests {
     use crate::coordinator::messages::{MasterMsg, UpdateMsg};
 
     fn upd(w: u32, d: usize) -> UpdateMsg {
-        UpdateMsg {
-            worker_id: w,
-            t_w: 0,
-            u: vec![0.0; d],
-            v: vec![0.0; d],
-            sigma: 1.0,
-            loss_sum: 0.0,
-            m: 8,
-        }
+        UpdateMsg::dense(w, 0, vec![0.0; d], vec![0.0; d], 1.0, 0.0, 8)
     }
 
     #[test]

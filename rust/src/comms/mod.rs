@@ -44,6 +44,35 @@
 //! workers regenerate the dataset and the batch schedule locally from
 //! them — shipping the data is exactly what the paper's protocol avoids.
 //!
+//! # Compressed uplink codec + error feedback
+//!
+//! [`GradCodec`] (`--uplink f32 | bf16 | int8`, default `f32`) selects
+//! how the dense payloads of the **uplink** messages — sfw-dist's
+//! per-round partial gradient (`DistUp`) and the async protocols'
+//! rank-one `{u, v}` pair (`UpdateMsg`) — are laid out on the wire.
+//! `bf16` truncates each f32 to 16 bits; `int8` ships one scale per
+//! gradient row (per vector for `UpdateMsg`) plus 1 byte per entry.
+//! Each codec is its own frame tag with a closed-form `wire_bytes()`,
+//! pinned to the real encoding by the round-trip property tests.  The
+//! contract call-sites rely on:
+//!
+//! * **Quantize once, at construction.**  The message constructors
+//!   (`DistUp::quantized`, `UpdateMsg::quantized`) quantize and store
+//!   the *dequantized* values plus the scales, so `encode -> decode` is
+//!   the identity, and local-channel and TCP deliveries are
+//!   bit-identical — receivers never see codec-dependent values.
+//! * **Error feedback on gradients, not atoms.**  Workers on the
+//!   sfw-dist gradient path carry the quantization residual into the
+//!   next round via [`crate::linalg::ErrorFeedback`] (compensate →
+//!   quantize → absorb), which preserves the convergence rate.  The
+//!   async `{u, v}` atoms are unit-normalized directions gated by the
+//!   master's sanity check; they are quantized plainly (no feedback),
+//!   and the ~1/254-per-entry error stays far inside that gate.
+//! * **Poison survives compression.**  bf16 truncation preserves NaN;
+//!   an int8 row with a non-finite entry gets scale = NaN and
+//!   dequantizes to NaN — so the master's finite gate catches poisoned
+//!   gradients under every codec, with no special-casing.
+//!
 //! # Fault injection
 //!
 //! [`crate::chaos`] wraps any [`WorkerLink`] in a deterministic, seeded
@@ -64,10 +93,12 @@
 //! [`metrics::Counters`]: crate::metrics::Counters
 
 pub mod codec;
+pub mod grad_codec;
 pub mod local;
 pub mod tcp;
 
 pub use codec::{Dec, Enc};
+pub use grad_codec::GradCodec;
 pub use local::{local_links, LocalMaster, LocalWorker};
 pub use tcp::{
     connect_retry, tcp_master, tcp_master_on, tcp_master_on_with, tcp_worker, TcpMaster,
@@ -136,15 +167,19 @@ pub trait Wire: Sized + Send + 'static {
     }
 }
 
-/// Serialize a message into one complete frame (header + payload).
+/// Serialize a message into one complete frame (header + payload),
+/// reusing `buf`'s allocation (cleared first).  This is the hot-path
+/// spelling: the TCP endpoints keep one scratch buffer per send
+/// direction, so steady-state framing allocates nothing.
 ///
 /// Panics (sender-side, with the real cause named) if the payload
 /// exceeds [`MAX_FRAME_LEN`]: shipping it would only get the frame
 /// rejected by the receiver as corrupt — and a >= 4 GiB payload would
 /// silently truncate the u32 length prefix and desynchronize the stream.
-pub fn frame<W: Wire>(msg: &W) -> Vec<u8> {
-    let mut buf = vec![0u8; FRAME_HEADER];
-    msg.encode(&mut buf);
+pub fn frame_into<W: Wire>(buf: &mut Vec<u8>, msg: &W) {
+    buf.clear();
+    buf.resize(FRAME_HEADER, 0);
+    msg.encode(buf);
     let payload = buf.len() - FRAME_HEADER;
     assert!(
         payload <= MAX_FRAME_LEN,
@@ -153,6 +188,14 @@ pub fn frame<W: Wire>(msg: &W) -> Vec<u8> {
     );
     buf[..4].copy_from_slice(&(payload as u32).to_le_bytes());
     buf[4] = msg.tag();
+}
+
+/// Serialize a message into one freshly-allocated frame (see
+/// [`frame_into`] for the buffer-pooled hot-path form and the panic
+/// contract).
+pub fn frame<W: Wire>(msg: &W) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(FRAME_HEADER + 64);
+    frame_into(&mut buf, msg);
     buf
 }
 
@@ -190,16 +233,30 @@ mod tests {
 
     #[test]
     fn wire_bytes_is_the_frame_length() {
-        let m = UpdateMsg {
-            worker_id: 1,
-            t_w: 7,
-            u: vec![1.0; 13],
-            v: vec![2.0; 9],
-            sigma: 0.5,
-            loss_sum: 1.25,
-            m: 64,
-        };
+        let m = UpdateMsg::dense(1, 7, vec![1.0; 13], vec![2.0; 9], 0.5, 1.25, 64);
         assert_eq!(m.wire_bytes(), frame(&m).len() as u64);
         assert_eq!(MasterMsg::Stop.wire_bytes(), FRAME_HEADER as u64);
+    }
+
+    #[test]
+    fn frame_into_reuses_the_buffer_and_matches_frame() {
+        let m = UpdateMsg::quantized(
+            GradCodec::Int8,
+            1,
+            7,
+            vec![0.25; 13],
+            vec![-0.5; 9],
+            0.5,
+            1.25,
+            64,
+        );
+        let mut buf = Vec::new();
+        frame_into(&mut buf, &m);
+        assert_eq!(buf, frame(&m));
+        let cap = buf.capacity();
+        // a second, smaller frame reuses the allocation
+        frame_into(&mut buf, &MasterMsg::Stop);
+        assert_eq!(buf, frame(&MasterMsg::Stop));
+        assert_eq!(buf.capacity(), cap);
     }
 }

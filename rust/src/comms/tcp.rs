@@ -14,6 +14,11 @@
 //! when workers are external processes, and the totals equal the local
 //! transport's because both charge exact frame sizes.
 //!
+//! Every endpoint reuses its encode and decode buffers across messages
+//! ([`frame_into`] + [`read_frame_into`]), so steady-state traffic —
+//! including the dense sfw-dist gradient uplink — allocates nothing per
+//! frame.
+//!
 //! [`Counters`]: crate::metrics::Counters
 
 use std::io::{Read, Write};
@@ -24,11 +29,14 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::comms::{
-    frame, MasterLink, Wire, WireError, WorkerLink, FRAME_HEADER, MAX_FRAME_LEN, TAG_HELLO,
+    frame_into, MasterLink, Wire, WireError, WorkerLink, FRAME_HEADER, MAX_FRAME_LEN, TAG_HELLO,
 };
 use crate::metrics::Counters;
 
-fn read_frame(s: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
+/// Read one frame into `payload` (reusing its allocation), returning the
+/// tag.  Each reader — the per-connection master threads and the worker
+/// recv loop — owns one such buffer for the connection's lifetime.
+fn read_frame_into(s: &mut TcpStream, payload: &mut Vec<u8>) -> std::io::Result<u8> {
     let mut head = [0u8; FRAME_HEADER];
     s.read_exact(&mut head)?;
     let len = u32::from_le_bytes([head[0], head[1], head[2], head[3]]) as usize;
@@ -38,10 +46,10 @@ fn read_frame(s: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
             "frame payload length {len} exceeds MAX_FRAME_LEN {MAX_FRAME_LEN}"
         )));
     }
-    let tag = head[4];
-    let mut payload = vec![0u8; len];
-    s.read_exact(&mut payload)?;
-    Ok((tag, payload))
+    payload.clear();
+    payload.resize(len, 0);
+    s.read_exact(payload)?;
+    Ok(head[4])
 }
 
 fn hello_frame(rank: u32) -> Vec<u8> {
@@ -74,6 +82,8 @@ pub struct TcpMaster<Up, Down> {
     rx: Receiver<Up>,
     write_halves: Vec<TcpStream>,
     counters: Arc<Counters>,
+    /// Reused downlink encode buffer (see module docs).
+    scratch: Vec<u8>,
     _down: PhantomData<fn(Down)>,
 }
 
@@ -136,8 +146,9 @@ pub fn tcp_master_on_with<Up: Wire, Down: Wire>(
         // promptly.  The timeout is cleared once the worker is validated —
         // protocol reads may legitimately block for minutes.
         let _ = stream.set_read_timeout(Some(hello_timeout));
-        let rank = match read_frame(&mut stream) {
-            Ok((tag, payload)) => match decode_hello(tag, &payload) {
+        let mut hello = Vec::new();
+        let rank = match read_frame_into(&mut stream, &mut hello) {
+            Ok(tag) => match decode_hello(tag, &hello) {
                 Ok(rank) if rank < workers && write_halves[rank].is_none() => rank,
                 Ok(rank) => {
                     eprintln!("comms: rejecting {peer}: rank {rank} out of range or duplicate");
@@ -157,24 +168,27 @@ pub fn tcp_master_on_with<Up: Wire, Down: Wire>(
         write_halves[rank] = Some(stream.try_clone()?);
         let tx = tx.clone();
         let counters = counters.clone();
-        std::thread::spawn(move || loop {
-            match read_frame(&mut stream) {
-                Ok((tag, payload)) => {
-                    let bytes = (FRAME_HEADER + payload.len()) as u64;
-                    match Up::decode(tag, &payload) {
-                        Ok(msg) => {
-                            counters.add_up(bytes);
-                            if tx.send(msg).is_err() {
+        std::thread::spawn(move || {
+            let mut payload = Vec::new();
+            loop {
+                match read_frame_into(&mut stream, &mut payload) {
+                    Ok(tag) => {
+                        let bytes = (FRAME_HEADER + payload.len()) as u64;
+                        match Up::decode(tag, &payload) {
+                            Ok(msg) => {
+                                counters.add_up(bytes);
+                                if tx.send(msg).is_err() {
+                                    return;
+                                }
+                            }
+                            Err(e) => {
+                                eprintln!("comms: closing worker {rank}: {e}");
                                 return;
                             }
                         }
-                        Err(e) => {
-                            eprintln!("comms: closing worker {rank}: {e}");
-                            return;
-                        }
                     }
+                    Err(_) => return,
                 }
-                Err(_) => return,
             }
         });
         accepted += 1;
@@ -185,7 +199,7 @@ pub fn tcp_master_on_with<Up: Wire, Down: Wire>(
     if write_halves.len() != workers {
         return Err(io_invalid("accept loop exited with unfilled worker rank slots"));
     }
-    Ok(TcpMaster { rx, write_halves, counters, _down: PhantomData })
+    Ok(TcpMaster { rx, write_halves, counters, scratch: Vec::new(), _down: PhantomData })
 }
 
 /// Bind `addr` and accept exactly `workers` connections.  Returns the
@@ -206,9 +220,9 @@ impl<Up: Wire, Down: Wire> MasterLink<Up, Down> for TcpMaster<Up, Down> {
     }
 
     fn send_to(&mut self, w: usize, msg: Down) {
-        let f = frame(&msg);
-        if self.write_halves[w].write_all(&f).is_ok() {
-            self.counters.add_down(f.len() as u64);
+        frame_into(&mut self.scratch, &msg);
+        if self.write_halves[w].write_all(&self.scratch).is_ok() {
+            self.counters.add_down(self.scratch.len() as u64);
         }
     }
 
@@ -221,6 +235,10 @@ impl<Up: Wire, Down: Wire> MasterLink<Up, Down> for TcpMaster<Up, Down> {
 
 pub struct TcpWorker<Up, Down> {
     stream: TcpStream,
+    /// Reused uplink encode buffer (see module docs).
+    scratch: Vec<u8>,
+    /// Reused downlink decode buffer.
+    payload: Vec<u8>,
     _proto: PhantomData<fn(Up) -> Down>,
 }
 
@@ -232,7 +250,7 @@ pub fn tcp_worker<Up: Wire, Down: Wire>(
     let mut stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true)?;
     stream.write_all(&hello_frame(rank))?;
-    Ok(TcpWorker { stream, _proto: PhantomData })
+    Ok(TcpWorker { stream, scratch: Vec::new(), payload: Vec::new(), _proto: PhantomData })
 }
 
 /// [`tcp_worker`], retrying until `timeout` — for external worker
@@ -255,12 +273,13 @@ pub fn connect_retry<Up: Wire, Down: Wire>(
 impl<Up: Wire, Down: Wire> WorkerLink<Up, Down> for TcpWorker<Up, Down> {
     fn send(&mut self, msg: Up) {
         // Uplink bytes are counted once, master-side (see module docs).
-        let _ = self.stream.write_all(&frame(&msg));
+        frame_into(&mut self.scratch, &msg);
+        let _ = self.stream.write_all(&self.scratch);
     }
 
     fn recv(&mut self) -> Option<Down> {
-        let (tag, payload) = read_frame(&mut self.stream).ok()?;
-        match Down::decode(tag, &payload) {
+        let tag = read_frame_into(&mut self.stream, &mut self.payload).ok()?;
+        match Down::decode(tag, &self.payload) {
             Ok(m) => Some(m),
             Err(e) => {
                 eprintln!("comms: bad frame from master: {e}");
@@ -277,15 +296,7 @@ mod tests {
     use crate::linalg::Mat;
 
     fn upd(id: u32) -> UpdateMsg {
-        UpdateMsg {
-            worker_id: id,
-            t_w: 17,
-            u: vec![1.0, -2.5, 3.25],
-            v: vec![0.5, 4.0],
-            sigma: 6.5,
-            loss_sum: 2.25,
-            m: 99,
-        }
+        UpdateMsg::dense(id, 17, vec![1.0, -2.5, 3.25], vec![0.5, 4.0], 6.5, 2.25, 99)
     }
 
     #[test]
@@ -356,12 +367,7 @@ mod tests {
             }
             other => panic!("expected Compute, got {other:?}"),
         }
-        w.send(DistUp {
-            worker_id: 0,
-            k: 3,
-            loss_sum: 1.0,
-            grad: Mat::from_vec(1, 2, vec![0.5, -0.5]),
-        });
+        w.send(DistUp::dense(0, 3, 1.0, Mat::from_vec(1, 2, vec![0.5, -0.5])));
         assert!(matches!(w.recv(), Some(DistDown::Stop)));
         handle.join().unwrap();
     }

@@ -121,6 +121,10 @@ pub struct TrainConfig {
     /// Iterate representation: "auto" | "dense" | "factored" (auto =
     /// per-objective default; see `session::ReprKind`).
     pub repr: String,
+    /// Uplink gradient codec: "f32" | "bf16" | "int8" (see
+    /// `comms::GradCodec`; lossy codecs require a solver with a
+    /// compressible uplink).
+    pub uplink: String,
     pub theta: f32,
     pub seed: u64,
     pub eval_every: u64,
@@ -158,6 +162,7 @@ impl Default for TrainConfig {
             batch_scale: 0.5,
             power_iters: 24,
             repr: "auto".into(),
+            uplink: "f32".into(),
             theta: 1.0,
             seed: 42,
             eval_every: 10,
@@ -198,8 +203,8 @@ impl TrainConfig {
         const TRAIN_KEYS: &[&str] = &[
             "task", "algo", "engine", "transport", "tcp-bind", "tcp-await",
             "artifacts-dir", "workers", "tau", "iterations", "epochs", "batch",
-            "batch-cap", "batch-scale", "power-iters", "repr", "theta", "seed",
-            "eval-every",
+            "batch-cap", "batch-scale", "power-iters", "repr", "uplink", "theta",
+            "seed", "eval-every",
         ];
         const DATA_KEYS: &[&str] = &["ms-n", "ms-d", "ms-rank", "ms-noise", "pnn-n", "pnn-d"];
 
@@ -247,6 +252,7 @@ impl TrainConfig {
             batch_scale: cfg.get("batch-scale", d.batch_scale)?,
             power_iters: cfg.get("power-iters", d.power_iters)?,
             repr: cfg.get_str("repr", &d.repr),
+            uplink: cfg.get_str("uplink", &d.uplink),
             theta: cfg.get("theta", d.theta)?,
             seed: cfg.get("seed", d.seed)?,
             eval_every: cfg.get("eval-every", d.eval_every)?,
@@ -316,6 +322,17 @@ n = 90000
         assert_eq!(tc.engine, "pjrt");
         assert_eq!(tc.iterations, 300); // default survives
         assert_eq!(tc.transport, "local"); // new default
+        assert_eq!(tc.uplink, "f32"); // uncompressed default
+    }
+
+    #[test]
+    fn uplink_key_resolves_from_cli_and_file() {
+        let args =
+            Args::parse_from("--uplink int8".split_whitespace().map(String::from));
+        assert_eq!(TrainConfig::load(&args).unwrap().uplink, "int8");
+        let cfg = Config::from_str("[train]\nuplink = bf16\n").unwrap();
+        let tc = TrainConfig::resolve(cfg, &Args::parse_from(std::iter::empty::<String>())).unwrap();
+        assert_eq!(tc.uplink, "bf16");
     }
 
     #[test]

@@ -15,20 +15,51 @@
 
 use std::sync::Arc;
 
-use crate::comms::{Dec, Enc, Wire, WireError};
+use crate::comms::grad_codec::{
+    bf16_bits, bf16_from_bits, bf16_truncate, int8_dequant, int8_quant, int8_scale,
+};
+use crate::comms::{Dec, Enc, GradCodec, Wire, WireError};
 use crate::linalg::Mat;
 
 // ------------------------------------------------- SFW-asyn / SVRF-asyn
 
 /// Frame tags of the asynchronous rank-one protocol (Algorithms 3/5).
+/// The `_BF16`/`_INT8` tags are the compressed-uplink spellings of
+/// `TAG_UPDATE` (`--uplink`; see [`GradCodec`] and the `sfw::comms`
+/// module docs for the codec contract).
 pub const TAG_UPDATE: u8 = 1;
 pub const TAG_UPDATES: u8 = 2;
 pub const TAG_STOP: u8 = 3;
 pub const TAG_UPDATE_W: u8 = 4;
+pub const TAG_UPDATE_BF16: u8 = 5;
+pub const TAG_UPDATE_INT8: u8 = 6;
+
+/// Decode a length-prefixed bf16 vector back to f32.
+fn decode_bf16s(d: &mut Dec) -> Result<Vec<f32>, WireError> {
+    let n = d.u32()? as usize;
+    let nb = n.checked_mul(2).ok_or(WireError::Malformed("vector length overflow"))?;
+    let bytes = d.raw(nb)?;
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| bf16_from_bits(u16::from_le_bytes([c[0], c[1]])))
+        .collect())
+}
+
+/// Decode a length-prefixed int8 vector against its scale.
+fn decode_i8s(d: &mut Dec, s: f32) -> Result<Vec<f32>, WireError> {
+    let n = d.u32()? as usize;
+    let bytes = d.raw(n)?;
+    Ok(bytes.iter().map(|&b| int8_dequant(b as i8, s)).collect())
+}
 
 /// Rank-one LMO result sent worker -> master: `{u_w, v_w, t_w}` plus the
 /// minibatch loss ride-along (f32 telemetry, negligible on the wire).
-#[derive(Clone, Debug)]
+///
+/// Under a lossy uplink codec the vectors are quantized **once, at
+/// construction** ([`UpdateMsg::quantized`]): the struct stores the
+/// dequantized values plus the int8 scales, so encode -> decode is the
+/// identity and every transport delivers bit-identical atoms.
+#[derive(Clone, Debug, PartialEq)]
 pub struct UpdateMsg {
     pub worker_id: u32,
     /// Iteration of the model copy the update was computed against.
@@ -39,6 +70,11 @@ pub struct UpdateMsg {
     pub loss_sum: f64,
     /// True minibatch size used.
     pub m: u32,
+    /// Uplink codec this message is framed with (picks the frame tag).
+    pub codec: GradCodec,
+    /// Per-vector int8 scales (0.0 unless `codec == Int8`).
+    pub u_scale: f32,
+    pub v_scale: f32,
 }
 
 impl UpdateMsg {
@@ -47,21 +83,84 @@ impl UpdateMsg {
     /// master's reply (Byzantine misrouting — out of scope for the
     /// rank-addressed reply protocol); everything after it — `t_w`,
     /// telemetry, the update vectors — is fair corruption game, handled
-    /// by the master's semantic gates.
+    /// by the master's semantic gates.  Every codec variant shares this
+    /// prefix, so one guard covers all three tags.
     pub const CORRUPT_GUARD: usize = 4;
+
+    /// Uncompressed (f32) update — the default protocol message, with
+    /// the legacy wire layout.
+    pub fn dense(
+        worker_id: u32,
+        t_w: u64,
+        u: Vec<f32>,
+        v: Vec<f32>,
+        sigma: f32,
+        loss_sum: f64,
+        m: u32,
+    ) -> Self {
+        Self::quantized(GradCodec::F32, worker_id, t_w, u, v, sigma, loss_sum, m)
+    }
+
+    /// Quantize `{u, v}` through `codec` (identity for `F32`).  Plain
+    /// quantization, no error feedback: the atoms are unit-normalized
+    /// directions gated by the master's `sane_rank_one` check, and the
+    /// per-entry error (<= 1/254 of the max entry for int8) stays far
+    /// inside that gate's norm window.
+    #[allow(clippy::too_many_arguments)]
+    pub fn quantized(
+        codec: GradCodec,
+        worker_id: u32,
+        t_w: u64,
+        mut u: Vec<f32>,
+        mut v: Vec<f32>,
+        sigma: f32,
+        loss_sum: f64,
+        m: u32,
+    ) -> Self {
+        let (mut u_scale, mut v_scale) = (0.0f32, 0.0f32);
+        match codec {
+            GradCodec::F32 => {}
+            GradCodec::Bf16 => {
+                for x in u.iter_mut().chain(v.iter_mut()) {
+                    *x = bf16_truncate(*x);
+                }
+            }
+            GradCodec::Int8 => {
+                u_scale = int8_scale(&u);
+                v_scale = int8_scale(&v);
+                for x in u.iter_mut() {
+                    *x = int8_dequant(int8_quant(*x, u_scale), u_scale);
+                }
+                for x in v.iter_mut() {
+                    *x = int8_dequant(int8_quant(*x, v_scale), v_scale);
+                }
+            }
+        }
+        UpdateMsg { worker_id, t_w, u, v, sigma, loss_sum, m, codec, u_scale, v_scale }
+    }
 }
 
 impl Wire for UpdateMsg {
     fn tag(&self) -> u8 {
-        TAG_UPDATE
+        match self.codec {
+            GradCodec::F32 => TAG_UPDATE,
+            GradCodec::Bf16 => TAG_UPDATE_BF16,
+            GradCodec::Int8 => TAG_UPDATE_INT8,
+        }
     }
 
-    /// O(1) closed form of the encoded frame size; pinned equal to the
-    /// real encoding by `tests/properties.rs::wire_bytes_exact`.
+    /// O(1) closed form of the encoded frame size per codec; pinned
+    /// equal to the real encoding by `tests/properties.rs::wire_bytes_exact`.
     fn wire_bytes(&self) -> u64 {
-        crate::comms::FRAME_HEADER as u64
-            + (4 + 8 + 4 + 8 + 4 + 4 + 4) as u64
-            + 4 * (self.u.len() + self.v.len()) as u64
+        let header =
+            crate::comms::FRAME_HEADER as u64 + (4 + 8 + 4 + 8 + 4 + 4 + 4) as u64;
+        let n = (self.u.len() + self.v.len()) as u64;
+        match self.codec {
+            GradCodec::F32 => header + 4 * n,
+            GradCodec::Bf16 => header + 2 * n,
+            // two per-vector f32 scales + 1 byte/entry
+            GradCodec::Int8 => header + 8 + n,
+        }
     }
 
     fn encode(&self, buf: &mut Vec<u8>) {
@@ -71,26 +170,58 @@ impl Wire for UpdateMsg {
         e.f32(self.sigma);
         e.f64(self.loss_sum);
         e.u32(self.m);
-        e.f32s(&self.u);
-        e.f32s(&self.v);
+        match self.codec {
+            GradCodec::F32 => {
+                e.f32s(&self.u);
+                e.f32s(&self.v);
+            }
+            GradCodec::Bf16 => {
+                for vec in [&self.u, &self.v] {
+                    e.u32(vec.len() as u32);
+                    for &x in vec.iter() {
+                        e.u16(bf16_bits(x));
+                    }
+                }
+            }
+            GradCodec::Int8 => {
+                for (vec, s) in [(&self.u, self.u_scale), (&self.v, self.v_scale)] {
+                    e.f32(s);
+                    e.u32(vec.len() as u32);
+                    for &x in vec.iter() {
+                        e.0.push(int8_quant(x, s) as u8);
+                    }
+                }
+            }
+        }
     }
 
     fn decode(tag: u8, payload: &[u8]) -> Result<Self, WireError> {
-        if tag != TAG_UPDATE {
-            return Err(WireError::BadTag(tag));
-        }
+        let codec = match tag {
+            TAG_UPDATE => GradCodec::F32,
+            TAG_UPDATE_BF16 => GradCodec::Bf16,
+            TAG_UPDATE_INT8 => GradCodec::Int8,
+            t => return Err(WireError::BadTag(t)),
+        };
         let mut d = Dec::new(payload);
-        let msg = UpdateMsg {
-            worker_id: d.u32()?,
-            t_w: d.u64()?,
-            sigma: d.f32()?,
-            loss_sum: d.f64()?,
-            m: d.u32()?,
-            u: d.f32s()?,
-            v: d.f32s()?,
+        let worker_id = d.u32()?;
+        let t_w = d.u64()?;
+        let sigma = d.f32()?;
+        let loss_sum = d.f64()?;
+        let m = d.u32()?;
+        let (mut u_scale, mut v_scale) = (0.0f32, 0.0f32);
+        let (u, v) = match codec {
+            GradCodec::F32 => (d.f32s()?, d.f32s()?),
+            GradCodec::Bf16 => (decode_bf16s(&mut d)?, decode_bf16s(&mut d)?),
+            GradCodec::Int8 => {
+                u_scale = d.f32()?;
+                let u = decode_i8s(&mut d, u_scale)?;
+                v_scale = d.f32()?;
+                let v = decode_i8s(&mut d, v_scale)?;
+                (u, v)
+            }
         };
         d.finish()?;
-        Ok(msg)
+        Ok(UpdateMsg { worker_id, t_w, u, v, sigma, loss_sum, m, codec, u_scale, v_scale })
     }
 }
 
@@ -213,18 +344,28 @@ impl Wire for MasterMsg {
 
 // --------------------------------------------------------- SFW-dist
 
-/// Frame tags of the synchronous SFW-dist protocol (Algorithm 1).
+/// Frame tags of the synchronous SFW-dist protocol (Algorithm 1).  The
+/// uplink (`DistUp`) and downlink (`DistDown`) are decoded by different
+/// types, so their tag spaces are independent; the compressed-gradient
+/// tags still avoid the downlink's 1/2/3 to keep hexdumps unambiguous.
 pub const TAG_DIST_GRAD: u8 = 1;
 pub const TAG_DIST_COMPUTE: u8 = 1;
 pub const TAG_DIST_STOP: u8 = 2;
 pub const TAG_DIST_COMPUTE_FACTORED: u8 = 3;
+pub const TAG_DIST_GRAD_BF16: u8 = 4;
+pub const TAG_DIST_GRAD_INT8: u8 = 5;
 
 /// Worker -> master round reply: the dense partial gradient —
 /// O(D1 * D2) on the wire, the cost the paper's protocol eliminates.
 /// Carries the round index `k` it answers, so the barrier can discard
 /// duplicated or straggling frames from earlier rounds instead of
 /// folding a stale gradient into the wrong reduction.
-#[derive(Clone, Debug)]
+///
+/// Under `--uplink bf16|int8` the gradient is quantized **once, at
+/// construction** ([`DistUp::quantized`]): `grad` holds the dequantized
+/// entries and `scales` the per-row int8 scales, so encode -> decode is
+/// the identity and the master's reduction is transport-independent.
+#[derive(Clone, Debug, PartialEq)]
 pub struct DistUp {
     pub worker_id: u32,
     /// Round (master iteration) this reply answers — echoed from
@@ -234,6 +375,10 @@ pub struct DistUp {
     /// the master reports full-objective loss via the evaluator).
     pub loss_sum: f64,
     pub grad: Mat,
+    /// Uplink codec this message is framed with (picks the frame tag).
+    pub codec: GradCodec,
+    /// One int8 scale per gradient row (empty unless `codec == Int8`).
+    pub scales: Vec<f32>,
 }
 
 impl DistUp {
@@ -242,19 +387,67 @@ impl DistUp {
     /// flipped round index would make the barrier wait forever for a
     /// reply that already arrived under the wrong round — the
     /// synchronous protocol has no retransmission to recover with.
+    /// Every codec variant shares this prefix, so one guard covers all
+    /// three tags.
     pub const CORRUPT_GUARD: usize = 4 + 8;
+
+    /// Uncompressed (f32) reply — the default protocol message, with the
+    /// legacy wire layout.
+    pub fn dense(worker_id: u32, k: u64, loss_sum: f64, grad: Mat) -> Self {
+        Self::quantized(GradCodec::F32, worker_id, k, loss_sum, grad)
+    }
+
+    /// Quantize the gradient through `codec` (identity for `F32`).
+    /// int8 scales are per row: one f32 of overhead buys each row its
+    /// own dynamic range, so a single large entry cannot flatten the
+    /// whole matrix to zero.  Callers on the gradient path pair this
+    /// with [`crate::linalg::ErrorFeedback`] (compensate before, absorb
+    /// the dequantized `grad` after); a non-finite entry poisons its
+    /// row's scale to NaN so the master's finite gate still fires.
+    pub fn quantized(codec: GradCodec, worker_id: u32, k: u64, loss_sum: f64, mut grad: Mat) -> Self {
+        let mut scales = Vec::new();
+        match codec {
+            GradCodec::F32 => {}
+            GradCodec::Bf16 => {
+                for x in grad.data.iter_mut() {
+                    *x = bf16_truncate(*x);
+                }
+            }
+            GradCodec::Int8 => {
+                scales = Vec::with_capacity(grad.rows);
+                for r in 0..grad.rows {
+                    let row = r * grad.cols..(r + 1) * grad.cols;
+                    let s = int8_scale(&grad.data[row.clone()]);
+                    for x in &mut grad.data[row] {
+                        *x = int8_dequant(int8_quant(*x, s), s);
+                    }
+                    scales.push(s);
+                }
+            }
+        }
+        DistUp { worker_id, k, loss_sum, grad, codec, scales }
+    }
 }
 
 impl Wire for DistUp {
     fn tag(&self) -> u8 {
-        TAG_DIST_GRAD
+        match self.codec {
+            GradCodec::F32 => TAG_DIST_GRAD,
+            GradCodec::Bf16 => TAG_DIST_GRAD_BF16,
+            GradCodec::Int8 => TAG_DIST_GRAD_INT8,
+        }
     }
 
-    /// O(1) closed form, pinned to the codec by property test.
+    /// O(1) closed form per codec, pinned to the codec by property test.
     fn wire_bytes(&self) -> u64 {
-        crate::comms::FRAME_HEADER as u64
-            + (4 + 8 + 8 + 4 + 4) as u64
-            + 4 * self.grad.data.len() as u64
+        let header = crate::comms::FRAME_HEADER as u64 + (4 + 8 + 8 + 4 + 4) as u64;
+        let n = self.grad.data.len() as u64;
+        match self.codec {
+            GradCodec::F32 => header + 4 * n,
+            GradCodec::Bf16 => header + 2 * n,
+            // one f32 scale per row + 1 byte per entry
+            GradCodec::Int8 => header + 4 * self.grad.rows as u64 + n,
+        }
     }
 
     fn encode(&self, buf: &mut Vec<u8>) {
@@ -262,15 +455,81 @@ impl Wire for DistUp {
         e.u32(self.worker_id);
         e.u64(self.k);
         e.f64(self.loss_sum);
-        e.mat(&self.grad);
+        match self.codec {
+            GradCodec::F32 => e.mat(&self.grad),
+            GradCodec::Bf16 => {
+                e.u32(self.grad.rows as u32);
+                e.u32(self.grad.cols as u32);
+                for &x in &self.grad.data {
+                    e.u16(bf16_bits(x));
+                }
+            }
+            GradCodec::Int8 => {
+                e.u32(self.grad.rows as u32);
+                e.u32(self.grad.cols as u32);
+                for &s in &self.scales {
+                    e.f32(s);
+                }
+                for r in 0..self.grad.rows {
+                    let s = self.scales[r];
+                    for c in 0..self.grad.cols {
+                        e.0.push(int8_quant(self.grad.at(r, c), s) as u8);
+                    }
+                }
+            }
+        }
     }
 
     fn decode(tag: u8, payload: &[u8]) -> Result<Self, WireError> {
-        if tag != TAG_DIST_GRAD {
-            return Err(WireError::BadTag(tag));
-        }
+        let codec = match tag {
+            TAG_DIST_GRAD => GradCodec::F32,
+            TAG_DIST_GRAD_BF16 => GradCodec::Bf16,
+            TAG_DIST_GRAD_INT8 => GradCodec::Int8,
+            t => return Err(WireError::BadTag(t)),
+        };
         let mut d = Dec::new(payload);
-        let msg = DistUp { worker_id: d.u32()?, k: d.u64()?, loss_sum: d.f64()?, grad: d.mat()? };
+        let worker_id = d.u32()?;
+        let k = d.u64()?;
+        let loss_sum = d.f64()?;
+        let mut scales = Vec::new();
+        let grad = match codec {
+            GradCodec::F32 => d.mat()?,
+            GradCodec::Bf16 => {
+                let rows = d.u32()? as usize;
+                let cols = d.u32()? as usize;
+                let nb = rows
+                    .checked_mul(cols)
+                    .and_then(|n| n.checked_mul(2))
+                    .ok_or(WireError::Malformed("matrix dims overflow"))?;
+                let bytes = d.raw(nb)?;
+                let data = bytes
+                    .chunks_exact(2)
+                    .map(|c| bf16_from_bits(u16::from_le_bytes([c[0], c[1]])))
+                    .collect();
+                Mat::from_vec(rows, cols, data)
+            }
+            GradCodec::Int8 => {
+                let rows = d.u32()? as usize;
+                let cols = d.u32()? as usize;
+                let n = rows
+                    .checked_mul(cols)
+                    .ok_or(WireError::Malformed("matrix dims overflow"))?;
+                scales = Vec::with_capacity(rows);
+                for _ in 0..rows {
+                    scales.push(d.f32()?);
+                }
+                let bytes = d.raw(n)?;
+                let mut data = Vec::with_capacity(n);
+                for r in 0..rows {
+                    let s = scales[r];
+                    for c in 0..cols {
+                        data.push(int8_dequant(bytes[r * cols + c] as i8, s));
+                    }
+                }
+                Mat::from_vec(rows, cols, data)
+            }
+        };
+        let msg = DistUp { worker_id, k, loss_sum, grad, codec, scales };
         d.finish()?;
         Ok(msg)
     }
@@ -402,19 +661,39 @@ mod tests {
 
     #[test]
     fn update_msg_is_linear_in_d1_plus_d2() {
-        let m = UpdateMsg {
-            worker_id: 0,
-            t_w: 10,
-            u: vec![0.0; 30],
-            v: vec![0.0; 40],
-            sigma: 1.0,
-            loss_sum: 0.0,
-            m: 64,
-        };
+        let m = UpdateMsg::dense(0, 10, vec![0.0; 30], vec![0.0; 40], 1.0, 0.0, 64);
         // 5-byte frame header + 36-byte payload header + 4*(30+40)
         assert_eq!(m.wire_bytes(), (FRAME_HEADER + 36) as u64 + 280);
         // crucially NOT 4 * 30 * 40 (the dense-gradient cost)
         assert!(m.wire_bytes() < 4 * 30 * 40);
+    }
+
+    #[test]
+    fn quantized_update_msg_shrinks_and_round_trips_exactly() {
+        let u: Vec<f32> = (0..30).map(|i| (i as f32 * 0.37).sin() * 0.4).collect();
+        let v: Vec<f32> = (0..40).map(|i| (i as f32 * 0.23).cos() * 0.3).collect();
+        let f32_bytes =
+            UpdateMsg::dense(2, 9, u.clone(), v.clone(), 1.5, 0.25, 64).wire_bytes();
+        for codec in [GradCodec::Bf16, GradCodec::Int8] {
+            let m = UpdateMsg::quantized(codec, 2, 9, u.clone(), v.clone(), 1.5, 0.25, 64);
+            // quantize-once: the struct already holds dequantized values,
+            // so encode -> decode is the identity
+            let mut buf = Vec::new();
+            m.encode(&mut buf);
+            let d = UpdateMsg::decode(m.tag(), &buf).unwrap();
+            assert_eq!(d, m);
+            // compressed variants are strictly smaller than f32
+            assert!(m.wire_bytes() < f32_bytes, "{codec:?} did not shrink");
+            // quantization error stays far inside the sane_rank_one gate
+            let err: f32 = m.u.iter().zip(&u).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+            assert!(err < 0.4 / 127.0 + 1e-3, "{codec:?} error {err}");
+        }
+        // closed forms: bf16 halves the vector bytes; int8 quarters them
+        // (plus two f32 scales)
+        let bf = UpdateMsg::quantized(GradCodec::Bf16, 2, 9, u.clone(), v.clone(), 1.5, 0.25, 64);
+        assert_eq!(bf.wire_bytes(), (FRAME_HEADER + 36) as u64 + 2 * 70);
+        let i8m = UpdateMsg::quantized(GradCodec::Int8, 2, 9, u, v, 1.5, 0.25, 64);
+        assert_eq!(i8m.wire_bytes(), (FRAME_HEADER + 36) as u64 + 8 + 70);
     }
 
     #[test]
@@ -433,15 +712,7 @@ mod tests {
 
     #[test]
     fn asyn_codec_round_trips() {
-        let m = UpdateMsg {
-            worker_id: 3,
-            t_w: 17,
-            u: vec![1.0, -2.5, 3.25],
-            v: vec![0.5, 4.0],
-            sigma: 6.5,
-            loss_sum: 2.25,
-            m: 99,
-        };
+        let m = UpdateMsg::dense(3, 17, vec![1.0, -2.5, 3.25], vec![0.5, 4.0], 6.5, 2.25, 99);
         let mut buf = Vec::new();
         m.encode(&mut buf);
         let d = UpdateMsg::decode(m.tag(), &buf).unwrap();
@@ -471,11 +742,55 @@ mod tests {
     fn dist_messages_cost_d1_times_d2() {
         let x = Mat::zeros(30, 40);
         let down = DistDown::Compute { k: 1, m_share: 16, x: Arc::new(x.clone()) };
-        let up = DistUp { worker_id: 0, k: 1, loss_sum: 0.0, grad: x };
+        let up = DistUp::dense(0, 1, 0.0, x);
         // both directions carry the dense matrix: >= 4 * D1 * D2 bytes
         assert!(down.wire_bytes() >= 4 * 30 * 40);
         assert!(up.wire_bytes() >= 4 * 30 * 40);
         assert_eq!(DistDown::Stop.wire_bytes(), FRAME_HEADER as u64);
+    }
+
+    #[test]
+    fn quantized_dist_up_shrinks_and_round_trips_exactly() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let g = Mat::randn(30, 40, 0.8, &mut rng);
+        let f32_bytes = DistUp::dense(1, 4, 0.5, g.clone()).wire_bytes();
+        for codec in [GradCodec::Bf16, GradCodec::Int8] {
+            let up = DistUp::quantized(codec, 1, 4, 0.5, g.clone());
+            let mut buf = Vec::new();
+            up.encode(&mut buf);
+            let d = DistUp::decode(up.tag(), &buf).unwrap();
+            assert_eq!(d, up, "{codec:?} encode/decode is not the identity");
+            assert!(up.wire_bytes() < f32_bytes, "{codec:?} did not shrink");
+        }
+        // closed forms: bf16 = 2 B/entry; int8 = 1 B/entry + 4 B/row.
+        // The int8 uplink is a >= 3.6x byte win over f32 at this shape —
+        // the ratio check_smoke_bytes.py asserts end-to-end.
+        let bf = DistUp::quantized(GradCodec::Bf16, 1, 4, 0.5, g.clone());
+        assert_eq!(bf.wire_bytes(), (FRAME_HEADER + 28) as u64 + 2 * 1200);
+        let i8m = DistUp::quantized(GradCodec::Int8, 1, 4, 0.5, g.clone());
+        assert_eq!(i8m.wire_bytes(), (FRAME_HEADER + 28) as u64 + 4 * 30 + 1200);
+        assert!(f32_bytes as f64 / i8m.wire_bytes() as f64 > 3.6);
+    }
+
+    #[test]
+    fn quantized_dist_up_poisons_non_finite_rows() {
+        // A worker that hits a non-finite gradient ships NaN under every
+        // codec, so the master's finite gate fires transport- and
+        // codec-independently.
+        let mut g = Mat::zeros(4, 3);
+        g.data[5] = f32::INFINITY;
+        for codec in GradCodec::ALL {
+            let up = DistUp::quantized(*codec, 0, 1, 0.0, g.clone());
+            assert!(
+                up.grad.data.iter().any(|x| !x.is_finite()),
+                "{codec:?} lost the poison marker"
+            );
+            // ...and only the poisoned row, for the scaled codec
+            if *codec == GradCodec::Int8 {
+                assert!(up.grad.data[3..6].iter().all(|x| x.is_nan()));
+                assert!(up.grad.data[..3].iter().all(|x| x.is_finite()));
+            }
+        }
     }
 
     #[test]
@@ -520,20 +835,26 @@ mod tests {
 
     #[test]
     fn truncated_frames_error_not_panic() {
-        let m = UpdateMsg {
-            worker_id: 1,
-            t_w: 2,
-            u: vec![1.0; 4],
-            v: vec![1.0; 4],
-            sigma: 0.0,
-            loss_sum: 0.0,
-            m: 1,
-        };
+        let m = UpdateMsg::dense(1, 2, vec![1.0; 4], vec![1.0; 4], 0.0, 0.0, 1);
         let mut buf = Vec::new();
         m.encode(&mut buf);
         assert!(UpdateMsg::decode(m.tag(), &buf[..buf.len() - 3]).is_err());
         let mut extended = buf.clone();
         extended.push(0);
         assert!(UpdateMsg::decode(m.tag(), &extended).is_err());
+        // same contract for the compressed spellings
+        for codec in [GradCodec::Bf16, GradCodec::Int8] {
+            let m = UpdateMsg::quantized(codec, 1, 2, vec![1.0; 4], vec![1.0; 4], 0.0, 0.0, 1);
+            let mut buf = Vec::new();
+            m.encode(&mut buf);
+            assert!(UpdateMsg::decode(m.tag(), &buf[..buf.len() - 1]).is_err());
+            let up = DistUp::quantized(codec, 1, 2, 0.0, Mat::zeros(3, 3));
+            let mut buf = Vec::new();
+            up.encode(&mut buf);
+            assert!(DistUp::decode(up.tag(), &buf[..buf.len() - 1]).is_err());
+            let mut extended = buf.clone();
+            extended.push(0);
+            assert!(DistUp::decode(up.tag(), &extended).is_err());
+        }
     }
 }

@@ -22,6 +22,7 @@ use std::sync::Arc;
 
 use crate::algo::schedule::BatchSchedule;
 use crate::chaos::ChaosCounters;
+use crate::comms::GradCodec;
 use crate::coordinator::worker::Straggler;
 use crate::linalg::{Mat, Repr};
 use crate::metrics::{Counters, LossTrace};
@@ -35,6 +36,8 @@ pub struct AsynOptions {
     pub straggler: Option<Straggler>,
     /// Iterate representation shared by master and workers.
     pub repr: Repr,
+    /// Uplink codec for the rank-one `{u, v}` updates.
+    pub uplink: GradCodec,
 }
 
 impl Default for AsynOptions {
@@ -47,6 +50,7 @@ impl Default for AsynOptions {
             seed: 42,
             straggler: None,
             repr: Repr::Dense,
+            uplink: GradCodec::F32,
         }
     }
 }
@@ -92,6 +96,7 @@ mod tests {
             seed: 96,
             straggler: None,
             repr: Repr::Dense,
+            uplink: GradCodec::F32,
         };
         let o2 = obj.clone();
         let r = harness::run_asyn(obj, &opts, TransportOpts::local(4), move |w| {
@@ -126,6 +131,7 @@ mod tests {
             seed: 99,
             straggler: None,
             repr: Repr::Dense,
+            uplink: GradCodec::F32,
         };
         let o2 = obj.clone();
         let r = harness::run_asyn(obj, &opts, TransportOpts::local(4), move |w| {

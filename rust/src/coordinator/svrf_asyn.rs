@@ -20,7 +20,7 @@ use std::sync::Arc;
 
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::{eta, svrf_epoch_len, BatchSchedule};
-use crate::comms::{MasterLink, WorkerLink};
+use crate::comms::{GradCodec, MasterLink, WorkerLink};
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::messages::{MasterMsg, UpdateMsg};
 use crate::coordinator::update_log::{replay_after, ApplyEntry, UpdateLog};
@@ -37,6 +37,8 @@ pub struct SvrfAsynOptions {
     pub seed: u64,
     /// Iterate representation shared by master and workers.
     pub repr: Repr,
+    /// Uplink codec for the rank-one `{u, v}` updates.
+    pub uplink: GradCodec,
 }
 
 impl Default for SvrfAsynOptions {
@@ -48,6 +50,7 @@ impl Default for SvrfAsynOptions {
             eval_every: 10,
             seed: 0,
             repr: Repr::Dense,
+            uplink: GradCodec::F32,
         }
     }
 }
@@ -159,6 +162,7 @@ pub(crate) fn run_svrf_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
 }
 
 /// Worker side of Algorithm 5.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_svrf_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: StepEngine + ?Sized>(
     link: &mut L,
     engine: &mut E,
@@ -167,6 +171,7 @@ pub(crate) fn run_svrf_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: S
     seed: u64,
     counters: &Counters,
     repr: Repr,
+    uplink: GradCodec,
 ) {
     let obj = engine.objective().clone();
     let (d1, d2) = obj.dims();
@@ -211,15 +216,16 @@ pub(crate) fn run_svrf_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: S
         gx.axpy(1.0, &full_g);
         let s = engine.lmo(&gx);
         counters.add_lmo();
-        link.send(UpdateMsg {
+        link.send(UpdateMsg::quantized(
+            uplink,
             worker_id,
             t_w,
-            u: s.u,
-            v: s.v,
-            sigma: s.sigma,
+            s.u,
+            s.v,
+            s.sigma,
             loss_sum,
-            m: m as u32,
-        });
+            m as u32,
+        ));
         match link.recv() {
             Some(MasterMsg::Updates { entries, .. }) => {
                 // gap-tolerant: t_w advances only as far as entries
@@ -261,6 +267,7 @@ mod tests {
             eval_every: 10,
             seed: 141,
             repr: Repr::Dense,
+            uplink: GradCodec::F32,
         };
         let o2 = obj.clone();
         let r = harness::run_svrf_asyn(obj, &opts, harness::TransportOpts::local(3), move |w| {

@@ -33,12 +33,12 @@ use std::sync::Arc;
 
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::{eta, BatchSchedule};
-use crate::comms::{MasterLink, WorkerLink};
+use crate::comms::{GradCodec, MasterLink, WorkerLink};
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::messages::{DistDown, DistUp, LogEntry};
 use crate::coordinator::update_log::{replay_after, ApplyEntry};
 use crate::coordinator::worker::Straggler;
-use crate::linalg::{Iterate, Mat, Repr};
+use crate::linalg::{ErrorFeedback, Iterate, Mat, Repr};
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
 use crate::util::rng::Rng;
@@ -52,6 +52,9 @@ pub struct DistOptions {
     /// Iterate representation — also selects the downlink wire variant
     /// (dense X broadcast vs atoms-since-last-round).
     pub repr: Repr,
+    /// Uplink gradient codec — selects the `DistUp` wire variant; lossy
+    /// codecs get per-worker error feedback on the gradient stream.
+    pub uplink: GradCodec,
 }
 
 /// Master side of Algorithm 1.  `master_engine` supplies the LMO (worker
@@ -199,6 +202,7 @@ pub(crate) fn run_dist_master<L: MasterLink<DistUp, DistDown> + ?Sized>(
 /// downlink variants; in factored rounds it advances a local iterate by
 /// replaying the broadcast atoms (idempotent, gap-tolerant) instead of
 /// receiving X.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_dist_worker<L: WorkerLink<DistUp, DistDown> + ?Sized, E: StepEngine + ?Sized>(
     link: &mut L,
     engine: &mut E,
@@ -207,6 +211,7 @@ pub(crate) fn run_dist_worker<L: WorkerLink<DistUp, DistDown> + ?Sized, E: StepE
     straggler: Option<Straggler>,
     counters: &Counters,
     repr: Repr,
+    uplink: GradCodec,
 ) {
     let obj = engine.objective().clone();
     let (d1, d2) = obj.dims();
@@ -224,6 +229,10 @@ pub(crate) fn run_dist_worker<L: WorkerLink<DistUp, DistDown> + ?Sized, E: StepE
     // worker that missed atoms (unlike the async catch-up protocol), so
     // a desynced worker must not keep shipping gradients of a stale X.
     let mut desynced = false;
+    // Lossy-uplink residual carrier: compensate the fresh gradient with
+    // last round's quantization error, ship, absorb the new error.
+    // No-op under the exact f32 codec.
+    let mut ef = ErrorFeedback::new(uplink.is_lossy());
     loop {
         match link.recv() {
             Some(DistDown::Compute { k, m_share, x }) => {
@@ -234,7 +243,10 @@ pub(crate) fn run_dist_worker<L: WorkerLink<DistUp, DistDown> + ?Sized, E: StepE
                     s.sleep(&mut rng, idx.len() as u64);
                 }
                 // echo k so the barrier can match replies to rounds
-                link.send(DistUp { worker_id, k, loss_sum, grad: g.clone() });
+                ef.compensate(&mut g);
+                let up = DistUp::quantized(uplink, worker_id, k, loss_sum, g.clone());
+                ef.absorb(&g, &up.grad);
+                link.send(up);
             }
             Some(DistDown::ComputeFactored { k, m_share, entries }) => {
                 let x_loc = x_loc.get_or_insert_with(|| {
@@ -274,7 +286,10 @@ pub(crate) fn run_dist_worker<L: WorkerLink<DistUp, DistDown> + ?Sized, E: StepE
                          for round {k} so the master drops this contribution"
                     );
                     g.fill(f32::NAN);
-                    link.send(DistUp { worker_id, k, loss_sum: 0.0, grad: g.clone() });
+                    // poison round: skip compensate/absorb (a NaN
+                    // residual would stick forever); the quantized
+                    // constructor preserves NaN under every codec
+                    link.send(DistUp::quantized(uplink, worker_id, k, 0.0, g.clone()));
                     continue;
                 }
                 rng.sample_indices(n, m_share as usize, &mut idx);
@@ -283,7 +298,10 @@ pub(crate) fn run_dist_worker<L: WorkerLink<DistUp, DistDown> + ?Sized, E: StepE
                 if let Some(s) = &straggler {
                     s.sleep(&mut rng, idx.len() as u64);
                 }
-                link.send(DistUp { worker_id, k, loss_sum, grad: g.clone() });
+                ef.compensate(&mut g);
+                let up = DistUp::quantized(uplink, worker_id, k, loss_sum, g.clone());
+                ef.absorb(&g, &up.grad);
+                link.send(up);
             }
             Some(DistDown::Stop) | None => return,
         }
@@ -316,6 +334,7 @@ mod tests {
             seed: 111,
             straggler: None,
             repr: Repr::Dense,
+            uplink: GradCodec::F32,
         };
         let o2 = obj.clone();
         let r = harness::run_dist(obj, &opts, harness::TransportOpts::local(4), move |w| {
@@ -331,8 +350,7 @@ mod tests {
         // expected totals derived from the real frame sizes.
         let per_down =
             DistDown::Compute { k: 1, m_share: 1, x: Arc::new(Mat::zeros(10, 10)) }.wire_bytes();
-        let per_up =
-            DistUp { worker_id: 0, k: 1, loss_sum: 0.0, grad: Mat::zeros(10, 10) }.wire_bytes();
+        let per_up = DistUp::dense(0, 1, 0.0, Mat::zeros(10, 10)).wire_bytes();
         assert_eq!(s.bytes_down, 100 * 4 * per_down + 4 * DistDown::Stop.wire_bytes());
         assert_eq!(s.bytes_up, 100 * 4 * per_up);
         assert_eq!(s.msgs_up, 100 * 4);
@@ -351,6 +369,7 @@ mod tests {
                 seed: 116,
                 straggler: None,
                 repr,
+                uplink: GradCodec::F32,
             };
             let o2 = obj.clone();
             harness::run_dist(obj.clone(), &opts, harness::TransportOpts::local(2), move |w| {
@@ -378,5 +397,52 @@ mod tests {
         // factored run reports its atom budget
         assert!(fact.peak_atoms > 0 && fact.rank > 0);
         assert_eq!(dense.peak_atoms, 0);
+    }
+
+    #[test]
+    fn int8_uplink_with_error_feedback_tracks_f32_and_shrinks_uplink() {
+        // Wide-ish dims so the per-row scale overhead amortizes: at
+        // 12x24 the int8 uplink frame is (28+48+288) vs f32 (28+1152),
+        // a >3x byte win the counters must reflect exactly.
+        let mut rng = Rng::new(120);
+        let p = MsParams { d1: 12, d2: 24, rank: 2, n: 3_000, noise_std: 0.05 };
+        let obj: Arc<dyn Objective> =
+            Arc::new(MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0));
+        let run = |uplink: GradCodec| {
+            let opts = DistOptions {
+                iterations: 60,
+                batch: BatchSchedule::Constant(256),
+                eval_every: 10,
+                seed: 121,
+                straggler: None,
+                repr: Repr::Dense,
+                uplink,
+            };
+            let o2 = obj.clone();
+            harness::run_dist(obj.clone(), &opts, harness::TransportOpts::local(2), move |w| {
+                Box::new(NativeEngine::new(o2.clone(), 60, 122u64.wrapping_add(w as u64)))
+            })
+        };
+        let exact = run(GradCodec::F32);
+        let quant = run(GradCodec::Int8);
+        // compressed run converges: same qualitative drop as f32, and
+        // the finals agree to the pinned smoke tolerance
+        let (pe, pq) = (exact.trace.points(), quant.trace.points());
+        let (le, lq) = (pe.last().unwrap().loss, pq.last().unwrap().loss);
+        assert!(lq < 0.5 * pq.first().unwrap().loss, "int8 run failed to converge: {lq}");
+        assert!(
+            (lq - le).abs() <= 0.2 * le + 1e-3,
+            "int8 final loss {lq} drifted from f32 {le}"
+        );
+        // uplink bytes: exact closed-form ratio, >= 3x at these dims
+        let (se, sq) = (exact.counters.snapshot(), quant.counters.snapshot());
+        let per_f32 = DistUp::dense(0, 1, 0.0, Mat::zeros(12, 24)).wire_bytes();
+        let per_i8 =
+            DistUp::quantized(GradCodec::Int8, 0, 1, 0.0, Mat::zeros(12, 24)).wire_bytes();
+        assert_eq!(se.bytes_up, 60 * 2 * per_f32);
+        assert_eq!(sq.bytes_up, 60 * 2 * per_i8);
+        assert!(se.bytes_up as f64 / sq.bytes_up as f64 >= 3.0);
+        // downlink untouched by the uplink codec
+        assert_eq!(se.bytes_down, sq.bytes_down);
     }
 }

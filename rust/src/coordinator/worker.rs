@@ -13,7 +13,7 @@ use std::time::Duration;
 
 use crate::algo::engine::StepEngine;
 use crate::algo::schedule::BatchSchedule;
-use crate::comms::WorkerLink;
+use crate::comms::{GradCodec, WorkerLink};
 use crate::coordinator::messages::{MasterMsg, UpdateMsg};
 use crate::coordinator::update_log::replay_after;
 use crate::linalg::{Iterate, Repr};
@@ -53,6 +53,11 @@ pub struct WorkerOptions {
     /// Local iterate representation (must match the master's so the
     /// shared-seed X_0 and every replayed slice land on the same model).
     pub repr: Repr,
+    /// Uplink codec for the `{u, v}` atoms.  Quantized plainly (no error
+    /// feedback): the atoms are unit directions gated by the master's
+    /// `sane_rank_one` check, and the per-entry error stays far inside
+    /// that gate's norm window.
+    pub uplink: GradCodec,
 }
 
 /// Run the worker loop until the master says Stop (or disconnects).
@@ -82,15 +87,16 @@ pub fn run_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: StepEngine + 
         if let Some(s) = &opts.straggler {
             s.sleep(&mut rng, m as u64);
         }
-        link.send(UpdateMsg {
-            worker_id: opts.worker_id,
+        link.send(UpdateMsg::quantized(
+            opts.uplink,
+            opts.worker_id,
             t_w,
-            u: out.u,
-            v: out.v,
-            sigma: out.sigma,
-            loss_sum: out.loss_sum,
-            m: m as u32,
-        });
+            out.u,
+            out.v,
+            out.sigma,
+            out.loss_sum,
+            m as u32,
+        ));
         match link.recv() {
             Some(MasterMsg::Updates { entries, .. }) => {
                 // Idempotent, gap-tolerant replay: resync slices may

@@ -6,6 +6,9 @@
 //! `factored` — [`FactoredMat`], the iterate as a rank-one atom list
 //! (O((d1+d2)*k) memory/bytes instead of O(d1*d2); see the ROADMAP's
 //! "Iterate representation" section);
+//! `feedback` — [`ErrorFeedback`], the per-worker quantization-residual
+//! accumulator for the compressed gradient uplink
+//! ([`crate::comms::GradCodec`]);
 //! `iterate` — [`Iterate`]/[`Repr`], the dense-or-factored iterate every
 //! solver threads through (chosen per run by `TrainSpec::repr`);
 //! `svd` — operator-form power-iteration 1-SVD (the FW LMO) + one-sided
@@ -19,6 +22,7 @@
 //! [`crate::coordinator::update_log`] (log entries ARE the atoms).
 
 pub mod factored;
+pub mod feedback;
 pub mod iterate;
 pub mod mat;
 pub mod op;
@@ -26,6 +30,7 @@ pub mod project;
 pub mod svd;
 
 pub use factored::FactoredMat;
+pub use feedback::ErrorFeedback;
 pub use iterate::{dense_rank, Iterate, Repr};
 pub use mat::{dot, norm2, normalize, Mat};
 pub use op::LinOp;

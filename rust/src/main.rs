@@ -210,6 +210,11 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         // the factored downlink win on them.
         let scale = SweepRunner::new().run(&SweepSpec::smoke_scale())?;
         result.cells.extend(scale.cells);
+        // So do the compressed-uplink cells (64x48 sfw-dist, f32 vs int8
+        // on both transports); check_smoke_bytes.py asserts the >= 3x
+        // uplink byte win at matching final relative loss on them.
+        let uplink = SweepRunner::new().run(&SweepSpec::smoke_uplink())?;
+        result.cells.extend(uplink.cells);
     }
     result.table().print();
     let out_dir = args.get_str("out-dir", "bench_out");

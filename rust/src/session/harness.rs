@@ -237,6 +237,7 @@ where
                 seed: opts.seed,
                 straggler: opts.straggler,
                 repr: opts.repr,
+                uplink: opts.uplink,
             };
             let job: WorkerJob<UpdateMsg, MasterMsg> = Box::new(move |mut wl| {
                 run_worker(&mut *wl, engine.as_mut(), &wopts, &counters)
@@ -286,6 +287,7 @@ where
             let batch = opts.batch.clone();
             let seed = opts.seed;
             let repr = opts.repr;
+            let uplink = opts.uplink;
             let job: WorkerJob<UpdateMsg, MasterMsg> = Box::new(move |mut wl| {
                 run_svrf_worker(
                     &mut *wl,
@@ -295,6 +297,7 @@ where
                     seed,
                     &counters,
                     repr,
+                    uplink,
                 )
             });
             job
@@ -341,6 +344,7 @@ where
             let seed = opts.seed;
             let straggler = opts.straggler;
             let repr = opts.repr;
+            let uplink = opts.uplink;
             let job: WorkerJob<DistUp, DistDown> = Box::new(move |mut wl| {
                 run_dist_worker(
                     &mut *wl,
@@ -350,6 +354,7 @@ where
                     straggler,
                     &counters,
                     repr,
+                    uplink,
                 )
             });
             job

@@ -79,6 +79,28 @@
 //! agree to f32 tolerance on every solver (`rust/tests/factored.rs`);
 //! `Report::{final_rank, peak_atoms}` and the sweep `rank` column
 //! surface the representation's size.
+//!
+//! # Compressed-uplink quickstart (`--uplink int8`)
+//!
+//! The factored downlink leaves sfw-dist's dense gradient **uplink** as
+//! the remaining O(d1*d2) wire cost.  [`GradCodec`] compresses it:
+//!
+//! ```text
+//! sfw train --task matrix_sensing --algo sfw-dist --workers 4 --uplink int8
+//! ```
+//!
+//! or `TrainSpec::uplink(GradCodec::Int8)` from code.  `int8` ships one
+//! f32 scale per gradient row plus 1 byte per entry (~4x fewer uplink
+//! bytes; ~3.7x as a frame ratio at 64x48), `bf16` halves the bytes
+//! with no scales.  Workers carry the quantization residual forward
+//! with per-worker error feedback ([`crate::linalg::ErrorFeedback`]),
+//! so same-seed `f32` and `int8` runs converge to matching final
+//! relative loss — the smoke sweep's `check_smoke_bytes.py` asserts
+//! both the byte win and the loss agreement on every CI push.  The
+//! async solvers accept the codec too (their rank-one `{u, v}` atoms
+//! are quantized plainly); solvers without a wire uplink reject lossy
+//! codecs at spec validation.  See [`crate::comms`] for the wire
+//! contract.
 
 pub mod ctx;
 pub(crate) mod harness;
@@ -93,6 +115,7 @@ pub use spec::TrainSpec;
 // Re-exported so spec construction needs only `use sfw::session::*`.
 pub use crate::algo::schedule::BatchSchedule;
 pub use crate::chaos::{ChaosSnapshot, FaultPlan};
+pub use crate::comms::GradCodec;
 pub use crate::coordinator::worker::Straggler;
 pub use crate::linalg::Repr;
 

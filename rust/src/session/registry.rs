@@ -32,6 +32,17 @@ pub trait Solver: Send + Sync {
         false
     }
 
+    /// Whether the solver's worker->master path honors a compressed
+    /// uplink codec (`TrainSpec::uplink` / `--uplink`): true for the
+    /// link-based protocols that construct quantized wire messages
+    /// (sfw-dist gradients with error feedback, the async rank-one
+    /// atoms).  Solvers without a wire uplink keep the default; a lossy
+    /// codec on them is rejected at spec validation rather than
+    /// silently ignored.
+    fn compressible_uplink(&self) -> bool {
+        false
+    }
+
     /// Run the algorithm against fully-resolved wiring.  Infallible:
     /// everything that can fail happens in `RunCtx::new`.
     fn run(&self, ctx: &RunCtx) -> Report;
@@ -118,5 +129,9 @@ mod tests {
         // registry-driven capability listing, registration order
         assert_eq!(reg.supporting(Transport::Tcp), vec!["sfw-asyn", "svrf-asyn", "sfw-dist"]);
         assert_eq!(reg.supporting(Transport::Local).len(), reg.names().len());
+        // the compressible-uplink capability is exactly the wire solvers
+        let compressible: Vec<&str> =
+            reg.iter().filter(|s| s.compressible_uplink()).map(|s| s.name()).collect();
+        assert_eq!(compressible, vec!["sfw-asyn", "svrf-asyn", "sfw-dist"]);
     }
 }

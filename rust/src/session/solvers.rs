@@ -70,6 +70,7 @@ impl AsynSolver {
             seed: spec.seed,
             straggler: spec.straggler,
             repr: spec.resolved_repr(),
+            uplink: spec.uplink,
         }
     }
 }
@@ -85,6 +86,10 @@ impl Solver for AsynSolver {
 
     fn tolerates_worker_loss(&self) -> bool {
         true // the master never waits for a specific worker
+    }
+
+    fn compressible_uplink(&self) -> bool {
+        true // rank-one {u, v} atoms, plainly quantized
     }
 
     fn run(&self, ctx: &RunCtx) -> Report {
@@ -106,6 +111,7 @@ impl Solver for AsynSolver {
             seed: opts.seed,
             straggler: opts.straggler,
             repr: opts.repr,
+            uplink: opts.uplink,
         };
         let counters = Counters::new(); // process-local telemetry only
         let mut engine = ctx.make_engine(rank as usize);
@@ -128,6 +134,7 @@ impl SvrfAsynSolver {
             eval_every: spec.eval_every,
             seed: spec.seed,
             repr: spec.resolved_repr(),
+            uplink: spec.uplink,
         }
     }
 }
@@ -143,6 +150,10 @@ impl Solver for SvrfAsynSolver {
 
     fn tolerates_worker_loss(&self) -> bool {
         true // same asynchronous master loop as sfw-asyn
+    }
+
+    fn compressible_uplink(&self) -> bool {
+        true // rank-one {u, v} atoms, plainly quantized
     }
 
     fn run(&self, ctx: &RunCtx) -> Report {
@@ -169,6 +180,7 @@ impl Solver for SvrfAsynSolver {
             opts.seed,
             &counters,
             opts.repr,
+            opts.uplink,
         );
         Ok(())
     }
@@ -187,6 +199,7 @@ impl DistSolver {
             seed: spec.seed,
             straggler: spec.straggler,
             repr: spec.resolved_repr(),
+            uplink: spec.uplink,
         }
     }
 }
@@ -198,6 +211,10 @@ impl Solver for DistSolver {
 
     fn supported_transports(&self) -> &'static [Transport] {
         LOCAL_AND_TCP
+    }
+
+    fn compressible_uplink(&self) -> bool {
+        true // dense partial gradients, with per-worker error feedback
     }
 
     fn run(&self, ctx: &RunCtx) -> Report {
@@ -224,6 +241,7 @@ impl Solver for DistSolver {
             opts.straggler,
             &counters,
             opts.repr,
+            opts.uplink,
         );
         Ok(())
     }

@@ -11,6 +11,7 @@ use std::time::Duration;
 
 use crate::algo::schedule::BatchSchedule;
 use crate::chaos::FaultPlan;
+use crate::comms::GradCodec;
 use crate::config::TrainConfig;
 use crate::coordinator::worker::Straggler;
 use crate::linalg::Repr;
@@ -43,6 +44,12 @@ pub struct TrainSpec {
     /// Iterate representation: dense, factored, or `Auto` (per-objective
     /// default — see [`ReprKind`] and the module-doc quickstart).
     pub repr: ReprKind,
+    /// Uplink gradient codec (`f32 | bf16 | int8`): compresses the
+    /// worker->master payloads of the link-based solvers — sfw-dist's
+    /// dense partial gradients (with per-worker error feedback) and the
+    /// async protocols' rank-one atoms.  See the `sfw::comms` module
+    /// docs for the codec contract and the `sfw::session` quickstart.
+    pub uplink: GradCodec,
     /// Nuclear-ball radius for generated tasks (ignored for
     /// [`TaskSpec::Prebuilt`], whose objective carries its own theta).
     pub theta: f32,
@@ -90,6 +97,7 @@ impl TrainSpec {
             batch_cap: 10_000,
             power_iters: 24,
             repr: ReprKind::Auto,
+            uplink: GradCodec::F32,
             theta: 1.0,
             seed: 42,
             eval_every: 10,
@@ -146,6 +154,10 @@ impl TrainSpec {
     }
     pub fn repr(mut self, r: ReprKind) -> Self {
         self.repr = r;
+        self
+    }
+    pub fn uplink(mut self, c: GradCodec) -> Self {
+        self.uplink = c;
         self
     }
     pub fn theta(mut self, theta: f32) -> Self {
@@ -283,6 +295,9 @@ impl TrainSpec {
             self.iterations,
             self.seed
         );
+        if self.uplink != GradCodec::F32 {
+            echo.push_str(&format!(" uplink={}", self.uplink.label()));
+        }
         if let Some(plan) = &self.fault_plan {
             echo.push_str(&format!(" chaos={}@{}", plan.name, plan.seed));
         }
@@ -321,6 +336,20 @@ impl TrainSpec {
         })?;
         if !solver.supported_transports().contains(&self.transport) {
             return Err(unsupported_transport(&self.algo, self.transport));
+        }
+        // A compressed uplink silently ignored would fake a byte win;
+        // reject it on solvers without a compressible uplink path.
+        if self.uplink != GradCodec::F32 && !solver.compressible_uplink() {
+            return Err(SessionError::InvalidSpec(format!(
+                "algorithm '{}' has no compressible uplink (--uplink {} applies to: {})",
+                self.algo,
+                self.uplink.label(),
+                reg.iter()
+                    .filter(|s| s.compressible_uplink())
+                    .map(|s| s.name())
+                    .collect::<Vec<_>>()
+                    .join(" | ")
+            )));
         }
         if let Some(plan) = &self.fault_plan {
             // Chaos wraps the in-process worker links; external
@@ -424,8 +453,16 @@ impl TrainSpec {
                 cfg.repr
             ))
         })?;
+        let uplink = GradCodec::parse(&cfg.uplink).ok_or_else(|| {
+            SessionError::InvalidSpec(format!(
+                "unknown uplink '{}' (valid: {})",
+                cfg.uplink,
+                GradCodec::VALID
+            ))
+        })?;
         let mut spec = TrainSpec::new(task)
             .repr(repr)
+            .uplink(uplink)
             .algo(&cfg.algo)
             .workers(cfg.workers)
             .tau(cfg.tau)

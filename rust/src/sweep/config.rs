@@ -13,6 +13,7 @@
 
 use std::str::FromStr;
 
+use crate::comms::GradCodec;
 use crate::config::{Config, TrainConfig};
 use crate::session::{ReprKind, TrainSpec, Transport};
 use crate::sweep::grid::{parse_dims, StragglerProfile, SweepSpec};
@@ -20,8 +21,8 @@ use crate::sweep::SweepError;
 
 /// Keys the `[sweep]` section accepts (axes + run knobs).
 pub const SWEEP_KEYS: &[&str] = &[
-    "name", "algos", "dims", "repr", "workers", "tau", "batch", "power-iters", "transport",
-    "straggler", "chaos", "seeds", "repeats", "jobs", "target",
+    "name", "algos", "dims", "repr", "uplink", "workers", "tau", "batch", "power-iters",
+    "transport", "straggler", "chaos", "seeds", "repeats", "jobs", "target",
 ];
 
 impl SweepSpec {
@@ -108,6 +109,20 @@ impl SweepSpec {
                             axis: "repr".into(),
                             value: s.to_string(),
                             expected: "auto | dense | factored".into(),
+                        }
+                    })
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = get("uplink") {
+            spec.uplinks = split_list("uplink", &v)?
+                .into_iter()
+                .map(|s| {
+                    GradCodec::parse(s).map(|_| s.to_string()).ok_or_else(|| {
+                        SweepError::BadAxisValue {
+                            axis: "uplink".into(),
+                            value: s.to_string(),
+                            expected: GradCodec::VALID.into(),
                         }
                     })
                 })
@@ -243,6 +258,40 @@ impl SweepSpec {
             .taus(&[2])
             .transports(&[Transport::Local])
             .reprs(&["dense", "factored"])
+            .target(0.5)
+    }
+
+    /// The CI compressed-uplink cells that ride along with
+    /// [`SweepSpec::smoke`] and [`SweepSpec::smoke_scale`] in one
+    /// `sweep_smoke.json`: a 64x48 matrix-sensing shape (distinct from
+    /// the scale pair's 48x32, so cell ids cannot collide), sfw-dist,
+    /// W = 2, f32 vs int8 uplink on BOTH transports.
+    /// `scripts/check_smoke_bytes.py` asserts the int8 cells' `bytes_up`
+    /// is >= 3x below the f32 cells' (expected frame ratio at 64x48:
+    /// ~3.67x) at matching final relative loss — error feedback is what
+    /// keeps the losses together — with equal `bytes_down`, per
+    /// transport.
+    pub fn smoke_uplink() -> SweepSpec {
+        use crate::algo::schedule::BatchSchedule;
+        use crate::session::TaskSpec;
+        let base = TrainSpec::new(TaskSpec::MatrixSensing {
+            d1: 64,
+            d2: 48,
+            rank: 3,
+            n: 600,
+            noise_std: 0.05,
+        })
+        .iterations(20)
+        .batch(BatchSchedule::Constant(16))
+        .eval_every(5)
+        .power_iters(20)
+        .seed(42);
+        SweepSpec::new("smoke-uplink", base)
+            .algos(&["sfw-dist"])
+            .workers(&[2])
+            .taus(&[2])
+            .transports(&[Transport::Local, Transport::Tcp])
+            .uplinks(&["f32", "int8"])
             .target(0.5)
     }
 }
@@ -391,6 +440,38 @@ mod tests {
         assert_eq!(cells[0].axis("repr"), Some("dense"));
         assert_eq!(cells[1].axis("repr"), Some("factored"));
         assert!(matches!(cells[1].spec.repr, crate::session::ReprKind::Factored));
+    }
+
+    #[test]
+    fn uplink_key_resolves_and_rejects_bad_codecs() {
+        let a = args("--sweep.uplink f32,int8");
+        let s = SweepSpec::from_sources(base(), &Config::new(), &a).unwrap();
+        assert_eq!(s.uplinks, vec!["f32", "int8"]);
+        let err = SweepSpec::from_sources(base(), &Config::new(), &args("--sweep.uplink fp8"))
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("uplink") && msg.contains("bf16"), "{msg}");
+    }
+
+    #[test]
+    fn smoke_uplink_grid_is_the_f32_vs_int8_quad() {
+        let cells = SweepSpec::smoke_uplink().expand().unwrap();
+        assert_eq!(cells.len(), 4);
+        for c in &cells {
+            assert_eq!(c.axis("algo"), Some("sfw-dist"));
+            assert_eq!(c.axis("dims"), Some("64x48"));
+            assert_eq!(c.axis("workers"), Some("2"));
+            assert_eq!(c.axis("seed"), Some("42"));
+        }
+        for transport in ["local", "tcp"] {
+            for uplink in ["f32", "int8"] {
+                assert!(
+                    cells.iter().any(|c| c.axis("transport") == Some(transport)
+                        && c.axis("uplink") == Some(uplink)),
+                    "missing {transport}/{uplink} uplink smoke cell"
+                );
+            }
+        }
     }
 
     #[test]

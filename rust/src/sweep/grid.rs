@@ -13,6 +13,7 @@ use std::time::Duration;
 
 use crate::algo::schedule::BatchSchedule;
 use crate::chaos::{FaultPlan, DEFAULT_CHAOS_SEED};
+use crate::comms::GradCodec;
 use crate::coordinator::worker::Straggler;
 use crate::session::{ReprKind, TaskSpec, TrainSpec, Transport};
 use crate::sweep::SweepError;
@@ -20,8 +21,8 @@ use crate::sweep::SweepError;
 /// The fixed axis order: every cell id and result row lists axis values
 /// in this order, and `[sweep]` config keys resolve against these names.
 pub const AXIS_NAMES: &[&str] = &[
-    "algo", "dims", "repr", "workers", "tau", "batch", "power_iters", "transport", "straggler",
-    "chaos", "seed",
+    "algo", "dims", "repr", "uplink", "workers", "tau", "batch", "power_iters", "transport",
+    "straggler", "chaos", "seed",
 ];
 
 /// Parse a `dims` axis value `"D1xD2"` (e.g. `"48x32"`).
@@ -182,6 +183,9 @@ pub struct SweepSpec {
     /// Iterate representations (`auto | dense | factored`); cell labels
     /// carry the RESOLVED value, so `auto` never appears in artifacts.
     pub reprs: Vec<String>,
+    /// Uplink codecs (`f32 | bf16 | int8`) for the worker->master path.
+    /// Empty = inherit the base spec's codec.
+    pub uplinks: Vec<String>,
     pub workers: Vec<usize>,
     pub taus: Vec<u64>,
     /// Constant batch sizes ([`BATCH_AUTO`] = theorem schedule).  Empty =
@@ -212,6 +216,7 @@ impl SweepSpec {
             algos: Vec::new(),
             dims: Vec::new(),
             reprs: Vec::new(),
+            uplinks: Vec::new(),
             workers: Vec::new(),
             taus: Vec::new(),
             batches: Vec::new(),
@@ -236,6 +241,10 @@ impl SweepSpec {
     }
     pub fn reprs(mut self, reprs: &[&str]) -> Self {
         self.reprs = reprs.iter().map(|s| s.to_string()).collect();
+        self
+    }
+    pub fn uplinks(mut self, cs: &[&str]) -> Self {
+        self.uplinks = cs.iter().map(|s| s.to_string()).collect();
         self
     }
     pub fn workers(mut self, ws: &[usize]) -> Self {
@@ -289,6 +298,7 @@ impl SweepSpec {
         len(self.algos.len())
             * len(self.dims.len())
             * len(self.reprs.len())
+            * len(self.uplinks.len())
             * len(self.workers.len())
             * len(self.taus.len())
             * len(self.batches.len())
@@ -334,6 +344,21 @@ impl SweepSpec {
                         axis: "repr".into(),
                         value: s.clone(),
                         expected: "auto | dense | factored".into(),
+                    })
+                })
+                .collect::<Result<_, _>>()?
+        };
+        // `None` = inherit the base spec's uplink codec.
+        let uplink_axis: Vec<Option<GradCodec>> = if self.uplinks.is_empty() {
+            vec![None]
+        } else {
+            self.uplinks
+                .iter()
+                .map(|s| {
+                    GradCodec::parse(s).map(Some).ok_or_else(|| SweepError::BadAxisValue {
+                        axis: "uplink".into(),
+                        value: s.clone(),
+                        expected: GradCodec::VALID.into(),
                     })
                 })
                 .collect::<Result<_, _>>()?
@@ -391,6 +416,7 @@ impl SweepSpec {
                 .iter()
                 .flat_map(|d| repr_axis.iter().map(move |r| (d, r)))
             {
+            for &uplk in &uplink_axis {
             for &w in &workers {
                 for &tau in &taus {
                     for &batch in &batches {
@@ -441,6 +467,9 @@ impl SweepSpec {
                                             if let Some(r) = repr {
                                                 spec.repr = r;
                                             }
+                                            if let Some(c) = uplk {
+                                                spec.uplink = c;
+                                            }
                                             match batch {
                                                 None => {} // keep base schedule
                                                 Some(BATCH_AUTO) => spec.batch = None,
@@ -455,6 +484,10 @@ impl SweepSpec {
                                                     "repr".to_string(),
                                                     // resolved, never "auto"
                                                     spec.resolved_repr().label().to_string(),
+                                                ),
+                                                (
+                                                    "uplink".to_string(),
+                                                    spec.uplink.label().to_string(),
                                                 ),
                                                 ("workers".to_string(), w.to_string()),
                                                 ("tau".to_string(), tau.to_string()),
@@ -479,6 +512,7 @@ impl SweepSpec {
                         }
                     }
                 }
+            }
             }
             }
         }
@@ -578,6 +612,22 @@ mod tests {
         assert_eq!(cells[0].spec.task.dims(), (8, 8));
         // repr axis sets the spec knob
         assert!(matches!(cells[1].spec.repr, ReprKind::Factored));
+    }
+
+    #[test]
+    fn uplink_axis_expands_and_rejects_bad_values() {
+        let cells = SweepSpec::new("t", base()).uplinks(&["f32", "int8"]).expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].axis("uplink"), Some("f32"));
+        assert_eq!(cells[1].axis("uplink"), Some("int8"));
+        assert!(matches!(cells[1].spec.uplink, GradCodec::Int8));
+        // unset axis inherits the base codec and still labels the cell
+        let cells = SweepSpec::new("t", base()).expand().unwrap();
+        assert_eq!(cells[0].axis("uplink"), Some("f32"));
+        // a bad codec names the axis and lists the valid values
+        let err = SweepSpec::new("t", base()).uplinks(&["int4"]).expand().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("uplink") && msg.contains("int8"), "{msg}");
     }
 
     #[test]

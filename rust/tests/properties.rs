@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use sfw::algo::engine::{NativeEngine, StepEngine};
 use sfw::algo::init_rank_one;
-use sfw::comms::{frame, Wire};
+use sfw::comms::{frame, GradCodec, Wire};
 use sfw::coordinator::messages::{DistDown, DistUp, LogEntry, MasterMsg, UpdateMsg};
 use sfw::coordinator::update_log::{replay, replay_after, UpdateLog};
 use sfw::data::matrix_sensing::{MatrixSensingData, MsParams};
@@ -98,19 +98,48 @@ fn prop_every_wire_message_roundtrips_with_exact_byte_accounting() {
         let d2 = 1 + rng.next_below(40);
 
         // --- asyn protocol: UpdateMsg up, MasterMsg down -------------
-        let upd = UpdateMsg {
-            worker_id: rng.next_below(16) as u32,
-            t_w: rng.next_u64() % 10_000,
-            u: (0..d1).map(|_| rng.normal_f32()).collect(),
-            v: (0..d2).map(|_| rng.normal_f32()).collect(),
-            sigma: rng.normal_f32(),
-            loss_sum: rng.normal(),
-            m: rng.next_below(10_000) as u32,
-        };
+        let upd = UpdateMsg::dense(
+            rng.next_below(16) as u32,
+            rng.next_u64() % 10_000,
+            (0..d1).map(|_| rng.normal_f32()).collect(),
+            (0..d2).map(|_| rng.normal_f32()).collect(),
+            rng.normal_f32(),
+            rng.normal(),
+            rng.next_below(10_000) as u32,
+        );
         let rt = roundtrip(&upd)?;
         prop_assert!(rt.u == upd.u && rt.v == upd.v, "vectors corrupted");
         prop_assert!(rt.t_w == upd.t_w && rt.m == upd.m, "header corrupted");
         wire_bytes_exact(&upd)?;
+
+        // quantized uplink variants: quantization happens ONCE at
+        // construction, so encode -> decode is the exact identity and
+        // struct equality must hold through the real framing
+        for codec in [GradCodec::Bf16, GradCodec::Int8] {
+            let q = UpdateMsg::quantized(
+                codec,
+                upd.worker_id,
+                upd.t_w,
+                upd.u.clone(),
+                upd.v.clone(),
+                upd.sigma,
+                upd.loss_sum,
+                upd.m,
+            );
+            let rt = roundtrip(&q)?;
+            prop_assert!(rt == q, "{} UpdateMsg not exact through the wire", codec.label());
+            wire_bytes_exact(&q)?;
+            // the shrink (int8's 8 scale bytes amortize from n >= 3)
+            if d1 + d2 >= 8 {
+                prop_assert!(
+                    q.wire_bytes() < upd.wire_bytes(),
+                    "{} UpdateMsg ({} B) no smaller than f32 ({} B)",
+                    codec.label(),
+                    q.wire_bytes(),
+                    upd.wire_bytes()
+                );
+            }
+        }
 
         let entries: Vec<LogEntry> = (1..=3)
             .map(|k| LogEntry {
@@ -160,12 +189,12 @@ fn prop_every_wire_message_roundtrips_with_exact_byte_accounting() {
         wire_bytes_exact(&down)?;
         wire_bytes_exact(&DistDown::Stop)?;
 
-        let up = DistUp {
-            worker_id: rng.next_below(16) as u32,
-            k: rng.next_u64() % 10_000,
-            loss_sum: rng.normal(),
-            grad: Mat::randn(d1, d2, 1.0, &mut rng.fork(8)),
-        };
+        let up = DistUp::dense(
+            rng.next_below(16) as u32,
+            rng.next_u64() % 10_000,
+            rng.normal(),
+            Mat::randn(d1, d2, 1.0, &mut rng.fork(8)),
+        );
         let rt = roundtrip(&up)?;
         prop_assert!(rt.grad == up.grad, "dist gradient corrupted");
         prop_assert!(
@@ -173,6 +202,24 @@ fn prop_every_wire_message_roundtrips_with_exact_byte_accounting() {
             "dist header corrupted"
         );
         wire_bytes_exact(&up)?;
+
+        // quantized dense-gradient uplink: same exact-identity contract
+        for codec in [GradCodec::Bf16, GradCodec::Int8] {
+            let q = DistUp::quantized(codec, up.worker_id, up.k, up.loss_sum, up.grad.clone());
+            let rt = roundtrip(&q)?;
+            prop_assert!(rt == q, "{} DistUp not exact through the wire", codec.label());
+            wire_bytes_exact(&q)?;
+            // int8's per-row scale amortizes from cols >= 2; bf16 always
+            if d2 >= 2 {
+                prop_assert!(
+                    q.wire_bytes() < up.wire_bytes(),
+                    "{} DistUp ({} B) no smaller than f32 ({} B)",
+                    codec.label(),
+                    q.wire_bytes(),
+                    up.wire_bytes()
+                );
+            }
+        }
 
         // --- factored dist downlink: atoms instead of the dense X ----
         let n_entries = rng.next_below(4);
@@ -218,15 +265,7 @@ fn wire_errors_classify_bad_tags_and_malformed_payloads() {
     use sfw::comms::{Dec, Enc, WireError};
     // a frame carrying any tag but the message's own is BadTag, and the
     // error names the offending tag byte
-    let upd = UpdateMsg {
-        worker_id: 1,
-        t_w: 2,
-        u: vec![1.0],
-        v: vec![2.0],
-        sigma: 3.0,
-        loss_sum: 4.0,
-        m: 5,
-    };
+    let upd = UpdateMsg::dense(1, 2, vec![1.0], vec![2.0], 3.0, 4.0, 5);
     let f = frame(&upd);
     let bad = upd.tag().wrapping_add(1);
     match UpdateMsg::decode(bad, &f[sfw::comms::FRAME_HEADER..]).err() {
@@ -242,6 +281,43 @@ fn wire_errors_classify_bad_tags_and_malformed_payloads() {
     match Dec::new(&buf).mat().err() {
         Some(WireError::Malformed(what)) => assert!(what.contains("overflow"), "{what}"),
         other => panic!("expected Malformed, got {other:?}"),
+    }
+}
+
+#[test]
+fn quantized_frames_classify_truncation_and_trailing_bytes() {
+    // Every uplink codec variant embeds its vector lengths in the
+    // payload, so any strict prefix under-supplies a read and any
+    // trailing byte trips the final length check — both must come back
+    // as WireError (classification), never a panic or a silent accept.
+    fn assert_classified<W: Wire>(what: &str, msg: &W) {
+        let f = frame(msg);
+        let tag = f[4];
+        let payload = &f[sfw::comms::FRAME_HEADER..];
+        for cut in 0..payload.len() {
+            assert!(
+                W::decode(tag, &payload[..cut]).is_err(),
+                "{what}: decode accepted a {cut}-byte prefix of {} bytes",
+                payload.len()
+            );
+        }
+        let mut long = payload.to_vec();
+        long.push(0);
+        assert!(W::decode(tag, &long).is_err(), "{what}: decode accepted a trailing byte");
+    }
+    let mut rng = Rng::new(663);
+    let u: Vec<f32> = (0..9).map(|_| rng.normal_f32()).collect();
+    let v: Vec<f32> = (0..7).map(|_| rng.normal_f32()).collect();
+    let grad = Mat::randn(5, 6, 1.0, &mut rng.fork(1));
+    for codec in [GradCodec::F32, GradCodec::Bf16, GradCodec::Int8] {
+        assert_classified(
+            &format!("UpdateMsg/{}", codec.label()),
+            &UpdateMsg::quantized(codec, 3, 11, u.clone(), v.clone(), 0.5, 1.5, 32),
+        );
+        assert_classified(
+            &format!("DistUp/{}", codec.label()),
+            &DistUp::quantized(codec, 1, 4, 0.25, grad.clone()),
+        );
     }
 }
 

@@ -1,17 +1,22 @@
 #!/usr/bin/env python3
 """Assert the smoke-sweep artifact accounts comm bytes in every cell,
-injected chaos events in every chaos cell, and the factored-downlink
-saving on the scale cells.
+injected chaos events in every chaos cell, the factored-downlink saving
+on the scale cells, and the compressed-uplink saving on the codec cells.
 
 Shared by scripts/ci.sh --smoke and .github/workflows/ci.yml so the
 check cannot drift between the two.  Every smoke cell is a distributed
 run, so zero bytes_up/bytes_down means the transport accounting broke;
 every `chaos=flaky-net` cell runs under fault injection, so zero
 injected events means the chaos layer silently stopped wrapping links;
-and the sfw-dist scale cells (one dense, one factored, same seed/shape)
+the sfw-dist scale cells (one dense, one factored, same seed/shape)
 pin the representation's headline saving: the factored atoms-only
 broadcast must be measurably below the dense X broadcast on
-`bytes_down` while the (dense-gradient) uplink stays equal.
+`bytes_down` while the (dense-gradient) uplink stays equal; and the
+64x48 sfw-dist uplink cells (f32 vs int8, same seed/shape, both
+transports) pin the codec's headline saving: >= 3x fewer `bytes_up`
+(the exact frame ratio at 64x48 is ~3.67x) at matching final relative
+loss — error feedback is what keeps the losses together — with
+identical `bytes_down`.
 """
 import json
 import sys
@@ -47,6 +52,41 @@ assert fact["counters"]["bytes_up"] == dense["counters"]["bytes_up"], (
 assert fact.get("rank", 0) > 0 and fact.get("peak_atoms", 0) > 0, (
     "factored scale cell lost its rank/peak_atoms accounting")
 
+# --- compressed-uplink codec cells -----------------------------------------
+# f32 vs int8 sfw-dist at 64x48, same seed, one pair per transport.  The
+# int8 frame at 64x48 is (header + 4*64 + 64*48) vs f32's (header +
+# 4*64*48): a 3.67x ratio, asserted conservatively at 3x.  Error
+# feedback must keep the quantized run's convergence with the exact
+# run's: final relative losses agree within UPLINK_REL_TOL (both runs
+# reach ~0.1-0.3 rel loss in 20 iterations, so 0.15 absolute slack
+# flags a genuinely diverged run, not quantization noise).
+UPLINK_REL_TOL = 0.15
+uplink = [c for c in cells
+          if c["axes"].get("algo") == "sfw-dist" and c["axes"].get("dims") == "64x48"]
+pairs = 0
+for transport in ("local", "tcp"):
+    by_codec = {c["axes"].get("uplink"): c for c in uplink
+                if c["axes"].get("transport") == transport}
+    assert "f32" in by_codec and "int8" in by_codec, (
+        f"{path}: smoke grid lost its f32/int8 uplink cells on {transport} "
+        f"(have {sorted(by_codec)})")
+    f32c, i8c = by_codec["f32"], by_codec["int8"]
+    f32_up = f32c["counters"]["bytes_up"]
+    i8_up = i8c["counters"]["bytes_up"]
+    assert i8_up * 3 <= f32_up, (
+        f"{transport}: int8 uplink {i8_up} B not >= 3x below f32 {f32_up} B")
+    assert i8c["counters"]["bytes_down"] == f32c["counters"]["bytes_down"], (
+        f"{transport}: downlink must be codec-independent "
+        f"({i8c['counters']['bytes_down']} vs {f32c['counters']['bytes_down']} B)")
+    f32_rel, i8_rel = f32c["final_rel"], i8c["final_rel"]
+    assert f32_rel is not None and i8_rel is not None, (
+        f"{transport}: uplink cells lost their final_rel accounting")
+    assert abs(i8_rel - f32_rel) <= UPLINK_REL_TOL, (
+        f"{transport}: int8 final_rel {i8_rel:.4f} diverged from "
+        f"f32 {f32_rel:.4f} (tol {UPLINK_REL_TOL}) — error feedback broke?")
+    pairs += 1
+
 print(f"OK: {len(cells)} cells in {path}, bytes nonzero in all, "
       f"events nonzero in {len(chaos_cells)} chaos cell(s), "
-      f"factored downlink {fd} B vs dense {dd} B")
+      f"factored downlink {fd} B vs dense {dd} B, "
+      f"int8 uplink >= 3x under f32 at matching loss on {pairs} transport(s)")

@@ -12,13 +12,23 @@
 #   scripts/ci.sh --smoke    additionally run the deterministic smoke sweep
 #                            (writes bench_out/sweep_smoke.json; the grid
 #                            includes one flaky-net chaos cell per
-#                            TCP-capable solver plus the dense-vs-factored
-#                            scale cells, and the artifact check asserts
-#                            nonzero injected-event counts and the
-#                            factored-downlink saving)
+#                            TCP-capable solver, the dense-vs-factored
+#                            scale cells and the f32-vs-int8 uplink cells,
+#                            and the artifact check asserts nonzero
+#                            injected-event counts, the factored-downlink
+#                            saving and the >= 3x compressed-uplink saving)
 #   scripts/ci.sh --bench    additionally run the hotpath microbenchmarks
 #                            and write bench_out/BENCH_hotpath.json (the
-#                            perf trajectory; scripts/bench_snapshot.py)
+#                            perf trajectory; scripts/bench_snapshot.py).
+#                            First self-tests the blocking regression gate
+#                            (scripts/test_bench_gate.py); when a previous
+#                            snapshot exists at bench_out/bench_prev.json,
+#                            the snapshot runs as a BLOCKING compare
+#                            against it (per-op thresholds from
+#                            scripts/bench_thresholds.json; an expected
+#                            slowdown ships with [skip-bench-gate] in the
+#                            commit message, which skips the compare in
+#                            the CI workflow)
 #
 # Runs: cargo build --release, cargo test -q, cargo bench --no-run and
 # cargo build --examples (so benches/examples can't silently rot), then
@@ -118,7 +128,15 @@ fi
 if [ "$bench" -eq 1 ]; then
     echo "== hotpath bench snapshot (scripts/bench_snapshot.py) =="
     if command -v python3 >/dev/null 2>&1; then
-        python3 scripts/bench_snapshot.py
+        echo "== bench gate self-test (scripts/test_bench_gate.py) =="
+        python3 scripts/test_bench_gate.py
+        if [ -s bench_out/bench_prev.json ]; then
+            echo "== bench snapshot + BLOCKING compare vs bench_out/bench_prev.json =="
+            python3 scripts/bench_snapshot.py --compare bench_out/bench_prev.json
+        else
+            echo "== bench snapshot (no bench_out/bench_prev.json baseline; compare skipped) =="
+            python3 scripts/bench_snapshot.py
+        fi
         test -s bench_out/BENCH_hotpath.json || {
             echo "ci.sh: bench snapshot did not write bench_out/BENCH_hotpath.json" >&2
             exit 1

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Self-test for the blocking bench gate (bench_snapshot.py --compare).
+
+Synthesizes a hotpath_raw.csv and a previous snapshot in a temp dir and
+asserts the gate (1) exits nonzero on a regression past threshold,
+(2) passes when nothing slowed, and (3) honors per-op overrides from a
+bench_thresholds.json-shaped table.  Run by scripts/ci.sh --bench and
+the CI workflow before the real compare, so a gate that silently
+stopped gating fails the build rather than waving regressions through.
+Needs no cargo: the gate is exercised with --skip-run on synthetic CSV.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "bench_snapshot.py")
+
+# the cells bench_snapshot.py itself insists on
+REQUIRED = [
+    "lmo 196x196 dense operator",
+    "lmo 196x196 factored operator k=64",
+    "pnn grad m=256 factored k=16",
+]
+
+
+def write_raw(d, means):
+    os.makedirs(os.path.join(d, "bench_out"), exist_ok=True)
+    with open(os.path.join(d, "bench_out", "hotpath_raw.csv"), "w") as f:
+        f.write("op,mean_s,p50_s,p90_s,notes\n")
+        for op, mean in means.items():
+            f.write(f'"{op}",{mean:.9f},{mean:.9f},{mean:.9f},"synthetic"\n')
+
+
+def write_prev(d, means):
+    doc = {"schema": "sfw.bench/v1", "bench": "hotpath",
+           "rows": [{"op": op, "mean_s": m, "p50_s": m, "p90_s": m,
+                     "notes": ""} for op, m in means.items()]}
+    with open(os.path.join(d, "prev.json"), "w") as f:
+        json.dump(doc, f)
+
+
+def run_gate(d, thresholds):
+    tpath = os.path.join(d, "thresholds.json")
+    with open(tpath, "w") as f:
+        json.dump(thresholds, f)
+    cmd = [sys.executable, SCRIPT, "--skip-run",
+           "--compare", os.path.join(d, "prev.json"),
+           "--thresholds", tpath,
+           "--out", os.path.join(d, "bench_out", "BENCH_hotpath.json")]
+    return subprocess.run(cmd, cwd=d, capture_output=True, text=True)
+
+
+base = {op: 1e-3 for op in REQUIRED}
+base["wire codec roundtrip (196+196 floats)"] = 1e-6
+
+with tempfile.TemporaryDirectory() as d:
+    write_prev(d, base)
+
+    # 1) a 2x regression on one op must fail the gate and name the op
+    cur = dict(base)
+    cur[REQUIRED[0]] = 2e-3
+    write_raw(d, cur)
+    r = run_gate(d, {"default": 1.25, "ops": {}})
+    assert r.returncode != 0, (
+        f"gate passed a 2x regression:\n{r.stdout}\n{r.stderr}")
+    assert REQUIRED[0] in (r.stdout + r.stderr), (
+        f"regressing op not named in gate output:\n{r.stdout}\n{r.stderr}")
+
+    # 2) unchanged timings must pass
+    write_raw(d, base)
+    r = run_gate(d, {"default": 1.25, "ops": {}})
+    assert r.returncode == 0, (
+        f"gate failed a clean run:\n{r.stdout}\n{r.stderr}")
+
+    # 3) a per-op override loosens exactly that op; the default still
+    #    catches the same slip without the override
+    cur = dict(base)
+    cur[REQUIRED[0]] = 1.4e-3
+    write_raw(d, cur)
+    r = run_gate(d, {"default": 1.25, "ops": {REQUIRED[0]: 1.5}})
+    assert r.returncode == 0, (
+        f"per-op threshold ignored:\n{r.stdout}\n{r.stderr}")
+    r = run_gate(d, {"default": 1.25, "ops": {}})
+    assert r.returncode != 0, (
+        f"default threshold missed a 1.4x slip:\n{r.stdout}\n{r.stderr}")
+
+print("OK: bench gate blocks regressions, passes clean runs, "
+      "honors per-op thresholds")
