@@ -140,6 +140,49 @@ fn main() {
         let _ = pnn_o.grad_sum_factored(&fact_pnn, &idxp, &mut gp);
     });
 
+    // ---- sparse completion (O(nnz) grad + COO-operator LMO) and serving ----
+    let rec = {
+        let mut r = Rng::new(7);
+        let p = sfw::data::RecParams {
+            rows: 2000,
+            cols: 400,
+            rank: 4,
+            density: 0.01,
+            ..Default::default()
+        };
+        sfw::data::RecommenderData::generate(&p, &mut r)
+    };
+    let nnz = rec.train_nnz();
+    let sparse_o: Arc<dyn Objective> =
+        Arc::new(sfw::objective::SparseCompletion::new(rec, 1.0));
+    let fact_rec = {
+        let mut f = FactoredMat::zeros(2000, 400);
+        for _ in 0..8 {
+            f.push_atom(
+                rng.normal_f32() * 0.1,
+                Arc::new(rng.unit_vector(2000)),
+                Arc::new(rng.unit_vector(400)),
+            );
+        }
+        f
+    };
+    let x_rec = sfw::linalg::Iterate::Factored(fact_rec.clone());
+    let idx_s: Vec<usize> = (0..256).map(|_| rng.next_below(sparse_o.n())).collect();
+    let sparse_notes = format!("2000x400, nnz={nnz}, no dense scatter");
+    row("sparse grad m=256 (COO)", &sparse_notes, &mut || {
+        let _ = sparse_o.grad_sum_sparse(&x_rec, &idx_s).unwrap();
+    });
+    let (g_coo, _) = sparse_o.grad_sum_sparse(&x_rec, &idx_s).unwrap();
+    row("sparse LMO 2000x400 (COO operator)", "24 power iters, O(nnz k)", &mut || {
+        let _ = power_iteration_rand(&g_coo, &mut rng, 24, 1e-7);
+    });
+    // serving: one user's top-k straight off the atom list, O(atoms * cols)
+    let mut scores = Vec::new();
+    row("serve top-k 2000x400 k=8", "user_scores + top_k(10)", &mut || {
+        sfw::model::user_scores(&fact_rec, 17, &mut scores).unwrap();
+        let _ = sfw::model::top_k(&scores, 10);
+    });
+
     // ---- protocol ops --------------------------------------------------------
     let mut x_upd = Mat::randn(196, 196, 0.1, &mut rng);
     let u: Vec<f32> = rng.unit_vector(196);

@@ -73,14 +73,25 @@ pub struct NativeEngine {
 
 impl NativeEngine {
     pub fn new(obj: Arc<dyn Objective>, power_iters: usize, seed: u64) -> Self {
-        let (d1, d2) = obj.dims();
+        let (_, d2) = obj.dims();
         NativeEngine {
             obj,
             power_iters,
             tol: 1e-7,
             rng: Rng::new(seed),
-            scratch: Mat::zeros(d1, d2),
+            // Allocated on first dense use: sparse objectives route the
+            // fused step through the COO gradient operator and never
+            // need an O(d1 * d2) scratch, so completion dims can grow
+            // past what a dense gradient buffer could hold.
+            scratch: Mat::zeros(0, 0),
             v0: vec![0.0; d2],
+        }
+    }
+
+    fn ensure_scratch(&mut self) {
+        if self.scratch.rows == 0 {
+            let (d1, d2) = self.obj.dims();
+            self.scratch = Mat::zeros(d1, d2);
         }
     }
 
@@ -93,6 +104,7 @@ impl NativeEngine {
 
 impl StepEngine for NativeEngine {
     fn step(&mut self, x: &Mat, idx: &[usize]) -> StepOut {
+        self.ensure_scratch();
         let loss_sum = self.obj.grad_sum(x, idx, &mut self.scratch);
         let s = self.lmo_on_scratch();
         StepOut { u: s.u, v: s.v, sigma: s.sigma, loss_sum, m: idx.len() }
@@ -109,8 +121,17 @@ impl StepEngine for NativeEngine {
     }
 
     /// Factored iterates are evaluated directly (factored inner
-    /// products in the objective) — no dense X is ever built.
+    /// products in the objective) — no dense X is ever built.  Sparse
+    /// objectives go further: the whole fused step runs against the COO
+    /// gradient operator, O(nnz) to build and O(nnz * k) in the LMO,
+    /// touching nothing of size d1 * d2.
     fn step_it(&mut self, x: &Iterate, idx: &[usize]) -> StepOut {
+        if let Some((g, loss_sum)) = self.obj.grad_sum_sparse(x, idx) {
+            self.rng.fill_unit_vector(&mut self.v0);
+            let s = power_iteration(&g, &self.v0, self.power_iters, self.tol);
+            return StepOut { u: s.u, v: s.v, sigma: s.sigma, loss_sum, m: idx.len() };
+        }
+        self.ensure_scratch();
         let loss_sum = self.obj.grad_sum_it(x, idx, &mut self.scratch);
         let s = self.lmo_on_scratch();
         StepOut { u: s.u, v: s.v, sigma: s.sigma, loss_sum, m: idx.len() }
@@ -160,6 +181,42 @@ mod tests {
             s[0]
         );
         assert_eq!(out.m, 128);
+    }
+
+    #[test]
+    fn sparse_step_matches_dense_gradient_lmo() {
+        use crate::data::recommender::{RecParams, RecommenderData};
+        use crate::linalg::FactoredMat;
+        use crate::objective::SparseCompletion;
+        let mut rng = Rng::new(44);
+        let p = RecParams { rows: 18, cols: 10, rank: 2, density: 0.25, ..RecParams::default() };
+        let obj: Arc<dyn Objective> =
+            Arc::new(SparseCompletion::new(RecommenderData::generate(&p, &mut rng), 1.0));
+        let mut f = FactoredMat::zeros(18, 10);
+        for _ in 0..3 {
+            f.push_atom(
+                0.3 * rng.normal_f32(),
+                Arc::new(rng.unit_vector(18)),
+                Arc::new(rng.unit_vector(10)),
+            );
+        }
+        let idx: Vec<usize> = (0..40).map(|_| rng.next_below(obj.n())).collect();
+        // Same seed -> identical v0 draws, so the sparse-operator LMO
+        // and the dense-scratch LMO see the same restart vector.
+        let mut sparse_eng = NativeEngine::new(obj.clone(), 200, 45);
+        let out = sparse_eng.step_it(&Iterate::Factored(f.clone()), &idx);
+        let mut dense_eng = NativeEngine::new(obj.clone(), 200, 45);
+        let mut g = Mat::zeros(18, 10);
+        let loss = obj.grad_sum_factored(&f, &idx, &mut g);
+        let s = dense_eng.lmo(&g);
+        assert!((out.loss_sum - loss).abs() < 1e-6 * (1.0 + loss.abs()));
+        assert!(
+            (out.sigma - s.sigma).abs() < 1e-3 * (1.0 + s.sigma.abs()),
+            "sigma {} vs {}",
+            out.sigma,
+            s.sigma
+        );
+        assert_eq!(out.m, 40);
     }
 
     #[test]

@@ -32,10 +32,14 @@ pub fn local_links<Up: Wire, Down: Wire>(
     counters: Arc<Counters>,
     latency: Option<Duration>,
 ) -> (LocalMaster<Up, Down>, Vec<LocalWorker<Up, Down>>) {
+    // lint: allow(bounded-channel-depth): depth <= W — each worker has at
+    // most one un-answered update in flight (it blocks on recv after send)
     let (up_tx, up_rx) = channel::<Up>();
     let mut txs = Vec::with_capacity(workers);
     let mut wlinks = Vec::with_capacity(workers);
     for _ in 0..workers {
+        // lint: allow(bounded-channel-depth): depth <= 1 — the master sends
+        // one reply per update received from this worker
         let (down_tx, down_rx) = channel::<Down>();
         txs.push(down_tx);
         wlinks.push(LocalWorker {

@@ -119,6 +119,9 @@ pub fn tcp_master_on_with<Up: Wire, Down: Wire>(
     counters: Arc<Counters>,
     hello_timeout: Duration,
 ) -> std::io::Result<TcpMaster<Up, Down>> {
+    // lint: allow(bounded-channel-depth): depth <= W — the per-worker reader
+    // threads fan in here, and each remote worker blocks for its reply
+    // before framing another update
     let (tx, rx) = channel::<Up>();
     let mut write_halves: Vec<Option<TcpStream>> = (0..workers).map(|_| None).collect();
     let mut accepted = 0;

@@ -147,6 +147,18 @@ pub struct TrainConfig {
     pub ms_noise: f32,
     pub pnn_n: usize,
     pub pnn_d: usize,
+    // synthetic recommender (task = sparse_completion)
+    pub rec_rows: usize,
+    pub rec_cols: usize,
+    pub rec_rank: usize,
+    /// Target fraction of observed entries (nnz / (rows * cols)).
+    pub rec_density: f64,
+    /// Power-law exponent of the per-row observation counts.
+    pub rec_alpha: f64,
+    /// Fraction of observed entries held out for evaluation.
+    pub rec_holdout: f64,
+    /// Observation noise as a fraction of the clean-entry RMS.
+    pub rec_noise: f64,
 }
 
 impl Default for TrainConfig {
@@ -178,6 +190,13 @@ impl Default for TrainConfig {
             ms_noise: 0.1,
             pnn_n: 60_000,
             pnn_d: 196,
+            rec_rows: 2000,
+            rec_cols: 400,
+            rec_rank: 4,
+            rec_density: 0.01,
+            rec_alpha: 1.1,
+            rec_holdout: 0.1,
+            rec_noise: 0.05,
         }
     }
 }
@@ -206,7 +225,11 @@ impl TrainConfig {
             "batch-cap", "batch-scale", "power-iters", "repr", "uplink", "theta",
             "seed", "eval-every",
         ];
-        const DATA_KEYS: &[&str] = &["ms-n", "ms-d", "ms-rank", "ms-noise", "pnn-n", "pnn-d"];
+        const DATA_KEYS: &[&str] = &[
+            "ms-n", "ms-d", "ms-rank", "ms-noise", "pnn-n", "pnn-d", "rec-rows",
+            "rec-cols", "rec-rank", "rec-density", "rec-alpha", "rec-holdout",
+            "rec-noise",
+        ];
 
         // 1. Promote file-sectioned keys to their flat names (a flat
         //    entry in the file wins over a sectioned one).
@@ -268,6 +291,13 @@ impl TrainConfig {
             ms_noise: cfg.get("ms-noise", d.ms_noise)?,
             pnn_n: cfg.get("pnn-n", d.pnn_n)?,
             pnn_d: cfg.get("pnn-d", d.pnn_d)?,
+            rec_rows: cfg.get("rec-rows", d.rec_rows)?,
+            rec_cols: cfg.get("rec-cols", d.rec_cols)?,
+            rec_rank: cfg.get("rec-rank", d.rec_rank)?,
+            rec_density: cfg.get("rec-density", d.rec_density)?,
+            rec_alpha: cfg.get("rec-alpha", d.rec_alpha)?,
+            rec_holdout: cfg.get("rec-holdout", d.rec_holdout)?,
+            rec_noise: cfg.get("rec-noise", d.rec_noise)?,
         })
     }
 }
@@ -381,6 +411,24 @@ n = 90000
             load("--tcp-await no"),
             Err(ConfigError::BadValue(k, _)) if k == "tcp-await"
         ));
+    }
+
+    #[test]
+    fn recommender_keys_resolve_from_cli_and_file() {
+        let args = Args::parse_from(
+            "--task sparse_completion --rec-rows 5000 --data.rec-density 0.02"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let tc = TrainConfig::load(&args).unwrap();
+        assert_eq!(tc.task, "sparse_completion");
+        assert_eq!(tc.rec_rows, 5000);
+        assert!((tc.rec_density - 0.02).abs() < 1e-12);
+        assert_eq!(tc.rec_cols, TrainConfig::default().rec_cols);
+        let cfg = Config::from_str("[data]\nrec-cols = 77\n").unwrap();
+        let tc =
+            TrainConfig::resolve(cfg, &Args::parse_from(std::iter::empty::<String>())).unwrap();
+        assert_eq!(tc.rec_cols, 77);
     }
 
     #[test]

@@ -74,10 +74,14 @@ pub(crate) fn run_dfw_power_impl(obj: Arc<dyn Objective>, opts: &DfwOptions) -> 
     let n = obj.n();
     let w_count = opts.workers;
 
+    // lint: allow(bounded-channel-depth): depth <= W — one Rep per Req, and
+    // each worker blocks on its Req queue after replying
     let (up_tx, up_rx): (Sender<(usize, Rep)>, Receiver<(usize, Rep)>) = channel();
     let mut down_txs = Vec::new();
     let mut handles = Vec::new();
     for w in 0..w_count {
+        // lint: allow(bounded-channel-depth): depth <= 1 — the power-iteration
+        // master issues the next Req to a worker only after its reply
         let (tx, rx): (Sender<Req>, Receiver<Req>) = channel();
         down_txs.push(tx);
         let up = up_tx.clone();

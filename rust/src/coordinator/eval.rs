@@ -25,6 +25,9 @@ pub struct Evaluator {
 
 impl Evaluator {
     pub fn new(obj: Arc<dyn Objective>, trace: Arc<LossTrace>) -> Self {
+        // lint: allow(bounded-channel-depth): depth <= iterations/eval_every
+        // — deliberately unbounded so a slow loss_full never backpressures
+        // the solver loop; snapshots are O(k) atom clones, not dense copies
         let (tx, rx) = channel::<(f64, u64, Iterate)>();
         let handle = std::thread::spawn(move || {
             for (t, k, x) in rx {

@@ -58,10 +58,14 @@ where
     let theta = obj.theta();
     let rank1_bytes = (4 * (d1 + d2)) as u64;
 
+    // lint: allow(bounded-channel-depth): depth <= W — one Rep per Req, and
+    // each worker blocks on its Req queue after replying
     let (up_tx, up_rx): (Sender<Rep>, Receiver<Rep>) = channel();
     let mut down_txs = Vec::new();
     let mut handles = Vec::new();
     for w in 0..opts.workers {
+        // lint: allow(bounded-channel-depth): depth <= 1 — the master issues
+        // the next Req only after collecting this round's Reps
         let (tx, rx): (Sender<Req>, Receiver<Req>) = channel();
         down_txs.push(tx);
         let mut engine = make_engine(w);

@@ -10,8 +10,15 @@
 //!   the objective realizable and the communication-dominance regime
 //!   (D^2 ≈ 614k parameters at D = 784) identical to the paper's.
 
+//! * Recommender — sparse matrix completion at "millions of users" shape
+//!   (the paper's §1 motivation): planted low-rank ground truth observed
+//!   through a power-law per-row mask with a train/holdout split; only
+//!   observed entries are materialized, so memory is O(nnz).
+
 pub mod matrix_sensing;
 pub mod pnn;
+pub mod recommender;
 
 pub use matrix_sensing::MatrixSensingData;
 pub use pnn::PnnData;
+pub use recommender::{RecParams, RecommenderData};

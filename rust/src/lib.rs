@@ -61,6 +61,7 @@ pub mod experiments;
 pub mod linalg;
 pub mod lint;
 pub mod metrics;
+pub mod model;
 pub mod objective;
 pub mod runtime;
 pub mod session;

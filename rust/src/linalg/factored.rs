@@ -103,6 +103,25 @@ impl FactoredMat {
         self.cap
     }
 
+    /// Read-only view of atom `i` as `(w_i, u_i, v_i)` — the
+    /// checkpoint serializer and per-atom caches walk the list through
+    /// this instead of reaching into the private storage.
+    pub fn atom(&self, i: usize) -> (f32, &Arc<Vec<f32>>, &Arc<Vec<f32>>) {
+        (self.w[i], &self.us[i], &self.vs[i])
+    }
+
+    /// Single entry `X[i][j] = sum_k w_k u_k[i] v_k[j]` — O(atoms), the
+    /// sparse matrix-completion residual and the per-user serving score.
+    #[inline]
+    pub fn entry(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        let mut acc = 0.0f64;
+        for ((&w, u), v) in self.w.iter().zip(&self.us).zip(&self.vs) {
+            acc += w as f64 * u[i] as f64 * v[j] as f64;
+        }
+        acc as f32
+    }
+
     /// Append one atom `w * u v^T` (shared factors), re-compressing when
     /// the cap is exceeded.
     pub fn push_atom(&mut self, w: f32, u: Arc<Vec<f32>>, v: Arc<Vec<f32>>) {
@@ -379,6 +398,24 @@ mod tests {
         let exact = crate::linalg::nuclear_norm(&f.to_dense());
         let bound = f.nuclear_norm_bound();
         assert!(bound + 1e-6 >= exact, "bound {bound} < exact {exact}");
+    }
+
+    #[test]
+    fn entry_and_atom_views_match_dense() {
+        let mut rng = Rng::new(316);
+        let f = random_factored(&mut rng, 5, 4, 3);
+        let d = f.to_dense();
+        for i in 0..5 {
+            for j in 0..4 {
+                assert!((f.entry(i, j) - d.at(i, j)).abs() < 1e-5);
+            }
+        }
+        let mut rebuilt = FactoredMat::zeros(5, 4);
+        for k in 0..f.atoms() {
+            let (w, u, v) = f.atom(k);
+            rebuilt.push_atom(w, u.clone(), v.clone());
+        }
+        assert!(frob_diff(&rebuilt.to_dense(), &d) < 1e-6);
     }
 
     #[test]

@@ -11,6 +11,9 @@
 //! ([`crate::comms::GradCodec`]);
 //! `iterate` — [`Iterate`]/[`Repr`], the dense-or-factored iterate every
 //! solver threads through (chosen per run by `TrainSpec::repr`);
+//! `sparse` — [`CooMat`], COO triples behind [`LinOp`]: the O(nnz)
+//! minibatch gradient of sparse matrix completion, so the LMO never
+//! densifies it;
 //! `svd` — operator-form power-iteration 1-SVD (the FW LMO) + one-sided
 //! Jacobi full SVD;
 //! `project` — simplex / l1 / nuclear-ball Euclidean projections (PGD
@@ -27,6 +30,7 @@ pub mod iterate;
 pub mod mat;
 pub mod op;
 pub mod project;
+pub mod sparse;
 pub mod svd;
 
 pub use factored::FactoredMat;
@@ -34,6 +38,7 @@ pub use feedback::ErrorFeedback;
 pub use iterate::{dense_rank, Iterate, Repr};
 pub use mat::{dot, norm2, normalize, Mat};
 pub use op::LinOp;
+pub use sparse::CooMat;
 pub use project::{
     factored_nuclear_projection, l1_projection, nuclear_ball_projection, simplex_projection,
 };

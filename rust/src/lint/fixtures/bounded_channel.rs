@@ -1,0 +1,10 @@
+//! Fixture: an unbounded `mpsc::channel()` constructed on a protocol
+//! hot path — a slow consumer would let the queue grow without limit
+//! instead of exerting backpressure.  The import line is inert (no call
+//! parens); only the construction trips the rule.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+pub fn build_queue() -> (Sender<u32>, Receiver<u32>) {
+    channel::<u32>()
+}

@@ -21,6 +21,7 @@
 //! | `safety-comment` | all of `rust/src` | every `unsafe` block/impl has a `// SAFETY:` comment on the same line or within the preceding 6 lines |
 //! | `wire-coverage` | all of `rust/src` | every `impl Wire for T` type is named in the wire round-trip property tests (`rust/tests/properties.rs`) |
 //! | `no-lock-across-io` | non-test code of the hot modules | no `send(` / `recv(` while a `Mutex` guard bound earlier in the same scope is live (a blocked peer would hold the lock indefinitely) |
+//! | `bounded-channel-depth` | non-test code of the hot modules | no unbounded `mpsc::channel()` construction — a protocol queue either uses `sync_channel` with an explicit depth or carries an allow stating the protocol invariant that bounds it |
 //! | `error-variant-liveness` | `WireError` / `SessionError` | every variant is both constructed and matched somewhere in `rust/src` + `rust/tests` (`#[from]` / `#[error(transparent)]` count as constructed) |
 //! | `bad-allow` | everywhere, including tests | every allow comment names a known rule and carries a reason |
 //!
@@ -68,16 +69,18 @@ pub enum Rule {
     SafetyComment,
     WireCoverage,
     NoLockAcrossIo,
+    BoundedChannelDepth,
     ErrorVariantLiveness,
     BadAllow,
 }
 
 impl Rule {
-    pub const ALL: [Rule; 6] = [
+    pub const ALL: [Rule; 7] = [
         Rule::PanicFree,
         Rule::SafetyComment,
         Rule::WireCoverage,
         Rule::NoLockAcrossIo,
+        Rule::BoundedChannelDepth,
         Rule::ErrorVariantLiveness,
         Rule::BadAllow,
     ];
@@ -88,6 +91,7 @@ impl Rule {
             Rule::SafetyComment => "safety-comment",
             Rule::WireCoverage => "wire-coverage",
             Rule::NoLockAcrossIo => "no-lock-across-io",
+            Rule::BoundedChannelDepth => "bounded-channel-depth",
             Rule::ErrorVariantLiveness => "error-variant-liveness",
             Rule::BadAllow => "bad-allow",
         }
@@ -95,7 +99,7 @@ impl Rule {
 
     /// The allow-grammar lookup ([`Rule::BadAllow`] cannot be allowed).
     pub fn from_name(name: &str) -> Option<Rule> {
-        Rule::ALL[..5].iter().copied().find(|r| r.name() == name)
+        Rule::ALL[..6].iter().copied().find(|r| r.name() == name)
     }
 }
 

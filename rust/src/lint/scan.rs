@@ -225,6 +225,25 @@ fn find_panic_token(code: &str) -> Option<&'static str> {
     None
 }
 
+/// Find an unbounded-channel constructor in stripped code: a bare
+/// `channel()` / `channel::<T>()` call.  The left word boundary keeps
+/// `sync_channel(` (the bounded constructor) inert, and requiring the
+/// `(` / `::<` right after the name keeps `use ...::{channel, ...}`
+/// imports and prose mentions inert.
+fn finds_unbounded_channel(code: &str) -> bool {
+    for tok in ["channel()", "channel::<"] {
+        let mut from = 0;
+        while let Some(pos) = code[from..].find(tok) {
+            let at = from + pos;
+            if boundary_before(code, at) {
+                return true;
+            }
+            from = at + tok.len();
+        }
+    }
+    false
+}
+
 /// True when `word` occurs in `code` delimited by non-identifier chars.
 fn has_word(code: &str, word: &str) -> bool {
     let mut from = 0;
@@ -407,6 +426,18 @@ pub fn scan_source(path: &str, src: &str, cfg: &LintConfig) -> FileScan {
                         "send/recv while a Mutex guard bound in this scope is live".to_string(),
                     ));
                 }
+                if finds_unbounded_channel(&code)
+                    && !allowed(Rule::BoundedChannelDepth, &mut scan)
+                {
+                    scan.violations.push(Violation::new(
+                        Rule::BoundedChannelDepth,
+                        path,
+                        line_no,
+                        "unbounded `mpsc::channel()` on a protocol path; use `sync_channel` \
+                         with an explicit depth or allow with the invariant that bounds it"
+                            .to_string(),
+                    ));
+                }
             }
             if has_word(&code, "unsafe") {
                 let nearby = comment.contains("SAFETY:")
@@ -575,6 +606,29 @@ fn f() {
         let scan = scan_source("rust/src/comms/x.rs", src, &cfg());
         assert_eq!(scan.violations.len(), 1, "{:?}", scan.violations);
         assert_eq!(scan.violations[0].rule, Rule::BadAllow);
+    }
+
+    #[test]
+    fn unbounded_channel_is_flagged_only_in_hot_modules_and_sync_channel_is_inert() {
+        let bad = "fn f() { let (tx, rx) = channel::<u32>(); }\n";
+        let scan = scan_source("rust/src/comms/x.rs", bad, &cfg());
+        assert_eq!(scan.violations.len(), 1, "{:?}", scan.violations);
+        assert_eq!(scan.violations[0].rule, Rule::BoundedChannelDepth);
+        // cold module: same construction is fine
+        let scan = scan_source("rust/src/runtime/x.rs", bad, &cfg());
+        assert!(scan.violations.is_empty(), "{:?}", scan.violations);
+        // bounded constructor and bare import are inert even in hot code
+        let ok = "use std::sync::mpsc::{channel, sync_channel};\n\
+                  fn f() { let (tx, rx) = sync_channel::<u32>(8); }\n";
+        let scan = scan_source("rust/src/comms/x.rs", ok, &cfg());
+        assert!(scan.violations.is_empty(), "{:?}", scan.violations);
+        // an allow with a reason suppresses and registers
+        let allowed =
+            "// lint: allow(bounded-channel-depth): depth <= W by protocol\n\
+             fn f() { let (tx, rx) = channel::<u32>(); }\n";
+        let scan = scan_source("rust/src/comms/x.rs", allowed, &cfg());
+        assert!(scan.violations.is_empty(), "{:?}", scan.violations);
+        assert_eq!(scan.suppressed.len(), 1);
     }
 
     #[test]

@@ -16,6 +16,12 @@
 //!             cell, print the summary table and write
 //!             bench_out/sweep_<name>.{json,csv} (`--smoke` runs the
 //!             tiny deterministic CI grid).
+//!   serve     answer per-user top-k prediction queries from a model
+//!             checkpoint written by `sfw train --checkpoint` — scores
+//!             straight off the atom list, O(atoms * cols) per user, no
+//!             dense X; `--user U` for one query or `--queries FILE`
+//!             (one user id per line) for a batch, then a
+//!             request/latency report.
 //!   simulate  queuing-model simulation (Appendix D)
 //!   info      show the artifact manifest and PJRT platform
 //!   lint      repo-native static analysis (panic-freedom, SAFETY
@@ -38,6 +44,11 @@
 //!             --sweep.target 0.02 --name speedup
 //!   sfw sweep --sweep.chaos none,slow-tail,flaky-net --sweep.algos sfw-asyn --name chaos
 //!   sfw sweep --config run.ini --sweep.tau 0,2,8,64 --jobs 2
+//!   sfw train --task sparse_completion --algo sfw-asyn --workers 4 \
+//!             --rec-rows 20000 --rec-cols 2000 --rec-density 0.01 \
+//!             --checkpoint model.json
+//!   sfw serve --model model.json --user 17 --topk 5
+//!   sfw serve --model model.json --queries users.txt --topk 10
 //!   sfw simulate --p 0.1 --workers 15 --iterations 500
 //!   sfw info --artifacts-dir artifacts
 
@@ -67,12 +78,13 @@ fn main() -> anyhow::Result<()> {
         "train" => cmd_train(&args),
         "worker" => cmd_worker(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
         "info" => cmd_info(&args),
         "lint" => cmd_lint(&args),
         _ => {
             eprintln!(
-                "usage: sfw <train|worker|sweep|simulate|info|lint> [--flags]\n\
+                "usage: sfw <train|worker|sweep|serve|simulate|info|lint> [--flags]\n\
                  see rust/src/main.rs header for examples"
             );
             Ok(())
@@ -134,6 +146,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     match spec.run() {
         Ok(report) => {
             print_result(&report);
+            if let Some(path) = args.get_opt("checkpoint") {
+                checkpoint(&report, &path)?;
+            }
             Ok(())
         }
         Err(e) => anyhow::bail!(
@@ -141,6 +156,81 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             registry().names().join(", ")
         ),
     }
+}
+
+/// Write the trained model as a `sfw.model/v1` atom-list file.  Factored
+/// runs save their atom list verbatim; dense runs re-factorize the final
+/// iterate through an exact SVD first (cutting components below 1e-6 of
+/// the leading singular value).
+fn checkpoint(report: &Report, path: &str) -> anyhow::Result<()> {
+    let f = match &report.factored {
+        Some(f) => f.clone(),
+        None => {
+            let (u, s, v) = sfw::linalg::jacobi_svd(&report.x);
+            let cutoff = 1e-6 * s.first().copied().unwrap_or(0.0);
+            sfw::linalg::FactoredMat::from_svd(&u, &s, &v, cutoff)
+        }
+    };
+    sfw::model::save(&f, path)?;
+    println!("checkpoint: {} atoms ({}x{}) -> {path}", f.atoms(), f.rows, f.cols);
+    Ok(())
+}
+
+/// `sfw serve`: answer top-k prediction queries from a checkpoint.  Each
+/// query scores one user's row of X = sum_i w_i u_i v_i^T directly off
+/// the atom list — O(atoms * cols) per query, independent of the training
+/// set size, no dense materialization.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    sfw::chaos::reject_chaos_keys("serve", &Config::new(), args)?;
+    let path = args
+        .get_opt("model")
+        .ok_or_else(|| anyhow::anyhow!("sfw serve: --model <checkpoint.json> is required"))?;
+    let topk = args.get_usize("topk", 10);
+    let model = sfw::model::load(&path)?;
+    println!(
+        "model: {}x{} rank<={} atoms ({path})",
+        model.rows,
+        model.cols,
+        model.atoms()
+    );
+    let users: Vec<usize> = if let Some(user) = args.get_opt("user") {
+        vec![user
+            .parse()
+            .map_err(|_| anyhow::anyhow!("sfw serve: --user must be a row index"))?]
+    } else if let Some(qfile) = args.get_opt("queries") {
+        let text = std::fs::read_to_string(&qfile)
+            .map_err(|e| anyhow::anyhow!("sfw serve: cannot read {qfile}: {e}"))?;
+        let mut users = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            users.push(line.parse().map_err(|_| {
+                anyhow::anyhow!("sfw serve: {qfile}:{}: bad user id '{line}'", lineno + 1)
+            })?);
+        }
+        users
+    } else {
+        anyhow::bail!("sfw serve: give --user <row> or --queries <file>");
+    };
+    let stats = sfw::metrics::ServeStats::new();
+    let mut scores = Vec::new();
+    for &user in &users {
+        let t0 = std::time::Instant::now();
+        sfw::model::user_scores(&model, user, &mut scores)?;
+        let top = sfw::model::top_k(&scores, topk);
+        stats.record(t0.elapsed());
+        let rendered: Vec<String> =
+            top.iter().map(|(j, s)| format!("{j}:{s:.4}")).collect();
+        println!("user {user:<8} top{topk}: {}", rendered.join(" "));
+    }
+    let s = stats.snapshot();
+    println!(
+        "\nserve: requests={} mean={:.1}us max={:.1}us",
+        s.requests, s.mean_us, s.max_us
+    );
+    Ok(())
 }
 
 /// `sfw worker`: the worker side of a multi-process TCP run.  Builds the
@@ -215,6 +305,11 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         // uplink byte win at matching final relative loss on them.
         let uplink = SweepRunner::new().run(&SweepSpec::smoke_uplink())?;
         result.cells.extend(uplink.cells);
+        // And the sparse-completion cells (96x48 recommender, factored
+        // sfw-asyn, W in {1,2}); check_smoke_bytes.py asserts nonzero
+        // rank/atom counts and atom-scale uplink bytes on them.
+        let sparse = SweepRunner::new().run(&SweepSpec::smoke_sparse())?;
+        result.cells.extend(sparse.cells);
     }
     result.table().print();
     let out_dir = args.get_str("out-dir", "bench_out");

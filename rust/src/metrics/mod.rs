@@ -101,6 +101,51 @@ impl CounterSnapshot {
     }
 }
 
+/// Serving-side request/latency counters (the `sfw serve` report).
+/// Latencies accumulate in nanoseconds; the snapshot reports
+/// microseconds, the natural unit of an O(atoms * d2) score pass.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub requests: AtomicU64,
+    pub total_ns: AtomicU64,
+    pub max_ns: AtomicU64,
+}
+
+impl ServeStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge one answered query.
+    pub fn record(&self, elapsed: std::time::Duration) {
+        let ns = elapsed.as_nanos().min(u64::MAX as u128) as u64;
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ServeSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let total_ns = self.total_ns.load(Ordering::Relaxed);
+        ServeSnapshot {
+            requests,
+            mean_us: if requests == 0 {
+                0.0
+            } else {
+                total_ns as f64 / requests as f64 / 1_000.0
+            },
+            max_us: self.max_ns.load(Ordering::Relaxed) as f64 / 1_000.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServeSnapshot {
+    pub requests: u64,
+    pub mean_us: f64,
+    pub max_us: f64,
+}
+
 /// One point of a convergence curve: (time, master iteration, loss).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TracePoint {
@@ -191,6 +236,18 @@ mod tests {
         assert_eq!(s.msgs_up, 4000);
         assert_eq!(s.msgs_down, 4000);
         assert_eq!(s.total_bytes(), 120_000);
+    }
+
+    #[test]
+    fn serve_stats_accumulate() {
+        let s = ServeStats::new();
+        assert_eq!(s.snapshot(), ServeSnapshot::default());
+        s.record(std::time::Duration::from_micros(10));
+        s.record(std::time::Duration::from_micros(30));
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 2);
+        assert!((snap.mean_us - 20.0).abs() < 1e-9);
+        assert!((snap.max_us - 30.0).abs() < 1e-9);
     }
 
     #[test]

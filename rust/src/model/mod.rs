@@ -1,0 +1,263 @@
+//! Model checkpointing and atom-list serving: the train→checkpoint→serve
+//! decoupling of the repo's recommender story.
+//!
+//! A trained factored iterate IS the model — `X = sum_k w_k u_k v_k^T` —
+//! so a checkpoint is just the atom list, written as the versioned
+//! `sfw.model/v1` JSON document through [`crate::util::json`]
+//! (deterministic rendering; f32 values round-trip bit-exactly through
+//! the f64 JSON numbers).  Loading never re-compresses: the cap is set
+//! to the stored atom count, so save→load→predict is bit-identical.
+//!
+//! Serving ([`user_scores`] / [`top_k`]) answers per-user top-k queries
+//! straight from the atoms at O(atoms * d2) per user — independent of
+//! the training set's nnz, and no dense X is ever materialized.  The
+//! `sfw serve` subcommand in `main.rs` drives these with a
+//! [`crate::metrics::ServeStats`] request/latency report.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::linalg::FactoredMat;
+use crate::util::json::Json;
+
+/// Version tag every checkpoint carries (and every load verifies).
+pub const MODEL_FORMAT: &str = "sfw.model/v1";
+
+#[derive(Debug, thiserror::Error)]
+pub enum ModelError {
+    #[error("model io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("model parse: {0}")]
+    Parse(String),
+    #[error("model format: {0}")]
+    Format(String),
+    #[error("query: {0}")]
+    Query(String),
+}
+
+/// Serialize the atom list as an `sfw.model/v1` JSON value.
+pub fn to_json(x: &FactoredMat) -> Json {
+    let mut atoms = Vec::with_capacity(x.atoms());
+    for k in 0..x.atoms() {
+        let (w, u, v) = x.atom(k);
+        atoms.push(Json::Obj(vec![
+            ("w".into(), Json::Num(w as f64)),
+            ("u".into(), Json::Arr(u.iter().map(|&x| Json::Num(x as f64)).collect())),
+            ("v".into(), Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())),
+        ]));
+    }
+    Json::Obj(vec![
+        ("format".into(), Json::Str(MODEL_FORMAT.into())),
+        ("rows".into(), Json::Num(x.rows as f64)),
+        ("cols".into(), Json::Num(x.cols as f64)),
+        ("atoms".into(), Json::Arr(atoms)),
+    ])
+}
+
+fn f32_arr(v: &Json, key: &str, want_len: usize, atom: usize) -> Result<Vec<f32>, ModelError> {
+    let arr = v
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ModelError::Format(format!("atom {atom}: missing array '{key}'")))?;
+    if arr.len() != want_len {
+        return Err(ModelError::Format(format!(
+            "atom {atom}: '{key}' has length {} (want {want_len})",
+            arr.len()
+        )));
+    }
+    arr.iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| ModelError::Format(format!("atom {atom}: non-number in '{key}'")))
+        })
+        .collect()
+}
+
+/// Rebuild the factored model from an `sfw.model/v1` JSON value.  The
+/// atom cap is pinned to the stored count so loading never triggers a
+/// re-compression — predictions are bit-identical to the saved model's.
+pub fn from_json(v: &Json) -> Result<FactoredMat, ModelError> {
+    let format = v.str_field("format").map_err(ModelError::Format)?;
+    if format != MODEL_FORMAT {
+        return Err(ModelError::Format(format!(
+            "unsupported format '{format}' (want '{MODEL_FORMAT}')"
+        )));
+    }
+    let rows = v.get("rows").and_then(Json::as_usize);
+    let cols = v.get("cols").and_then(Json::as_usize);
+    let (rows, cols) = match (rows, cols) {
+        (Some(r), Some(c)) if r > 0 && c > 0 => (r, c),
+        _ => return Err(ModelError::Format("missing/invalid 'rows'/'cols'".into())),
+    };
+    let atoms = v
+        .get("atoms")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ModelError::Format("missing array 'atoms'".into()))?;
+    let mut f = FactoredMat::with_cap(rows, cols, atoms.len());
+    for (k, a) in atoms.iter().enumerate() {
+        let w = a
+            .get("w")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| ModelError::Format(format!("atom {k}: missing number 'w'")))?
+            as f32;
+        let u = f32_arr(a, "u", rows, k)?;
+        let v = f32_arr(a, "v", cols, k)?;
+        f.push_atom(w, Arc::new(u), Arc::new(v));
+    }
+    Ok(f)
+}
+
+/// Write a checkpoint (compact single-line JSON + trailing newline).
+pub fn save(x: &FactoredMat, path: &Path) -> Result<(), ModelError> {
+    let mut text = to_json(x).render();
+    text.push('\n');
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+/// Read and validate a checkpoint.
+pub fn load(path: &Path) -> Result<FactoredMat, ModelError> {
+    let text = std::fs::read_to_string(path)?;
+    let v = Json::parse(&text).map_err(ModelError::Parse)?;
+    from_json(&v)
+}
+
+/// Row `user` of the model — the serving scores — computed from the atom
+/// list as `s = sum_k (w_k u_k[user]) v_k`: O(atoms * cols), independent
+/// of how many observations trained the model.
+pub fn user_scores(model: &FactoredMat, user: usize, out: &mut Vec<f32>) -> Result<(), ModelError> {
+    if user >= model.rows {
+        return Err(ModelError::Query(format!(
+            "user {user} out of range (model has {} rows)",
+            model.rows
+        )));
+    }
+    out.clear();
+    out.resize(model.cols, 0.0);
+    for k in 0..model.atoms() {
+        let (w, u, v) = model.atom(k);
+        let c = w * u[user];
+        if c == 0.0 {
+            continue;
+        }
+        for (s, &vj) in out.iter_mut().zip(v.iter()) {
+            *s += c * vj;
+        }
+    }
+    Ok(())
+}
+
+/// Indices of the `k` largest scores, descending; ties break toward the
+/// lower item index so results are deterministic.
+pub fn top_k(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_unstable_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    order.truncate(k);
+    order.into_iter().map(|i| (i, scores[i])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_model(seed: u64, d1: usize, d2: usize, k: usize) -> FactoredMat {
+        let mut rng = Rng::new(seed);
+        let mut f = FactoredMat::zeros(d1, d2);
+        for _ in 0..k {
+            f.push_atom(
+                rng.normal_f32(),
+                Arc::new(rng.unit_vector(d1)),
+                Arc::new(rng.unit_vector(d2)),
+            );
+        }
+        f
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_identical() {
+        let m = random_model(500, 9, 7, 5);
+        let back = from_json(&to_json(&m)).unwrap();
+        assert_eq!((back.rows, back.cols, back.atoms()), (9, 7, 5));
+        for k in 0..m.atoms() {
+            let (w0, u0, v0) = m.atom(k);
+            let (w1, u1, v1) = back.atom(k);
+            assert_eq!(w0.to_bits(), w1.to_bits());
+            for (a, b) in u0.iter().zip(u1.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in v0.iter().zip(v1.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn load_does_not_recompress_wide_models() {
+        // More atoms than the default cap would allow: load must keep
+        // them all (cap pinned to the stored count).
+        let mut rng = Rng::new(501);
+        let mut m = FactoredMat::with_cap(4, 3, 64);
+        for _ in 0..40 {
+            m.push_atom(
+                rng.normal_f32(),
+                Arc::new(rng.unit_vector(4)),
+                Arc::new(rng.unit_vector(3)),
+            );
+        }
+        let back = from_json(&to_json(&m)).unwrap();
+        assert_eq!(back.atoms(), 40);
+    }
+
+    #[test]
+    fn top_k_orders_descending_with_stable_ties() {
+        let scores = [0.5f32, 2.0, -1.0, 2.0, 0.0];
+        let got = top_k(&scores, 3);
+        assert_eq!(got.iter().map(|x| x.0).collect::<Vec<_>>(), vec![1, 3, 0]);
+        assert_eq!(top_k(&scores, 0).len(), 0);
+        assert_eq!(top_k(&scores, 99).len(), 5);
+    }
+
+    #[test]
+    fn user_scores_match_entry() {
+        let m = random_model(502, 6, 5, 4);
+        let mut s = Vec::new();
+        user_scores(&m, 2, &mut s).unwrap();
+        for j in 0..5 {
+            assert!((s[j] - m.entry(2, j)).abs() < 1e-6);
+        }
+        assert!(matches!(user_scores(&m, 6, &mut s), Err(ModelError::Query(_))));
+    }
+
+    #[test]
+    fn malformed_documents_are_rejected() {
+        // truncated JSON
+        assert!(matches!(
+            Json::parse("{\"format\":\"sfw.model/v1\",\"rows\":4")
+                .map_err(ModelError::Parse)
+                .and_then(|v| from_json(&v)),
+            Err(ModelError::Parse(_))
+        ));
+        // wrong format tag
+        let bad = Json::parse(r#"{"format":"sfw.model/v2","rows":2,"cols":2,"atoms":[]}"#).unwrap();
+        assert!(matches!(from_json(&bad), Err(ModelError::Format(_))));
+        // missing dims
+        let bad = Json::parse(r#"{"format":"sfw.model/v1","atoms":[]}"#).unwrap();
+        assert!(matches!(from_json(&bad), Err(ModelError::Format(_))));
+        // atom factor of the wrong length
+        let bad = Json::parse(
+            r#"{"format":"sfw.model/v1","rows":2,"cols":2,"atoms":[{"w":1,"u":[1],"v":[0,1]}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(from_json(&bad), Err(ModelError::Format(_))));
+        // non-number inside a factor
+        let bad = Json::parse(
+            r#"{"format":"sfw.model/v1","rows":1,"cols":1,"atoms":[{"w":1,"u":["x"],"v":[1]}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(from_json(&bad), Err(ModelError::Format(_))));
+    }
+}

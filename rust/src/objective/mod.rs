@@ -14,8 +14,22 @@
 //! [`Iterate`] variant.  Dense-vs-factored agreement to f32 tolerance is
 //! pinned by `rust/tests/factored.rs`.
 
-use crate::data::{MatrixSensingData, PnnData};
-use crate::linalg::{FactoredMat, Iterate, LinOp, Mat};
+//! ## Sparse objectives
+//!
+//! [`SparseCompletion`] is the first objective whose gradient is sparse:
+//! the minibatch SUM-gradient of matrix completion is nonzero only at
+//! the sampled observed entries.  Such objectives additionally override
+//! [`Objective::grad_sum_sparse`] to hand the engine the gradient as
+//! [`CooMat`] triples — O(nnz) to build from factored dot products, and
+//! O(nnz * k) for the operator-form power-iteration LMO — so neither the
+//! gradient nor the iterate is ever densified.  The dense `grad_sum`
+//! path stays implemented (scatter into the dense accumulator) for the
+//! SVRF variance-reduction buffers and for agreement tests.
+
+use std::sync::Arc;
+
+use crate::data::{MatrixSensingData, PnnData, RecommenderData};
+use crate::linalg::{CooMat, FactoredMat, Iterate, LinOp, Mat};
 
 pub trait Objective: Send + Sync {
     /// (D1, D2) of the matrix variable.
@@ -57,6 +71,15 @@ pub trait Objective: Send + Sync {
             Iterate::Factored(f) => self.loss_full_factored(f),
         }
     }
+    /// Sparse fused-step support: when the minibatch SUM-gradient is
+    /// nonzero only at O(|idx|) coordinates, return it as COO triples
+    /// plus the batch SUM loss and the engine runs the power-iteration
+    /// LMO against the sparse operator at O(nnz * k) instead of filling
+    /// a dense scratch.  `None` (the default) keeps the dense path.
+    fn grad_sum_sparse(&self, x: &Iterate, idx: &[usize]) -> Option<(CooMat, f64)> {
+        let _ = (x, idx);
+        None
+    }
     /// Best known objective value (for relative-error reporting).
     fn f_star_hint(&self) -> f64 {
         0.0
@@ -65,15 +88,61 @@ pub trait Objective: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
+/// Atom-response cache entries kept before the map is cleared wholesale.
+/// Small: entries are only reused while their atoms survive recompression,
+/// and each holds an O(n) vector.
+const AV_CACHE_MAX: usize = 128;
+
 /// Matrix sensing with nuclear-ball radius theta (paper uses theta = 1).
 pub struct MatrixSensing {
     pub data: MatrixSensingData,
     pub theta: f32,
+    /// Per-atom response vectors `c[i] = u^T A_i v` keyed by the factor
+    /// Arcs' addresses.  The cached key Arcs are stored alongside the
+    /// value, so a live entry pins its factors' allocations — an address
+    /// can never be recycled into a colliding key while its entry exists.
+    #[allow(clippy::type_complexity)]
+    av_cache: std::sync::Mutex<
+        std::collections::HashMap<(usize, usize), (Arc<Vec<f32>>, Arc<Vec<f32>>, Arc<Vec<f32>>)>,
+    >,
 }
 
 impl MatrixSensing {
     pub fn new(data: MatrixSensingData, theta: f32) -> Self {
-        MatrixSensing { data, theta }
+        MatrixSensing { data, theta, av_cache: std::sync::Mutex::new(Default::default()) }
+    }
+
+    /// `c[i] = u^T A_i v` over all N samples, cached by factor identity:
+    /// FW atoms persist across iterations (only their weights rescale,
+    /// and the update log shares the Arcs outright), so repeated
+    /// full-loss evaluations pay the O(N * d1 * d2) pass once per atom.
+    fn atom_response(&self, u: &Arc<Vec<f32>>, v: &Arc<Vec<f32>>) -> Arc<Vec<f32>> {
+        let key = (Arc::as_ptr(u) as usize, Arc::as_ptr(v) as usize);
+        if let Ok(map) = self.av_cache.lock() {
+            if let Some((_, _, c)) = map.get(&key) {
+                return c.clone();
+            }
+        }
+        let d2 = self.data.d2;
+        let mut c = vec![0.0f32; self.data.n];
+        for (i, ci) in c.iter_mut().enumerate() {
+            let row = self.data.af.row(i);
+            let mut s = 0.0f64;
+            for (r, &ur) in u.iter().enumerate() {
+                if ur != 0.0 {
+                    s += ur as f64 * crate::linalg::dot(&row[r * d2..(r + 1) * d2], v) as f64;
+                }
+            }
+            *ci = s as f32;
+        }
+        let c = Arc::new(c);
+        if let Ok(mut map) = self.av_cache.lock() {
+            if map.len() >= AV_CACHE_MAX {
+                map.clear();
+            }
+            map.insert(key, (u.clone(), v.clone(), c.clone()));
+        }
+        c
     }
 }
 
@@ -129,12 +198,27 @@ impl Objective for MatrixSensing {
         loss
     }
 
+    /// Exact low-rank evaluation through the per-atom response caches:
+    /// combine `w_k * c_k[i]` instead of re-touching every `A_i` for
+    /// every atom — O(N * atoms) once the caches are warm, plus one
+    /// O(N * d1 * d2) pass per atom not seen before.
     fn loss_full_factored(&self, x: &FactoredMat) -> f64 {
         debug_assert_eq!((x.rows, x.cols), (self.data.d1, self.data.d2));
+        let mut pred = vec![0.0f64; self.data.n];
+        for k in 0..x.atoms() {
+            let (w, u, v) = x.atom(k);
+            if w == 0.0 {
+                continue;
+            }
+            let c = self.atom_response(u, v);
+            for (p, &ci) in pred.iter_mut().zip(c.iter()) {
+                *p += w as f64 * ci as f64;
+            }
+        }
         let mut acc = 0.0f64;
-        for i in 0..self.data.n {
-            let r = x.inner_flat(self.data.af.row(i)) - self.data.y[i];
-            acc += (r as f64).powi(2);
+        for (p, &yi) in pred.iter().zip(self.data.y.iter()) {
+            let r = p - yi as f64;
+            acc += r * r;
         }
         acc / self.data.n as f64
     }
@@ -261,6 +345,117 @@ impl Objective for Pnn {
     }
 }
 
+/// Sparse matrix completion over observed entries (the synthetic
+/// recommender workload):
+///   F(X) = (1/N) sum_{(i,j) in train} (X_ij - A_ij)^2,
+///   s.t. ||X||_* <= theta.
+///
+/// Component t is one observed entry; its gradient is the single-entry
+/// matrix `2 (X_ij - A_ij) e_i e_j^T`, so a minibatch SUM-gradient has
+/// at most |batch| nonzeros.  With a factored iterate every residual is
+/// an O(atoms) dot product ([`FactoredMat::entry`]) — no quantity in the
+/// hot path ever scales with d1 * d2.
+pub struct SparseCompletion {
+    pub data: RecommenderData,
+    pub theta: f32,
+}
+
+impl SparseCompletion {
+    pub fn new(data: RecommenderData, theta: f32) -> Self {
+        SparseCompletion { data, theta }
+    }
+
+    /// Residual of observed component `t`: `(i, j, X_ij - A_ij)` against
+    /// either iterate representation.
+    #[inline]
+    fn residual_it(&self, x: &Iterate, t: usize) -> (usize, usize, f32) {
+        let (i, j, a) = self.data.triple(t);
+        let xij = match x {
+            Iterate::Dense(m) => m.at(i, j),
+            Iterate::Factored(f) => f.entry(i, j),
+        };
+        (i, j, xij - a)
+    }
+}
+
+impl Objective for SparseCompletion {
+    fn dims(&self) -> (usize, usize) {
+        (self.data.rows, self.data.cols)
+    }
+    fn n(&self) -> usize {
+        self.data.train_nnz()
+    }
+    fn theta(&self) -> f32 {
+        self.theta
+    }
+
+    /// Dense scatter path (SVRF accumulators, agreement tests): O(nnz)
+    /// work after the O(d1 * d2) zero-fill of `out`.
+    fn grad_sum(&self, x: &Mat, idx: &[usize], out: &mut Mat) -> f64 {
+        debug_assert_eq!((x.rows, x.cols), (self.data.rows, self.data.cols));
+        out.fill(0.0);
+        let mut loss = 0.0f64;
+        for &t in idx {
+            let (i, j, a) = self.data.triple(t);
+            let r = x.at(i, j) - a;
+            loss += (r as f64).powi(2);
+            *out.at_mut(i, j) += 2.0 * r;
+        }
+        loss
+    }
+
+    fn loss_full(&self, x: &Mat) -> f64 {
+        self.data.loss_full(x)
+    }
+
+    fn grad_sum_factored(&self, x: &FactoredMat, idx: &[usize], out: &mut Mat) -> f64 {
+        debug_assert_eq!((x.rows, x.cols), (self.data.rows, self.data.cols));
+        out.fill(0.0);
+        let mut loss = 0.0f64;
+        for &t in idx {
+            let (i, j, a) = self.data.triple(t);
+            let r = x.entry(i, j) - a;
+            loss += (r as f64).powi(2);
+            *out.at_mut(i, j) += 2.0 * r;
+        }
+        loss
+    }
+
+    fn loss_full_factored(&self, x: &FactoredMat) -> f64 {
+        debug_assert_eq!((x.rows, x.cols), (self.data.rows, self.data.cols));
+        let n = self.data.train_nnz();
+        let mut acc = 0.0f64;
+        for t in 0..n {
+            let (i, j, a) = self.data.triple(t);
+            let r = x.entry(i, j) - a;
+            acc += (r as f64).powi(2);
+        }
+        acc / n.max(1) as f64
+    }
+
+    /// The O(nnz) fused-step path: residuals via factored dot products,
+    /// gradient handed over as COO triples for the sparse-operator LMO.
+    fn grad_sum_sparse(&self, x: &Iterate, idx: &[usize]) -> Option<(CooMat, f64)> {
+        let (d1, d2) = self.dims();
+        let mut g = CooMat::with_capacity(d1, d2, idx.len());
+        let mut loss = 0.0f64;
+        for &t in idx {
+            let (i, j, r) = self.residual_it(x, t);
+            loss += (r as f64).powi(2);
+            g.push(i, j, 2.0 * r);
+        }
+        Some((g, loss))
+    }
+
+    fn f_star_hint(&self) -> f64 {
+        self.data.f_star_hint
+    }
+
+    fn name(&self) -> &'static str {
+        "sparse_completion"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -359,6 +554,72 @@ mod tests {
                 obj.name()
             );
         }
+    }
+
+    #[test]
+    fn ms_cached_factored_loss_stays_exact_as_atoms_evolve() {
+        use crate::linalg::FactoredMat;
+        let mut rng = Rng::new(35);
+        let p = MsParams { d1: 6, d2: 5, rank: 2, n: 300, noise_std: 0.1 };
+        let obj = MatrixSensing::new(MatrixSensingData::generate(&p, &mut rng), 1.0);
+        let mut f = FactoredMat::zeros(6, 5);
+        for k in 1..=8u64 {
+            let eta = 2.0 / (k as f32 + 1.0);
+            let (u, v) = (rng.unit_vector(6), rng.unit_vector(5));
+            f.fw_rank_one_update(eta, -1.0, &u, &v);
+            let want = obj.loss_full(&f.to_dense());
+            // cold cache (new atom) then warm cache must both match
+            for _ in 0..2 {
+                let got = obj.loss_full_factored(&f);
+                assert!(
+                    (got - want).abs() < 1e-5 * (1.0 + want.abs()),
+                    "iter {k}: cached {got} vs dense {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_completion_gradient_paths_agree() {
+        use crate::data::recommender::{RecParams, RecommenderData};
+        use crate::linalg::FactoredMat;
+        use std::sync::Arc as StdArc;
+        let mut rng = Rng::new(36);
+        let p = RecParams { rows: 20, cols: 12, rank: 2, density: 0.2, ..RecParams::default() };
+        let obj = SparseCompletion::new(RecommenderData::generate(&p, &mut rng), 1.0);
+        let (d1, d2) = obj.dims();
+        let mut f = FactoredMat::zeros(d1, d2);
+        for _ in 0..4 {
+            f.push_atom(
+                0.3 * rng.normal_f32(),
+                StdArc::new(rng.unit_vector(d1)),
+                StdArc::new(rng.unit_vector(d2)),
+            );
+        }
+        let dense = f.to_dense();
+        let idx: Vec<usize> = (0..32).map(|_| rng.next_below(obj.n())).collect();
+        fd_check(&obj, &dense, &idx, &[(0, 0), (7, 3), (19, 11)]);
+        let mut gd = Mat::zeros(d1, d2);
+        let mut gf = Mat::zeros(d1, d2);
+        let ld = obj.grad_sum(&dense, &idx, &mut gd);
+        let lf = obj.grad_sum_factored(&f, &idx, &mut gf);
+        assert!((ld - lf).abs() < 1e-4 * (1.0 + ld.abs()), "batch loss {ld} vs {lf}");
+        let mut diff = gd.clone();
+        diff.axpy(-1.0, &gf);
+        assert!(diff.frob_norm() < 1e-4 * (1.0 + gd.frob_norm()));
+        // the COO fused-step gradient is the same matrix again
+        let (coo, ls) = obj
+            .grad_sum_sparse(&Iterate::Factored(f.clone()), &idx)
+            .expect("sparse objective must provide the sparse path");
+        assert!(coo.nnz() <= idx.len());
+        assert!((ls - ld).abs() < 1e-4 * (1.0 + ld.abs()));
+        let mut cdiff = coo.to_dense();
+        cdiff.axpy(-1.0, &gd);
+        assert!(cdiff.frob_norm() < 1e-4 * (1.0 + gd.frob_norm()));
+        // full losses agree across representations
+        let full_d = obj.loss_full(&dense);
+        let full_f = obj.loss_full_factored(&f);
+        assert!((full_d - full_f).abs() < 1e-5 * (1.0 + full_d.abs()));
     }
 
     #[test]

@@ -11,16 +11,20 @@ use std::sync::Arc;
 
 use crate::algo::engine::{StepEngine, StepOut};
 use crate::linalg::{Mat, Svd1};
-use crate::objective::{MatrixSensing, Objective, Pnn};
+use crate::objective::{MatrixSensing, Objective, Pnn, SparseCompletion};
 use crate::runtime::{literal_f32, PjrtRuntime};
 use crate::util::rng::Rng;
 
 /// Which workload family the engine drives (decides artifact names and
-/// row-gather layout).
+/// row-gather layout).  `Sparse` has no AOT artifacts — its O(nnz) hot
+/// path is native-only, and the session wiring rejects `engine=pjrt`
+/// for it before a `PjrtEngine` is ever built — so the artifact-layout
+/// accessors below panic on it rather than invent a dense gather.
 #[derive(Clone)]
 pub enum Workload {
     Ms(Arc<MatrixSensing>),
     Pnn(Arc<Pnn>),
+    Sparse(Arc<SparseCompletion>),
 }
 
 impl Workload {
@@ -29,6 +33,7 @@ impl Workload {
         match self {
             Workload::Ms(o) => o.clone(),
             Workload::Pnn(o) => o.clone(),
+            Workload::Sparse(o) => o.clone(),
         }
     }
 
@@ -36,6 +41,7 @@ impl Workload {
         match self {
             Workload::Ms(o) => o.data.af.row(i),
             Workload::Pnn(o) => o.data.a.row(i),
+            Workload::Sparse(_) => panic!("sparse completion has no AOT artifacts"),
         }
     }
 
@@ -43,6 +49,7 @@ impl Workload {
         match self {
             Workload::Ms(o) => o.data.y[i],
             Workload::Pnn(o) => o.data.y[i],
+            Workload::Sparse(_) => panic!("sparse completion has no AOT artifacts"),
         }
     }
 
@@ -50,6 +57,7 @@ impl Workload {
         match self {
             Workload::Ms(_) => "ms",
             Workload::Pnn(_) => "pnn",
+            Workload::Sparse(_) => panic!("sparse completion has no AOT artifacts"),
         }
     }
 
@@ -57,6 +65,7 @@ impl Workload {
         match self {
             Workload::Ms(o) => o.data.d1 * o.data.d2,
             Workload::Pnn(o) => o.data.d,
+            Workload::Sparse(_) => panic!("sparse completion has no AOT artifacts"),
         }
     }
 }
@@ -158,6 +167,7 @@ impl PjrtEngine {
         let x_dims: Vec<usize> = match &self.workload {
             Workload::Ms(_) => vec![x.rows * x.cols],
             Workload::Pnn(_) => vec![x.rows, x.cols],
+            Workload::Sparse(_) => panic!("sparse completion has no AOT artifacts"),
         };
         let x_b = self.rt.upload_f32(&x.data, &x_dims).ok()?;
         let v0_b = self.rt.upload_f32(&v0, &[d2]).ok()?;
@@ -211,6 +221,7 @@ impl PjrtEngine {
         match &self.workload {
             Workload::Ms(_) => literal_f32(&x.data, &[(x.rows * x.cols) as i64]),
             Workload::Pnn(_) => literal_f32(&x.data, &[x.rows as i64, x.cols as i64]),
+            Workload::Sparse(_) => panic!("sparse completion has no AOT artifacts"),
         }
     }
 }
@@ -297,6 +308,7 @@ pub fn loss_full_pjrt(rt: &PjrtRuntime, workload: &Workload, x: &Mat) -> anyhow:
     let x_dims: Vec<i64> = match workload {
         Workload::Ms(_) => vec![(x.rows * x.cols) as i64],
         Workload::Pnn(_) => vec![x.rows as i64, x.cols as i64],
+        Workload::Sparse(_) => panic!("sparse completion has no AOT artifacts"),
     };
     let mut total = 0.0f64;
     let mut feat = vec![0.0f32; chunk * k];

@@ -12,9 +12,10 @@ use crate::algo::engine::{NativeEngine, StepEngine};
 use crate::algo::schedule::BatchSchedule;
 use crate::data::matrix_sensing::{MatrixSensingData, MsParams};
 use crate::data::pnn::{PnnData, PnnParams};
+use crate::data::recommender::RecommenderData;
 use crate::linalg::{Iterate, Mat};
 use crate::metrics::{Counters, LossTrace};
-use crate::objective::{MatrixSensing, Objective, Pnn};
+use crate::objective::{MatrixSensing, Objective, Pnn, SparseCompletion};
 use crate::runtime::{PjrtEngine, PjrtRuntime, Workload};
 use crate::session::spec::TrainSpec;
 use crate::session::{EngineKind, Report, SessionError, TaskSpec};
@@ -83,6 +84,7 @@ impl RunCtx {
             x,
             final_rank,
             peak_atoms: 0,
+            factored: None,
             counters,
             trace,
             chaos: crate::chaos::ChaosSnapshot::default(),
@@ -92,7 +94,8 @@ impl RunCtx {
     }
 
     /// [`RunCtx::report`] from a final [`Iterate`]: extracts the rank
-    /// and peak-atom stats before densifying.
+    /// and peak-atom stats — and keeps the atom list itself (the
+    /// checkpointable model) — before densifying.
     pub fn report_it(
         &self,
         x: Iterate,
@@ -100,9 +103,14 @@ impl RunCtx {
         trace: Arc<LossTrace>,
     ) -> Report {
         let (final_rank, peak_atoms) = (x.rank(), x.peak_atoms());
+        let factored = match &x {
+            Iterate::Factored(f) => Some(f.clone()),
+            Iterate::Dense(_) => None,
+        };
         let mut report = self.report(x.into_dense(), counters, trace);
         report.final_rank = final_rank;
         report.peak_atoms = peak_atoms;
+        report.factored = factored;
         report
     }
 }
@@ -123,6 +131,13 @@ pub(crate) fn build_task(spec: &TrainSpec) -> (Arc<dyn Objective>, Workload) {
             let obj = Arc::new(Pnn::new(PnnData::generate(&p, &mut rng), spec.theta));
             (obj.clone() as Arc<dyn Objective>, Workload::Pnn(obj))
         }
+        TaskSpec::SparseCompletion(p) => {
+            let obj = Arc::new(SparseCompletion::new(
+                RecommenderData::generate(p, &mut rng),
+                spec.theta,
+            ));
+            (obj.clone() as Arc<dyn Objective>, Workload::Sparse(obj))
+        }
         TaskSpec::Prebuilt(w) => (w.objective(), w.clone()),
     }
 }
@@ -139,6 +154,11 @@ fn build_engine_factory(
             Box::new(NativeEngine::new(obj.clone(), power_iters, seed ^ 0xE ^ w as u64))
         })),
         EngineKind::Pjrt => {
+            if matches!(workload, Workload::Sparse(_)) {
+                return Err(SessionError::Engine(
+                    "sparse_completion has no AOT artifacts; use --engine native".into(),
+                ));
+            }
             let rt = match &spec.pjrt_runtime {
                 Some(rt) => rt.clone(),
                 None => Arc::new(

@@ -101,6 +101,32 @@
 //! are quantized plainly); solvers without a wire uplink reject lossy
 //! codecs at spec validation.  See [`crate::comms`] for the wire
 //! contract.
+//!
+//! # Train → checkpoint → serve quickstart (sparse completion)
+//!
+//! The `sparse_completion` task trains on the synthetic recommender
+//! ([`crate::data::RecommenderData`]): only observed entries exist, so
+//! gradients are O(nnz) and the iterate should stay factored (the
+//! `auto` repr resolves it that way; the PJRT engine is rejected — no
+//! AOT artifacts take sparse inputs).  A trained atom list checkpoints
+//! as a versioned `sfw.model/v1` JSON document and serves top-k
+//! queries at O(atoms * d2) per user, independent of nnz
+//! ([`crate::model`]):
+//!
+//! ```text
+//! sfw train --task sparse_completion --algo sfw-asyn --workers 4 \
+//!           --rec-rows 20000 --rec-cols 2000 --rec-density 0.01 \
+//!           --checkpoint model.json
+//! sfw serve --model model.json --user 17 --topk 5
+//! sfw serve --model model.json --queries users.txt --topk 10
+//! ```
+//!
+//! `--queries` takes one user id per line; both modes end with a
+//! request/latency report ([`crate::metrics::ServeStats`]).  From code:
+//! train with [`TaskSpec::sparse`], save `report.factored` via
+//! [`crate::model::save`], answer with [`crate::model::user_scores`] +
+//! [`crate::model::top_k`].  The save→load→serve round trip is
+//! bit-identical (pinned by `rust/tests/sparse.rs`).
 
 pub mod ctx;
 pub(crate) mod harness;
@@ -194,6 +220,10 @@ pub enum EngineKind {
 pub enum TaskSpec {
     MatrixSensing { d1: usize, d2: usize, rank: usize, n: usize, noise_std: f32 },
     Pnn { d: usize, n: usize },
+    /// Sparse matrix completion on the synthetic recommender
+    /// ([`crate::data::RecParams`]): O(nnz) gradients, factored-iterate
+    /// hot path, native engine only.
+    SparseCompletion(crate::data::RecParams),
     /// A pre-built workload (e.g. from `experiments::build_ms`), reused
     /// verbatim — `TrainSpec::theta`/data fields are ignored for it.
     Prebuilt(Workload),
@@ -215,12 +245,33 @@ impl TaskSpec {
         TaskSpec::ms(8, 2, 400, 0.05)
     }
 
+    /// Sparse-completion task at `rows x cols` with the generator's
+    /// default mask shape (power-law alpha, holdout, noise).
+    pub fn sparse(rows: usize, cols: usize, rank: usize, density: f64) -> Self {
+        TaskSpec::SparseCompletion(crate::data::RecParams {
+            rows,
+            cols,
+            rank,
+            density,
+            ..crate::data::RecParams::default()
+        })
+    }
+
+    /// Small sparse-completion problem for smoke tests and CI: 96x48 at
+    /// ~8% observed, where the dense iterate is already >10x the
+    /// observed-entry footprint.
+    pub fn sparse_small() -> Self {
+        TaskSpec::sparse(96, 48, 2, 0.08)
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             TaskSpec::MatrixSensing { .. } => "matrix_sensing",
             TaskSpec::Pnn { .. } => "pnn",
+            TaskSpec::SparseCompletion(_) => "sparse_completion",
             TaskSpec::Prebuilt(Workload::Ms(_)) => "matrix_sensing",
             TaskSpec::Prebuilt(Workload::Pnn(_)) => "pnn",
+            TaskSpec::Prebuilt(Workload::Sparse(_)) => "sparse_completion",
         }
     }
 
@@ -229,6 +280,7 @@ impl TaskSpec {
         match self {
             TaskSpec::MatrixSensing { d1, d2, .. } => (*d1, *d2),
             TaskSpec::Pnn { d, .. } => (*d, *d),
+            TaskSpec::SparseCompletion(p) => (p.rows, p.cols),
             TaskSpec::Prebuilt(w) => w.objective().dims(),
         }
     }
@@ -239,7 +291,7 @@ impl TaskSpec {
 pub enum SessionError {
     #[error("unknown algorithm '{name}' (valid: {valid})")]
     UnknownAlgo { name: String, valid: String },
-    #[error("unknown task '{0}' (valid: matrix_sensing | pnn)")]
+    #[error("unknown task '{0}' (valid: matrix_sensing | pnn | sparse_completion)")]
     UnknownTask(String),
     #[error("unknown engine '{0}' (valid: native | pjrt)")]
     UnknownEngine(String),
@@ -265,6 +317,11 @@ pub struct Report {
     pub final_rank: usize,
     /// Peak atom count held by the run's iterate (0 for dense runs).
     pub peak_atoms: usize,
+    /// The final iterate's atom list, kept alongside the densified `x`
+    /// for factored runs — what `sfw train --checkpoint` saves as an
+    /// `sfw.model/v1` document ([`crate::model`]).  `None` for dense
+    /// runs (checkpointing those re-factorizes through an exact SVD).
+    pub factored: Option<crate::linalg::FactoredMat>,
     pub counters: Arc<Counters>,
     pub trace: Arc<LossTrace>,
     /// Injected-fault accounting of the run — all zeros unless the spec

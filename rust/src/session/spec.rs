@@ -268,6 +268,10 @@ impl TrainSpec {
             ReprKind::Dense => Repr::Dense,
             ReprKind::Factored => Repr::Factored,
             ReprKind::Auto => match (self.task.name(), self.engine) {
+                // sparse_completion never reaches PJRT (RunCtx rejects
+                // the pairing), so it resolves factored before the
+                // engine default is consulted.
+                ("sparse_completion", _) => Repr::Factored,
                 (_, EngineKind::Pjrt) => Repr::Dense,
                 ("pnn", _) => Repr::Factored,
                 _ => Repr::Dense,
@@ -435,6 +439,15 @@ impl TrainSpec {
                 noise_std: cfg.ms_noise,
             },
             "pnn" => TaskSpec::Pnn { d: cfg.pnn_d, n: cfg.pnn_n },
+            "sparse_completion" => TaskSpec::SparseCompletion(crate::data::RecParams {
+                rows: cfg.rec_rows,
+                cols: cfg.rec_cols,
+                rank: cfg.rec_rank,
+                density: cfg.rec_density,
+                alpha: cfg.rec_alpha,
+                holdout: cfg.rec_holdout,
+                noise: cfg.rec_noise,
+            }),
             t => return Err(SessionError::UnknownTask(t.to_string())),
         };
         let engine = match cfg.engine.as_str() {

@@ -21,8 +21,8 @@ use crate::sweep::SweepError;
 
 /// Keys the `[sweep]` section accepts (axes + run knobs).
 pub const SWEEP_KEYS: &[&str] = &[
-    "name", "algos", "dims", "repr", "uplink", "workers", "tau", "batch", "power-iters",
-    "transport", "straggler", "chaos", "seeds", "repeats", "jobs", "target",
+    "name", "algos", "objective", "dims", "repr", "uplink", "workers", "tau", "batch",
+    "power-iters", "transport", "straggler", "chaos", "seeds", "repeats", "jobs", "target",
 ];
 
 impl SweepSpec {
@@ -43,9 +43,9 @@ impl SweepSpec {
         // Prebuild the dataset once: every cell (and repeat) shares the
         // workload via Arc instead of regenerating it inside the timed
         // run — a `seeds` axis then varies algorithm randomness only.
-        // A `dims` axis regenerates the dataset per cell, so it keeps
-        // the generated task instead.
-        if spec.dims.is_empty() {
+        // A `dims` or `objective` axis regenerates the dataset per
+        // cell, so it keeps the generated task instead.
+        if spec.dims.is_empty() && spec.objectives.is_empty() {
             spec.base = spec.base.prebuilt();
         }
         Ok(spec)
@@ -93,6 +93,12 @@ impl SweepSpec {
                 .into_iter()
                 .map(|s| s.to_string())
                 .collect();
+        }
+        if let Some(v) = get("objective") {
+            spec.objectives = split_list("objective", &v)?
+                .into_iter()
+                .map(|s| crate::sweep::grid::objective_task(s).map(|_| s.to_string()))
+                .collect::<Result<_, _>>()?;
         }
         if let Some(v) = get("dims") {
             spec.dims = split_list("dims", &v)?
@@ -296,6 +302,33 @@ impl SweepSpec {
     }
 }
 
+impl SweepSpec {
+    /// The CI sparse-completion cells that ride along with the other
+    /// smoke grids in one `sweep_smoke.json`: the small synthetic
+    /// recommender (96x48, power-law mask), sfw-asyn, factored iterate,
+    /// W in {1, 2}.  `scripts/check_smoke_bytes.py` asserts the cells
+    /// report a nonzero rank/atom count and that their uplink bytes are
+    /// atom-scale — O((rows + cols) * iters), nowhere near a dense
+    /// gradient per update — pinning the O(nnz) sparse path end to end.
+    pub fn smoke_sparse() -> SweepSpec {
+        use crate::algo::schedule::BatchSchedule;
+        use crate::session::TaskSpec;
+        let base = TrainSpec::new(TaskSpec::sparse_small())
+            .iterations(20)
+            .batch(BatchSchedule::Constant(16))
+            .eval_every(5)
+            .power_iters(20)
+            .seed(42);
+        SweepSpec::new("smoke-sparse", base)
+            .algos(&["sfw-asyn"])
+            .workers(&[1, 2])
+            .taus(&[2])
+            .transports(&[Transport::Local])
+            .reprs(&["factored"])
+            .target(0.5)
+    }
+}
+
 fn split_list<'a>(axis: &str, v: &'a str) -> Result<Vec<&'a str>, SweepError> {
     let items: Vec<&str> = v.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
     if items.is_empty() {
@@ -472,6 +505,38 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn smoke_sparse_grid_is_the_factored_worker_pair() {
+        let cells = SweepSpec::smoke_sparse().expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert_eq!(c.axis("algo"), Some("sfw-asyn"));
+            assert_eq!(c.axis("objective"), Some("sparse_completion"));
+            assert_eq!(c.axis("dims"), Some("96x48"));
+            assert_eq!(c.axis("repr"), Some("factored"));
+            assert_eq!(c.axis("seed"), Some("42"));
+        }
+        assert_eq!(cells[0].axis("workers"), Some("1"));
+        assert_eq!(cells[1].axis("workers"), Some("2"));
+    }
+
+    #[test]
+    fn objective_key_resolves_and_skips_prebuilding() {
+        let a = args("--sweep.objective matrix_sensing,sparse_completion");
+        let s = SweepSpec::from_sources(base(), &Config::new(), &a).unwrap();
+        assert_eq!(s.objectives, vec!["matrix_sensing", "sparse_completion"]);
+        let err =
+            SweepSpec::from_sources(base(), &Config::new(), &args("--sweep.objective lasso"))
+                .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("objective") && msg.contains("sparse_completion"), "{msg}");
+        // an objective axis keeps a generated base task (per-cell data)
+        let small = "--data.ms-n 300 --data.ms-d 8 --data.ms-rank 2";
+        let s = SweepSpec::load(&args(&format!("{small} --sweep.objective sparse_completion")))
+            .unwrap();
+        assert!(!matches!(s.base.task, crate::session::TaskSpec::Prebuilt(_)));
     }
 
     #[test]

@@ -21,9 +21,25 @@ use crate::sweep::SweepError;
 /// The fixed axis order: every cell id and result row lists axis values
 /// in this order, and `[sweep]` config keys resolve against these names.
 pub const AXIS_NAMES: &[&str] = &[
-    "algo", "dims", "repr", "uplink", "workers", "tau", "batch", "power_iters", "transport",
-    "straggler", "chaos", "seed",
+    "algo", "objective", "dims", "repr", "uplink", "workers", "tau", "batch", "power_iters",
+    "transport", "straggler", "chaos", "seed",
 ];
+
+/// Map an `objective` axis value onto the named objective's small
+/// canonical task (the `dims` axis can then resize it).  Like `dims`,
+/// the axis regenerates the dataset per cell.
+pub(crate) fn objective_task(name: &str) -> Result<TaskSpec, SweepError> {
+    match name {
+        "matrix_sensing" => Ok(TaskSpec::ms_small()),
+        "pnn" => Ok(TaskSpec::pnn(8, 400)),
+        "sparse_completion" => Ok(TaskSpec::sparse_small()),
+        other => Err(SweepError::BadAxisValue {
+            axis: "objective".into(),
+            value: other.to_string(),
+            expected: "matrix_sensing | pnn | sparse_completion".into(),
+        }),
+    }
+}
 
 /// Parse a `dims` axis value `"D1xD2"` (e.g. `"48x32"`).
 pub(crate) fn parse_dims(s: &str) -> Result<(usize, usize), SweepError> {
@@ -176,6 +192,11 @@ pub struct SweepSpec {
     pub base: TrainSpec,
     /// Axes; an empty vec = inherit the base spec's value.
     pub algos: Vec<String>,
+    /// Objectives (`matrix_sensing | pnn | sparse_completion`) — each
+    /// value swaps in that objective's small canonical task, so it
+    /// regenerates the dataset per cell and is incompatible with a
+    /// [`TaskSpec::Prebuilt`] base (rejected by `expand`), like `dims`.
+    pub objectives: Vec<String>,
     /// Matrix shapes `"D1xD2"` — regenerates the dataset per cell, so it
     /// is incompatible with a [`TaskSpec::Prebuilt`] base (rejected by
     /// `expand`).
@@ -214,6 +235,7 @@ impl SweepSpec {
             name: name.to_string(),
             base,
             algos: Vec::new(),
+            objectives: Vec::new(),
             dims: Vec::new(),
             reprs: Vec::new(),
             uplinks: Vec::new(),
@@ -233,6 +255,10 @@ impl SweepSpec {
 
     pub fn algos(mut self, names: &[&str]) -> Self {
         self.algos = names.iter().map(|s| s.to_string()).collect();
+        self
+    }
+    pub fn objectives(mut self, names: &[&str]) -> Self {
+        self.objectives = names.iter().map(|s| s.to_string()).collect();
         self
     }
     pub fn dims_axis(mut self, dims: &[&str]) -> Self {
@@ -296,6 +322,7 @@ impl SweepSpec {
     pub fn product_size(&self) -> usize {
         let len = |n: usize| n.max(1);
         len(self.algos.len())
+            * len(self.objectives.len())
             * len(self.dims.len())
             * len(self.reprs.len())
             * len(self.uplinks.len())
@@ -314,8 +341,8 @@ impl SweepSpec {
         let base = &self.base;
         let algos: Vec<String> =
             if self.algos.is_empty() { vec![base.algo.clone()] } else { self.algos.clone() };
-        // The dims axis regenerates the dataset per cell, which a
-        // prebuilt base (one shared workload) cannot do.
+        // The dims and objective axes regenerate the dataset per cell,
+        // which a prebuilt base (one shared workload) cannot do.
         if !self.dims.is_empty() && matches!(base.task, TaskSpec::Prebuilt(_)) {
             return Err(SweepError::BadAxisValue {
                 axis: "dims".into(),
@@ -324,6 +351,24 @@ impl SweepSpec {
                     .into(),
             });
         }
+        if !self.objectives.is_empty() && matches!(base.task, TaskSpec::Prebuilt(_)) {
+            return Err(SweepError::BadAxisValue {
+                axis: "objective".into(),
+                value: self.objectives.join(","),
+                expected:
+                    "a non-prebuilt base task (the objective axis regenerates the dataset)"
+                        .into(),
+            });
+        }
+        // Validate objective names up front; `None` = inherit base task.
+        let objective_axis: Vec<Option<String>> = if self.objectives.is_empty() {
+            vec![None]
+        } else {
+            self.objectives
+                .iter()
+                .map(|s| objective_task(s).map(|_| Some(s.clone())))
+                .collect::<Result<_, _>>()?
+        };
         // `None` = inherit the base task's shape (labelled from it).
         let dims_axis: Vec<Option<(usize, usize)>> = if self.dims.is_empty() {
             vec![None]
@@ -412,6 +457,7 @@ impl SweepSpec {
         let mut cells = Vec::new();
         let mut seen = BTreeSet::new();
         for algo in &algos {
+            for objective in &objective_axis {
             for (&dims, &repr) in dims_axis
                 .iter()
                 .flat_map(|d| repr_axis.iter().map(move |r| (d, r)))
@@ -461,6 +507,9 @@ impl SweepSpec {
                                                 .maybe_straggler(straggler.to_straggler())
                                                 .maybe_fault_plan(fault_plan)
                                                 .seed(seed);
+                                            if let Some(name) = objective {
+                                                spec.task = objective_task(name)?;
+                                            }
                                             if let Some((d1, d2)) = dims {
                                                 spec.task = retask(&spec.task, d1, d2)?;
                                             }
@@ -479,6 +528,13 @@ impl SweepSpec {
                                             }
                                             let axes = vec![
                                                 ("algo".to_string(), algo.clone()),
+                                                (
+                                                    "objective".to_string(),
+                                                    // resolved from the cell's
+                                                    // task, so inherited cells
+                                                    // are labelled too
+                                                    spec.task.name().to_string(),
+                                                ),
                                                 ("dims".to_string(), dims_label(&spec.task)),
                                                 (
                                                     "repr".to_string(),
@@ -515,6 +571,7 @@ impl SweepSpec {
             }
             }
             }
+            }
         }
         Ok(cells)
     }
@@ -540,6 +597,13 @@ fn retask(task: &TaskSpec, d1: usize, d2: usize) -> Result<TaskSpec, SweepError>
                 });
             }
             Ok(TaskSpec::Pnn { d: d1, n: *n })
+        }
+        TaskSpec::SparseCompletion(p) => {
+            Ok(TaskSpec::SparseCompletion(crate::data::RecParams {
+                rows: d1,
+                cols: d2,
+                ..p.clone()
+            }))
         }
         TaskSpec::Prebuilt(_) => unreachable!("prebuilt bases rejected before expansion"),
     }
@@ -612,6 +676,39 @@ mod tests {
         assert_eq!(cells[0].spec.task.dims(), (8, 8));
         // repr axis sets the spec knob
         assert!(matches!(cells[1].spec.repr, ReprKind::Factored));
+    }
+
+    #[test]
+    fn objective_axis_retasks_and_labels_cells() {
+        let cells = SweepSpec::new("t", base())
+            .objectives(&["matrix_sensing", "sparse_completion"])
+            .expand()
+            .unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].axis("objective"), Some("matrix_sensing"));
+        assert_eq!(cells[1].axis("objective"), Some("sparse_completion"));
+        assert!(matches!(cells[1].spec.task, TaskSpec::SparseCompletion(_)));
+        // sparse cells resolve factored under auto
+        assert_eq!(cells[1].axis("repr"), Some("factored"));
+        // an unset axis labels the cell from the base task
+        let cells = SweepSpec::new("t", base()).expand().unwrap();
+        assert_eq!(cells[0].axis("objective"), Some("matrix_sensing"));
+        // bad names error up front; prebuilt bases are rejected
+        let err =
+            SweepSpec::new("t", base()).objectives(&["ridge"]).expand().unwrap_err();
+        assert!(err.to_string().contains("sparse_completion"), "{err}");
+        let err = SweepSpec::new("t", base().prebuilt())
+            .objectives(&["pnn"])
+            .expand()
+            .unwrap_err();
+        assert!(err.to_string().contains("objective"), "{err}");
+        // the dims axis resizes a sparse task
+        let cells = SweepSpec::new("t", base())
+            .objectives(&["sparse_completion"])
+            .dims_axis(&["64x24"])
+            .expand()
+            .unwrap();
+        assert_eq!(cells[0].spec.task.dims(), (64, 24));
     }
 
     #[test]

@@ -76,6 +76,11 @@ fn no_lock_across_io_fixture_triggers_its_rule() {
 }
 
 #[test]
+fn bounded_channel_fixture_triggers_its_rule() {
+    assert_triggers_exactly("bounded_channel.rs", Rule::BoundedChannelDepth);
+}
+
+#[test]
 fn error_liveness_fixture_triggers_its_rule() {
     assert_triggers_exactly("error_liveness.rs", Rule::ErrorVariantLiveness);
     let (violations, _) = lint_fixture("error_liveness.rs");

@@ -1,0 +1,181 @@
+//! The sparse-completion contract (ISSUE PR 8): the synthetic
+//! recommender trains end-to-end through the session layer without ever
+//! materializing a dense X on the hot path, and the trained atom list
+//! checkpoints and serves.
+//!
+//! * same-seed dense-vs-factored runs agree on the sparse objective
+//!   (both take the O(nnz) COO gradient + sparse-operator LMO path);
+//! * the acceptance pin: a factored run at 2000x400 / ~1% density —
+//!   where the dense iterate is >= 10x the observed-entry footprint —
+//!   completes, checkpoints through `sfw::model`, and the reloaded
+//!   model answers per-user top-k queries bit-identically to the
+//!   in-memory atom list, at O(atoms * cols) per query (no dense X,
+//!   nothing scaling with nnz);
+//! * the asynchronous uplink stays atom-scale per message on the sparse
+//!   task (the sweep smoke artifact pins the same bound in CI);
+//! * same-spec re-runs are bit-deterministic (generator + solver);
+//! * malformed model files surface typed [`ModelError`]s, never panics.
+
+use sfw::data::{RecParams, RecommenderData};
+use sfw::linalg::{Mat, Repr};
+use sfw::model::ModelError;
+use sfw::session::{BatchSchedule, ReprKind, TaskSpec, TrainSpec};
+use sfw::util::rng::Rng;
+
+fn small_spec() -> TrainSpec {
+    TrainSpec::new(TaskSpec::sparse_small())
+        .algo("sfw")
+        .iterations(25)
+        .batch(BatchSchedule::Constant(32))
+        .eval_every(5)
+        .power_iters(30)
+        .seed(11)
+}
+
+fn rel_frob_diff(a: &Mat, b: &Mat) -> f64 {
+    let mut d = a.clone();
+    d.axpy(-1.0, b);
+    d.frob_norm() / (1.0 + a.frob_norm())
+}
+
+#[test]
+fn sparse_session_agrees_dense_vs_factored_and_defaults_to_factored() {
+    let spec = small_spec();
+    // Auto resolves factored for sparse_completion
+    assert_eq!(spec.resolved_repr(), Repr::Factored);
+    assert!(spec.echo().contains("repr=factored"), "{}", spec.echo());
+    let fact = spec.clone().run().unwrap();
+    let dense = spec.clone().repr(ReprKind::Dense).run().unwrap();
+    let rel = rel_frob_diff(&dense.x, &fact.x);
+    assert!(rel < 2e-2, "dense vs factored iterate diverged (rel {rel})");
+    let (dl, fl) = (dense.final_loss(), fact.final_loss());
+    assert!((dl - fl).abs() < 2e-2 * (1.0 + dl.abs()), "final loss {dl} vs {fl}");
+    assert!(fact.peak_atoms > 0 && fact.final_rank > 0, "factored run lost atom accounting");
+    assert_eq!(dense.peak_atoms, 0, "dense run reported atoms");
+    assert!(fact.factored.is_some(), "factored run lost its checkpointable atom list");
+    assert!(dense.factored.is_none(), "dense run grew an atom list");
+}
+
+#[test]
+fn sparse_session_is_deterministic_given_seed() {
+    let a = small_spec().run().unwrap();
+    let b = small_spec().run().unwrap();
+    assert_eq!(a.x.data, b.x.data, "same-spec sparse runs diverged");
+    let (sa, sb) = (a.snapshot(), b.snapshot());
+    assert_eq!(sa.bytes_up, sb.bytes_up);
+    assert_eq!(sa.grad_evals, sb.grad_evals);
+}
+
+#[test]
+fn async_sparse_uplink_stays_atom_scale() {
+    let report = TrainSpec::new(TaskSpec::sparse_small())
+        .algo("sfw-asyn")
+        .workers(2)
+        .tau(2)
+        .iterations(20)
+        .batch(BatchSchedule::Constant(16))
+        .eval_every(5)
+        .power_iters(20)
+        .seed(42)
+        .run()
+        .unwrap();
+    let s = report.snapshot();
+    assert!(s.msgs_up > 0, "no uplink traffic");
+    let per_msg = s.bytes_up as f64 / s.msgs_up as f64;
+    // one rank-one atom is O(rows + cols) floats; 4x slack still sits
+    // well under the 4 * 96 * 48 B dense frame
+    let atom_scale = (4 * (96 + 48) * 4) as f64;
+    assert!(
+        per_msg <= atom_scale,
+        "sparse uplink {per_msg:.0} B/msg exceeds atom scale {atom_scale} B"
+    );
+}
+
+/// The PR's acceptance pin: train factored at dims where a dense iterate
+/// costs >= 10x the observed entries, checkpoint, reload, serve.
+#[test]
+fn factored_train_checkpoint_serve_at_sparse_scale() {
+    let p = RecParams { rows: 2000, cols: 400, rank: 4, density: 0.01, ..RecParams::default() };
+
+    // Footprint premise: the dense variable (rows * cols floats) must be
+    // >= 10x the COO training set (3 words per observation).
+    let probe = RecommenderData::generate(&p, &mut Rng::new(3));
+    let obs = probe.train_nnz() + probe.ho_vals.len();
+    assert!(
+        p.rows * p.cols >= 10 * 3 * obs,
+        "premise broke: dense {} floats vs {} observation words",
+        p.rows * p.cols,
+        3 * obs
+    );
+
+    let report = TrainSpec::new(TaskSpec::SparseCompletion(p.clone()))
+        .algo("sfw-asyn")
+        .workers(1)
+        .tau(2)
+        .iterations(40)
+        .batch(BatchSchedule::Constant(64))
+        .eval_every(10)
+        .power_iters(30)
+        .seed(3)
+        .run()
+        .unwrap();
+    let rel = report.relative();
+    let last_rel = rel.last().unwrap().2;
+    assert!(last_rel < 0.9, "no progress on the 2000x400 recommender (rel {last_rel})");
+    let model = report.factored.as_ref().expect("factored run keeps its atom list");
+    assert!(model.atoms() > 0);
+    assert_eq!((model.rows, model.cols), (2000, 400));
+
+    // checkpoint -> load must be bit-identical, atom for atom
+    let path = std::env::temp_dir().join(format!("sfw_ckpt_{}.json", std::process::id()));
+    sfw::model::save(model, &path).unwrap();
+    let loaded = sfw::model::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.atoms(), model.atoms(), "load re-compressed the checkpoint");
+
+    // serving answers from the atom list alone — O(atoms * cols) per
+    // user — and the reloaded model's predictions match the in-memory
+    // ones bit for bit
+    let mut live = Vec::new();
+    let mut served = Vec::new();
+    for user in [0usize, 7, 1999] {
+        sfw::model::user_scores(model, user, &mut live).unwrap();
+        sfw::model::user_scores(&loaded, user, &mut served).unwrap();
+        assert_eq!(served.len(), 400);
+        for (a, b) in live.iter().zip(served.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "user {user}: save/load drifted");
+        }
+        let top = sfw::model::top_k(&served, 10);
+        assert_eq!(top.len(), 10);
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1, "user {user}: top-k not descending");
+        }
+    }
+    assert!(matches!(
+        sfw::model::user_scores(&loaded, 2000, &mut served),
+        Err(ModelError::Query(_))
+    ));
+}
+
+#[test]
+fn malformed_model_files_error_cleanly() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("sfw_model_bad_{}.json", std::process::id()));
+
+    std::fs::write(&path, "{\"format\":\"sfw.model/v1\",\"rows\":4").unwrap();
+    assert!(matches!(sfw::model::load(&path), Err(ModelError::Parse(_))));
+
+    std::fs::write(&path, r#"{"format":"sfw.model/v9","rows":2,"cols":2,"atoms":[]}"#).unwrap();
+    assert!(matches!(sfw::model::load(&path), Err(ModelError::Format(_))));
+
+    std::fs::write(
+        &path,
+        r#"{"format":"sfw.model/v1","rows":2,"cols":2,"atoms":[{"w":1,"u":[1],"v":[0,1]}]}"#,
+    )
+    .unwrap();
+    assert!(matches!(sfw::model::load(&path), Err(ModelError::Format(_))));
+    std::fs::remove_file(&path).ok();
+
+    let missing = dir.join("sfw_model_that_does_not_exist.json");
+    assert!(matches!(sfw::model::load(&missing), Err(ModelError::Io(_))));
+}

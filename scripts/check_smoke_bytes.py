@@ -86,7 +86,31 @@ for transport in ("local", "tcp"):
         f"f32 {f32_rel:.4f} (tol {UPLINK_REL_TOL}) — error feedback broke?")
     pairs += 1
 
+# --- sparse-completion cells -------------------------------------------------
+# Factored sfw-asyn on the 96x48 synthetic recommender, W in {1,2}.  The
+# sparse path must produce a real low-rank iterate (nonzero rank and
+# atom counts) and its uplink must stay atom-scale: each worker->master
+# message carries one rank-one atom, O(rows + cols) floats, never a
+# dense 96x48 gradient.  4x slack over one (u, v) pair still sits ~8x
+# below the dense frame, so a silent densification trips the assert.
+sparse = [c for c in cells if c["axes"].get("objective") == "sparse_completion"]
+assert len(sparse) >= 2, (
+    f"{path}: smoke grid lost its sparse_completion cells (have {len(sparse)})")
+for c in sparse:
+    rows, cols = (int(d) for d in c["axes"]["dims"].split("x"))
+    assert c["axes"].get("repr") == "factored", f"sparse cell not factored: {c['axes']}"
+    assert c.get("rank", 0) > 0 and c.get("peak_atoms", 0) > 0, (
+        f"sparse cell lost its rank/peak_atoms accounting: {c['axes']}")
+    up, msgs = c["counters"]["bytes_up"], c["counters"]["msgs_up"]
+    assert msgs > 0, f"sparse cell sent no uplink messages: {c['axes']}"
+    per_msg = up / msgs
+    atom_scale = 4 * (rows + cols) * 4
+    assert per_msg <= atom_scale, (
+        f"sparse uplink {per_msg:.0f} B/msg exceeds atom scale {atom_scale} B "
+        f"(dense frame would be {4 * rows * cols} B): {c['axes']}")
+
 print(f"OK: {len(cells)} cells in {path}, bytes nonzero in all, "
       f"events nonzero in {len(chaos_cells)} chaos cell(s), "
       f"factored downlink {fd} B vs dense {dd} B, "
-      f"int8 uplink >= 3x under f32 at matching loss on {pairs} transport(s)")
+      f"int8 uplink >= 3x under f32 at matching loss on {pairs} transport(s), "
+      f"sparse uplink atom-scale on {len(sparse)} cell(s)")
