@@ -13,11 +13,11 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use sfw::algo::engine::{NativeEngine, StepEngine};
+use sfw::algo::engine::{NativeEngine, StepEngine, StepOut};
 use sfw::benchkit::{bench_for, humanize, Stats, Table};
 use sfw::coordinator::update_log::{replay, UpdateLog};
 use sfw::experiments::{build_ms, build_pnn};
-use sfw::linalg::{power_iteration_rand, FactoredMat, Mat};
+use sfw::linalg::{power_iteration_rand, FactoredMat, Iterate, Mat, Svd1};
 use sfw::objective::Objective;
 use sfw::runtime::{PjrtEngine, PjrtRuntime, Workload};
 use sfw::comms::{GradCodec, Wire};
@@ -140,6 +140,24 @@ fn main() {
         let _ = pnn_o.grad_sum_factored(&fact_pnn, &idxp, &mut gp);
     });
 
+    // ---- step_it densify fallback: fresh vs cached dense scratch ---------
+    // Engines that inherit the trait-default `step_it` (the PJRT
+    // artifacts take dense inputs) render a factored iterate into a
+    // dense buffer every step.  Both rows run identical math through the
+    // default fallback; the only difference is whether the engine caches
+    // that O(d1*d2) buffer or allocates it fresh each call, so the delta
+    // is exactly the per-step allocator traffic the cache removes.
+    let idxp_32: Vec<usize> = idxp[..32].to_vec();
+    let x_fact = Iterate::Factored(fact_pnn.clone());
+    let mut fresh = DensifyEngine::new(NativeEngine::new(pnn_o.clone(), 24, 4), false);
+    row("step_it densify 196x196 k=16 (fresh scratch)", "alloc per step", &mut || {
+        let _ = fresh.step_it(&x_fact, &idxp_32);
+    });
+    let mut cached = DensifyEngine::new(NativeEngine::new(pnn_o.clone(), 24, 4), true);
+    row("step_it densify 196x196 k=16 (cached scratch)", "alloc once", &mut || {
+        let _ = cached.step_it(&x_fact, &idxp_32);
+    });
+
     // ---- sparse completion (O(nnz) grad + COO-operator LMO) and serving ----
     let rec = {
         let mut r = Rng::new(7);
@@ -199,7 +217,7 @@ fn main() {
     row("replay 64 log entries 196x196", "worker catch-up", &mut || {
         replay(&mut x_rep, &slice);
     });
-    let msg = UpdateMsg::dense(1, 100, u.clone(), v.clone(), 1.0, 0.5, 128);
+    let msg = UpdateMsg::dense(1, 100, u.clone(), v.clone(), 1.0, 0.5, 128, 0.25);
     let mut buf = Vec::new();
     row("wire codec roundtrip (196+196 floats)", "encode+decode", &mut || {
         buf.clear();
@@ -264,4 +282,54 @@ fn main() {
     }
     std::fs::write("bench_out/hotpath_raw.csv", out).expect("raw csv");
     println!("series written to bench_out/hotpath.csv and bench_out/hotpath_raw.csv");
+}
+
+/// Delegates the primitive ops to [`NativeEngine`] but inherits the
+/// trait-default `step_it`, i.e. the densify-a-factored-iterate fallback
+/// that dense-input engines (PJRT) hit every step.  With `cached` the
+/// scratch pair hands out one long-lived buffer; without it the
+/// stateless defaults allocate per call — the two bench rows above pin
+/// the difference.
+struct DensifyEngine {
+    inner: NativeEngine,
+    cached: bool,
+    scratch: Mat,
+}
+
+impl DensifyEngine {
+    fn new(inner: NativeEngine, cached: bool) -> Self {
+        DensifyEngine { inner, cached, scratch: Mat::zeros(0, 0) }
+    }
+}
+
+impl StepEngine for DensifyEngine {
+    fn step(&mut self, x: &Mat, idx: &[usize]) -> StepOut {
+        self.inner.step(x, idx)
+    }
+
+    fn grad_sum(&mut self, x: &Mat, idx: &[usize], out: &mut Mat) -> f64 {
+        self.inner.grad_sum(x, idx, out)
+    }
+
+    fn lmo(&mut self, g: &Mat) -> Svd1 {
+        self.inner.lmo(g)
+    }
+
+    fn objective(&self) -> &Arc<dyn sfw::objective::Objective> {
+        self.inner.objective()
+    }
+
+    fn take_dense_scratch(&mut self) -> Mat {
+        if self.cached {
+            std::mem::replace(&mut self.scratch, Mat::zeros(0, 0))
+        } else {
+            Mat::zeros(0, 0)
+        }
+    }
+
+    fn put_dense_scratch(&mut self, scratch: Mat) {
+        if self.cached {
+            self.scratch = scratch;
+        }
+    }
 }

@@ -1,6 +1,45 @@
 //! Serial algorithm family: SFW (Hazan & Luo), SVRF, PGD baseline, plus
 //! the engine abstraction and the theorem schedules shared with the
 //! distributed coordinator.
+//!
+//! # Dual gap
+//!
+//! Every fused step estimates the Frank-Wolfe dual gap
+//!
+//! ```text
+//! g_k = <grad F(X_k), X_k - s_k>,   s_k = argmin_{||S||_* <= theta} <grad F(X_k), S>
+//! ```
+//!
+//! nearly for free: the LMO already computes `<grad, s_k> = -theta *
+//! sigma`, so only the extra inner product `<grad, X_k>` is paid (see
+//! [`StepOut::gap`] and [`engine::mean_gap`]).  On a convex objective
+//! the gap upper-bounds the suboptimality `F(X_k) - F*`, which makes it
+//! the principled stopping certificate: `TrainSpec::tol` ends any
+//! registry solver's run once the estimate falls to the tolerance, and
+//! the trace/sweep layers surface it as the `gap` column.
+//!
+//! # Step-size menu
+//!
+//! [`schedule::StepMethod`] selects how far to move along the LMO
+//! direction each iteration (the `--step` knob):
+//!
+//! * `vanilla` — the theorem schedule `eta(k) = 2/(k+2)`;
+//! * `analytic` — one-point quadratic fit along the segment, using the
+//!   gap as the directional derivative;
+//! * `line-search` — derivative-free golden-section search on a
+//!   sampled minibatch loss;
+//! * `armijo` — backtracking from the step cap until sufficient
+//!   decrease;
+//! * `away` / `pairwise` — away-step and pairwise Frank-Wolfe over the
+//!   factored iterate's atom list (the active set): weight is shifted
+//!   off (or dropped from) the worst active atom instead of always
+//!   adding a new one, which caps rank while keeping every iterate a
+//!   convex combination of atoms — feasible on the nuclear ball by
+//!   construction.  Serial `sfw` + `--repr factored` only.
+//!
+//! All policies clamp to the feasible segment and fall back to the
+//! vanilla schedule when their fit degenerates (non-finite slope, no
+//! decrease found), so a policy can never diverge the run.
 
 pub mod engine;
 pub mod pgd;
@@ -8,6 +47,6 @@ pub mod schedule;
 pub mod sfw;
 pub mod svrf;
 
-pub use engine::{NativeEngine, StepEngine, StepOut};
-pub use schedule::{eta, svrf_epoch_len, BatchSchedule};
+pub use engine::{mean_gap, NativeEngine, StepEngine, StepOut};
+pub use schedule::{eta, select_eta, svrf_epoch_len, BatchSchedule, StepMethod};
 pub use sfw::{init_rank_one, run_sfw, SfwOptions};

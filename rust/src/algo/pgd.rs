@@ -27,6 +27,11 @@ pub struct PgdOptions {
     /// straight from the projection's SVD (which it computes anyway), so
     /// the iterate's rank is visible for free.
     pub repr: Repr,
+    /// FW dual-gap stopping tolerance (0 disables).  PGD itself never
+    /// runs an LMO, so honoring `tol` buys one power iteration per step
+    /// to estimate the same gap the FW solvers stop on — charged to the
+    /// LMO counter for honest Table-1 accounting.
+    pub tol: f64,
 }
 
 impl Default for PgdOptions {
@@ -38,6 +43,7 @@ impl Default for PgdOptions {
             eval_every: 10,
             seed: 0,
             repr: Repr::Dense,
+            tol: 0.0,
         }
     }
 }
@@ -66,6 +72,17 @@ pub fn run_pgd<E: StepEngine + ?Sized>(
         let _ = engine.grad_sum_it(&x, &idx, &mut g);
         counters.add_grad_evals(m as u64);
         counters.add_iteration();
+        // Gap-based stopping: PGD has no LMO of its own, so a positive
+        // tol pays one power iteration on the batch gradient to estimate
+        // the FW dual gap the other solvers stop on.
+        let gap = if opts.tol > 0.0 {
+            let gx = x.inner_flat(&g.data);
+            let s = engine.lmo(&g);
+            counters.add_lmo();
+            (gx + theta as f64 * s.sigma as f64) / m as f64
+        } else {
+            f64::NAN
+        };
         // gradient step on the dense form (the projection needs a full
         // SVD of it anyway), then project back — into atoms when the
         // run is factored
@@ -79,8 +96,12 @@ pub fn run_pgd<E: StepEngine + ?Sized>(
                 Iterate::Factored(f)
             }
         };
-        if k % opts.eval_every == 0 || k == opts.iterations {
-            trace.record(k, obj.loss_full_it(&x));
+        let stop = opts.tol > 0.0 && gap.is_finite() && gap <= opts.tol;
+        if stop || k % opts.eval_every == 0 || k == opts.iterations {
+            trace.record_gap(k, obj.loss_full_it(&x), gap);
+        }
+        if stop {
+            break;
         }
     }
     if let Iterate::Factored(f) = &mut x {
@@ -116,6 +137,7 @@ mod tests {
             eval_every: 20,
             seed: 62,
             repr: Repr::Dense,
+            tol: 0.0,
         };
         let x = run_pgd(&mut engine, &opts, &counters, &trace);
         let pts = trace.points();
@@ -144,6 +166,7 @@ mod tests {
                 eval_every: 10,
                 seed: 65,
                 repr,
+                tol: 0.0,
             };
             run_pgd(&mut engine, &opts, &counters, &trace)
         };

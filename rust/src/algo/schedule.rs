@@ -16,6 +16,170 @@ pub fn eta(k: u64) -> f32 {
     2.0 / (k as f32 + 1.0)
 }
 
+/// Step policy of one FW iteration: how far to move (`Vanilla`,
+/// `Analytic`, `LineSearch`, `Armijo` pick the step size along the
+/// standard FW direction) and — for the serial solvers — which direction
+/// family to move in (`Away` / `Pairwise` additionally reweight or drop
+/// atoms of the factored active set, both sized by exact line search).
+///
+/// * `vanilla`     — eta_k = 2/(k+1) (Thms 1–4; the paper's schedule).
+/// * `analytic`    — quadratic-fit exact step: fit phi(eta) = F((1-eta)X
+///   + eta S) from phi(0), phi'(0) = -gap and one probe; exact for the
+///   quadratic objectives (matrix sensing, completion), clamped to (0, 1].
+/// * `line-search` — derivative-free golden-section minimization of the
+///   minibatch objective over eta in [0, 1].
+/// * `armijo`      — backtracking from eta = 1 until the sufficient
+///   decrease phi(eta) <= phi(0) - c eta gap holds (c = 0.1).
+/// * `away`        — away-step FW (Ding & Udell): when the away atom's
+///   gap dominates, move mass off the worst active atom (dropping it at
+///   the boundary step) instead of adding a new one.
+/// * `pairwise`    — pairwise FW: shift mass directly from the worst
+///   active atom onto the new LMO atom.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StepMethod {
+    #[default]
+    Vanilla,
+    Analytic,
+    LineSearch,
+    Armijo,
+    Away,
+    Pairwise,
+}
+
+impl StepMethod {
+    /// Accepted `--step` spellings, in menu order.
+    pub const VALID: &'static [&'static str] =
+        &["vanilla", "analytic", "line-search", "armijo", "away", "pairwise"];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "vanilla" => Some(StepMethod::Vanilla),
+            "analytic" => Some(StepMethod::Analytic),
+            "line-search" => Some(StepMethod::LineSearch),
+            "armijo" => Some(StepMethod::Armijo),
+            "away" => Some(StepMethod::Away),
+            "pairwise" => Some(StepMethod::Pairwise),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            StepMethod::Vanilla => "vanilla",
+            StepMethod::Analytic => "analytic",
+            StepMethod::LineSearch => "line-search",
+            StepMethod::Armijo => "armijo",
+            StepMethod::Away => "away",
+            StepMethod::Pairwise => "pairwise",
+        }
+    }
+
+    /// Away/pairwise steps mutate the factored active set — serial-only
+    /// and factored-only; the masters reject them at spec validation.
+    pub fn needs_active_set(&self) -> bool {
+        matches!(self, StepMethod::Away | StepMethod::Pairwise)
+    }
+}
+
+/// Pick the step size along a descent segment by evaluating the 1-D
+/// restriction `phi(eta)` (a batch objective at the blended point) at a
+/// handful of trial steps.  `loss0 = phi(0)`; `slope0 = phi'(0)` (the
+/// negated FW gap — pass NaN when no gap estimate is in hand and the
+/// gradient-free fits take over).  `eta_max` caps the feasible step
+/// (1.0 for the standard FW segment; the away/pairwise boundary
+/// otherwise).  Every branch falls back to `min(eta(k), eta_max)` when
+/// its fit degenerates, so the policy can never stall or overshoot.
+pub fn select_eta(
+    method: StepMethod,
+    k: u64,
+    loss0: f64,
+    slope0: f64,
+    eta_max: f32,
+    phi: &mut dyn FnMut(f32) -> f64,
+) -> f32 {
+    let cap = if eta_max.is_finite() && eta_max > 0.0 { eta_max.min(1.0) } else { 1.0 };
+    let fallback = eta(k).min(cap);
+    match method {
+        StepMethod::Vanilla => fallback,
+        StepMethod::Analytic => {
+            // Quadratic fit phi(eta) ~= loss0 + slope0 eta + q eta^2 from
+            // one probe at the fallback step; minimizer -slope0 / (2q).
+            let probe = fallback.max(1e-3);
+            let lp = phi(probe);
+            let slope = if slope0.is_finite() {
+                slope0
+            } else {
+                // no gap estimate: secant slope from a short probe
+                let h = (probe * 0.25).max(1e-4);
+                (phi(h) - loss0) / h as f64
+            };
+            let q = (lp - loss0 - slope * probe as f64) / (probe as f64).powi(2);
+            if !(q.is_finite() && q > 0.0) || !slope.is_finite() || slope >= 0.0 {
+                return fallback;
+            }
+            let star = (-slope / (2.0 * q)) as f32;
+            if star.is_finite() && star > 0.0 {
+                star.min(cap)
+            } else {
+                fallback
+            }
+        }
+        StepMethod::LineSearch | StepMethod::Away | StepMethod::Pairwise => {
+            // Golden-section search on [0, cap] — derivative-free, ~1e-2
+            // relative bracket after 12 shrinks, one batch pass each.
+            const INVPHI: f32 = 0.618_034;
+            let (mut a, mut b) = (0.0f32, cap);
+            let mut c = b - INVPHI * (b - a);
+            let mut d = a + INVPHI * (b - a);
+            let (mut fc, mut fd) = (phi(c), phi(d));
+            for _ in 0..12 {
+                if fc <= fd {
+                    b = d;
+                    d = c;
+                    fd = fc;
+                    c = b - INVPHI * (b - a);
+                    fc = phi(c);
+                } else {
+                    a = c;
+                    c = d;
+                    fc = fd;
+                    d = a + INVPHI * (b - a);
+                    fd = phi(d);
+                }
+            }
+            let star = 0.5 * (a + b);
+            let fs = phi(star);
+            if fs.is_finite() && fs <= loss0 {
+                star.clamp(0.0, cap)
+            } else {
+                fallback
+            }
+        }
+        StepMethod::Armijo => {
+            let slope = if slope0.is_finite() && slope0 < 0.0 {
+                slope0
+            } else {
+                let h = 1e-3f32.min(cap);
+                let s = (phi(h) - loss0) / h as f64;
+                if s.is_finite() && s < 0.0 {
+                    s
+                } else {
+                    return fallback;
+                }
+            };
+            const C: f64 = 0.1;
+            let mut step = cap;
+            for _ in 0..20 {
+                if phi(step) <= loss0 + C * slope * step as f64 {
+                    return step;
+                }
+                step *= 0.5;
+            }
+            fallback
+        }
+    }
+}
+
 /// Minibatch-size schedule.
 #[derive(Clone, Debug, PartialEq)]
 pub enum BatchSchedule {
@@ -129,5 +293,59 @@ mod tests {
     fn batch_at_least_one() {
         let s = BatchSchedule::sfw_asyn(1e-6, 100, 10);
         assert_eq!(s.m(1), 1);
+    }
+
+    #[test]
+    fn step_method_parse_round_trips_and_rejects_unknown() {
+        for name in StepMethod::VALID {
+            let m = StepMethod::parse(name).expect("every VALID entry parses");
+            assert_eq!(m.label(), *name);
+        }
+        assert!(StepMethod::parse("exact").is_none());
+        assert!(StepMethod::parse("").is_none());
+        assert_eq!(StepMethod::default(), StepMethod::Vanilla);
+        assert!(StepMethod::Away.needs_active_set());
+        assert!(StepMethod::Pairwise.needs_active_set());
+        assert!(!StepMethod::LineSearch.needs_active_set());
+    }
+
+    /// On a known 1-D quadratic phi(eta) = (eta - t)^2 + c every
+    /// non-vanilla policy must land at (or near, or before) the true
+    /// minimizer, and never above phi(0).
+    #[test]
+    fn select_eta_finds_quadratic_minimizer() {
+        let t = 0.3f32;
+        let quad = move |e: f32| ((e - t) as f64).powi(2) + 0.5;
+        let loss0 = quad(0.0);
+        let slope0 = -2.0 * t as f64; // phi'(0)
+        let mut phi = quad;
+        let ana = select_eta(StepMethod::Analytic, 5, loss0, slope0, 1.0, &mut phi);
+        assert!((ana - t).abs() < 1e-3, "analytic step {ana} vs {t}");
+        let mut phi = quad;
+        let ls = select_eta(StepMethod::LineSearch, 5, loss0, slope0, 1.0, &mut phi);
+        assert!((ls - t).abs() < 0.02, "line-search step {ls} vs {t}");
+        let mut phi = quad;
+        let ar = select_eta(StepMethod::Armijo, 5, loss0, slope0, 1.0, &mut phi);
+        assert!(quad(ar) <= loss0, "armijo must not increase phi");
+        // vanilla ignores phi entirely
+        let mut phi = quad;
+        assert_eq!(select_eta(StepMethod::Vanilla, 3, loss0, slope0, 1.0, &mut phi), eta(3));
+    }
+
+    #[test]
+    fn select_eta_respects_eta_max_and_degenerate_fits() {
+        // minimizer at 0.8 but the feasible boundary is 0.25
+        let quad = |e: f32| ((e - 0.8) as f64).powi(2);
+        let mut phi = quad;
+        let s = select_eta(StepMethod::LineSearch, 4, quad(0.0), -1.6, 0.25, &mut phi);
+        assert!(s <= 0.25 + 1e-6, "clamped step {s}");
+        // an uphill segment (positive slope) falls back to eta(k)
+        let uphill = |e: f32| e as f64;
+        let mut phi = uphill;
+        let s = select_eta(StepMethod::Analytic, 4, 0.0, 1.0, 1.0, &mut phi);
+        assert_eq!(s, eta(4));
+        let mut phi = uphill;
+        let s = select_eta(StepMethod::Armijo, 4, 0.0, 1.0, 1.0, &mut phi);
+        assert_eq!(s, eta(4));
     }
 }

@@ -5,8 +5,8 @@
 use std::sync::Arc;
 
 use crate::algo::engine::StepEngine;
-use crate::algo::schedule::{eta, BatchSchedule};
-use crate::linalg::{Iterate, Mat, Repr};
+use crate::algo::schedule::{eta, select_eta, BatchSchedule, StepMethod};
+use crate::linalg::{dot, Iterate, Mat, Repr};
 use crate::metrics::{Counters, LossTrace};
 use crate::util::rng::Rng;
 
@@ -19,6 +19,11 @@ pub struct SfwOptions {
     pub seed: u64,
     /// Iterate representation (dense reference or factored atoms).
     pub repr: Repr,
+    /// Stop once the minibatch dual-gap estimate falls to `tol`
+    /// (0 disables — run all `iterations`).
+    pub tol: f64,
+    /// Step-size / direction policy (see [`StepMethod`]).
+    pub step: StepMethod,
 }
 
 impl Default for SfwOptions {
@@ -29,6 +34,8 @@ impl Default for SfwOptions {
             eval_every: 10,
             seed: 0,
             repr: Repr::Dense,
+            tol: 0.0,
+            step: StepMethod::Vanilla,
         }
     }
 }
@@ -49,7 +56,9 @@ pub fn init_rank_one(d1: usize, d2: usize, theta: f32, rng: &mut Rng) -> Mat {
 
 /// Run serial SFW; returns the final iterate (dense or factored per
 /// `opts.repr`).  Every LMO, gradient evaluation and loss point is
-/// recorded in `counters` / `trace`.
+/// recorded in `counters` / `trace`; each recorded point carries the
+/// minibatch dual-gap estimate at the pre-step iterate, and a positive
+/// `opts.tol` stops the run once that estimate reaches it.
 pub fn run_sfw<E: StepEngine + ?Sized>(
     engine: &mut E,
     opts: &SfwOptions,
@@ -63,22 +72,143 @@ pub fn run_sfw<E: StepEngine + ?Sized>(
     let mut rng = Rng::new(opts.seed);
     let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut rng);
     let mut idx = Vec::new();
+    // Away/pairwise steps need the gradient matrix itself (per-atom
+    // scores), not just the fused step's LMO pair.
+    let mut g = if opts.step.needs_active_set() {
+        Mat::zeros(d1, d2)
+    } else {
+        Mat::zeros(0, 0)
+    };
 
     trace.record(0, obj.loss_full_it(&x));
     for k in 1..=opts.iterations {
         let m = opts.batch.m(k);
         rng.sample_indices(n, m, &mut idx);
-        let out = engine.step_it(&x, &idx);
+        let gap = if opts.step.needs_active_set() && x.factored_mut().is_some() {
+            active_set_step(engine, &obj, opts.step, k, theta, &mut x, &idx, &mut g)
+        } else {
+            let out = engine.step_it(&x, &idx);
+            let step_eta = if opts.step == StepMethod::Vanilla {
+                eta(k)
+            } else {
+                // phi(eta) = batch SUM loss at the blended trial point;
+                // phi'(0) = <G_sum, S - X> = -(m * mean gap).
+                let slope0 = -(out.gap * m as f64);
+                select_eta(opts.step, k, out.loss_sum, slope0, 1.0, &mut |e| {
+                    let mut trial = x.clone();
+                    trial.fw_rank_one_update(e, -theta, &out.u, &out.v);
+                    obj.loss_batch_it(&trial, &idx)
+                })
+            };
+            // X <- (1 - eta) X + eta * (-theta u v^T)
+            x.fw_rank_one_update(step_eta, -theta, &out.u, &out.v);
+            out.gap
+        };
         counters.add_grad_evals(m as u64);
         counters.add_lmo();
         counters.add_iteration();
-        // X <- (1 - eta) X + eta * (-theta u v^T)
-        x.fw_rank_one_update(eta(k), -theta, &out.u, &out.v);
-        if k % opts.eval_every == 0 || k == opts.iterations {
-            trace.record(k, obj.loss_full_it(&x));
+        let stop = opts.tol > 0.0 && gap.is_finite() && gap <= opts.tol;
+        if stop || k % opts.eval_every == 0 || k == opts.iterations {
+            trace.record_gap(k, obj.loss_full_it(&x), gap);
+        }
+        if stop {
+            break;
         }
     }
     x
+}
+
+/// One away-steps / pairwise FW iteration over the factored active set
+/// (Ding & Udell, arXiv:1808.05274, adapted to the stochastic setting:
+/// all inner products run against the minibatch SUM-gradient).  Returns
+/// the standard FW mean-gap estimate `(<G, X> + theta sigma) / m` — the
+/// stopping/reporting quantity is the same whichever direction is taken.
+#[allow(clippy::too_many_arguments)]
+fn active_set_step<E: StepEngine + ?Sized>(
+    engine: &mut E,
+    obj: &Arc<dyn crate::objective::Objective>,
+    method: StepMethod,
+    k: u64,
+    theta: f32,
+    x: &mut Iterate,
+    idx: &[usize],
+    g: &mut Mat,
+) -> f64 {
+    let m = idx.len();
+    let loss0 = engine.grad_sum_it(x, idx, g);
+    let s = engine.lmo(g);
+    let gx = x.inner_flat(&g.data);
+    // Standard FW gap: <G, X - S> with S = -theta u v^T.
+    let gap_fw_sum = gx + theta as f64 * s.sigma as f64;
+    let (su, sv) = (Arc::new(s.u), Arc::new(s.v));
+
+    // Away atom: the active vertex V_i = sign(w_i) theta u_i v_i^T that
+    // the gradient most wants to LEAVE (max <G, V_i>).
+    let mut away: Option<(usize, f64, f32)> = None; // (atom, <G,V_i>, alpha_i)
+    if let Some(f) = x.factored_mut() {
+        let mut gv = vec![0.0f32; f.rows];
+        for i in 0..f.atoms() {
+            let (w, u, v) = f.atom(i);
+            if w == 0.0 {
+                continue;
+            }
+            g.matvec(v, &mut gv);
+            let ugv = dot(u, &gv) as f64;
+            let sign = if w < 0.0 { -1.0 } else { 1.0 };
+            let score = sign * theta as f64 * ugv;
+            let alpha = (w.abs() / theta).min(1.0);
+            if away.as_ref().map(|(_, best, _)| score > *best).unwrap_or(true) {
+                away = Some((i, score, alpha));
+            }
+        }
+    }
+
+    match (method, away) {
+        (StepMethod::Pairwise, Some((a, score_a, alpha_a))) if alpha_a > 0.0 => {
+            // Shift mass from V_a onto S; phi'(0) = <G, S - V_a>.
+            let slope0 = -(theta as f64 * s.sigma as f64) - score_a;
+            let step_eta =
+                select_eta(method, k, loss0, slope0, alpha_a, &mut |e| {
+                    let mut trial = x.clone();
+                    if let Some(tf) = trial.factored_mut() {
+                        tf.pairwise_update(a, e, -theta, su.clone(), sv.clone());
+                    }
+                    obj.loss_batch_it(&trial, idx)
+                });
+            if let Some(f) = x.factored_mut() {
+                f.pairwise_update(a, step_eta, -theta, su, sv);
+            }
+        }
+        (StepMethod::Away, Some((a, score_a, alpha_a)))
+            if score_a - gx > gap_fw_sum && alpha_a > 0.0 && alpha_a < 1.0 =>
+        {
+            // Away direction d = X - V_a dominates; phi'(0) = <G, X - V_a>
+            // = gx - score_a.  The boundary step alpha/(1-alpha) may
+            // exceed 1; select_eta clamps to (0, 1], which stays feasible.
+            let eta_max = alpha_a / (1.0 - alpha_a);
+            let slope0 = gx - score_a;
+            let step_eta = select_eta(method, k, loss0, slope0, eta_max, &mut |e| {
+                let mut trial = x.clone();
+                if let Some(tf) = trial.factored_mut() {
+                    tf.away_update(a, e, theta);
+                }
+                obj.loss_batch_it(&trial, idx)
+            });
+            if let Some(f) = x.factored_mut() {
+                f.away_update(a, step_eta, theta);
+            }
+        }
+        _ => {
+            // Standard FW step, line-search sized along X -> S.
+            let step_eta = select_eta(method, k, loss0, -gap_fw_sum, 1.0, &mut |e| {
+                let mut trial = x.clone();
+                trial.fw_update_arc(e, -theta, &su, &sv);
+                obj.loss_batch_it(&trial, idx)
+            });
+            x.fw_update_arc(step_eta, -theta, &su, &sv);
+        }
+    }
+    gap_fw_sum / m.max(1) as f64
 }
 
 #[cfg(test)]
@@ -114,6 +244,7 @@ mod tests {
             eval_every: 20,
             seed: 53,
             repr: crate::linalg::Repr::Dense,
+            ..SfwOptions::default()
         };
         let x = run_sfw(&mut engine, &opts, &counters, &trace);
         let pts = trace.points();
@@ -144,10 +275,74 @@ mod tests {
             eval_every: 25,
             seed: 56,
             repr: crate::linalg::Repr::Dense,
+            ..SfwOptions::default()
         };
         run_sfw(&mut engine, &opts, &counters, &trace);
         let pts = trace.points();
         assert!(pts.last().unwrap().loss < 0.5 * pts.first().unwrap().loss);
         assert_eq!(counters.snapshot().grad_evals, 150 * 128);
+    }
+
+    #[test]
+    fn tol_stops_run_early_and_records_final_gap() {
+        let obj = small_ms(57);
+        let mut engine = NativeEngine::new(obj.clone(), 60, 58);
+        let counters = Counters::new();
+        let trace = LossTrace::new();
+        // A huge tolerance is met by the very first gap estimate, so the
+        // run must stop at k = 1 regardless of the 100-iteration budget.
+        let opts = SfwOptions {
+            iterations: 100,
+            batch: BatchSchedule::Constant(64),
+            eval_every: 10,
+            seed: 59,
+            tol: 1e6,
+            ..SfwOptions::default()
+        };
+        run_sfw(&mut engine, &opts, &counters, &trace);
+        assert_eq!(counters.snapshot().iterations, 1);
+        let pts = trace.points();
+        let last = pts.last().unwrap();
+        assert_eq!(last.iteration, 1);
+        assert!(last.gap.is_finite() && last.gap <= 1e6);
+        assert_eq!(trace.final_gap(), Some(last.gap));
+        // tol = 0 disables stopping entirely
+        let counters2 = Counters::new();
+        let trace2 = LossTrace::new();
+        let opts2 = SfwOptions { iterations: 20, tol: 0.0, ..opts };
+        let mut engine2 = NativeEngine::new(obj, 60, 58);
+        run_sfw(&mut engine2, &opts2, &counters2, &trace2);
+        assert_eq!(counters2.snapshot().iterations, 20);
+    }
+
+    #[test]
+    fn away_and_pairwise_converge_and_stay_feasible() {
+        use crate::algo::schedule::StepMethod;
+        for step in [StepMethod::Away, StepMethod::Pairwise] {
+            let obj = small_ms(60);
+            let mut engine = NativeEngine::new(obj.clone(), 60, 61);
+            let counters = Counters::new();
+            let trace = LossTrace::new();
+            let opts = SfwOptions {
+                iterations: 100,
+                batch: BatchSchedule::Constant(128),
+                eval_every: 20,
+                seed: 62,
+                repr: crate::linalg::Repr::Factored,
+                step,
+                ..SfwOptions::default()
+            };
+            let x = run_sfw(&mut engine, &opts, &counters, &trace);
+            let pts = trace.points();
+            assert!(
+                pts.last().unwrap().loss < 0.5 * pts.first().unwrap().loss,
+                "{:?} failed to make progress",
+                step
+            );
+            // feasibility by construction: the atom-list convex mass
+            // never exceeds theta
+            assert!(nuclear_norm(&x.to_dense()) <= 1.0 + 1e-3, "{:?} left the ball", step);
+            assert_eq!(counters.snapshot().lmo_calls, 100);
+        }
     }
 }

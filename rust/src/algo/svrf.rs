@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use crate::algo::engine::StepEngine;
-use crate::algo::schedule::{eta, svrf_epoch_len, BatchSchedule};
+use crate::algo::schedule::{eta, select_eta, svrf_epoch_len, BatchSchedule, StepMethod};
 use crate::linalg::{Iterate, Mat, Repr};
 use crate::metrics::{Counters, LossTrace};
 use crate::util::rng::Rng;
@@ -20,6 +20,12 @@ pub struct SvrfOptions {
     pub seed: u64,
     /// Iterate representation (dense reference or factored atoms).
     pub repr: Repr,
+    /// Stop once the VR-gradient dual-gap estimate falls to `tol`
+    /// (0 disables).
+    pub tol: f64,
+    /// Step-size policy along the FW segment (away/pairwise are
+    /// rejected upstream — SVRF has no persistent active-set bookkeeping).
+    pub step: StepMethod,
 }
 
 impl Default for SvrfOptions {
@@ -30,6 +36,8 @@ impl Default for SvrfOptions {
             eval_every: 10,
             seed: 0,
             repr: Repr::Dense,
+            tol: 0.0,
+            step: StepMethod::Vanilla,
         }
     }
 }
@@ -69,7 +77,7 @@ pub fn run_svrf<E: StepEngine + ?Sized>(
     let mut global_k = 0u64;
 
     trace.record(0, obj.loss_full_it(&x));
-    for t in 0..opts.epochs {
+    'outer: for t in 0..opts.epochs {
         let w = x.clone();
         full_gradient(engine, &w, counters, &mut full_g);
         let nt = svrf_epoch_len(t);
@@ -77,7 +85,7 @@ pub fn run_svrf<E: StepEngine + ?Sized>(
             let m = opts.batch.m(k);
             rng.sample_indices(n, m, &mut idx);
             // VR gradient: (grad_sum(X) - grad_sum(W))/m + full_g
-            let _ = engine.grad_sum_it(&x, &idx, &mut gx);
+            let lx = engine.grad_sum_it(&x, &idx, &mut gx);
             let _ = engine.grad_sum_it(&w, &idx, &mut gw);
             counters.add_grad_evals(2 * m as u64);
             gx.axpy(-1.0, &gw);
@@ -86,10 +94,27 @@ pub fn run_svrf<E: StepEngine + ?Sized>(
             let s = engine.lmo(&gx);
             counters.add_lmo();
             counters.add_iteration();
-            x.fw_rank_one_update(eta(k), -theta, &s.u, &s.v);
+            // gx is a MEAN gradient, so the gap estimate needs no /m.
+            let gap = x.inner_flat(&gx.data) + theta as f64 * s.sigma as f64;
+            let step_eta = if opts.step == StepMethod::Vanilla {
+                eta(k)
+            } else {
+                // phi in batch-SUM units: slope = m * phi'(0)/m = -m*gap.
+                let slope0 = -(gap * m as f64);
+                select_eta(opts.step, k, lx, slope0, 1.0, &mut |e| {
+                    let mut trial = x.clone();
+                    trial.fw_rank_one_update(e, -theta, &s.u, &s.v);
+                    obj.loss_batch_it(&trial, &idx)
+                })
+            };
+            x.fw_rank_one_update(step_eta, -theta, &s.u, &s.v);
             global_k += 1;
-            if global_k % opts.eval_every == 0 {
-                trace.record(global_k, obj.loss_full_it(&x));
+            let stop = opts.tol > 0.0 && gap.is_finite() && gap <= opts.tol;
+            if stop || global_k % opts.eval_every == 0 {
+                trace.record_gap(global_k, obj.loss_full_it(&x), gap);
+            }
+            if stop {
+                break 'outer;
             }
         }
         trace.record(global_k, obj.loss_full_it(&x));
@@ -121,7 +146,7 @@ mod tests {
             batch: BatchSchedule::Linear { scale: 24.0, cap: 1_500 },
             eval_every: 10,
             seed: 72,
-            repr: Repr::Dense,
+            ..SvrfOptions::default()
         };
         let x = run_svrf(&mut engine, &opts, &counters, &trace);
         let pts = trace.points();

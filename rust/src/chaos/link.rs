@@ -288,7 +288,7 @@ mod tests {
     use crate::metrics::Counters;
 
     fn upd(rank: u32, t_w: u64) -> UpdateMsg {
-        UpdateMsg::dense(rank, t_w, vec![0.25; 6], vec![-0.5; 6], 1.0, 0.5, 8)
+        UpdateMsg::dense(rank, t_w, vec![0.25; 6], vec![-0.5; 6], 1.0, 0.5, 8, 0.0)
     }
 
     /// A chaos-wrapped rank-0 worker over in-process links, plus the

@@ -89,7 +89,7 @@ mod tests {
     use crate::coordinator::messages::{MasterMsg, UpdateMsg};
 
     fn upd(w: u32, d: usize) -> UpdateMsg {
-        UpdateMsg::dense(w, 0, vec![0.0; d], vec![0.0; d], 1.0, 0.0, 8)
+        UpdateMsg::dense(w, 0, vec![0.0; d], vec![0.0; d], 1.0, 0.0, 8, 0.0)
     }
 
     #[test]

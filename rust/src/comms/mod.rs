@@ -233,7 +233,7 @@ mod tests {
 
     #[test]
     fn wire_bytes_is_the_frame_length() {
-        let m = UpdateMsg::dense(1, 7, vec![1.0; 13], vec![2.0; 9], 0.5, 1.25, 64);
+        let m = UpdateMsg::dense(1, 7, vec![1.0; 13], vec![2.0; 9], 0.5, 1.25, 64, 0.75);
         assert_eq!(m.wire_bytes(), frame(&m).len() as u64);
         assert_eq!(MasterMsg::Stop.wire_bytes(), FRAME_HEADER as u64);
     }
@@ -249,6 +249,7 @@ mod tests {
             0.5,
             1.25,
             64,
+            0.75,
         );
         let mut buf = Vec::new();
         frame_into(&mut buf, &m);

@@ -299,7 +299,7 @@ mod tests {
     use crate::linalg::Mat;
 
     fn upd(id: u32) -> UpdateMsg {
-        UpdateMsg::dense(id, 17, vec![1.0, -2.5, 3.25], vec![0.5, 4.0], 6.5, 2.25, 99)
+        UpdateMsg::dense(id, 17, vec![1.0, -2.5, 3.25], vec![0.5, 4.0], 6.5, 2.25, 99, 0.5)
     }
 
     #[test]

@@ -128,6 +128,11 @@ pub struct TrainConfig {
     pub theta: f32,
     pub seed: u64,
     pub eval_every: u64,
+    /// Dual-gap stopping tolerance; 0 disables (see `TrainSpec::tol`).
+    pub tol: f64,
+    /// Step-size policy: "vanilla" | "analytic" | "line-search" |
+    /// "armijo" | "away" | "pairwise" (see `algo::schedule::StepMethod`).
+    pub step: String,
     /// "native" | "pjrt".
     pub engine: String,
     /// "local" | "tcp".
@@ -178,6 +183,8 @@ impl Default for TrainConfig {
             theta: 1.0,
             seed: 42,
             eval_every: 10,
+            tol: 0.0,
+            step: "vanilla".into(),
             engine: "native".into(),
             transport: "local".into(),
             tcp_bind: String::new(),
@@ -223,7 +230,7 @@ impl TrainConfig {
             "task", "algo", "engine", "transport", "tcp-bind", "tcp-await",
             "artifacts-dir", "workers", "tau", "iterations", "epochs", "batch",
             "batch-cap", "batch-scale", "power-iters", "repr", "uplink", "theta",
-            "seed", "eval-every",
+            "seed", "eval-every", "tol", "step",
         ];
         const DATA_KEYS: &[&str] = &[
             "ms-n", "ms-d", "ms-rank", "ms-noise", "pnn-n", "pnn-d", "rec-rows",
@@ -279,6 +286,8 @@ impl TrainConfig {
             theta: cfg.get("theta", d.theta)?,
             seed: cfg.get("seed", d.seed)?,
             eval_every: cfg.get("eval-every", d.eval_every)?,
+            tol: cfg.get("tol", d.tol)?,
+            step: cfg.get_str("step", &d.step),
             engine: cfg.get_str("engine", &d.engine),
             transport: cfg.get_str("transport", &d.transport),
             tcp_bind: cfg.get_str("tcp-bind", &d.tcp_bind),
@@ -353,6 +362,29 @@ n = 90000
         assert_eq!(tc.iterations, 300); // default survives
         assert_eq!(tc.transport, "local"); // new default
         assert_eq!(tc.uplink, "f32"); // uncompressed default
+        assert_eq!(tc.step, "vanilla");
+        assert_eq!(tc.tol, 0.0); // gap stopping off by default
+    }
+
+    #[test]
+    fn tol_and_step_resolve_from_cli_and_file() {
+        let args = Args::parse_from(
+            "--tol 1e-3 --step line-search".split_whitespace().map(String::from),
+        );
+        let tc = TrainConfig::load(&args).unwrap();
+        assert!((tc.tol - 1e-3).abs() < 1e-12);
+        assert_eq!(tc.step, "line-search");
+        let cfg = Config::from_str("[train]\ntol = 0.5\nstep = away\n").unwrap();
+        let tc =
+            TrainConfig::resolve(cfg, &Args::parse_from(std::iter::empty::<String>())).unwrap();
+        assert!((tc.tol - 0.5).abs() < 1e-12);
+        assert_eq!(tc.step, "away");
+        // a non-numeric tol errors instead of silently never stopping
+        let bad = Args::parse_from("--tol soon".split_whitespace().map(String::from));
+        assert!(matches!(
+            TrainConfig::load(&bad),
+            Err(ConfigError::BadValue(k, _)) if k == "tol"
+        ));
     }
 
     #[test]

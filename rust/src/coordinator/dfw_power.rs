@@ -16,7 +16,7 @@ use std::sync::Arc;
 use crate::algo::schedule::eta;
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::runner::RunResult;
-use crate::linalg::{normalize, Iterate, Mat, Repr};
+use crate::linalg::{normalize, power_iteration_rand, Iterate, Mat, Repr};
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
 use crate::util::rng::Rng;
@@ -33,6 +33,11 @@ pub struct DfwOptions {
     /// Master-side iterate representation (workers shard dense
     /// gradients either way — DFW's LMO is what is distributed).
     pub repr: Repr,
+    /// Dual-gap stopping tolerance (0 disables).  The full gradient
+    /// lives sharded across the workers, so honoring `tol` pays a
+    /// master-side probe gradient (capped at 1024 samples) + 1-SVD per
+    /// round, charged to the gradient/LMO counters.
+    pub tol: f64,
 }
 
 impl Default for DfwOptions {
@@ -45,6 +50,7 @@ impl Default for DfwOptions {
             eval_every: 5,
             seed: 0,
             repr: Repr::Dense,
+            tol: 0.0,
         }
     }
 }
@@ -123,8 +129,11 @@ pub(crate) fn run_dfw_power_impl(obj: Arc<dyn Objective>, opts: &DfwOptions) -> 
     drop(up_tx);
 
     let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut Rng::new(opts.seed));
-    evaluator.submit(trace.elapsed(), 0, x.clone());
+    evaluator.submit(trace.elapsed(), 0, f64::NAN, x.clone());
     let mut rng = Rng::new(opts.seed ^ 0xDF);
+    let mut probe_rng = Rng::new(opts.seed ^ 0x9E37_79B9);
+    let mut probe_idx: Vec<usize> = Vec::new();
+    let mut probe_g = Mat::zeros(d1, d2);
     // A dead worker or an out-of-phase reply ends the run early (with the
     // partial trace) instead of panicking the coordinator thread.
     'train: for t in 1..=opts.iterations {
@@ -134,6 +143,21 @@ pub(crate) fn run_dfw_power_impl(obj: Arc<dyn Objective>, opts: &DfwOptions) -> 
             counters.add_down((d1 * d2 * 4) as u64);
             let _ = tx.send(Req::NewGrad { x: xa.clone() });
         }
+        // Dual-gap estimate for --tol, while the workers re-grad their
+        // shards: the sharded full gradient never reaches the master, so
+        // it pays its own probe gradient + 1-SVD (same scheme as SVA).
+        let gap = if opts.tol > 0.0 {
+            let pm = n.min(1024);
+            probe_rng.sample_indices(n, pm, &mut probe_idx);
+            obj.grad_sum(&xa, &probe_idx, &mut probe_g);
+            counters.add_grad_evals(pm as u64);
+            let s = power_iteration_rand(&probe_g, &mut probe_rng, 50, 1e-6);
+            counters.add_lmo();
+            let gx: f64 = xa.inner(&probe_g);
+            (gx + theta as f64 * s.sigma as f64) / pm as f64
+        } else {
+            f64::NAN
+        };
         for _ in 0..w_count {
             if up_rx.recv().is_err() {
                 eprintln!("dfw-power: worker died at iteration {t}; stopping early");
@@ -201,8 +225,12 @@ pub(crate) fn run_dfw_power_impl(obj: Arc<dyn Objective>, opts: &DfwOptions) -> 
         counters.add_lmo();
         counters.add_iteration();
         x.fw_rank_one_update(eta(t), -theta, &u, &v);
-        if t % opts.eval_every == 0 || t == opts.iterations {
-            evaluator.submit(trace.elapsed(), t, x.clone());
+        let stop = opts.tol > 0.0 && gap.is_finite() && gap <= opts.tol;
+        if stop || t % opts.eval_every == 0 || t == opts.iterations {
+            evaluator.submit(trace.elapsed(), t, gap, x.clone());
+        }
+        if stop {
+            break 'train;
         }
     }
     for tx in &down_txs {
@@ -237,6 +265,7 @@ mod tests {
             eval_every: 10,
             seed: 131,
             repr: Repr::Dense,
+            tol: 0.0,
         };
         let r = run_dfw_power_impl(obj, &opts);
         let pts = r.trace.points();

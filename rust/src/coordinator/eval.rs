@@ -19,7 +19,7 @@ use crate::metrics::LossTrace;
 use crate::objective::Objective;
 
 pub struct Evaluator {
-    tx: Option<Sender<(f64, u64, Iterate)>>,
+    tx: Option<Sender<(f64, u64, f64, Iterate)>>,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -28,20 +28,22 @@ impl Evaluator {
         // lint: allow(bounded-channel-depth): depth <= iterations/eval_every
         // — deliberately unbounded so a slow loss_full never backpressures
         // the solver loop; snapshots are O(k) atom clones, not dense copies
-        let (tx, rx) = channel::<(f64, u64, Iterate)>();
+        let (tx, rx) = channel::<(f64, u64, f64, Iterate)>();
         let handle = std::thread::spawn(move || {
-            for (t, k, x) in rx {
+            for (t, k, gap, x) in rx {
                 let loss = obj.loss_full_it(&x);
-                trace.record_at(t, k, loss);
+                trace.record_at_gap(t, k, loss, gap);
             }
         });
         Evaluator { tx: Some(tx), handle: Some(handle) }
     }
 
-    /// Submit a snapshot taken at time `t` (seconds since trace start).
-    pub fn submit(&self, t: f64, k: u64, x: Iterate) {
+    /// Submit a snapshot taken at time `t` (seconds since trace start),
+    /// carrying the dual-gap estimate in hand at snapshot time (NaN when
+    /// the submitting loop has none — e.g. the t=0 init point).
+    pub fn submit(&self, t: f64, k: u64, gap: f64, x: Iterate) {
         if let Some(tx) = &self.tx {
-            let _ = tx.send((t, k, x));
+            let _ = tx.send((t, k, gap, x));
         }
     }
 
@@ -82,13 +84,15 @@ mod tests {
         let trace = Arc::new(LossTrace::new());
         let ev = Evaluator::new(obj.clone(), trace.clone());
         let x = Mat::zeros(4, 4);
-        ev.submit(1.5, 10, Iterate::Dense(x.clone()));
-        ev.submit(2.5, 20, Iterate::Dense(x.clone()));
+        ev.submit(1.5, 10, f64::NAN, Iterate::Dense(x.clone()));
+        ev.submit(2.5, 20, 0.125, Iterate::Dense(x.clone()));
         ev.finish();
         let pts = trace.points();
         assert_eq!(pts.len(), 2);
         assert_eq!(pts[0].t, 1.5);
         assert_eq!(pts[1].iteration, 20);
+        assert!(pts[0].gap.is_nan());
+        assert_eq!(pts[1].gap, 0.125);
         assert!((pts[0].loss - obj.loss_full(&x)).abs() < 1e-12);
     }
 }

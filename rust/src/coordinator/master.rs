@@ -14,6 +14,7 @@
 
 use std::sync::Arc;
 
+use crate::algo::schedule::{eta, select_eta, StepMethod};
 use crate::comms::MasterLink;
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::messages::{MasterMsg, UpdateMsg};
@@ -37,6 +38,17 @@ pub struct MasterOptions {
     /// mode the copy shares the update log's atom `Arc`s — the log IS
     /// the iterate.
     pub repr: Repr,
+    /// Stop once an ACCEPTED update's dual-gap estimate falls to `tol`
+    /// (0 disables).  The gap rides the uplink: it is the minibatch FW
+    /// gap at the sending worker's boundedly-stale iterate — the same
+    /// quantity the serial solvers stop on, delayed by at most tau steps.
+    pub tol: f64,
+    /// Step-size policy for accepted updates.  Non-vanilla policies run a
+    /// master-side stochastic line search: the master samples its own
+    /// probe minibatch and evaluates candidate steps along the worker's
+    /// atom (gradient-free, loss evaluations only).  Away/pairwise need a
+    /// serial active set and are rejected at spec validation.
+    pub step: StepMethod,
 }
 
 /// Run the master until T accepted updates, then stop all workers.
@@ -51,9 +63,14 @@ pub fn run_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
 ) -> Iterate {
     let (d1, d2) = obj.dims();
     let theta = obj.theta();
+    let n = obj.n();
     let mut log = UpdateLog::new();
     let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut Rng::new(opts.seed));
-    evaluator.submit(trace.elapsed(), 0, x.clone());
+    // Probe sampler for master-side step policies — forked off the shared
+    // seed so it never collides with any worker's index stream.
+    let mut probe_rng = Rng::new(opts.seed ^ 0x9E37_79B9);
+    let mut probe_idx: Vec<usize> = Vec::new();
+    evaluator.submit(trace.elapsed(), 0, f64::NAN, x.clone());
 
     while log.t_m() < opts.iterations {
         let Some(upd) = link.recv() else { break };
@@ -102,13 +119,35 @@ pub fn run_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
             continue;
         }
         counters.note_accepted_delay(delay);
-        let e = log.append(upd.u, upd.v, theta);
+        let k = log.t_m() + 1;
+        let step_eta = if opts.step == StepMethod::Vanilla {
+            eta(k)
+        } else {
+            // Stochastic line search along the worker's atom: probe
+            // minibatch of the update's own size, phi in batch-SUM units,
+            // slope seeded from the uplinked (mean) gap times m.
+            let m = (upd.m as usize).clamp(1, n);
+            probe_rng.sample_indices(n, m, &mut probe_idx);
+            let loss0 = obj.loss_batch_it(&x, &probe_idx);
+            let slope0 = -(upd.gap * m as f64);
+            select_eta(opts.step, k, loss0, slope0, 1.0, &mut |e| {
+                let mut trial = x.clone();
+                trial.fw_rank_one_update(e, -theta, &upd.u, &upd.v);
+                obj.loss_batch_it(&trial, &probe_idx)
+            })
+        };
+        let gap = upd.gap;
+        let e = log.append_custom(upd.u, upd.v, step_eta, -theta);
         x.apply_entry(e);
         counters.add_iteration();
         let t_m = log.t_m();
         link.send_to(w, MasterMsg::Updates { t_m, entries: log.slice_from(upd.t_w) });
-        if t_m % opts.eval_every == 0 || t_m == opts.iterations {
-            evaluator.submit(trace.elapsed(), t_m, x.clone());
+        let stop = opts.tol > 0.0 && gap.is_finite() && gap <= opts.tol;
+        if stop || t_m % opts.eval_every == 0 || t_m == opts.iterations {
+            evaluator.submit(trace.elapsed(), t_m, gap, x.clone());
+        }
+        if stop {
+            break;
         }
     }
     for w in 0..link.workers() {

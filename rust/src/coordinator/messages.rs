@@ -70,6 +70,10 @@ pub struct UpdateMsg {
     pub loss_sum: f64,
     /// True minibatch size used.
     pub m: u32,
+    /// Minibatch FW dual-gap estimate at the worker's model copy —
+    /// the master's stopping quantity (--tol); only the worker holds the
+    /// gradient needed to compute it, so it rides the uplink as telemetry.
+    pub gap: f64,
     /// Uplink codec this message is framed with (picks the frame tag).
     pub codec: GradCodec,
     /// Per-vector int8 scales (0.0 unless `codec == Int8`).
@@ -89,6 +93,7 @@ impl UpdateMsg {
 
     /// Uncompressed (f32) update — the default protocol message, with
     /// the legacy wire layout.
+    #[allow(clippy::too_many_arguments)]
     pub fn dense(
         worker_id: u32,
         t_w: u64,
@@ -97,8 +102,9 @@ impl UpdateMsg {
         sigma: f32,
         loss_sum: f64,
         m: u32,
+        gap: f64,
     ) -> Self {
-        Self::quantized(GradCodec::F32, worker_id, t_w, u, v, sigma, loss_sum, m)
+        Self::quantized(GradCodec::F32, worker_id, t_w, u, v, sigma, loss_sum, m, gap)
     }
 
     /// Quantize `{u, v}` through `codec` (identity for `F32`).  Plain
@@ -116,6 +122,7 @@ impl UpdateMsg {
         sigma: f32,
         loss_sum: f64,
         m: u32,
+        gap: f64,
     ) -> Self {
         let (mut u_scale, mut v_scale) = (0.0f32, 0.0f32);
         match codec {
@@ -136,7 +143,7 @@ impl UpdateMsg {
                 }
             }
         }
-        UpdateMsg { worker_id, t_w, u, v, sigma, loss_sum, m, codec, u_scale, v_scale }
+        UpdateMsg { worker_id, t_w, u, v, sigma, loss_sum, m, gap, codec, u_scale, v_scale }
     }
 }
 
@@ -153,7 +160,7 @@ impl Wire for UpdateMsg {
     /// equal to the real encoding by `tests/properties.rs::wire_bytes_exact`.
     fn wire_bytes(&self) -> u64 {
         let header =
-            crate::comms::FRAME_HEADER as u64 + (4 + 8 + 4 + 8 + 4 + 4 + 4) as u64;
+            crate::comms::FRAME_HEADER as u64 + (4 + 8 + 4 + 8 + 4 + 8 + 4 + 4) as u64;
         let n = (self.u.len() + self.v.len()) as u64;
         match self.codec {
             GradCodec::F32 => header + 4 * n,
@@ -170,6 +177,7 @@ impl Wire for UpdateMsg {
         e.f32(self.sigma);
         e.f64(self.loss_sum);
         e.u32(self.m);
+        e.f64(self.gap);
         match self.codec {
             GradCodec::F32 => {
                 e.f32s(&self.u);
@@ -208,6 +216,7 @@ impl Wire for UpdateMsg {
         let sigma = d.f32()?;
         let loss_sum = d.f64()?;
         let m = d.u32()?;
+        let gap = d.f64()?;
         let (mut u_scale, mut v_scale) = (0.0f32, 0.0f32);
         let (u, v) = match codec {
             GradCodec::F32 => (d.f32s()?, d.f32s()?),
@@ -221,7 +230,7 @@ impl Wire for UpdateMsg {
             }
         };
         d.finish()?;
-        Ok(UpdateMsg { worker_id, t_w, u, v, sigma, loss_sum, m, codec, u_scale, v_scale })
+        Ok(UpdateMsg { worker_id, t_w, u, v, sigma, loss_sum, m, gap, codec, u_scale, v_scale })
     }
 }
 
@@ -661,9 +670,9 @@ mod tests {
 
     #[test]
     fn update_msg_is_linear_in_d1_plus_d2() {
-        let m = UpdateMsg::dense(0, 10, vec![0.0; 30], vec![0.0; 40], 1.0, 0.0, 64);
-        // 5-byte frame header + 36-byte payload header + 4*(30+40)
-        assert_eq!(m.wire_bytes(), (FRAME_HEADER + 36) as u64 + 280);
+        let m = UpdateMsg::dense(0, 10, vec![0.0; 30], vec![0.0; 40], 1.0, 0.0, 64, 0.0);
+        // 5-byte frame header + 44-byte payload header + 4*(30+40)
+        assert_eq!(m.wire_bytes(), (FRAME_HEADER + 44) as u64 + 280);
         // crucially NOT 4 * 30 * 40 (the dense-gradient cost)
         assert!(m.wire_bytes() < 4 * 30 * 40);
     }
@@ -673,9 +682,9 @@ mod tests {
         let u: Vec<f32> = (0..30).map(|i| (i as f32 * 0.37).sin() * 0.4).collect();
         let v: Vec<f32> = (0..40).map(|i| (i as f32 * 0.23).cos() * 0.3).collect();
         let f32_bytes =
-            UpdateMsg::dense(2, 9, u.clone(), v.clone(), 1.5, 0.25, 64).wire_bytes();
+            UpdateMsg::dense(2, 9, u.clone(), v.clone(), 1.5, 0.25, 64, 0.5).wire_bytes();
         for codec in [GradCodec::Bf16, GradCodec::Int8] {
-            let m = UpdateMsg::quantized(codec, 2, 9, u.clone(), v.clone(), 1.5, 0.25, 64);
+            let m = UpdateMsg::quantized(codec, 2, 9, u.clone(), v.clone(), 1.5, 0.25, 64, 0.5);
             // quantize-once: the struct already holds dequantized values,
             // so encode -> decode is the identity
             let mut buf = Vec::new();
@@ -690,10 +699,10 @@ mod tests {
         }
         // closed forms: bf16 halves the vector bytes; int8 quarters them
         // (plus two f32 scales)
-        let bf = UpdateMsg::quantized(GradCodec::Bf16, 2, 9, u.clone(), v.clone(), 1.5, 0.25, 64);
-        assert_eq!(bf.wire_bytes(), (FRAME_HEADER + 36) as u64 + 2 * 70);
-        let i8m = UpdateMsg::quantized(GradCodec::Int8, 2, 9, u, v, 1.5, 0.25, 64);
-        assert_eq!(i8m.wire_bytes(), (FRAME_HEADER + 36) as u64 + 8 + 70);
+        let bf = UpdateMsg::quantized(GradCodec::Bf16, 2, 9, u.clone(), v.clone(), 1.5, 0.25, 64, 0.5);
+        assert_eq!(bf.wire_bytes(), (FRAME_HEADER + 44) as u64 + 2 * 70);
+        let i8m = UpdateMsg::quantized(GradCodec::Int8, 2, 9, u, v, 1.5, 0.25, 64, 0.5);
+        assert_eq!(i8m.wire_bytes(), (FRAME_HEADER + 44) as u64 + 8 + 70);
     }
 
     #[test]
@@ -712,7 +721,7 @@ mod tests {
 
     #[test]
     fn asyn_codec_round_trips() {
-        let m = UpdateMsg::dense(3, 17, vec![1.0, -2.5, 3.25], vec![0.5, 4.0], 6.5, 2.25, 99);
+        let m = UpdateMsg::dense(3, 17, vec![1.0, -2.5, 3.25], vec![0.5, 4.0], 6.5, 2.25, 99, 0.125);
         let mut buf = Vec::new();
         m.encode(&mut buf);
         let d = UpdateMsg::decode(m.tag(), &buf).unwrap();
@@ -835,7 +844,7 @@ mod tests {
 
     #[test]
     fn truncated_frames_error_not_panic() {
-        let m = UpdateMsg::dense(1, 2, vec![1.0; 4], vec![1.0; 4], 0.0, 0.0, 1);
+        let m = UpdateMsg::dense(1, 2, vec![1.0; 4], vec![1.0; 4], 0.0, 0.0, 1, 0.0);
         let mut buf = Vec::new();
         m.encode(&mut buf);
         assert!(UpdateMsg::decode(m.tag(), &buf[..buf.len() - 3]).is_err());
@@ -844,7 +853,7 @@ mod tests {
         assert!(UpdateMsg::decode(m.tag(), &extended).is_err());
         // same contract for the compressed spellings
         for codec in [GradCodec::Bf16, GradCodec::Int8] {
-            let m = UpdateMsg::quantized(codec, 1, 2, vec![1.0; 4], vec![1.0; 4], 0.0, 0.0, 1);
+            let m = UpdateMsg::quantized(codec, 1, 2, vec![1.0; 4], vec![1.0; 4], 0.0, 0.0, 1, 0.0);
             let mut buf = Vec::new();
             m.encode(&mut buf);
             assert!(UpdateMsg::decode(m.tag(), &buf[..buf.len() - 1]).is_err());

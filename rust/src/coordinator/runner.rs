@@ -20,7 +20,7 @@
 
 use std::sync::Arc;
 
-use crate::algo::schedule::BatchSchedule;
+use crate::algo::schedule::{BatchSchedule, StepMethod};
 use crate::chaos::ChaosCounters;
 use crate::comms::GradCodec;
 use crate::coordinator::worker::Straggler;
@@ -38,6 +38,11 @@ pub struct AsynOptions {
     pub repr: Repr,
     /// Uplink codec for the rank-one `{u, v}` updates.
     pub uplink: GradCodec,
+    /// Dual-gap stopping tolerance (0 disables); the master stops on the
+    /// uplinked worker gap.
+    pub tol: f64,
+    /// Step-size policy (non-vanilla = master-side probe line search).
+    pub step: StepMethod,
 }
 
 impl Default for AsynOptions {
@@ -51,6 +56,8 @@ impl Default for AsynOptions {
             straggler: None,
             repr: Repr::Dense,
             uplink: GradCodec::F32,
+            tol: 0.0,
+            step: StepMethod::Vanilla,
         }
     }
 }
@@ -97,6 +104,7 @@ mod tests {
             straggler: None,
             repr: Repr::Dense,
             uplink: GradCodec::F32,
+            ..AsynOptions::default()
         };
         let o2 = obj.clone();
         let r = harness::run_asyn(obj, &opts, TransportOpts::local(4), move |w| {
@@ -132,6 +140,7 @@ mod tests {
             straggler: None,
             repr: Repr::Dense,
             uplink: GradCodec::F32,
+            ..AsynOptions::default()
         };
         let o2 = obj.clone();
         let r = harness::run_asyn(obj, &opts, TransportOpts::local(4), move |w| {

@@ -17,7 +17,7 @@ use crate::algo::engine::StepEngine;
 use crate::algo::schedule::{eta, BatchSchedule};
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::runner::RunResult;
-use crate::linalg::{normalize, Iterate, Mat, Repr};
+use crate::linalg::{normalize, power_iteration_rand, Iterate, Mat, Repr};
 use crate::metrics::{Counters, LossTrace};
 use crate::objective::Objective;
 use crate::util::rng::Rng;
@@ -31,6 +31,11 @@ pub struct SvaOptions {
     /// Master-side iterate representation (workers receive the dense
     /// broadcast either way — SVA is the dense-downlink baseline).
     pub repr: Repr,
+    /// Dual-gap stopping tolerance (0 disables).  SVA's master never
+    /// sees a gradient (workers ship singular vectors), so honoring
+    /// `tol` pays a master-side probe gradient + 1-SVD per round,
+    /// charged to the LMO counter.
+    pub tol: f64,
 }
 
 enum Req {
@@ -90,7 +95,10 @@ where
     drop(up_tx);
 
     let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut Rng::new(opts.seed));
-    evaluator.submit(trace.elapsed(), 0, x.clone());
+    let mut probe_rng = Rng::new(opts.seed ^ 0x9E37_79B9);
+    let mut probe_idx: Vec<usize> = Vec::new();
+    let mut probe_g = Mat::zeros(d1, d2);
+    evaluator.submit(trace.elapsed(), 0, f64::NAN, x.clone());
     // A dead worker ends the run early (with the partial trace) instead
     // of panicking the coordinator thread.
     'train: for k in 1..=opts.iterations {
@@ -101,6 +109,20 @@ where
             counters.add_down((d1 * d2 * 4) as u64); // still broadcasts X
             let _ = tx.send(Req::Compute { x: xa.clone(), m_share });
         }
+        // Dual-gap estimate for --tol, while the workers grind: probe
+        // gradient at the broadcast X plus one 1-SVD (the workers only
+        // ever ship singular vectors, so the master pays for its own).
+        let gap = if opts.tol > 0.0 {
+            probe_rng.sample_indices(obj.n(), m_share.max(1), &mut probe_idx);
+            obj.grad_sum(&xa, &probe_idx, &mut probe_g);
+            counters.add_grad_evals(probe_idx.len() as u64);
+            let s = power_iteration_rand(&probe_g, &mut probe_rng, 50, 1e-6);
+            counters.add_lmo();
+            let gx: f64 = xa.inner(&probe_g);
+            (gx + theta as f64 * s.sigma as f64) / probe_idx.len() as f64
+        } else {
+            f64::NAN
+        };
         // average the singular vectors (sign-aligned to the first reply)
         let mut u_avg = vec![0.0f32; d1];
         let mut v_avg = vec![0.0f32; d2];
@@ -136,8 +158,12 @@ where
         normalize(&mut v_avg);
         counters.add_iteration();
         x.fw_rank_one_update(eta(k), -theta, &u_avg, &v_avg);
-        if k % opts.eval_every == 0 || k == opts.iterations {
-            evaluator.submit(trace.elapsed(), k, x.clone());
+        let stop = opts.tol > 0.0 && gap.is_finite() && gap <= opts.tol;
+        if stop || k % opts.eval_every == 0 || k == opts.iterations {
+            evaluator.submit(trace.elapsed(), k, gap, x.clone());
+        }
+        if stop {
+            break 'train;
         }
     }
     for tx in &down_txs {
@@ -171,6 +197,7 @@ mod tests {
             eval_every: 10,
             seed: 121,
             repr: Repr::Dense,
+            tol: 0.0,
         };
         let o2 = obj.clone();
         let r = run_sva_impl(obj, &opts, move |w| {

@@ -19,7 +19,7 @@
 use std::sync::Arc;
 
 use crate::algo::engine::StepEngine;
-use crate::algo::schedule::{eta, svrf_epoch_len, BatchSchedule};
+use crate::algo::schedule::{eta, select_eta, svrf_epoch_len, BatchSchedule, StepMethod};
 use crate::comms::{GradCodec, MasterLink, WorkerLink};
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::messages::{MasterMsg, UpdateMsg};
@@ -39,6 +39,14 @@ pub struct SvrfAsynOptions {
     pub repr: Repr,
     /// Uplink codec for the rank-one `{u, v}` updates.
     pub uplink: GradCodec,
+    /// Stop once an accepted update's VR dual-gap estimate falls to
+    /// `tol` (0 disables) — same uplinked-gap convention as the plain
+    /// SFW-asyn master.
+    pub tol: f64,
+    /// Step-size policy on the inner FW segment (non-vanilla runs the
+    /// master-side probe-minibatch line search; away/pairwise are
+    /// rejected at spec validation — no persistent active set here).
+    pub step: StepMethod,
 }
 
 impl Default for SvrfAsynOptions {
@@ -51,6 +59,8 @@ impl Default for SvrfAsynOptions {
             seed: 0,
             repr: Repr::Dense,
             uplink: GradCodec::F32,
+            tol: 0.0,
+            step: StepMethod::Vanilla,
         }
     }
 }
@@ -66,9 +76,13 @@ pub(crate) fn run_svrf_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
 ) -> Iterate {
     let (d1, d2) = obj.dims();
     let theta = obj.theta();
+    let n = obj.n();
     let mut log = UpdateLog::new();
     let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut Rng::new(opts.seed));
-    evaluator.submit(trace.elapsed(), 0, x.clone());
+    let mut probe_rng = Rng::new(opts.seed ^ 0x9E37_79B9);
+    let mut probe_idx: Vec<usize> = Vec::new();
+    let mut last_gap = f64::NAN;
+    evaluator.submit(trace.elapsed(), 0, f64::NAN, x.clone());
 
     let w_count = link.workers();
     let mut last_epoch = vec![0u64; w_count];
@@ -137,23 +151,45 @@ pub(crate) fn run_svrf_master<L: MasterLink<UpdateMsg, MasterMsg> + ?Sized>(
             counters.note_accepted_delay(t_m - upd.t_w);
             let t_w = upd.t_w;
             let inner_k = (t_m - epoch_start) + 1;
-            let e = log.append_custom(upd.u, upd.v, eta(inner_k), -theta);
+            let step_eta = if opts.step == StepMethod::Vanilla {
+                eta(inner_k)
+            } else {
+                // master-side stochastic line search (see run_master):
+                // probe minibatch, phi in batch-SUM units, slope seeded
+                // from the uplinked mean VR gap
+                let m = (upd.m as usize).clamp(1, n);
+                probe_rng.sample_indices(n, m, &mut probe_idx);
+                let loss0 = obj.loss_batch_it(&x, &probe_idx);
+                let slope0 = -(upd.gap * m as f64);
+                select_eta(opts.step, inner_k, loss0, slope0, 1.0, &mut |e| {
+                    let mut trial = x.clone();
+                    trial.fw_rank_one_update(e, -theta, &upd.u, &upd.v);
+                    obj.loss_batch_it(&trial, &probe_idx)
+                })
+            };
+            let gap = upd.gap;
+            let e = log.append_custom(upd.u, upd.v, step_eta, -theta);
             x.apply_entry(e);
             counters.add_iteration();
+            last_gap = gap;
             let t_m = log.t_m();
             link.send_to(
                 w,
                 MasterMsg::Updates { t_m, entries: log.slice_from(t_w) },
             );
-            if t_m % opts.eval_every == 0 {
-                evaluator.submit(trace.elapsed(), t_m, x.clone());
+            let stop = opts.tol > 0.0 && gap.is_finite() && gap <= opts.tol;
+            if stop || t_m % opts.eval_every == 0 {
+                evaluator.submit(trace.elapsed(), t_m, gap, x.clone());
+            }
+            if stop {
+                break 'outer;
             }
         }
         // epoch complete: W_{t+1} = X_{N_t}; boundary is announced lazily
         // through per-worker UpdateW resyncs above.
         epoch += 1;
         epoch_start = log.t_m();
-        evaluator.submit(trace.elapsed(), epoch_start, x.clone());
+        evaluator.submit(trace.elapsed(), epoch_start, last_gap, x.clone());
     }
     for w in 0..w_count {
         link.send_to(w, MasterMsg::Stop);
@@ -216,6 +252,8 @@ pub(crate) fn run_svrf_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: S
         gx.axpy(1.0, &full_g);
         let s = engine.lmo(&gx);
         counters.add_lmo();
+        // gx is a MEAN gradient, so the uplinked gap estimate needs no /m
+        let gap = x.inner_flat(&gx.data) + theta as f64 * s.sigma as f64;
         link.send(UpdateMsg::quantized(
             uplink,
             worker_id,
@@ -225,6 +263,7 @@ pub(crate) fn run_svrf_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: S
             s.sigma,
             loss_sum,
             m as u32,
+            gap,
         ));
         match link.recv() {
             Some(MasterMsg::Updates { entries, .. }) => {
@@ -268,6 +307,7 @@ mod tests {
             seed: 141,
             repr: Repr::Dense,
             uplink: GradCodec::F32,
+            ..SvrfAsynOptions::default()
         };
         let o2 = obj.clone();
         let r = harness::run_svrf_asyn(obj, &opts, harness::TransportOpts::local(3), move |w| {

@@ -32,7 +32,7 @@
 use std::sync::Arc;
 
 use crate::algo::engine::StepEngine;
-use crate::algo::schedule::{eta, BatchSchedule};
+use crate::algo::schedule::{eta, select_eta, BatchSchedule, StepMethod};
 use crate::comms::{GradCodec, MasterLink, WorkerLink};
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::messages::{DistDown, DistUp, LogEntry};
@@ -55,6 +55,14 @@ pub struct DistOptions {
     /// Uplink gradient codec — selects the `DistUp` wire variant; lossy
     /// codecs get per-worker error feedback on the gradient stream.
     pub uplink: GradCodec,
+    /// Stop once the master's own dual-gap estimate — computed from the
+    /// aggregated round gradient and its LMO — falls to `tol` (0
+    /// disables).  Unlike the async solvers this gap is exact for the
+    /// round's minibatch: no staleness, the barrier saw every share.
+    pub tol: f64,
+    /// Step-size policy; non-vanilla selects eta by probe-minibatch line
+    /// search on the master (away/pairwise rejected at spec validation).
+    pub step: StepMethod,
 }
 
 /// Master side of Algorithm 1.  `master_engine` supplies the LMO (worker
@@ -78,8 +86,11 @@ pub(crate) fn run_dist_master<L: MasterLink<DistUp, DistDown> + ?Sized>(
     let (d1, d2) = obj.dims();
     let theta = obj.theta();
     let workers = link.workers();
+    let n = obj.n();
     let mut x = Iterate::init_rank_one(opts.repr, d1, d2, theta, &mut Rng::new(opts.seed));
-    evaluator.submit(trace.elapsed(), 0, x.clone());
+    evaluator.submit(trace.elapsed(), 0, f64::NAN, x.clone());
+    let mut probe_rng = Rng::new(opts.seed ^ 0x9E37_79B9);
+    let mut probe_idx: Vec<usize> = Vec::new();
     let mut grad = Mat::zeros(d1, d2);
     // Factored mode: atoms accepted since the last broadcast (0 or 1 in
     // lockstep; more only after all-corrupt skipped rounds) and the
@@ -128,7 +139,7 @@ pub(crate) fn run_dist_master<L: MasterLink<DistUp, DistDown> + ?Sized>(
                     "sfw-dist: all workers lost mid-round {k}; aborting at t={}",
                     k - 1
                 );
-                evaluator.submit(trace.elapsed(), k - 1, x.clone());
+                evaluator.submit(trace.elapsed(), k - 1, f64::NAN, x.clone());
                 return x;
             };
             let w = up.worker_id as usize;
@@ -157,28 +168,46 @@ pub(crate) fn run_dist_master<L: MasterLink<DistUp, DistDown> + ?Sized>(
             }
         }
         grad.fill(0.0);
-        let mut contributed = false;
+        let mut contributed = 0usize;
         for g in replies.into_iter().flatten() {
             grad.axpy(1.0, &g);
-            contributed = true;
+            contributed += 1;
         }
         // every contribution corrupt (possible under fault injection):
         // an LMO on the zero matrix would hand back NaN vectors and
         // poison the iterate — skip the update, keep the round
-        if !contributed {
+        if contributed == 0 {
             eprintln!("sfw-dist: round {k} lost every gradient contribution; skipping update");
             counters.add_iteration();
             if k % opts.eval_every == 0 || k == opts.iterations {
-                evaluator.submit(trace.elapsed(), k, x.clone());
+                evaluator.submit(trace.elapsed(), k, f64::NAN, x.clone());
             }
             continue;
         }
         let s = master_engine.lmo(&grad);
         counters.add_lmo();
         counters.add_iteration();
+        // Exact-for-this-round dual gap: `grad` is the SUM gradient over
+        // the contributing workers' samples, so divide by their count.
+        let round_m = contributed * m_share as usize;
+        let gap = (x.inner_flat(&grad.data) + theta as f64 * s.sigma as f64)
+            / round_m.max(1) as f64;
+        let step_eta = if opts.step == StepMethod::Vanilla {
+            eta(k)
+        } else {
+            let pm = round_m.clamp(1, n);
+            probe_rng.sample_indices(n, pm, &mut probe_idx);
+            let loss0 = obj.loss_batch_it(&x, &probe_idx);
+            let slope0 = -(gap * pm as f64);
+            select_eta(opts.step, k, loss0, slope0, 1.0, &mut |e| {
+                let mut trial = x.clone();
+                trial.fw_rank_one_update(e, -theta, &s.u, &s.v);
+                obj.loss_batch_it(&trial, &probe_idx)
+            })
+        };
         let e = LogEntry {
             k: t_log + 1,
-            eta: eta(k),
+            eta: step_eta,
             scale: -theta,
             u: Arc::new(s.u),
             v: Arc::new(s.v),
@@ -188,8 +217,12 @@ pub(crate) fn run_dist_master<L: MasterLink<DistUp, DistDown> + ?Sized>(
             t_log += 1;
             pending.push(e);
         }
-        if k % opts.eval_every == 0 || k == opts.iterations {
-            evaluator.submit(trace.elapsed(), k, x.clone());
+        let stop = opts.tol > 0.0 && gap.is_finite() && gap <= opts.tol;
+        if stop || k % opts.eval_every == 0 || k == opts.iterations {
+            evaluator.submit(trace.elapsed(), k, gap, x.clone());
+        }
+        if stop {
+            break;
         }
     }
     for w in 0..workers {
@@ -335,6 +368,8 @@ mod tests {
             straggler: None,
             repr: Repr::Dense,
             uplink: GradCodec::F32,
+            tol: 0.0,
+            step: StepMethod::Vanilla,
         };
         let o2 = obj.clone();
         let r = harness::run_dist(obj, &opts, harness::TransportOpts::local(4), move |w| {
@@ -370,6 +405,8 @@ mod tests {
                 straggler: None,
                 repr,
                 uplink: GradCodec::F32,
+                tol: 0.0,
+                step: StepMethod::Vanilla,
             };
             let o2 = obj.clone();
             harness::run_dist(obj.clone(), &opts, harness::TransportOpts::local(2), move |w| {
@@ -417,6 +454,8 @@ mod tests {
                 straggler: None,
                 repr: Repr::Dense,
                 uplink,
+                tol: 0.0,
+                step: StepMethod::Vanilla,
             };
             let o2 = obj.clone();
             harness::run_dist(obj.clone(), &opts, harness::TransportOpts::local(2), move |w| {

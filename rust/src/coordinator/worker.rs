@@ -96,6 +96,7 @@ pub fn run_worker<L: WorkerLink<UpdateMsg, MasterMsg> + ?Sized, E: StepEngine + 
             out.sigma,
             out.loss_sum,
             m as u32,
+            out.gap,
         ));
         match link.recv() {
             Some(MasterMsg::Updates { entries, .. }) => {

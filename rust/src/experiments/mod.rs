@@ -55,9 +55,9 @@ mod tests {
     #[test]
     fn relative_normalizes_first_point_to_one() {
         let pts = vec![
-            TracePoint { t: 0.0, iteration: 0, loss: 2.0 },
-            TracePoint { t: 1.0, iteration: 10, loss: 1.0 },
-            TracePoint { t: 2.0, iteration: 20, loss: 0.5 },
+            TracePoint { t: 0.0, iteration: 0, loss: 2.0, gap: f64::NAN },
+            TracePoint { t: 1.0, iteration: 10, loss: 1.0, gap: f64::NAN },
+            TracePoint { t: 2.0, iteration: 20, loss: 0.5, gap: f64::NAN },
         ];
         let rel = relative(&pts, 0.5);
         assert!((rel[0].2 - 1.0).abs() < 1e-12);
@@ -68,9 +68,9 @@ mod tests {
     #[test]
     fn time_to_relative_finds_crossing() {
         let pts = vec![
-            TracePoint { t: 0.0, iteration: 0, loss: 1.0 },
-            TracePoint { t: 5.0, iteration: 10, loss: 0.1 },
-            TracePoint { t: 9.0, iteration: 20, loss: 0.01 },
+            TracePoint { t: 0.0, iteration: 0, loss: 1.0, gap: f64::NAN },
+            TracePoint { t: 5.0, iteration: 10, loss: 0.1, gap: f64::NAN },
+            TracePoint { t: 9.0, iteration: 20, loss: 0.01, gap: f64::NAN },
         ];
         assert_eq!(time_to_relative(&pts, 0.0, 0.05), Some(9.0));
         assert_eq!(time_to_relative(&pts, 0.0, 1e-9), None);

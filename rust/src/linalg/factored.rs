@@ -159,6 +159,20 @@ impl FactoredMat {
     /// hot paths stay on the factored form).
     pub fn to_dense(&self) -> Mat {
         let mut m = Mat::zeros(self.rows, self.cols);
+        self.write_dense_into(&mut m);
+        m
+    }
+
+    /// Materialize into a caller-owned buffer, resizing it only when the
+    /// shape changed — the allocation-free spelling of
+    /// [`FactoredMat::to_dense`] for engines that densify every step
+    /// (the default [`crate::algo::StepEngine::step_it`] path).
+    pub fn write_dense_into(&self, out: &mut Mat) {
+        if out.rows != self.rows || out.cols != self.cols {
+            *out = Mat::zeros(self.rows, self.cols);
+        } else {
+            out.fill(0.0);
+        }
         for ((&w, u), v) in self.w.iter().zip(&self.us).zip(&self.vs) {
             if w == 0.0 {
                 continue;
@@ -168,13 +182,65 @@ impl FactoredMat {
                 if c == 0.0 {
                     continue;
                 }
-                let row = m.row_mut(r);
+                let row = out.row_mut(r);
                 for (x, &vc) in row.iter_mut().zip(v.iter()) {
                     *x += c * vc;
                 }
             }
         }
-        m
+    }
+
+    /// Away step over the active set (Ding & Udell 1808.05274): with
+    /// atom `i` standing for the vertex `V_i = sign(w_i) theta u_i v_i^T`
+    /// at convex weight `alpha_i = |w_i| / theta`, move
+    /// `X <- (1 + eta) X - eta V_i` — all weights inflate by `(1 + eta)`
+    /// and atom `i` loses one `eta`-unit of vertex mass.  Feasibility is
+    /// the caller's clamp `eta <= alpha_i / (1 - alpha_i)`: under it the
+    /// total convex mass stays <= 1, so `nuclear_norm_bound() <= theta`
+    /// by construction.  An atom driven to (numerically) zero weight is
+    /// dropped from the active set outright — the boundary step.
+    pub fn away_update(&mut self, i: usize, eta: f32, theta: f32) {
+        debug_assert!(i < self.w.len());
+        debug_assert!(theta > 0.0);
+        let sign = if self.w[i] < 0.0 { -1.0 } else { 1.0 };
+        self.scale_weights(1.0 + eta);
+        self.w[i] -= eta * sign * theta;
+        if self.w[i].abs() <= 1e-6 * theta {
+            self.drop_atom(i);
+        }
+    }
+
+    /// Pairwise FW step: shift `eta` units of vertex mass from active
+    /// atom `i` directly onto the new LMO atom `scale * u v^T`
+    /// (`scale = -theta` over the nuclear ball), leaving every other
+    /// weight untouched.  Total convex mass is conserved, so feasibility
+    /// holds by construction under the caller's clamp
+    /// `eta <= alpha_i = |w_i| / |scale|`.  Atom `i` is dropped when the
+    /// step empties it.
+    pub fn pairwise_update(
+        &mut self,
+        i: usize,
+        eta: f32,
+        scale: f32,
+        u: Arc<Vec<f32>>,
+        v: Arc<Vec<f32>>,
+    ) {
+        debug_assert!(i < self.w.len());
+        debug_assert!(scale != 0.0);
+        let sign = if self.w[i] < 0.0 { -1.0 } else { 1.0 };
+        self.w[i] -= eta * sign * scale.abs();
+        if self.w[i].abs() <= 1e-6 * scale.abs() {
+            self.drop_atom(i);
+        }
+        self.push_atom(eta * scale, u, v);
+    }
+
+    /// Remove atom `i`, preserving the order of the survivors (the atom
+    /// list is small — O(cap) shift beats disturbing checkpoint order).
+    fn drop_atom(&mut self, i: usize) {
+        self.w.remove(i);
+        self.us.remove(i);
+        self.vs.remove(i);
     }
 
     /// `<mat(a), X>` for a row-major flattened `a` of length
@@ -416,6 +482,84 @@ mod tests {
             rebuilt.push_atom(w, u.clone(), v.clone());
         }
         assert!(frob_diff(&rebuilt.to_dense(), &d) < 1e-6);
+    }
+
+    #[test]
+    fn away_update_matches_dense_algebra_and_drops_at_boundary() {
+        let mut rng = Rng::new(317);
+        let theta = 1.0f32;
+        // two-atom convex combination: alpha = (0.6, 0.4)
+        let (u0, v0) = (Arc::new(rng.unit_vector(5)), Arc::new(rng.unit_vector(4)));
+        let (u1, v1) = (Arc::new(rng.unit_vector(5)), Arc::new(rng.unit_vector(4)));
+        let mut f = FactoredMat::zeros(5, 4);
+        f.push_atom(-0.6 * theta, u0.clone(), v0.clone());
+        f.push_atom(-0.4 * theta, u1.clone(), v1.clone());
+        let dense0 = f.to_dense();
+        // away step on atom 1 (alpha = 0.4): X <- (1+eta)X - eta*V_1
+        let eta = 0.25f32;
+        let mut want = dense0.clone();
+        want.scale(1.0 + eta);
+        for i in 0..5 {
+            for j in 0..4 {
+                // V_1 = sign(w_1) * theta * u1 v1^T = -theta u1 v1^T
+                *want.at_mut(i, j) -= eta * (-theta) * u1[i] * v1[j];
+            }
+        }
+        f.away_update(1, eta, theta);
+        assert!(frob_diff(&f.to_dense(), &want) < 1e-5 * (1.0 + want.frob_norm()));
+        // feasibility by construction: eta <= alpha/(1-alpha) keeps the
+        // convex mass, and hence the nuclear bound, inside theta
+        assert!(f.nuclear_norm_bound() <= theta as f64 + 1e-5);
+        // the boundary step alpha/(1-alpha) empties and drops the atom
+        let mut g = FactoredMat::zeros(5, 4);
+        g.push_atom(-0.7 * theta, u0.clone(), v0.clone());
+        g.push_atom(-0.3 * theta, u1.clone(), v1.clone());
+        let eta_max = 0.3 / (1.0 - 0.3);
+        g.away_update(1, eta_max, theta);
+        assert_eq!(g.atoms(), 1, "boundary away step must drop the atom");
+        assert!(g.nuclear_norm_bound() <= theta as f64 + 1e-5);
+    }
+
+    #[test]
+    fn pairwise_update_conserves_mass_and_matches_dense() {
+        let mut rng = Rng::new(318);
+        let theta = 1.0f32;
+        let (u0, v0) = (Arc::new(rng.unit_vector(5)), Arc::new(rng.unit_vector(4)));
+        let (u1, v1) = (Arc::new(rng.unit_vector(5)), Arc::new(rng.unit_vector(4)));
+        let (us, vs) = (Arc::new(rng.unit_vector(5)), Arc::new(rng.unit_vector(4)));
+        let mut f = FactoredMat::zeros(5, 4);
+        f.push_atom(-0.5 * theta, u0, v0);
+        f.push_atom(-0.5 * theta, u1.clone(), v1.clone());
+        let dense0 = f.to_dense();
+        let eta = 0.2f32;
+        let mut want = dense0.clone();
+        for i in 0..5 {
+            for j in 0..4 {
+                // d = S - V_1 with S = -theta us vs^T, V_1 = -theta u1 v1^T
+                *want.at_mut(i, j) +=
+                    eta * theta * (-us[i] * vs[j] + u1[i] * v1[j]);
+            }
+        }
+        f.pairwise_update(1, eta, -theta, us.clone(), vs.clone());
+        assert!(frob_diff(&f.to_dense(), &want) < 1e-5 * (1.0 + want.frob_norm()));
+        // mass conserved: bound stays at theta
+        assert!((f.nuclear_norm_bound() - theta as f64).abs() < 1e-5);
+        // emptying step drops the source atom but keeps the new one
+        let atoms_before = f.atoms();
+        f.pairwise_update(1, 0.3, -theta, us, vs);
+        assert_eq!(f.atoms(), atoms_before, "drop + push nets to the same count");
+    }
+
+    #[test]
+    fn write_dense_into_reuses_buffer() {
+        let mut rng = Rng::new(319);
+        let f = random_factored(&mut rng, 6, 4, 5);
+        let mut buf = Mat::zeros(0, 0);
+        f.write_dense_into(&mut buf);
+        assert!(frob_diff(&buf, &f.to_dense()) < 1e-6);
+        // stale contents are overwritten, not accumulated
+        f.write_dense_into(&mut buf);
+        assert!(frob_diff(&buf, &f.to_dense()) < 1e-6);
     }
 
     #[test]

@@ -162,6 +162,33 @@ impl Iterate {
             Iterate::Factored(f) => f.peak_atoms(),
         }
     }
+
+    /// Mutable access to the factored atom list (None for dense
+    /// iterates) — the away/pairwise step path mutates the active set
+    /// through this.
+    pub fn factored_mut(&mut self) -> Option<&mut FactoredMat> {
+        match self {
+            Iterate::Dense(_) => None,
+            Iterate::Factored(f) => Some(f),
+        }
+    }
+
+    /// `<mat(g), X>` against a row-major flattened gradient buffer of
+    /// length `d1 * d2` — the `<grad, X>` half of the FW dual gap,
+    /// computed without materializing a dense X on the factored path.
+    pub fn inner_flat(&self, g: &[f32]) -> f64 {
+        match self {
+            Iterate::Dense(m) => {
+                debug_assert_eq!(g.len(), m.data.len());
+                m.data
+                    .iter()
+                    .zip(g.iter())
+                    .map(|(a, b)| *a as f64 * *b as f64)
+                    .sum()
+            }
+            Iterate::Factored(f) => f.inner_flat(g) as f64,
+        }
+    }
 }
 
 /// Reporting-path rank of a dense iterate: the numerical rank where the

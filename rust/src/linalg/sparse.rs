@@ -51,6 +51,17 @@ impl CooMat {
         self.vals.len()
     }
 
+    /// Iterate the stored `(i, j, v)` triples — O(nnz) inner products
+    /// (e.g. `<grad, X>` of the FW dual gap against an entry oracle)
+    /// without densifying.
+    pub fn triples(&self) -> impl Iterator<Item = (usize, usize, f32)> + '_ {
+        self.row_idx
+            .iter()
+            .zip(&self.col_idx)
+            .zip(&self.vals)
+            .map(|((&i, &j), &v)| (i as usize, j as usize, v))
+    }
+
     /// Dense materialization (tests / small dims only).
     pub fn to_dense(&self) -> Mat {
         let mut m = Mat::zeros(self.rows, self.cols);

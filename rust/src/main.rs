@@ -20,8 +20,11 @@
 //!             checkpoint written by `sfw train --checkpoint` — scores
 //!             straight off the atom list, O(atoms * cols) per user, no
 //!             dense X; `--user U` for one query or `--queries FILE`
-//!             (one user id per line) for a batch, then a
-//!             request/latency report.
+//!             (one user id per line) for a batch — bad ids are
+//!             reported and counted, never fatal to the batch — then a
+//!             request/latency/error report.  `--exclude-seen` (with
+//!             the training run's --rec-*/--seed flags) drops each
+//!             user's already-observed columns from their top-k.
 //!   simulate  queuing-model simulation (Appendix D)
 //!   info      show the artifact manifest and PJRT platform
 //!   lint      repo-native static analysis (panic-freedom, SAFETY
@@ -93,11 +96,12 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn print_result(report: &Report) {
-    println!("\n#  t(s)      iter   loss          rel");
+    println!("\n#  t(s)      iter   loss          rel         gap");
     let pts = report.points();
     let rel = report.relative();
     for (p, (_, _, r)) in pts.iter().zip(rel.iter()) {
-        println!("  {:<9.3} {:<6} {:<13.6e} {:.4e}", p.t, p.iteration, p.loss, r);
+        let gap = if p.gap.is_finite() { format!("{:.4e}", p.gap) } else { "—".into() };
+        println!("  {:<9.3} {:<6} {:<13.6e} {:<11.4e} {gap}", p.t, p.iteration, p.loss, r);
     }
     let s = report.snapshot();
     println!(
@@ -193,7 +197,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         model.cols,
         model.atoms()
     );
+    let stats = sfw::metrics::ServeStats::new();
     let users: Vec<usize> = if let Some(user) = args.get_opt("user") {
+        // a single explicit --user query has nothing to continue past:
+        // a bad value is still a hard error
         vec![user
             .parse()
             .map_err(|_| anyhow::anyhow!("sfw serve: --user must be a row index"))?]
@@ -206,29 +213,84 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
-            users.push(line.parse().map_err(|_| {
-                anyhow::anyhow!("sfw serve: {qfile}:{}: bad user id '{line}'", lineno + 1)
-            })?);
+            // a malformed line must not abort the rest of the batch
+            match line.parse() {
+                Ok(u) => users.push(u),
+                Err(_) => {
+                    stats.record_error();
+                    eprintln!("{qfile}:{}: bad user id '{line}' (skipped)", lineno + 1);
+                }
+            }
         }
         users
     } else {
         anyhow::bail!("sfw serve: give --user <row> or --queries <file>");
     };
-    let stats = sfw::metrics::ServeStats::new();
+    // --exclude-seen drops the columns a user already interacted with
+    // from their top-k.  The observation mask is a pure function of the
+    // rec-* params + --seed, so serving regenerates it from the same
+    // flags the training run used (the checkpoint stores only atoms).
+    let seen: Option<sfw::data::RecommenderData> = if args.get_bool("exclude-seen") {
+        let file = load_config_file(args)?;
+        let cfg = TrainConfig::resolve(file, args)?;
+        let spec = TrainSpec::from_config(&cfg)?;
+        match &spec.task {
+            sfw::session::TaskSpec::SparseCompletion(p) => {
+                let data = sfw::data::RecommenderData::generate(
+                    p,
+                    &mut sfw::util::rng::Rng::new(spec.seed),
+                );
+                if (data.rows, data.cols) != (model.rows, model.cols) {
+                    anyhow::bail!(
+                        "sfw serve: --exclude-seen mask is {}x{} but the model is {}x{} \
+                         (pass the same --rec-* / --seed flags the training run used)",
+                        data.rows,
+                        data.cols,
+                        model.rows,
+                        model.cols
+                    );
+                }
+                Some(data)
+            }
+            _ => anyhow::bail!(
+                "sfw serve: --exclude-seen needs the training task: add \
+                 --task sparse_completion plus the --rec-* / --seed flags used to train"
+            ),
+        }
+    } else {
+        None
+    };
     let mut scores = Vec::new();
     for &user in &users {
         let t0 = std::time::Instant::now();
-        sfw::model::user_scores(&model, user, &mut scores)?;
-        let top = sfw::model::top_k(&scores, topk);
-        stats.record(t0.elapsed());
-        let rendered: Vec<String> =
-            top.iter().map(|(j, s)| format!("{j}:{s:.4}")).collect();
-        println!("user {user:<8} top{topk}: {}", rendered.join(" "));
+        // One bad id (out-of-range row, typo in the queries file) must
+        // not abort the rest of the batch: report it, count it, move on.
+        match sfw::model::user_scores(&model, user, &mut scores) {
+            Ok(()) => {
+                let top = match &seen {
+                    Some(data) => {
+                        let cols = data.observed_cols(user);
+                        sfw::model::top_k_excluding(&scores, topk, |j| {
+                            cols.binary_search(&(j as u32)).is_ok()
+                        })
+                    }
+                    None => sfw::model::top_k(&scores, topk),
+                };
+                stats.record(t0.elapsed());
+                let rendered: Vec<String> =
+                    top.iter().map(|(j, s)| format!("{j}:{s:.4}")).collect();
+                println!("user {user:<8} top{topk}: {}", rendered.join(" "));
+            }
+            Err(e) => {
+                stats.record_error();
+                eprintln!("user {user:<8} error: {e}");
+            }
+        }
     }
     let s = stats.snapshot();
     println!(
-        "\nserve: requests={} mean={:.1}us max={:.1}us",
-        s.requests, s.mean_us, s.max_us
+        "\nserve: requests={} errors={} mean={:.1}us max={:.1}us",
+        s.requests, s.errors, s.mean_us, s.max_us
     );
     Ok(())
 }
@@ -310,6 +372,11 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         // rank/atom counts and atom-scale uplink bytes on them.
         let sparse = SweepRunner::new().run(&SweepSpec::smoke_sparse())?;
         result.cells.extend(sparse.cells);
+        // And the dual-gap cells (serial sfw, tol in {0, 1e3});
+        // check_smoke_bytes.py asserts a finite net-decreasing gap
+        // column on the tol=0 cell and an early gap-stop on the other.
+        let gap = SweepRunner::new().run(&SweepSpec::smoke_gap())?;
+        result.cells.extend(gap.cells);
     }
     result.table().print();
     let out_dir = args.get_str("out-dir", "bench_out");

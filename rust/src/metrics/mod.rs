@@ -109,6 +109,9 @@ pub struct ServeStats {
     pub requests: AtomicU64,
     pub total_ns: AtomicU64,
     pub max_ns: AtomicU64,
+    /// Queries that failed (bad user id, score error) — counted, not
+    /// fatal: a batch keeps serving past individual failures.
+    pub errors: AtomicU64,
 }
 
 impl ServeStats {
@@ -124,6 +127,11 @@ impl ServeStats {
         self.max_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
+    /// Charge one failed query.
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> ServeSnapshot {
         let requests = self.requests.load(Ordering::Relaxed);
         let total_ns = self.total_ns.load(Ordering::Relaxed);
@@ -135,6 +143,7 @@ impl ServeStats {
                 total_ns as f64 / requests as f64 / 1_000.0
             },
             max_us: self.max_ns.load(Ordering::Relaxed) as f64 / 1_000.0,
+            errors: self.errors.load(Ordering::Relaxed),
         }
     }
 }
@@ -144,15 +153,20 @@ pub struct ServeSnapshot {
     pub requests: u64,
     pub mean_us: f64,
     pub max_us: f64,
+    pub errors: u64,
 }
 
-/// One point of a convergence curve: (time, master iteration, loss).
+/// One point of a convergence curve: (time, master iteration, loss, gap).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TracePoint {
     /// Seconds since trace start (wall clock) OR simulated time units.
     pub t: f64,
     pub iteration: u64,
     pub loss: f64,
+    /// Minibatch FW dual-gap estimate at this iterate (NaN when the
+    /// recording path has no gap in hand — e.g. the k=0 init point or
+    /// solvers without an LMO-bearing step).
+    pub gap: f64,
 }
 
 /// Thread-safe, time-stamped loss trace.
@@ -178,19 +192,41 @@ impl LossTrace {
         self.start.elapsed().as_secs_f64()
     }
 
-    /// Record with wall-clock timestamp.
+    /// Record with wall-clock timestamp (no gap in hand).
     pub fn record(&self, iteration: u64, loss: f64) {
+        self.record_gap(iteration, loss, f64::NAN);
+    }
+
+    /// Record with wall-clock timestamp and a dual-gap estimate.
+    pub fn record_gap(&self, iteration: u64, loss: f64, gap: f64) {
         let t = self.start.elapsed().as_secs_f64();
-        self.points.lock().unwrap().push(TracePoint { t, iteration, loss });
+        self.points.lock().unwrap().push(TracePoint { t, iteration, loss, gap });
     }
 
     /// Record with an explicit (e.g. simulated) timestamp.
     pub fn record_at(&self, t: f64, iteration: u64, loss: f64) {
-        self.points.lock().unwrap().push(TracePoint { t, iteration, loss });
+        self.record_at_gap(t, iteration, loss, f64::NAN);
+    }
+
+    /// Record with explicit timestamp and a dual-gap estimate.
+    pub fn record_at_gap(&self, t: f64, iteration: u64, loss: f64, gap: f64) {
+        self.points.lock().unwrap().push(TracePoint { t, iteration, loss, gap });
     }
 
     pub fn points(&self) -> Vec<TracePoint> {
         self.points.lock().unwrap().clone()
+    }
+
+    /// Last recorded finite gap (the stopping-quantity readout); None if
+    /// no point carries one.
+    pub fn final_gap(&self) -> Option<f64> {
+        self.points
+            .lock()
+            .unwrap()
+            .iter()
+            .rev()
+            .find(|p| p.gap.is_finite())
+            .map(|p| p.gap)
     }
 
     /// First time at which the loss reaches `target` (for Fig 5/7 speedups).
@@ -259,5 +295,29 @@ mod tests {
         assert_eq!(t.time_to_target(0.1), Some(2.0));
         assert_eq!(t.time_to_target(0.01), None);
         assert_eq!(t.points().len(), 3);
+    }
+
+    #[test]
+    fn trace_final_gap_skips_gapless_points() {
+        let t = LossTrace::new();
+        assert_eq!(t.final_gap(), None);
+        t.record_at(0.0, 0, 1.0); // init point, no gap
+        assert_eq!(t.final_gap(), None);
+        t.record_at_gap(1.0, 1, 0.5, 0.8);
+        t.record_at_gap(2.0, 2, 0.2, 0.3);
+        t.record_at(3.0, 3, 0.1); // gapless tail point
+        assert_eq!(t.final_gap(), Some(0.3));
+        assert!(t.points()[0].gap.is_nan());
+    }
+
+    #[test]
+    fn serve_stats_count_errors() {
+        let s = ServeStats::new();
+        s.record(std::time::Duration::from_micros(5));
+        s.record_error();
+        s.record_error();
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 1);
+        assert_eq!(snap.errors, 2);
     }
 }

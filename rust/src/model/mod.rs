@@ -149,11 +149,30 @@ pub fn user_scores(model: &FactoredMat, user: usize, out: &mut Vec<f32>) -> Resu
 }
 
 /// Indices of the `k` largest scores, descending; ties break toward the
-/// lower item index so results are deterministic.
+/// lower item index so results are deterministic.  Non-finite scores
+/// sort below every finite score — a NaN in the score vector must never
+/// outrank a real prediction (the old `unwrap_or(Equal)` comparator let
+/// a NaN's index order carry it into the top-k).
 pub fn top_k(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
-    let mut order: Vec<usize> = (0..scores.len()).collect();
+    top_k_excluding(scores, k, |_| false)
+}
+
+/// [`top_k`] over the scores whose index is NOT excluded — serving's
+/// `--exclude-seen` (drop the columns the user already interacted with)
+/// without allocating a masked copy of the score vector.
+pub fn top_k_excluding(
+    scores: &[f32],
+    k: usize,
+    mut exclude: impl FnMut(usize) -> bool,
+) -> Vec<(usize, f32)> {
+    let mut order: Vec<usize> = (0..scores.len()).filter(|&i| !exclude(i)).collect();
     order.sort_unstable_by(|&a, &b| {
-        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        let (fa, fb) = (scores[a].is_finite(), scores[b].is_finite());
+        fb.cmp(&fa) // finite beats non-finite
+            .then_with(|| {
+                scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .then(a.cmp(&b))
     });
     order.truncate(k);
     order.into_iter().map(|i| (i, scores[i])).collect()
@@ -219,6 +238,24 @@ mod tests {
         assert_eq!(got.iter().map(|x| x.0).collect::<Vec<_>>(), vec![1, 3, 0]);
         assert_eq!(top_k(&scores, 0).len(), 0);
         assert_eq!(top_k(&scores, 99).len(), 5);
+    }
+
+    #[test]
+    fn top_k_sinks_non_finite_scores() {
+        // NaN (idx 0) and +inf (idx 2) must rank below every finite
+        // score; among themselves they fall back to index order.
+        let scores = [f32::NAN, 1.0, f32::INFINITY, -2.0];
+        let got = top_k(&scores, 4);
+        assert_eq!(got.iter().map(|x| x.0).collect::<Vec<_>>(), vec![1, 3, 0, 2]);
+        // and a NaN never squeezes a finite score out of a short top-k
+        assert_eq!(top_k(&scores, 2).iter().map(|x| x.0).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn top_k_excluding_skips_indices() {
+        let scores = [0.5f32, 2.0, -1.0, 2.0, 0.0];
+        let got = top_k_excluding(&scores, 3, |i| i == 1 || i == 4);
+        assert_eq!(got.iter().map(|x| x.0).collect::<Vec<_>>(), vec![3, 0, 2]);
     }
 
     #[test]

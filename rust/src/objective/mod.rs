@@ -71,6 +71,16 @@ pub trait Objective: Send + Sync {
             Iterate::Factored(f) => self.loss_full_factored(f),
         }
     }
+    /// SUM loss over the sampled components only — the phi(eta) oracle
+    /// line-search step policies evaluate at trial iterates.  The default
+    /// rides the gradient path and throws the gradient away; workloads
+    /// override with a gradient-free pass (same residual/forward-pass
+    /// loop, none of the accumulator work).
+    fn loss_batch_it(&self, x: &Iterate, idx: &[usize]) -> f64 {
+        let (d1, d2) = self.dims();
+        let mut sink = Mat::zeros(d1, d2);
+        self.grad_sum_it(x, idx, &mut sink)
+    }
     /// Sparse fused-step support: when the minibatch SUM-gradient is
     /// nonzero only at O(|idx|) coordinates, return it as COO triples
     /// plus the batch SUM loss and the engine runs the power-iteration
@@ -223,6 +233,21 @@ impl Objective for MatrixSensing {
         acc / self.data.n as f64
     }
 
+    /// Gradient-free batch loss: one residual per sample, no `g`
+    /// accumulation — the cheap phi oracle for line searches.
+    fn loss_batch_it(&self, x: &Iterate, idx: &[usize]) -> f64 {
+        let mut loss = 0.0f64;
+        for &i in idx {
+            let row = self.data.af.row(i);
+            let r = match x {
+                Iterate::Dense(m) => crate::linalg::dot(row, &m.data) - self.data.y[i],
+                Iterate::Factored(f) => f.inner_flat(row) - self.data.y[i],
+            };
+            loss += (r as f64).powi(2);
+        }
+        loss
+    }
+
     fn f_star_hint(&self) -> f64 {
         self.data.f_star_hint
     }
@@ -340,6 +365,21 @@ impl Objective for Pnn {
         acc / self.data.n as f64
     }
 
+    /// Gradient-free batch loss: the forward pass alone, skipping the
+    /// O(d^2) `g a a^T` accumulation entirely.
+    fn loss_batch_it(&self, x: &Iterate, idx: &[usize]) -> f64 {
+        let d = self.data.d;
+        let mut w = vec![0.0f32; d];
+        let mut loss = 0.0f64;
+        for &i in idx {
+            let a = self.data.a.row(i);
+            x.apply(a, &mut w);
+            let z = crate::linalg::dot(a, &w);
+            loss += PnnData::smooth_hinge(self.data.y[i] * z) as f64;
+        }
+        loss
+    }
+
     fn name(&self) -> &'static str {
         "pnn"
     }
@@ -445,6 +485,17 @@ impl Objective for SparseCompletion {
             g.push(i, j, 2.0 * r);
         }
         Some((g, loss))
+    }
+
+    /// Gradient-free batch loss: residuals through the entry oracle, no
+    /// COO build and no dense scatter.
+    fn loss_batch_it(&self, x: &Iterate, idx: &[usize]) -> f64 {
+        let mut loss = 0.0f64;
+        for &t in idx {
+            let (_, _, r) = self.residual_it(x, t);
+            loss += (r as f64).powi(2);
+        }
+        loss
     }
 
     fn f_star_hint(&self) -> f64 {
@@ -633,5 +684,44 @@ mod tests {
         let mut g = Mat::zeros(4, 4);
         let loss_sum = obj.grad_sum(&x, &idx, &mut g);
         assert!((loss_sum / 100.0 - obj.loss_full(&x)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loss_batch_it_matches_grad_sum_loss_on_every_objective() {
+        use crate::data::recommender::{RecParams, RecommenderData};
+        use crate::linalg::FactoredMat;
+        use std::sync::Arc as StdArc;
+        let mut rng = Rng::new(37);
+        let ms_p = MsParams { d1: 6, d2: 5, rank: 2, n: 250, noise_std: 0.1 };
+        let ms = MatrixSensing::new(MatrixSensingData::generate(&ms_p, &mut rng), 1.0);
+        let pnn_p = PnnParams { d: 6, n: 250, teacher_rank: 2, mixture_components: 3 };
+        let pnn = Pnn::new(PnnData::generate(&pnn_p, &mut rng), 1.0);
+        let rec_p =
+            RecParams { rows: 18, cols: 10, rank: 2, density: 0.25, ..RecParams::default() };
+        let sc = SparseCompletion::new(RecommenderData::generate(&rec_p, &mut rng), 1.0);
+        let objs: [&dyn Objective; 3] = [&ms, &pnn, &sc];
+        for obj in objs {
+            let (d1, d2) = obj.dims();
+            let mut f = FactoredMat::zeros(d1, d2);
+            for _ in 0..4 {
+                f.push_atom(
+                    0.3 * rng.normal_f32(),
+                    StdArc::new(rng.unit_vector(d1)),
+                    StdArc::new(rng.unit_vector(d2)),
+                );
+            }
+            let idx: Vec<usize> = (0..40).map(|_| rng.next_below(obj.n())).collect();
+            for x in [Iterate::Dense(f.to_dense()), Iterate::Factored(f.clone())] {
+                let mut sink = Mat::zeros(d1, d2);
+                let want = obj.grad_sum_it(&x, &idx, &mut sink);
+                let got = obj.loss_batch_it(&x, &idx);
+                assert!(
+                    (got - want).abs() < 1e-4 * (1.0 + want.abs()),
+                    "{} ({:?}): batch loss {got} vs grad-path {want}",
+                    obj.name(),
+                    x.repr()
+                );
+            }
+        }
     }
 }

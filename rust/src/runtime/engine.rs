@@ -86,6 +86,11 @@ pub struct PjrtEngine {
     resident: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
     use_resident: bool,
     idx_buf: Vec<i32>,
+    /// Dense render buffer for the `step_it`/`grad_sum_it` fallbacks
+    /// (the AOT artifacts take dense inputs, so a factored run densifies
+    /// EVERY step) — cached here so the per-step O(d1 * d2) allocation
+    /// happens once, not per iteration.
+    dense_scratch: Mat,
 }
 
 // SAFETY: PJRT buffers/executables are thread-safe per the PJRT C API
@@ -109,6 +114,7 @@ impl PjrtEngine {
             resident: None,
             use_resident: true,
             idx_buf: Vec::new(),
+            dense_scratch: Mat::zeros(0, 0),
         }
     }
 
@@ -183,6 +189,12 @@ impl PjrtEngine {
             sigma: out[2][0],
             loss_sum: out[3][0] as f64,
             m: idx.len(),
+            // The AOT artifacts return (u, v, sigma, loss) only — no
+            // <G, X> comes back, so there is no gap estimate.  NaN means
+            // exactly that to every consumer: --tol never fires (the
+            // stop guards on is_finite) and the step policies fall back
+            // to their gradient-free fits.
+            gap: f64::NAN,
         })
     }
 
@@ -252,6 +264,7 @@ impl StepEngine for PjrtEngine {
             sigma: out[2][0],
             loss_sum: out[3][0] as f64,
             m: idx.len(),
+            gap: f64::NAN, // see step_resident: the artifacts ship no <G, X>
         }
     }
 
@@ -291,6 +304,17 @@ impl StepEngine for PjrtEngine {
 
     fn objective(&self) -> &Arc<dyn Objective> {
         &self.obj
+    }
+
+    // Cached dense render buffer: factored runs hit the `step_it`
+    // fallback every iteration (the artifacts take dense inputs), and
+    // without this pair each one would allocate a fresh d1 x d2 matrix.
+    fn take_dense_scratch(&mut self) -> Mat {
+        std::mem::replace(&mut self.dense_scratch, Mat::zeros(0, 0))
+    }
+
+    fn put_dense_scratch(&mut self, scratch: Mat) {
+        self.dense_scratch = scratch;
     }
 }
 

@@ -221,6 +221,8 @@ where
         eval_every: opts.eval_every,
         seed: opts.seed,
         repr: opts.repr,
+        tol: opts.tol,
+        step: opts.step,
     };
     let x = run_over(
         t,

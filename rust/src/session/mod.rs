@@ -102,6 +102,31 @@
 //! codecs at spec validation.  See [`crate::comms`] for the wire
 //! contract.
 //!
+//! # Gap stopping and step policies (`--tol`, `--step`)
+//!
+//! Every registry solver tracks the Frank-Wolfe dual gap
+//! `g_k = <grad f(X_k), X_k - s_k>` (a certified upper bound on
+//! `f(X_k) - f*` for convex objectives — see [`crate::algo`]) and stops
+//! early once it falls to `--tol`:
+//!
+//! ```text
+//! sfw train --task matrix_sensing --algo sfw --tol 1e-3
+//! sfw train --task matrix_sensing --algo sfw --step line-search
+//! sfw train --task matrix_sensing --algo sfw --repr factored --step away
+//! ```
+//!
+//! or `TrainSpec::tol(1e-3)` / `TrainSpec::step(StepMethod::LineSearch)`
+//! from code.  The gap rides the trace (`Report::final_gap`, the sweep
+//! `gap` column) and, for the async solvers, the worker uplink — the
+//! master stops on a boundedly-stale minibatch gap.  `--step` picks the
+//! step-size rule from [`crate::algo::schedule`]: `vanilla` (the
+//! 2/(k+2) default), `analytic`/`line-search`/`armijo` (minibatch line
+//! searches, valid on sfw | sfw-asyn | svrf-asyn | sfw-dist), and
+//! `away`/`pairwise` (serial `--algo sfw --repr factored` only — the
+//! active-set steps need the atom list).  Solvers with a fixed update
+//! rule (pgd, sva, dfw-power) reject non-vanilla policies at spec
+//! validation but still honor `--tol`.
+//!
 //! # Train → checkpoint → serve quickstart (sparse completion)
 //!
 //! The `sparse_completion` task trains on the synthetic recommender
@@ -139,7 +164,7 @@ pub use registry::{registry, Registry, Solver};
 pub use spec::TrainSpec;
 
 // Re-exported so spec construction needs only `use sfw::session::*`.
-pub use crate::algo::schedule::BatchSchedule;
+pub use crate::algo::schedule::{BatchSchedule, StepMethod};
 pub use crate::chaos::{ChaosSnapshot, FaultPlan};
 pub use crate::comms::GradCodec;
 pub use crate::coordinator::worker::Straggler;
@@ -374,5 +399,12 @@ impl Report {
     /// Raw loss of the last trace point.
     pub fn final_loss(&self) -> f64 {
         self.trace.points().last().map(|p| p.loss).unwrap_or(f64::NAN)
+    }
+
+    /// Last recorded finite dual-gap estimate — the quantity `--tol`
+    /// stops on.  `None` when no trace point carries one (gap-less
+    /// solver, or the run never reached a gap-bearing snapshot).
+    pub fn final_gap(&self) -> Option<f64> {
+        self.trace.final_gap()
     }
 }

@@ -49,6 +49,8 @@ impl Solver for SfwSolver {
             eval_every: spec.eval_every,
             seed: spec.seed,
             repr: spec.resolved_repr(),
+            tol: spec.tol,
+            step: spec.step,
         };
         let x = run_sfw(engine.as_mut(), &opts, &counters, &trace);
         ctx.report_it(x, counters, trace)
@@ -71,6 +73,8 @@ impl AsynSolver {
             straggler: spec.straggler,
             repr: spec.resolved_repr(),
             uplink: spec.uplink,
+            tol: spec.tol,
+            step: spec.step,
         }
     }
 }
@@ -135,6 +139,8 @@ impl SvrfAsynSolver {
             seed: spec.seed,
             repr: spec.resolved_repr(),
             uplink: spec.uplink,
+            tol: spec.tol,
+            step: spec.step,
         }
     }
 }
@@ -200,6 +206,8 @@ impl DistSolver {
             straggler: spec.straggler,
             repr: spec.resolved_repr(),
             uplink: spec.uplink,
+            tol: spec.tol,
+            step: spec.step,
         }
     }
 }
@@ -264,6 +272,7 @@ impl Solver for SvaSolver {
             eval_every: spec.eval_every,
             seed: spec.seed,
             repr: spec.resolved_repr(),
+            tol: spec.tol,
         };
         let r = run_sva_impl(ctx.obj.clone(), &opts, |w| ctx.make_engine(w));
         let mut report = ctx.report(r.x, r.counters, r.trace);
@@ -291,6 +300,7 @@ impl Solver for DfwPowerSolver {
             eval_every: spec.eval_every,
             seed: spec.seed,
             repr: spec.resolved_repr(),
+            tol: spec.tol,
         };
         let r = run_dfw_power_impl(ctx.obj.clone(), &opts);
         let mut report = ctx.report(r.x, r.counters, r.trace);
@@ -320,6 +330,7 @@ impl Solver for PgdSolver {
             eval_every: spec.eval_every,
             seed: spec.seed,
             repr: spec.resolved_repr(),
+            tol: spec.tol,
         };
         let x = run_pgd(engine.as_mut(), &opts, &counters, &trace);
         ctx.report_it(x, counters, trace)

@@ -9,7 +9,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::algo::schedule::BatchSchedule;
+use crate::algo::schedule::{BatchSchedule, StepMethod};
 use crate::chaos::FaultPlan;
 use crate::comms::GradCodec;
 use crate::config::TrainConfig;
@@ -81,6 +81,19 @@ pub struct TrainSpec {
     /// DFW-power rounds at FW iteration t: `base + slope * t`.
     pub dfw_rounds_base: u64,
     pub dfw_rounds_slope: f64,
+    /// Dual-gap stopping tolerance: the run ends early once the solver's
+    /// per-iteration FW dual-gap estimate `g_k = <grad f(X_k), X_k - s_k>`
+    /// falls to this value (0 disables, the default).  Honored by every
+    /// registry solver; the async masters stop on the uplinked worker
+    /// gap (stale by at most tau), PGD pays one extra power iteration
+    /// per step to estimate it.
+    pub tol: f64,
+    /// Step-size policy (`vanilla | analytic | line-search | armijo |
+    /// away | pairwise`).  `away`/`pairwise` maintain an active atom set
+    /// and require `--algo sfw` with a factored iterate; the others work
+    /// on every solver (distributed masters run a probe-minibatch line
+    /// search).
+    pub step: StepMethod,
 }
 
 impl TrainSpec {
@@ -113,6 +126,8 @@ impl TrainSpec {
             fault_plan: None,
             dfw_rounds_base: 1,
             dfw_rounds_slope: 0.5,
+            tol: 0.0,
+            step: StepMethod::Vanilla,
         }
     }
 
@@ -235,6 +250,16 @@ impl TrainSpec {
         self.dfw_rounds_slope = slope;
         self
     }
+    /// Stop once the dual-gap estimate falls to `tol` (0 disables).
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+    /// Step-size policy (see [`StepMethod`]).
+    pub fn step(mut self, s: StepMethod) -> Self {
+        self.step = s;
+        self
+    }
 
     /// Generate the task's dataset now and pin it as
     /// [`TaskSpec::Prebuilt`], so clones of this spec (sweep cells,
@@ -302,6 +327,12 @@ impl TrainSpec {
         if self.uplink != GradCodec::F32 {
             echo.push_str(&format!(" uplink={}", self.uplink.label()));
         }
+        if self.step != StepMethod::Vanilla {
+            echo.push_str(&format!(" step={}", self.step.label()));
+        }
+        if self.tol > 0.0 {
+            echo.push_str(&format!(" tol={}", self.tol));
+        }
         if let Some(plan) = &self.fault_plan {
             echo.push_str(&format!(" chaos={}@{}", plan.name, plan.seed));
         }
@@ -318,6 +349,43 @@ impl TrainSpec {
         }
         if self.eval_every == 0 {
             return Err(SessionError::InvalidSpec("eval-every must be >= 1".into()));
+        }
+        if !self.tol.is_finite() || self.tol < 0.0 {
+            return Err(SessionError::InvalidSpec(format!(
+                "tol must be a finite value >= 0 (got {})",
+                self.tol
+            )));
+        }
+        // Away/pairwise steps drop and rescale existing atoms — they need
+        // the serial solver's persistent factored active set.  The masters
+        // only ever see one atom at a time, and a dense iterate has no
+        // atom list to shrink.
+        if self.step.needs_active_set() {
+            if self.algo != "sfw" {
+                return Err(SessionError::InvalidSpec(format!(
+                    "step '{}' maintains an active atom set and only runs on --algo sfw (got '{}')",
+                    self.step.label(),
+                    self.algo
+                )));
+            }
+            if self.resolved_repr() != Repr::Factored {
+                return Err(SessionError::InvalidSpec(format!(
+                    "step '{}' needs the factored iterate's atom set; add --repr factored",
+                    self.step.label()
+                )));
+            }
+        }
+        // A step policy silently ignored would misreport the run (same
+        // principle as the compressed-uplink gate below): the baselines
+        // with fixed update rules reject non-vanilla policies outright.
+        if self.step != StepMethod::Vanilla
+            && matches!(self.algo.as_str(), "pgd" | "sva" | "dfw-power")
+        {
+            return Err(SessionError::InvalidSpec(format!(
+                "algorithm '{}' has a fixed update rule; --step applies to: \
+                 sfw | sfw-asyn | svrf-asyn | sfw-dist",
+                self.algo
+            )));
         }
         // Latency injection is implemented by the in-process links only;
         // real sockets have real latency.  Reject rather than silently
@@ -473,9 +541,18 @@ impl TrainSpec {
                 GradCodec::VALID
             ))
         })?;
+        let step = StepMethod::parse(&cfg.step).ok_or_else(|| {
+            SessionError::InvalidSpec(format!(
+                "unknown step '{}' (valid: {})",
+                cfg.step,
+                StepMethod::VALID.join(" | ")
+            ))
+        })?;
         let mut spec = TrainSpec::new(task)
             .repr(repr)
             .uplink(uplink)
+            .step(step)
+            .tol(cfg.tol)
             .algo(&cfg.algo)
             .workers(cfg.workers)
             .tau(cfg.tau)

@@ -21,8 +21,9 @@ use crate::sweep::SweepError;
 
 /// Keys the `[sweep]` section accepts (axes + run knobs).
 pub const SWEEP_KEYS: &[&str] = &[
-    "name", "algos", "objective", "dims", "repr", "uplink", "workers", "tau", "batch",
-    "power-iters", "transport", "straggler", "chaos", "seeds", "repeats", "jobs", "target",
+    "name", "algos", "objective", "dims", "repr", "uplink", "workers", "tau", "batch", "step",
+    "tol", "power-iters", "transport", "straggler", "chaos", "seeds", "repeats", "jobs",
+    "target",
 ];
 
 impl SweepSpec {
@@ -151,6 +152,24 @@ impl SweepSpec {
                     }
                 })
                 .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = get("step") {
+            spec.steps = split_list("step", &v)?
+                .into_iter()
+                .map(|s| {
+                    crate::algo::schedule::StepMethod::parse(s)
+                        .map(|_| s.to_string())
+                        .ok_or_else(|| SweepError::BadAxisValue {
+                            axis: "step".into(),
+                            value: s.to_string(),
+                            expected: crate::algo::schedule::StepMethod::VALID.join(" | "),
+                        })
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = get("tol") {
+            spec.tols =
+                parse_list("tol", &v, "comma-separated dual-gap tolerances (0 disables)")?;
         }
         if let Some(v) = get("power-iters") {
             spec.power_iters = parse_list("power-iters", &v, "comma-separated iteration counts")?;
@@ -303,6 +322,28 @@ impl SweepSpec {
 }
 
 impl SweepSpec {
+    /// The CI dual-gap cells that ride along with the other smoke grids
+    /// in one `sweep_smoke.json`: serial sfw on the small matrix-sensing
+    /// task, `tol` in {0, 1e3}.  The tol=0 cell runs its full iteration
+    /// budget and carries a finite, net-decreasing `gap` column;
+    /// the tol=1e3 cell's gap is under the (huge) tolerance from the
+    /// first measurement, so it must stop early — well below the
+    /// iteration budget.  `scripts/check_smoke_bytes.py` asserts both,
+    /// pinning the gap metric and the `--tol` stopping path in the CI
+    /// artifact.
+    pub fn smoke_gap() -> SweepSpec {
+        use crate::algo::schedule::BatchSchedule;
+        use crate::session::TaskSpec;
+        let base = TrainSpec::new(TaskSpec::ms_small())
+            .algo("sfw")
+            .iterations(20)
+            .batch(BatchSchedule::Constant(16))
+            .eval_every(5)
+            .power_iters(20)
+            .seed(42);
+        SweepSpec::new("smoke-gap", base).tols(&[0.0, 1e3]).target(0.5)
+    }
+
     /// The CI sparse-completion cells that ride along with the other
     /// smoke grids in one `sweep_smoke.json`: the small synthetic
     /// recommender (96x48, power-law mask), sfw-asyn, factored iterate,
@@ -520,6 +561,34 @@ mod tests {
         }
         assert_eq!(cells[0].axis("workers"), Some("1"));
         assert_eq!(cells[1].axis("workers"), Some("2"));
+    }
+
+    #[test]
+    fn step_and_tol_keys_resolve_and_reject_bad_values() {
+        let a = args("--sweep.step vanilla,away --sweep.tol 0,0.001");
+        let s = SweepSpec::from_sources(base(), &Config::new(), &a).unwrap();
+        assert_eq!(s.steps, vec!["vanilla", "away"]);
+        assert_eq!(s.tols, vec![0.0, 0.001]);
+        let err = SweepSpec::from_sources(base(), &Config::new(), &args("--sweep.step exact"))
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("step") && msg.contains("line-search"), "{msg}");
+        let err = SweepSpec::from_sources(base(), &Config::new(), &args("--sweep.tol soon"))
+            .unwrap_err();
+        assert!(err.to_string().contains("tol"), "{err}");
+    }
+
+    #[test]
+    fn smoke_gap_grid_is_the_tol_pair() {
+        let cells = SweepSpec::smoke_gap().expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert_eq!(c.axis("algo"), Some("sfw"));
+            assert_eq!(c.axis("seed"), Some("42"));
+        }
+        assert_eq!(cells[0].axis("tol"), Some("0"));
+        assert_eq!(cells[1].axis("tol"), Some("1000"));
+        assert_eq!(cells[1].spec.tol, 1e3);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use std::collections::BTreeSet;
 use std::time::Duration;
 
-use crate::algo::schedule::BatchSchedule;
+use crate::algo::schedule::{BatchSchedule, StepMethod};
 use crate::chaos::{FaultPlan, DEFAULT_CHAOS_SEED};
 use crate::comms::GradCodec;
 use crate::coordinator::worker::Straggler;
@@ -21,8 +21,8 @@ use crate::sweep::SweepError;
 /// The fixed axis order: every cell id and result row lists axis values
 /// in this order, and `[sweep]` config keys resolve against these names.
 pub const AXIS_NAMES: &[&str] = &[
-    "algo", "objective", "dims", "repr", "uplink", "workers", "tau", "batch", "power_iters",
-    "transport", "straggler", "chaos", "seed",
+    "algo", "objective", "dims", "repr", "uplink", "workers", "tau", "batch", "step", "tol",
+    "power_iters", "transport", "straggler", "chaos", "seed",
 ];
 
 /// Map an `objective` axis value onto the named objective's small
@@ -212,6 +212,12 @@ pub struct SweepSpec {
     /// Constant batch sizes ([`BATCH_AUTO`] = theorem schedule).  Empty =
     /// inherit the base spec's schedule verbatim.
     pub batches: Vec<usize>,
+    /// Step-size policies ([`StepMethod::VALID`] names).  Empty = inherit
+    /// the base spec's policy; cell labels carry the resolved label.
+    pub steps: Vec<String>,
+    /// Dual-gap stopping tolerances (0 = run to the iteration budget).
+    /// Empty = inherit the base spec's `tol`.
+    pub tols: Vec<f64>,
     pub power_iters: Vec<usize>,
     pub transports: Vec<Transport>,
     pub stragglers: Vec<StragglerProfile>,
@@ -242,6 +248,8 @@ impl SweepSpec {
             workers: Vec::new(),
             taus: Vec::new(),
             batches: Vec::new(),
+            steps: Vec::new(),
+            tols: Vec::new(),
             power_iters: Vec::new(),
             transports: Vec::new(),
             stragglers: Vec::new(),
@@ -283,6 +291,14 @@ impl SweepSpec {
     }
     pub fn batches(mut self, batches: &[usize]) -> Self {
         self.batches = batches.to_vec();
+        self
+    }
+    pub fn steps(mut self, ss: &[&str]) -> Self {
+        self.steps = ss.iter().map(|s| s.to_string()).collect();
+        self
+    }
+    pub fn tols(mut self, ts: &[f64]) -> Self {
+        self.tols = ts.to_vec();
         self
     }
     pub fn power_iters(mut self, pi: &[usize]) -> Self {
@@ -329,6 +345,8 @@ impl SweepSpec {
             * len(self.workers.len())
             * len(self.taus.len())
             * len(self.batches.len())
+            * len(self.steps.len())
+            * len(self.tols.len())
             * len(self.power_iters.len())
             * len(self.transports.len())
             * len(self.stragglers.len())
@@ -418,6 +436,39 @@ impl SweepSpec {
         } else {
             self.batches.iter().map(|&b| Some(b)).collect()
         };
+        // `None` = inherit the base spec's step policy / tolerance.
+        let step_axis: Vec<Option<StepMethod>> = if self.steps.is_empty() {
+            vec![None]
+        } else {
+            self.steps
+                .iter()
+                .map(|s| {
+                    StepMethod::parse(s).map(Some).ok_or_else(|| SweepError::BadAxisValue {
+                        axis: "step".into(),
+                        value: s.clone(),
+                        expected: StepMethod::VALID.join(" | "),
+                    })
+                })
+                .collect::<Result<_, _>>()?
+        };
+        let tol_axis: Vec<Option<f64>> = if self.tols.is_empty() {
+            vec![None]
+        } else {
+            self.tols
+                .iter()
+                .map(|&t| {
+                    if t.is_finite() && t >= 0.0 {
+                        Ok(Some(t))
+                    } else {
+                        Err(SweepError::BadAxisValue {
+                            axis: "tol".into(),
+                            value: t.to_string(),
+                            expected: "a finite tolerance >= 0 (0 disables gap stopping)".into(),
+                        })
+                    }
+                })
+                .collect::<Result<_, _>>()?
+        };
         let power_iters = if self.power_iters.is_empty() {
             vec![base.power_iters]
         } else {
@@ -466,7 +517,14 @@ impl SweepSpec {
             for &w in &workers {
                 for &tau in &taus {
                     for &batch in &batches {
-                        for &pi in &power_iters {
+                        // step/tol ride the power_iters loop level (same
+                        // trick as dims x repr) to keep the nesting flat
+                        let power_iters_ref = &power_iters;
+                        for (stepv, tolv, &pi) in step_axis.iter().flat_map(|s| {
+                            tol_axis.iter().flat_map(move |t| {
+                                power_iters_ref.iter().map(move |p| (s, t, p))
+                            })
+                        }) {
                             for &transport in &transports {
                                 for &straggler in &stragglers {
                                     for chaos in &chaos_axis {
@@ -519,6 +577,12 @@ impl SweepSpec {
                                             if let Some(c) = uplk {
                                                 spec.uplink = c;
                                             }
+                                            if let Some(s) = stepv {
+                                                spec.step = *s;
+                                            }
+                                            if let Some(t) = tolv {
+                                                spec.tol = *t;
+                                            }
                                             match batch {
                                                 None => {} // keep base schedule
                                                 Some(BATCH_AUTO) => spec.batch = None,
@@ -548,6 +612,13 @@ impl SweepSpec {
                                                 ("workers".to_string(), w.to_string()),
                                                 ("tau".to_string(), tau.to_string()),
                                                 ("batch".to_string(), batch_label),
+                                                (
+                                                    "step".to_string(),
+                                                    // resolved from the cell's
+                                                    // spec, like repr
+                                                    spec.step.label().to_string(),
+                                                ),
+                                                ("tol".to_string(), format!("{}", spec.tol)),
                                                 ("power_iters".to_string(), pi.to_string()),
                                                 (
                                                     "transport".to_string(),
@@ -656,6 +727,32 @@ mod tests {
         assert_eq!(cells[0].axis("batch"), Some("auto"));
         assert!(cells[0].spec.batch.is_none());
         assert_eq!(cells[1].spec.batch, Some(BatchSchedule::Constant(32)));
+    }
+
+    #[test]
+    fn step_and_tol_axes_expand_and_label() {
+        let cells = SweepSpec::new("t", base().algo("sfw"))
+            .steps(&["vanilla", "line-search"])
+            .tols(&[0.0, 1e-3])
+            .expand()
+            .unwrap();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].axis("step"), Some("vanilla"));
+        assert_eq!(cells[0].axis("tol"), Some("0"));
+        assert_eq!(cells[1].axis("tol"), Some("0.001"));
+        assert_eq!(cells[2].axis("step"), Some("line-search"));
+        assert_eq!(cells[2].spec.step, StepMethod::LineSearch);
+        assert_eq!(cells[1].spec.tol, 1e-3);
+        // an unset axis inherits the base spec and still labels the cell
+        let cells = SweepSpec::new("t", base()).expand().unwrap();
+        assert_eq!(cells[0].axis("step"), Some("vanilla"));
+        assert_eq!(cells[0].axis("tol"), Some("0"));
+        // bad values name the axis and list the menu / constraint
+        let err = SweepSpec::new("t", base()).steps(&["exact"]).expand().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("step") && msg.contains("pairwise"), "{msg}");
+        let err = SweepSpec::new("t", base()).tols(&[f64::NAN]).expand().unwrap_err();
+        assert!(err.to_string().contains("tol"), "{err}");
     }
 
     #[test]

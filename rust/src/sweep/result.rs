@@ -31,6 +31,13 @@ pub struct CellResult {
     pub final_rel: f64,
     /// Raw loss of the last trace point (last repeat).
     pub final_loss: f64,
+    /// Last finite dual-gap estimate of the last repeat
+    /// (`Report::final_gap`); NaN when the run recorded none.
+    pub gap: f64,
+    /// Per-curve-point dual-gap estimates of the last repeat, aligned
+    /// with `curve` (NaN entries where a snapshot carried no gap —
+    /// e.g. the t=0 init point).
+    pub gaps: Vec<f64>,
     /// First time the relative loss reached the sweep's target, if set.
     pub time_to_target: Option<f64>,
     /// Final-iterate rank of the last repeat (`Report::final_rank`).
@@ -110,6 +117,11 @@ impl CellResult {
             ("wall".into(), wall),
             ("final_rel".into(), Json::Num(self.final_rel)),
             ("final_loss".into(), Json::Num(self.final_loss)),
+            ("gap".into(), Json::Num(self.gap)),
+            (
+                "gaps".into(),
+                Json::Arr(self.gaps.iter().map(|&g| Json::Num(g)).collect()),
+            ),
             (
                 "time_to_target".into(),
                 self.time_to_target.map(Json::Num).unwrap_or(Json::Null),
@@ -190,12 +202,28 @@ impl CellResult {
             Some(Json::Null) | None => None,
             Some(t) => Some(t.as_f64().ok_or("bad 'time_to_target'")?),
         };
+        // gap fields are absent in pre-gap artifacts: default NaN (the
+        // same value a gap-less run writes) rather than reject.
+        let gap = match v.get("gap") {
+            None => f64::NAN,
+            Some(g) => f64_or_nan(g, "gap")?,
+        };
+        let gaps = match v.get("gaps") {
+            None => vec![f64::NAN; curve.len()],
+            Some(Json::Arr(gs)) => gs
+                .iter()
+                .map(|g| f64_or_nan(g, "gaps entry"))
+                .collect::<Result<Vec<_>, _>>()?,
+            Some(_) => return Err("bad array 'gaps'".into()),
+        };
         Ok(CellResult {
             axes,
             spec_echo: v.str_field("spec_echo")?.to_string(),
             wall,
             final_rel: num_field_or_nan(v, "final_rel")?,
             final_loss: num_field_or_nan(v, "final_loss")?,
+            gap,
+            gaps,
             time_to_target,
             // absent in pre-factored artifacts: default 0 rather than reject
             rank: v.get("rank").and_then(Json::as_u64).unwrap_or(0),
@@ -260,14 +288,15 @@ impl SweepResult {
             .map(|c| c.axes.iter().map(|(k, _)| k.as_str()).collect())
             .unwrap_or_default();
         headers.extend([
-            "mean t(s)", "final rel", "t_target(s)", "dropped", "up B", "down B", "rank",
-            "faults",
+            "mean t(s)", "final rel", "gap", "t_target(s)", "dropped", "up B", "down B",
+            "rank", "faults",
         ]);
         let mut t = Table::new(&format!("sweep '{}' ({} cells)", self.name, self.cells.len()), &headers);
         for c in &self.cells {
             let mut row: Vec<String> = c.axes.iter().map(|(_, v)| v.clone()).collect();
             row.push(format!("{:.3}", c.wall.mean_s));
             row.push(sig(c.final_rel, 3));
+            row.push(if c.gap.is_finite() { sig(c.gap, 3) } else { "—".into() });
             row.push(
                 c.time_to_target
                     .map(|x| format!("{x:.3}"))
@@ -363,6 +392,8 @@ mod tests {
             wall: Stats::from_samples(vec![0.5, 0.7, 0.6]),
             final_rel: 0.0123,
             final_loss: 0.456,
+            gap: 0.031,
+            gaps: vec![f64::NAN, 0.12, 0.031],
             time_to_target: if w > 1 { Some(0.25) } else { None },
             rank: 7,
             peak_atoms: 21,
@@ -408,6 +439,12 @@ mod tests {
             assert_eq!(a.axes, b.axes);
             assert_eq!(a.spec_echo, b.spec_echo);
             assert_eq!(a.final_rel, b.final_rel);
+            assert_eq!(a.gap, b.gap);
+            // NaN gap entries render as null and parse back to NaN
+            assert_eq!(a.gaps.len(), b.gaps.len());
+            for (ga, gb) in a.gaps.iter().zip(&b.gaps) {
+                assert!(ga == gb || (ga.is_nan() && gb.is_nan()));
+            }
             assert_eq!(a.time_to_target, b.time_to_target);
             assert_eq!((a.rank, a.peak_atoms), (b.rank, b.peak_atoms));
             assert_eq!(a.counters, b.counters);
@@ -473,6 +510,32 @@ mod tests {
         assert_eq!(back.cells[0].chaos, ChaosSnapshot::default());
         // everything else survived
         assert_eq!(back.cells[0].counters.bytes_up, res.cells[0].counters.bytes_up);
+    }
+
+    #[test]
+    fn pre_gap_artifacts_default_gap_to_nan() {
+        // Artifacts written before the gap column existed must parse,
+        // with a NaN gap (what a gap-less run writes) and NaN-filled
+        // gaps aligned to the curve.
+        let res = SweepResult {
+            name: "old".into(),
+            target: None,
+            cells: vec![sample_cell("sfw-asyn", 1)],
+        };
+        let mut doc = res.to_json();
+        if let Json::Obj(top) = &mut doc {
+            if let Some((_, Json::Arr(cells))) = top.iter_mut().find(|(k, _)| k == "cells") {
+                for cell in cells {
+                    if let Json::Obj(fields) = cell {
+                        fields.retain(|(k, _)| k != "gap" && k != "gaps");
+                    }
+                }
+            }
+        }
+        let back = SweepResult::from_json(&doc.render()).unwrap();
+        assert!(back.cells[0].gap.is_nan());
+        assert_eq!(back.cells[0].gaps.len(), back.cells[0].curve.len());
+        assert!(back.cells[0].gaps.iter().all(|g| g.is_nan()));
     }
 
     #[test]

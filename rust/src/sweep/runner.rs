@@ -121,6 +121,8 @@ fn run_cell(
         wall,
         final_rel: report.final_relative(),
         final_loss: report.final_loss(),
+        gap: report.final_gap().unwrap_or(f64::NAN),
+        gaps: report.points().iter().map(|p| p.gap).collect(),
         time_to_target: spec.target.and_then(|t| report.time_to_relative(t)),
         rank: report.final_rank as u64,
         peak_atoms: report.peak_atoms as u64,
@@ -178,6 +180,10 @@ mod tests {
             assert!(c.wall.n == 1 && c.wall.mean_s >= 0.0);
             assert!(c.counters.iterations > 0, "{}: no iterations", c.id());
             assert!(!c.curve.is_empty());
+            // the gap column is aligned with the curve, and every solver
+            // here reports a finite final gap
+            assert_eq!(c.gaps.len(), c.curve.len(), "{}", c.id());
+            assert!(c.gap.is_finite(), "{}: no final gap", c.id());
         }
     }
 

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use sfw::data::matrix_sensing::{MatrixSensingData, MsParams};
 use sfw::objective::MatrixSensing;
 use sfw::runtime::Workload;
-use sfw::session::{BatchSchedule, Report, TaskSpec, TrainSpec};
+use sfw::session::{BatchSchedule, Report, ReprKind, StepMethod, TaskSpec, TrainSpec};
 use sfw::util::rng::Rng;
 
 fn ms(seed: u64, n: usize) -> TaskSpec {
@@ -143,4 +143,113 @@ fn tau_slowdown_is_bounded() {
     // both converge to a sane range (no divergence from staleness)
     assert!(tight < 0.05, "tau=2 final {tight}");
     assert!(loose < 0.15, "tau=64 final {loose} diverged");
+}
+
+#[test]
+fn gap_decays_and_tol_stops_early() {
+    // The FW dual gap g_k = <grad F(X_k), X_k - s_k> upper-bounds the
+    // suboptimality on a convex problem, so on noiseless matrix sensing
+    // it must decay toward zero alongside the loss — and `--tol` must
+    // turn that decay into an early stop.
+    let task = ms(440, 6_000);
+    let budget = 200u64;
+    let spec = TrainSpec::new(task)
+        .algo("sfw")
+        .iterations(budget)
+        .batch(BatchSchedule::Constant(256))
+        .eval_every(5)
+        .seed(441)
+        .power_iters(80);
+    // tol = 0 disables gap stopping: full budget, decaying gap column.
+    let full = spec.clone().run().expect("train");
+    assert_eq!(full.snapshot().iterations, budget, "tol=0 must not stop early");
+    let gaps: Vec<f64> = full
+        .points()
+        .iter()
+        .map(|p| p.gap)
+        .filter(|g| g.is_finite())
+        .collect();
+    assert!(gaps.len() > 10, "gap column missing from the trace");
+    let (g0, gf) = (gaps[0], *gaps.last().unwrap());
+    assert!(
+        gf < 0.5 * g0,
+        "gap did not decay: first finite {g0:.4e} -> last {gf:.4e}"
+    );
+    // A tolerance between the initial and final gap stops the same run
+    // strictly inside the budget, and the report's final gap certifies it.
+    let tol = (g0 * gf).sqrt();
+    let stopped = spec.clone().tol(tol).run().expect("train");
+    let iters = stopped.snapshot().iterations;
+    assert!(iters < budget, "tol={tol:.4e} never fired ({iters} iterations)");
+    let final_gap = stopped.final_gap().expect("gap-stopped run must report a gap");
+    assert!(
+        final_gap <= tol,
+        "stopped at gap {final_gap:.4e} above tol {tol:.4e}"
+    );
+}
+
+#[test]
+fn line_search_is_no_worse_than_vanilla_same_seed() {
+    // The golden-section policy only accepts a step if the sampled loss
+    // does not increase, falling back to eta(k) otherwise — so with the
+    // same seed it can only match or beat the vanilla schedule.
+    let task = ms(450, 6_000);
+    let run = |step: StepMethod| {
+        TrainSpec::new(task.clone())
+            .algo("sfw")
+            .iterations(150)
+            .batch(BatchSchedule::Constant(256))
+            .eval_every(10)
+            .seed(451)
+            .power_iters(80)
+            .step(step)
+            .run()
+            .expect("train")
+            .final_loss()
+    };
+    let vanilla = run(StepMethod::Vanilla);
+    let ls = run(StepMethod::LineSearch);
+    assert!(
+        ls <= vanilla * 1.01 + 1e-9,
+        "line-search final loss {ls:.4e} above vanilla {vanilla:.4e}"
+    );
+}
+
+#[test]
+fn away_and_pairwise_match_loss_with_fewer_atoms() {
+    // Away/pairwise steps shift (or drop) weight on existing atoms
+    // instead of always adding a new one, so at the same budget and seed
+    // they must land at a matching loss with a strictly smaller active
+    // set — the whole point of the variants on a factored iterate.
+    let task = ms(460, 6_000);
+    let run = |step: StepMethod| {
+        TrainSpec::new(task.clone())
+            .algo("sfw")
+            .repr(ReprKind::Factored)
+            .iterations(150)
+            .batch(BatchSchedule::Constant(256))
+            .eval_every(10)
+            .seed(461)
+            .power_iters(80)
+            .step(step)
+            .run()
+            .expect("train")
+    };
+    let vanilla = run(StepMethod::Vanilla);
+    for step in [StepMethod::Away, StepMethod::Pairwise] {
+        let variant = run(step);
+        let (vr, xr) = (vanilla.final_relative(), variant.final_relative());
+        assert!(
+            xr <= vr * 1.15 + 1e-3,
+            "{}: final rel {xr:.4e} not matching vanilla {vr:.4e}",
+            step.label()
+        );
+        assert!(
+            variant.final_rank < vanilla.final_rank,
+            "{}: final_rank {} not strictly below vanilla {}",
+            step.label(),
+            variant.final_rank,
+            vanilla.final_rank
+        );
+    }
 }

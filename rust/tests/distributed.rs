@@ -155,6 +155,7 @@ fn svrf_asyn_and_serial_svrf_reach_similar_quality() {
             eval_every: 10,
             seed: 552,
             repr: sfw::linalg::Repr::Dense,
+            ..SvrfOptions::default()
         },
         &counters,
         &trace,

@@ -106,10 +106,12 @@ fn prop_every_wire_message_roundtrips_with_exact_byte_accounting() {
             rng.normal_f32(),
             rng.normal(),
             rng.next_below(10_000) as u32,
+            rng.normal(),
         );
         let rt = roundtrip(&upd)?;
         prop_assert!(rt.u == upd.u && rt.v == upd.v, "vectors corrupted");
         prop_assert!(rt.t_w == upd.t_w && rt.m == upd.m, "header corrupted");
+        prop_assert!(rt.gap.to_bits() == upd.gap.to_bits(), "gap corrupted");
         wire_bytes_exact(&upd)?;
 
         // quantized uplink variants: quantization happens ONCE at
@@ -125,6 +127,7 @@ fn prop_every_wire_message_roundtrips_with_exact_byte_accounting() {
                 upd.sigma,
                 upd.loss_sum,
                 upd.m,
+                upd.gap,
             );
             let rt = roundtrip(&q)?;
             prop_assert!(rt == q, "{} UpdateMsg not exact through the wire", codec.label());
@@ -265,7 +268,7 @@ fn wire_errors_classify_bad_tags_and_malformed_payloads() {
     use sfw::comms::{Dec, Enc, WireError};
     // a frame carrying any tag but the message's own is BadTag, and the
     // error names the offending tag byte
-    let upd = UpdateMsg::dense(1, 2, vec![1.0], vec![2.0], 3.0, 4.0, 5);
+    let upd = UpdateMsg::dense(1, 2, vec![1.0], vec![2.0], 3.0, 4.0, 5, 6.0);
     let f = frame(&upd);
     let bad = upd.tag().wrapping_add(1);
     match UpdateMsg::decode(bad, &f[sfw::comms::FRAME_HEADER..]).err() {
@@ -312,7 +315,7 @@ fn quantized_frames_classify_truncation_and_trailing_bytes() {
     for codec in [GradCodec::F32, GradCodec::Bf16, GradCodec::Int8] {
         assert_classified(
             &format!("UpdateMsg/{}", codec.label()),
-            &UpdateMsg::quantized(codec, 3, 11, u.clone(), v.clone(), 0.5, 1.5, 32),
+            &UpdateMsg::quantized(codec, 3, 11, u.clone(), v.clone(), 0.5, 1.5, 32, 0.25),
         );
         assert_classified(
             &format!("DistUp/{}", codec.label()),

@@ -9,7 +9,8 @@
 
 use sfw::config::{ConfigError, TrainConfig};
 use sfw::session::{
-    registry, BatchSchedule, EngineKind, SessionError, TaskSpec, TrainSpec, Transport,
+    registry, BatchSchedule, EngineKind, SessionError, StepMethod, TaskSpec, TrainSpec,
+    Transport,
 };
 use sfw::util::cli::Args;
 
@@ -241,6 +242,49 @@ fn unknown_task_engine_transport_are_rejected() {
         TrainSpec::from_config(&cfg),
         Err(SessionError::UnknownTransport(_))
     ));
+}
+
+#[test]
+fn tol_and_step_round_trip_to_the_spec() {
+    let cfg = load("--tol 1e-3 --step line-search").unwrap();
+    let spec = TrainSpec::from_config(&cfg).unwrap();
+    assert!((spec.tol - 1e-3).abs() < 1e-12);
+    assert_eq!(spec.step, StepMethod::LineSearch);
+    assert!(spec.echo().contains("step=line-search"), "{}", spec.echo());
+    assert!(spec.echo().contains("tol=0.001"), "{}", spec.echo());
+
+    // defaults: vanilla schedule, gap stopping off, neither echoed
+    let spec = TrainSpec::from_config(&load("").unwrap()).unwrap();
+    assert_eq!(spec.step, StepMethod::Vanilla);
+    assert_eq!(spec.tol, 0.0);
+    assert!(!spec.echo().contains("step="), "{}", spec.echo());
+
+    // an unknown step value is rejected with the full menu
+    let cfg = load("--step exact").unwrap();
+    let err = TrainSpec::from_config(&cfg).unwrap_err();
+    assert!(matches!(err, SessionError::InvalidSpec(_)), "{err}");
+    let msg = err.to_string();
+    assert!(msg.contains("exact") && msg.contains("line-search"), "{msg}");
+}
+
+#[test]
+fn step_policies_are_rejected_where_they_cannot_apply() {
+    // away/pairwise maintain an active atom set: serial sfw only...
+    let err = small_spec().algo("sfw-asyn").step(StepMethod::Away).run().unwrap_err();
+    assert!(matches!(err, SessionError::InvalidSpec(_)), "{err}");
+    assert!(err.to_string().contains("--algo sfw"), "{err}");
+    // ...and only on the factored iterate (ms_small resolves dense)
+    let err = small_spec().algo("sfw").step(StepMethod::Pairwise).run().unwrap_err();
+    assert!(matches!(err, SessionError::InvalidSpec(_)), "{err}");
+    assert!(err.to_string().contains("--repr factored"), "{err}");
+    // the fixed-update baselines reject every non-vanilla policy
+    let err = small_spec().algo("pgd").step(StepMethod::LineSearch).run().unwrap_err();
+    assert!(matches!(err, SessionError::InvalidSpec(_)), "{err}");
+    assert!(err.to_string().contains("fixed update rule"), "{err}");
+    // a negative tolerance can never fire: reject instead of hanging
+    let err = small_spec().tol(-1.0).run().unwrap_err();
+    assert!(matches!(err, SessionError::InvalidSpec(_)), "{err}");
+    assert!(err.to_string().contains("tol"), "{err}");
 }
 
 #[test]

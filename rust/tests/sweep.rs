@@ -295,6 +295,54 @@ fn smoke_scale_cells_pin_the_factored_downlink_saving() {
 }
 
 #[test]
+fn smoke_gap_cells_pin_tol_stopping() {
+    // `sfw sweep --smoke` appends this serial pair to the artifact;
+    // scripts/check_smoke_bytes.py repeats these assertions on the JSON.
+    let result = SweepRunner::new().quiet(true).run(&SweepSpec::smoke_gap()).unwrap();
+    assert_eq!(result.cells.len(), 2);
+    let full = result.find(&[("tol", "0")]).expect("tol=0 gap cell");
+    let stopped = result.find(&[("tol", "1000")]).expect("tol=1000 gap cell");
+    // gap stopping disabled: full budget, and the artifact carries a
+    // finite, net-decreasing gap column aligned with the loss curve
+    assert_eq!(full.counters.iterations, 20, "tol=0 cell stopped early");
+    assert_eq!(full.gaps.len(), full.curve.len());
+    assert!(full.gap.is_finite(), "tol=0 cell lost its final gap");
+    let finite: Vec<f64> = full.gaps.iter().copied().filter(|g| g.is_finite()).collect();
+    assert!(!finite.is_empty(), "tol=0 cell has no finite gap entries");
+    assert!(
+        finite.last().unwrap() < finite.first().unwrap(),
+        "gap column not net-decreasing: {finite:?}"
+    );
+    // a tolerance far above the initial gap stops at the first estimate
+    assert!(
+        stopped.counters.iterations < 20,
+        "tol=1000 never fired ({} iterations)",
+        stopped.counters.iterations
+    );
+    assert!(
+        stopped.gap.is_finite() && stopped.gap <= 1e3,
+        "stopped cell's final gap {} does not certify the stop",
+        stopped.gap
+    );
+    // the gap column survives the JSON round-trip the CI check reads
+    // (non-finite entries render as null and come back as NaN)
+    let back = sfw::sweep::SweepResult::from_json(&result.to_json().render()).unwrap();
+    for (a, b) in result.cells.iter().zip(&back.cells) {
+        assert_eq!(a.gap.is_finite(), b.gap.is_finite());
+        if a.gap.is_finite() {
+            assert_eq!(a.gap, b.gap);
+        }
+        assert_eq!(a.gaps.len(), b.gaps.len());
+        for (x, y) in a.gaps.iter().zip(&b.gaps) {
+            assert!(
+                (x.is_nan() && y.is_nan()) || x == y,
+                "gaps entry diverged in round-trip: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
 fn smoke_sweep_contract() {
     // The CI pipeline depends on this exact shape (see ROADMAP "Sweeps &
     // CI" and "Chaos"): tiny deterministic grid, seed 42, W in {1, 2},

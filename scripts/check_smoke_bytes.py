@@ -11,20 +11,28 @@ injected events means the chaos layer silently stopped wrapping links;
 the sfw-dist scale cells (one dense, one factored, same seed/shape)
 pin the representation's headline saving: the factored atoms-only
 broadcast must be measurably below the dense X broadcast on
-`bytes_down` while the (dense-gradient) uplink stays equal; and the
-64x48 sfw-dist uplink cells (f32 vs int8, same seed/shape, both
-transports) pin the codec's headline saving: >= 3x fewer `bytes_up`
-(the exact frame ratio at 64x48 is ~3.67x) at matching final relative
-loss — error feedback is what keeps the losses together — with
-identical `bytes_down`.
+`bytes_down` while the (dense-gradient) uplink stays equal; the 64x48
+sfw-dist uplink cells (f32 vs int8, same seed/shape, both transports)
+pin the codec's headline saving: >= 3x fewer `bytes_up` (the exact
+frame ratio at 64x48 is ~3.67x) at matching final relative loss —
+error feedback is what keeps the losses together — with identical
+`bytes_down`; and the serial sfw gap cells (tol=0 vs tol=1000, same
+seed/shape) pin dual-gap surfacing and `--tol` stopping: the tol=0
+cell carries a finite, net-decreasing `gaps` column over its full
+budget while the tol=1000 cell stops well short of it.
 """
 import json
+import math
 import sys
 
 path = sys.argv[1] if len(sys.argv) > 1 else "bench_out/sweep_smoke.json"
 cells = json.load(open(path))["cells"]
 assert cells, f"{path}: smoke artifact has no cells"
-bad = [c["axes"] for c in cells
+# The gap cells run the serial solver (no transport), so the comm-bytes
+# invariant covers every *distributed* cell, not literally all of them.
+dist = [c for c in cells if c["axes"].get("algo") != "sfw"]
+assert dist, f"{path}: smoke artifact lost its distributed cells"
+bad = [c["axes"] for c in dist
        if c["counters"]["bytes_up"] <= 0 or c["counters"]["bytes_down"] <= 0]
 assert not bad, f"cells without comm bytes: {bad}"
 
@@ -109,8 +117,52 @@ for c in sparse:
         f"sparse uplink {per_msg:.0f} B/msg exceeds atom scale {atom_scale} B "
         f"(dense frame would be {4 * rows * cols} B): {c['axes']}")
 
-print(f"OK: {len(cells)} cells in {path}, bytes nonzero in all, "
+# --- dual-gap stopping cells -------------------------------------------------
+# Serial sfw pair on ms_small, tol in {0, 1000}, same seed/budget.  The
+# tol=0 cell (gap stopping disabled) must run its full 20-iteration
+# budget and carry the gap column: a finite final `gap`, a `gaps` array
+# aligned with `curve`, and a net decrease across its finite entries —
+# the FW dual gap <grad F(X), X - S> is the paper's certificate and the
+# quantity `--tol` stops on, so a gap column that vanished, went
+# non-finite, or trends upward means the surfacing broke.  The tol=1000
+# cell sets the tolerance far above the initial gap, so it must stop
+# strictly short of the budget — the early-stop path, pinned end to end
+# in the artifact.  Non-finite gaps arrive as JSON null (-> None).
+GAP_BUDGET = 20
+
+
+def finite(g):
+    return isinstance(g, (int, float)) and math.isfinite(g)
+
+
+gap_cells = [c for c in cells if c["axes"].get("algo") == "sfw"]
+by_tol = {c["axes"].get("tol"): c for c in gap_cells}
+assert "0" in by_tol and "1000" in by_tol, (
+    f"{path}: smoke grid lost its tol=0/tol=1000 gap cells "
+    f"(have {sorted(by_tol)})")
+full, stopped = by_tol["0"], by_tol["1000"]
+assert full["counters"]["iterations"] >= GAP_BUDGET, (
+    f"tol=0 cell stopped early ({full['counters']['iterations']} < "
+    f"{GAP_BUDGET} iterations) with gap stopping disabled")
+assert len(full.get("gaps", [])) == len(full["curve"]), (
+    f"tol=0 gaps column ({len(full.get('gaps', []))}) not aligned with "
+    f"curve ({len(full['curve'])})")
+assert finite(full.get("gap")), (
+    f"tol=0 cell has no finite final gap (got {full.get('gap')})")
+fgaps = [g for g in full["gaps"] if finite(g)]
+assert fgaps, "tol=0 cell has no finite gap entries"
+assert fgaps[-1] < fgaps[0], (
+    f"tol=0 gap column not net-decreasing: first {fgaps[0]:.4e} -> "
+    f"last {fgaps[-1]:.4e}")
+assert stopped["counters"]["iterations"] < GAP_BUDGET, (
+    f"tol=1000 cell ran its full budget "
+    f"({stopped['counters']['iterations']} iterations) — --tol never fired")
+
+print(f"OK: {len(cells)} cells in {path}, bytes nonzero in {len(dist)} "
+      f"distributed cell(s), "
       f"events nonzero in {len(chaos_cells)} chaos cell(s), "
       f"factored downlink {fd} B vs dense {dd} B, "
       f"int8 uplink >= 3x under f32 at matching loss on {pairs} transport(s), "
-      f"sparse uplink atom-scale on {len(sparse)} cell(s)")
+      f"sparse uplink atom-scale on {len(sparse)} cell(s), "
+      f"gap column decreasing {fgaps[0]:.3e} -> {fgaps[-1]:.3e} with "
+      f"tol=1000 stopping at iter {stopped['counters']['iterations']}")
