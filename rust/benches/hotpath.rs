@@ -17,6 +17,7 @@ use sfw::algo::engine::{NativeEngine, StepEngine, StepOut};
 use sfw::benchkit::{bench_for, humanize, Stats, Table};
 use sfw::coordinator::update_log::{replay, UpdateLog};
 use sfw::experiments::{build_ms, build_pnn};
+use sfw::linalg::kernels;
 use sfw::linalg::{power_iteration_rand, FactoredMat, Iterate, Mat, Svd1};
 use sfw::objective::Objective;
 use sfw::runtime::{PjrtEngine, PjrtRuntime, Workload};
@@ -25,6 +26,11 @@ use sfw::coordinator::messages::{DistUp, UpdateMsg};
 use sfw::util::rng::Rng;
 
 const BUDGET: Duration = Duration::from_millis(600);
+
+/// Pool size the `threads=4` kernel rows run at (recorded in
+/// `bench_out/hotpath_env.json` alongside the CPU features so
+/// `bench_snapshot.py --compare` can flag cross-environment runs).
+const BENCH_POOL_THREADS: usize = 4;
 
 fn main() {
     let mut table = Table::new("hot-path microbenchmarks", &["op", "mean", "p50", "p90", "notes"]);
@@ -201,6 +207,110 @@ fn main() {
         let _ = sfw::model::top_k(&scores, 10);
     });
 
+    // ---- compute kernels (linalg::kernels: scalar vs SIMD, threads) -------
+    // Paired rows differ ONLY in dispatch (force_scalar) or pool size
+    // (set_pool_threads); results are bit-identical across all of them by
+    // the kernels determinism contract, so the pairs time the same math.
+    // The scalar-vs-simd deltas are environment-dependent and therefore
+    // flagged, never gated, by bench_snapshot.py (see hotpath_env.json).
+    let simd_notes = format!("dispatch: {}", kernels::cpu_features());
+    let wa: Vec<f32> = (0..196 * 196).map(|_| rng.normal_f32()).collect();
+    let wb: Vec<f32> = (0..196 * 196).map(|_| rng.normal_f32()).collect();
+    let za: Vec<f32> = (0..2000 * 400).map(|_| rng.normal_f32()).collect();
+    let zb: Vec<f32> = (0..2000 * 400).map(|_| rng.normal_f32()).collect();
+    kernels::force_scalar(true);
+    row("kernel dot 196x196 (scalar)", "38k elems", &mut || {
+        let _ = kernels::dot64(&wa, &wb);
+    });
+    row("kernel dot 2000x400 (scalar)", "800k elems", &mut || {
+        let _ = kernels::dot64(&za, &zb);
+    });
+    kernels::force_scalar(false);
+    row("kernel dot 196x196 (simd)", &simd_notes, &mut || {
+        let _ = kernels::dot64(&wa, &wb);
+    });
+    row("kernel dot 2000x400 (simd, threads=1)", &simd_notes, &mut || {
+        let _ = kernels::dot64(&za, &zb);
+    });
+    kernels::set_pool_threads(BENCH_POOL_THREADS);
+    row("kernel dot 2000x400 (simd, threads=4)", "800k elems >= pool threshold", &mut || {
+        let _ = kernels::dot64(&za, &zb);
+    });
+    kernels::set_pool_threads(1);
+    let mut yw = wa.clone();
+    let mut yz = za.clone();
+    kernels::force_scalar(true);
+    row("kernel axpy 196x196 (scalar)", "mul_add", &mut || {
+        kernels::axpy(&mut yw, 0.5, &wb);
+    });
+    row("kernel axpy 2000x400 (scalar)", "mul_add", &mut || {
+        kernels::axpy(&mut yz, 0.5, &zb);
+    });
+    kernels::force_scalar(false);
+    row("kernel axpy 196x196 (simd)", &simd_notes, &mut || {
+        kernels::axpy(&mut yw, 0.5, &wb);
+    });
+    row("kernel axpy 2000x400 (simd)", &simd_notes, &mut || {
+        kernels::axpy(&mut yz, 0.5, &zb);
+    });
+    let gd2000 = Mat::randn(2000, 400, 1.0, &mut rng);
+    let x400 = rng.unit_vector(400);
+    let x196 = rng.unit_vector(196);
+    let mut y2000 = vec![0.0f32; 2000];
+    let mut y196 = vec![0.0f32; 196];
+    kernels::force_scalar(true);
+    row("kernel matvec 196x196 (scalar)", "below pool threshold", &mut || {
+        g196.matvec(&x196, &mut y196);
+    });
+    row("kernel matvec 2000x400 (scalar)", "row-chunked", &mut || {
+        gd2000.matvec(&x400, &mut y2000);
+    });
+    kernels::force_scalar(false);
+    row("kernel matvec 196x196 (simd)", &simd_notes, &mut || {
+        g196.matvec(&x196, &mut y196);
+    });
+    row("kernel matvec 2000x400 (simd, threads=1)", &simd_notes, &mut || {
+        gd2000.matvec(&x400, &mut y2000);
+    });
+    kernels::set_pool_threads(BENCH_POOL_THREADS);
+    row("kernel matvec 2000x400 (simd, threads=4)", "16-row blocks", &mut || {
+        gd2000.matvec(&x400, &mut y2000);
+    });
+    kernels::set_pool_threads(1);
+    // factored apply on the LMO path: k * (rows + cols) = 153,600 at
+    // k=64 on 2000x400, above the pool work threshold — the headline
+    // threaded-kernels win (tightened in scripts/bench_thresholds.json)
+    let fact_rec64 = {
+        let mut f = FactoredMat::zeros(2000, 400);
+        for _ in 0..64 {
+            f.push_atom(
+                rng.normal_f32() * 0.1,
+                Arc::new(rng.unit_vector(2000)),
+                Arc::new(rng.unit_vector(400)),
+            );
+        }
+        f
+    };
+    kernels::force_scalar(true);
+    row("lmo 196x196 factored operator k=64 (scalar)", "24 power iters", &mut || {
+        let _ = power_iteration_rand(&fact196, &mut rng, 24, 1e-7);
+    });
+    row("lmo 2000x400 factored operator k=64 (scalar)", "24 power iters", &mut || {
+        let _ = power_iteration_rand(&fact_rec64, &mut rng, 24, 1e-7);
+    });
+    kernels::force_scalar(false);
+    row("lmo 2000x400 factored operator k=64", &simd_notes, &mut || {
+        let _ = power_iteration_rand(&fact_rec64, &mut rng, 24, 1e-7);
+    });
+    kernels::set_pool_threads(BENCH_POOL_THREADS);
+    row("lmo 2000x400 factored operator k=64 (threads=4)", "8-atom chunks", &mut || {
+        let _ = power_iteration_rand(&fact_rec64, &mut rng, 24, 1e-7);
+    });
+    row("sparse grad m=256 (COO, threads=4)", "nnz below pool threshold; parity row", &mut || {
+        let _ = sparse_o.grad_sum_sparse(&x_rec, &idx_s).unwrap();
+    });
+    kernels::set_pool_threads(1);
+
     // ---- protocol ops --------------------------------------------------------
     let mut x_upd = Mat::randn(196, 196, 0.1, &mut rng);
     let u: Vec<f32> = rng.unit_vector(196);
@@ -281,6 +391,17 @@ fn main() {
         ));
     }
     std::fs::write("bench_out/hotpath_raw.csv", out).expect("raw csv");
+    // environment sidecar: bench_snapshot.py embeds it in the snapshot
+    // and flags (never gates) comparisons across differing CPU features
+    std::fs::write(
+        "bench_out/hotpath_env.json",
+        format!(
+            "{{\"cpu_features\": \"{}\", \"pool_threads\": {}}}\n",
+            kernels::cpu_features(),
+            BENCH_POOL_THREADS
+        ),
+    )
+    .expect("env json");
     println!("series written to bench_out/hotpath.csv and bench_out/hotpath_raw.csv");
 }
 

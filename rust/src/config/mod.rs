@@ -110,6 +110,9 @@ pub struct TrainConfig {
     /// "sfw-asyn", "svrf-asyn", "sfw-dist", "sva", "dfw-power", "pgd").
     pub algo: String,
     pub workers: usize,
+    /// Kernel-pool threads per process (>= 1; see
+    /// `linalg::kernels` — results are bit-identical for any value).
+    pub threads: usize,
     pub tau: u64,
     pub iterations: u64,
     /// Constant minibatch size; 0 = the algorithm's theorem schedule
@@ -172,6 +175,7 @@ impl Default for TrainConfig {
             task: "matrix_sensing".into(),
             algo: "sfw-asyn".into(),
             workers: 4,
+            threads: 1,
             tau: 8,
             iterations: 300,
             batch: 0,
@@ -228,7 +232,7 @@ impl TrainConfig {
         // ignored (not silently honored).
         const TRAIN_KEYS: &[&str] = &[
             "task", "algo", "engine", "transport", "tcp-bind", "tcp-await",
-            "artifacts-dir", "workers", "tau", "iterations", "epochs", "batch",
+            "artifacts-dir", "workers", "threads", "tau", "iterations", "epochs", "batch",
             "batch-cap", "batch-scale", "power-iters", "repr", "uplink", "theta",
             "seed", "eval-every", "tol", "step",
         ];
@@ -275,6 +279,7 @@ impl TrainConfig {
             task: cfg.get_str("task", &d.task),
             algo: cfg.get_str("algo", &d.algo),
             workers: cfg.get("workers", d.workers)?,
+            threads: cfg.get("threads", d.threads)?,
             tau: cfg.get("tau", d.tau)?,
             iterations: cfg.get("iterations", d.iterations)?,
             batch: cfg.get("batch", d.batch)?,
@@ -385,6 +390,20 @@ n = 90000
             TrainConfig::load(&bad),
             Err(ConfigError::BadValue(k, _)) if k == "tol"
         ));
+    }
+
+    #[test]
+    fn threads_key_resolves_from_cli_and_file() {
+        let args =
+            Args::parse_from("--threads 4".split_whitespace().map(String::from));
+        assert_eq!(TrainConfig::load(&args).unwrap().threads, 4);
+        let cfg = Config::from_str("[train]\nthreads = 2\n").unwrap();
+        let tc = TrainConfig::resolve(cfg, &Args::parse_from(std::iter::empty::<String>())).unwrap();
+        assert_eq!(tc.threads, 2);
+        // default stays single-threaded (determinism makes this safe to
+        // raise, but opt-in keeps laptops predictable)
+        let tc = TrainConfig::load(&Args::parse_from(std::iter::empty::<String>())).unwrap();
+        assert_eq!(tc.threads, 1);
     }
 
     #[test]

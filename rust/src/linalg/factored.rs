@@ -18,6 +18,7 @@
 
 use std::sync::Arc;
 
+use super::kernels;
 use super::mat::{dot, norm2, Mat};
 use super::op::LinOp;
 use super::svd::jacobi_svd;
@@ -26,6 +27,11 @@ use super::svd::jacobi_svd;
 const DROP_REL: f32 = 1e-9;
 /// Relative singular-value threshold of the SVD re-factorization.
 const SVD_REL: f32 = 1e-7;
+/// Atoms per reduction block in the chunked `apply`/`tapply`/`apply_dot`
+/// paths: fixed-size blocks whose zeroed partials are combined in block
+/// order, so the partition depends only on the atom count — never the
+/// thread budget (the kernels determinism contract).
+const ATOM_CHUNK: usize = 8;
 
 /// A matrix held as a weighted sum of rank-one atoms
 /// `X = sum_i w_i u_i v_i^T`.
@@ -246,22 +252,56 @@ impl FactoredMat {
     /// `<mat(a), X>` for a row-major flattened `a` of length
     /// `rows * cols`: `sum_i w_i * u_i^T mat(a) v_i`, computed atom by
     /// atom without materializing X (the matrix-sensing residual).
+    /// Atom-chunked f64 partials above the kernels work threshold
+    /// (`O(k * rows * cols)` is the heaviest per-sample loop); the
+    /// `w == 0.0` skip is false for NaN, so poisoned weights propagate.
     pub fn inner_flat(&self, a: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), self.rows * self.cols);
-        let mut acc = 0.0f64;
-        for ((&w, u), v) in self.w.iter().zip(&self.us).zip(&self.vs) {
-            if w == 0.0 {
-                continue;
-            }
-            let mut s = 0.0f64;
-            for (r, &ur) in u.iter().enumerate() {
-                if ur != 0.0 {
-                    s += ur as f64 * dot(&a[r * self.cols..(r + 1) * self.cols], v) as f64;
+        let k = self.w.len();
+        let block_acc = |lo: usize, hi: usize| {
+            let mut acc = 0.0f64;
+            for i in lo..hi {
+                let w = self.w[i];
+                if w == 0.0 {
+                    continue;
                 }
+                let (u, v) = (&self.us[i], &self.vs[i]);
+                let mut s = 0.0f64;
+                for (r, &ur) in u.iter().enumerate() {
+                    if ur != 0.0 {
+                        s += ur as f64 * dot(&a[r * self.cols..(r + 1) * self.cols], v) as f64;
+                    }
+                }
+                acc += w as f64 * s;
             }
-            acc += w as f64 * s;
+            acc
+        };
+        let nblocks = if k * self.rows * self.cols >= kernels::PAR_MIN_WORK {
+            k.div_ceil(ATOM_CHUNK)
+        } else {
+            1
+        };
+        if nblocks <= 1 {
+            return block_acc(0, k) as f32;
         }
-        acc as f32
+        kernels::Pool::map_chunks(nblocks, |b| {
+            block_acc(b * ATOM_CHUNK, ((b + 1) * ATOM_CHUNK).min(k))
+        })
+        .into_iter()
+        .sum::<f64>() as f32
+    }
+
+    /// Number of [`ATOM_CHUNK`] blocks the chunked `LinOp` paths use:
+    /// 1 (serial, direct accumulation) while `k * (rows + cols)` is
+    /// below [`kernels::PAR_MIN_WORK`], else `ceil(k / ATOM_CHUNK)`.  A
+    /// function of the problem size ONLY — never the thread budget —
+    /// which is what keeps `--threads N` bit-identical to `--threads 1`.
+    fn atom_blocks(&self, k: usize) -> usize {
+        if k * (self.rows + self.cols) >= kernels::PAR_MIN_WORK {
+            k.div_ceil(ATOM_CHUNK)
+        } else {
+            1
+        }
     }
 
     /// Upper bound on the nuclear norm: `sum_i |w_i| ||u_i|| ||v_i||`
@@ -316,49 +356,117 @@ impl LinOp for FactoredMat {
     }
 
     /// `y = X x = sum_i w_i u_i (v_i . x)` — O(k (d1 + d2)), no dense
-    /// materialization, no allocation.
+    /// materialization; atom-chunked across the thread pool above
+    /// [`kernels::PAR_MIN_WORK`] with block partials combined in block
+    /// order (bit-identical for any thread count).
+    ///
+    /// **NaN contract (poisoned atoms):** the `c == 0.0` skip is false
+    /// for a NaN coefficient — a non-finite atom weight (e.g. a poisoned
+    /// entry from a desynced replay) therefore contaminates every output
+    /// element LOUDLY instead of being silently dropped, so the LMO's
+    /// singular vectors go non-finite and the master's
+    /// `coordinator::sane_rank_one` gate rejects the resulting update.
+    /// Pinned by the poisoned-atom tests here and in
+    /// `rust/tests/factored.rs`.
     fn apply(&self, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), self.cols);
         debug_assert_eq!(y.len(), self.rows);
-        y.iter_mut().for_each(|z| *z = 0.0);
-        for ((&w, u), v) in self.w.iter().zip(&self.us).zip(&self.vs) {
-            let c = w * dot(v, x);
-            if c == 0.0 {
-                continue;
+        let k = self.w.len();
+        let nblocks = self.atom_blocks(k);
+        if nblocks <= 1 {
+            y.iter_mut().for_each(|z| *z = 0.0);
+            for ((&w, u), v) in self.w.iter().zip(&self.us).zip(&self.vs) {
+                let c = w * dot(v, x);
+                if c == 0.0 {
+                    continue;
+                }
+                kernels::axpy(y, c, u);
             }
-            for (yr, &ur) in y.iter_mut().zip(u.iter()) {
-                *yr += c * ur;
+            return;
+        }
+        let partials = kernels::Pool::map_chunks(nblocks, |b| {
+            let mut part = vec![0.0f32; self.rows];
+            for i in b * ATOM_CHUNK..((b + 1) * ATOM_CHUNK).min(k) {
+                let c = self.w[i] * dot(&self.vs[i], x);
+                if c == 0.0 {
+                    continue;
+                }
+                kernels::axpy(&mut part, c, &self.us[i]);
+            }
+            part
+        });
+        y.iter_mut().for_each(|z| *z = 0.0);
+        for part in partials {
+            for (yr, p) in y.iter_mut().zip(part) {
+                *yr += p;
             }
         }
     }
 
-    /// `y = X^T x = sum_i w_i v_i (u_i . x)`.
+    /// `y = X^T x = sum_i w_i v_i (u_i . x)` — same chunking and NaN
+    /// contract as [`FactoredMat::apply`].
     fn tapply(&self, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), self.rows);
         debug_assert_eq!(y.len(), self.cols);
-        y.iter_mut().for_each(|z| *z = 0.0);
-        for ((&w, u), v) in self.w.iter().zip(&self.us).zip(&self.vs) {
-            let c = w * dot(u, x);
-            if c == 0.0 {
-                continue;
+        let k = self.w.len();
+        let nblocks = self.atom_blocks(k);
+        if nblocks <= 1 {
+            y.iter_mut().for_each(|z| *z = 0.0);
+            for ((&w, u), v) in self.w.iter().zip(&self.us).zip(&self.vs) {
+                let c = w * dot(u, x);
+                if c == 0.0 {
+                    continue;
+                }
+                kernels::axpy(y, c, v);
             }
-            for (yc, &vc) in y.iter_mut().zip(v.iter()) {
-                *yc += c * vc;
+            return;
+        }
+        let partials = kernels::Pool::map_chunks(nblocks, |b| {
+            let mut part = vec![0.0f32; self.cols];
+            for i in b * ATOM_CHUNK..((b + 1) * ATOM_CHUNK).min(k) {
+                let c = self.w[i] * dot(&self.us[i], x);
+                if c == 0.0 {
+                    continue;
+                }
+                kernels::axpy(&mut part, c, &self.vs[i]);
+            }
+            part
+        });
+        y.iter_mut().for_each(|z| *z = 0.0);
+        for part in partials {
+            for (yc, p) in y.iter_mut().zip(part) {
+                *yc += p;
             }
         }
     }
 
-    /// `y^T X x = sum_i w_i (y . u_i)(v_i . x)` — allocation-free.
+    /// `y^T X x = sum_i w_i (y . u_i)(v_i . x)` — allocation-free in the
+    /// serial regime; f64 block partials in block order above the work
+    /// threshold.  The `w != 0.0` guard is true for NaN, so a poisoned
+    /// weight propagates (see [`FactoredMat::apply`]).
     fn apply_dot(&self, y: &[f32], x: &[f32]) -> f32 {
         debug_assert_eq!(y.len(), self.rows);
         debug_assert_eq!(x.len(), self.cols);
-        let mut acc = 0.0f64;
-        for ((&w, u), v) in self.w.iter().zip(&self.us).zip(&self.vs) {
-            if w != 0.0 {
-                acc += w as f64 * dot(y, u) as f64 * dot(v, x) as f64;
+        let k = self.w.len();
+        let block_acc = |lo: usize, hi: usize| {
+            let mut acc = 0.0f64;
+            for i in lo..hi {
+                let w = self.w[i];
+                if w != 0.0 {
+                    acc += w as f64 * dot(y, &self.us[i]) as f64 * dot(&self.vs[i], x) as f64;
+                }
             }
+            acc
+        };
+        let nblocks = self.atom_blocks(k);
+        if nblocks <= 1 {
+            return block_acc(0, k) as f32;
         }
-        acc as f32
+        kernels::Pool::map_chunks(nblocks, |b| {
+            block_acc(b * ATOM_CHUNK, ((b + 1) * ATOM_CHUNK).min(k))
+        })
+        .into_iter()
+        .sum::<f64>() as f32
     }
 }
 
@@ -560,6 +668,26 @@ mod tests {
         // stale contents are overwritten, not accumulated
         f.write_dense_into(&mut buf);
         assert!(frob_diff(&buf, &f.to_dense()) < 1e-6);
+    }
+
+    #[test]
+    fn nan_atom_weight_poisons_every_linop_output() {
+        // The `c == 0.0` / `w != 0.0` guards are false/true for NaN, so a
+        // poisoned atom weight (desynced-replay scenario) reaches every
+        // output loudly instead of being silently skipped — even when its
+        // factors are all zeros (NaN * 0.0 = NaN).
+        let mut f = FactoredMat::zeros(3, 2);
+        f.push_atom(1.0, Arc::new(vec![1.0, 2.0, 3.0]), Arc::new(vec![1.0, 0.5]));
+        f.push_atom(f32::NAN, Arc::new(vec![0.0; 3]), Arc::new(vec![0.0; 2]));
+        let mut y = vec![0.0f32; 3];
+        f.apply(&[1.0, 1.0], &mut y);
+        assert!(y.iter().all(|v| v.is_nan()), "apply swallowed the NaN atom: {y:?}");
+        let mut z = vec![0.0f32; 2];
+        f.tapply(&[1.0, 1.0, 1.0], &mut z);
+        assert!(z.iter().all(|v| v.is_nan()), "tapply swallowed the NaN atom: {z:?}");
+        assert!(f.apply_dot(&[1.0, 1.0, 1.0], &[1.0, 1.0]).is_nan());
+        assert!(f.inner_flat(&[1.0; 6]).is_nan());
+        assert!(f.entry(0, 0).is_nan());
     }
 
     #[test]

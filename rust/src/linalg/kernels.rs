@@ -1,0 +1,554 @@
+//! Deterministic SIMD + thread-pooled compute kernels for the LMO hot path.
+//!
+//! Every solver funnels its per-step compute through a handful of loops —
+//! the operator-form power iteration ([`crate::linalg::svd::power_iteration`]),
+//! the per-atom [`crate::linalg::FactoredMat`] sums, and the O(nnz) sparse
+//! gradient.  This module is the ONE implementation those loops share:
+//! runtime-dispatched AVX2+FMA intrinsics with a scalar twin, plus a small
+//! scoped thread pool ([`Pool`]), both engineered so the numeric result is
+//! **bit-identical regardless of SIMD width and thread count**.
+//!
+//! # Dispatch rules
+//!
+//! * On `x86_64`, [`simd_enabled`] gates every intrinsic path behind
+//!   `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`
+//!   — checked at runtime, so one binary serves both old and new hosts.
+//! * [`force_scalar`] pins the scalar twin for benches and property tests
+//!   (the SIMD-vs-scalar pairs in `benches/hotpath.rs` drive it).
+//! * On every other architecture the scalar twin is the only path.
+//!
+//! # Determinism contract
+//!
+//! The contract that lets `--threads N` stay bit-identical to
+//! `--threads 1` (and lets the same-seed dense-vs-factored /
+//! cross-transport suites in `rust/tests/{factored,chaos,sparse}.rs` keep
+//! passing unchanged):
+//!
+//! 1. **Lane-striped f64 accumulation.**  Dot-like reductions use eight
+//!    f64 lane accumulators with the fixed assignment `lane = i % 8`,
+//!    combined by the fixed tree `(l0+l4, l1+l5, l2+l6, l3+l7)` then
+//!    `(c0+c2) + (c1+c3)`.  The AVX2 path computes literally the same
+//!    sums: each f32 product is exact in f64 (24+24 <= 53 mantissa bits),
+//!    so `_mm256_fmadd_pd` rounds once per add exactly like the scalar
+//!    `lane += a as f64 * b as f64`.
+//! 2. **Fixed-size chunks, fixed combine order.**  Long reductions are
+//!    split into [`CHUNK`]-element partial sums combined sequentially in
+//!    chunk-index order — the same order whether the chunks were computed
+//!    serially or by [`Pool`] workers.
+//! 3. **Size-gated code paths.**  Whether a call takes the serial or the
+//!    block-partial path depends ONLY on the problem size
+//!    ([`PAR_MIN_WORK`]), never on the configured thread count.  Block
+//!    partials start from zeroed buffers even when computed serially
+//!    (direct accumulation could produce `-0.0` where `0.0 + (-0.0)`
+//!    gives `+0.0`).
+//! 4. **NaN propagation.**  No kernel skips an element because it is NaN:
+//!    [`max_abs`] detects NaNs explicitly and returns NaN, and callers'
+//!    `== 0.0` skip-guards are false for NaN, so a poisoned value always
+//!    reaches the output (see `FactoredMat::apply`).
+//!
+//! # The pool
+//!
+//! [`Pool`] is not a persistent worker set: every call spawns scoped
+//! `std::thread` workers over contiguous chunk stripes (the
+//! `session::harness` idiom) and joins them before returning — no
+//! channels at all, so there is nothing unbounded to leak.  The process
+//! shares one thread budget ([`set_pool_threads`], wired from
+//! `TrainSpec::threads` in `RunCtx::new`); concurrent runs racing on it
+//! are benign because results are thread-count-invariant by construction.
+//!
+//! # Adding a kernel
+//!
+//! 1. Write the scalar twin first, using the lane-striped reduction (or
+//!    no reduction at all for elementwise maps).
+//! 2. Mirror it with `#[target_feature(enable = "avx2", enable = "fma")]`
+//!    intrinsics that compute the SAME sums in the SAME order — a `//
+//!    SAFETY:` comment on every `unsafe` (enforced by `sfw lint`).
+//! 3. Dispatch through [`simd_enabled`] and add a bitwise SIMD-vs-scalar
+//!    property test across odd lengths and remainder tails below.
+//! 4. If the op is worth threading, split it on fixed-size chunks and
+//!    combine partials in chunk order; gate on [`PAR_MIN_WORK`].
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Elements per reduction chunk (a multiple of 8 so full chunks hold
+/// whole lane stripes).  Fixed: changing it changes results (legally —
+/// nothing pins bits across builds, only across thread/SIMD configs).
+pub const CHUNK: usize = 1024;
+
+/// Minimum per-call element work before a kernel takes the block-partial
+/// (threadable) path.  Below it the serial path is both faster and — by
+/// contract rule 3 — the only path, independent of the thread budget.
+pub const PAR_MIN_WORK: usize = 1 << 17;
+
+static POOL_THREADS: AtomicUsize = AtomicUsize::new(1);
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Set the process-wide thread budget (floored at 1).  Wired from
+/// `TrainSpec::threads` when a run context is built; every worker in the
+/// process shares it.
+pub fn set_pool_threads(n: usize) {
+    POOL_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Current thread budget.
+pub fn pool_threads() -> usize {
+    POOL_THREADS.load(Ordering::Relaxed)
+}
+
+/// Pin the scalar twin even on AVX2 hosts (bench/test knob; results are
+/// bit-identical either way, this only switches the instruction mix).
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// Whether the intrinsic paths are live: `x86_64` with runtime-detected
+/// AVX2 + FMA and no [`force_scalar`] override.
+#[inline]
+pub fn simd_enabled() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        !FORCE_SCALAR.load(Ordering::Relaxed)
+            && is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Human-readable CPU dispatch state for bench/CI environment records
+/// ("avx2+fma" or "scalar") — a bench compare across differing values
+/// must be flagged, not silently judged (`scripts/bench_snapshot.py`).
+pub fn cpu_features() -> String {
+    if simd_enabled() { "avx2+fma".into() } else { "scalar".into() }
+}
+
+// ---------------------------------------------------------------------------
+// Scoped thread pool
+// ---------------------------------------------------------------------------
+
+/// Scoped fork-join helper over fixed chunk grids.  See the module docs:
+/// stateless, channel-free, deterministic by construction because chunk
+/// results are combined in chunk-index order regardless of which thread
+/// produced them.
+pub struct Pool;
+
+impl Pool {
+    /// Evaluate `f(0..nchunks)` and return the results **in chunk order**,
+    /// striping contiguous chunk ranges across up to [`pool_threads`]
+    /// scoped workers.  With a budget of 1 (or a single chunk) this is a
+    /// plain serial map — same outputs by construction.
+    pub fn map_chunks<T, F>(nchunks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let threads = pool_threads().min(nchunks).max(1);
+        if threads <= 1 {
+            return (0..nchunks).map(f).collect();
+        }
+        let mut out = Vec::with_capacity(nchunks);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let f = &f;
+                    let lo = nchunks * t / threads;
+                    let hi = nchunks * (t + 1) / threads;
+                    s.spawn(move || (lo..hi).map(f).collect::<Vec<T>>())
+                })
+                .collect();
+            // join in spawn order => chunk order is preserved
+            for h in handles {
+                out.extend(h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)));
+            }
+        });
+        out
+    }
+
+    /// Scatter variant: split `out` into `chunk`-sized disjoint slices and
+    /// run `f(chunk_index, slice)` on each, striped across the pool.  Safe
+    /// parallelism without any `unsafe`: `chunks_mut` hands every worker
+    /// exclusive slices.  Outputs are disjoint, so this is trivially
+    /// thread-count-invariant when `f(i, _)` itself is deterministic.
+    pub fn for_chunks_mut<F>(out: &mut [f32], chunk: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        debug_assert!(chunk > 0);
+        let mut parts: Vec<(usize, &mut [f32])> = out.chunks_mut(chunk).enumerate().collect();
+        let n = parts.len();
+        let threads = pool_threads().min(n).max(1);
+        if threads <= 1 {
+            for (i, p) in parts {
+                f(i, p);
+            }
+            return;
+        }
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(threads);
+            for t in (0..threads).rev() {
+                let stripe = parts.split_off(n * t / threads);
+                let f = &f;
+                handles.push(s.spawn(move || {
+                    for (i, p) in stripe {
+                        f(i, p);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap_or_else(|e| std::panic::resume_unwind(e));
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reductions
+// ---------------------------------------------------------------------------
+
+/// The fixed lane-combine tree of contract rule 1.
+#[inline]
+fn combine_lanes(l: &[f64; 8]) -> f64 {
+    let c = [l[0] + l[4], l[1] + l[5], l[2] + l[6], l[3] + l[7]];
+    (c[0] + c[2]) + (c[1] + c[3])
+}
+
+fn dot_chunk_scalar(a: &[f32], b: &[f32]) -> f64 {
+    let mut lanes = [0.0f64; 8];
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        lanes[i % 8] += x as f64 * y as f64;
+    }
+    combine_lanes(&lanes)
+}
+
+/// AVX2+FMA twin of [`dot_chunk_scalar`]: acc0 holds lanes 0..4, acc1
+/// lanes 4..8, so element `i` lands in lane `i % 8` exactly like the
+/// scalar stripe; the f32xf32 product is exact in f64, so the fused add
+/// rounds identically to the scalar `lane += x as f64 * y as f64`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_chunk_avx2(a: &[f32], b: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let blocks = n / 8;
+    let mut lanes = [0.0f64; 8];
+    // SAFETY: every pointer offset below is < n elements into a/b
+    // (i * 8 + 7 < blocks * 8 <= n), and loadu/storeu tolerate any
+    // alignment.  The caller guaranteed a.len() == b.len().
+    unsafe {
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        for i in 0..blocks {
+            let va = _mm256_loadu_ps(pa.add(i * 8));
+            let vb = _mm256_loadu_ps(pb.add(i * 8));
+            let lo = _mm256_mul_pd(
+                _mm256_cvtps_pd(_mm256_castps256_ps128(va)),
+                _mm256_cvtps_pd(_mm256_castps256_ps128(vb)),
+            );
+            let hi = _mm256_mul_pd(
+                _mm256_cvtps_pd(_mm256_extractf128_ps(va, 1)),
+                _mm256_cvtps_pd(_mm256_extractf128_ps(vb, 1)),
+            );
+            acc0 = _mm256_add_pd(acc0, lo);
+            acc1 = _mm256_add_pd(acc1, hi);
+        }
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+    }
+    for j in blocks * 8..n {
+        lanes[j % 8] += a[j] as f64 * b[j] as f64;
+    }
+    combine_lanes(&lanes)
+}
+
+#[inline]
+fn dot_chunk(a: &[f32], b: &[f32]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_enabled() {
+            // SAFETY: simd_enabled() verified avx2+fma at runtime, and the
+            // slices have equal length (asserted by the public entry).
+            return unsafe { dot_chunk_avx2(a, b) };
+        }
+    }
+    dot_chunk_scalar(a, b)
+}
+
+/// `sum_i a[i] * b[i]` with the deterministic f64 reduction of the module
+/// contract.  Thread-parallel above [`PAR_MIN_WORK`]; the chunk partials
+/// are combined in chunk order either way, so the result is independent
+/// of both the thread budget and SIMD availability.
+pub fn dot64(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let nchunks = n.div_ceil(CHUNK).max(1);
+    let chunk_dot = |c: usize| {
+        let lo = c * CHUNK;
+        let hi = (lo + CHUNK).min(n);
+        dot_chunk(&a[lo..hi], &b[lo..hi])
+    };
+    if nchunks == 1 {
+        return chunk_dot(0);
+    }
+    if n >= PAR_MIN_WORK && pool_threads() > 1 {
+        Pool::map_chunks(nchunks, chunk_dot).into_iter().sum()
+    } else {
+        (0..nchunks).map(chunk_dot).sum()
+    }
+}
+
+/// `sum_i v[i]^2` — [`dot64`] against itself (one reduction to rule them
+/// all: `norm2`, `frob_norm`, and the PJRT tolerance checks agree by
+/// construction).
+#[inline]
+pub fn sumsq(v: &[f32]) -> f64 {
+    dot64(v, v)
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise axpy
+// ---------------------------------------------------------------------------
+
+fn axpy_scalar(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+        // f32::mul_add is a correctly-rounded fused multiply-add on every
+        // target, so this matches _mm256_fmadd_ps bit-for-bit.
+        *yi = xi.mul_add(a, *yi);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_avx2(y: &mut [f32], a: f32, x: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = y.len();
+    let blocks = n / 8;
+    // SAFETY: every offset is < n elements into x/y (i * 8 + 7 <
+    // blocks * 8 <= n); loadu/storeu tolerate any alignment; x and y are
+    // distinct borrows so the store cannot alias the loads.
+    unsafe {
+        let va = _mm256_set1_ps(a);
+        let (py, px) = (y.as_mut_ptr(), x.as_ptr());
+        for i in 0..blocks {
+            let vy = _mm256_loadu_ps(py.add(i * 8));
+            let vx = _mm256_loadu_ps(px.add(i * 8));
+            _mm256_storeu_ps(py.add(i * 8), _mm256_fmadd_ps(vx, va, vy));
+        }
+    }
+    for j in blocks * 8..n {
+        y[j] = x[j].mul_add(a, y[j]);
+    }
+}
+
+/// `y[i] += a * x[i]`, fused (one rounding per element on every path).
+/// Elementwise — no reduction, so order never matters; SIMD and scalar
+/// agree bitwise because both use a correctly-rounded FMA.
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_enabled() {
+            // SAFETY: simd_enabled() verified avx2+fma at runtime; lengths
+            // are equal (asserted above).
+            unsafe { axpy_avx2(y, a, x) };
+            return;
+        }
+    }
+    axpy_scalar(y, a, x);
+}
+
+// ---------------------------------------------------------------------------
+// max |x| with an explicit NaN contract
+// ---------------------------------------------------------------------------
+
+fn max_abs_scalar(v: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    let mut any_nan = false;
+    for &x in v {
+        any_nan |= x.is_nan();
+        m = m.max(x.abs());
+    }
+    if any_nan { f32::NAN } else { m }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn max_abs_avx2(v: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = v.len();
+    let blocks = n / 8;
+    let mut head = [0.0f32; 8];
+    let mut any_nan = false;
+    // SAFETY: every offset is < n elements into v (i * 8 + 7 <
+    // blocks * 8 <= n); loadu tolerates any alignment.  The abs mask
+    // clears only the sign bit; NaNs are detected separately via the
+    // unordered self-compare, so max_ps's NaN-dropping is irrelevant.
+    unsafe {
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let mut vmax = _mm256_setzero_ps();
+        let mut vnan = _mm256_setzero_ps();
+        let p = v.as_ptr();
+        for i in 0..blocks {
+            let x = _mm256_loadu_ps(p.add(i * 8));
+            vnan = _mm256_or_ps(vnan, _mm256_cmp_ps(x, x, _CMP_UNORD_Q));
+            vmax = _mm256_max_ps(vmax, _mm256_and_ps(x, absmask));
+        }
+        any_nan |= _mm256_movemask_ps(vnan) != 0;
+        _mm256_storeu_ps(head.as_mut_ptr(), vmax);
+    }
+    let mut m = 0.0f32;
+    for &h in &head {
+        m = m.max(h);
+    }
+    for j in blocks * 8..n {
+        any_nan |= v[j].is_nan();
+        m = m.max(v[j].abs());
+    }
+    if any_nan { f32::NAN } else { m }
+}
+
+/// `max_i |v[i]|` with an explicit NaN-propagation contract: **any NaN in
+/// the input returns NaN** (a plain `f32::max` fold silently skips NaNs,
+/// which let a poisoned gradient slide through the int8 `GradCodec` scale
+/// scan unflagged).  Max over the non-NaN values is order-independent, so
+/// SIMD and scalar agree bitwise.  Empty input returns 0.0.
+pub fn max_abs(v: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_enabled() {
+            // SAFETY: simd_enabled() verified avx2 (and fma) at runtime.
+            return unsafe { max_abs_avx2(v) };
+        }
+    }
+    max_abs_scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Serial all-scalar reference: the chunked reduction with the
+    /// intrinsic path pinned off.  The public `dot64` must match this
+    /// bit-for-bit whatever the host supports.
+    fn dot64_scalar_ref(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let nchunks = n.div_ceil(CHUNK).max(1);
+        (0..nchunks)
+            .map(|c| {
+                let lo = c * CHUNK;
+                let hi = (lo + CHUNK).min(n);
+                dot_chunk_scalar(&a[lo..hi], &b[lo..hi])
+            })
+            .sum()
+    }
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn dot_simd_matches_scalar_bitwise_across_lengths() {
+        // empty, 1-element, every remainder tail mod 8, chunk boundaries
+        let lens: Vec<usize> =
+            (0..=17).chain([31, 64, 100, 1023, 1024, 1025, 2048 + 3]).collect();
+        for n in lens {
+            let a = randv(n, 1000 + n as u64);
+            let b = randv(n, 2000 + n as u64);
+            let got = dot64(&a, &b);
+            let want = dot64_scalar_ref(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "len {n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn dot_is_bit_invariant_in_thread_count() {
+        let n = PAR_MIN_WORK + 12345; // odd tail, forces the parallel path
+        let a = randv(n, 7);
+        let b = randv(n, 8);
+        let serial = dot64(&a, &b);
+        set_pool_threads(4);
+        let threaded = dot64(&a, &b);
+        set_pool_threads(1);
+        assert_eq!(serial.to_bits(), threaded.to_bits());
+        assert_eq!(serial.to_bits(), dot64_scalar_ref(&a, &b).to_bits());
+    }
+
+    #[test]
+    fn axpy_simd_matches_scalar_bitwise() {
+        for n in (0..=17).chain([100, 1000]) {
+            let x = randv(n, 300 + n as u64);
+            let y0 = randv(n, 400 + n as u64);
+            let mut via_dispatch = y0.clone();
+            axpy(&mut via_dispatch, 0.37, &x);
+            let mut via_scalar = y0.clone();
+            axpy_scalar(&mut via_scalar, 0.37, &x);
+            for (a, b) in via_dispatch.iter().zip(&via_scalar) {
+                assert_eq!(a.to_bits(), b.to_bits(), "len {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_abs_matches_scalar_and_propagates_nan() {
+        for n in (0..=17).chain([100, 999]) {
+            let v = randv(n, 500 + n as u64);
+            let got = max_abs(&v);
+            let want = max_abs_scalar(&v);
+            assert_eq!(got.to_bits(), want.to_bits(), "len {n}");
+        }
+        assert_eq!(max_abs(&[]), 0.0);
+        assert_eq!(max_abs(&[-3.5]), 3.5);
+        // NaN anywhere (vector body or tail) => NaN out, on both paths
+        for pos in [0, 3, 7, 8, 20, 22] {
+            let mut v = randv(23, 600);
+            v[pos] = f32::NAN;
+            assert!(max_abs(&v).is_nan(), "NaN at {pos} swallowed");
+            assert!(max_abs_scalar(&v).is_nan());
+        }
+    }
+
+    #[test]
+    fn forced_scalar_dispatch_is_bit_identical() {
+        let a = randv(4096 + 5, 31);
+        let b = randv(4096 + 5, 32);
+        let native = dot64(&a, &b);
+        force_scalar(true);
+        let scalar = dot64(&a, &b);
+        force_scalar(false);
+        assert_eq!(native.to_bits(), scalar.to_bits());
+    }
+
+    #[test]
+    fn map_chunks_preserves_chunk_order() {
+        set_pool_threads(3);
+        let got = Pool::map_chunks(17, |i| i * i);
+        set_pool_threads(1);
+        assert_eq!(got, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        assert!(Pool::map_chunks(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn for_chunks_mut_covers_every_slice_once() {
+        let mut buf = vec![0.0f32; 103];
+        set_pool_threads(4);
+        Pool::for_chunks_mut(&mut buf, 10, |i, s| {
+            for x in s.iter_mut() {
+                *x += 1.0 + i as f32;
+            }
+        });
+        set_pool_threads(1);
+        for (j, &x) in buf.iter().enumerate() {
+            assert_eq!(x, 1.0 + (j / 10) as f32, "element {j}");
+        }
+    }
+
+    #[test]
+    fn pool_budget_floors_at_one() {
+        set_pool_threads(0);
+        assert_eq!(pool_threads(), 1);
+    }
+}

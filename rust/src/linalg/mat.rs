@@ -2,9 +2,19 @@
 //!
 //! f32 matches the XLA artifact dtype so the native Rust math path and the
 //! PJRT path are directly comparable in tests.  The hot-loop operations
-//! (rank-one update, scaled add, matvec) are written allocation-free.
+//! (rank-one update, scaled add, matvec) are written allocation-free and
+//! route their inner loops through [`crate::linalg::kernels`] — the one
+//! SIMD+threaded implementation whose results are bit-identical across
+//! SIMD width and thread count (see the kernels module docs).
 
+use super::kernels;
 use crate::util::rng::Rng;
+
+/// Rows per [`Mat::matvec`] output chunk (disjoint-output parallelism).
+const MV_ROW_BLOCK: usize = 16;
+/// Rows per [`Mat::tmatvec`] reduction block (fixed-size block partials
+/// combined in block order — the partition depends only on the shape).
+const TMV_ROW_BLOCK: usize = 64;
 
 /// Dense row-major matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -64,12 +74,10 @@ impl Mat {
         self.data.iter_mut().for_each(|x| *x *= s);
     }
 
-    /// self += s * other (elementwise axpy).
+    /// self += s * other (elementwise fused axpy).
     pub fn axpy(&mut self, s: f32, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
-            *a += s * b;
-        }
+        kernels::axpy(&mut self.data, s, &other.data);
     }
 
     /// Frank-Wolfe iterate update:
@@ -90,26 +98,67 @@ impl Mat {
         }
     }
 
-    /// y = self @ x  (matvec).
+    /// y = self @ x  (matvec).  Output rows are disjoint, so the
+    /// row-chunked parallel path is bit-identical to the serial one for
+    /// any thread count.
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
+        if self.rows * self.cols >= kernels::PAR_MIN_WORK && kernels::pool_threads() > 1 {
+            kernels::Pool::for_chunks_mut(y, MV_ROW_BLOCK, |b, ys| {
+                let r0 = b * MV_ROW_BLOCK;
+                for (i, yr) in ys.iter_mut().enumerate() {
+                    *yr = dot(self.row(r0 + i), x);
+                }
+            });
+            return;
+        }
         for (r, yr) in y.iter_mut().enumerate() {
             *yr = dot(self.row(r), x);
         }
     }
 
     /// y = self^T @ x (transposed matvec, cache-friendly row sweep).
+    /// Above [`kernels::PAR_MIN_WORK`] the rows are cut into fixed
+    /// [`TMV_ROW_BLOCK`] blocks whose zeroed partials are combined in
+    /// block order — the partition depends only on the shape, so
+    /// `--threads N` is bit-identical to `--threads 1`.
     pub fn tmatvec(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.rows);
         assert_eq!(y.len(), self.cols);
-        y.iter_mut().for_each(|v| *v = 0.0);
-        for (r, &xr) in x.iter().enumerate() {
-            if xr == 0.0 {
-                continue;
+        let nblocks = if self.rows * self.cols >= kernels::PAR_MIN_WORK {
+            self.rows.div_ceil(TMV_ROW_BLOCK)
+        } else {
+            1
+        };
+        if nblocks <= 1 {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            for (r, &xr) in x.iter().enumerate() {
+                // NaN-safe skip: NaN != 0.0, so a poisoned x propagates
+                if xr == 0.0 {
+                    continue;
+                }
+                kernels::axpy(y, xr, self.row(r));
             }
-            for (yc, &a) in y.iter_mut().zip(self.row(r).iter()) {
-                *yc += xr * a;
+            return;
+        }
+        let partials = kernels::Pool::map_chunks(nblocks, |b| {
+            let lo = b * TMV_ROW_BLOCK;
+            let hi = (lo + TMV_ROW_BLOCK).min(self.rows);
+            let mut part = vec![0.0f32; self.cols];
+            for r in lo..hi {
+                let xr = x[r];
+                if xr == 0.0 {
+                    continue;
+                }
+                kernels::axpy(&mut part, xr, self.row(r));
+            }
+            part
+        });
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for part in partials {
+            for (yc, p) in y.iter_mut().zip(part) {
+                *yc += p;
             }
         }
     }
@@ -147,48 +196,34 @@ impl Mat {
     /// <self, other> = trace(self^T other).
     pub fn inner(&self, other: &Mat) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        self.data
-            .iter()
-            .zip(other.data.iter())
-            .map(|(a, b)| *a as f64 * *b as f64)
-            .sum()
+        kernels::dot64(&self.data, &other.data)
     }
 
     pub fn frob_norm(&self) -> f64 {
-        self.data.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt()
+        kernels::sumsq(&self.data).sqrt()
     }
 
-    /// max |a_ij|.
+    /// max |a_ij|, with the kernel layer's explicit NaN contract: any NaN
+    /// entry returns NaN instead of being silently skipped by an
+    /// `f32::max` fold (the int8 `GradCodec` scale scan relies on this to
+    /// surface a poisoned gradient).
     pub fn max_abs(&self) -> f32 {
-        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+        kernels::max_abs(&self.data)
     }
 }
 
 /// dot product with f64 accumulation (keeps the native path close to XLA's
-/// f32-with-wide-accumulator semantics on these sizes).
+/// f32-with-wide-accumulator semantics on these sizes).  Dispatches to the
+/// deterministic SIMD reduction in [`crate::linalg::kernels`].
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f64;
-    // 4-way unrolled; LLVM vectorizes this cleanly.
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc += a[j] as f64 * b[j] as f64
-            + a[j + 1] as f64 * b[j + 1] as f64
-            + a[j + 2] as f64 * b[j + 2] as f64
-            + a[j + 3] as f64 * b[j + 3] as f64;
-    }
-    for j in chunks * 4..a.len() {
-        acc += a[j] as f64 * b[j] as f64;
-    }
-    acc as f32
+    kernels::dot64(a, b) as f32
 }
 
 /// ||v||_2 with f64 accumulation.
 #[inline]
 pub fn norm2(v: &[f32]) -> f64 {
-    v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt()
+    kernels::sumsq(v).sqrt()
 }
 
 /// v /= ||v||; returns the pre-normalization norm.

@@ -1,6 +1,10 @@
 //! Dense + factored linear-algebra substrate (no external BLAS in the
 //! offline build).
 //!
+//! `kernels` — the SIMD (AVX2+FMA, runtime-dispatched) + scoped-thread
+//! compute kernels every hot loop routes through, deterministic by
+//! construction: results are bit-identical across SIMD width and thread
+//! count (see the [`kernels`] module docs for the contract);
 //! `mat` — row-major f32 matrices with allocation-free hot-loop ops;
 //! `op` — the [`LinOp`] implicit-operator trait the LMO runs against;
 //! `factored` — [`FactoredMat`], the iterate as a rank-one atom list
@@ -27,6 +31,7 @@
 pub mod factored;
 pub mod feedback;
 pub mod iterate;
+pub mod kernels;
 pub mod mat;
 pub mod op;
 pub mod project;

@@ -11,7 +11,13 @@
 //!
 //! [`FactoredMat`]: crate::linalg::FactoredMat
 
+use super::kernels;
 use super::mat::{dot, Mat};
+
+/// Rows per f64 partial block of the dense [`LinOp::apply_dot`] override
+/// (fixed-size blocks combined in block order; see the kernels
+/// determinism contract).
+const AD_ROW_BLOCK: usize = 64;
 
 /// A linear operator `A: R^cols -> R^rows` exposed through matvecs.
 pub trait LinOp {
@@ -46,15 +52,33 @@ impl LinOp for Mat {
     /// Row-wise `sum_r y_r * (A x)_r` with the same f32-round-then-f64-
     /// accumulate placement as `dot(y, A x)` (equal to it up to f64
     /// summation order), so the generic LMO matches the historical dense
-    /// path — without the `A x` scratch vector.
+    /// path — without the `A x` scratch vector.  Above the kernels work
+    /// threshold the row loop is cut into fixed [`AD_ROW_BLOCK`] f64
+    /// partials combined in block order (bit-identical for any thread
+    /// count).
     fn apply_dot(&self, y: &[f32], x: &[f32]) -> f32 {
         debug_assert_eq!(y.len(), self.rows);
         debug_assert_eq!(x.len(), self.cols);
-        let mut acc = 0.0f64;
-        for (r, &yr) in y.iter().enumerate() {
-            acc += yr as f64 * dot(self.row(r), x) as f64;
+        let block_acc = |lo: usize, hi: usize| {
+            let mut acc = 0.0f64;
+            for r in lo..hi {
+                acc += y[r] as f64 * dot(self.row(r), x) as f64;
+            }
+            acc
+        };
+        let nblocks = if self.rows * self.cols >= kernels::PAR_MIN_WORK {
+            self.rows.div_ceil(AD_ROW_BLOCK)
+        } else {
+            1
+        };
+        if nblocks <= 1 {
+            return block_acc(0, self.rows) as f32;
         }
-        acc as f32
+        kernels::Pool::map_chunks(nblocks, |b| {
+            block_acc(b * AD_ROW_BLOCK, ((b + 1) * AD_ROW_BLOCK).min(self.rows))
+        })
+        .into_iter()
+        .sum::<f64>() as f32
     }
 }
 

@@ -13,8 +13,17 @@
 //! replacement, so the same observed entry can contribute twice); the
 //! matvecs are linear in the triple list, which makes that free.
 
+use super::kernels;
 use super::mat::Mat;
 use super::op::LinOp;
+
+/// Triples per reduction block in the chunked `LinOp` paths: fixed-size
+/// nnz ranges whose zeroed partials are combined in block order, so the
+/// partition depends only on `nnz` — never the thread budget (the
+/// kernels determinism contract).  Within a block the triples are
+/// processed in storage order, which keeps duplicate coordinates summing
+/// deterministically.
+const NNZ_BLOCK: usize = 1 << 15;
 
 /// Sparse `rows x cols` matrix as unsorted COO triples.
 #[derive(Clone, Debug)]
@@ -62,6 +71,18 @@ impl CooMat {
             .map(|((&i, &j), &v)| (i as usize, j as usize, v))
     }
 
+    /// Number of [`NNZ_BLOCK`] ranges the chunked `LinOp` paths use: 1
+    /// (serial, identical to the historical scatter loop) while `nnz` is
+    /// below [`kernels::PAR_MIN_WORK`], else `ceil(nnz / NNZ_BLOCK)`.  A
+    /// function of `nnz` ONLY, never the thread budget.
+    fn nnz_blocks(&self) -> usize {
+        if self.vals.len() >= kernels::PAR_MIN_WORK {
+            self.vals.len().div_ceil(NNZ_BLOCK)
+        } else {
+            1
+        }
+    }
+
     /// Dense materialization (tests / small dims only).
     pub fn to_dense(&self) -> Mat {
         let mut m = Mat::zeros(self.rows, self.cols);
@@ -80,35 +101,87 @@ impl LinOp for CooMat {
         self.cols
     }
 
-    /// `y = A x`: one fused multiply-add per stored triple — O(nnz).
+    /// `y = A x`: one multiply-add per stored triple — O(nnz).  Above
+    /// the kernels work threshold the triple list is cut into fixed
+    /// [`NNZ_BLOCK`] ranges scattered into zeroed per-block partials and
+    /// combined in block order (bit-identical for any thread count).
     fn apply(&self, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), self.cols);
         debug_assert_eq!(y.len(), self.rows);
+        let nblocks = self.nnz_blocks();
+        if nblocks <= 1 {
+            y.iter_mut().for_each(|z| *z = 0.0);
+            for ((&i, &j), &v) in self.row_idx.iter().zip(&self.col_idx).zip(&self.vals) {
+                y[i as usize] += v * x[j as usize];
+            }
+            return;
+        }
+        let partials = kernels::Pool::map_chunks(nblocks, |b| {
+            let mut part = vec![0.0f32; self.rows];
+            for t in b * NNZ_BLOCK..((b + 1) * NNZ_BLOCK).min(self.vals.len()) {
+                part[self.row_idx[t] as usize] += self.vals[t] * x[self.col_idx[t] as usize];
+            }
+            part
+        });
         y.iter_mut().for_each(|z| *z = 0.0);
-        for ((&i, &j), &v) in self.row_idx.iter().zip(&self.col_idx).zip(&self.vals) {
-            y[i as usize] += v * x[j as usize];
+        for part in partials {
+            for (yr, p) in y.iter_mut().zip(part) {
+                *yr += p;
+            }
         }
     }
 
-    /// `y = A^T x` — O(nnz).
+    /// `y = A^T x` — O(nnz), same chunking as [`CooMat::apply`].
     fn tapply(&self, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), self.rows);
         debug_assert_eq!(y.len(), self.cols);
+        let nblocks = self.nnz_blocks();
+        if nblocks <= 1 {
+            y.iter_mut().for_each(|z| *z = 0.0);
+            for ((&i, &j), &v) in self.row_idx.iter().zip(&self.col_idx).zip(&self.vals) {
+                y[j as usize] += v * x[i as usize];
+            }
+            return;
+        }
+        let partials = kernels::Pool::map_chunks(nblocks, |b| {
+            let mut part = vec![0.0f32; self.cols];
+            for t in b * NNZ_BLOCK..((b + 1) * NNZ_BLOCK).min(self.vals.len()) {
+                part[self.col_idx[t] as usize] += self.vals[t] * x[self.row_idx[t] as usize];
+            }
+            part
+        });
         y.iter_mut().for_each(|z| *z = 0.0);
-        for ((&i, &j), &v) in self.row_idx.iter().zip(&self.col_idx).zip(&self.vals) {
-            y[j as usize] += v * x[i as usize];
+        for part in partials {
+            for (yc, p) in y.iter_mut().zip(part) {
+                *yc += p;
+            }
         }
     }
 
-    /// `y^T A x = sum_t v_t * y[i_t] * x[j_t]` — allocation-free O(nnz).
+    /// `y^T A x = sum_t v_t * y[i_t] * x[j_t]` — allocation-free O(nnz)
+    /// in the serial regime; f64 block partials in block order above the
+    /// work threshold.
     fn apply_dot(&self, y: &[f32], x: &[f32]) -> f32 {
         debug_assert_eq!(y.len(), self.rows);
         debug_assert_eq!(x.len(), self.cols);
-        let mut acc = 0.0f64;
-        for ((&i, &j), &v) in self.row_idx.iter().zip(&self.col_idx).zip(&self.vals) {
-            acc += v as f64 * y[i as usize] as f64 * x[j as usize] as f64;
+        let block_acc = |lo: usize, hi: usize| {
+            let mut acc = 0.0f64;
+            for t in lo..hi {
+                acc += self.vals[t] as f64
+                    * y[self.row_idx[t] as usize] as f64
+                    * x[self.col_idx[t] as usize] as f64;
+            }
+            acc
+        };
+        let nblocks = self.nnz_blocks();
+        if nblocks <= 1 {
+            return block_acc(0, self.vals.len()) as f32;
         }
-        acc as f32
+        kernels::Pool::map_chunks(nblocks, |b| {
+            block_acc(b * NNZ_BLOCK, ((b + 1) * NNZ_BLOCK).min(self.vals.len()))
+        })
+        .into_iter()
+        .sum::<f64>() as f32
     }
 }
 

@@ -7,6 +7,12 @@
 //! [`FactoredMat`](crate::linalg::FactoredMat) atom list — without
 //! materializing anything, and without allocating beyond its output
 //! vectors (the sigma recompute goes through [`LinOp::apply_dot`]).
+//! The SIMD + thread-pool acceleration of
+//! [`kernels`](crate::linalg::kernels) reaches the LMO transparently
+//! through this seam: every `apply`/`tapply`/`apply_dot` an implementor
+//! routes through the kernel layer speeds up the power iteration with no
+//! change here — and bit-identically across SIMD width and thread count,
+//! per the kernels determinism contract.
 
 use super::mat::{norm2, normalize, Mat};
 use super::op::LinOp;

@@ -42,6 +42,7 @@
 //!   sfw worker --connect 127.0.0.1:7070 --rank 0 --algo svrf-asyn --seed 42 --batch 64
 //!   sfw train --config run.ini --train.workers 16
 //!   sfw train --algo sfw-asyn --workers 4 --chaos.plan flaky-net --chaos.seed 7
+//!   sfw train --algo sfw-asyn --workers 4 --threads 8   # kernel pool; bit-identical to --threads 1
 //!   sfw sweep --smoke
 //!   sfw sweep --sweep.algos sfw-dist,sfw-asyn --sweep.workers 1,3,7,15 \
 //!             --sweep.target 0.02 --name speedup
@@ -377,6 +378,11 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         // column on the tol=0 cell and an early gap-stop on the other.
         let gap = SweepRunner::new().run(&SweepSpec::smoke_gap())?;
         result.cells.extend(gap.cells);
+        // And the threaded-kernels twins (56x40 sfw-asyn, threads 1 vs
+        // 4); check_smoke_bytes.py asserts exactly equal bytes and final
+        // loss between them — the kernels determinism contract in CI.
+        let threads = SweepRunner::new().run(&SweepSpec::smoke_threads())?;
+        result.cells.extend(threads.cells);
     }
     result.table().print();
     let out_dir = args.get_str("out-dir", "bench_out");

@@ -46,6 +46,12 @@ impl RunCtx {
     /// is seeded by `spec.seed`; [`TaskSpec::Prebuilt`] reuses the given
     /// workload verbatim (shared data across runs).
     pub fn new(spec: &TrainSpec) -> Result<RunCtx, SessionError> {
+        // One kernel pool per process, shared by every worker thread
+        // (master-side and `run_worker` processes alike).  Concurrent
+        // runs racing on the budget are benign: kernel results are
+        // thread-count-invariant by construction, so the budget only
+        // moves wall-clock, never numbers.
+        crate::linalg::kernels::set_pool_threads(spec.threads);
         let (obj, workload) = build_task(spec);
         let engines = build_engine_factory(spec, obj.clone(), workload)?;
         Ok(RunCtx {

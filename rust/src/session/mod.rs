@@ -127,6 +127,29 @@
 //! rule (pgd, sva, dfw-power) reject non-vanilla policies at spec
 //! validation but still honor `--tol`.
 //!
+//! # Threaded-kernels quickstart (`--threads`)
+//!
+//! Every hot linear-algebra loop (dense matvecs, factored atom
+//! application, the sparse COO gradient, the reductions behind
+//! `frob_norm`/`inner`) routes through
+//! [`crate::linalg::kernels`] — runtime-dispatched AVX2+FMA SIMD plus a
+//! repo-native scoped thread pool.  `--threads N` sizes the pool:
+//!
+//! ```text
+//! sfw train --task matrix_sensing --algo sfw-asyn --workers 4 --threads 8
+//! sfw sweep --sweep.threads 1,2,4,8 --sweep.algos sfw-asyn --name threads
+//! ```
+//!
+//! or `TrainSpec::threads(8)` from code (default 1; one pool per
+//! process, shared by all worker threads, sized once at `RunCtx`
+//! construction).  The kernels determinism contract makes this a pure
+//! wall-clock knob: fixed-size chunk partials combined in a fixed
+//! order mean `--threads N` is **bit-identical** to `--threads 1` for
+//! every N — and to the pre-kernels scalar path — so changing it never
+//! perturbs a result, only its speed (pinned by `rust/tests/factored.rs`
+//! and the smoke sweep's threads twins).  The echo line appends
+//! ` threads=N` when N != 1, and sweeps carry a `threads` axis column.
+//!
 //! # Train → checkpoint → serve quickstart (sparse completion)
 //!
 //! The `sparse_completion` task trains on the synthetic recommender

@@ -28,6 +28,14 @@ pub struct TrainSpec {
     /// dfw-power | pgd` (see `registry().names()`).
     pub algo: String,
     pub workers: usize,
+    /// Compute-kernel thread budget: the process-wide
+    /// [`crate::linalg::kernels`] pool size the hot loops (power
+    /// iteration, factored apply, sparse gradient) stripe across.
+    /// Deterministic by construction — any value produces bit-identical
+    /// results to `threads = 1` (the kernels determinism contract) — so
+    /// it is purely a wall-clock knob.  Workers share one pool per
+    /// process.
+    pub threads: usize,
     /// Staleness tolerance tau of the asynchronous delay gate.
     pub tau: u64,
     /// Master iterations T (for `svrf-asyn` see [`TrainSpec::epochs`]).
@@ -102,6 +110,7 @@ impl TrainSpec {
             task,
             algo: "sfw-asyn".into(),
             workers: 4,
+            threads: 1,
             tau: 8,
             iterations: 300,
             epochs: None,
@@ -137,6 +146,11 @@ impl TrainSpec {
     }
     pub fn workers(mut self, w: usize) -> Self {
         self.workers = w;
+        self
+    }
+    /// Compute-kernel thread budget (see the `threads` field).
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = t;
         self
     }
     pub fn tau(mut self, tau: u64) -> Self {
@@ -333,6 +347,9 @@ impl TrainSpec {
         if self.tol > 0.0 {
             echo.push_str(&format!(" tol={}", self.tol));
         }
+        if self.threads != 1 {
+            echo.push_str(&format!(" threads={}", self.threads));
+        }
         if let Some(plan) = &self.fault_plan {
             echo.push_str(&format!(" chaos={}@{}", plan.name, plan.seed));
         }
@@ -346,6 +363,9 @@ impl TrainSpec {
         // caught here so a bad cell is a SessionError, not a worker panic.
         if self.workers == 0 {
             return Err(SessionError::InvalidSpec("workers must be >= 1".into()));
+        }
+        if self.threads == 0 {
+            return Err(SessionError::InvalidSpec("threads must be >= 1".into()));
         }
         if self.eval_every == 0 {
             return Err(SessionError::InvalidSpec("eval-every must be >= 1".into()));
@@ -555,6 +575,7 @@ impl TrainSpec {
             .tol(cfg.tol)
             .algo(&cfg.algo)
             .workers(cfg.workers)
+            .threads(cfg.threads)
             .tau(cfg.tau)
             .iterations(cfg.iterations)
             .batch_scale(cfg.batch_scale)

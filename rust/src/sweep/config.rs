@@ -21,8 +21,8 @@ use crate::sweep::SweepError;
 
 /// Keys the `[sweep]` section accepts (axes + run knobs).
 pub const SWEEP_KEYS: &[&str] = &[
-    "name", "algos", "objective", "dims", "repr", "uplink", "workers", "tau", "batch", "step",
-    "tol", "power-iters", "transport", "straggler", "chaos", "seeds", "repeats", "jobs",
+    "name", "algos", "objective", "dims", "repr", "uplink", "workers", "threads", "tau", "batch",
+    "step", "tol", "power-iters", "transport", "straggler", "chaos", "seeds", "repeats", "jobs",
     "target",
 ];
 
@@ -137,6 +137,10 @@ impl SweepSpec {
         }
         if let Some(v) = get("workers") {
             spec.workers = parse_list("workers", &v, "comma-separated worker counts")?;
+        }
+        if let Some(v) = get("threads") {
+            spec.threads =
+                parse_list("threads", &v, "comma-separated kernel thread counts (>= 1)")?;
         }
         if let Some(v) = get("tau") {
             spec.taus = parse_list("tau", &v, "comma-separated staleness bounds")?;
@@ -368,6 +372,39 @@ impl SweepSpec {
             .reprs(&["factored"])
             .target(0.5)
     }
+
+    /// The CI threaded-kernels cells that ride along with the other
+    /// smoke grids in one `sweep_smoke.json`: a 56x40 matrix-sensing
+    /// shape (distinct from every other smoke grid's dims, so cell ids
+    /// cannot collide and `check_smoke_bytes.py` can filter on it),
+    /// sfw-asyn, W = 2, `threads` in {1, 4}.
+    /// `scripts/check_smoke_bytes.py` asserts the two cells report
+    /// EXACTLY equal `bytes_up`, `bytes_down`, and final relative loss —
+    /// the kernels determinism contract (thread count is a pure
+    /// wall-clock knob) pinned in the CI artifact.
+    pub fn smoke_threads() -> SweepSpec {
+        use crate::algo::schedule::BatchSchedule;
+        use crate::session::TaskSpec;
+        let base = TrainSpec::new(TaskSpec::MatrixSensing {
+            d1: 56,
+            d2: 40,
+            rank: 3,
+            n: 600,
+            noise_std: 0.05,
+        })
+        .iterations(20)
+        .batch(BatchSchedule::Constant(16))
+        .eval_every(5)
+        .power_iters(20)
+        .seed(42);
+        SweepSpec::new("smoke-threads", base)
+            .algos(&["sfw-asyn"])
+            .workers(&[2])
+            .taus(&[2])
+            .transports(&[Transport::Local])
+            .threads(&[1, 4])
+            .target(0.5)
+    }
 }
 
 fn split_list<'a>(axis: &str, v: &'a str) -> Result<Vec<&'a str>, SweepError> {
@@ -561,6 +598,32 @@ mod tests {
         }
         assert_eq!(cells[0].axis("workers"), Some("1"));
         assert_eq!(cells[1].axis("workers"), Some("2"));
+    }
+
+    #[test]
+    fn threads_key_resolves_and_rejects_bad_values() {
+        let a = args("--sweep.threads 1,4");
+        let s = SweepSpec::from_sources(base(), &Config::new(), &a).unwrap();
+        assert_eq!(s.threads, vec![1, 4]);
+        let err = SweepSpec::from_sources(base(), &Config::new(), &args("--sweep.threads many"))
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("threads") && msg.contains("'many'"), "{msg}");
+    }
+
+    #[test]
+    fn smoke_threads_grid_is_the_determinism_twin_pair() {
+        let cells = SweepSpec::smoke_threads().expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert_eq!(c.axis("algo"), Some("sfw-asyn"));
+            assert_eq!(c.axis("dims"), Some("56x40"));
+            assert_eq!(c.axis("workers"), Some("2"));
+            assert_eq!(c.axis("seed"), Some("42"));
+        }
+        assert_eq!(cells[0].axis("threads"), Some("1"));
+        assert_eq!(cells[1].axis("threads"), Some("4"));
+        assert_eq!(cells[1].spec.threads, 4);
     }
 
     #[test]

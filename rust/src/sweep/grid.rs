@@ -21,8 +21,8 @@ use crate::sweep::SweepError;
 /// The fixed axis order: every cell id and result row lists axis values
 /// in this order, and `[sweep]` config keys resolve against these names.
 pub const AXIS_NAMES: &[&str] = &[
-    "algo", "objective", "dims", "repr", "uplink", "workers", "tau", "batch", "step", "tol",
-    "power_iters", "transport", "straggler", "chaos", "seed",
+    "algo", "objective", "dims", "repr", "uplink", "workers", "threads", "tau", "batch", "step",
+    "tol", "power_iters", "transport", "straggler", "chaos", "seed",
 ];
 
 /// Map an `objective` axis value onto the named objective's small
@@ -208,6 +208,11 @@ pub struct SweepSpec {
     /// Empty = inherit the base spec's codec.
     pub uplinks: Vec<String>,
     pub workers: Vec<usize>,
+    /// Kernel-pool thread counts (>= 1; see `linalg::kernels`).  The
+    /// determinism contract makes this a pure wall-clock axis: every
+    /// value of `threads` produces bit-identical results, which the
+    /// smoke sweep asserts.  Empty = inherit the base spec's count.
+    pub threads: Vec<usize>,
     pub taus: Vec<u64>,
     /// Constant batch sizes ([`BATCH_AUTO`] = theorem schedule).  Empty =
     /// inherit the base spec's schedule verbatim.
@@ -246,6 +251,7 @@ impl SweepSpec {
             reprs: Vec::new(),
             uplinks: Vec::new(),
             workers: Vec::new(),
+            threads: Vec::new(),
             taus: Vec::new(),
             batches: Vec::new(),
             steps: Vec::new(),
@@ -283,6 +289,10 @@ impl SweepSpec {
     }
     pub fn workers(mut self, ws: &[usize]) -> Self {
         self.workers = ws.to_vec();
+        self
+    }
+    pub fn threads(mut self, ts: &[usize]) -> Self {
+        self.threads = ts.to_vec();
         self
     }
     pub fn taus(mut self, taus: &[u64]) -> Self {
@@ -343,6 +353,7 @@ impl SweepSpec {
             * len(self.reprs.len())
             * len(self.uplinks.len())
             * len(self.workers.len())
+            * len(self.threads.len())
             * len(self.taus.len())
             * len(self.batches.len())
             * len(self.steps.len())
@@ -428,6 +439,20 @@ impl SweepSpec {
         };
         let workers =
             if self.workers.is_empty() { vec![base.workers] } else { self.workers.clone() };
+        let threads_axis: Vec<usize> = if self.threads.is_empty() {
+            vec![base.threads]
+        } else {
+            for &t in &self.threads {
+                if t == 0 {
+                    return Err(SweepError::BadAxisValue {
+                        axis: "threads".into(),
+                        value: "0".into(),
+                        expected: "a kernel-pool thread count >= 1".into(),
+                    });
+                }
+            }
+            self.threads.clone()
+        };
         let taus = if self.taus.is_empty() { vec![base.tau] } else { self.taus.clone() };
         // The batch axis carries Option<usize>: None = inherit the base
         // schedule verbatim, Some(0) = theorem default, Some(m) = Constant(m).
@@ -514,7 +539,12 @@ impl SweepSpec {
                 .flat_map(|d| repr_axis.iter().map(move |r| (d, r)))
             {
             for &uplk in &uplink_axis {
-            for &w in &workers {
+            // threads rides the workers loop level (same trick as
+            // dims x repr) to keep the nesting flat
+            for (&w, &th) in workers
+                .iter()
+                .flat_map(|w| threads_axis.iter().map(move |t| (w, t)))
+            {
                 for &tau in &taus {
                     for &batch in &batches {
                         // step/tol ride the power_iters loop level (same
@@ -559,6 +589,7 @@ impl SweepSpec {
                                                 .clone()
                                                 .algo(algo)
                                                 .workers(w)
+                                                .threads(th)
                                                 .tau(tau)
                                                 .power_iters(pi)
                                                 .transport(transport)
@@ -610,6 +641,7 @@ impl SweepSpec {
                                                     spec.uplink.label().to_string(),
                                                 ),
                                                 ("workers".to_string(), w.to_string()),
+                                                ("threads".to_string(), th.to_string()),
                                                 ("tau".to_string(), tau.to_string()),
                                                 ("batch".to_string(), batch_label),
                                                 (
@@ -806,6 +838,22 @@ mod tests {
             .expand()
             .unwrap();
         assert_eq!(cells[0].spec.task.dims(), (64, 24));
+    }
+
+    #[test]
+    fn threads_axis_expands_and_rejects_zero() {
+        let cells = SweepSpec::new("t", base()).threads(&[1, 4]).expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].axis("threads"), Some("1"));
+        assert_eq!(cells[1].axis("threads"), Some("4"));
+        assert_eq!(cells[1].spec.threads, 4);
+        // unset axis inherits the base count and still labels the cell
+        let cells = SweepSpec::new("t", base()).expand().unwrap();
+        assert_eq!(cells[0].axis("threads"), Some("1"));
+        // 0 would panic inside the run; reject it at expansion time
+        let err = SweepSpec::new("t", base()).threads(&[0]).expand().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("threads") && msg.contains(">= 1"), "{msg}");
     }
 
     #[test]

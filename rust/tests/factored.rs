@@ -205,6 +205,66 @@ fn operator_form_lmo_matches_dense_lmo() {
 }
 
 #[test]
+fn thread_count_is_bit_invariant_per_solver() {
+    // The kernels determinism contract (linalg::kernels): fixed-size
+    // chunk partials combined in a fixed order make --threads N
+    // bit-identical to --threads 1.  One representative per solver
+    // family — serial, async (W = 1), dist (W = 2, rank-order reduce).
+    for (algo, workers) in [("sfw", 1), ("sfw-asyn", 1), ("sfw-dist", 2)] {
+        let run = |threads| {
+            base_spec(algo, workers, Transport::Local)
+                .threads(threads)
+                .run()
+                .unwrap_or_else(|e| panic!("{algo} threads={threads}: {e}"))
+        };
+        let r1 = run(1);
+        let r4 = run(4);
+        assert_eq!(
+            r1.x.data, r4.x.data,
+            "{algo}: iterate diverged between --threads 1 and --threads 4"
+        );
+        let (s1, s4) = (r1.snapshot(), r4.snapshot());
+        assert_eq!(s1.iterations, s4.iterations, "{algo}: iteration counts diverged");
+        assert_eq!(s1.bytes_up, s4.bytes_up, "{algo}: uplink bytes diverged");
+        assert_eq!(s1.bytes_down, s4.bytes_down, "{algo}: downlink bytes diverged");
+        assert!(
+            r4.spec_echo.contains("threads=4"),
+            "{algo}: echo missing threads: {}",
+            r4.spec_echo
+        );
+        assert!(!r1.spec_echo.contains("threads="), "{algo}: default echoed threads");
+    }
+}
+
+#[test]
+fn poisoned_atom_reaches_the_lmo_as_non_finite_output() {
+    // A NaN atom coefficient must poison every linop product
+    // (FactoredMat::apply's NaN contract — skips guard on `c == 0.0`,
+    // which is false for NaN) so the power-iteration LMO emits a
+    // non-finite triple that the master's `sane_rank_one` gate rejects
+    // instead of silently folding a half-poisoned direction into X.
+    let mut rng = Rng::new(37);
+    let mut f = FactoredMat::zeros(12, 9);
+    f.push_atom(
+        0.8,
+        std::sync::Arc::new(rng.unit_vector(12)),
+        std::sync::Arc::new(rng.unit_vector(9)),
+    );
+    f.push_atom(
+        f32::NAN,
+        std::sync::Arc::new(vec![0.0f32; 12]),
+        std::sync::Arc::new(vec![0.0f32; 9]),
+    );
+    let v0 = rng.unit_vector(9);
+    let svd = sfw::linalg::power_iteration(&f, &v0, 50, 1e-10);
+    assert!(!svd.sigma.is_finite(), "sigma survived a poisoned atom: {}", svd.sigma);
+    assert!(
+        svd.u.iter().any(|x| !x.is_finite()) || svd.v.iter().any(|x| !x.is_finite()),
+        "LMO direction survived a poisoned atom"
+    );
+}
+
+#[test]
 fn iterate_snapshots_are_cheap_in_factored_mode() {
     // An evaluator snapshot of a factored iterate clones the atom list,
     // not a d1*d2 array: the Arcs are shared.

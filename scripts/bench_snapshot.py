@@ -85,6 +85,13 @@ doc = {
     "bench": "hotpath",
     "rows": rows,
 }
+# Environment sidecar written by the bench alongside the raw CSV: CPU
+# feature dispatch + kernel pool size.  Embedded so --compare can tell
+# whether two snapshots came from the same class of machine.
+env_path = "bench_out/hotpath_env.json"
+if os.path.exists(env_path):
+    with open(env_path) as f:
+        doc["env"] = json.load(f)
 os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
 with open(out_path, "w") as f:
     json.dump(doc, f, indent=1, sort_keys=True)
@@ -95,6 +102,17 @@ if compare_path:
     with open(compare_path) as f:
         prev = json.load(f)
     prev_means = {r["op"]: r["mean_s"] for r in prev.get("rows", [])}
+    # Ratios across different CPU feature sets (e.g. an AVX2 laptop vs a
+    # scalar-dispatch CI box) measure the machines, not the code: print
+    # the table for the record but do NOT judge the gate on it.
+    cur_env, prev_env = doc.get("env"), prev.get("env")
+    env_mismatch = (cur_env is not None and prev_env is not None
+                    and cur_env.get("cpu_features") != prev_env.get("cpu_features"))
+    if env_mismatch:
+        print(f"\nWARNING: environment mismatch — current snapshot ran with "
+              f"cpu_features={cur_env.get('cpu_features')!r}, baseline with "
+              f"{prev_env.get('cpu_features')!r}; ratios below are "
+              "informational and the gate is NOT judged")
     table = {"default": 1.25, "ops": {}}
     if os.path.exists(thresholds_path):
         with open(thresholds_path) as f:
@@ -122,7 +140,10 @@ if compare_path:
     for op in prev_means:
         if op not in {r["op"] for r in rows}:
             print(f"  {op:<42} DROPPED (no current row)")
-    if regressions:
+    if env_mismatch:
+        print("compare: environment mismatch — gate not judged "
+              f"({len(regressions)} op(s) would have flagged)")
+    elif regressions:
         names = ", ".join(f"{op} ({ratio:.2f}x > {limit:.2f}x)"
                           for op, ratio, limit in regressions)
         sys.exit(f"bench_snapshot.py: {len(regressions)} op(s) slowed past "
@@ -130,4 +151,5 @@ if compare_path:
                  "(this gate is blocking; an expected slowdown lands with "
                  "[skip-bench-gate] in the commit message, which skips the "
                  "compare step in CI)")
-    print("compare: no regressions past threshold (gate passed)")
+    else:
+        print("compare: no regressions past threshold (gate passed)")

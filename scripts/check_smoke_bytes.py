@@ -19,7 +19,11 @@ error feedback is what keeps the losses together — with identical
 `bytes_down`; and the serial sfw gap cells (tol=0 vs tol=1000, same
 seed/shape) pin dual-gap surfacing and `--tol` stopping: the tol=0
 cell carries a finite, net-decreasing `gaps` column over its full
-budget while the tol=1000 cell stops well short of it.
+budget while the tol=1000 cell stops well short of it; and the 56x40
+sfw-asyn threads cells (threads=1 vs threads=4, same seed/shape) pin
+the linalg::kernels determinism contract: thread count is a pure
+wall-clock knob, so the twins must report EXACTLY equal bytes_up,
+bytes_down, and final relative loss.
 """
 import json
 import math
@@ -158,6 +162,31 @@ assert stopped["counters"]["iterations"] < GAP_BUDGET, (
     f"tol=1000 cell ran its full budget "
     f"({stopped['counters']['iterations']} iterations) — --tol never fired")
 
+# --- threaded-kernels determinism twins --------------------------------------
+# sfw-asyn at 56x40 (dims distinct from every other smoke grid), W=2,
+# threads in {1, 4}, same seed.  The kernels layer guarantees results
+# are bit-identical in the pool size (fixed-size chunk partials combined
+# in a fixed order), so the two cells must agree EXACTLY — equal is the
+# assertion, not approximately-equal.  Any drift means a kernel's
+# reduction order leaked thread count into the numbers.
+threads_cells = [c for c in cells if c["axes"].get("dims") == "56x40"]
+by_threads = {c["axes"].get("threads"): c for c in threads_cells}
+assert "1" in by_threads and "4" in by_threads, (
+    f"{path}: smoke grid lost its threads=1/threads=4 twin cells "
+    f"(have {sorted(by_threads)})")
+t1, t4 = by_threads["1"], by_threads["4"]
+for key in ("bytes_up", "bytes_down", "msgs_up", "msgs_down", "iterations"):
+    assert t1["counters"][key] == t4["counters"][key], (
+        f"threads twins diverged on {key}: {t1['counters'][key]} (threads=1) "
+        f"vs {t4['counters'][key]} (threads=4) — thread count must be a pure "
+        "wall-clock knob")
+t1_rel, t4_rel = t1["final_rel"], t4["final_rel"]
+assert t1_rel is not None and t4_rel is not None, (
+    "threads twin cells lost their final_rel accounting")
+assert t1_rel == t4_rel, (
+    f"threads twins diverged on final_rel: {t1_rel!r} (threads=1) vs "
+    f"{t4_rel!r} (threads=4) — a kernel reduction leaked thread count")
+
 print(f"OK: {len(cells)} cells in {path}, bytes nonzero in {len(dist)} "
       f"distributed cell(s), "
       f"events nonzero in {len(chaos_cells)} chaos cell(s), "
@@ -165,4 +194,5 @@ print(f"OK: {len(cells)} cells in {path}, bytes nonzero in {len(dist)} "
       f"int8 uplink >= 3x under f32 at matching loss on {pairs} transport(s), "
       f"sparse uplink atom-scale on {len(sparse)} cell(s), "
       f"gap column decreasing {fgaps[0]:.3e} -> {fgaps[-1]:.3e} with "
-      f"tol=1000 stopping at iter {stopped['counters']['iterations']}")
+      f"tol=1000 stopping at iter {stopped['counters']['iterations']}, "
+      f"threads=1/4 twins bit-equal (rel {t1_rel})")
